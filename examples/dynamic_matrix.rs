@@ -1,0 +1,85 @@
+//! Live matrix evolution (§3.2): a web graph keeps changing while PageRank
+//! is being computed. After each batch of edge mutations the running
+//! computation rebases (`B' = F + (P'−P)·H`) and continues warm — this
+//! example measures how much cheaper that is than restarting cold.
+//!
+//! Run: `cargo run --release --example dynamic_matrix`
+
+use diter::coordinator::update;
+use diter::graph::{pagerank_system, power_law_web_graph, Digraph};
+use diter::linalg::vec_ops::dist1;
+use diter::prng::Xoshiro256pp;
+use diter::solver::{DIteration, FixedPointProblem, SolveOptions, Solver};
+
+fn mutate(g: &Digraph, rng: &mut Xoshiro256pp, edits: usize) -> Digraph {
+    // re-generate the edge list with `edits` random additions
+    let n = g.n();
+    let mut edges: Vec<(usize, usize)> = Vec::with_capacity(g.m() + edits);
+    for u in 0..n {
+        for &v in g.out_neighbors(u) {
+            edges.push((u, v));
+        }
+    }
+    for _ in 0..edits {
+        edges.push((rng.below(n), rng.below(n)));
+    }
+    Digraph::from_edges(n, edges)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = 5_000;
+    let damping = 0.85;
+    let tight = SolveOptions {
+        tol: 1e-10,
+        max_cost: 100_000.0,
+        trace_every: 0.0,
+        exact: None,
+    };
+    let mut rng = Xoshiro256pp::seed_from_u64(23);
+
+    println!("== §3.2 live matrix evolution: warm rebase vs cold restart ==");
+    println!("web graph N={n}, 5 mutation batches of growing size\n");
+    let mut g = power_law_web_graph(n, 8, 0.1, 11);
+    let sys = pagerank_system(&g, damping, true)?;
+    let mut problem = FixedPointProblem::new(sys.matrix.clone(), sys.b.clone())?;
+    let mut h = DIteration::greedy().solve(&problem, &tight)?.x;
+    println!("initial solve: done (residual {:.1e})", problem.residual_norm(&h));
+    println!(
+        "\n{:>8} {:>12} {:>12} {:>9} {:>12}",
+        "edits", "warm-cost", "cold-cost", "saving", "drift‖Δx‖₁"
+    );
+
+    for edits in [10usize, 50, 200, 1000, 5000] {
+        g = mutate(&g, &mut rng, edits);
+        let sys = pagerank_system(&g, damping, true)?;
+        let new_problem = FixedPointProblem::new(sys.matrix.clone(), sys.b.clone())?;
+
+        // warm: rebase B' = P'H + B − H, solve the correction, add back
+        let b_prime = update::rebase_b(new_problem.matrix(), &h, new_problem.b())?;
+        let sub = FixedPointProblem::new(new_problem.matrix().clone(), b_prime)?;
+        let warm = DIteration::greedy().solve(&sub, &tight)?;
+        let warm_x: Vec<f64> = h.iter().zip(&warm.x).map(|(a, b)| a + b).collect();
+
+        // cold: from scratch
+        let cold = DIteration::greedy().solve(&new_problem, &tight)?;
+
+        let drift = dist1(&warm_x, &h);
+        println!(
+            "{:>8} {:>12.1} {:>12.1} {:>8.1}x {:>12.3e}",
+            edits,
+            warm.cost,
+            cold.cost,
+            cold.cost / warm.cost.max(1e-9),
+            drift
+        );
+        // verify both routes agree
+        let delta = dist1(&warm_x, &cold.x);
+        anyhow::ensure!(delta < 1e-6, "warm and cold disagree: {delta}");
+        problem = new_problem;
+        h = warm_x;
+    }
+    let _ = &problem;
+    println!("\nwarm rebase converges to the same limit at a fraction of the cost");
+    println!("for small edits — exactly the §3.2 claim (Theorem 4 of [4]).");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! END-TO-END DRIVER (DESIGN.md §6): distributed PageRank on a synthetic
+//! power-law web graph — the workload the paper's §5/§6 motivates.
+//!
+//! Exercises the full stack on a real small workload:
+//!   graph generator → PageRank fixed-point system → partitioner →
+//!   V2 distributed D-iteration over the async bus (ack + coalescing) →
+//!   §4.4 distance-to-limit certificate → verification against a
+//!   sequential power-method reference.
+//!
+//! Run: `cargo run --release --example pagerank_websim [nodes] [pids]`
+//! Results recorded in EXPERIMENTS.md §End-to-end.
+
+use std::time::Duration;
+
+use diter::coordinator::{v2, DistributedConfig};
+use diter::graph::{pagerank_reference, pagerank_system, power_law_web_graph};
+use diter::linalg::vec_ops::{dist1, norm1};
+use diter::metrics::Stopwatch;
+use diter::partition::Partition;
+use diter::solver::{ConvergenceBound, FixedPointProblem, SequenceKind};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(50_000);
+    let k: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let damping = 0.85;
+    let tol = 1e-9;
+
+    println!("== diter end-to-end: distributed PageRank ==");
+    let sw = Stopwatch::start();
+    let g = power_law_web_graph(n, 8, 0.1, 7);
+    println!(
+        "graph      : {} nodes, {} edges, {} dangling ({} ms to generate)",
+        g.n(),
+        g.m(),
+        g.dangling_nodes().len(),
+        sw.elapsed_ms() as u64
+    );
+    // dangling handling: the UNPATCHED ("strongly preferential") convention —
+    // patching would materialize one dense column per dangling page
+    // (≈ dangling×N extra nnz); the paper notes the §4.4 expression is then
+    // an upper bound. Rankings follow the standard renormalize-at-the-end.
+    let sys = pagerank_system(&g, damping, false)?;
+    let problem = FixedPointProblem::new(sys.matrix.clone(), sys.b.clone())?;
+    let bound = ConvergenceBound::for_matrix(problem.matrix(), Some(damping));
+    println!(
+        "system     : nnz {}, max col norm {:.4} (§4.4 bound: r/(1-d))",
+        problem.matrix().nnz(),
+        problem.matrix().max_col_norm()
+    );
+
+    let partition = Partition::contiguous(n, k)?;
+    println!(
+        "partition  : K={k} contiguous, cut fraction {:.3}",
+        partition.cut_fraction(problem.matrix().csr())
+    );
+
+    let mut cfg = DistributedConfig::new(partition)
+        .with_tol(tol)
+        .with_seed(1)
+        .with_sequence(SequenceKind::GreedyMaxFluid);
+    cfg.max_wall = Duration::from_secs(300);
+    let sol = v2::solve_v2(&problem, &cfg)?;
+    println!("\n-- V2 distributed run --");
+    println!("converged  : {}", sol.converged);
+    println!("wall       : {:.3} s", sol.wall_secs);
+    println!("updates    : {} total ({:.2e}/s)", sol.total_updates, sol.updates_per_sec());
+    println!("parallel   : {:.1} equivalent passes", sol.cost);
+    println!(
+        "transport  : {} msgs, {:.2} MB, peak in-flight fluid {:.2e}",
+        sol.metrics["msgs_sent"],
+        sol.metrics["bytes_sent"] as f64 / 1e6,
+        sol.metrics["inflight_peak_ppm"] as f64 / 1e6
+    );
+    println!(
+        "certificate: residual {:.3e} → ‖X−H‖₁ ≤ {:.3e} (§4.4)",
+        sol.residual,
+        bound.distance(sol.residual)
+    );
+    println!("mass       : ‖x‖₁ = {:.6} (<1: unpatched dangling loss)", norm1(&sol.x));
+
+    // verification against the sequential reference
+    let sw = Stopwatch::start();
+    let reference = pagerank_reference(&sys, 1e-12, 10_000);
+    let seq_wall = sw.elapsed_secs();
+    let delta = dist1(&sol.x, &reference);
+    println!("\n-- verification --");
+    println!("sequential power-style reference: {seq_wall:.3} s");
+    println!("‖x_distributed − x_reference‖₁ = {delta:.3e}");
+    anyhow::ensure!(delta < 1e-6, "distributed result disagrees with reference");
+
+    let mut ranked: Vec<(usize, f64)> = sol.x.iter().copied().enumerate().collect();
+    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("\ntop 5 pages:");
+    for (rank, (page, score)) in ranked.iter().take(5).enumerate() {
+        println!("  #{} page {:>7}  score {:.6e}", rank + 1, page, score);
+    }
+    println!("\nOK — full stack verified end-to-end.");
+    Ok(())
+}

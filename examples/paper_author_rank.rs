@@ -1,0 +1,86 @@
+//! Joint publications + authors ranking (paper ref [5]: Hong & Baccelli):
+//! a PageRank-style fixed point on a bipartite-ish citation/authorship
+//! graph, solved with the V2 distributed D-iteration.
+//!
+//! Papers cite older papers; papers point to their authors and authors to
+//! their papers, so reputation flows both ways — a paper is good if cited
+//! by good papers and written by good authors, and vice versa.
+//!
+//! Run: `cargo run --release --example paper_author_rank`
+
+use std::time::Duration;
+
+use diter::coordinator::{v2, DistributedConfig};
+use diter::graph::{pagerank_system, paper_author_graph};
+use diter::linalg::vec_ops::norm1;
+use diter::partition::Partition;
+use diter::solver::{FixedPointProblem, SequenceKind};
+
+fn main() -> anyhow::Result<()> {
+    let n_papers = 3_000;
+    let n_authors = 400;
+    println!("== joint paper/author ranking ({n_papers} papers, {n_authors} authors) ==");
+    let pa = paper_author_graph(n_papers, n_authors, 4, 2, 77);
+    let n = pa.graph.n();
+    println!("graph: {} nodes, {} edges", n, pa.graph.m());
+
+    let sys = pagerank_system(&pa.graph, 0.85, false)?;
+    let problem = FixedPointProblem::new(sys.matrix.clone(), sys.b.clone())?;
+
+    // partition along the node classes: papers split among K−1 PIDs, the
+    // authors (hub nodes) get their own PID — a natural locality split
+    let k = 4;
+    let mut owner = vec![0usize; n];
+    for (i, o) in owner.iter_mut().enumerate() {
+        *o = if i >= n_papers {
+            k - 1 // authors
+        } else {
+            i * (k - 1) / n_papers
+        };
+    }
+    let partition = Partition::from_owner(owner, k)?;
+    println!(
+        "partition: {k} PIDs (authors isolated on PID {}), cut {:.3}",
+        k - 1,
+        partition.cut_fraction(problem.matrix().csr())
+    );
+
+    let mut cfg = DistributedConfig::new(partition)
+        .with_tol(1e-10)
+        .with_sequence(SequenceKind::GreedyMaxFluid)
+        .with_seed(3);
+    cfg.max_wall = Duration::from_secs(120);
+    let sol = v2::solve_v2(&problem, &cfg)?;
+    anyhow::ensure!(sol.converged, "did not converge: {}", sol.residual);
+    println!(
+        "solved: wall {:.3}s, {:.2e} upd/s, {} msgs, ‖x‖₁ = {:.9}",
+        sol.wall_secs,
+        sol.updates_per_sec(),
+        sol.metrics["msgs_sent"],
+        norm1(&sol.x)
+    );
+
+    let mut papers: Vec<(usize, f64)> = (0..n_papers).map(|i| (i, sol.x[i])).collect();
+    let mut authors: Vec<(usize, f64)> =
+        (n_papers..n).map(|i| (i - n_papers, sol.x[i])).collect();
+    papers.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    authors.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+    println!("\ntop 5 papers:");
+    for (rank, (p, s)) in papers.iter().take(5).enumerate() {
+        println!("  #{} paper {:>6}  score {:.5e}", rank + 1, p, s);
+    }
+    println!("top 5 authors:");
+    for (rank, (a, s)) in authors.iter().take(5).enumerate() {
+        println!("  #{} author {:>5}  score {:.5e}", rank + 1, a, s);
+    }
+    // sanity: early (much-cited) papers should outrank the newest ones
+    let early: f64 = (0..50).map(|i| sol.x[i]).sum();
+    let late: f64 = (n_papers - 50..n_papers).map(|i| sol.x[i]).sum();
+    anyhow::ensure!(
+        early > late,
+        "citation flow should favor early papers ({early:.3e} vs {late:.3e})"
+    );
+    println!("\nOK — early papers outrank late ones ({:.2}x), as citation flow dictates.", early / late);
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: solve the paper's A(1)·X = 1 example three ways —
+//! sequentially, with 2 threaded PIDs (V1), and with 2 threaded PIDs (V2)
+//! — and check all three against the exact LU solution.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use diter::coordinator::{v1, v2, DistributedConfig};
+use diter::graph::paper_matrix;
+use diter::linalg::vec_ops::dist_inf;
+use diter::partition::Partition;
+use diter::solver::{DIteration, FixedPointProblem, SolveOptions, Solver};
+
+fn main() -> anyhow::Result<()> {
+    // the paper's A(1) (§5.1): two independent 2x2 blocks
+    let a = paper_matrix(1);
+    let problem = FixedPointProblem::from_linear_system(&a, &[1.0; 4])?;
+    let exact = problem.exact_solution()?;
+    println!("A(1)·X = (1,1,1,1)ᵗ, exact X = {exact:?}\n");
+
+    // 1. sequential D-iteration (cyclic, H-form, free start H₀ = B)
+    let sol = DIteration::cyclic().solve(&problem, &SolveOptions::default())?;
+    println!(
+        "sequential D-iteration : cost {:>5.1} passes, residual {:.2e}, Δ∞ {:.2e}",
+        sol.cost,
+        sol.residual,
+        dist_inf(&sol.x, &exact)
+    );
+
+    // 2. V1 distributed (full H per PID, slice sharing)
+    let cfg = DistributedConfig::new(Partition::contiguous(4, 2)?).with_tol(1e-12);
+    let sol = v1::solve_v1(&problem, &cfg)?;
+    println!(
+        "V1, 2 PIDs             : cost {:>5.1} passes, residual {:.2e}, Δ∞ {:.2e}, {} msgs",
+        sol.cost,
+        sol.residual,
+        dist_inf(&sol.x, &exact),
+        sol.metrics["msgs_sent"]
+    );
+
+    // 3. V2 distributed (partial state, fluid parcels with ack+coalescing)
+    let cfg = DistributedConfig::new(Partition::contiguous(4, 2)?).with_tol(1e-12);
+    let sol = v2::solve_v2(&problem, &cfg)?;
+    println!(
+        "V2, 2 PIDs             : cost {:>5.1} passes, residual {:.2e}, Δ∞ {:.2e}, {} msgs",
+        sol.cost,
+        sol.residual,
+        dist_inf(&sol.x, &exact),
+        sol.metrics["msgs_sent"]
+    );
+
+    println!("\nall three agree with LU to ~1e-10 — see `diter figure --id 1` for the");
+    println!("full error-vs-iteration chart of Figure 1.");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+"""AOT compile path: lower every Layer-2 program to HLO **text** artifacts.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` and
+NOT a serialized ``HloModuleProto``: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (what the published ``xla`` 0.1.6
+crate binds) rejects (``proto.id() <= INT_MAX``). The text parser on the
+rust side (``HloModuleProto::from_text_file``) reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under ``artifacts/``):
+  * ``{program}_{suffix}.hlo.txt``  — one HLO module per (program, shape)
+  * ``manifest.txt``                — machine-readable index for the rust
+                                      runtime: name, kind, dims, arg spec,
+                                      file name (format documented below)
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from ``python/``).
+Re-running is cheap and idempotent; the Makefile keys off the manifest.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+MANIFEST_NAME = "manifest.txt"
+MANIFEST_HEADER = (
+    "# diter AOT manifest v1\n"
+    "# name kind dims(comma) file\n"
+    "# arg spec is fixed per kind — see rust/src/runtime/manifest.rs\n"
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_program(fn, spec):
+    return jax.jit(fn).lower(*spec)
+
+
+def build_all(out_dir: str, only: str | None = None, verbose: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for name, (fn, spec_builder, grid) in model.PROGRAMS.items():
+        if only is not None and name != only:
+            continue
+        for dims in grid:
+            spec = spec_builder(*dims)
+            suffix = "x".join(str(d) for d in dims)
+            fname = f"{name}_{suffix}.hlo.txt"
+            text = to_hlo_text(lower_program(fn, spec))
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entries.append((name, dims, fname))
+            if verbose:
+                print(f"  lowered {name}{dims} -> {fname} ({len(text)} chars)")
+    manifest = os.path.join(out_dir, MANIFEST_NAME)
+    with open(manifest, "w") as f:
+        f.write(MANIFEST_HEADER)
+        for name, dims, fname in entries:
+            dimstr = ",".join(str(d) for d in dims)
+            f.write(f"{name} {name} {dimstr} {fname}\n")
+    if verbose:
+        print(f"wrote {len(entries)} artifacts + {manifest}")
+    return entries
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single program")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    build_all(args.out_dir, only=args.only, verbose=not args.quiet)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

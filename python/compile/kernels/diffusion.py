@@ -1,0 +1,92 @@
+"""Layer-1 Pallas kernels for the D-iteration local diffusion sweep.
+
+The D-iteration (Hong, 2012) updates the history vector H one coordinate at a
+time (eq. 5 of the paper):
+
+    H_i  <-  L_i(P) . H + B_i
+
+Within a partition ``Omega_k`` the updates are *sequential* (each update reads
+the H produced by the previous one — the Gauss-Seidel-like data dependence
+that gives the D-iteration its edge over Jacobi), while partitions run in
+parallel. The kernel below is therefore the per-PID hot loop: one *sweep*
+over a block of ``m`` rows of P against the full (or locally known) H of
+size ``n``.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the block's rows of P are
+held as a single VMEM-resident tile (``m x n`` fits comfortably: even
+128 x 1024 f64 is 1 MiB << 16 MiB VMEM); the in-block recurrence is an
+on-chip ``fori_loop``; the dot product per row vectorizes over the VPU lanes.
+``interpret=True`` everywhere — the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU numbers are estimated analytically in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["d_sweep", "d_sweep_kernel", "d_multi_sweep"]
+
+
+def d_sweep_kernel(p_ref, idx_ref, h_ref, b_ref, o_ref):
+    """Sequentially apply ``H[idx[t]] = P_rows[t] . H + B[t]`` for t in 0..m.
+
+    Refs:
+      p_ref:   (m, n)  block of rows ``L_i(P)`` for i in the partition.
+      idx_ref: (m,)    int32 global coordinate of each row (the ``i``).
+      h_ref:   (n,)    input history vector H (full view, V1 scheme).
+      b_ref:   (m,)    the coordinates ``B_i`` matching ``idx``.
+      o_ref:   (n,)    output H after the sweep.
+
+    The loop *must* read ``o_ref`` each iteration: row t sees the updates of
+    rows < t. That sequential dependence is the algorithm, not an accident.
+    """
+    o_ref[...] = h_ref[...]
+    m = p_ref.shape[0]
+
+    def body(t, carry):
+        row = p_ref[t, :]
+        h = o_ref[...]
+        val = jnp.dot(row, h) + b_ref[t]
+        i = idx_ref[t]
+        o_ref[i] = val
+        return carry
+
+    jax.lax.fori_loop(0, m, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def d_sweep(p_rows, idx, h, b):
+    """One local D-iteration sweep over a dense block of rows.
+
+    Args:
+      p_rows: ``(m, n)`` float — rows ``L_i(P)`` of the iteration matrix.
+      idx:    ``(m,)`` int32 — global indices ``i`` of those rows.
+      h:      ``(n,)`` float — current history vector H.
+      b:      ``(m,)`` float — ``B_i`` for the block's rows.
+
+    Returns:
+      ``(n,)`` float — H after the sequential sweep.
+    """
+    return pl.pallas_call(
+        d_sweep_kernel,
+        out_shape=jax.ShapeDtypeStruct(h.shape, h.dtype),
+        interpret=True,
+    )(p_rows, idx, h, b)
+
+
+def d_multi_sweep(p_rows, idx, h, b, n_sweeps: int):
+    """Apply ``d_sweep`` ``n_sweeps`` times (a PID's work between shares).
+
+    The paper's Fig. 1 protocol runs each PID's cyclic sequence "exactly
+    twice before sharing" — that is ``n_sweeps=2``. Lowered as a single XLA
+    while-loop so the AOT artifact is one fused program.
+    """
+
+    def body(_, h_cur):
+        return d_sweep(p_rows, idx, h_cur, b)
+
+    return jax.lax.fori_loop(0, n_sweeps, body, h)

@@ -1,0 +1,104 @@
+"""Layer-1 Pallas kernels: residual / fluid evaluation and tiled matvec.
+
+The *remaining fluid* of partition k (paper §4.1) is
+
+    r_k = sum_{i in Omega_k} | L_i(P).H + B_i - H_i |
+
+and its elementwise version ``F_i = L_i(P).H + B_i - H_i`` is exactly the
+fluid vector F of eq. (4): ``F = F0 + P.H - H``. Computing F (and its L1
+norm) is the second hot spot of a PID: it drives the share trigger
+``r_k < T_k`` and the §4.4 distance-to-limit bound.
+
+The matvec is tiled over the row dimension so each grid step works on an
+MXU/VPU-friendly ``(bm, n)`` tile; on real TPU ``bm`` would be a multiple of
+8 (f32 sublane) — here interpret=True, so the tiling expresses the schedule
+without Mosaic lowering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fluid", "fluid_kernel", "matvec", "matvec_kernel", "residual_norm"]
+
+
+def fluid_kernel(p_ref, h_ref, b_ref, hsel_ref, o_ref):
+    """Elementwise fluid ``F = P_rows . H + B - H_sel`` for one row tile."""
+    o_ref[...] = p_ref[...] @ h_ref[...] + b_ref[...] - hsel_ref[...]
+
+
+@jax.jit
+def fluid(p_rows, h, b, h_sel):
+    """Fluid vector of a block: ``F_block = P_rows @ H + B - H[idx]``.
+
+    Args:
+      p_rows: ``(m, n)`` rows ``L_i(P)``.
+      h:      ``(n,)`` history vector.
+      b:      ``(m,)`` block's B coordinates.
+      h_sel:  ``(m,)`` the H coordinates of the block (``H[idx]``), selected
+              by the caller so the kernel stays gather-free.
+
+    Returns:
+      ``(m,)`` fluid per block row; ``sum(|.|)`` is the paper's ``r_k``.
+    """
+    m, _ = p_rows.shape
+    bm = _row_tile(m)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        fluid_kernel,
+        out_shape=jax.ShapeDtypeStruct((m,), h.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, p_rows.shape[1]), lambda r: (r, 0)),
+            pl.BlockSpec((p_rows.shape[1],), lambda r: (0,)),
+            pl.BlockSpec((bm,), lambda r: (r,)),
+            pl.BlockSpec((bm,), lambda r: (r,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda r: (r,)),
+        interpret=True,
+    )(p_rows, h, b, h_sel)
+
+
+def matvec_kernel(p_ref, x_ref, o_ref):
+    """One row-tile of a dense matvec ``o = P_tile @ x``."""
+    o_ref[...] = p_ref[...] @ x_ref[...]
+
+
+@jax.jit
+def matvec(p, x):
+    """Tiled dense matvec ``P @ x`` with a row-blocked schedule."""
+    m, n = p.shape
+    bm = _row_tile(m)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        matvec_kernel,
+        out_shape=jax.ShapeDtypeStruct((m,), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda r: (r, 0)),
+            pl.BlockSpec((n,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda r: (r,)),
+        interpret=True,
+    )(p, x)
+
+
+@jax.jit
+def residual_norm(p, h, b):
+    """Global remaining fluid ``sum_i |L_i(P).H + B_i - H_i|`` (square P)."""
+    f = matvec(p, h) + b - h
+    return jnp.sum(jnp.abs(f))
+
+
+def _row_tile(m: int) -> int:
+    """Largest power-of-two row tile <= 128 that divides m (>=1)."""
+    bm = 1
+    t = 1
+    while t * 2 <= 128 and m % (t * 2) == 0 and t * 2 <= m:
+        t *= 2
+        bm = t
+    return max(bm, 1)

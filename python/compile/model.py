@@ -1,0 +1,136 @@
+"""Layer-2 JAX compute graphs for the D-iteration stack.
+
+Each function here is a *whole program* a PID executes between communication
+events; they call the Layer-1 Pallas kernels (``kernels.diffusion``,
+``kernels.matvec``) so that kernel + surrounding graph lower into ONE HLO
+module per artifact. ``aot.py`` lowers every entry of :data:`PROGRAMS` at a
+set of shapes and writes HLO text + a manifest for the rust runtime.
+
+All programs use f64 (``jax_enable_x64``) so numerics match the rust
+coordinator bit-for-bit up to reassociation.
+
+Conventions shared with ``rust/src/runtime``:
+  * every program returns a TUPLE (lowered with ``return_tuple=True``) —
+    the rust side unwraps with ``to_tuple1``/``to_tuple``;
+  * argument order is exactly the order documented per function.
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from compile.kernels import diffusion, matvec
+
+__all__ = [
+    "d_sweep_program",
+    "d_round_program",
+    "fluid_norm_program",
+    "jacobi_step_program",
+    "power_step_program",
+    "pagerank_step_program",
+    "PROGRAMS",
+]
+
+
+def d_sweep_program(p_rows, idx, h, b):
+    """One local D-iteration sweep. Args: p_rows(m,n) f64, idx(m) i32,
+    h(n) f64, b(m) f64 -> (h'(n) f64,)."""
+    return (diffusion.d_sweep(p_rows, idx, h, b),)
+
+
+def d_round_program(p_rows, idx, h, b):
+    """A PID's full work quantum between shares: TWO sequential sweeps
+    (the Fig.1 protocol: cyclic sequence applied exactly twice before
+    sharing) followed by the block fluid for the r_k<T_k trigger.
+
+    Args: p_rows(m,n) f64, idx(m) i32, h(n) f64, b(m) f64
+    Returns: (h'(n) f64, fluid(m) f64, r_k scalar f64).
+    """
+    h2 = diffusion.d_multi_sweep(p_rows, idx, h, b, 2)
+    h_sel = h2[idx]
+    f = matvec.fluid(p_rows, h2, b, h_sel)
+    return (h2, f, jnp.sum(jnp.abs(f)))
+
+
+def fluid_norm_program(p, h, b):
+    """Global remaining fluid sum_i |L_i(P).H+B_i-H_i|.
+    Args: p(n,n) f64, h(n) f64, b(n) f64 -> (r scalar f64,)."""
+    return (matvec.residual_norm(p, h, b),)
+
+
+def jacobi_step_program(p, h, b):
+    """One synchronous Jacobi step H' = P.H + B (baseline).
+    Args: p(n,n), h(n), b(n) -> (h'(n),)."""
+    return (matvec.matvec(p, h) + b,)
+
+
+def power_step_program(p, x):
+    """One L1-normalized power-iteration step (eigenvector baseline).
+    Args: p(n,n), x(n) -> (x'(n),)."""
+    y = matvec.matvec(p, x)
+    n = jnp.sum(jnp.abs(y))
+    return (y / jnp.where(n == 0.0, 1.0, n),)
+
+
+def pagerank_step_program(s, x, teleport, d):
+    """Dense PageRank step with dangling-mass re-injection.
+    Args: s(n,n) col-stochastic, x(n), teleport(n), d scalar -> (x'(n),)."""
+    sx = matvec.matvec(s, x)
+    lost = 1.0 - jnp.sum(sx)
+    return (d * sx + (1.0 - d + d * lost) * teleport,)
+
+
+def _f64(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.float64)
+
+
+def _i32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.int32)
+
+
+def _sweep_spec(m, n):
+    return (_f64(m, n), _i32(m), _f64(n), _f64(m))
+
+
+def _square_spec(n):
+    return (_f64(n, n), _f64(n), _f64(n))
+
+
+#: name -> (callable, shape-spec builder, parameter grid)
+#: The grid entries become one artifact each: ``{name}_{suffix}.hlo.txt``.
+PROGRAMS = {
+    "d_sweep": (
+        d_sweep_program,
+        _sweep_spec,
+        [(2, 4), (4, 4), (32, 128), (64, 256), (128, 512)],
+    ),
+    "d_round": (
+        d_round_program,
+        _sweep_spec,
+        [(2, 4), (32, 128), (64, 256)],
+    ),
+    "fluid_norm": (
+        fluid_norm_program,
+        _square_spec,
+        [(4,), (128,), (256,)],
+    ),
+    "jacobi_step": (
+        jacobi_step_program,
+        _square_spec,
+        [(4,), (256,)],
+    ),
+    "power_step": (
+        power_step_program,
+        lambda n: (_f64(n, n), _f64(n)),
+        [(4,), (256,)],
+    ),
+    "pagerank_step": (
+        pagerank_step_program,
+        lambda n: (_f64(n, n), _f64(n), _f64(n), _f64()),
+        [(256,)],
+    ),
+}

@@ -1,0 +1,205 @@
+"""Layer-1 correctness: every Pallas kernel vs the pure-numpy oracle.
+
+This is the CORE correctness signal of the compile path. Shapes and dtypes
+are swept both explicitly (the shapes we actually AOT) and via hypothesis.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import diffusion, matvec, ref
+
+RNG = np.random.default_rng(0)
+
+
+def random_contraction(m, n, rng, scale=0.9):
+    """Rows with L1 norm < scale, so the D-iteration converges."""
+    p = rng.uniform(-1.0, 1.0, size=(m, n))
+    norms = np.abs(p).sum(axis=1, keepdims=True)
+    norms[norms == 0] = 1.0
+    return p / norms * scale * rng.uniform(0.1, 1.0, size=(m, 1))
+
+
+# ---------------------------------------------------------------- d_sweep
+
+
+@pytest.mark.parametrize("m,n", [(1, 1), (2, 4), (4, 4), (3, 7), (32, 128)])
+def test_d_sweep_matches_ref(m, n):
+    rng = np.random.default_rng(m * 1000 + n)
+    p = random_contraction(m, n, rng)
+    idx = rng.choice(n, size=m, replace=False).astype(np.int32)
+    h = rng.normal(size=n)
+    b = rng.normal(size=m)
+    got = np.asarray(diffusion.d_sweep(p, idx, h, b))
+    want = ref.d_sweep_ref(p, idx, h, b)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_d_sweep_sequential_dependence():
+    """Row t must see the H written by rows < t (the whole point)."""
+    # P over 2 coords: update 0 from 1, then 1 from the *new* 0.
+    p = np.array([[0.0, 0.5], [0.5, 0.0]])
+    idx = np.array([0, 1], dtype=np.int32)
+    h = np.array([0.0, 1.0])
+    b = np.array([1.0, 1.0])
+    got = np.asarray(diffusion.d_sweep(p, idx, h, b))
+    # sequential: h0 = 0.5*1+1 = 1.5 ; h1 = 0.5*1.5+1 = 1.75
+    np.testing.assert_allclose(got, [1.5, 1.75])
+    # a Jacobi (parallel) update would give h1 = 0.5*0+1 = 1.0 — different.
+    assert abs(got[1] - 1.0) > 0.5
+
+
+def test_d_sweep_duplicate_indices():
+    """The sequence I may revisit a coordinate within one block sweep."""
+    rng = np.random.default_rng(7)
+    p = random_contraction(4, 5, rng)
+    idx = np.array([2, 2, 0, 2], dtype=np.int32)
+    h = rng.normal(size=5)
+    b = rng.normal(size=4)
+    got = np.asarray(diffusion.d_sweep(p, idx, h, b))
+    want = ref.d_sweep_ref(p, idx, h, b)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_d_sweep_identity_rows_noop():
+    """Zero rows with b = h[idx] leave H unchanged."""
+    n = 6
+    h = np.arange(n, dtype=np.float64)
+    idx = np.array([1, 4], dtype=np.int32)
+    p = np.zeros((2, n))
+    b = h[idx]
+    got = np.asarray(diffusion.d_sweep(p, idx, h, b))
+    np.testing.assert_allclose(got, h)
+
+
+def test_d_multi_sweep_converges_to_fixed_point():
+    """Many sweeps over all coordinates must approach X = PX + B."""
+    rng = np.random.default_rng(3)
+    n = 8
+    p = random_contraction(n, n, rng, scale=0.8)
+    idx = np.arange(n, dtype=np.int32)
+    b = rng.normal(size=n)
+    x = np.linalg.solve(np.eye(n) - p, b)
+    h = np.asarray(diffusion.d_multi_sweep(p, idx, b.copy(), b, 200))
+    np.testing.assert_allclose(h, x, rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 8),
+    n=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_d_sweep_hypothesis(m, n, seed):
+    m = min(m, n)
+    rng = np.random.default_rng(seed)
+    p = random_contraction(m, n, rng)
+    idx = rng.choice(n, size=m, replace=False).astype(np.int32)
+    h = rng.normal(size=n)
+    b = rng.normal(size=m)
+    got = np.asarray(diffusion.d_sweep(p, idx, h, b))
+    want = ref.d_sweep_ref(p, idx, h, b)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_d_sweep_dtypes(dtype):
+    rng = np.random.default_rng(11)
+    p = random_contraction(3, 6, rng).astype(dtype)
+    idx = np.array([0, 3, 5], dtype=np.int32)
+    h = rng.normal(size=6).astype(dtype)
+    b = rng.normal(size=3).astype(dtype)
+    got = np.asarray(diffusion.d_sweep(p, idx, h, b))
+    want = ref.d_sweep_ref(p, idx, h, b)
+    tol = 1e-5 if dtype == np.float32 else 1e-12
+    assert got.dtype == dtype
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------- fluid / matvec
+
+
+@pytest.mark.parametrize("m,n", [(1, 1), (2, 4), (4, 4), (16, 64), (128, 128)])
+def test_fluid_matches_ref(m, n):
+    rng = np.random.default_rng(m + 17 * n)
+    p = rng.normal(size=(m, n))
+    h = rng.normal(size=n)
+    b = rng.normal(size=m)
+    h_sel = rng.normal(size=m)
+    got = np.asarray(matvec.fluid(p, h, b, h_sel))
+    want = ref.fluid_ref(p, h, b, h_sel)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("m,n", [(1, 3), (4, 4), (6, 10), (64, 64), (100, 32)])
+def test_matvec_matches_ref(m, n):
+    rng = np.random.default_rng(m * 31 + n)
+    p = rng.normal(size=(m, n))
+    x = rng.normal(size=n)
+    got = np.asarray(matvec.matvec(p, x))
+    np.testing.assert_allclose(got, ref.matvec_ref(p, x), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=st.integers(1, 33), n=st.integers(1, 17), seed=st.integers(0, 2**31 - 1))
+def test_matvec_hypothesis(m, n, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.normal(size=(m, n))
+    x = rng.normal(size=n)
+    got = np.asarray(matvec.matvec(p, x))
+    np.testing.assert_allclose(got, ref.matvec_ref(p, x), rtol=1e-11, atol=1e-11)
+
+
+def test_residual_norm_zero_at_fixed_point():
+    rng = np.random.default_rng(5)
+    n = 10
+    p = random_contraction(n, n, rng, scale=0.7)
+    b = rng.normal(size=n)
+    x = np.linalg.solve(np.eye(n) - p, b)
+    r = float(matvec.residual_norm(p, x, b))
+    assert r < 1e-10
+
+
+def test_residual_norm_matches_ref():
+    rng = np.random.default_rng(6)
+    n = 12
+    p = rng.normal(size=(n, n))
+    h = rng.normal(size=n)
+    b = rng.normal(size=n)
+    got = float(matvec.residual_norm(p, h, b))
+    want = ref.residual_norm_ref(p, h, b)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_row_tile_divides():
+    for m in [1, 2, 3, 4, 6, 8, 100, 128, 256, 129]:
+        bm = matvec._row_tile(m)
+        assert m % bm == 0
+        assert 1 <= bm <= 128
+
+
+# ---------------------------------------------------------------- paper worked example
+
+
+def test_paper_a1_sweep():
+    """The A(1) example of §5.1: cyclic D-iteration on P from A(1)."""
+    a = np.array(
+        [[5.0, 3, 0, 0], [3, 7, 0, 0], [0, 0, 8, 4], [0, 0, 2, 3]]
+    )
+    rhs = np.ones(4)
+    p, b = ref.to_iteration_matrix(a, rhs)
+    # paper's P (checked literally):
+    np.testing.assert_allclose(
+        p,
+        [
+            [0, -3 / 5, 0, 0],
+            [-3 / 7, 0, 0, 0],
+            [0, 0, 0, -4 / 8],
+            [0, 0, -2 / 3, 0],
+        ],
+    )
+    idx = np.arange(4, dtype=np.int32)
+    h = np.asarray(diffusion.d_multi_sweep(p, idx, b.copy(), b, 100))
+    x = np.linalg.solve(a, rhs)
+    np.testing.assert_allclose(h, x, rtol=1e-12, atol=1e-12)

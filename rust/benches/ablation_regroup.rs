@@ -1,0 +1,53 @@
+//! Ablation (§3.3): fluid regrouping/coalescing — "the fluid transmission
+//! can be delayed and regrouped so that this quantity is not too small".
+//! Sweeps the coalescing mass floor and measures messages vs convergence
+//! cost. Expected shape: regrouping cuts messages by orders of magnitude
+//! at essentially no cost in parallel work, until the floor gets so large
+//! it delays convergence.
+
+use std::time::Duration;
+
+use diter::bench_harness::{bench_header, fmt_secs, Table};
+use diter::coordinator::{v2, DistributedConfig};
+use diter::graph::{pagerank_system, power_law_web_graph};
+use diter::partition::Partition;
+use diter::solver::{FixedPointProblem, SequenceKind};
+use diter::transport::CoalescePolicy;
+
+fn main() {
+    bench_header(
+        "ablation_regroup",
+        "coalescing floor sweep on web-graph PageRank (N=4000, K=4)",
+    );
+    let n = 4_000;
+    let g = power_law_web_graph(n, 6, 0.1, 13);
+    let sys = pagerank_system(&g, 0.85, false).unwrap();
+    let problem = FixedPointProblem::new(sys.matrix.clone(), sys.b.clone()).unwrap();
+    let mut table = Table::new(&[
+        "min_mass", "msgs", "fluid-entries/msg", "MB-sent", "wall", "parallel-cost", "converged",
+    ]);
+    for min_mass in [0.0, 1e-12, 1e-9, 1e-6, 1e-4, 1e-2] {
+        let mut cfg = DistributedConfig::new(Partition::contiguous(n, 4).unwrap())
+            .with_tol(1e-9)
+            .with_sequence(SequenceKind::GreedyMaxFluid)
+            .with_seed(17);
+        cfg.coalesce = CoalescePolicy {
+            min_mass,
+            max_entries: 4096,
+        };
+        cfg.max_wall = Duration::from_secs(60);
+        let sol = v2::solve_v2(&problem, &cfg).unwrap();
+        let msgs = sol.metrics["msgs_sent"].max(1);
+        let bytes = sol.metrics["bytes_sent"];
+        table.row(&[
+            format!("{min_mass:.0e}"),
+            msgs.to_string(),
+            format!("{:.1}", (bytes.saturating_sub(16 * msgs)) as f64 / 16.0 / msgs as f64),
+            format!("{:.2}", bytes as f64 / 1e6),
+            fmt_secs(sol.wall_secs),
+            format!("{:.1}", sol.cost),
+            sol.converged.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+}

@@ -1,0 +1,46 @@
+//! Ablation (§4.1): the sharing-threshold policy — initial T₀ and the
+//! divisor α. Measures parallel cost, message volume and wall time on a
+//! coupled block system. Expected shape: very small T₀ over-shares
+//! (message blow-up), very large T₀ under-shares (slow convergence); α
+//! trades the two off — the paper's geometric T_k/α keeps both bounded.
+
+use std::time::Duration;
+
+use diter::bench_harness::{bench_header, fmt_secs, Table};
+use diter::coordinator::{v2, DistributedConfig};
+use diter::graph::block_coupled_matrix;
+use diter::partition::Partition;
+use diter::solver::FixedPointProblem;
+use diter::sparse::SparseMatrix;
+
+fn main() {
+    bench_header(
+        "ablation_threshold",
+        "threshold policy sweep: T0 x alpha on a coupled 512-node system, K=4",
+    );
+    let n = 512;
+    let k = 4;
+    let p = block_coupled_matrix(n, k, 0.45, 0.2, 6, 3);
+    let problem = FixedPointProblem::new(SparseMatrix::from_csr(p), vec![1.0; n]).unwrap();
+    let mut table = Table::new(&["T0", "alpha", "wall", "parallel-cost", "msgs", "converged"]);
+    for t0 in [1e-1, 1e-3, 1e-6] {
+        for alpha in [1.5, 2.0, 4.0, 8.0] {
+            let mut cfg = DistributedConfig::new(Partition::contiguous(n, k).unwrap())
+                .with_tol(1e-10)
+                .with_seed(11);
+            cfg.threshold0 = t0;
+            cfg.threshold_alpha = alpha;
+            cfg.max_wall = Duration::from_secs(30);
+            let sol = v2::solve_v2(&problem, &cfg).unwrap();
+            table.row(&[
+                format!("{t0:.0e}"),
+                format!("{alpha}"),
+                fmt_secs(sol.wall_secs),
+                format!("{:.1}", sol.cost),
+                sol.metrics["msgs_sent"].to_string(),
+                sol.converged.to_string(),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+}

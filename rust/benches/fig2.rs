@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Figure 2 — A(2), 2 PIDs, moderate coupling
+//! between Ω₁ and Ω₂. Expected shape: "still a visible gain factor",
+//! smaller than Figure 1's ≈2.
+
+use diter::bench_harness::bench_header;
+use diter::figures::{figure_gain, render_figure};
+
+fn main() {
+    bench_header(
+        "fig2",
+        "Figure 2: 2 PIDs on A(2) (coupled blocks) — error vs iteration",
+    );
+    print!("{}", render_figure(2, 20).expect("figure 2"));
+    let gain = figure_gain(2, 1e-8, 300)
+        .expect("gain")
+        .expect("tolerance reached");
+    println!("\nper-processor gain of 2 PIDs at 1e-8: {gain:.2}x (paper: visible, < fig1)");
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate paper Figure 3 — A(3), 2 PIDs, stronger coupling
+//! (one extra entry at (2,4)). Expected shape: "no longer any significant
+//! gain" for the distributed run.
+
+use diter::bench_harness::bench_header;
+use diter::figures::{figure_gain, render_figure};
+
+fn main() {
+    bench_header(
+        "fig3",
+        "Figure 3: 2 PIDs on A(3) (strong coupling) — error vs iteration",
+    );
+    print!("{}", render_figure(3, 20).expect("figure 3"));
+    let g3 = figure_gain(3, 1e-8, 400)
+        .expect("gain")
+        .expect("tolerance reached");
+    let g1 = figure_gain(1, 1e-8, 400).expect("gain").unwrap();
+    println!("\nper-processor gain at 1e-8: fig3 {g3:.2}x vs fig1 {g1:.2}x (paper: gain collapses)");
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Figure 4 — live evolution of P: A is solved up
+//! to iteration 5, then the matrix switches to A' (entry (2,4) = 1) and
+//! the computation continues via the §3.2 rebase, 2 PIDs. Expected shape:
+//! error (to the NEW limit) plateaus until the switch, then converges.
+
+use diter::bench_harness::bench_header;
+use diter::figures::render_figure;
+
+fn main() {
+    bench_header(
+        "fig4",
+        "Figure 4: 2 PIDs, P -> P' at iteration 6 (§3.2 warm rebase)",
+    );
+    print!("{}", render_figure(4, 24).expect("figure 4"));
+    println!("\n(the error is measured against the NEW system's limit X';");
+    println!(" the plateau before iteration 6 is the distance between the two limits)");
+}

@@ -1,0 +1,170 @@
+//! Perf bench: the hot paths of each layer, for the EXPERIMENTS.md §Perf
+//! iteration log.
+//!
+//!  * L3 sweep kernel: sparse row sweeps (the inner loop of every PID)
+//!  * L3 fluid diffusion: the V2 per-node diffusion
+//!  * transport: send/recv round-trips and coalescing overhead
+//!  * end-to-end: V2 PageRank updates/second at K = cores
+//!  * runtime (if artifacts present): PJRT d_round dispatch latency vs the
+//!    equivalent rust sweep, amortization vs block size
+
+use std::time::Duration;
+
+use diter::bench_harness::{bench, bench_header, black_box, fmt_secs, Table};
+use diter::coordinator::{v2, DistributedConfig};
+use diter::graph::{pagerank_system, power_law_web_graph};
+use diter::partition::Partition;
+use diter::prng::Xoshiro256pp;
+use diter::runtime::Runtime;
+use diter::solver::{DIteration, FixedPointProblem, SequenceKind, SolveOptions, Solver};
+use diter::transport::{bus, BusConfig, CoalesceBuffer, CoalescePolicy};
+
+fn main() {
+    bench_header("hotpath", "per-layer hot-path microbenchmarks");
+    let mut table = Table::new(&["bench", "mean", "p50", "p99", "throughput"]);
+
+    // --- L3 sparse sweep (the eq. 6 inner loop) -------------------------
+    let n = 50_000;
+    let g = power_law_web_graph(n, 8, 0.1, 3);
+    let sys = pagerank_system(&g, 0.85, false).unwrap();
+    let problem = FixedPointProblem::new(sys.matrix.clone(), sys.b.clone()).unwrap();
+    let csr = problem.matrix().csr();
+    let mut h = problem.b().to_vec();
+    let s = bench(3, 10, || {
+        for i in 0..n {
+            h[i] = csr.row_dot(i, &h) + problem.b()[i];
+        }
+        h[0]
+    });
+    table.row(&[
+        "sweep 50k rows (~8 nnz)".into(),
+        fmt_secs(s.mean),
+        fmt_secs(s.p50),
+        fmt_secs(s.p99),
+        format!("{:.2e} upd/s", n as f64 / s.mean),
+    ]);
+
+    // --- L3 fluid diffusion (V2 inner loop) -----------------------------
+    let mut f = problem.b().to_vec();
+    let mut hh = vec![0.0; n];
+    let s = bench(3, 10, || {
+        for i in 0..n {
+            DIteration::diffuse_once(&problem, &mut hh, &mut f, i);
+        }
+        f[0]
+    });
+    table.row(&[
+        "diffuse 50k nodes".into(),
+        fmt_secs(s.mean),
+        fmt_secs(s.p50),
+        fmt_secs(s.p99),
+        format!("{:.2e} upd/s", n as f64 / s.mean),
+    ]);
+
+    // --- transport round-trip -------------------------------------------
+    let (mut eps, _m) = bus::<Vec<(usize, f64)>>(2, &BusConfig::default());
+    let mut b_ep = eps.pop().unwrap();
+    let mut a_ep = eps.pop().unwrap();
+    let parcel: Vec<(usize, f64)> = (0..64).map(|i| (i, 0.5)).collect();
+    let s = bench(100, 2_000, || {
+        a_ep.send(1, parcel.clone(), 1.0, 1040).unwrap();
+        while b_ep.try_recv().is_none() {}
+        a_ep.collect_acks();
+    });
+    table.row(&[
+        "bus send+recv (64-entry)".into(),
+        fmt_secs(s.mean),
+        fmt_secs(s.p50),
+        fmt_secs(s.p99),
+        format!("{:.2e} msg/s", 1.0 / s.mean),
+    ]);
+
+    // --- coalescing -------------------------------------------------------
+    let mut buf = CoalesceBuffer::new(4, CoalescePolicy::default());
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let targets: Vec<(usize, usize)> =
+        (0..10_000).map(|_| (rng.below(4), rng.below(5_000))).collect();
+    let s = bench(3, 50, || {
+        for &(d, j) in &targets {
+            buf.add(d, j, 1e-6);
+        }
+        black_box(buf.take_all())
+    });
+    table.row(&[
+        "coalesce 10k adds+flush".into(),
+        fmt_secs(s.mean),
+        fmt_secs(s.p50),
+        fmt_secs(s.p99),
+        format!("{:.2e} add/s", 1e4 / s.mean),
+    ]);
+
+    // --- end-to-end V2 ----------------------------------------------------
+    let n2 = 20_000;
+    let g2 = power_law_web_graph(n2, 8, 0.1, 5);
+    let sys2 = pagerank_system(&g2, 0.85, false).unwrap();
+    let problem2 = FixedPointProblem::new(sys2.matrix.clone(), sys2.b.clone()).unwrap();
+    let k = std::thread::available_parallelism().map(|c| c.get().min(8)).unwrap_or(4);
+    let mut cfg = DistributedConfig::new(Partition::contiguous(n2, k).unwrap())
+        .with_tol(1e-9)
+        .with_sequence(SequenceKind::GreedyMaxFluid);
+    cfg.max_wall = Duration::from_secs(60);
+    let sol = v2::solve_v2(&problem2, &cfg).unwrap();
+    table.row(&[
+        format!("e2e V2 pagerank 20k, K={k}"),
+        fmt_secs(sol.wall_secs),
+        "-".into(),
+        "-".into(),
+        format!("{:.2e} upd/s", sol.updates_per_sec()),
+    ]);
+    // sequential for comparison
+    let sw = diter::metrics::Stopwatch::start();
+    let seq = DIteration::greedy()
+        .solve(
+            &problem2,
+            &SolveOptions {
+                tol: 1e-9,
+                max_cost: 100_000.0,
+                trace_every: 0.0,
+                exact: None,
+            },
+        )
+        .unwrap();
+    let wall = sw.elapsed_secs();
+    table.row(&[
+        "e2e sequential greedy 20k".into(),
+        fmt_secs(wall),
+        "-".into(),
+        "-".into(),
+        format!("{:.2e} upd/s", seq.cost * n2 as f64 / wall),
+    ]);
+
+    // --- PJRT runtime dispatch (optional) ---------------------------------
+    if Runtime::artifacts_available() {
+        let mut rt = Runtime::load_default().unwrap();
+        for &(m, nn) in &[(2usize, 4usize), (32, 128), (64, 256), (128, 512)] {
+            if rt.manifest().find("d_sweep", &[m, nn]).is_none() {
+                continue;
+            }
+            let mut rng = Xoshiro256pp::seed_from_u64(9);
+            let p_rows: Vec<f64> = (0..m * nn).map(|_| rng.uniform(-0.01, 0.01)).collect();
+            let idx: Vec<i32> = (0..m as i32).collect();
+            let hv: Vec<f64> = (0..nn).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let bv: Vec<f64> = (0..m).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            // warmup includes compile
+            let s = bench(3, 50, || {
+                rt.d_sweep(m, nn, &p_rows, &idx, &hv, &bv).unwrap()
+            });
+            table.row(&[
+                format!("PJRT d_sweep {m}x{nn}"),
+                fmt_secs(s.mean),
+                fmt_secs(s.p50),
+                fmt_secs(s.p99),
+                format!("{:.2e} upd/s", m as f64 / s.mean),
+            ]);
+        }
+    } else {
+        println!("(PJRT rows skipped: run `make artifacts` first)");
+    }
+
+    print!("{}", table.render());
+}

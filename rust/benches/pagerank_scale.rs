@@ -1,0 +1,97 @@
+//! Bench: the paper's announced target workload (§5/§6) — PageRank on a
+//! synthetic power-law web graph, V2 distributed D-iteration, scaling the
+//! number of PIDs. Reports wall time, work, parallel cost, throughput and
+//! transport volume per K, plus the sequential baselines.
+
+use std::time::Duration;
+
+use diter::bench_harness::{bench_header, fmt_secs, Table};
+use diter::coordinator::{v2, DistributedConfig};
+use diter::graph::{pagerank_system, power_law_web_graph};
+use diter::metrics::Stopwatch;
+use diter::partition::Partition;
+use diter::solver::{DIteration, FixedPointProblem, SequenceKind, SolveOptions, Solver};
+
+fn main() {
+    bench_header(
+        "pagerank_scale",
+        "V2 distributed PageRank on a power-law web graph, K = 1..8 PIDs",
+    );
+    let n = std::env::var("DITER_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20_000usize);
+    let tol = 1e-9;
+    let g = power_law_web_graph(n, 8, 0.1, 7);
+    println!(
+        "graph: {} nodes, {} edges, {} dangling; tol {tol:.0e}\n",
+        g.n(),
+        g.m(),
+        g.dangling_nodes().len()
+    );
+    let sys = pagerank_system(&g, 0.85, false).unwrap();
+    let problem = FixedPointProblem::new(sys.matrix.clone(), sys.b.clone()).unwrap();
+
+    // sequential baselines
+    let mut table = Table::new(&[
+        "scheme", "K", "wall", "upd/s", "parallel-cost", "msgs", "MB-sent", "residual",
+    ]);
+    for (name, solver) in [
+        ("diter-seq", DIteration::fluid_cyclic()),
+        ("diter-greedy", DIteration::greedy()),
+    ] {
+        let sw = Stopwatch::start();
+        let sol = solver
+            .solve(
+                &problem,
+                &SolveOptions {
+                    tol,
+                    max_cost: 100_000.0,
+                    trace_every: 0.0,
+                    exact: None,
+                },
+            )
+            .unwrap();
+        let wall = sw.elapsed_secs();
+        let updates = sol.cost * n as f64;
+        table.row(&[
+            name.into(),
+            "1".into(),
+            fmt_secs(wall),
+            format!("{:.2e}", updates / wall),
+            format!("{:.1}", sol.cost),
+            "-".into(),
+            "-".into(),
+            format!("{:.1e}", sol.residual),
+        ]);
+    }
+
+    let mut wall1 = None;
+    for k in [1usize, 2, 4, 8] {
+        let mut cfg = DistributedConfig::new(Partition::contiguous(n, k).unwrap())
+            .with_tol(tol)
+            .with_sequence(SequenceKind::GreedyMaxFluid)
+            .with_seed(5);
+        cfg.max_wall = Duration::from_secs(120);
+        let sol = v2::solve_v2(&problem, &cfg).unwrap();
+        assert!(sol.converged, "K={k} did not converge");
+        if k == 1 {
+            wall1 = Some(sol.wall_secs);
+        }
+        table.row(&[
+            "diter-v2".into(),
+            k.to_string(),
+            fmt_secs(sol.wall_secs),
+            format!("{:.2e}", sol.updates_per_sec()),
+            format!("{:.1}", sol.cost),
+            sol.metrics["msgs_sent"].to_string(),
+            format!("{:.2}", sol.metrics["bytes_sent"] as f64 / 1e6),
+            format!("{:.1e}", sol.residual),
+        ]);
+    }
+    print!("{}", table.render());
+    if let Some(w1) = wall1 {
+        println!("\n(speedup columns are wall-clock vs K=1: report shape, not absolutes —");
+        println!(" K=1 wall {} on this host)", fmt_secs(w1));
+    }
+}

@@ -1,0 +1,190 @@
+//! Benchmark substrate (no `criterion` offline): warmup + timed repeats,
+//! robust stats, and aligned table rendering used by every `cargo bench`
+//! target to print the paper's tables/figures as text series.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Timing statistics over repeated runs (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: xs[0],
+            p50: percentile(&xs, 0.50),
+            p99: percentile(&xs, 0.99),
+            max: xs[n - 1],
+        }
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Time `f` with `warmup` unmeasured runs then `reps` measured ones.
+/// Returns per-run wall-clock stats. The closure's return value is
+/// black-boxed so the work cannot be optimized away.
+pub fn bench<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Minimal black_box (stable): volatile read through a pointer.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66 — use it.
+    std::hint::black_box(x)
+}
+
+/// An aligned text table builder for bench output.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (c, cell) in cells.iter().enumerate() {
+                let _ = write!(out, "{:>width$}  ", cell, width = widths[c]);
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * ncol;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &widths, &mut out);
+        }
+        out
+    }
+}
+
+/// Format seconds human-readably for tables.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Standard header printed by every bench binary.
+pub fn bench_header(name: &str, what: &str) {
+    println!("==============================================================");
+    println!("bench: {name}");
+    println!("{what}");
+    println!("==============================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_known_values() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single() {
+        let s = Stats::from_samples(vec![5.0]);
+        assert_eq!(s.p50, 5.0);
+        assert_eq!(s.p99, 5.0);
+    }
+
+    #[test]
+    fn bench_runs_and_measures() {
+        let mut count = 0usize;
+        let s = bench(2, 5, || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["k", "time"]);
+        t.row(&["1".into(), "10ms".into()]);
+        t.row(&["200".into(), "5ms".into()]);
+        let r = t.render();
+        assert!(r.contains("k"));
+        assert_eq!(r.lines().count(), 4);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,218 @@
+//! CLI substrate: a small typed argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands. Produces the usage text for `diter --help`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{DiterError, Result};
+
+/// Declarative spec for one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// true = boolean flag (no value)
+    pub is_flag: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| DiterError::Parse {
+                location: format!("--{key}"),
+                message: format!("expected integer, got `{v}`"),
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| DiterError::Parse {
+                location: format!("--{key}"),
+                message: format!("expected integer, got `{v}`"),
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| DiterError::Parse {
+                location: format!("--{key}"),
+                message: format!("expected float, got `{v}`"),
+            }),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Parse `argv` (without the program name) against a spec.
+pub fn parse_args(argv: &[String], spec: &[OptSpec]) -> Result<Args> {
+    let mut args = Args::default();
+    // seed defaults
+    for s in spec {
+        if let Some(d) = s.default {
+            args.values.insert(s.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < argv.len() {
+        let tok = &argv[i];
+        if let Some(body) = tok.strip_prefix("--") {
+            let (key, inline_val) = match body.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (body.to_string(), None),
+            };
+            let s = spec.iter().find(|s| s.name == key).ok_or_else(|| {
+                DiterError::Parse {
+                    location: tok.clone(),
+                    message: format!("unknown option --{key}"),
+                }
+            })?;
+            if s.is_flag {
+                if inline_val.is_some() {
+                    return Err(DiterError::Parse {
+                        location: tok.clone(),
+                        message: format!("--{key} takes no value"),
+                    });
+                }
+                args.flags.push(key);
+            } else {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .ok_or_else(|| DiterError::Parse {
+                                location: tok.clone(),
+                                message: format!("--{key} requires a value"),
+                            })?
+                            .clone()
+                    }
+                };
+                args.values.insert(key, val);
+            }
+        } else {
+            args.positional.push(tok.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+/// Render the usage block for a subcommand.
+pub fn usage(cmd: &str, about: &str, spec: &[OptSpec]) -> String {
+    let mut out = format!("{cmd} — {about}\n\noptions:\n");
+    for s in spec {
+        let head = if s.is_flag {
+            format!("  --{}", s.name)
+        } else {
+            format!("  --{} <v>", s.name)
+        };
+        let default = s
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        out.push_str(&format!("{head:<28} {}{default}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<OptSpec> {
+        vec![
+            OptSpec {
+                name: "nodes",
+                help: "graph size",
+                is_flag: false,
+                default: Some("100"),
+            },
+            OptSpec {
+                name: "alpha",
+                help: "threshold divisor",
+                is_flag: false,
+                default: None,
+            },
+            OptSpec {
+                name: "verbose",
+                help: "print more",
+                is_flag: true,
+                default: None,
+            },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parse_args(&sv(&[]), &spec()).unwrap();
+        assert_eq!(a.get_usize("nodes", 0).unwrap(), 100);
+        let a = parse_args(&sv(&["--nodes", "500"]), &spec()).unwrap();
+        assert_eq!(a.get_usize("nodes", 0).unwrap(), 500);
+        let a = parse_args(&sv(&["--nodes=7"]), &spec()).unwrap();
+        assert_eq!(a.get_usize("nodes", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse_args(&sv(&["run", "--verbose", "x"]), &spec()).unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional(), &["run".to_string(), "x".to_string()]);
+    }
+
+    #[test]
+    fn float_parse() {
+        let a = parse_args(&sv(&["--alpha", "2.5"]), &spec()).unwrap();
+        assert_eq!(a.get_f64("alpha", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_f64("missing-ok", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_args(&sv(&["--unknown"]), &spec()).is_err());
+        assert!(parse_args(&sv(&["--alpha"]), &spec()).is_err());
+        assert!(parse_args(&sv(&["--verbose=1"]), &spec()).is_err());
+        let a = parse_args(&sv(&["--nodes", "abc"]), &spec()).unwrap();
+        assert!(a.get_usize("nodes", 0).is_err());
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage("diter solve", "solve a system", &spec());
+        assert!(u.contains("--nodes"));
+        assert!(u.contains("default: 100"));
+    }
+}

@@ -1,0 +1,243 @@
+//! Config-file substrate: a minimal TOML-subset parser (no `serde`/`toml`
+//! crates available offline) + the typed run configuration used by the
+//! launcher.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (`"..."`), integer, float, and boolean values, `#` comments, blank
+//! lines. This covers everything the launcher needs.
+
+use std::collections::BTreeMap;
+
+use crate::error::{DiterError, Result};
+
+/// A parsed config: `section -> key -> raw value`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+/// A scalar config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl Config {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new(); // "" = top level
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let loc = || format!("line {}", lineno + 1);
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| DiterError::Parse {
+                    location: loc(),
+                    message: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| DiterError::Parse {
+                location: loc(),
+                message: format!("expected `key = value`, got `{line}`"),
+            })?;
+            let key = line[..eq].trim().to_string();
+            let val = parse_value(line[eq + 1..].trim()).map_err(|m| DiterError::Parse {
+                location: loc(),
+                message: m,
+            })?;
+            if key.is_empty() {
+                return Err(DiterError::Parse {
+                    location: loc(),
+                    message: "empty key".into(),
+                });
+            }
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key, val);
+        }
+        Ok(cfg)
+    }
+
+    /// Load + parse a file.
+    pub fn load(path: &str) -> Result<Config> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn get_int(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn get_float(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key)
+            .and_then(Value::as_float)
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key)
+            .and_then(Value::as_bool)
+            .unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a `#` inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# run configuration
+name = "fig1"           # top-level
+[solver]
+scheme = "v1"
+pids = 2
+threshold_alpha = 2.0
+verbose = false
+
+[graph]
+nodes = 10000
+coupling = 0.15
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_str("", "name", "?"), "fig1");
+        assert_eq!(c.get_str("solver", "scheme", "?"), "v1");
+        assert_eq!(c.get_int("solver", "pids", 0), 2);
+        assert_eq!(c.get_float("solver", "threshold_alpha", 0.0), 2.0);
+        assert!(!c.get_bool("solver", "verbose", true));
+        assert_eq!(c.get_int("graph", "nodes", 0), 10_000);
+        assert_eq!(c.get_float("graph", "coupling", 0.0), 0.15);
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_int("x", "y", 7), 7);
+        assert_eq!(c.get_str("x", "y", "d"), "d");
+        assert!(c.get_bool("x", "y", true));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let c = Config::parse("k = 3").unwrap();
+        assert_eq!(c.get_float("", "k", 0.0), 3.0);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let c = Config::parse(r##"k = "a#b" # comment"##).unwrap();
+        assert_eq!(c.get_str("", "k", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let e = Config::parse("line1 = 1\noops").unwrap_err();
+        assert!(e.to_string().contains("line 2"), "{e}");
+        let e = Config::parse("[broken").unwrap_err();
+        assert!(e.to_string().contains("unterminated"), "{e}");
+        let e = Config::parse("k = \"unclosed").unwrap_err();
+        assert!(e.to_string().contains("string"), "{e}");
+    }
+
+    #[test]
+    fn sections_iter() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let names: Vec<&str> = c.sections().collect();
+        assert!(names.contains(&"solver"));
+        assert!(names.contains(&"graph"));
+    }
+}

@@ -1,0 +1,217 @@
+//! §4.3 speed adaptation: "when the PIDs advance at very different speeds
+//! (monitoring T_k), we can think of splitting the set Ω_k associated to
+//! the slowest PID_k or possibly regrouping Ω_k associated to the fastest
+//! PID_k".
+//!
+//! [`AdaptiveController`] watches per-PID progress (scalar updates per
+//! wall second, as published through [`super::monitor::MonitorState`]) and
+//! recommends repartitioning actions. The mechanics (exact-cover-preserving
+//! [`Partition::split_part`] / [`Partition::merge_parts`]) live in the
+//! partition module; this controller supplies the *policy*.
+
+use crate::partition::Partition;
+
+/// A recommended repartitioning action.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Adaptation {
+    /// everything within tolerance: keep the current partition
+    Keep,
+    /// split the slowest PID's set (it is the straggler)
+    Split { pid: usize },
+    /// merge the two fastest PIDs' sets (they idle waiting for stragglers)
+    Merge { fast_a: usize, fast_b: usize },
+}
+
+/// Policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptivePolicy {
+    /// recommend a split when the slowest PID's *per-coordinate* rate is
+    /// below `split_ratio` × the median rate (straggler detection)
+    pub split_ratio: f64,
+    /// recommend a merge when the two fastest PIDs are each above
+    /// `merge_ratio` × the median rate
+    pub merge_ratio: f64,
+    /// never shrink a part below this many coordinates by splitting
+    pub min_part: usize,
+    /// never grow the PID count beyond this
+    pub max_pids: usize,
+}
+
+impl Default for AdaptivePolicy {
+    fn default() -> Self {
+        Self {
+            split_ratio: 0.5,
+            merge_ratio: 2.0,
+            min_part: 2,
+            max_pids: 64,
+        }
+    }
+}
+
+/// Stateless controller: feed it the observed per-PID update counts since
+/// the last decision plus the current partition; get an action.
+#[derive(Clone, Debug, Default)]
+pub struct AdaptiveController {
+    pub policy: AdaptivePolicy,
+}
+
+
+impl AdaptiveController {
+    pub fn new(policy: AdaptivePolicy) -> Self {
+        Self { policy }
+    }
+
+    /// Decide based on per-PID update counts over the same wall interval.
+    /// Rates are normalized *per owned coordinate* so a PID with a bigger
+    /// Ω_k is not mistaken for a fast one.
+    pub fn decide(&self, partition: &Partition, updates: &[u64]) -> Adaptation {
+        let k = partition.k();
+        assert_eq!(updates.len(), k, "one update count per PID");
+        if k < 2 {
+            return Adaptation::Keep;
+        }
+        let rates: Vec<f64> = (0..k)
+            .map(|p| updates[p] as f64 / partition.part(p).len().max(1) as f64)
+            .collect();
+        let mut sorted = rates.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[k / 2];
+        if median <= 0.0 {
+            return Adaptation::Keep; // no signal yet
+        }
+        // straggler? split it (if splittable and we have PID headroom)
+        let (slowest, &slow_rate) = rates
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        if slow_rate < self.policy.split_ratio * median
+            && partition.part(slowest).len() >= 2 * self.policy.min_part
+            && k < self.policy.max_pids
+        {
+            return Adaptation::Split { pid: slowest };
+        }
+        // two clear over-performers? merge them
+        let mut by_rate: Vec<usize> = (0..k).collect();
+        by_rate.sort_by(|&a, &b| rates[b].partial_cmp(&rates[a]).unwrap());
+        let (fa, fb) = (by_rate[0], by_rate[1]);
+        if k > 2
+            && rates[fa] > self.policy.merge_ratio * median
+            && rates[fb] > self.policy.merge_ratio * median
+        {
+            return Adaptation::Merge {
+                fast_a: fa.min(fb),
+                fast_b: fa.max(fb),
+            };
+        }
+        Adaptation::Keep
+    }
+
+    /// Apply a decision, returning the (validated) new partition.
+    pub fn apply(
+        &self,
+        partition: &Partition,
+        action: &Adaptation,
+    ) -> crate::error::Result<Partition> {
+        let next = match action {
+            Adaptation::Keep => partition.clone(),
+            Adaptation::Split { pid } => partition.split_part(*pid)?,
+            Adaptation::Merge { fast_a, fast_b } => partition.merge_parts(*fast_a, *fast_b)?,
+        };
+        next.validate()?;
+        Ok(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl() -> AdaptiveController {
+        AdaptiveController::new(AdaptivePolicy::default())
+    }
+
+    #[test]
+    fn balanced_rates_keep() {
+        let p = Partition::contiguous(40, 4).unwrap();
+        let a = ctl().decide(&p, &[100, 110, 95, 105]);
+        assert_eq!(a, Adaptation::Keep);
+    }
+
+    #[test]
+    fn straggler_triggers_split() {
+        let p = Partition::contiguous(40, 4).unwrap();
+        // PID 2 at 20% of the others' rate
+        let a = ctl().decide(&p, &[100, 100, 20, 100]);
+        assert_eq!(a, Adaptation::Split { pid: 2 });
+        let next = ctl().apply(&p, &a).unwrap();
+        assert_eq!(next.k(), 5);
+        next.validate().unwrap();
+    }
+
+    #[test]
+    fn split_respects_min_part() {
+        let policy = AdaptivePolicy {
+            min_part: 10,
+            ..Default::default()
+        };
+        let c = AdaptiveController::new(policy);
+        let p = Partition::contiguous(40, 4).unwrap(); // parts of 10 < 2*min
+        let a = c.decide(&p, &[100, 100, 10, 100]);
+        assert_eq!(a, Adaptation::Keep);
+    }
+
+    #[test]
+    fn rates_normalized_per_coordinate() {
+        // PID 0 owns 30 coords, PIDs 1-2 own 5 each; equal *total* updates
+        // mean PID 0 is actually the straggler per coordinate — but at
+        // 1/6 ratio ≈ 0.33 < 0.5 of median it must be the split target
+        let owner: Vec<usize> = (0..40)
+            .map(|i| if i < 30 { 0 } else if i < 35 { 1 } else { 2 })
+            .collect();
+        let p = Partition::from_owner(owner, 3).unwrap();
+        let a = ctl().decide(&p, &[100, 100, 100]);
+        assert_eq!(a, Adaptation::Split { pid: 0 });
+    }
+
+    #[test]
+    fn two_fast_pids_merge() {
+        let p = Partition::contiguous(40, 5).unwrap();
+        // two PIDs far above the (upper) median, none below half of it:
+        // rates [62.5, 62.5, 12.5, 12.5, 11.25], median 12.5 — the slowest
+        // (11.25) clears the 0.5 split ratio, the two fastest clear 2×
+        let a = ctl().decide(&p, &[500, 500, 100, 100, 90]);
+        match a {
+            Adaptation::Merge { fast_a, fast_b } => {
+                assert_eq!((fast_a, fast_b), (0, 1));
+            }
+            other => panic!("expected merge, got {other:?}"),
+        }
+        let next = ctl().apply(&p, &a).unwrap();
+        assert_eq!(next.k(), 4);
+    }
+
+    #[test]
+    fn no_signal_keeps() {
+        let p = Partition::contiguous(8, 2).unwrap();
+        assert_eq!(ctl().decide(&p, &[0, 0]), Adaptation::Keep);
+    }
+
+    #[test]
+    fn single_pid_keeps() {
+        let p = Partition::contiguous(8, 1).unwrap();
+        assert_eq!(ctl().decide(&p, &[100]), Adaptation::Keep);
+    }
+
+    #[test]
+    fn max_pids_cap() {
+        let policy = AdaptivePolicy {
+            max_pids: 4,
+            ..Default::default()
+        };
+        let c = AdaptiveController::new(policy);
+        let p = Partition::contiguous(40, 4).unwrap();
+        let a = c.decide(&p, &[100, 100, 10, 100]);
+        assert_eq!(a, Adaptation::Keep, "at the PID cap, no split");
+    }
+}

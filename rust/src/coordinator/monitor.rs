@@ -1,0 +1,171 @@
+//! Global convergence monitor (§3.3 / §4.4).
+//!
+//! Each PID publishes its locally-known remaining fluid into a lock-free
+//! slot; the leader sums the slots plus the transport's in-flight fluid.
+//! For the V2 scheme this total is *exact* (fluid conservation: every unit
+//! is either in some PID's F, in a coalescing buffer — counted by its
+//! owner — or in flight). The monitor requires the threshold crossing to
+//! hold for several consecutive polls before declaring convergence, which
+//! closes the publish/poll race for V1's asynchronously-stale `r_k`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::metrics::ConvergenceTrace;
+use crate::transport::{AtomicF64, BusMonitor};
+
+/// Shared leader/worker coordination state.
+pub struct MonitorState {
+    /// per-PID published remaining fluid (local F + held coalesce mass)
+    pub published: Vec<AtomicF64>,
+    /// per-PID scalar-update counters
+    pub updates: Vec<AtomicU64>,
+    /// set by the leader when the run must stop
+    pub stop: AtomicBool,
+}
+
+impl MonitorState {
+    pub fn new(k: usize) -> Arc<Self> {
+        Arc::new(Self {
+            published: (0..k).map(|_| AtomicF64::new(f64::INFINITY)).collect(),
+            updates: (0..k).map(|_| AtomicU64::new(0)).collect(),
+            stop: AtomicBool::new(false),
+        })
+    }
+
+    pub fn publish(&self, k: usize, remaining: f64) {
+        self.published[k].set(remaining);
+    }
+
+    pub fn add_updates(&self, k: usize, n: u64) {
+        self.updates[k].fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn should_stop(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    /// Σ_k published r_k (∞ until every PID published once).
+    pub fn published_total(&self) -> f64 {
+        self.published.iter().map(AtomicF64::get).sum()
+    }
+
+    pub fn total_updates(&self) -> u64 {
+        self.updates.iter().map(|u| u.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn max_updates(&self) -> u64 {
+        self.updates
+            .iter()
+            .map(|u| u.load(Ordering::Relaxed))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Leader-side poll loop: waits until total fluid < tol (stable for
+/// `stable_polls` polls) or the deadline passes, then raises `stop`.
+/// Returns (converged, trace of total-fluid samples, wall seconds).
+pub fn run_monitor(
+    state: &MonitorState,
+    bus: &BusMonitor,
+    n: usize,
+    tol: f64,
+    max_wall: Duration,
+    poll: Duration,
+    stable_polls: usize,
+) -> (bool, ConvergenceTrace, f64) {
+    let t0 = Instant::now();
+    let deadline = t0 + max_wall;
+    let mut trace = ConvergenceTrace::new("monitor-total-fluid");
+    let mut stable = 0usize;
+    let mut converged = false;
+    loop {
+        let total = state.published_total() + bus.inflight_or_zero();
+        let cost = state.max_updates() as f64 / n as f64;
+        if total.is_finite() {
+            trace.push(cost, total);
+        }
+        // quiescence: no message may be awaiting application — a PID that
+        // hasn't absorbed a peer update yet publishes a stale (possibly
+        // zero) r_k, so `total` alone can transiently under-count.
+        if total < tol && bus.undelivered() == 0 {
+            stable += 1;
+            if stable >= stable_polls {
+                converged = true;
+                break;
+            }
+        } else {
+            stable = 0;
+        }
+        if Instant::now() >= deadline {
+            break;
+        }
+        std::thread::sleep(poll);
+    }
+    state.request_stop();
+    (converged, trace, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{bus, BusConfig};
+
+    #[test]
+    fn publish_and_total() {
+        let s = MonitorState::new(2);
+        assert!(s.published_total().is_infinite());
+        s.publish(0, 0.5);
+        s.publish(1, 0.25);
+        assert!((s.published_total() - 0.75).abs() < 1e-15);
+        s.add_updates(0, 10);
+        s.add_updates(1, 4);
+        assert_eq!(s.total_updates(), 14);
+        assert_eq!(s.max_updates(), 10);
+    }
+
+    #[test]
+    fn monitor_stops_on_convergence() {
+        let s = MonitorState::new(1);
+        let (eps, _m) = bus::<u8>(1, &BusConfig::default());
+        let mon = crate::transport::monitor_of(&eps[0]);
+        s.publish(0, 0.0);
+        let (converged, trace, _wall) = run_monitor(
+            &s,
+            &mon,
+            4,
+            1e-9,
+            Duration::from_secs(5),
+            Duration::from_micros(100),
+            3,
+        );
+        assert!(converged);
+        assert!(s.should_stop());
+        assert!(!trace.points.is_empty());
+    }
+
+    #[test]
+    fn monitor_times_out() {
+        let s = MonitorState::new(1);
+        let (eps, _m) = bus::<u8>(1, &BusConfig::default());
+        let mon = crate::transport::monitor_of(&eps[0]);
+        s.publish(0, 1.0); // never converges
+        let (converged, _trace, wall) = run_monitor(
+            &s,
+            &mon,
+            4,
+            1e-9,
+            Duration::from_millis(50),
+            Duration::from_micros(200),
+            3,
+        );
+        assert!(!converged);
+        assert!(wall >= 0.049);
+    }
+}

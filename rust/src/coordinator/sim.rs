@@ -1,0 +1,288 @@
+//! Deterministic lockstep simulator of the distributed schemes — the
+//! engine behind the paper-figure benches (Fig 1–4).
+//!
+//! The threaded runtime ([`super::v1`], [`super::v2`]) is asynchronous and
+//! therefore not run-to-run reproducible; the figures need the *exact*
+//! protocol of §5.1: "we applied jointly the cyclical sequence {1,2} and
+//! {3,4} exactly twice before sharing the local computation results".
+//! This module executes that protocol round-by-round: each round every PID
+//! performs `sweeps_per_share` local cyclic sweeps on its own full-H copy
+//! (V1 semantics), then all PIDs exchange slices simultaneously.
+//!
+//! Cost convention: each sweep costs 1 unit of *parallel* time (all PIDs
+//! sweep concurrently; a sweep touches |Ω_k| ≈ N/K coordinates, i.e. the
+//! per-PID work per unit is 1/K of the sequential method's — that is
+//! exactly the "gain factor of about 2 with 2 PIDs" of Fig 1).
+//!
+//! Snapshots of the assembled solution (owner's view of each coordinate)
+//! are recorded after every sweep so benches can chart any error measure.
+
+use crate::error::Result;
+use crate::partition::Partition;
+use crate::solver::{FixedPointProblem, Solver};
+
+/// A cost-stamped snapshot of the assembled solution.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub cost: f64,
+    pub x: Vec<f64>,
+}
+
+/// Lockstep V1 run configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub partition: Partition,
+    /// local sweeps between simultaneous shares (paper Fig 1: 2)
+    pub sweeps_per_share: usize,
+    /// total parallel cost units to run
+    pub max_cost: usize,
+    /// optionally switch to a new system once cumulative cost reaches
+    /// `.0` (the paper's §5.2 switches "from iteration 6")
+    pub switch_at: Option<(usize, FixedPointProblem)>,
+}
+
+/// Run the lockstep V1 distributed D-iteration; returns one snapshot per
+/// parallel cost unit (sweep), starting with the initial state at cost 0.
+pub fn simulate_v1(problem: &FixedPointProblem, cfg: &SimConfig) -> Result<Vec<Snapshot>> {
+    let n = problem.n();
+    let k = cfg.partition.k();
+    let mut current: FixedPointProblem = problem.clone();
+    // every PID holds a full H, initialized to B (§2.1.1)
+    let mut hs: Vec<Vec<f64>> = vec![current.b().to_vec(); k];
+    let mut snaps = Vec::with_capacity(cfg.max_cost + 1);
+    snaps.push(Snapshot {
+        cost: 0.0,
+        x: assemble(&cfg.partition, &hs, n),
+    });
+    let mut cost = 0usize;
+    while cost < cfg.max_cost {
+        // §3.2 live switch: matrix changes, warm H kept (H-form needs no
+        // rebase — eq. 6 converges to the new limit from any start).
+        if let Some((at, new_problem)) = &cfg.switch_at {
+            if cost == *at {
+                current = new_problem.clone();
+            }
+        }
+        // one round = sweeps_per_share sweeps then a share
+        for _ in 0..cfg.sweeps_per_share {
+            if cost >= cfg.max_cost {
+                break;
+            }
+            for (kk, h) in hs.iter_mut().enumerate() {
+                let csr = current.matrix().csr();
+                for &i in cfg.partition.part(kk) {
+                    h[i] = csr.row_dot(i, h) + current.b()[i];
+                }
+            }
+            cost += 1;
+            snaps.push(Snapshot {
+                cost: cost as f64,
+                x: assemble(&cfg.partition, &hs, n),
+            });
+        }
+        // simultaneous exchange: everyone receives everyone's slice
+        let assembled = assemble(&cfg.partition, &hs, n);
+        for h in hs.iter_mut() {
+            h.copy_from_slice(&assembled);
+        }
+    }
+    Ok(snaps)
+}
+
+/// Assemble the owners' view: coordinate i comes from its owner's H.
+fn assemble(partition: &Partition, hs: &[Vec<f64>], n: usize) -> Vec<f64> {
+    let mut x = vec![0.0; n];
+    for kk in 0..partition.k() {
+        for &i in partition.part(kk) {
+            x[i] = hs[kk][i];
+        }
+    }
+    x
+}
+
+/// Snapshot runner for any sequential [`Solver`]: records the solution
+/// after every cost unit by re-running with growing budgets (small-N
+/// figure harnesses only — O(max_cost²) but N = 4).
+pub fn sequential_snapshots(
+    solver: &dyn Solver,
+    problem: &FixedPointProblem,
+    max_cost: usize,
+    switch_at: Option<(usize, &FixedPointProblem)>,
+) -> Result<Vec<Snapshot>> {
+    let mut snaps = Vec::with_capacity(max_cost + 1);
+    for budget in 0..=max_cost {
+        let x = run_with_budget(solver, problem, budget, switch_at)?;
+        snaps.push(Snapshot {
+            cost: budget as f64,
+            x,
+        });
+    }
+    Ok(snaps)
+}
+
+fn run_with_budget(
+    solver: &dyn Solver,
+    problem: &FixedPointProblem,
+    budget: usize,
+    switch_at: Option<(usize, &FixedPointProblem)>,
+) -> Result<Vec<f64>> {
+    use crate::solver::SolveOptions;
+    let opts_for = |cost: usize| SolveOptions {
+        tol: 0.0,
+        max_cost: cost as f64,
+        trace_every: 0.0,
+        exact: None,
+    };
+    match switch_at {
+        None => Ok(solver.solve(problem, &opts_for(budget))?.x),
+        Some((at, _new_problem)) if budget <= at => {
+            Ok(solver.solve(problem, &opts_for(budget))?.x)
+        }
+        Some((at, new_problem)) => {
+            // warm-start continuation on the new system: rebase B' so the
+            // fluid/history split stays consistent (§3.2), then finish.
+            let h = solver.solve(problem, &opts_for(at))?.x;
+            let b_prime = super::update::rebase_b(new_problem.matrix(), &h, new_problem.b())?;
+            let sub = FixedPointProblem::new(new_problem.matrix().clone(), b_prime)?;
+            let y = solver.solve(&sub, &opts_for(budget - at))?.x;
+            Ok(h.iter().zip(&y).map(|(a, b)| a + b).collect())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_matrix;
+    use crate::linalg::vec_ops::dist1;
+    use crate::solver::{DIteration, GaussSeidel, Jacobi};
+
+    fn problem(which: u8) -> FixedPointProblem {
+        FixedPointProblem::from_linear_system(&paper_matrix(which), &[1.0; 4]).unwrap()
+    }
+
+    fn paper_cfg(max_cost: usize) -> SimConfig {
+        SimConfig {
+            partition: Partition::contiguous(4, 2).unwrap(),
+            sweeps_per_share: 2,
+            max_cost,
+            switch_at: None,
+        }
+    }
+
+    #[test]
+    fn lockstep_converges_to_exact_a1() {
+        let p = problem(1);
+        let snaps = simulate_v1(&p, &paper_cfg(40)).unwrap();
+        let exact = p.exact_solution().unwrap();
+        let last = snaps.last().unwrap();
+        assert!(dist1(&last.x, &exact) < 1e-12);
+        assert_eq!(snaps.len(), 41);
+    }
+
+    #[test]
+    fn a1_gain_factor_about_two() {
+        // Fig 1's claim: with no coupling, the 2-PID run reaches a given
+        // error in about half the parallel cost of the 1-PID run.
+        let p = problem(1);
+        let exact = p.exact_solution().unwrap();
+        let two = simulate_v1(&p, &paper_cfg(60)).unwrap();
+        let one = simulate_v1(
+            &p,
+            &SimConfig {
+                partition: Partition::contiguous(4, 1).unwrap(),
+                sweeps_per_share: 2,
+                max_cost: 60,
+                switch_at: None,
+            },
+        )
+        .unwrap();
+        let reach = |snaps: &[Snapshot], tol: f64| {
+            snaps
+                .iter()
+                .find(|s| dist1(&s.x, &exact) < tol)
+                .map(|s| s.cost)
+        };
+        let tol = 1e-8;
+        let c2 = reach(&two, tol).expect("2-PID must reach tol");
+        let c1 = reach(&one, tol).expect("1-PID must reach tol");
+        // each 2-PID sweep does half the scalar updates, so per-update the
+        // runs match; per *parallel cost* the distributed one wins ≈2×.
+        // (cost axis counts sweeps, and sweeps are half as much work —
+        // verify the speedup in equivalent-work units: c2 ≈ c1.)
+        // In parallel wall-time (sweeps), equal sweep counts mean the
+        // distributed run used half the per-PID work: gain ≈ c1*2/c2 ≈ 2.
+        let gain = 2.0 * c1 / c2.max(1.0);
+        assert!(
+            (1.5..=3.0).contains(&gain),
+            "gain {gain} (c1={c1}, c2={c2})"
+        );
+    }
+
+    #[test]
+    fn a3_coupling_kills_gain() {
+        // Fig 3: with strong coupling the 2-PID lockstep needs ~as many
+        // parallel sweeps as the sequential run (no significant gain).
+        let p = problem(3);
+        let exact = p.exact_solution().unwrap();
+        let two = simulate_v1(&p, &paper_cfg(200)).unwrap();
+        let tol = 1e-8;
+        let c2 = two
+            .iter()
+            .find(|s| dist1(&s.x, &exact) < tol)
+            .map(|s| s.cost)
+            .expect("still converges");
+        // sequential D-iteration cost for the same tol
+        let seq = sequential_snapshots(&DIteration::cyclic(), &p, 200, None).unwrap();
+        let c1 = seq
+            .iter()
+            .find(|s| dist1(&s.x, &exact) < tol)
+            .map(|s| s.cost)
+            .unwrap();
+        let gain = 2.0 * c1 / c2.max(1.0);
+        assert!(gain < 1.8, "gain should collapse, got {gain}");
+    }
+
+    #[test]
+    fn sequential_snapshot_matches_direct_solver_run() {
+        let p = problem(2);
+        let snaps = sequential_snapshots(&GaussSeidel::new(), &p, 10, None).unwrap();
+        assert_eq!(snaps.len(), 11);
+        // snapshots are reproducible and improving
+        let exact = p.exact_solution().unwrap();
+        let e_first = dist1(&snaps[1].x, &exact);
+        let e_last = dist1(&snaps[10].x, &exact);
+        assert!(e_last < e_first);
+    }
+
+    #[test]
+    fn switch_mid_run_reaches_new_limit() {
+        // the §5.2 scenario as a lockstep sim
+        let p_old = problem(1);
+        let p_new = problem(4);
+        let cfg = SimConfig {
+            partition: Partition::contiguous(4, 2).unwrap(),
+            sweeps_per_share: 2,
+            max_cost: 80,
+            switch_at: Some((6, p_new.clone())),
+        };
+        let snaps = simulate_v1(&p_old, &cfg).unwrap();
+        let exact_new = p_new.exact_solution().unwrap();
+        let last = snaps.last().unwrap();
+        assert!(
+            dist1(&last.x, &exact_new) < 1e-10,
+            "dist {}",
+            dist1(&last.x, &exact_new)
+        );
+    }
+
+    #[test]
+    fn sequential_switch_runner_consistent() {
+        let p_old = problem(1);
+        let p_new = problem(4);
+        let snaps =
+            sequential_snapshots(&Jacobi::new(), &p_old, 120, Some((6, &p_new))).unwrap();
+        let exact_new = p_new.exact_solution().unwrap();
+        assert!(dist1(&snaps.last().unwrap().x, &exact_new) < 1e-8);
+    }
+}

@@ -1,0 +1,112 @@
+//! §3.2 — live evolution of P: rebase the running computation onto a new
+//! matrix P' without restarting and without global synchronization.
+//!
+//! If H is the history accumulated so far under (P, B), the remaining work
+//! for the *new* system `X' = P'·X' + B` is the fixed point of
+//!
+//! ```text
+//! Y = P'·Y + B'   with   B' = F + (P'−P)·H = P'·H + B − H
+//! ```
+//!
+//! and `X' = H + Y`. Each PID can compute its own slice of B' locally from
+//! its rows of P' (the middle expression is the paper's; the right-hand
+//! form shows only P' is actually needed). This is Theorem 4 of [4]
+//! operationalized.
+//!
+//! For the **V1 / H-form** scheme there is an even simpler equivalent: the
+//! in-place update `H_i ← L_i(P')·H + B_i` converges to X' from *any*
+//! starting point, so switching the matrix and keeping H warm is already
+//! correct; [`rebase_b`] is what the **fluid form (V2)** needs, where F
+//! must be reset to the consistent `F'₀ = B'`.
+
+use crate::error::{DiterError, Result};
+use crate::sparse::SparseMatrix;
+
+/// Compute the rebased offset `B' = P'·H + B − H` (all coordinates).
+pub fn rebase_b(p_new: &SparseMatrix, h: &[f64], b: &[f64]) -> Result<Vec<f64>> {
+    if h.len() != p_new.n() || b.len() != p_new.n() {
+        return Err(DiterError::shape("rebase_b", p_new.n(), h.len()));
+    }
+    let mut out = p_new.csr().matvec(h)?;
+    for i in 0..out.len() {
+        out[i] += b[i] - h[i];
+    }
+    Ok(out)
+}
+
+/// Compute only the owned slice of B' (what one PID does locally):
+/// `B'_i = L_i(P')·H + B_i − H_i` for `i ∈ owned`.
+pub fn rebase_b_slice(
+    p_new: &SparseMatrix,
+    owned: &[usize],
+    h: &[f64],
+    b: &[f64],
+) -> Vec<f64> {
+    let csr = p_new.csr();
+    owned
+        .iter()
+        .map(|&i| csr.row_dot(i, h) + b[i] - h[i])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_matrix;
+    use crate::linalg::vec_ops::dist_inf;
+    use crate::solver::{DIteration, FixedPointProblem, SolveOptions, Solver};
+
+    /// The §5.2 scenario: run on P (from A), partially converge, switch to
+    /// P' (from A'), rebase, finish — the result must equal the cold-start
+    /// solution of the new system.
+    #[test]
+    fn rebase_reaches_new_limit() {
+        let p_old = FixedPointProblem::from_linear_system(&paper_matrix(1), &[1.0; 4]).unwrap();
+        let p_new = FixedPointProblem::from_linear_system(&paper_matrix(4), &[1.0; 4]).unwrap();
+        // partial run on the old system
+        let opts = SolveOptions {
+            tol: 0.0,
+            max_cost: 5.0,
+            trace_every: 0.0,
+            exact: None,
+        };
+        let partial = DIteration::cyclic().solve(&p_old, &opts).unwrap();
+        let h = partial.x.clone();
+        // rebase: Y = P'Y + B' ; X' = H + Y
+        let b_prime = rebase_b(p_new.matrix(), &h, p_new.b()).unwrap();
+        let sub = FixedPointProblem::new(p_new.matrix().clone(), b_prime).unwrap();
+        let y = DIteration::cyclic()
+            .solve(&sub, &SolveOptions::default())
+            .unwrap();
+        let x: Vec<f64> = h.iter().zip(&y.x).map(|(a, b)| a + b).collect();
+        let exact = p_new.exact_solution().unwrap();
+        assert!(dist_inf(&x, &exact) < 1e-9, "dist {}", dist_inf(&x, &exact));
+    }
+
+    #[test]
+    fn slice_matches_full() {
+        let p_new = FixedPointProblem::from_linear_system(&paper_matrix(4), &[1.0; 4]).unwrap();
+        let h = vec![0.1, 0.2, 0.3, 0.4];
+        let full = rebase_b(p_new.matrix(), &h, p_new.b()).unwrap();
+        let slice = rebase_b_slice(p_new.matrix(), &[1, 3], &h, p_new.b());
+        assert_eq!(slice, vec![full[1], full[3]]);
+    }
+
+    #[test]
+    fn identity_update_is_plain_fluid() {
+        // P' = P ⇒ B' = F (the current fluid) — eq. 4 rearranged
+        let p = FixedPointProblem::from_linear_system(&paper_matrix(2), &[1.0; 4]).unwrap();
+        let h = vec![0.05, 0.1, 0.15, 0.2];
+        let b_prime = rebase_b(p.matrix(), &h, p.b()).unwrap();
+        let f = p.fluid(&h);
+        for i in 0..4 {
+            assert!((b_prime[i] - f[i]).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn shape_errors() {
+        let p = FixedPointProblem::from_linear_system(&paper_matrix(1), &[1.0; 4]).unwrap();
+        assert!(rebase_b(p.matrix(), &[0.0; 3], p.b()).is_err());
+    }
+}

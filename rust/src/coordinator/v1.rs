@@ -1,0 +1,289 @@
+//! V1 distributed scheme (§3.1): full history vector per PID.
+//!
+//! Every `PID_k` holds a complete copy of H (initialized to B per §2.1.1),
+//! repeatedly applies the local updates `H_i ← L_i(P)·H + B_i` for
+//! `i ∈ Ω_k` (eq. 6), and shares its updated slice `(H)_{i∈Ω_k}` with all
+//! other PIDs when (§4.3):
+//!
+//! * its local remaining fluid `r_k = Σ_{i∈Ω_k} |L_i(P)·H + B_i − H_i|`
+//!   drops below the threshold `T_k` — after which `T_k ← T_k/α`; or
+//! * it received a peer update since its last share (and its own slice
+//!   actually changed — the "dirty" guard that keeps the literal
+//!   share-on-receive rule from echoing forever once converged).
+//!
+//! Workers run as OS threads over the async bus; the leader runs the
+//! convergence monitor and assembles the final solution from each owner's
+//! slice.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::monitor::{run_monitor, MonitorState};
+use super::{DistributedConfig, DistributedSolution};
+use crate::error::{DiterError, Result};
+use crate::metrics::ConvergenceTrace;
+use crate::solver::{FixedPointProblem, SequenceState};
+use crate::transport::{bus, monitor_of, BusConfig, Endpoint};
+
+/// V1 message: one PID's updated slice (values aligned with its Ω_k).
+#[derive(Clone, Debug)]
+pub struct SliceMsg {
+    pub owner: usize,
+    pub values: Vec<f64>,
+}
+
+/// Solve with the V1 scheme. The partition in `cfg` must cover the
+/// problem's coordinates.
+pub fn solve_v1(problem: &FixedPointProblem, cfg: &DistributedConfig) -> Result<DistributedSolution> {
+    let n = problem.n();
+    if cfg.partition.n() != n {
+        return Err(DiterError::shape("solve_v1 partition", n, cfg.partition.n()));
+    }
+    let k = cfg.partition.k();
+    let state = MonitorState::new(k);
+    let (endpoints, bus_metrics) = bus::<SliceMsg>(
+        k,
+        &BusConfig {
+            latency: cfg.latency,
+            seed: cfg.seed,
+        },
+    );
+    let bus_mon = monitor_of(&endpoints[0]);
+    let problem = Arc::new(problem.clone());
+    let partition = Arc::new(cfg.partition.clone());
+
+    let mut handles = Vec::with_capacity(k);
+    for (kk, ep) in endpoints.into_iter().enumerate() {
+        let problem = problem.clone();
+        let partition = partition.clone();
+        let state = state.clone();
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            v1_worker(kk, ep, &problem, &partition, &state, &cfg)
+        }));
+    }
+
+    let (converged_mon, trace, wall) = run_monitor(
+        &state,
+        &bus_mon,
+        n,
+        cfg.tol,
+        cfg.max_wall,
+        Duration::from_micros(200),
+        3,
+    );
+
+    // collect final slices
+    let mut x = vec![0.0; n];
+    for h in handles {
+        let (owned, values) = h
+            .join()
+            .map_err(|_| DiterError::Coordinator("V1 worker panicked".into()))?;
+        for (t, &i) in owned.iter().enumerate() {
+            x[i] = values[t];
+        }
+    }
+    let residual = problem.residual_norm(&x);
+    Ok(DistributedSolution {
+        residual,
+        converged: converged_mon && residual <= cfg.tol * 10.0,
+        cost: state.max_updates() as f64 / n as f64,
+        total_updates: state.total_updates(),
+        wall_secs: wall,
+        trace: relabel(trace, "v1-total-fluid"),
+        metrics: bus_metrics.snapshot(),
+        x,
+    })
+}
+
+fn relabel(mut t: ConvergenceTrace, name: &str) -> ConvergenceTrace {
+    t.name = name.to_string();
+    t
+}
+
+/// One PID's work loop. Returns (owned indices, final owned values).
+fn v1_worker(
+    k: usize,
+    mut ep: Endpoint<SliceMsg>,
+    problem: &FixedPointProblem,
+    partition: &crate::partition::Partition,
+    state: &MonitorState,
+    cfg: &DistributedConfig,
+) -> (Vec<usize>, Vec<f64>) {
+    let csr = problem.matrix().csr();
+    let b = problem.b();
+    let owned: Vec<usize> = partition.part(k).to_vec();
+    // §2.1.1: start from H = B (the free first sweep)
+    let mut h: Vec<f64> = b.to_vec();
+    let mut seq = SequenceState::new(
+        cfg.sequence,
+        owned.clone(),
+        cfg.seed ^ (k as u64).wrapping_mul(0x9E3779B97F4A7C15),
+    );
+    let mut threshold = cfg.threshold0;
+    let mut dirty = true; // slice changed since last share
+    let empty_fluid: Vec<f64> = Vec::new();
+    // greedy sequences need a live fluid view over owned coordinates
+    let use_greedy = cfg.sequence == crate::solver::SequenceKind::GreedyMaxFluid;
+    let mut fluid: Vec<f64> = if use_greedy { problem.fluid(&h) } else { empty_fluid };
+
+    loop {
+        if state.should_stop() {
+            break;
+        }
+        // 1. apply peer updates (uncommitted: the messages stay on the
+        //    bus's undelivered count until applied + republished, so the
+        //    monitor cannot declare quiescence in between)
+        let received = ep.drain_uncommitted();
+        let got_update = !received.is_empty();
+        for msg in &received {
+            let peer_owned = partition.part(msg.payload.owner);
+            for (t, &i) in peer_owned.iter().enumerate() {
+                h[i] = msg.payload.values[t];
+            }
+        }
+        if got_update && use_greedy {
+            fluid = problem.fluid(&h); // peer writes invalidate the view
+        }
+        if got_update {
+            // publish the post-apply r_k before committing receipt
+            let mut r = 0.0;
+            for &i in &owned {
+                r += (csr.row_dot(i, &h) + b[i] - h[i]).abs();
+            }
+            state.publish(k, r);
+            for msg in &received {
+                ep.commit(msg.from, msg.seq, msg.mass);
+            }
+        }
+        // 2. local updates (eq. 6): sweeps_per_round passes over Ω_k
+        let quanta = cfg.sweeps_per_round * owned.len();
+        for _ in 0..quanta {
+            let i = seq.next(&fluid);
+            let new = csr.row_dot(i, &h) + b[i];
+            if new != h[i] {
+                dirty = true;
+            }
+            if use_greedy {
+                let delta = new - h[i];
+                h[i] = new;
+                fluid[i] = 0.0;
+                if delta != 0.0 {
+                    let (rows, vals) = problem.matrix().csc().col(i);
+                    for t in 0..rows.len() {
+                        fluid[rows[t]] += vals[t] * delta;
+                    }
+                }
+            } else {
+                h[i] = new;
+            }
+        }
+        state.add_updates(k, quanta as u64);
+        // 3. local remaining fluid (§4.1)
+        let mut r_k = 0.0;
+        for &i in &owned {
+            r_k += (csr.row_dot(i, &h) + b[i] - h[i]).abs();
+        }
+        state.publish(k, r_k);
+        // 4. sharing triggers (§4.3)
+        let threshold_hit = r_k < threshold;
+        if threshold_hit && dirty {
+            threshold /= cfg.threshold_alpha; // §4.1 (only on real progress)
+        }
+        if (threshold_hit || got_update) && dirty {
+            let values: Vec<f64> = owned.iter().map(|&i| h[i]).collect();
+            let bytes = values.len() * 8 + 16;
+            let _ = ep.broadcast(
+                &SliceMsg {
+                    owner: k,
+                    values,
+                },
+                0.0, // V1 messages carry state, not fluid mass
+                bytes,
+            );
+            dirty = false;
+        }
+        // 5. idle backoff: nothing new and locally converged
+        if !got_update && r_k == 0.0 {
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
+    ep.collect_acks();
+    let values: Vec<f64> = owned.iter().map(|&i| h[i]).collect();
+    (owned, values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_matrix;
+    use crate::linalg::vec_ops::dist_inf;
+    use crate::partition::Partition;
+    use crate::solver::SequenceKind;
+
+    fn a1_problem() -> FixedPointProblem {
+        FixedPointProblem::from_linear_system(&paper_matrix(1), &[1.0; 4]).unwrap()
+    }
+
+    #[test]
+    fn two_pids_solve_a1() {
+        let problem = a1_problem();
+        let cfg = DistributedConfig::new(Partition::contiguous(4, 2).unwrap()).with_tol(1e-12);
+        let sol = solve_v1(&problem, &cfg).unwrap();
+        assert!(sol.converged, "residual {}", sol.residual);
+        let exact = problem.exact_solution().unwrap();
+        assert!(dist_inf(&sol.x, &exact) < 1e-9);
+        assert!(sol.total_updates > 0);
+    }
+
+    #[test]
+    fn four_pids_with_coupling() {
+        let problem =
+            FixedPointProblem::from_linear_system(&paper_matrix(3), &[1.0; 4]).unwrap();
+        let cfg = DistributedConfig::new(Partition::contiguous(4, 4).unwrap()).with_tol(1e-11);
+        let sol = solve_v1(&problem, &cfg).unwrap();
+        assert!(sol.converged);
+        let exact = problem.exact_solution().unwrap();
+        assert!(dist_inf(&sol.x, &exact) < 1e-8);
+    }
+
+    #[test]
+    fn single_pid_degenerates_to_sequential() {
+        let problem = a1_problem();
+        let cfg = DistributedConfig::new(Partition::contiguous(4, 1).unwrap()).with_tol(1e-12);
+        let sol = solve_v1(&problem, &cfg).unwrap();
+        assert!(sol.converged);
+        assert!(sol.metrics["msgs_sent"] == 0, "no peers, no messages");
+    }
+
+    #[test]
+    fn greedy_sequence_works_distributed() {
+        let problem =
+            FixedPointProblem::from_linear_system(&paper_matrix(2), &[1.0; 4]).unwrap();
+        let cfg = DistributedConfig::new(Partition::contiguous(4, 2).unwrap())
+            .with_tol(1e-11)
+            .with_sequence(SequenceKind::GreedyMaxFluid);
+        let sol = solve_v1(&problem, &cfg).unwrap();
+        assert!(sol.converged);
+        let exact = problem.exact_solution().unwrap();
+        assert!(dist_inf(&sol.x, &exact) < 1e-8);
+    }
+
+    #[test]
+    fn latency_does_not_break_convergence() {
+        let problem =
+            FixedPointProblem::from_linear_system(&paper_matrix(2), &[1.0; 4]).unwrap();
+        let mut cfg =
+            DistributedConfig::new(Partition::contiguous(4, 2).unwrap()).with_tol(1e-11);
+        cfg.latency = Some((Duration::from_micros(100), Duration::from_micros(500)));
+        let sol = solve_v1(&problem, &cfg).unwrap();
+        assert!(sol.converged);
+    }
+
+    #[test]
+    fn partition_size_mismatch_rejected() {
+        let problem = a1_problem();
+        let cfg = DistributedConfig::new(Partition::contiguous(6, 2).unwrap());
+        assert!(solve_v1(&problem, &cfg).is_err());
+    }
+}

@@ -1,0 +1,86 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All errors produced by the `diter` crate.
+#[derive(Debug, Error)]
+pub enum DiterError {
+    /// Dimension mismatch between operands (`what` describes the operation).
+    #[error("shape mismatch in {what}: expected {expected}, got {got}")]
+    ShapeMismatch {
+        what: &'static str,
+        expected: String,
+        got: String,
+    },
+
+    /// The iteration matrix does not satisfy the convergence precondition
+    /// (spectral radius / diagonal-dominance check failed).
+    #[error("convergence precondition violated: {0}")]
+    NotContractive(String),
+
+    /// Singular or near-singular matrix in a direct solve.
+    #[error("singular matrix: pivot {pivot} at column {col}")]
+    Singular { col: usize, pivot: f64 },
+
+    /// An iterative method hit its iteration cap before reaching tolerance.
+    #[error("did not converge: residual {residual} after {iterations} iterations (tol {tol})")]
+    DidNotConverge {
+        iterations: usize,
+        residual: f64,
+        tol: f64,
+    },
+
+    /// Partition is not an exact cover of `0..n`.
+    #[error("invalid partition: {0}")]
+    InvalidPartition(String),
+
+    /// Config file / CLI parse errors.
+    #[error("parse error at {location}: {message}")]
+    Parse { location: String, message: String },
+
+    /// Transport-level failure (closed endpoint, lost ack, ...).
+    #[error("transport error: {0}")]
+    Transport(String),
+
+    /// Coordinator-level failure (worker panic, protocol violation, ...).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// PJRT runtime failure (artifact missing, compile/execute error).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Generic I/O.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, DiterError>;
+
+impl DiterError {
+    /// Helper for shape errors.
+    pub fn shape(what: &'static str, expected: impl ToString, got: impl ToString) -> Self {
+        DiterError::ShapeMismatch {
+            what,
+            expected: expected.to_string(),
+            got: got.to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages() {
+        let e = DiterError::shape("matvec", "4", "5");
+        assert!(e.to_string().contains("matvec"));
+        let e = DiterError::DidNotConverge {
+            iterations: 10,
+            residual: 0.5,
+            tol: 1e-9,
+        };
+        assert!(e.to_string().contains("10"));
+    }
+}

@@ -1,0 +1,140 @@
+//! Paper-figure regeneration (shared by `diter figure` and the benches).
+//!
+//! Each figure is an error-vs-iteration chart; we reproduce it as a text
+//! table with one column per series (Jacobi, Gauss–Seidel, sequential
+//! D-iteration, 2-PID distributed D-iteration), using the exact protocol
+//! of §5.1: cyclic sequences, partitions {1,2}/{3,4}, two local cycles
+//! between shares. Figure 4 switches P → P' at iteration 6 (§5.2).
+
+use crate::coordinator::sim;
+use crate::error::Result;
+use crate::graph::paper_matrix;
+use crate::linalg::vec_ops::dist1;
+use crate::metrics::{render_traces_table, traces_to_csv, ConvergenceTrace};
+use crate::partition::Partition;
+use crate::solver::{DIteration, FixedPointProblem, GaussSeidel, Jacobi};
+
+/// All four series of one paper figure.
+pub struct FigureData {
+    pub id: u8,
+    pub traces: Vec<ConvergenceTrace>,
+}
+
+/// Compute the series for paper figure `id` (1..=4) up to `max_cost`
+/// equivalent iterations.
+pub fn figure_data(id: u8, max_cost: usize) -> Result<FigureData> {
+    assert!((1..=4).contains(&id), "figure id must be 1..4");
+    let which = if id == 4 { 1 } else { id };
+    let problem = FixedPointProblem::from_linear_system(&paper_matrix(which), &[1.0; 4])?;
+    let switch_problem = if id == 4 {
+        Some(FixedPointProblem::from_linear_system(
+            &paper_matrix(4),
+            &[1.0; 4],
+        )?)
+    } else {
+        None
+    };
+    let exact = match &switch_problem {
+        Some(p2) => p2.exact_solution()?,
+        None => problem.exact_solution()?,
+    };
+    let switch_at = 6usize;
+    let switch_ref = switch_problem.as_ref().map(|p| (switch_at, p));
+
+    let to_trace = |name: &str, snaps: &[sim::Snapshot]| {
+        let mut t = ConvergenceTrace::new(name);
+        for s in snaps {
+            t.push(s.cost, dist1(&s.x, &exact));
+        }
+        t
+    };
+
+    let mut traces = Vec::new();
+    traces.push(to_trace(
+        "jacobi",
+        &sim::sequential_snapshots(&Jacobi::new(), &problem, max_cost, switch_ref)?,
+    ));
+    traces.push(to_trace(
+        "gauss-seidel",
+        &sim::sequential_snapshots(&GaussSeidel::new(), &problem, max_cost, switch_ref)?,
+    ));
+    traces.push(to_trace(
+        "diter-1pid",
+        &sim::sequential_snapshots(&DIteration::cyclic(), &problem, max_cost, switch_ref)?,
+    ));
+    let cfg = sim::SimConfig {
+        partition: Partition::contiguous(4, 2)?,
+        sweeps_per_share: 2,
+        max_cost,
+        switch_at: switch_problem.clone().map(|p| (switch_at, p)),
+    };
+    traces.push(to_trace("diter-2pids", &sim::simulate_v1(&problem, &cfg)?));
+    Ok(FigureData { id, traces })
+}
+
+/// Render figure `id` as the bench/CLI text table.
+pub fn render_figure(id: u8, max_cost: usize) -> Result<String> {
+    let data = figure_data(id, max_cost)?;
+    let mut out = format!(
+        "# Figure {id}: L1 distance to the limit vs cost (1 unit = N scalar updates)\n"
+    );
+    if id == 4 {
+        out.push_str("# matrix switches P -> P' at iteration 6 (section 3.2 rebase)\n");
+    }
+    out.push_str(&render_traces_table(&data.traces));
+    Ok(out)
+}
+
+/// CSV form (long format) for plotting.
+pub fn figure_csv(id: u8, max_cost: usize) -> Result<String> {
+    Ok(traces_to_csv(&figure_data(id, max_cost)?.traces))
+}
+
+/// The qualitative headline of a figure: parallel-cost gain of the 2-PID
+/// run over the 1-PID run at tolerance `tol` (≈2 for Fig 1, ≈1 for Fig 3).
+pub fn figure_gain(id: u8, tol: f64, max_cost: usize) -> Result<Option<f64>> {
+    let data = figure_data(id, max_cost)?;
+    let find = |name: &str| {
+        data.traces
+            .iter()
+            .find(|t| t.name == name)
+            .and_then(|t| t.cost_to_reach(tol))
+    };
+    let (c1, c2) = match (find("diter-1pid"), find("diter-2pids")) {
+        (Some(a), Some(b)) => (a, b),
+        _ => return Ok(None),
+    };
+    // each 2-PID sweep is half the per-PID work of a sequential pass, so
+    // equal sweep counts mean a ×2 gain in per-processor work
+    Ok(Some(2.0 * c1 / c2.max(1.0)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figures_render_all_series() {
+        for id in 1..=4u8 {
+            let table = render_figure(id, 12).unwrap();
+            for name in ["jacobi", "gauss-seidel", "diter-1pid", "diter-2pids"] {
+                assert!(table.contains(name), "figure {id} missing {name}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig1_gain_about_two_fig3_gain_about_one() {
+        let g1 = figure_gain(1, 1e-8, 120).unwrap().unwrap();
+        let g3 = figure_gain(3, 1e-8, 300).unwrap().unwrap();
+        assert!((1.5..3.0).contains(&g1), "fig1 gain {g1}");
+        assert!(g3 < g1, "fig3 gain {g3} should be below fig1 gain {g1}");
+    }
+
+    #[test]
+    fn csv_form_parses() {
+        let csv = figure_csv(2, 8).unwrap();
+        assert!(csv.starts_with("series,cost,error"));
+        assert!(csv.lines().count() > 10);
+    }
+}

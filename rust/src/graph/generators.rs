@@ -1,0 +1,410 @@
+//! Synthetic workload generators (DESIGN.md §3 substitutions).
+
+use super::Digraph;
+use crate::linalg::DenseMat;
+use crate::prng::Xoshiro256pp;
+use crate::sparse::TripletBuilder;
+
+/// Erdős–Rényi G(n, p) digraph (no self-loops).
+pub fn erdos_renyi_digraph(n: usize, p: f64, seed: u64) -> Digraph {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut g = Digraph::new(n);
+    for u in 0..n {
+        for v in 0..n {
+            if u != v && rng.chance(p) {
+                g.add_edge(u, v);
+            }
+        }
+    }
+    g.finish();
+    g
+}
+
+/// Preferential-attachment (Barabási–Albert style) digraph: each new node
+/// links to `m_links` earlier nodes chosen ∝ in-degree+1. Produces the
+/// heavy-tailed in-degree distribution of web-like graphs.
+pub fn barabasi_albert_digraph(n: usize, m_links: usize, seed: u64) -> Digraph {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut g = Digraph::new(n);
+    // target pool: nodes repeated once per in-link (+1 smoothing implied by
+    // seeding each node once when it appears)
+    let mut pool: Vec<usize> = Vec::with_capacity(2 * n * m_links);
+    if n > 0 {
+        pool.push(0);
+    }
+    for u in 1..n {
+        let k = m_links.min(u);
+        let mut chosen = Vec::with_capacity(k);
+        let mut guard = 0;
+        while chosen.len() < k && guard < 50 * k {
+            let t = pool[rng.below(pool.len())];
+            if t != u && !chosen.contains(&t) {
+                chosen.push(t);
+            }
+            guard += 1;
+        }
+        // fall back to uniform picks if the pool was too concentrated
+        while chosen.len() < k {
+            let t = rng.below(u);
+            if !chosen.contains(&t) {
+                chosen.push(t);
+            }
+        }
+        for &t in &chosen {
+            g.add_edge(u, t);
+            pool.push(t);
+        }
+        pool.push(u);
+    }
+    g.finish();
+    g
+}
+
+/// Power-law "web-like" digraph: out-degrees ~ Zipf(s) capped at
+/// `max_out`, targets chosen by preferential attachment, plus a fraction
+/// of dangling nodes (pages with no out-links) — the workload shape of the
+/// paper's intended PageRank application.
+pub fn power_law_web_graph(
+    n: usize,
+    avg_out: usize,
+    dangling_frac: f64,
+    seed: u64,
+) -> Digraph {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut g = Digraph::new(n);
+    // in-degree-proportional target pool (seeded uniformly)
+    let mut pool: Vec<usize> = (0..n).collect();
+    let max_out = (avg_out * 10).max(4);
+    for u in 0..n {
+        if rng.chance(dangling_frac) {
+            continue; // a dangling page
+        }
+        // Zipf out-degree with mean ≈ avg_out: draw z in 1..=max_out then
+        // rescale towards the mean.
+        let z = rng.zipf(max_out, 2.0);
+        let deg = (z * avg_out).div_ceil(2).clamp(1, max_out);
+        for _ in 0..deg {
+            let t = if rng.chance(0.8) {
+                pool[rng.below(pool.len())]
+            } else {
+                rng.below(n)
+            };
+            if t != u {
+                g.add_edge(u, t);
+                pool.push(t);
+            }
+        }
+    }
+    g.finish();
+    g
+}
+
+/// 2-D torus grid digraph (each cell links to its 4 neighbors): the
+/// maximal-locality workload for partitioning experiments.
+pub fn grid_digraph(side: usize) -> Digraph {
+    let n = side * side;
+    let mut g = Digraph::new(n);
+    let at = |r: usize, c: usize| r * side + c;
+    for r in 0..side {
+        for c in 0..side {
+            let u = at(r, c);
+            g.add_edge(u, at((r + 1) % side, c));
+            g.add_edge(u, at((r + side - 1) % side, c));
+            g.add_edge(u, at(r, (c + 1) % side));
+            g.add_edge(u, at(r, (c + side - 1) % side));
+        }
+    }
+    g.finish();
+    g
+}
+
+/// Block-structured iteration matrix with tunable inter-block coupling —
+/// the continuous version of the paper's A(1) → A(3) progression (Fig 1–3).
+///
+/// Builds a row-substochastic P with `k` diagonal blocks of size `n/k`;
+/// within-block entries sum to `intra`, cross-block entries to `coupling`
+/// per row (`intra + coupling < 1` keeps ρ(P) < 1). `coupling = 0`
+/// reproduces the fully separable A(1) case.
+pub fn block_coupled_matrix(
+    n: usize,
+    k: usize,
+    intra: f64,
+    coupling: f64,
+    nnz_per_row: usize,
+    seed: u64,
+) -> crate::sparse::CsrMatrix {
+    assert!(k >= 1 && n >= k, "need n >= k >= 1");
+    assert!(
+        intra + coupling < 1.0,
+        "intra + coupling must stay below 1 for convergence"
+    );
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let block = n / k;
+    let mut b = TripletBuilder::with_capacity(n, n, n * nnz_per_row);
+    for i in 0..n {
+        let my_block = (i / block).min(k - 1);
+        let (lo, hi) = block_range(n, k, my_block);
+        // within-block targets
+        let in_block: Vec<usize> = pick_distinct(&mut rng, lo, hi, nnz_per_row, i);
+        let w_in = if in_block.is_empty() {
+            0.0
+        } else {
+            intra / in_block.len() as f64
+        };
+        for &j in &in_block {
+            // alternate signs like the paper's P (negative off-diagonals)
+            let sign = if rng.chance(0.5) { -1.0 } else { 1.0 };
+            b.push(i, j, sign * w_in);
+        }
+        // cross-block targets
+        if coupling > 0.0 && k > 1 {
+            let cross_cnt = nnz_per_row.div_ceil(2).max(1);
+            let mut picked = Vec::with_capacity(cross_cnt);
+            let mut guard = 0;
+            while picked.len() < cross_cnt && guard < 100 {
+                let j = rng.below(n);
+                let jb = (j / block).min(k - 1);
+                if jb != my_block && j != i && !picked.contains(&j) {
+                    picked.push(j);
+                }
+                guard += 1;
+            }
+            if !picked.is_empty() {
+                let w = coupling / picked.len() as f64;
+                for &j in &picked {
+                    let sign = if rng.chance(0.5) { -1.0 } else { 1.0 };
+                    b.push(i, j, sign * w);
+                }
+            }
+        }
+    }
+    b.to_csr()
+}
+
+fn block_range(n: usize, k: usize, blk: usize) -> (usize, usize) {
+    let base = n / k;
+    let lo = blk * base;
+    let hi = if blk == k - 1 { n } else { lo + base };
+    (lo, hi)
+}
+
+fn pick_distinct(
+    rng: &mut Xoshiro256pp,
+    lo: usize,
+    hi: usize,
+    want: usize,
+    exclude: usize,
+) -> Vec<usize> {
+    let avail: Vec<usize> = (lo..hi).filter(|&j| j != exclude).collect();
+    if avail.is_empty() {
+        return Vec::new();
+    }
+    let k = want.min(avail.len());
+    let idx = rng.sample_distinct(avail.len(), k);
+    idx.into_iter().map(|t| avail[t]).collect()
+}
+
+/// A synthetic joint publications+authors graph (paper ref [5]): papers
+/// cite older papers (power-law), authors write papers, and the joint
+/// ranking couples the two node classes.
+#[derive(Clone, Debug)]
+pub struct PaperAuthorGraph {
+    /// node ids: `0..n_papers` are papers, `n_papers..n_papers+n_authors`
+    /// are authors.
+    pub graph: Digraph,
+    pub n_papers: usize,
+    pub n_authors: usize,
+}
+
+/// Generate the paper–author graph: citation edges paper→paper, authorship
+/// edges paper→author and author→paper (the mutual-reinforcement loops of
+/// the joint ranking).
+pub fn paper_author_graph(
+    n_papers: usize,
+    n_authors: usize,
+    cites_per_paper: usize,
+    authors_per_paper: usize,
+    seed: u64,
+) -> PaperAuthorGraph {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let n = n_papers + n_authors;
+    let mut g = Digraph::new(n);
+    // citation pool for preferential attachment among papers
+    let mut pool: Vec<usize> = vec![0];
+    for p in 1..n_papers {
+        let k = cites_per_paper.min(p);
+        for _ in 0..k {
+            let t = if rng.chance(0.7) {
+                pool[rng.below(pool.len())]
+            } else {
+                rng.below(p)
+            };
+            g.add_edge(p, t);
+            pool.push(t);
+        }
+        pool.push(p);
+    }
+    // authorship: papers ↔ authors (author popularity is Zipf)
+    for p in 0..n_papers {
+        let k = authors_per_paper.max(1);
+        for _ in 0..k {
+            let a = n_papers + (rng.zipf(n_authors, 1.5) - 1);
+            g.add_edge(p, a);
+            g.add_edge(a, p);
+        }
+    }
+    g.finish();
+    PaperAuthorGraph {
+        graph: g,
+        n_papers,
+        n_authors,
+    }
+}
+
+/// The paper's worked 4×4 systems (§5.1/§5.2), as dense matrices.
+pub fn paper_matrix(which: u8) -> DenseMat {
+    match which {
+        1 => DenseMat::from_rows(&[
+            &[5.0, 3.0, 0.0, 0.0],
+            &[3.0, 7.0, 0.0, 0.0],
+            &[0.0, 0.0, 8.0, 4.0],
+            &[0.0, 0.0, 2.0, 3.0],
+        ]),
+        2 => DenseMat::from_rows(&[
+            &[5.0, 3.0, 1.0, 1.0],
+            &[3.0, 7.0, 1.0, 0.0],
+            &[1.0, 1.0, 8.0, 4.0],
+            &[1.0, 1.0, 2.0, 3.0],
+        ]),
+        3 => DenseMat::from_rows(&[
+            &[5.0, 3.0, 1.0, 1.0],
+            &[3.0, 7.0, 1.0, 1.0],
+            &[1.0, 1.0, 8.0, 4.0],
+            &[1.0, 1.0, 2.0, 3.0],
+        ]),
+        // §5.2's A' (A(1) with entry (2,4) = 1, 1-indexed)
+        4 => DenseMat::from_rows(&[
+            &[5.0, 3.0, 0.0, 0.0],
+            &[3.0, 7.0, 0.0, 1.0],
+            &[0.0, 0.0, 8.0, 4.0],
+            &[0.0, 0.0, 2.0, 3.0],
+        ]),
+        _ => panic!("paper_matrix: which must be 1..=4"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn er_edge_count_close_to_expectation() {
+        let n = 200;
+        let p = 0.05;
+        let g = erdos_renyi_digraph(n, p, 42);
+        let expected = (n * (n - 1)) as f64 * p;
+        let got = g.m() as f64;
+        assert!(
+            (got - expected).abs() < expected * 0.25,
+            "got {got}, expected ~{expected}"
+        );
+    }
+
+    #[test]
+    fn ba_graph_has_heavy_tail() {
+        let g = barabasi_albert_digraph(500, 3, 7);
+        // in-degree distribution: compute via link counts
+        let mut indeg = vec![0usize; g.n()];
+        for u in 0..g.n() {
+            for &v in g.out_neighbors(u) {
+                indeg[v] += 1;
+            }
+        }
+        let max_in = *indeg.iter().max().unwrap();
+        let mean_in = indeg.iter().sum::<usize>() as f64 / g.n() as f64;
+        assert!(
+            max_in as f64 > 6.0 * mean_in,
+            "max {max_in} vs mean {mean_in}"
+        );
+    }
+
+    #[test]
+    fn web_graph_has_dangling_nodes() {
+        let g = power_law_web_graph(1000, 8, 0.15, 3);
+        let dangling = g.dangling_nodes().len();
+        assert!(
+            dangling > 50 && dangling < 400,
+            "dangling={dangling} out of 1000"
+        );
+    }
+
+    #[test]
+    fn grid_degrees() {
+        let g = grid_digraph(5);
+        assert_eq!(g.n(), 25);
+        for u in 0..g.n() {
+            assert_eq!(g.out_degree(u), 4);
+        }
+    }
+
+    #[test]
+    fn block_matrix_contractive_and_blocky() {
+        let p = block_coupled_matrix(64, 4, 0.6, 0.0, 4, 5);
+        // zero coupling → all entries within diagonal blocks
+        for i in 0..64 {
+            let (idx, _) = p.row(i);
+            for &j in idx {
+                assert_eq!(i / 16, j / 16, "entry ({i},{j}) crosses blocks");
+            }
+        }
+        let rows = p.row_l1_norms();
+        assert!(rows.iter().all(|&r| r < 1.0));
+    }
+
+    #[test]
+    fn block_matrix_coupling_crosses() {
+        let p = block_coupled_matrix(64, 4, 0.4, 0.3, 4, 5);
+        let crossing = (0..64)
+            .flat_map(|i| {
+                let (idx, _) = p.row(i);
+                idx.iter().map(move |&j| (i, j))
+            })
+            .filter(|&(i, j)| i / 16 != j / 16)
+            .count();
+        assert!(crossing > 0);
+        let rows = p.row_l1_norms();
+        assert!(rows.iter().all(|&r| r < 1.0 + 1e-12));
+    }
+
+    #[test]
+    fn paper_author_bipartite_structure() {
+        let pa = paper_author_graph(100, 20, 3, 2, 11);
+        assert_eq!(pa.graph.n(), 120);
+        // authors only link to papers
+        for a in 100..120 {
+            for &t in pa.graph.out_neighbors(a) {
+                assert!(t < 100, "author {a} links to non-paper {t}");
+            }
+        }
+        // papers cite only older papers or authors
+        for p in 0..100 {
+            for &t in pa.graph.out_neighbors(p) {
+                assert!(t < p || t >= 100);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_matrices_match_text() {
+        let a1 = paper_matrix(1);
+        let a2 = paper_matrix(2);
+        let a3 = paper_matrix(3);
+        let a4 = paper_matrix(4);
+        assert_eq!(a1[(1, 3)], 0.0);
+        assert_eq!(a2[(1, 3)], 0.0);
+        assert_eq!(a3[(1, 3)], 1.0); // the single added entry of A(3)
+        assert_eq!(a4[(1, 3)], 1.0); // A' of §5.2
+        assert_eq!(a2[(0, 2)], 1.0);
+        assert_eq!(a1[(0, 2)], 0.0);
+    }
+}

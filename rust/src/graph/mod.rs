@@ -1,0 +1,135 @@
+//! Graph substrate: synthetic workload generators + PageRank matrices.
+//!
+//! The paper's future-work targets are the web graph and the paper–author
+//! graph ([5]); neither dataset ships here, so per DESIGN.md §3 we generate
+//! synthetic equivalents that exercise the same code paths: power-law
+//! in/out degrees, dangling nodes, block structure with tunable coupling
+//! (the knob behind the Fig 1 → Fig 3 progression).
+
+pub mod generators;
+pub mod pagerank;
+
+pub use generators::{
+    barabasi_albert_digraph, block_coupled_matrix, erdos_renyi_digraph, grid_digraph,
+    paper_author_graph, paper_matrix, power_law_web_graph, PaperAuthorGraph,
+};
+pub use pagerank::{pagerank_reference, pagerank_system, verify_pagerank_matrix, PageRankSystem};
+
+use crate::sparse::TripletBuilder;
+
+/// A simple directed graph as an adjacency list (edges `u → v`).
+#[derive(Clone, Debug)]
+pub struct Digraph {
+    n: usize,
+    /// out-adjacency: `adj[u]` = sorted targets of u (duplicates removed)
+    adj: Vec<Vec<usize>>,
+    m: usize,
+}
+
+impl Digraph {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            adj: vec![Vec::new(); n],
+            m: 0,
+        }
+    }
+
+    /// Build from an edge list; self-loops and duplicates are dropped.
+    pub fn from_edges(n: usize, edges: impl IntoIterator<Item = (usize, usize)>) -> Self {
+        let mut g = Self::new(n);
+        for (u, v) in edges {
+            g.add_edge(u, v);
+        }
+        g.finish();
+        g
+    }
+
+    /// Add one edge (u → v). Call [`Digraph::finish`] before reading.
+    pub fn add_edge(&mut self, u: usize, v: usize) {
+        if u == v || u >= self.n || v >= self.n {
+            return;
+        }
+        self.adj[u].push(v);
+    }
+
+    /// Sort + dedup all adjacency lists and recount edges.
+    pub fn finish(&mut self) {
+        self.m = 0;
+        for list in &mut self.adj {
+            list.sort_unstable();
+            list.dedup();
+            self.m += list.len();
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of (deduplicated) edges.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn out_neighbors(&self, u: usize) -> &[usize] {
+        &self.adj[u]
+    }
+
+    pub fn out_degree(&self, u: usize) -> usize {
+        self.adj[u].len()
+    }
+
+    /// Nodes with no out-links (dangling pages in PageRank terms).
+    pub fn dangling_nodes(&self) -> Vec<usize> {
+        (0..self.n).filter(|&u| self.adj[u].is_empty()).collect()
+    }
+
+    /// Column-stochastic link matrix S: `s_{vu} = 1/outdeg(u)` for each edge
+    /// u → v; dangling columns are all-zero (mass re-injected by the
+    /// PageRank step itself).
+    pub fn link_matrix(&self) -> crate::sparse::CsrMatrix {
+        let mut b = TripletBuilder::with_capacity(self.n, self.n, self.m);
+        for u in 0..self.n {
+            let d = self.adj[u].len();
+            if d == 0 {
+                continue;
+            }
+            let w = 1.0 / d as f64;
+            for &v in &self.adj[u] {
+                b.push(v, u, w);
+            }
+        }
+        b.to_csr()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_edges_dedups_and_drops_self_loops() {
+        let g = Digraph::from_edges(4, [(0, 1), (0, 1), (1, 1), (2, 3), (3, 0)]);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.out_neighbors(0), &[1]);
+        assert_eq!(g.out_degree(1), 0);
+        assert_eq!(g.dangling_nodes(), vec![1]);
+    }
+
+    #[test]
+    fn link_matrix_is_column_stochastic() {
+        let g = Digraph::from_edges(4, [(0, 1), (0, 2), (1, 3), (2, 3), (3, 0)]);
+        let s = g.link_matrix();
+        let col_sums = s.col_l1_norms();
+        for (u, cs) in col_sums.iter().enumerate() {
+            if g.out_degree(u) > 0 {
+                assert!((cs - 1.0).abs() < 1e-15, "col {u} sums to {cs}");
+            } else {
+                assert_eq!(*cs, 0.0);
+            }
+        }
+        // edge 0→1 with outdeg 2: s[1,0] = 0.5
+        assert_eq!(s.get(1, 0), 0.5);
+    }
+}

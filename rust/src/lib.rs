@@ -1,0 +1,65 @@
+//! # diter — D-iteration based asynchronous distributed computation
+//!
+//! A production-grade reproduction of *"D-iteration based asynchronous
+//! distributed computation"* (Dohy Hong, Alcatel-Lucent Bell Labs, 2012).
+//!
+//! The D-iteration solves the fixed point `X = P·X + B` (spectral radius
+//! `ρ(P) < 1`) through a *fluid diffusion* process tracked by two vectors:
+//! the fluid `F_n` and the history `H_n`, tied by the invariant
+//! `H_n + F_n = F_0 + P·H_n` (paper eq. 4). The paper contributes two
+//! **asynchronous distributed** schemes over a partition `Ω_1..Ω_K` of the
+//! coordinates, one worker (`PID_k`) per part:
+//!
+//! * **V1** ([`coordinator::v1`]) — each PID keeps the full history vector,
+//!   sweeps its own coordinates (eq. 6), and broadcasts its slice when its
+//!   local remaining fluid `r_k` drops below a threshold `T_k` (then
+//!   `T_k ← T_k/α`), or when it receives a peer update.
+//! * **V2** ([`coordinator::v2`]) — each PID keeps only its local slice of
+//!   `(B, H, F)` and *ships fluid* `f·p_{ji}` to the owner of `j`,
+//!   coalescing small parcels and retaining every parcel until it is
+//!   acknowledged (no fluid may be lost — "as TCP").
+//!
+//! Layering (see `DESIGN.md`): this crate is **Layer 3** — the coordinator,
+//! the substrates it needs (sparse matrices, graph generators, baseline
+//! solvers, transport, partitioning, metrics, config, CLI), and the PJRT
+//! [`runtime`] that loads the **Layer 1/2** JAX + Pallas programs AOT-lowered
+//! to HLO text by `python/compile/aot.py`. Python never runs on the request
+//! path.
+//!
+//! ## Quick start
+//!
+//! ```
+//! use diter::linalg::DenseMat;
+//! use diter::solver::{FixedPointProblem, DIteration, Solver, SolveOptions};
+//!
+//! // The paper's A(1) example: solve A.X = 1 via X = P.X + B.
+//! let a = DenseMat::from_rows(&[
+//!     &[5.0, 3.0, 0.0, 0.0],
+//!     &[3.0, 7.0, 0.0, 0.0],
+//!     &[0.0, 0.0, 8.0, 4.0],
+//!     &[0.0, 0.0, 2.0, 3.0],
+//! ]);
+//! let problem = FixedPointProblem::from_linear_system(&a, &[1.0; 4]).unwrap();
+//! let sol = DIteration::cyclic().solve(&problem, &SolveOptions::default()).unwrap();
+//! let x = problem.verify_solution(&sol.x, 1e-10).unwrap();
+//! assert!(x.residual < 1e-10);
+//! ```
+
+pub mod bench_harness;
+pub mod cli;
+pub mod configfile;
+pub mod coordinator;
+pub mod error;
+pub mod figures;
+pub mod graph;
+pub mod linalg;
+pub mod metrics;
+pub mod partition;
+pub mod prng;
+pub mod prop;
+pub mod runtime;
+pub mod solver;
+pub mod sparse;
+pub mod transport;
+
+pub use error::{DiterError, Result};

@@ -1,0 +1,248 @@
+//! Dense linear algebra substrate.
+//!
+//! Small and boring on purpose: row-major dense matrices, the vector helpers
+//! the solvers need, and an LU direct solver used to compute the *exact*
+//! solution X for the error-vs-iteration plots (every figure of the paper
+//! charts distance to the limit, so a ground truth is required).
+
+mod solve;
+pub mod vec_ops;
+
+pub use solve::{lu_decompose, lu_solve, solve_dense, LuFactors};
+
+use crate::error::{DiterError, Result};
+
+/// Row-major dense matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from row slices (panics if ragged).
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self {
+            rows: r,
+            cols: c,
+            data,
+        }
+    }
+
+    /// Build from a flat row-major vec.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(DiterError::shape(
+                "DenseMat::from_vec",
+                rows * cols,
+                data.len(),
+            ));
+        }
+        Ok(Self { rows, cols, data })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Flat row-major data.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// `y = self · x`.
+    pub fn matvec(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.cols {
+            return Err(DiterError::shape("matvec", self.cols, x.len()));
+        }
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            y[i] = vec_ops::dot(self.row(i), x);
+        }
+        Ok(y)
+    }
+
+    /// Matrix product `self · other`.
+    pub fn matmul(&self, other: &DenseMat) -> Result<DenseMat> {
+        if self.cols != other.rows {
+            return Err(DiterError::shape("matmul", self.cols, other.rows));
+        }
+        let mut out = DenseMat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> DenseMat {
+        let mut t = DenseMat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Elementwise difference `self - other`.
+    pub fn sub(&self, other: &DenseMat) -> Result<DenseMat> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(DiterError::shape(
+                "DenseMat::sub",
+                format!("{}x{}", self.rows, self.cols),
+                format!("{}x{}", other.rows, other.cols),
+            ));
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Ok(DenseMat {
+            rows: self.rows,
+            cols: self.cols,
+            data,
+        })
+    }
+
+    /// Max row sum of |entries| — the induced L∞ norm, a cheap upper bound
+    /// on the spectral radius.
+    pub fn inf_norm(&self) -> f64 {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|v| v.abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
+    /// Max column sum of |entries| — induced L1 norm, also bounds ρ(P).
+    pub fn one_norm(&self) -> f64 {
+        let mut sums = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for (j, v) in self.row(i).iter().enumerate() {
+                sums[j] += v.abs();
+            }
+        }
+        sums.into_iter().fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for DenseMat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for DenseMat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_matvec() {
+        let i = DenseMat::identity(3);
+        let x = vec![1.0, 2.0, 3.0];
+        assert_eq!(i.matvec(&x).unwrap(), x);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let m = DenseMat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(m.matvec(&[1.0, 1.0]).unwrap(), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn matvec_shape_error() {
+        let m = DenseMat::zeros(2, 3);
+        assert!(m.matvec(&[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = DenseMat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = DenseMat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c, DenseMat::from_rows(&[&[2.0, 1.0], &[4.0, 3.0]]));
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = DenseMat::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn norms() {
+        let a = DenseMat::from_rows(&[&[1.0, -2.0], &[0.5, 0.25]]);
+        assert_eq!(a.inf_norm(), 3.0);
+        assert_eq!(a.one_norm(), 2.25);
+    }
+
+    #[test]
+    fn from_vec_shape_check() {
+        assert!(DenseMat::from_vec(2, 2, vec![1.0; 3]).is_err());
+        assert!(DenseMat::from_vec(2, 2, vec![1.0; 4]).is_ok());
+    }
+}

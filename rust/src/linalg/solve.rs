@@ -1,0 +1,178 @@
+//! LU direct solver (partial pivoting) — the ground-truth oracle.
+//!
+//! Every figure of the paper plots error against the exact limit X, so the
+//! bench harness needs X to machine precision. For the N≤ a few thousand
+//! dense systems in the experiments, plain LU is exactly right.
+
+use super::DenseMat;
+use crate::error::{DiterError, Result};
+
+/// LU factorization with row pivoting: `P·A = L·U` stored compactly.
+#[derive(Clone, Debug)]
+pub struct LuFactors {
+    /// Combined L (unit lower, below diag) and U (upper incl. diag).
+    lu: DenseMat,
+    /// Row permutation: `perm[i]` is the original row now at position i.
+    perm: Vec<usize>,
+}
+
+/// Factor a square matrix. Fails on (near-)singularity.
+pub fn lu_decompose(a: &DenseMat) -> Result<LuFactors> {
+    if !a.is_square() {
+        return Err(DiterError::shape(
+            "lu_decompose",
+            "square",
+            format!("{}x{}", a.rows(), a.cols()),
+        ));
+    }
+    let n = a.rows();
+    let mut lu = a.clone();
+    let mut perm: Vec<usize> = (0..n).collect();
+
+    for k in 0..n {
+        // partial pivot: largest |entry| in column k at/below row k
+        let mut p = k;
+        let mut best = lu[(k, k)].abs();
+        for i in k + 1..n {
+            let v = lu[(i, k)].abs();
+            if v > best {
+                best = v;
+                p = i;
+            }
+        }
+        if best < 1e-300 {
+            return Err(DiterError::Singular { col: k, pivot: best });
+        }
+        if p != k {
+            perm.swap(p, k);
+            for j in 0..n {
+                let tmp = lu[(k, j)];
+                lu[(k, j)] = lu[(p, j)];
+                lu[(p, j)] = tmp;
+            }
+        }
+        let pivot = lu[(k, k)];
+        for i in k + 1..n {
+            let m = lu[(i, k)] / pivot;
+            lu[(i, k)] = m;
+            if m != 0.0 {
+                for j in k + 1..n {
+                    let ukj = lu[(k, j)];
+                    lu[(i, j)] -= m * ukj;
+                }
+            }
+        }
+    }
+    Ok(LuFactors { lu, perm })
+}
+
+/// Solve `A·x = b` given factors of A.
+pub fn lu_solve(f: &LuFactors, b: &[f64]) -> Result<Vec<f64>> {
+    let n = f.lu.rows();
+    if b.len() != n {
+        return Err(DiterError::shape("lu_solve", n, b.len()));
+    }
+    // apply permutation, forward-substitute L (unit diagonal)
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[f.perm[i]];
+        for j in 0..i {
+            s -= f.lu[(i, j)] * y[j];
+        }
+        y[i] = s;
+    }
+    // back-substitute U
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for j in i + 1..n {
+            s -= f.lu[(i, j)] * x[j];
+        }
+        x[i] = s / f.lu[(i, i)];
+    }
+    Ok(x)
+}
+
+/// One-shot dense solve `A·x = b`.
+pub fn solve_dense(a: &DenseMat, b: &[f64]) -> Result<Vec<f64>> {
+    lu_solve(&lu_decompose(a)?, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vec_ops::dist_inf;
+    use crate::prng::Xoshiro256pp;
+
+    #[test]
+    fn solve_identity() {
+        let a = DenseMat::identity(4);
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(solve_dense(&a, &b).unwrap(), b);
+    }
+
+    #[test]
+    fn solve_paper_a1() {
+        // A(1) from paper §5.1
+        let a = DenseMat::from_rows(&[
+            &[5.0, 3.0, 0.0, 0.0],
+            &[3.0, 7.0, 0.0, 0.0],
+            &[0.0, 0.0, 8.0, 4.0],
+            &[0.0, 0.0, 2.0, 3.0],
+        ]);
+        let x = solve_dense(&a, &[1.0; 4]).unwrap();
+        // block 1: [5 3;3 7] x = [1;1] => x = [4,2]/26 = [2/13, 1/13]
+        assert!((x[0] - 2.0 / 13.0).abs() < 1e-14);
+        assert!((x[1] - 1.0 / 13.0).abs() < 1e-14);
+        // block 2: [8 4;2 3] x = [1;1] => det=16, x=[-1/16? ...]
+        // [3-4, 8-2]/16 = [-1/16, 6/16]
+        assert!((x[2] - (-1.0 / 16.0)).abs() < 1e-14);
+        assert!((x[3] - 6.0 / 16.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn solve_requires_pivoting() {
+        // zero leading pivot forces a row swap
+        let a = DenseMat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let x = solve_dense(&a, &[2.0, 3.0]).unwrap();
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = DenseMat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(matches!(
+            solve_dense(&a, &[1.0, 2.0]),
+            Err(DiterError::Singular { .. })
+        ));
+    }
+
+    #[test]
+    fn random_roundtrip() {
+        let mut rng = Xoshiro256pp::seed_from_u64(123);
+        for n in [1usize, 2, 5, 20, 50] {
+            let mut a = DenseMat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    a[(i, j)] = rng.uniform(-1.0, 1.0);
+                }
+                a[(i, i)] += n as f64; // well-conditioned
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let b = a.matvec(&x_true).unwrap();
+            let x = solve_dense(&a, &b).unwrap();
+            assert!(dist_inf(&x, &x_true) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn reuse_factors_for_many_rhs() {
+        let a = DenseMat::from_rows(&[&[4.0, 1.0], &[1.0, 3.0]]);
+        let f = lu_decompose(&a).unwrap();
+        for b in [[1.0, 0.0], [0.0, 1.0], [2.0, 5.0]] {
+            let x = lu_solve(&f, &b).unwrap();
+            let back = a.matvec(&x).unwrap();
+            assert!(dist_inf(&back, &b) < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Vector helpers used across solvers and the coordinator hot path.
+//!
+//! These are the innermost loops of the whole system (a PID's sweep is a
+//! sequence of sparse/dense dots + axpys), so they are written to
+//! auto-vectorize: plain indexed loops over equal-length slices.
+
+/// Dot product (panics on length mismatch in debug; hot path is unchecked).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    // 4-way unrolled accumulators help the autovectorizer and reduce the
+    // sequential FP dependency chain.
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    for i in chunks * 4..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc + ((s0 + s1) + (s2 + s3))
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// L1 norm.
+#[inline]
+pub fn norm1(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// L2 norm.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+/// L∞ norm.
+#[inline]
+pub fn norm_inf(x: &[f64]) -> f64 {
+    x.iter().fold(0.0, |m, v| m.max(v.abs()))
+}
+
+/// L1 distance between two vectors.
+#[inline]
+pub fn dist1(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+/// L∞ distance.
+#[inline]
+pub fn dist_inf(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).fold(0.0, |m, (x, y)| m.max((x - y).abs()))
+}
+
+/// Elementwise `a - b`.
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Scale in place.
+#[inline]
+pub fn scale(x: &mut [f64], alpha: f64) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Sum of entries (signed).
+#[inline]
+pub fn sum(x: &[f64]) -> f64 {
+    x.iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        // exercise the unrolled path with lengths around the 4-chunk edge
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 13] {
+            let a: Vec<f64> = (0..n).map(|i| i as f64 + 0.5).collect();
+            let b: Vec<f64> = (0..n).map(|i| 2.0 - i as f64).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-12, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0, 2.0];
+        let mut y = [10.0, 20.0];
+        axpy(0.5, &x, &mut y);
+        assert_eq!(y, [10.5, 21.0]);
+    }
+
+    #[test]
+    fn norms_known() {
+        let x = [3.0, -4.0];
+        assert_eq!(norm1(&x), 7.0);
+        assert_eq!(norm2(&x), 5.0);
+        assert_eq!(norm_inf(&x), 4.0);
+    }
+
+    #[test]
+    fn distances() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [2.0, 0.0, 3.0];
+        assert_eq!(dist1(&a, &b), 3.0);
+        assert_eq!(dist_inf(&a, &b), 2.0);
+        assert_eq!(sub(&a, &b), vec![-1.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn scale_and_sum() {
+        let mut x = [1.0, -2.0, 3.0];
+        scale(&mut x, 2.0);
+        assert_eq!(x, [2.0, -4.0, 6.0]);
+        assert_eq!(sum(&x), 4.0);
+    }
+}

@@ -1,0 +1,308 @@
+//! `diter` — launcher CLI for the D-iteration distributed computation stack.
+//!
+//! Subcommands:
+//!   solve      solve a synthetic system with any scheme/solver
+//!   pagerank   distributed PageRank on a synthetic web-like graph
+//!   figure     regenerate a paper figure (1..4) as a text table
+//!   artifacts  inspect the AOT artifact manifest / smoke-test PJRT
+//!   help       this text
+//!
+//! Run configuration can also come from a TOML-subset file via `--config`
+//! (see `configfile`); CLI flags override file values.
+
+use std::process::ExitCode;
+
+use diter::bench_harness::Table;
+use diter::cli::{parse_args, usage, Args, OptSpec};
+use diter::configfile::Config;
+use diter::coordinator::{v1, v2, DistributedConfig};
+use diter::graph::{
+    block_coupled_matrix, pagerank_system, paper_matrix, power_law_web_graph,
+};
+use diter::linalg::vec_ops::dist1;
+use diter::partition::Partition;
+use diter::runtime::Runtime;
+use diter::solver::{
+    ConvergenceBound, DIteration, FixedPointProblem, GaussSeidel, Jacobi, SequenceKind,
+    SolveOptions, Solver,
+};
+use diter::sparse::SparseMatrix;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    let result = match cmd {
+        "solve" => cmd_solve(rest),
+        "pagerank" => cmd_pagerank(rest),
+        "figure" => cmd_figure(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand `{other}`\n");
+            print_help();
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "diter — D-iteration based asynchronous distributed computation\n\n\
+         subcommands:\n\
+         \x20 solve      solve a synthetic block-coupled system\n\
+         \x20 pagerank   distributed PageRank on a synthetic web graph\n\
+         \x20 figure     regenerate a paper figure (--id 1..4)\n\
+         \x20 artifacts  inspect AOT artifacts / smoke-test the PJRT runtime\n\
+         \x20 help       this text\n\n\
+         `diter <cmd> --help` prints the options of each subcommand."
+    );
+}
+
+fn solve_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "help", help: "show usage", is_flag: true, default: None },
+        OptSpec { name: "config", help: "TOML-subset config file", is_flag: false, default: None },
+        OptSpec { name: "nodes", help: "system size N", is_flag: false, default: Some("256") },
+        OptSpec { name: "pids", help: "number of PIDs K", is_flag: false, default: Some("4") },
+        OptSpec { name: "coupling", help: "inter-block coupling (0..0.5)", is_flag: false, default: Some("0.1") },
+        OptSpec { name: "scheme", help: "v1 | v2 | seq | jacobi | gs", is_flag: false, default: Some("v2") },
+        OptSpec { name: "sequence", help: "cyclic | random | greedy", is_flag: false, default: Some("cyclic") },
+        OptSpec { name: "tol", help: "target residual", is_flag: false, default: Some("1e-10") },
+        OptSpec { name: "seed", help: "RNG seed", is_flag: false, default: Some("42") },
+        OptSpec { name: "alpha", help: "threshold divisor α", is_flag: false, default: Some("2.0") },
+    ]
+}
+
+fn merge_cfg(args: &Args) -> anyhow::Result<Option<Config>> {
+    Ok(match args.get("config") {
+        Some(path) => Some(Config::load(path)?),
+        None => None,
+    })
+}
+
+fn cmd_solve(argv: &[String]) -> anyhow::Result<()> {
+    let spec = solve_spec();
+    let args = parse_args(argv, &spec)?;
+    if args.has_flag("help") {
+        print!("{}", usage("diter solve", "solve a synthetic system", &spec));
+        return Ok(());
+    }
+    let file = merge_cfg(&args)?;
+    let get_f = |key: &str, d: f64| -> anyhow::Result<f64> {
+        match file.as_ref() {
+            Some(c) if args.get(key).is_none() => Ok(c.get_float("solve", key, d)),
+            _ => Ok(args.get_f64(key, d)?),
+        }
+    };
+    let n = args.get_usize("nodes", 256)?;
+    let k = args.get_usize("pids", 4)?;
+    let coupling = get_f("coupling", 0.1)?;
+    let tol = get_f("tol", 1e-10)?;
+    let alpha = get_f("alpha", 2.0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let scheme = args.get_str("scheme", "v2");
+    let sequence = SequenceKind::parse(&args.get_str("sequence", "cyclic"))
+        .ok_or_else(|| anyhow::anyhow!("bad --sequence"))?;
+
+    let p = block_coupled_matrix(n, k, 0.5, coupling, 6, seed);
+    let problem = FixedPointProblem::new(SparseMatrix::from_csr(p), vec![1.0; n])?;
+    println!(
+        "system: N={n}, K={k}, coupling={coupling}, nnz={}, scheme={scheme}",
+        problem.matrix().nnz()
+    );
+
+    match scheme.as_str() {
+        "v1" | "v2" => {
+            let mut cfg = DistributedConfig::new(Partition::contiguous(n, k)?)
+                .with_tol(tol)
+                .with_seed(seed)
+                .with_sequence(sequence);
+            cfg.threshold_alpha = alpha;
+            let sol = if scheme == "v1" {
+                v1::solve_v1(&problem, &cfg)?
+            } else {
+                v2::solve_v2(&problem, &cfg)?
+            };
+            println!(
+                "converged={} residual={:.3e} parallel-cost={:.1} updates={} wall={:.3}s ({:.2e} upd/s)",
+                sol.converged,
+                sol.residual,
+                sol.cost,
+                sol.total_updates,
+                sol.wall_secs,
+                sol.updates_per_sec()
+            );
+            println!("transport: {:?}", sol.metrics);
+        }
+        "seq" | "jacobi" | "gs" => {
+            let solver: Box<dyn Solver> = match scheme.as_str() {
+                "seq" => Box::new(DIteration {
+                    sequence,
+                    variant: diter::solver::DIterationVariant::HForm,
+                    seed,
+                }),
+                "jacobi" => Box::new(Jacobi::new()),
+                _ => Box::new(GaussSeidel::new()),
+            };
+            let opts = SolveOptions {
+                tol,
+                ..Default::default()
+            };
+            let sol = solver.solve(&problem, &opts)?;
+            println!(
+                "{}: converged={} residual={:.3e} cost={:.1}",
+                solver.name(),
+                sol.converged,
+                sol.residual,
+                sol.cost
+            );
+        }
+        other => anyhow::bail!("unknown scheme `{other}`"),
+    }
+    Ok(())
+}
+
+fn pagerank_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "help", help: "show usage", is_flag: true, default: None },
+        OptSpec { name: "nodes", help: "pages in the web graph", is_flag: false, default: Some("10000") },
+        OptSpec { name: "pids", help: "number of PIDs", is_flag: false, default: Some("4") },
+        OptSpec { name: "damping", help: "PageRank damping d", is_flag: false, default: Some("0.85") },
+        OptSpec { name: "out-deg", help: "average out-degree", is_flag: false, default: Some("8") },
+        OptSpec { name: "tol", help: "total-fluid target", is_flag: false, default: Some("1e-9") },
+        OptSpec { name: "seed", help: "RNG seed", is_flag: false, default: Some("7") },
+        OptSpec { name: "top", help: "print the top-k pages", is_flag: false, default: Some("10") },
+    ]
+}
+
+fn cmd_pagerank(argv: &[String]) -> anyhow::Result<()> {
+    let spec = pagerank_spec();
+    let args = parse_args(argv, &spec)?;
+    if args.has_flag("help") {
+        print!("{}", usage("diter pagerank", "distributed PageRank", &spec));
+        return Ok(());
+    }
+    let n = args.get_usize("nodes", 10_000)?;
+    let k = args.get_usize("pids", 4)?;
+    let d = args.get_f64("damping", 0.85)?;
+    let out_deg = args.get_usize("out-deg", 8)?;
+    let tol = args.get_f64("tol", 1e-9)?;
+    let seed = args.get_u64("seed", 7)?;
+    let topk = args.get_usize("top", 10)?;
+
+    println!("generating web-like graph: N={n}, avg out-degree={out_deg} ...");
+    let g = power_law_web_graph(n, out_deg, 0.1, seed);
+    println!("graph: {} edges, {} dangling", g.m(), g.dangling_nodes().len());
+    let sys = pagerank_system(&g, d, true)?;
+    let problem = FixedPointProblem::new(sys.matrix.clone(), sys.b.clone())?;
+    let bound = ConvergenceBound::for_matrix(&sys.matrix, Some(d));
+
+    let cfg = DistributedConfig::new(Partition::contiguous(n, k)?)
+        .with_tol(tol)
+        .with_seed(seed)
+        .with_sequence(SequenceKind::GreedyMaxFluid);
+    let sol = v2::solve_v2(&problem, &cfg)?;
+    println!(
+        "V2 x {k} PIDs: converged={} residual={:.3e} (≤ {:.3e} from limit per §4.4) wall={:.3}s  {:.2e} upd/s",
+        sol.converged,
+        sol.residual,
+        bound.distance(sol.residual),
+        sol.wall_secs,
+        sol.updates_per_sec()
+    );
+    println!("transport: {:?}", sol.metrics);
+    let mut ranked: Vec<(usize, f64)> = sol.x.iter().copied().enumerate().collect();
+    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("top {topk} pages:");
+    for (rank, (page, score)) in ranked.iter().take(topk).enumerate() {
+        println!("  #{:<3} page {:<8} score {:.6e}", rank + 1, page, score);
+    }
+    Ok(())
+}
+
+fn figure_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "help", help: "show usage", is_flag: true, default: None },
+        OptSpec { name: "id", help: "paper figure id (1..4)", is_flag: false, default: Some("1") },
+        OptSpec { name: "max-cost", help: "iterations to chart", is_flag: false, default: Some("20") },
+    ]
+}
+
+fn cmd_figure(argv: &[String]) -> anyhow::Result<()> {
+    let spec = figure_spec();
+    let args = parse_args(argv, &spec)?;
+    if args.has_flag("help") {
+        print!("{}", usage("diter figure", "regenerate a paper figure", &spec));
+        return Ok(());
+    }
+    let id = args.get_usize("id", 1)?;
+    let max_cost = args.get_usize("max-cost", 20)?;
+    let table = diter::figures::render_figure(id as u8, max_cost)?;
+    print!("{table}");
+    Ok(())
+}
+
+fn artifacts_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "help", help: "show usage", is_flag: true, default: None },
+        OptSpec { name: "smoke", help: "execute the 2x4 d_sweep artifact", is_flag: true, default: None },
+    ]
+}
+
+fn cmd_artifacts(argv: &[String]) -> anyhow::Result<()> {
+    let spec = artifacts_spec();
+    let args = parse_args(argv, &spec)?;
+    if args.has_flag("help") {
+        print!("{}", usage("diter artifacts", "inspect AOT artifacts", &spec));
+        return Ok(());
+    }
+    if !Runtime::artifacts_available() {
+        anyhow::bail!(
+            "no artifacts at {:?} — run `make artifacts` first",
+            Runtime::default_dir()
+        );
+    }
+    let mut rt = Runtime::load_default()?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut table = Table::new(&["kind", "dims", "file"]);
+    for e in &rt.manifest().entries.clone() {
+        table.row(&[
+            e.kind.clone(),
+            format!("{:?}", e.dims),
+            e.file.file_name().unwrap().to_string_lossy().to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    if args.has_flag("smoke") {
+        // the paper's A(1), block {0,1}: one sweep via PJRT vs rust
+        let problem = FixedPointProblem::from_linear_system(&paper_matrix(1), &[1.0; 4])?;
+        let owned = [0usize, 1];
+        let p_rows = problem.matrix().csr().dense_row_block(&owned);
+        let idx = [0i32, 1];
+        let h = problem.b().to_vec();
+        let b: Vec<f64> = owned.iter().map(|&i| problem.b()[i]).collect();
+        let got = rt.d_sweep(2, 4, &p_rows, &idx, &h, &b)?;
+        // rust reference
+        let csr = problem.matrix().csr();
+        let mut want = h.clone();
+        for &i in &owned {
+            want[i] = csr.row_dot(i, &want) + problem.b()[i];
+        }
+        let delta = dist1(&got, &want);
+        println!("smoke d_sweep_2x4: PJRT vs rust Δ₁ = {delta:.3e}");
+        anyhow::ensure!(delta < 1e-12, "PJRT/rust mismatch");
+        println!("smoke OK");
+    }
+    Ok(())
+}

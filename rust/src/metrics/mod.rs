@@ -1,0 +1,245 @@
+//! Metrics substrate: counters, stopwatches, convergence traces, CSV dump.
+//!
+//! Every experiment in EXPERIMENTS.md is regenerated from a
+//! [`ConvergenceTrace`] (error-vs-cost series, one per solver/scheme) and a
+//! [`MetricSet`] (scalar counters: messages, bytes, shares, acks, ...).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// A single error-vs-cost series. `cost` is the experiment's x-axis —
+/// for the paper's figures it is "equivalent scalar updates / N" (so
+/// sequential iteration k costs k, and a K-PID parallel round costs the
+/// max of the PIDs' local updates).
+#[derive(Clone, Debug, Default)]
+pub struct ConvergenceTrace {
+    pub name: String,
+    pub points: Vec<TracePoint>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TracePoint {
+    /// x-axis: equivalent full iterations (see above)
+    pub cost: f64,
+    /// y-axis: L1 distance to the exact limit
+    pub error: f64,
+}
+
+impl ConvergenceTrace {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, cost: f64, error: f64) {
+        self.points.push(TracePoint { cost, error });
+    }
+
+    /// First cost at which the error drops (and stays) below `tol`;
+    /// `None` if never reached.
+    pub fn cost_to_reach(&self, tol: f64) -> Option<f64> {
+        let mut reached: Option<f64> = None;
+        for p in &self.points {
+            if p.error <= tol {
+                if reached.is_none() {
+                    reached = Some(p.cost);
+                }
+            } else {
+                reached = None;
+            }
+        }
+        reached
+    }
+
+    /// Final recorded error.
+    pub fn final_error(&self) -> Option<f64> {
+        self.points.last().map(|p| p.error)
+    }
+}
+
+/// Render several traces as an aligned text table (the bench harness's
+/// figure output): one row per cost step, one column per trace.
+pub fn render_traces_table(traces: &[ConvergenceTrace]) -> String {
+    let mut out = String::new();
+    let mut costs: Vec<f64> = traces
+        .iter()
+        .flat_map(|t| t.points.iter().map(|p| p.cost))
+        .collect();
+    costs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    costs.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+
+    let _ = write!(out, "{:>10}", "cost");
+    for t in traces {
+        let _ = write!(out, " {:>14}", truncate(&t.name, 14));
+    }
+    out.push('\n');
+    for &c in &costs {
+        let _ = write!(out, "{c:>10.2}");
+        for t in traces {
+            match lookup(t, c) {
+                Some(e) => {
+                    let _ = write!(out, " {e:>14.6e}");
+                }
+                None => {
+                    let _ = write!(out, " {:>14}", "-");
+                }
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV dump of traces (long format: name,cost,error).
+pub fn traces_to_csv(traces: &[ConvergenceTrace]) -> String {
+    let mut out = String::from("series,cost,error\n");
+    for t in traces {
+        for p in &t.points {
+            let _ = writeln!(out, "{},{},{}", t.name, p.cost, p.error);
+        }
+    }
+    out
+}
+
+fn lookup(t: &ConvergenceTrace, cost: f64) -> Option<f64> {
+    t.points
+        .iter()
+        .find(|p| (p.cost - cost).abs() < 1e-12)
+        .map(|p| p.error)
+}
+
+fn truncate(s: &str, n: usize) -> &str {
+    if s.len() <= n {
+        s
+    } else {
+        &s[..n]
+    }
+}
+
+/// Thread-safe named counters (shared by transport + coordinator).
+#[derive(Debug, Default)]
+pub struct MetricSet {
+    counters: BTreeMap<&'static str, AtomicU64>,
+}
+
+impl MetricSet {
+    pub fn new(names: &[&'static str]) -> Self {
+        let mut counters = BTreeMap::new();
+        for &n in names {
+            counters.insert(n, AtomicU64::new(0));
+        }
+        Self { counters }
+    }
+
+    /// Add to a counter (no-op if the name was not registered).
+    pub fn add(&self, name: &'static str, v: u64) {
+        if let Some(c) = self.counters.get(name) {
+            c.fetch_add(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn incr(&self, name: &'static str) {
+        self.add(name, 1);
+    }
+
+    pub fn get(&self, name: &'static str) -> u64 {
+        self.counters
+            .get(name)
+            .map_or(0, |c| c.load(Ordering::Relaxed))
+    }
+
+    /// Peak-tracking max update.
+    pub fn max(&self, name: &'static str, v: u64) {
+        if let Some(c) = self.counters.get(name) {
+            c.fetch_max(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<&'static str, u64> {
+        self.counters
+            .iter()
+            .map(|(k, v)| (*k, v.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.snapshot() {
+            let _ = writeln!(out, "{k:<28} {v}");
+        }
+        out
+    }
+}
+
+/// A simple stopwatch for coarse phase timing.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_cost_to_reach_requires_staying_below() {
+        let mut t = ConvergenceTrace::new("x");
+        t.push(1.0, 1e-2);
+        t.push(2.0, 1e-4); // dips...
+        t.push(3.0, 1e-2); // ...but comes back up
+        t.push(4.0, 1e-5);
+        t.push(5.0, 1e-6);
+        assert_eq!(t.cost_to_reach(1e-3), Some(4.0));
+        assert_eq!(t.cost_to_reach(1e-9), None);
+        assert_eq!(t.final_error(), Some(1e-6));
+    }
+
+    #[test]
+    fn table_renders_all_series() {
+        let mut a = ConvergenceTrace::new("jacobi");
+        a.push(1.0, 0.5);
+        a.push(2.0, 0.25);
+        let mut b = ConvergenceTrace::new("diter");
+        b.push(1.0, 0.1);
+        let table = render_traces_table(&[a.clone(), b.clone()]);
+        assert!(table.contains("jacobi"));
+        assert!(table.contains("diter"));
+        assert_eq!(table.lines().count(), 3); // header + 2 cost rows
+        let csv = traces_to_csv(&[a, b]);
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("series,cost,error"));
+    }
+
+    #[test]
+    fn metric_set_counts() {
+        let m = MetricSet::new(&["msgs", "bytes"]);
+        m.incr("msgs");
+        m.add("bytes", 100);
+        m.add("bytes", 20);
+        m.max("msgs", 5);
+        assert_eq!(m.get("msgs"), 5);
+        assert_eq!(m.get("bytes"), 120);
+        assert_eq!(m.get("unknown"), 0);
+        assert!(m.render().contains("bytes"));
+    }
+}

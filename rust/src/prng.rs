@@ -1,0 +1,270 @@
+//! Deterministic PRNG substrate (no `rand` crate available offline).
+//!
+//! Everything that needs randomness in this crate — graph generators,
+//! random diffusion sequences, property tests, latency injection — goes
+//! through [`Xoshiro256pp`] seeded via [`SplitMix64`], so every experiment
+//! is exactly reproducible from a single `u64` seed.
+
+/// SplitMix64: used to expand a single seed into a full generator state.
+/// Reference: Steele, Lea & Flood, "Fast splittable pseudorandom number
+/// generators" (the standard seeding recipe for xoshiro).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — fast, high-quality, 256-bit state general-purpose PRNG.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed from a single `u64` (expanded through SplitMix64).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for v in s.iter_mut() {
+            *v = sm.next_u64();
+        }
+        // all-zero state is invalid; SplitMix64 cannot produce 4 zeros from
+        // any seed, but belt-and-braces:
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E3779B97F4A7C15;
+        }
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in `[0, 1)` (53-bit mantissa method).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform usize in `[0, n)` via Lemire's multiply-shift (unbiased
+    /// enough for simulation purposes; n is tiny vs 2^64).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut v);
+        v
+    }
+
+    /// Sample `k` distinct indices from `0..n` (partial Fisher–Yates).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} distinct from {n}");
+        let mut v: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = self.range(i, n);
+            v.swap(i, j);
+        }
+        v.truncate(k);
+        v
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Geometric-ish integer from a Zipf(s) distribution over `1..=n`,
+    /// by inverse-CDF on a precomputed table-free approximation
+    /// (rejection sampling, Devroye). Good enough for degree sequences.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // rejection method for Zipf (Devroye, Non-Uniform Random Variate
+        // Generation, p. 550) — exact for s > 1, approximate via clamp else.
+        let s = s.max(1.001);
+        let b = 2f64.powf(s - 1.0);
+        loop {
+            let u = self.next_f64();
+            let v = self.next_f64();
+            let x = (u.powf(-1.0 / (s - 1.0))).floor();
+            if x < 1.0 {
+                continue;
+            }
+            let t = (1.0 + 1.0 / x).powf(s - 1.0);
+            if v * x * (t - 1.0) / (b - 1.0) <= t / b {
+                let k = x as usize;
+                if k <= n {
+                    return k;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Xoshiro256pp::seed_from_u64(42);
+        let mut b = Xoshiro256pp::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Xoshiro256pp::seed_from_u64(1);
+        let mut b = Xoshiro256pp::seed_from_u64(2);
+        let same = (0..16).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Xoshiro256pp::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close() {
+        let mut r = Xoshiro256pp::seed_from_u64(9);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Xoshiro256pp::seed_from_u64(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let k = r.below(10);
+            assert!(k < 10);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Xoshiro256pp::seed_from_u64(5);
+        let p = r.permutation(100);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct() {
+        let mut r = Xoshiro256pp::seed_from_u64(6);
+        let s = r.sample_distinct(50, 20);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256pp::seed_from_u64(8);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn zipf_in_range_and_skewed() {
+        let mut r = Xoshiro256pp::seed_from_u64(10);
+        let mut count1 = 0;
+        for _ in 0..2000 {
+            let k = r.zipf(100, 2.0);
+            assert!((1..=100).contains(&k));
+            if k == 1 {
+                count1 += 1;
+            }
+        }
+        // Zipf(2): P(1) = 1/zeta(2) ~ 0.61 — heavily skewed to 1.
+        assert!(count1 > 800, "count1={count1}");
+    }
+
+    #[test]
+    fn shuffle_preserves_elements() {
+        let mut r = Xoshiro256pp::seed_from_u64(11);
+        let mut v: Vec<u32> = (0..64).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..64).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,194 @@
+//! Property-testing substrate (no `proptest` offline).
+//!
+//! A deliberately small framework: seeded generators + a runner that
+//! reports the failing case number and its seed so any failure is exactly
+//! reproducible. Used by the module tests and `rust/tests/property_invariants.rs`.
+//!
+//! ```
+//! use diter::prop::{run_cases, Gen};
+//! run_cases(64, 0xD17E12, |g| {
+//!     let n = g.usize_in(1, 20);
+//!     let xs = g.vec_f64(n, -1.0, 1.0);
+//!     let sum: f64 = xs.iter().sum();
+//!     assert!(sum.abs() <= n as f64);
+//! });
+//! ```
+
+use crate::prng::Xoshiro256pp;
+
+/// Random-input generator handed to each property case.
+pub struct Gen {
+    rng: Xoshiro256pp,
+    /// the case's reproduction seed (printed on failure)
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(case_seed: u64) -> Self {
+        Gen {
+            rng: Xoshiro256pp::seed_from_u64(case_seed),
+            case_seed,
+        }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        self.rng.range(lo, hi + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.uniform(lo, hi)).collect()
+    }
+
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        self.rng.permutation(n)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// A random row-substochastic (L∞-contractive) square matrix with
+    /// `nnz_per_row` entries per row and row L1 norms ≤ `max_row_norm` —
+    /// the standing precondition of the D-iteration.
+    pub fn contraction_matrix(
+        &mut self,
+        n: usize,
+        nnz_per_row: usize,
+        max_row_norm: f64,
+    ) -> crate::sparse::CsrMatrix {
+        let mut b = crate::sparse::TripletBuilder::with_capacity(n, n, n * nnz_per_row);
+        for i in 0..n {
+            let k = nnz_per_row.min(n.saturating_sub(1)).max(1);
+            let cols = self.rng.sample_distinct(n, k);
+            let norm = self.rng.uniform(0.1, max_row_norm);
+            let mut weights: Vec<f64> = (0..k).map(|_| self.rng.uniform(0.05, 1.0)).collect();
+            let s: f64 = weights.iter().sum();
+            for w in weights.iter_mut() {
+                *w *= norm / s;
+            }
+            for (t, &j) in cols.iter().enumerate() {
+                if j == i {
+                    continue; // keep diagonal clear (paper's canonical form)
+                }
+                let sign = if self.rng.chance(0.5) { -1.0 } else { 1.0 };
+                b.push(i, j, sign * weights[t]);
+            }
+        }
+        b.to_csr()
+    }
+
+    /// Raw access to the underlying RNG for anything not covered above.
+    pub fn rng(&mut self) -> &mut Xoshiro256pp {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` property cases derived deterministically from `seed`.
+/// Panics with the case index + seed on the first failing case.
+pub fn run_cases(cases: usize, seed: u64, mut prop: impl FnMut(&mut Gen)) {
+    let mut meta = Xoshiro256pp::seed_from_u64(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(case_seed);
+            prop(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case}/{cases} (repro: Gen::new({case_seed:#x})): {msg}"
+            );
+        }
+    }
+}
+
+/// Run a single reproduction case (paste the seed from a failure report).
+pub fn repro_case(case_seed: u64, mut prop: impl FnMut(&mut Gen)) {
+    let mut g = Gen::new(case_seed);
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut seen_a = Vec::new();
+        run_cases(5, 42, |g| seen_a.push(g.usize_in(0, 1000)));
+        let mut seen_b = Vec::new();
+        run_cases(5, 42, |g| seen_b.push(g.usize_in(0, 1000)));
+        assert_eq!(seen_a, seen_b);
+    }
+
+    #[test]
+    fn failure_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            run_cases(10, 7, |g| {
+                let v = g.usize_in(0, 100);
+                assert!(v < 1000, "always true");
+                if g.case_seed % 2 == 0 || g.case_seed % 2 == 1 {
+                    // fail on the 3rd case only
+                }
+            });
+        });
+        assert!(result.is_ok());
+        let result = std::panic::catch_unwind(|| {
+            let mut count = 0;
+            run_cases(10, 7, move |_g| {
+                count += 1;
+                assert!(count < 4, "boom");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("repro"), "{msg}");
+    }
+
+    #[test]
+    fn contraction_matrix_is_contractive() {
+        run_cases(20, 99, |g| {
+            let n = g.usize_in(2, 30);
+            let m = g.contraction_matrix(n, 3, 0.9);
+            assert_eq!(m.nrows(), n);
+            for r in m.row_l1_norms() {
+                assert!(r < 0.95, "row norm {r}");
+            }
+            for i in 0..n {
+                assert_eq!(m.get(i, i), 0.0);
+            }
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::new(5);
+        for _ in 0..100 {
+            let v = g.usize_in(3, 7);
+            assert!((3..=7).contains(&v));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        let p = g.permutation(10);
+        assert_eq!(p.len(), 10);
+        let choice = *g.pick(&[1, 2, 3]);
+        assert!([1, 2, 3].contains(&choice));
+    }
+}

@@ -1,0 +1,133 @@
+//! Parse `artifacts/manifest.txt` written by `python/compile/aot.py`.
+//!
+//! Format (v1): comment lines start with `#`; data lines are
+//! `name kind dims(comma-separated) file`, e.g.
+//! `d_sweep d_sweep 2,4 d_sweep_2x4.hlo.txt`.
+//! Several lines may share a `kind` (one per compiled shape).
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{DiterError, Result};
+
+/// One AOT artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String,
+    pub dims: Vec<usize>,
+    pub file: PathBuf,
+}
+
+impl ArtifactEntry {
+    /// Unique key: kind + dims.
+    pub fn key(&self) -> String {
+        format!(
+            "{}_{}",
+            self.kind,
+            self.dims
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("x")
+        )
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str, base_dir: &Path) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 4 {
+                return Err(DiterError::Parse {
+                    location: format!("manifest line {}", lineno + 1),
+                    message: format!("expected 4 fields, got {}", parts.len()),
+                });
+            }
+            let dims: Vec<usize> = parts[2]
+                .split(',')
+                .map(|d| {
+                    d.parse::<usize>().map_err(|_| DiterError::Parse {
+                        location: format!("manifest line {}", lineno + 1),
+                        message: format!("bad dim `{d}`"),
+                    })
+                })
+                .collect::<Result<_>>()?;
+            entries.push(ArtifactEntry {
+                name: parts[0].to_string(),
+                kind: parts[1].to_string(),
+                dims,
+                file: base_dir.join(parts[3]),
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)?;
+        Self::parse(&text, dir)
+    }
+
+    /// Exact shape lookup.
+    pub fn find(&self, kind: &str, dims: &[usize]) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.dims == dims)
+    }
+
+    /// All compiled shapes for a kind.
+    pub fn shapes_of(&self, kind: &str) -> Vec<&[usize]> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| e.dims.as_slice())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# diter AOT manifest v1
+# name kind dims(comma) file
+d_sweep d_sweep 2,4 d_sweep_2x4.hlo.txt
+d_sweep d_sweep 32,128 d_sweep_32x128.hlo.txt
+jacobi_step jacobi_step 4 jacobi_step_4.hlo.txt
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let e = m.find("d_sweep", &[2, 4]).unwrap();
+        assert_eq!(e.file, Path::new("/tmp/a/d_sweep_2x4.hlo.txt"));
+        assert_eq!(e.key(), "d_sweep_2x4");
+        assert!(m.find("d_sweep", &[9, 9]).is_none());
+        assert_eq!(m.shapes_of("d_sweep").len(), 2);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("too few fields", Path::new(".")).is_err());
+        assert!(Manifest::parse("a b 1,x f.txt", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let m = Manifest::parse("# hi\n\n# there\n", Path::new(".")).unwrap();
+        assert!(m.entries.is_empty());
+    }
+}

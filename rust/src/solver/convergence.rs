@@ -1,0 +1,144 @@
+//! Distance-to-the-limit bounds (§4.4).
+//!
+//! At any point of the computation let `r = Σ_k r_k` be the total remaining
+//! fluid. The paper gives:
+//!
+//! * **PageRank-style** (`P = d·S̄`, columns summing to d): `r/(1−d)` is an
+//!   *exact* L1 distance to the limit (upper bound with unpatched dangling
+//!   nodes) for non-negative fluids;
+//! * **general**: with `ε = min_i (1 − Σ_j |p_{ji}|) > 0`, `r/ε` is an
+//!   upper bound on `‖X − H‖₁`.
+
+use crate::sparse::SparseMatrix;
+
+/// A computable distance-to-limit bound for a given matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ConvergenceBound {
+    /// `r / (1 − d)` — PageRank-style, exact when mass-conserving.
+    PageRank { damping: f64 },
+    /// `r / ε` with `ε = min_i (1 − Σ_j |p_{ji}|)`.
+    Epsilon { epsilon: f64 },
+    /// no bound applies (ε ≤ 0): report the raw residual only.
+    None,
+}
+
+impl ConvergenceBound {
+    /// Choose the best available bound for `p` (PageRank if a damping is
+    /// supplied and the column check passes, else ε, else none).
+    pub fn for_matrix(p: &SparseMatrix, damping: Option<f64>) -> Self {
+        if let Some(d) = damping {
+            if d > 0.0
+                && d < 1.0
+                && p.csr().col_l1_norms().iter().all(|&s| s <= d + 1e-12)
+            {
+                return ConvergenceBound::PageRank { damping: d };
+            }
+        }
+        let eps = p.epsilon();
+        if eps > 0.0 {
+            ConvergenceBound::Epsilon { epsilon: eps }
+        } else {
+            ConvergenceBound::None
+        }
+    }
+
+    /// Turn a residual (total remaining fluid) into a distance bound.
+    /// `None` bound returns the residual unchanged (best effort).
+    pub fn distance(&self, residual: f64) -> f64 {
+        match self {
+            ConvergenceBound::PageRank { damping } => residual / (1.0 - damping),
+            ConvergenceBound::Epsilon { epsilon } => residual / epsilon,
+            ConvergenceBound::None => residual,
+        }
+    }
+
+    /// The residual level needed to guarantee distance ≤ `target`.
+    pub fn residual_target(&self, target: f64) -> f64 {
+        match self {
+            ConvergenceBound::PageRank { damping } => target * (1.0 - damping),
+            ConvergenceBound::Epsilon { epsilon } => target * epsilon,
+            ConvergenceBound::None => target,
+        }
+    }
+}
+
+/// Convenience: the PageRank bound `r/(1−d)`.
+pub fn distance_bound_pagerank(residual: f64, damping: f64) -> f64 {
+    residual / (1.0 - damping)
+}
+
+/// Convenience: the general bound `r/ε`.
+pub fn distance_bound_epsilon(residual: f64, epsilon: f64) -> f64 {
+    residual / epsilon
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{pagerank_system, power_law_web_graph};
+    use crate::linalg::vec_ops::dist1;
+    use crate::solver::{DIteration, FixedPointProblem, SolveOptions, Solver};
+
+    #[test]
+    fn pagerank_bound_is_valid_along_the_run() {
+        let g = power_law_web_graph(300, 5, 0.1, 4);
+        let sys = pagerank_system(&g, 0.85, true).unwrap();
+        let problem = FixedPointProblem::new(sys.matrix.clone(), sys.b.clone()).unwrap();
+        let exact = {
+            // converge hard to get the limit
+            let opts = SolveOptions {
+                tol: 1e-15,
+                max_cost: 100_000.0,
+                trace_every: 0.0,
+                exact: None,
+            };
+            DIteration::fluid_cyclic().solve(&problem, &opts).unwrap().x
+        };
+        let bound = ConvergenceBound::for_matrix(&sys.matrix, Some(0.85));
+        assert!(matches!(bound, ConvergenceBound::PageRank { .. }));
+        // partially converge, then check distance ≤ bound
+        for max_cost in [1.0, 2.0, 5.0, 10.0] {
+            let opts = SolveOptions {
+                tol: 0.0,
+                max_cost,
+                trace_every: 0.0,
+                exact: None,
+            };
+            let sol = DIteration::fluid_cyclic().solve(&problem, &opts).unwrap();
+            let dist = dist1(&sol.x, &exact);
+            let bnd = bound.distance(sol.residual);
+            assert!(
+                dist <= bnd * (1.0 + 1e-9),
+                "cost {max_cost}: dist {dist} > bound {bnd}"
+            );
+        }
+    }
+
+    #[test]
+    fn epsilon_bound_selected_when_no_damping() {
+        let g = power_law_web_graph(100, 4, 0.1, 5);
+        let sys = pagerank_system(&g, 0.85, true).unwrap();
+        let b = ConvergenceBound::for_matrix(&sys.matrix, None);
+        match b {
+            ConvergenceBound::Epsilon { epsilon } => {
+                assert!((epsilon - 0.15).abs() < 1e-9, "ε = {epsilon}");
+            }
+            other => panic!("expected epsilon bound, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn residual_target_roundtrip() {
+        let b = ConvergenceBound::PageRank { damping: 0.85 };
+        let t = b.residual_target(1e-6);
+        assert!((b.distance(t) - 1e-6).abs() < 1e-18);
+        let e = ConvergenceBound::Epsilon { epsilon: 0.2 };
+        assert!((e.distance(e.residual_target(0.5)) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn none_bound_passthrough() {
+        assert_eq!(ConvergenceBound::None.distance(0.3), 0.3);
+        assert_eq!(ConvergenceBound::None.residual_target(0.3), 0.3);
+    }
+}

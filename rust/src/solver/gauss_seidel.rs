@@ -1,0 +1,153 @@
+//! Gauss–Seidel and SOR baselines: in-place sweeps `H_i ← L_i(P)·H + B_i`.
+//!
+//! On the fixed-point form `X = P·X + B`, a cyclic in-place sweep *is*
+//! Gauss–Seidel on the underlying `A·X = rhs` after the paper's §5
+//! splitting — which is also exactly the D-iteration's eq. (6) with the
+//! cyclic sequence starting from `H_0 = 0`. The D-iteration differs by its
+//! free start `H_0 = B` (§2.1.1), by arbitrary/greedy sequences, and by
+//! its distributed variants.
+
+use super::{FixedPointProblem, Solution, SolveOptions, Solver};
+use crate::error::Result;
+use crate::metrics::ConvergenceTrace;
+
+/// Classic Gauss–Seidel (cyclic in-place sweeps from zero).
+#[derive(Clone, Debug, Default)]
+pub struct GaussSeidel;
+
+impl GaussSeidel {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Solver for GaussSeidel {
+    fn name(&self) -> &str {
+        "gauss-seidel"
+    }
+
+    fn solve(&self, problem: &FixedPointProblem, opts: &SolveOptions) -> Result<Solution> {
+        sweep_solver(self.name(), problem, opts, 1.0)
+    }
+}
+
+/// Successive over-relaxation: `H_i ← (1−ω)·H_i + ω·(L_i(P)·H + B_i)`.
+#[derive(Clone, Debug)]
+pub struct Sor {
+    pub omega: f64,
+}
+
+impl Sor {
+    pub fn new(omega: f64) -> Self {
+        assert!(omega > 0.0 && omega < 2.0, "SOR requires 0 < ω < 2");
+        Self { omega }
+    }
+}
+
+impl Solver for Sor {
+    fn name(&self) -> &str {
+        "sor"
+    }
+
+    fn solve(&self, problem: &FixedPointProblem, opts: &SolveOptions) -> Result<Solution> {
+        sweep_solver(self.name(), problem, opts, self.omega)
+    }
+}
+
+fn sweep_solver(
+    name: &str,
+    problem: &FixedPointProblem,
+    opts: &SolveOptions,
+    omega: f64,
+) -> Result<Solution> {
+    let n = problem.n();
+    let csr = problem.matrix().csr();
+    let mut h = vec![0.0; n];
+    let mut trace = ConvergenceTrace::new(name);
+    let mut cost = 0.0;
+    if opts.trace_every > 0.0 {
+        trace.push(0.0, opts.trace_error(problem, &h));
+    }
+    let mut residual = problem.residual_norm(&h);
+    while residual > opts.tol && cost < opts.max_cost {
+        for i in 0..n {
+            let gs = csr.row_dot(i, &h) + problem.b()[i];
+            h[i] = (1.0 - omega) * h[i] + omega * gs;
+        }
+        cost += 1.0;
+        residual = problem.residual_norm(&h);
+        if opts.trace_every > 0.0 && (cost / opts.trace_every).fract() == 0.0 {
+            trace.push(cost, opts.trace_error(problem, &h));
+        }
+    }
+    Ok(Solution {
+        x: h,
+        cost,
+        residual,
+        converged: residual <= opts.tol,
+        trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_matrix;
+    use crate::linalg::vec_ops::dist_inf;
+    use crate::solver::Jacobi;
+
+    #[test]
+    fn gs_converges_on_all_paper_matrices() {
+        for which in 1..=4u8 {
+            let p =
+                FixedPointProblem::from_linear_system(&paper_matrix(which), &[1.0; 4]).unwrap();
+            let sol = GaussSeidel::new().solve(&p, &SolveOptions::default()).unwrap();
+            assert!(sol.converged, "A({which})");
+            let x = p.exact_solution().unwrap();
+            assert!(dist_inf(&sol.x, &x) < 1e-10, "A({which})");
+        }
+    }
+
+    #[test]
+    fn gs_faster_than_jacobi_on_a1() {
+        let p = FixedPointProblem::from_linear_system(&paper_matrix(1), &[1.0; 4]).unwrap();
+        let opts = SolveOptions {
+            tol: 1e-10,
+            ..Default::default()
+        };
+        let gs = GaussSeidel::new().solve(&p, &opts).unwrap();
+        let ja = Jacobi::new().solve(&p, &opts).unwrap();
+        assert!(
+            gs.cost < ja.cost,
+            "GS {} vs Jacobi {}",
+            gs.cost,
+            ja.cost
+        );
+    }
+
+    #[test]
+    fn sor_omega_one_equals_gs() {
+        let p = FixedPointProblem::from_linear_system(&paper_matrix(2), &[1.0; 4]).unwrap();
+        let opts = SolveOptions {
+            max_cost: 5.0,
+            tol: 0.0,
+            ..Default::default()
+        };
+        let gs = GaussSeidel::new().solve(&p, &opts).unwrap();
+        let sor = Sor::new(1.0).solve(&p, &opts).unwrap();
+        assert_eq!(gs.x, sor.x);
+    }
+
+    #[test]
+    fn sor_converges_with_under_relaxation() {
+        let p = FixedPointProblem::from_linear_system(&paper_matrix(3), &[1.0; 4]).unwrap();
+        let sol = Sor::new(0.8).solve(&p, &SolveOptions::default()).unwrap();
+        assert!(sol.converged);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sor_rejects_bad_omega() {
+        let _ = Sor::new(2.5);
+    }
+}

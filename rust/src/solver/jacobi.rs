@@ -1,0 +1,104 @@
+//! Jacobi iteration baseline: `H' = P·H + B` (synchronous full update).
+
+use super::{FixedPointProblem, Solution, SolveOptions, Solver};
+use crate::error::Result;
+use crate::metrics::ConvergenceTrace;
+
+/// The synchronous baseline the paper's figures compare against.
+#[derive(Clone, Debug, Default)]
+pub struct Jacobi {
+    /// start from B (like the D-iteration's free `H_0 = B`, §2.1.1) rather
+    /// than from zero, for a like-for-like comparison.
+    pub warm_start: bool,
+}
+
+impl Jacobi {
+    pub fn new() -> Self {
+        Self { warm_start: false }
+    }
+}
+
+impl Solver for Jacobi {
+    fn name(&self) -> &str {
+        "jacobi"
+    }
+
+    fn solve(&self, problem: &FixedPointProblem, opts: &SolveOptions) -> Result<Solution> {
+        let n = problem.n();
+        let mut h = if self.warm_start {
+            problem.b().to_vec()
+        } else {
+            vec![0.0; n]
+        };
+        let mut trace = ConvergenceTrace::new(self.name());
+        let mut cost = 0.0;
+        if opts.trace_every > 0.0 {
+            trace.push(0.0, opts.trace_error(problem, &h));
+        }
+        let mut residual = problem.residual_norm(&h);
+        while residual > opts.tol && cost < opts.max_cost {
+            // H' = P.H + B  — one full pass, cost 1
+            let mut next = problem.matrix().csr().matvec(&h)?;
+            for i in 0..n {
+                next[i] += problem.b()[i];
+            }
+            h = next;
+            cost += 1.0;
+            residual = problem.residual_norm(&h);
+            if opts.trace_every > 0.0 && (cost / opts.trace_every).fract() == 0.0 {
+                trace.push(cost, opts.trace_error(problem, &h));
+            }
+        }
+        Ok(Solution {
+            x: h,
+            cost,
+            residual,
+            converged: residual <= opts.tol,
+            trace,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_matrix;
+    use crate::linalg::vec_ops::dist_inf;
+
+    #[test]
+    fn converges_on_a1() {
+        let p = FixedPointProblem::from_linear_system(&paper_matrix(1), &[1.0; 4]).unwrap();
+        let sol = Jacobi::new().solve(&p, &SolveOptions::default()).unwrap();
+        assert!(sol.converged);
+        let x = p.exact_solution().unwrap();
+        assert!(dist_inf(&sol.x, &x) < 1e-10);
+    }
+
+    #[test]
+    fn trace_is_monotone_decreasing_on_a1() {
+        let p = FixedPointProblem::from_linear_system(&paper_matrix(1), &[1.0; 4]).unwrap();
+        let opts = SolveOptions {
+            exact: Some(p.exact_solution().unwrap()),
+            ..Default::default()
+        };
+        let sol = Jacobi::new().solve(&p, &opts).unwrap();
+        let errs: Vec<f64> = sol.trace.points.iter().map(|pt| pt.error).collect();
+        assert!(errs.len() > 3);
+        for w in errs.windows(2) {
+            assert!(w[1] <= w[0] + 1e-15, "not decreasing: {w:?}");
+        }
+    }
+
+    #[test]
+    fn respects_max_cost() {
+        let p = FixedPointProblem::from_linear_system(&paper_matrix(1), &[1.0; 4]).unwrap();
+        let opts = SolveOptions {
+            tol: 0.0,
+            max_cost: 3.0,
+            ..Default::default()
+        };
+        let sol = Jacobi::new().solve(&p, &opts).unwrap();
+        assert!(!sol.converged);
+        assert_eq!(sol.cost, 3.0);
+    }
+}

@@ -1,0 +1,249 @@
+//! Sequential solvers: the problem type, baselines (Jacobi, Gauss–Seidel,
+//! SOR, power iteration) and the sequential D-iteration in both of the
+//! paper's forms (H-only eq. 5 and fluid F/H eq. 2–3).
+//!
+//! Cost convention used by every trace (and all figures): **1 cost unit =
+//! N scalar coordinate updates** ("one equivalent full pass"). A Jacobi
+//! step, a Gauss–Seidel sweep and a full cyclic D-iteration cycle each cost
+//! 1; in the distributed runs each PID's local updates are charged to that
+//! PID and the *parallel* cost of a round is the max over PIDs.
+
+mod convergence;
+mod diteration;
+mod gauss_seidel;
+mod greedy_heap;
+mod jacobi;
+mod power;
+mod reductions;
+mod sequence;
+
+pub use convergence::{distance_bound_epsilon, distance_bound_pagerank, ConvergenceBound};
+pub use diteration::{DIteration, DIterationVariant};
+pub use greedy_heap::GreedyQueue;
+pub use gauss_seidel::{GaussSeidel, Sor};
+pub use jacobi::Jacobi;
+pub use power::PowerIteration;
+pub use reductions::{eigen_problem, richardson_omega, richardson_problem};
+pub use sequence::{SequenceKind, SequenceState};
+
+use crate::error::{DiterError, Result};
+use crate::linalg::{solve_dense, DenseMat};
+use crate::metrics::ConvergenceTrace;
+use crate::sparse::SparseMatrix;
+
+/// A fixed-point problem `X = P·X + B` with ρ(P) < 1.
+#[derive(Clone, Debug)]
+pub struct FixedPointProblem {
+    matrix: SparseMatrix,
+    b: Vec<f64>,
+}
+
+impl FixedPointProblem {
+    /// From an iteration matrix and offset vector directly.
+    pub fn new(matrix: SparseMatrix, b: Vec<f64>) -> Result<Self> {
+        if matrix.n() != b.len() {
+            return Err(DiterError::shape("FixedPointProblem", matrix.n(), b.len()));
+        }
+        Ok(Self { matrix, b })
+    }
+
+    /// The paper §5 construction: from `A·X = rhs` build `P = −a_ij/a_ii`
+    /// (zero diagonal) and `B = rhs_i/a_ii`.
+    pub fn from_linear_system(a: &DenseMat, rhs: &[f64]) -> Result<Self> {
+        if !a.is_square() {
+            return Err(DiterError::shape(
+                "from_linear_system",
+                "square",
+                format!("{}x{}", a.rows(), a.cols()),
+            ));
+        }
+        if rhs.len() != a.rows() {
+            return Err(DiterError::shape("from_linear_system", a.rows(), rhs.len()));
+        }
+        let n = a.rows();
+        let mut p = DenseMat::zeros(n, n);
+        let mut b = vec![0.0; n];
+        for i in 0..n {
+            let aii = a[(i, i)];
+            if aii == 0.0 {
+                return Err(DiterError::NotContractive(format!(
+                    "a[{i},{i}] = 0: Jacobi-style splitting undefined"
+                )));
+            }
+            for j in 0..n {
+                if j != i {
+                    p[(i, j)] = -a[(i, j)] / aii;
+                }
+            }
+            b[i] = rhs[i] / aii;
+        }
+        Ok(Self {
+            matrix: SparseMatrix::from_dense(&p),
+            b,
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.b.len()
+    }
+
+    pub fn matrix(&self) -> &SparseMatrix {
+        &self.matrix
+    }
+
+    pub fn b(&self) -> &[f64] {
+        &self.b
+    }
+
+    /// Exact solution via dense LU on `(I − P)·x = b` (small/medium N).
+    pub fn exact_solution(&self) -> Result<Vec<f64>> {
+        let n = self.n();
+        let p = self.matrix.csr().to_dense();
+        let mut a = DenseMat::identity(n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] -= p[(i, j)];
+            }
+        }
+        solve_dense(&a, &self.b)
+    }
+
+    /// Fluid vector `F = P·H + B − H` (eq. 4 rearranged).
+    pub fn fluid(&self, h: &[f64]) -> Vec<f64> {
+        let mut f = self.matrix.csr().matvec(h).expect("shape");
+        for i in 0..self.n() {
+            f[i] += self.b[i] - h[i];
+        }
+        f
+    }
+
+    /// Remaining-fluid norm `Σ_i |L_i(P)·H + B_i − H_i|` (§4.1's Σ r_k).
+    pub fn residual_norm(&self, h: &[f64]) -> f64 {
+        let csr = self.matrix.csr();
+        let mut acc = 0.0;
+        for i in 0..self.n() {
+            acc += (csr.row_dot(i, h) + self.b[i] - h[i]).abs();
+        }
+        acc
+    }
+
+    /// Check `x` against the fixed-point equation; returns the residual.
+    pub fn verify_solution(&self, x: &[f64], tol: f64) -> Result<Verified> {
+        if x.len() != self.n() {
+            return Err(DiterError::shape("verify_solution", self.n(), x.len()));
+        }
+        let residual = self.residual_norm(x);
+        if residual > tol {
+            return Err(DiterError::DidNotConverge {
+                iterations: 0,
+                residual,
+                tol,
+            });
+        }
+        Ok(Verified { residual })
+    }
+}
+
+/// Successful verification report.
+#[derive(Clone, Copy, Debug)]
+pub struct Verified {
+    pub residual: f64,
+}
+
+/// Options common to every solver.
+#[derive(Clone, Debug)]
+pub struct SolveOptions {
+    /// stop when the remaining-fluid norm drops below this
+    pub tol: f64,
+    /// hard cap in cost units (equivalent full passes)
+    pub max_cost: f64,
+    /// if set, traces record L1 distance to this exact solution;
+    /// otherwise they record the residual norm
+    pub exact: Option<Vec<f64>>,
+    /// record a point every `trace_every` cost units (0 = no trace)
+    pub trace_every: f64,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        Self {
+            tol: 1e-12,
+            max_cost: 10_000.0,
+            exact: None,
+            trace_every: 1.0,
+        }
+    }
+}
+
+impl SolveOptions {
+    /// Error measure for traces: distance to exact if known, else residual.
+    pub fn trace_error(&self, problem: &FixedPointProblem, h: &[f64]) -> f64 {
+        match &self.exact {
+            Some(x) => crate::linalg::vec_ops::dist1(h, x),
+            None => problem.residual_norm(h),
+        }
+    }
+}
+
+/// Result of a sequential solve.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    pub x: Vec<f64>,
+    /// total cost in equivalent full passes
+    pub cost: f64,
+    pub residual: f64,
+    pub converged: bool,
+    pub trace: ConvergenceTrace,
+}
+
+/// Common interface for all sequential solvers.
+pub trait Solver {
+    fn name(&self) -> &str;
+    fn solve(&self, problem: &FixedPointProblem, opts: &SolveOptions) -> Result<Solution>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_matrix;
+
+    #[test]
+    fn from_linear_system_matches_paper() {
+        let p = FixedPointProblem::from_linear_system(&paper_matrix(1), &[1.0; 4]).unwrap();
+        let d = p.matrix().csr().to_dense();
+        assert!((d[(0, 1)] - (-0.6)).abs() < 1e-15);
+        assert!((d[(1, 0)] - (-3.0 / 7.0)).abs() < 1e-15);
+        assert!((d[(2, 3)] - (-0.5)).abs() < 1e-15);
+        assert!((d[(3, 2)] - (-2.0 / 3.0)).abs() < 1e-15);
+        assert!((p.b()[0] - 0.2).abs() < 1e-15);
+    }
+
+    #[test]
+    fn exact_solution_solves_fixed_point() {
+        let p = FixedPointProblem::from_linear_system(&paper_matrix(2), &[1.0; 4]).unwrap();
+        let x = p.exact_solution().unwrap();
+        assert!(p.residual_norm(&x) < 1e-12);
+        assert!(p.verify_solution(&x, 1e-10).is_ok());
+    }
+
+    #[test]
+    fn fluid_consistent_with_residual() {
+        let p = FixedPointProblem::from_linear_system(&paper_matrix(3), &[1.0; 4]).unwrap();
+        let h = vec![0.1, 0.2, 0.3, 0.4];
+        let f = p.fluid(&h);
+        let norm: f64 = f.iter().map(|v| v.abs()).sum();
+        assert!((norm - p.residual_norm(&h)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn zero_diagonal_rejected() {
+        let a = DenseMat::from_rows(&[&[0.0, 1.0], &[1.0, 1.0]]);
+        assert!(FixedPointProblem::from_linear_system(&a, &[1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn verify_rejects_bad_solution() {
+        let p = FixedPointProblem::from_linear_system(&paper_matrix(1), &[1.0; 4]).unwrap();
+        assert!(p.verify_solution(&[0.0; 4], 1e-10).is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! Power iteration: the eigenvector baseline (`Q·X = X` form of §1).
+//!
+//! For PageRank-style matrices the fixed point of `X = P·X + B` coincides
+//! (up to scale) with the dominant eigenvector of the Google matrix; the
+//! power method is the classical way to compute it and the natural third
+//! baseline next to Jacobi/GS.
+
+use crate::error::{DiterError, Result};
+use crate::linalg::vec_ops::{dist1, norm1};
+use crate::metrics::ConvergenceTrace;
+use crate::sparse::SparseMatrix;
+
+/// Power iteration on a non-negative matrix `Q` (column-stochastic up to
+/// dangling loss): `x ← Q·x / ‖Q·x‖₁`.
+#[derive(Clone, Debug)]
+pub struct PowerIteration {
+    pub tol: f64,
+    pub max_iter: usize,
+}
+
+impl Default for PowerIteration {
+    fn default() -> Self {
+        Self {
+            tol: 1e-12,
+            max_iter: 100_000,
+        }
+    }
+}
+
+/// Result of a power-method run.
+#[derive(Clone, Debug)]
+pub struct PowerSolution {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub delta: f64,
+    pub converged: bool,
+    pub trace: ConvergenceTrace,
+}
+
+impl PowerIteration {
+    /// Run until `‖x_{k+1} − x_k‖₁ < tol`. `exact` (optional) switches the
+    /// trace to distance-to-limit.
+    pub fn run(
+        &self,
+        q: &SparseMatrix,
+        x0: Option<Vec<f64>>,
+        exact: Option<&[f64]>,
+    ) -> Result<PowerSolution> {
+        let n = q.n();
+        let mut x = x0.unwrap_or_else(|| vec![1.0 / n as f64; n]);
+        if x.len() != n {
+            return Err(DiterError::shape("power x0", n, x.len()));
+        }
+        let mut trace = ConvergenceTrace::new("power");
+        let mut delta = f64::INFINITY;
+        let mut it = 0;
+        while it < self.max_iter {
+            let mut next = q.csr().matvec(&x)?;
+            let norm = norm1(&next);
+            if norm == 0.0 {
+                return Err(DiterError::NotContractive(
+                    "power iteration hit the zero vector".into(),
+                ));
+            }
+            for v in next.iter_mut() {
+                *v /= norm;
+            }
+            delta = dist1(&next, &x);
+            x = next;
+            it += 1;
+            match exact {
+                Some(e) => trace.push(it as f64, dist1(&x, e)),
+                None => trace.push(it as f64, delta),
+            }
+            if delta < self.tol {
+                break;
+            }
+        }
+        Ok(PowerSolution {
+            x,
+            iterations: it,
+            delta,
+            converged: delta < self.tol,
+            trace,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMat;
+
+    #[test]
+    fn finds_dominant_eigenvector() {
+        // column-stochastic 2x2: stationary distribution is (2/3, 1/3)
+        // for q = [[0.8, 0.4], [0.2, 0.6]]
+        let q = SparseMatrix::from_dense(&DenseMat::from_rows(&[&[0.8, 0.4], &[0.2, 0.6]]));
+        let sol = PowerIteration::default().run(&q, None, None).unwrap();
+        assert!(sol.converged);
+        assert!((sol.x[0] - 2.0 / 3.0).abs() < 1e-9);
+        assert!((sol.x[1] - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn normalized_every_step() {
+        let q = SparseMatrix::from_dense(&DenseMat::from_rows(&[&[0.5, 0.5], &[0.5, 0.5]]));
+        let sol = PowerIteration::default().run(&q, None, None).unwrap();
+        assert!((norm1(&sol.x) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_matrix_fails() {
+        let q = SparseMatrix::from_dense(&DenseMat::zeros(3, 3));
+        assert!(PowerIteration::default().run(&q, None, None).is_err());
+    }
+
+    #[test]
+    fn respects_max_iter() {
+        let q = SparseMatrix::from_dense(&DenseMat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]));
+        // period-2 oscillation never converges
+        let p = PowerIteration {
+            tol: 1e-15,
+            max_iter: 10,
+        };
+        let sol = p.run(&q, Some(vec![0.9, 0.1]), None).unwrap();
+        assert!(!sol.converged);
+        assert_eq!(sol.iterations, 10);
+    }
+}

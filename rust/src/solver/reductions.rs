@@ -1,0 +1,224 @@
+//! §1 reductions: the D-iteration solves more than `X = P·X + B`.
+//!
+//! The paper's introduction lists three problem families, all reduced to
+//! the fixed-point form:
+//!
+//! 1. `X = P·X + B` — native (ρ(P) < 1);
+//! 2. `Q·X = X` (eigenvector, ρ(Q) = 1) — via damping: the fixed point of
+//!    `X = d·Q·X + (1−d)·v` converges to the dominant eigenvector as
+//!    d → 1 (the PageRank construction, exact for stochastic Q when v is
+//!    a probability vector);
+//! 3. `A·X = B` (general linear system) — via a splitting: the paper's §5
+//!    uses the Jacobi splitting `P = −a_ij/a_ii, B_i = b_i/a_ii`
+//!    ([`super::FixedPointProblem::from_linear_system`]); this module adds
+//!    the **Richardson** splitting `P = I − ω·A, B = ω·b`, which needs no
+//!    nonzero diagonal and converges for `0 < ω < 2/λ_max(A)` (SPD A).
+
+use crate::error::{DiterError, Result};
+use crate::linalg::DenseMat;
+use crate::sparse::{CsrMatrix, SparseMatrix, TripletBuilder};
+
+use super::FixedPointProblem;
+
+/// Reduction 2: eigenproblem `Q·X = X` with damping `d` and anchor
+/// distribution `v` (uniform if `None`). For column-stochastic Q this is
+/// exactly the PageRank construction; the fixed point is the stationary
+/// vector of `d·Q + (1−d)·v·1ᵗ`.
+pub fn eigen_problem(
+    q: &CsrMatrix,
+    damping: f64,
+    anchor: Option<Vec<f64>>,
+) -> Result<FixedPointProblem> {
+    if q.nrows() != q.ncols() {
+        return Err(DiterError::shape(
+            "eigen_problem",
+            "square",
+            format!("{}x{}", q.nrows(), q.ncols()),
+        ));
+    }
+    if !(0.0 < damping && damping < 1.0) {
+        return Err(DiterError::NotContractive(format!(
+            "damping must be in (0,1), got {damping}"
+        )));
+    }
+    let n = q.nrows();
+    let v = match anchor {
+        Some(v) => {
+            if v.len() != n {
+                return Err(DiterError::shape("eigen_problem anchor", n, v.len()));
+            }
+            v
+        }
+        None => vec![1.0 / n as f64; n],
+    };
+    let mut b = TripletBuilder::with_capacity(n, n, q.nnz());
+    for i in 0..n {
+        let (idx, val) = q.row(i);
+        for k in 0..idx.len() {
+            b.push(i, idx[k], damping * val[k]);
+        }
+    }
+    let rhs: Vec<f64> = v.iter().map(|x| (1.0 - damping) * x).collect();
+    FixedPointProblem::new(SparseMatrix::from_csr(b.to_csr()), rhs)
+}
+
+/// Reduction 3 (alternative splitting): Richardson iteration for
+/// `A·X = B` — `P = I − ω·A`, `B' = ω·B`. Returns an error if the
+/// resulting P is clearly non-contractive (‖P‖∞ ≥ 1 **and** ‖P‖₁ ≥ 1 —
+/// a cheap necessary check; spectral contraction may still hold for SPD A,
+/// so this only rejects the hopeless symmetric-norm case when both
+/// induced-norm bounds fail by a wide margin).
+pub fn richardson_problem(a: &DenseMat, b: &[f64], omega: f64) -> Result<FixedPointProblem> {
+    if !a.is_square() {
+        return Err(DiterError::shape(
+            "richardson_problem",
+            "square",
+            format!("{}x{}", a.rows(), a.cols()),
+        ));
+    }
+    if b.len() != a.rows() {
+        return Err(DiterError::shape("richardson_problem", a.rows(), b.len()));
+    }
+    if omega <= 0.0 {
+        return Err(DiterError::NotContractive(format!(
+            "omega must be positive, got {omega}"
+        )));
+    }
+    let n = a.rows();
+    let mut p = DenseMat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let idm = if i == j { 1.0 } else { 0.0 };
+            p[(i, j)] = idm - omega * a[(i, j)];
+        }
+    }
+    let rhs: Vec<f64> = b.iter().map(|x| omega * x).collect();
+    FixedPointProblem::new(SparseMatrix::from_dense(&p), rhs)
+}
+
+/// Estimate a safe Richardson ω for an SPD matrix via a few power-method
+/// steps on A (λ_max estimate), returning `1/λ̂_max` (conservative half of
+/// the `2/λ_max` stability window).
+pub fn richardson_omega(a: &DenseMat, iters: usize) -> Result<f64> {
+    if !a.is_square() || a.rows() == 0 {
+        return Err(DiterError::shape("richardson_omega", "square nonempty", "-"));
+    }
+    let n = a.rows();
+    let mut x = vec![1.0 / (n as f64).sqrt(); n];
+    let mut lambda = 1.0;
+    for _ in 0..iters.max(1) {
+        let y = a.matvec(&x)?;
+        let norm = crate::linalg::vec_ops::norm2(&y);
+        if norm == 0.0 {
+            return Err(DiterError::NotContractive("A ≈ 0".into()));
+        }
+        lambda = norm;
+        x = y.into_iter().map(|v| v / norm).collect();
+    }
+    Ok(1.0 / lambda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vec_ops::{dist1, dist_inf, norm1};
+    use crate::linalg::solve_dense;
+    use crate::solver::{DIteration, PowerIteration, SolveOptions, Solver};
+
+    #[test]
+    fn eigen_problem_recovers_stationary_vector() {
+        // column-stochastic 3x3 chain with known stationary vector
+        let q = CsrMatrix::from_dense(&DenseMat::from_rows(&[
+            &[0.5, 0.25, 0.25],
+            &[0.25, 0.5, 0.25],
+            &[0.25, 0.25, 0.5],
+        ]));
+        // symmetric doubly-stochastic → uniform stationary vector
+        let problem = eigen_problem(&q, 0.99, None).unwrap();
+        let sol = DIteration::fluid_cyclic()
+            .solve(&problem, &SolveOptions::default())
+            .unwrap();
+        assert!(sol.converged);
+        // fixed point of X = dQX + (1-d)/n: for uniform stationary Q the
+        // answer is exactly uniform
+        for v in &sol.x {
+            assert!((v - 1.0 / 3.0).abs() < 1e-10, "{v}");
+        }
+        // matches the power method on Q itself
+        let power = PowerIteration::default()
+            .run(&SparseMatrix::from_csr(q), None, None)
+            .unwrap();
+        let x_norm: Vec<f64> = sol.x.iter().map(|v| v / norm1(&sol.x)).collect();
+        assert!(dist1(&x_norm, &power.x) < 1e-8);
+    }
+
+    #[test]
+    fn eigen_problem_damping_validation() {
+        let q = CsrMatrix::from_dense(&DenseMat::identity(2));
+        assert!(eigen_problem(&q, 1.0, None).is_err());
+        assert!(eigen_problem(&q, 0.0, None).is_err());
+        assert!(eigen_problem(&q, 0.5, Some(vec![1.0])).is_err());
+    }
+
+    #[test]
+    fn richardson_solves_spd_system() {
+        // SPD matrix with zero diagonal entries would break the Jacobi
+        // splitting — Richardson handles any SPD A
+        let a = DenseMat::from_rows(&[
+            &[4.0, 1.0, 0.0],
+            &[1.0, 3.0, 1.0],
+            &[0.0, 1.0, 2.0],
+        ]);
+        let b = vec![1.0, 2.0, 3.0];
+        let omega = richardson_omega(&a, 50).unwrap();
+        let problem = richardson_problem(&a, &b, omega).unwrap();
+        let sol = DIteration::cyclic()
+            .solve(
+                &problem,
+                &SolveOptions {
+                    tol: 1e-12,
+                    max_cost: 100_000.0,
+                    trace_every: 0.0,
+                    exact: None,
+                },
+            )
+            .unwrap();
+        assert!(sol.converged);
+        let exact = solve_dense(&a, &b).unwrap();
+        assert!(dist_inf(&sol.x, &exact) < 1e-9);
+    }
+
+    #[test]
+    fn richardson_rejects_bad_inputs() {
+        let a = DenseMat::identity(2);
+        assert!(richardson_problem(&a, &[1.0], 0.5).is_err());
+        assert!(richardson_problem(&a, &[1.0, 1.0], 0.0).is_err());
+        let rect = DenseMat::zeros(2, 3);
+        assert!(richardson_problem(&rect, &[1.0, 1.0], 0.5).is_err());
+    }
+
+    #[test]
+    fn richardson_omega_estimates_lambda_max() {
+        // diag(4, 1): λ_max = 4 → ω ≈ 1/4
+        let a = DenseMat::from_rows(&[&[4.0, 0.0], &[0.0, 1.0]]);
+        let w = richardson_omega(&a, 100).unwrap();
+        assert!((w - 0.25).abs() < 1e-6, "ω = {w}");
+    }
+
+    #[test]
+    fn jacobi_and_richardson_agree() {
+        let a = DenseMat::from_rows(&[&[5.0, 1.0], &[2.0, 7.0]]);
+        let b = [1.0, -1.0];
+        let jac = FixedPointProblem::from_linear_system(&a, &b).unwrap();
+        let ric = richardson_problem(&a, &b, 0.2).unwrap();
+        let opts = SolveOptions {
+            tol: 1e-13,
+            max_cost: 100_000.0,
+            trace_every: 0.0,
+            exact: None,
+        };
+        let x1 = DIteration::cyclic().solve(&jac, &opts).unwrap().x;
+        let x2 = DIteration::cyclic().solve(&ric, &opts).unwrap().x;
+        assert!(dist_inf(&x1, &x2) < 1e-9);
+    }
+}

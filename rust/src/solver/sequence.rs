@@ -1,0 +1,138 @@
+//! Diffusion-sequence strategies (§4.2): the order `I = {i_1, i_2, ...}` in
+//! which coordinates are diffused. The paper's default is cyclic; greedy
+//! (largest remaining fluid first) follows [3, 4]; random-fair is the
+//! stochastic baseline. Finding the optimal sequence is explicitly open.
+
+use crate::prng::Xoshiro256pp;
+
+/// Which sequence strategy to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SequenceKind {
+    /// 0, 1, ..., n-1, 0, 1, ... (within the owned set)
+    Cyclic,
+    /// uniformly random but fair-in-expectation picks
+    Random,
+    /// argmax |F_i| over the owned set — the greedy rule of [3, 4]
+    GreedyMaxFluid,
+}
+
+impl SequenceKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "cyclic" => Some(Self::Cyclic),
+            "random" => Some(Self::Random),
+            "greedy" => Some(Self::GreedyMaxFluid),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Cyclic => "cyclic",
+            Self::Random => "random",
+            Self::GreedyMaxFluid => "greedy",
+        }
+    }
+}
+
+/// Stateful sequence generator over an owned index set.
+#[derive(Clone, Debug)]
+pub struct SequenceState {
+    kind: SequenceKind,
+    owned: Vec<usize>,
+    pos: usize,
+    rng: Xoshiro256pp,
+}
+
+impl SequenceState {
+    pub fn new(kind: SequenceKind, owned: Vec<usize>, seed: u64) -> Self {
+        assert!(!owned.is_empty(), "sequence over empty set");
+        Self {
+            kind,
+            owned,
+            pos: 0,
+            rng: Xoshiro256pp::seed_from_u64(seed),
+        }
+    }
+
+    pub fn kind(&self) -> SequenceKind {
+        self.kind
+    }
+
+    pub fn owned(&self) -> &[usize] {
+        &self.owned
+    }
+
+    /// Next coordinate to diffuse. `fluid` is the *global* fluid vector
+    /// (only the owned entries are inspected); greedy uses it, the others
+    /// ignore it.
+    pub fn next(&mut self, fluid: &[f64]) -> usize {
+        match self.kind {
+            SequenceKind::Cyclic => {
+                let i = self.owned[self.pos];
+                self.pos = (self.pos + 1) % self.owned.len();
+                i
+            }
+            SequenceKind::Random => self.owned[self.rng.below(self.owned.len())],
+            SequenceKind::GreedyMaxFluid => {
+                let mut best = self.owned[0];
+                let mut best_v = fluid[best].abs();
+                for &i in &self.owned[1..] {
+                    let v = fluid[i].abs();
+                    if v > best_v {
+                        best_v = v;
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cyclic_cycles() {
+        let mut s = SequenceState::new(SequenceKind::Cyclic, vec![3, 5, 7], 0);
+        let f = vec![0.0; 8];
+        let picks: Vec<usize> = (0..6).map(|_| s.next(&f)).collect();
+        assert_eq!(picks, vec![3, 5, 7, 3, 5, 7]);
+    }
+
+    #[test]
+    fn random_is_fair() {
+        let mut s = SequenceState::new(SequenceKind::Random, vec![0, 1, 2], 42);
+        let f = vec![0.0; 3];
+        let mut counts = [0usize; 3];
+        for _ in 0..3000 {
+            counts[s.next(&f)] += 1;
+        }
+        for c in counts {
+            assert!(c > 800, "unfair: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn greedy_picks_max_fluid() {
+        let mut s = SequenceState::new(SequenceKind::GreedyMaxFluid, vec![0, 2, 4], 0);
+        let f = vec![0.1, 9.0, -0.5, 9.0, 0.2];
+        assert_eq!(s.next(&f), 2); // |−0.5| is the max among owned {0,2,4}
+        let f = vec![0.1, 9.0, -0.5, 9.0, -0.9];
+        assert_eq!(s.next(&f), 4);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in [
+            SequenceKind::Cyclic,
+            SequenceKind::Random,
+            SequenceKind::GreedyMaxFluid,
+        ] {
+            assert_eq!(SequenceKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(SequenceKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,147 @@
+//! COO triplet builder → CSR.
+
+use super::CsrMatrix;
+
+/// Accumulates `(row, col, value)` triplets; duplicates are summed on
+/// [`TripletBuilder::to_csr`] (the standard COO semantics, handy for graph
+/// generators that may emit parallel edges).
+#[derive(Clone, Debug)]
+pub struct TripletBuilder {
+    nrows: usize,
+    ncols: usize,
+    rows: Vec<usize>,
+    cols: Vec<usize>,
+    vals: Vec<f64>,
+}
+
+impl TripletBuilder {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Self {
+            nrows,
+            ncols,
+            rows: Vec::new(),
+            cols: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, cap: usize) -> Self {
+        let mut b = Self::new(nrows, ncols);
+        b.rows.reserve(cap);
+        b.cols.reserve(cap);
+        b.vals.reserve(cap);
+        b
+    }
+
+    /// Add `value` at `(i, j)`. Panics on out-of-range in debug builds.
+    #[inline]
+    pub fn push(&mut self, i: usize, j: usize, value: f64) {
+        debug_assert!(i < self.nrows && j < self.ncols, "({i},{j}) out of range");
+        self.rows.push(i);
+        self.cols.push(j);
+        self.vals.push(value);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Sort by (row, col), sum duplicates, emit CSR. Exact zeros arising
+    /// from duplicate cancellation are kept (harmless, rare).
+    pub fn to_csr(&self) -> CsrMatrix {
+        let nnz = self.vals.len();
+        // counting sort by row
+        let mut row_counts = vec![0usize; self.nrows + 1];
+        for &r in &self.rows {
+            row_counts[r + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            row_counts[i + 1] += row_counts[i];
+        }
+        let mut order: Vec<usize> = vec![0; nnz];
+        let mut next = row_counts.clone();
+        for k in 0..nnz {
+            let r = self.rows[k];
+            order[next[r]] = k;
+            next[r] += 1;
+        }
+        // per-row sort by column + merge duplicates
+        let mut indptr = vec![0usize; self.nrows + 1];
+        let mut indices: Vec<usize> = Vec::with_capacity(nnz);
+        let mut values: Vec<f64> = Vec::with_capacity(nnz);
+        let mut scratch: Vec<(usize, f64)> = Vec::new();
+        for i in 0..self.nrows {
+            scratch.clear();
+            for &k in &order[row_counts[i]..row_counts[i + 1]] {
+                scratch.push((self.cols[k], self.vals[k]));
+            }
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            let mut iter = scratch.iter().copied();
+            if let Some((mut cur_c, mut cur_v)) = iter.next() {
+                for (c, v) in iter {
+                    if c == cur_c {
+                        cur_v += v;
+                    } else {
+                        indices.push(cur_c);
+                        values.push(cur_v);
+                        cur_c = c;
+                        cur_v = v;
+                    }
+                }
+                indices.push(cur_c);
+                values.push(cur_v);
+            }
+            indptr[i + 1] = indices.len();
+        }
+        CsrMatrix::from_parts(self.nrows, self.ncols, indptr, indices, values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_matrix() {
+        let b = TripletBuilder::new(3, 3);
+        let m = b.to_csr();
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.matvec(&[1.0; 3]).unwrap(), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let mut b = TripletBuilder::new(2, 2);
+        b.push(0, 1, 1.0);
+        b.push(0, 1, 2.5);
+        b.push(1, 0, -1.0);
+        let m = b.to_csr();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.get(0, 1), 3.5);
+        assert_eq!(m.get(1, 0), -1.0);
+    }
+
+    #[test]
+    fn unsorted_input_sorted_output() {
+        let mut b = TripletBuilder::new(1, 5);
+        for j in [4usize, 0, 2, 3, 1] {
+            b.push(0, j, j as f64);
+        }
+        let m = b.to_csr();
+        let (idx, val) = m.row(0);
+        assert_eq!(idx, &[0, 1, 2, 3, 4]);
+        assert_eq!(val, &[0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rows_out_of_order() {
+        let mut b = TripletBuilder::new(3, 3);
+        b.push(2, 0, 1.0);
+        b.push(0, 2, 2.0);
+        b.push(1, 1, 3.0);
+        let m = b.to_csr();
+        assert_eq!(m.get(2, 0), 1.0);
+        assert_eq!(m.get(0, 2), 2.0);
+        assert_eq!(m.get(1, 1), 3.0);
+    }
+}

@@ -1,0 +1,403 @@
+//! Sparse matrix substrate: COO builder, CSR and CSC forms.
+//!
+//! The D-iteration's two distributed schemes read P in two different ways:
+//!
+//! * **V1** (full-H scheme) sweeps *rows* `L_i(P)` — CSR is the natural
+//!   layout for the per-PID local updates `H_i ← L_i(P)·H + B_i`.
+//! * **V2** (fluid scheme) diffuses along *columns* `C_i(P)`: diffusing node
+//!   i sends `f·p_{ji}` to every out-neighbor j, i.e. walks column i — CSC.
+//!
+//! [`SparseMatrix`] keeps both forms in sync so each scheme takes its
+//! natural traversal with zero per-access conversion cost.
+
+mod build;
+mod ops;
+
+pub use build::TripletBuilder;
+pub use ops::{diag_eliminate, DiagElimination};
+
+use crate::error::{DiterError, Result};
+use crate::linalg::DenseMat;
+
+/// Compressed Sparse Row matrix (f64 entries).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    nrows: usize,
+    ncols: usize,
+    /// `indptr[i]..indptr[i+1]` spans row i's entries.
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub(crate) fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Self {
+        debug_assert_eq!(indptr.len(), nrows + 1);
+        debug_assert_eq!(indices.len(), values.len());
+        Self {
+            nrows,
+            ncols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Row i as (column indices, values) — the paper's `L_i(P)`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Sparse dot `L_i(P) · x`.
+    #[inline]
+    pub fn row_dot(&self, i: usize, x: &[f64]) -> f64 {
+        let (idx, val) = self.row(i);
+        let mut acc = 0.0;
+        for k in 0..idx.len() {
+            acc += val[k] * x[idx[k]];
+        }
+        acc
+    }
+
+    /// `y = P · x`.
+    pub fn matvec(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.ncols {
+            return Err(DiterError::shape("csr matvec", self.ncols, x.len()));
+        }
+        let mut y = vec![0.0; self.nrows];
+        for i in 0..self.nrows {
+            y[i] = self.row_dot(i, x);
+        }
+        Ok(y)
+    }
+
+    /// Entry lookup (O(row nnz)); 0.0 if absent.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (idx, val) = self.row(i);
+        idx.iter()
+            .position(|&c| c == j)
+            .map_or(0.0, |k| val[k])
+    }
+
+    /// Per-row L1 norms `Σ_j |p_ij|` (the L∞ contraction check).
+    pub fn row_l1_norms(&self) -> Vec<f64> {
+        (0..self.nrows)
+            .map(|i| self.row(i).1.iter().map(|v| v.abs()).sum())
+            .collect()
+    }
+
+    /// Per-column L1 norms `Σ_j |p_ji|` — §4.4 uses
+    /// `ε = min_i (1 − Σ_j |p_ji|)` for the distance-to-limit bound.
+    pub fn col_l1_norms(&self) -> Vec<f64> {
+        let mut sums = vec![0.0; self.ncols];
+        for k in 0..self.values.len() {
+            sums[self.indices[k]] += self.values[k].abs();
+        }
+        sums
+    }
+
+    /// Convert to CSC (a transpose-like pass).
+    pub fn to_csc(&self) -> CscMatrix {
+        let mut counts = vec![0usize; self.ncols];
+        for &j in &self.indices {
+            counts[j] += 1;
+        }
+        let mut indptr = vec![0usize; self.ncols + 1];
+        for j in 0..self.ncols {
+            indptr[j + 1] = indptr[j] + counts[j];
+        }
+        let mut rows = vec![0usize; self.nnz()];
+        let mut values = vec![0.0; self.nnz()];
+        let mut next = indptr.clone();
+        for i in 0..self.nrows {
+            let (idx, val) = self.row(i);
+            for k in 0..idx.len() {
+                let j = idx[k];
+                let slot = next[j];
+                rows[slot] = i;
+                values[slot] = val[k];
+                next[j] += 1;
+            }
+        }
+        CscMatrix {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            indptr,
+            indices: rows,
+            values,
+        }
+    }
+
+    /// Dense copy (small matrices / tests / PJRT dense blocks).
+    pub fn to_dense(&self) -> DenseMat {
+        let mut d = DenseMat::zeros(self.nrows, self.ncols);
+        for i in 0..self.nrows {
+            let (idx, val) = self.row(i);
+            for k in 0..idx.len() {
+                d[(i, idx[k])] = val[k];
+            }
+        }
+        d
+    }
+
+    /// Build from dense, dropping exact zeros.
+    pub fn from_dense(d: &DenseMat) -> Self {
+        let mut b = TripletBuilder::new(d.rows(), d.cols());
+        for i in 0..d.rows() {
+            for (j, &v) in d.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    b.push(i, j, v);
+                }
+            }
+        }
+        b.to_csr()
+    }
+
+    /// Extract the dense row block for a set of rows (PJRT dense path):
+    /// returns a row-major `rows.len() × ncols` buffer.
+    pub fn dense_row_block(&self, rows: &[usize]) -> Vec<f64> {
+        let mut out = vec![0.0; rows.len() * self.ncols];
+        for (r, &i) in rows.iter().enumerate() {
+            let (idx, val) = self.row(i);
+            let base = r * self.ncols;
+            for k in 0..idx.len() {
+                out[base + idx[k]] = val[k];
+            }
+        }
+        out
+    }
+
+    /// Density in [0,1].
+    pub fn density(&self) -> f64 {
+        if self.nrows == 0 || self.ncols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.nrows as f64 * self.ncols as f64)
+    }
+}
+
+/// Compressed Sparse Column matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    nrows: usize,
+    ncols: usize,
+    /// `indptr[j]..indptr[j+1]` spans column j's entries.
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CscMatrix {
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Column j as (row indices, values) — the paper's `C_j(P)`, i.e. the
+    /// targets of node j's diffusion in the V2 scheme.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.indptr[j], self.indptr[j + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Convert to CSR.
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut counts = vec![0usize; self.nrows];
+        for &i in &self.indices {
+            counts[i] += 1;
+        }
+        let mut indptr = vec![0usize; self.nrows + 1];
+        for i in 0..self.nrows {
+            indptr[i + 1] = indptr[i] + counts[i];
+        }
+        let mut cols = vec![0usize; self.nnz()];
+        let mut values = vec![0.0; self.nnz()];
+        let mut next = indptr.clone();
+        for j in 0..self.ncols {
+            let (idx, val) = self.col(j);
+            for k in 0..idx.len() {
+                let i = idx[k];
+                let slot = next[i];
+                cols[slot] = j;
+                values[slot] = val[k];
+                next[i] += 1;
+            }
+        }
+        CsrMatrix {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            indptr,
+            indices: cols,
+            values,
+        }
+    }
+}
+
+/// A square iteration matrix kept in both CSR (row sweeps, V1) and CSC
+/// (column diffusion, V2) forms.
+#[derive(Clone, Debug)]
+pub struct SparseMatrix {
+    csr: CsrMatrix,
+    csc: CscMatrix,
+}
+
+impl SparseMatrix {
+    pub fn from_csr(csr: CsrMatrix) -> Self {
+        let csc = csr.to_csc();
+        Self { csr, csc }
+    }
+
+    pub fn from_dense(d: &DenseMat) -> Self {
+        Self::from_csr(CsrMatrix::from_dense(d))
+    }
+
+    pub fn n(&self) -> usize {
+        self.csr.nrows()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.csr.nnz()
+    }
+
+    pub fn csr(&self) -> &CsrMatrix {
+        &self.csr
+    }
+
+    pub fn csc(&self) -> &CscMatrix {
+        &self.csc
+    }
+
+    /// Cheap sufficient condition for D-iteration convergence (§4.4):
+    /// max column L1 norm < 1 ⇒ ρ(P) < 1 and the fluid bound applies.
+    pub fn max_col_norm(&self) -> f64 {
+        self.csr
+            .col_l1_norms()
+            .into_iter()
+            .fold(0.0, f64::max)
+    }
+
+    /// `ε = min_i (1 − Σ_j |p_ji|)` from §4.4 (may be ≤ 0 when the bound
+    /// does not apply).
+    pub fn epsilon(&self) -> f64 {
+        self.csr
+            .col_l1_norms()
+            .into_iter()
+            .map(|s| 1.0 - s)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_p1() -> DenseMat {
+        DenseMat::from_rows(&[
+            &[0.0, -3.0 / 5.0, 0.0, 0.0],
+            &[-3.0 / 7.0, 0.0, 0.0, 0.0],
+            &[0.0, 0.0, 0.0, -4.0 / 8.0],
+            &[0.0, 0.0, -2.0 / 3.0, 0.0],
+        ])
+    }
+
+    #[test]
+    fn csr_roundtrip_dense() {
+        let d = paper_p1();
+        let csr = CsrMatrix::from_dense(&d);
+        assert_eq!(csr.nnz(), 4);
+        assert_eq!(csr.to_dense(), d);
+    }
+
+    #[test]
+    fn csr_row_access() {
+        let csr = CsrMatrix::from_dense(&paper_p1());
+        let (idx, val) = csr.row(0);
+        assert_eq!(idx, &[1]);
+        assert_eq!(val, &[-0.6]);
+        assert_eq!(csr.get(0, 1), -0.6);
+        assert_eq!(csr.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn csr_matvec_matches_dense() {
+        let d = paper_p1();
+        let csr = CsrMatrix::from_dense(&d);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(csr.matvec(&x).unwrap(), d.matvec(&x).unwrap());
+    }
+
+    #[test]
+    fn csc_roundtrip() {
+        let csr = CsrMatrix::from_dense(&paper_p1());
+        let back = csr.to_csc().to_csr();
+        assert_eq!(back.to_dense(), paper_p1());
+    }
+
+    #[test]
+    fn csc_col_is_diffusion_targets() {
+        let m = SparseMatrix::from_dense(&paper_p1());
+        // column 3 of P: entries p_{2,3} = -0.5 → diffusing node 3 sends to 2
+        let (rows, vals) = m.csc().col(3);
+        assert_eq!(rows, &[2]);
+        assert_eq!(vals, &[-0.5]);
+    }
+
+    #[test]
+    fn norms_and_epsilon() {
+        let m = SparseMatrix::from_dense(&paper_p1());
+        let cols = m.csr().col_l1_norms();
+        assert!((cols[0] - 3.0 / 7.0).abs() < 1e-15);
+        assert!((cols[1] - 0.6).abs() < 1e-15);
+        assert!(m.max_col_norm() < 1.0);
+        assert!(m.epsilon() > 0.0);
+    }
+
+    #[test]
+    fn dense_row_block_extraction() {
+        let csr = CsrMatrix::from_dense(&paper_p1());
+        let block = csr.dense_row_block(&[2, 3]);
+        assert_eq!(block.len(), 8);
+        assert_eq!(block[3], -0.5); // row 2, col 3
+        assert_eq!(block[4 + 2], -2.0 / 3.0); // row 3, col 2
+    }
+
+    #[test]
+    fn density() {
+        let csr = CsrMatrix::from_dense(&paper_p1());
+        assert!((csr.density() - 4.0 / 16.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn matvec_shape_error() {
+        let csr = CsrMatrix::from_dense(&paper_p1());
+        assert!(csr.matvec(&[1.0; 3]).is_err());
+    }
+}

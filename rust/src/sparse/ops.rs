@@ -1,0 +1,140 @@
+//! Sparse preprocessing ops — notably §2.1.2 *diagonal link elimination*.
+//!
+//! When `p_ii ≠ 0` the self-loop can be folded away: the fluid a node keeps
+//! re-sending to itself forms the geometric series `1/(1−p_ii)`, so one can
+//! (a) rescale `B_i ← B_i/(1−p_ii)` and (b) rescale everything *arriving*
+//! at i by the same factor — equivalently, scale row i of P by `1/(1−p_ii)`
+//! and zero the diagonal. The fixed point of the transformed system equals
+//! the original one.
+
+use super::{CsrMatrix, TripletBuilder};
+use crate::error::{DiterError, Result};
+
+/// Result of diagonal elimination: transformed matrix + B rescale factors.
+#[derive(Clone, Debug)]
+pub struct DiagElimination {
+    /// P with zeroed diagonal and rescaled incoming weights.
+    pub matrix: CsrMatrix,
+    /// `scale[i] = 1/(1 - p_ii)`; apply to `B_i` (and record for fluids).
+    pub scale: Vec<f64>,
+    /// How many diagonal entries were actually eliminated.
+    pub eliminated: usize,
+}
+
+/// Eliminate all diagonal entries of a square iteration matrix (§2.1.2).
+///
+/// Fails if any `p_ii ≥ 1` (the geometric series diverges — the iteration
+/// would not have converged anyway).
+pub fn diag_eliminate(p: &CsrMatrix) -> Result<DiagElimination> {
+    if p.nrows() != p.ncols() {
+        return Err(DiterError::shape(
+            "diag_eliminate",
+            "square",
+            format!("{}x{}", p.nrows(), p.ncols()),
+        ));
+    }
+    let n = p.nrows();
+    let mut scale = vec![1.0; n];
+    let mut eliminated = 0usize;
+    for i in 0..n {
+        let pii = p.get(i, i);
+        if pii != 0.0 {
+            if pii >= 1.0 {
+                return Err(DiterError::NotContractive(format!(
+                    "p[{i},{i}] = {pii} >= 1; diagonal elimination impossible"
+                )));
+            }
+            scale[i] = 1.0 / (1.0 - pii);
+            eliminated += 1;
+        }
+    }
+    let mut b = TripletBuilder::with_capacity(n, n, p.nnz());
+    for i in 0..n {
+        let (idx, val) = p.row(i);
+        for k in 0..idx.len() {
+            let j = idx[k];
+            if j == i {
+                continue; // the eliminated self-loop
+            }
+            // all fluid arriving at i is multiplied by scale[i]; folding the
+            // factor into row i of P keeps the fixed point identical.
+            b.push(i, j, val[k] * scale[i]);
+        }
+    }
+    Ok(DiagElimination {
+        matrix: b.to_csr(),
+        scale,
+        eliminated,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{solve_dense, DenseMat};
+
+    /// Fixed point of X = PX + B must be invariant under elimination.
+    #[test]
+    fn fixed_point_preserved() {
+        let p = DenseMat::from_rows(&[
+            &[0.3, 0.2, 0.0],
+            &[0.1, 0.0, 0.4],
+            &[0.0, 0.25, 0.25],
+        ]);
+        let b = vec![1.0, 2.0, 3.0];
+        // exact solve of (I - P) x = b
+        let mut a = DenseMat::identity(3);
+        for i in 0..3 {
+            for j in 0..3 {
+                a[(i, j)] -= p[(i, j)];
+            }
+        }
+        let x_orig = solve_dense(&a, &b).unwrap();
+
+        let csr = CsrMatrix::from_dense(&p);
+        let elim = diag_eliminate(&csr).unwrap();
+        assert_eq!(elim.eliminated, 2);
+        // transformed system: X = P'X + B' with B'_i = scale_i * B_i
+        let p2 = elim.matrix.to_dense();
+        let b2: Vec<f64> = b.iter().zip(&elim.scale).map(|(x, s)| x * s).collect();
+        let mut a2 = DenseMat::identity(3);
+        for i in 0..3 {
+            for j in 0..3 {
+                a2[(i, j)] -= p2[(i, j)];
+            }
+        }
+        let x_new = solve_dense(&a2, &b2).unwrap();
+        for i in 0..3 {
+            assert!((x_orig[i] - x_new[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn no_diagonal_is_noop() {
+        let p = DenseMat::from_rows(&[&[0.0, 0.5], &[0.5, 0.0]]);
+        let csr = CsrMatrix::from_dense(&p);
+        let elim = diag_eliminate(&csr).unwrap();
+        assert_eq!(elim.eliminated, 0);
+        assert_eq!(elim.scale, vec![1.0, 1.0]);
+        assert_eq!(elim.matrix.to_dense(), p);
+    }
+
+    #[test]
+    fn diverging_diagonal_rejected() {
+        let p = DenseMat::from_rows(&[&[1.0, 0.0], &[0.0, 0.0]]);
+        let csr = CsrMatrix::from_dense(&p);
+        assert!(diag_eliminate(&csr).is_err());
+    }
+
+    #[test]
+    fn diagonal_gone_after_elimination() {
+        let p = DenseMat::from_rows(&[&[0.5, 0.2], &[0.3, 0.4]]);
+        let elim = diag_eliminate(&CsrMatrix::from_dense(&p)).unwrap();
+        for i in 0..2 {
+            assert_eq!(elim.matrix.get(i, i), 0.0);
+        }
+        // off-diagonals rescaled by 1/(1-p_ii) of the *row*
+        assert!((elim.matrix.get(0, 1) - 0.2 / 0.5).abs() < 1e-15);
+        assert!((elim.matrix.get(1, 0) - 0.3 / 0.6).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,78 @@
+//! Lock-free f64 accumulator (no portable `AtomicF64` in std): CAS over
+//! the bit pattern. Used for the global in-flight fluid account, which
+//! every endpoint updates on every send/receive — a mutex here would
+//! serialize the whole bus.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Debug)]
+pub struct AtomicF64 {
+    bits: AtomicU64,
+}
+
+impl AtomicF64 {
+    pub fn new(v: f64) -> Self {
+        Self {
+            bits: AtomicU64::new(v.to_bits()),
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Acquire))
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Release);
+    }
+
+    /// Atomically add `delta`; returns the new value.
+    pub fn add(&self, delta: f64) -> f64 {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + delta).to_bits();
+            match self
+                .bits
+                .compare_exchange_weak(cur, new, Ordering::AcqRel, Ordering::Relaxed)
+            {
+                Ok(_) => return f64::from_bits(new),
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn basic_ops() {
+        let a = AtomicF64::new(1.5);
+        assert_eq!(a.get(), 1.5);
+        a.set(2.0);
+        assert_eq!(a.get(), 2.0);
+        assert_eq!(a.add(0.5), 2.5);
+        assert_eq!(a.add(-2.5), 0.0);
+    }
+
+    #[test]
+    fn concurrent_adds_conserve() {
+        let a = Arc::new(AtomicF64::new(0.0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let a = a.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    a.add(1.0);
+                    a.add(-1.0);
+                }
+                a.add(0.125);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!((a.get() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,160 @@
+//! Fluid coalescing (§3.3): "the fluid transmission can be delayed and
+//! regrouped — we can regroup (f₁+f₂+…+f_m)·p_{ji} so that this quantity
+//! is not too small; we don't need to know who sent the fluid."
+//!
+//! A [`CoalesceBuffer`] accumulates per-destination-coordinate fluid and
+//! releases a batch when the policy says the parcel is worth a message.
+
+use std::collections::HashMap;
+
+/// When to flush a destination's accumulated fluid.
+#[derive(Clone, Copy, Debug)]
+pub struct CoalescePolicy {
+    /// flush when a destination buffer holds at least this much |fluid|
+    pub min_mass: f64,
+    /// flush when a destination buffer has this many distinct coordinates
+    pub max_entries: usize,
+}
+
+impl Default for CoalescePolicy {
+    fn default() -> Self {
+        Self {
+            min_mass: 1e-9,
+            max_entries: 4096,
+        }
+    }
+}
+
+/// Per-destination coalescing buffer: coordinate → accumulated fluid.
+#[derive(Debug)]
+pub struct CoalesceBuffer {
+    policy: CoalescePolicy,
+    /// dest PID → (coordinate → fluid)
+    buffers: Vec<HashMap<usize, f64>>,
+    /// dest PID → Σ|fluid| currently buffered (approximate upper bound —
+    /// opposite-sign merges only shrink the true mass)
+    masses: Vec<f64>,
+}
+
+impl CoalesceBuffer {
+    pub fn new(k: usize, policy: CoalescePolicy) -> Self {
+        Self {
+            policy,
+            buffers: (0..k).map(|_| HashMap::new()).collect(),
+            masses: vec![0.0; k],
+        }
+    }
+
+    /// Accumulate `fluid` for coordinate `j` owned by `dest`.
+    pub fn add(&mut self, dest: usize, j: usize, fluid: f64) {
+        *self.buffers[dest].entry(j).or_insert(0.0) += fluid;
+        self.masses[dest] += fluid.abs();
+    }
+
+    /// Destinations whose buffer the policy says should flush now.
+    pub fn ready(&self) -> Vec<usize> {
+        (0..self.buffers.len())
+            .filter(|&d| {
+                !self.buffers[d].is_empty()
+                    && (self.masses[d] >= self.policy.min_mass
+                        || self.buffers[d].len() >= self.policy.max_entries)
+            })
+            .collect()
+    }
+
+    /// Take dest's batch (sorted by coordinate for determinism) + its mass.
+    pub fn take(&mut self, dest: usize) -> (Vec<(usize, f64)>, f64) {
+        let map = std::mem::take(&mut self.buffers[dest]);
+        self.masses[dest] = 0.0;
+        let mut batch: Vec<(usize, f64)> = map.into_iter().collect();
+        batch.sort_unstable_by_key(|&(j, _)| j);
+        let mass = batch.iter().map(|&(_, f)| f.abs()).sum();
+        (batch, mass)
+    }
+
+    /// Force-flush everything buffered (end of a work quantum).
+    pub fn take_all(&mut self) -> Vec<(usize, Vec<(usize, f64)>, f64)> {
+        (0..self.buffers.len())
+            .filter(|&d| !self.buffers[d].is_empty())
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|d| {
+                let (batch, mass) = self.take(d);
+                (d, batch, mass)
+            })
+            .collect()
+    }
+
+    /// Total |fluid| currently held back (upper bound) — counted by the
+    /// convergence monitor as "not yet transmitted" local fluid.
+    pub fn held_mass(&self) -> f64 {
+        self.masses.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buffers.iter().all(HashMap::is_empty)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_same_coordinate() {
+        let mut c = CoalesceBuffer::new(2, CoalescePolicy::default());
+        c.add(1, 7, 0.25);
+        c.add(1, 7, 0.25);
+        c.add(1, 3, -0.1);
+        let (batch, mass) = c.take(1);
+        assert_eq!(batch, vec![(3, -0.1), (7, 0.5)]);
+        assert!((mass - 0.6).abs() < 1e-12);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn ready_respects_min_mass() {
+        let policy = CoalescePolicy {
+            min_mass: 1.0,
+            max_entries: 100,
+        };
+        let mut c = CoalesceBuffer::new(2, policy);
+        c.add(0, 1, 0.4);
+        assert!(c.ready().is_empty());
+        c.add(0, 2, 0.7);
+        assert_eq!(c.ready(), vec![0]);
+    }
+
+    #[test]
+    fn ready_respects_max_entries() {
+        let policy = CoalescePolicy {
+            min_mass: 1e9,
+            max_entries: 3,
+        };
+        let mut c = CoalesceBuffer::new(1, policy);
+        c.add(0, 1, 1e-12);
+        c.add(0, 2, 1e-12);
+        assert!(c.ready().is_empty());
+        c.add(0, 3, 1e-12);
+        assert_eq!(c.ready(), vec![0]);
+    }
+
+    #[test]
+    fn take_all_flushes_everything() {
+        let mut c = CoalesceBuffer::new(3, CoalescePolicy::default());
+        c.add(0, 1, 0.1);
+        c.add(2, 5, 0.2);
+        let flushed = c.take_all();
+        assert_eq!(flushed.len(), 2);
+        assert!(c.is_empty());
+        assert_eq!(c.held_mass(), 0.0);
+    }
+
+    #[test]
+    fn held_mass_tracks_additions() {
+        let mut c = CoalesceBuffer::new(1, CoalescePolicy::default());
+        c.add(0, 0, 0.5);
+        c.add(0, 1, -0.25);
+        assert!((c.held_mass() - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,492 @@
+//! Transport substrate: the asynchronous message fabric between PIDs.
+//!
+//! The paper's schemes only need three properties from the network (§3.3):
+//! *asynchrony* (no global synchronization), *no fluid loss* (parcels are
+//! retained by the sender until acknowledged, "as TCP"), and the ability to
+//! *regroup* small fluid parcels to bound overhead. This module provides
+//! exactly that as an in-process bus between worker threads, plus optional
+//! latency injection so experiments can explore delay sensitivity, and
+//! global **in-flight fluid accounting** — the quantity the paper adds to
+//! `Σ_k ‖F_k‖₁` to monitor convergence exactly.
+//!
+//! Substitution note (DESIGN.md §3): real deployments put PIDs on separate
+//! machines over TCP; an in-process bus with explicit ack/retention and
+//! delay injection reproduces the protocol-visible behaviour (reordering
+//! across endpoints, delay, conservation) deterministically under a seed.
+
+mod atomic_f64;
+mod coalesce;
+
+pub use atomic_f64::AtomicF64;
+pub use coalesce::{CoalesceBuffer, CoalescePolicy};
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::{DiterError, Result};
+use crate::metrics::MetricSet;
+use crate::prng::Xoshiro256pp;
+
+/// Metric names registered by the bus.
+pub const BUS_METRICS: &[&str] = &[
+    "msgs_sent",
+    "msgs_recv",
+    "acks",
+    "fluid_entries_sent",
+    "bytes_sent",
+    "inflight_peak_ppm", // peak in-flight fluid × 1e6 (fixed point)
+];
+
+/// Configuration for the bus.
+#[derive(Clone, Debug)]
+pub struct BusConfig {
+    /// simulated one-way latency range (None = deliver immediately)
+    pub latency: Option<(Duration, Duration)>,
+    /// seed for latency jitter
+    pub seed: u64,
+}
+
+impl Default for BusConfig {
+    fn default() -> Self {
+        Self {
+            latency: None,
+            seed: 0,
+        }
+    }
+}
+
+/// An addressed envelope with fluid-mass accounting.
+struct Envelope<T> {
+    from: usize,
+    seq: u64,
+    /// |fluid| carried (for the global in-flight account)
+    mass: f64,
+    ready_at: Instant,
+    payload: T,
+}
+
+/// Heap ordering by ready time (earliest first).
+struct Ripening<T>(Envelope<T>);
+
+impl<T> PartialEq for Ripening<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.ready_at == other.0.ready_at
+    }
+}
+impl<T> Eq for Ripening<T> {}
+impl<T> PartialOrd for Ripening<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Ripening<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.0.ready_at.cmp(&self.0.ready_at) // min-heap
+    }
+}
+
+/// A received message. If obtained via [`Endpoint::try_recv_uncommitted`],
+/// the receiver MUST call [`Endpoint::commit`] after *applying* the payload
+/// — the fluid stays on the global in-flight account until then, so the
+/// convergence monitor can never observe fluid that is nowhere.
+#[derive(Debug)]
+pub struct Received<T> {
+    pub from: usize,
+    pub seq: u64,
+    /// |fluid| carried (still in-flight until committed)
+    pub mass: f64,
+    pub payload: T,
+}
+
+/// Shared bus state.
+struct Shared {
+    /// total |fluid| currently sent-but-not-applied — the monitor's
+    /// "fluids being transmitted" term
+    inflight: AtomicF64,
+    /// retained (unacked) parcel count across all endpoints
+    retained: AtomicU64,
+    /// messages sent but not yet *committed* by their receiver — the
+    /// monitor's quiescence condition (stop only when 0)
+    undelivered: AtomicU64,
+    metrics: Arc<MetricSet>,
+}
+
+/// One PID's endpoint: owned by exactly one worker thread.
+pub struct Endpoint<T> {
+    id: usize,
+    txs: Vec<Sender<Envelope<T>>>,
+    rx: Receiver<Envelope<T>>,
+    /// ack channels: acks[k] sends (seq) back to endpoint k
+    ack_txs: Vec<Sender<u64>>,
+    ack_rx: Receiver<u64>,
+    /// parcels retained until acked (seq → mass); "as TCP"
+    retained: Vec<(u64, f64)>,
+    delayed: BinaryHeap<Ripening<T>>,
+    next_seq: u64,
+    shared: Arc<Shared>,
+    latency: Option<(Duration, Duration)>,
+    rng: Xoshiro256pp,
+}
+
+/// Build a fully-connected bus of `k` endpoints.
+pub fn bus<T: Send>(k: usize, cfg: &BusConfig) -> (Vec<Endpoint<T>>, Arc<MetricSet>) {
+    let metrics = Arc::new(MetricSet::new(BUS_METRICS));
+    let shared = Arc::new(Shared {
+        inflight: AtomicF64::new(0.0),
+        retained: AtomicU64::new(0),
+        undelivered: AtomicU64::new(0),
+        metrics: metrics.clone(),
+    });
+    let mut txs = Vec::with_capacity(k);
+    let mut rxs = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = channel::<Envelope<T>>();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let mut ack_txs = Vec::with_capacity(k);
+    let mut ack_rxs = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = channel::<u64>();
+        ack_txs.push(tx);
+        ack_rxs.push(rx);
+    }
+    let mut endpoints = Vec::with_capacity(k);
+    for (id, (rx, ack_rx)) in rxs.into_iter().zip(ack_rxs).enumerate() {
+        endpoints.push(Endpoint {
+            id,
+            txs: txs.clone(),
+            rx,
+            ack_txs: ack_txs.clone(),
+            ack_rx,
+            retained: Vec::new(),
+            delayed: BinaryHeap::new(),
+            next_seq: 0,
+            shared: shared.clone(),
+            latency: cfg.latency,
+            rng: Xoshiro256pp::seed_from_u64(cfg.seed ^ (id as u64).wrapping_mul(0x9E3779B9)),
+        });
+    }
+    (endpoints, metrics)
+}
+
+impl<T: Send> Endpoint<T> {
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn peers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Send `payload` carrying `mass` units of |fluid| to `to`.
+    /// The parcel is retained locally until the receiver acknowledges it.
+    pub fn send(&mut self, to: usize, payload: T, mass: f64, approx_bytes: usize) -> Result<()> {
+        if to >= self.txs.len() {
+            return Err(DiterError::Transport(format!("no endpoint {to}")));
+        }
+        self.collect_acks();
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let delay = match self.latency {
+            None => Duration::ZERO,
+            Some((lo, hi)) => {
+                let span = hi.saturating_sub(lo);
+                lo + Duration::from_nanos(
+                    (self.rng.next_f64() * span.as_nanos() as f64) as u64,
+                )
+            }
+        };
+        let env = Envelope {
+            from: self.id,
+            seq,
+            mass,
+            ready_at: Instant::now() + delay,
+            payload,
+        };
+        // in-flight accounting BEFORE the send so the monitor can never
+        // observe fluid vanishing (conservation must err on the high side).
+        // `undelivered` goes up FIRST: the monitor treats the float
+        // `inflight` accumulator as authoritative only while undelivered>0
+        // (repeated interleaved ±mass leaves O(ε) residue that would
+        // otherwise never clear — see BusMonitor::inflight_or_zero).
+        self.shared.undelivered.fetch_add(1, Ordering::AcqRel);
+        let now_inflight = self.shared.inflight.add(mass);
+        self.shared
+            .metrics
+            .max("inflight_peak_ppm", (now_inflight * 1e6) as u64);
+        self.retained.push((seq, mass));
+        self.shared.retained.fetch_add(1, Ordering::Relaxed);
+        self.txs[to]
+            .send(env)
+            .map_err(|_| DiterError::Transport(format!("endpoint {to} closed")))?;
+        self.shared.metrics.incr("msgs_sent");
+        self.shared.metrics.add("bytes_sent", approx_bytes as u64);
+        Ok(())
+    }
+
+    /// Broadcast to every other endpoint; `payload` must be cloneable.
+    pub fn broadcast(&mut self, payload: &T, mass: f64, approx_bytes: usize) -> Result<()>
+    where
+        T: Clone,
+    {
+        for to in 0..self.txs.len() {
+            if to != self.id {
+                self.send(to, payload.clone(), mass, approx_bytes)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Non-blocking receive of the next ripe message WITHOUT committing:
+    /// the fluid stays on the in-flight account and the message stays on
+    /// the undelivered count until [`Endpoint::commit`] is called. Use this
+    /// when applying the payload takes time and the monitor must never see
+    /// the fluid vanish in between.
+    pub fn try_recv_uncommitted(&mut self) -> Option<Received<T>> {
+        // drain the channel into the ripening heap
+        while let Ok(env) = self.rx.try_recv() {
+            self.delayed.push(Ripening(env));
+        }
+        let now = Instant::now();
+        if let Some(top) = self.delayed.peek() {
+            if top.0.ready_at <= now {
+                let env = self.delayed.pop().unwrap().0;
+                self.shared.metrics.incr("msgs_recv");
+                return Some(Received {
+                    from: env.from,
+                    seq: env.seq,
+                    mass: env.mass,
+                    payload: env.payload,
+                });
+            }
+        }
+        None
+    }
+
+    /// Confirm that a received message's payload has been fully applied:
+    /// releases its fluid from the in-flight account, marks it delivered,
+    /// and acknowledges to the sender ("as TCP").
+    pub fn commit(&mut self, from: usize, seq: u64, mass: f64) {
+        self.shared.inflight.add(-mass);
+        self.shared.undelivered.fetch_sub(1, Ordering::AcqRel);
+        let _ = self.ack_txs[from].send(seq);
+        self.shared.metrics.incr("acks");
+    }
+
+    /// Non-blocking receive with immediate commit (small payloads that are
+    /// applied on the spot).
+    pub fn try_recv(&mut self) -> Option<Received<T>> {
+        let r = self.try_recv_uncommitted()?;
+        self.commit(r.from, r.seq, r.mass);
+        Some(r)
+    }
+
+    /// Drain everything ripe right now (immediate commit).
+    pub fn drain(&mut self) -> Vec<Received<T>> {
+        let mut out = Vec::new();
+        while let Some(m) = self.try_recv() {
+            out.push(m);
+        }
+        out
+    }
+
+    /// Drain everything ripe right now WITHOUT committing.
+    pub fn drain_uncommitted(&mut self) -> Vec<Received<T>> {
+        let mut out = Vec::new();
+        while let Some(m) = self.try_recv_uncommitted() {
+            out.push(m);
+        }
+        out
+    }
+
+    /// Process acknowledgments: drop retained parcels the peers confirmed.
+    pub fn collect_acks(&mut self) {
+        while let Ok(seq) = self.ack_rx.try_recv() {
+            if let Some(pos) = self.retained.iter().position(|&(s, _)| s == seq) {
+                self.retained.swap_remove(pos);
+                self.shared.retained.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Parcels still awaiting acknowledgment.
+    pub fn unacked(&self) -> usize {
+        self.retained.len()
+    }
+
+    /// Global in-flight fluid (sent but not yet applied anywhere).
+    pub fn global_inflight(&self) -> f64 {
+        self.shared.inflight.get()
+    }
+}
+
+/// A read-only monitor handle onto the bus state (for the coordinator's
+/// convergence monitor thread).
+pub struct BusMonitor {
+    shared: Arc<Shared>,
+}
+
+impl BusMonitor {
+    pub fn inflight(&self) -> f64 {
+        self.shared.inflight.get()
+    }
+
+    pub fn retained(&self) -> u64 {
+        self.shared.retained.load(Ordering::Relaxed)
+    }
+
+    /// Messages sent but not yet committed by their receiver — must be 0
+    /// before the monitor may declare convergence.
+    pub fn undelivered(&self) -> u64 {
+        self.shared.undelivered.load(Ordering::Acquire)
+    }
+
+    /// The in-flight fluid, logically zeroed when nothing is undelivered:
+    /// the f64 accumulator keeps O(ε)·msgs of non-associativity residue
+    /// after many interleaved ±mass updates, and `undelivered == 0`
+    /// *proves* the true in-flight mass is exactly zero (sends bump the
+    /// undelivered count before adding their mass).
+    pub fn inflight_or_zero(&self) -> f64 {
+        if self.undelivered() == 0 {
+            0.0
+        } else {
+            self.inflight()
+        }
+    }
+}
+
+/// Obtain a monitor for the same bus as `endpoint`.
+pub fn monitor_of<T>(endpoint: &Endpoint<T>) -> BusMonitor {
+    BusMonitor {
+        shared: endpoint.shared.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_to_point_delivery() {
+        let (mut eps, metrics) = bus::<String>(2, &BusConfig::default());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, "hello".into(), 0.5, 5).unwrap();
+        let got = b.try_recv().unwrap();
+        assert_eq!(got.payload, "hello");
+        assert_eq!(got.from, 0);
+        assert_eq!(metrics.get("msgs_sent"), 1);
+        assert_eq!(metrics.get("msgs_recv"), 1);
+    }
+
+    #[test]
+    fn inflight_accounting_conserves() {
+        let (mut eps, _m) = bus::<u32>(2, &BusConfig::default());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        assert_eq!(a.global_inflight(), 0.0);
+        a.send(1, 7, 1.25, 4).unwrap();
+        a.send(1, 8, 0.75, 4).unwrap();
+        assert!((a.global_inflight() - 2.0).abs() < 1e-12);
+        let _ = b.try_recv().unwrap();
+        assert!((b.global_inflight() - 0.75).abs() < 1e-12);
+        let _ = b.try_recv().unwrap();
+        assert_eq!(b.global_inflight(), 0.0);
+    }
+
+    #[test]
+    fn acks_release_retention() {
+        let (mut eps, _m) = bus::<u32>(2, &BusConfig::default());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, 1, 0.1, 4).unwrap();
+        a.send(1, 2, 0.1, 4).unwrap();
+        assert_eq!(a.unacked(), 2);
+        b.drain();
+        a.collect_acks();
+        assert_eq!(a.unacked(), 0);
+    }
+
+    #[test]
+    fn broadcast_reaches_all_peers() {
+        let (mut eps, _m) = bus::<u8>(4, &BusConfig::default());
+        let mut rest: Vec<_> = eps.drain(1..).collect();
+        let mut a = eps.pop().unwrap();
+        a.broadcast(&42, 0.0, 1).unwrap();
+        for ep in rest.iter_mut() {
+            let got = ep.try_recv().unwrap();
+            assert_eq!(got.payload, 42);
+        }
+        assert!(a.try_recv().is_none(), "no self-delivery");
+    }
+
+    #[test]
+    fn latency_delays_delivery() {
+        let cfg = BusConfig {
+            latency: Some((Duration::from_millis(30), Duration::from_millis(40))),
+            seed: 1,
+        };
+        let (mut eps, _m) = bus::<u8>(2, &cfg);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, 9, 0.0, 1).unwrap();
+        assert!(b.try_recv().is_none(), "must not arrive instantly");
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(b.try_recv().is_some());
+    }
+
+    #[test]
+    fn ordering_within_latency_heap() {
+        // two messages with different delays must pop earliest-first
+        let cfg = BusConfig {
+            latency: Some((Duration::from_millis(1), Duration::from_millis(50))),
+            seed: 3,
+        };
+        let (mut eps, _m) = bus::<u32>(2, &cfg);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        for i in 0..10 {
+            a.send(1, i, 0.0, 4).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(80));
+        let got = b.drain();
+        assert_eq!(got.len(), 10);
+    }
+
+    #[test]
+    fn send_to_missing_endpoint_fails() {
+        let (mut eps, _m) = bus::<u8>(1, &BusConfig::default());
+        let mut a = eps.pop().unwrap();
+        assert!(a.send(3, 0, 0.0, 1).is_err());
+    }
+
+    #[test]
+    fn cross_thread_usage() {
+        let (mut eps, metrics) = bus::<u64>(2, &BusConfig::default());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let t = std::thread::spawn(move || {
+            for i in 0..100u64 {
+                a.send(1, i, 0.01, 8).unwrap();
+            }
+            a
+        });
+        let mut seen = 0;
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while seen < 100 && Instant::now() < deadline {
+            if b.try_recv().is_some() {
+                seen += 1;
+            }
+        }
+        let mut a = t.join().unwrap();
+        a.collect_acks();
+        assert_eq!(seen, 100);
+        assert_eq!(a.unacked(), 0);
+        assert_eq!(metrics.get("msgs_recv"), 100);
+        assert!(b.global_inflight().abs() < 1e-12);
+    }
+}

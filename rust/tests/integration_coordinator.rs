@@ -1,0 +1,198 @@
+//! Integration: the distributed schemes (threaded V1/V2 and the lockstep
+//! simulator) against the sequential oracle across workloads, partitions,
+//! sequences, latency and coalescing settings.
+
+use std::time::Duration;
+
+use diter::coordinator::{sim, v1, v2, DistributedConfig};
+use diter::graph::{
+    block_coupled_matrix, grid_digraph, pagerank_system, paper_matrix, power_law_web_graph,
+};
+use diter::linalg::vec_ops::{dist1, dist_inf, norm1};
+use diter::partition::Partition;
+use diter::solver::{FixedPointProblem, SequenceKind, SolveOptions, Solver};
+use diter::sparse::SparseMatrix;
+use diter::transport::CoalescePolicy;
+
+fn block_problem(n: usize, k: usize, coupling: f64, seed: u64) -> FixedPointProblem {
+    let p = block_coupled_matrix(n, k, 0.45, coupling, 5, seed);
+    FixedPointProblem::new(SparseMatrix::from_csr(p), vec![1.0; n]).unwrap()
+}
+
+#[test]
+fn v1_and_v2_agree_with_exact_across_k() {
+    let n = 64;
+    let problem = block_problem(n, 4, 0.15, 9);
+    let exact = problem.exact_solution().unwrap();
+    for k in [1usize, 2, 4, 8] {
+        let cfg = DistributedConfig::new(Partition::contiguous(n, k).unwrap()).with_tol(1e-11);
+        let s1 = v1::solve_v1(&problem, &cfg).unwrap();
+        assert!(s1.converged, "v1 k={k} residual={}", s1.residual);
+        assert!(dist_inf(&s1.x, &exact) < 1e-8, "v1 k={k}");
+        let s2 = v2::solve_v2(&problem, &cfg).unwrap();
+        assert!(s2.converged, "v2 k={k} residual={}", s2.residual);
+        assert!(dist_inf(&s2.x, &exact) < 1e-8, "v2 k={k}");
+    }
+}
+
+#[test]
+fn v2_on_grid_graph_pagerank() {
+    // grid torus: maximal locality, contiguous partition cuts only edges
+    // at the strip boundaries
+    let g = grid_digraph(20); // 400 nodes
+    let sys = pagerank_system(&g, 0.85, true).unwrap();
+    let problem = FixedPointProblem::new(sys.matrix.clone(), sys.b.clone()).unwrap();
+    let cfg = DistributedConfig::new(Partition::contiguous(400, 4).unwrap()).with_tol(1e-10);
+    let sol = v2::solve_v2(&problem, &cfg).unwrap();
+    assert!(sol.converged);
+    assert!((norm1(&sol.x) - 1.0).abs() < 1e-7);
+}
+
+#[test]
+fn v2_greedy_on_web_graph_matches_sequential() {
+    let g = power_law_web_graph(600, 6, 0.1, 31);
+    let sys = pagerank_system(&g, 0.85, true).unwrap();
+    let problem = FixedPointProblem::new(sys.matrix.clone(), sys.b.clone()).unwrap();
+    let seq = diter::solver::DIteration::fluid_cyclic()
+        .solve(
+            &problem,
+            &SolveOptions {
+                tol: 1e-13,
+                max_cost: 100_000.0,
+                trace_every: 0.0,
+                exact: None,
+            },
+        )
+        .unwrap();
+    let cfg = DistributedConfig::new(Partition::contiguous(600, 4).unwrap())
+        .with_tol(1e-11)
+        .with_sequence(SequenceKind::GreedyMaxFluid);
+    let sol = v2::solve_v2(&problem, &cfg).unwrap();
+    assert!(sol.converged);
+    assert!(dist1(&sol.x, &seq.x) < 1e-7);
+}
+
+#[test]
+fn round_robin_vs_contiguous_both_correct() {
+    let n = 48;
+    let problem = block_problem(n, 4, 0.1, 2);
+    let exact = problem.exact_solution().unwrap();
+    for part in [
+        Partition::contiguous(n, 4).unwrap(),
+        Partition::round_robin(n, 4).unwrap(),
+        Partition::greedy_edge_cut(problem.matrix().csr(), 4, 0.3).unwrap(),
+    ] {
+        let cfg = DistributedConfig::new(part).with_tol(1e-11);
+        let sol = v2::solve_v2(&problem, &cfg).unwrap();
+        assert!(sol.converged);
+        assert!(dist_inf(&sol.x, &exact) < 1e-8);
+    }
+}
+
+#[test]
+fn aggressive_coalescing_still_converges_exactly() {
+    let n = 96;
+    let problem = block_problem(n, 3, 0.25, 7);
+    let exact = problem.exact_solution().unwrap();
+    for min_mass in [1e-9, 1e-5, 1e-3] {
+        let mut cfg =
+            DistributedConfig::new(Partition::contiguous(n, 3).unwrap()).with_tol(1e-11);
+        cfg.coalesce = CoalescePolicy {
+            min_mass,
+            max_entries: 8,
+        };
+        let sol = v2::solve_v2(&problem, &cfg).unwrap();
+        assert!(sol.converged, "min_mass={min_mass}");
+        assert!(dist_inf(&sol.x, &exact) < 1e-8, "min_mass={min_mass}");
+    }
+}
+
+#[test]
+fn latency_jitter_does_not_affect_the_fixed_point() {
+    let n = 48;
+    let problem = block_problem(n, 4, 0.2, 5);
+    let exact = problem.exact_solution().unwrap();
+    for (lo_us, hi_us) in [(10u64, 50u64), (100, 1000)] {
+        let mut cfg =
+            DistributedConfig::new(Partition::contiguous(n, 4).unwrap()).with_tol(1e-11);
+        cfg.latency = Some((
+            Duration::from_micros(lo_us),
+            Duration::from_micros(hi_us),
+        ));
+        let sol = v2::solve_v2(&problem, &cfg).unwrap();
+        assert!(sol.converged, "latency {lo_us}-{hi_us}µs");
+        assert!(dist_inf(&sol.x, &exact) < 1e-8);
+    }
+}
+
+#[test]
+fn transport_metrics_are_recorded() {
+    let n = 32;
+    let problem = block_problem(n, 4, 0.3, 3);
+    let cfg = DistributedConfig::new(Partition::contiguous(n, 4).unwrap()).with_tol(1e-10);
+    let sol = v2::solve_v2(&problem, &cfg).unwrap();
+    assert!(sol.converged);
+    assert!(sol.metrics["msgs_sent"] > 0);
+    assert_eq!(sol.metrics["msgs_sent"], sol.metrics["msgs_recv"]);
+    assert!(sol.metrics["bytes_sent"] > 0);
+    assert!(sol.total_updates > 0);
+    assert!(sol.updates_per_sec() > 0.0);
+}
+
+#[test]
+fn lockstep_sim_matches_threaded_fixed_point() {
+    let problem = block_problem(32, 2, 0.2, 4);
+    let exact = problem.exact_solution().unwrap();
+    let snaps = sim::simulate_v1(
+        &problem,
+        &sim::SimConfig {
+            partition: Partition::contiguous(32, 2).unwrap(),
+            sweeps_per_share: 2,
+            max_cost: 300,
+            switch_at: None,
+        },
+    )
+    .unwrap();
+    assert!(dist1(&snaps.last().unwrap().x, &exact) < 1e-10);
+}
+
+#[test]
+fn split_merge_partitions_remain_usable() {
+    // §4.3 speed adaptation: split the slowest PID's set, merge the fastest
+    let n = 40;
+    let problem = block_problem(n, 4, 0.15, 8);
+    let exact = problem.exact_solution().unwrap();
+    let base = Partition::contiguous(n, 4).unwrap();
+    let split = base.split_part(0).unwrap(); // now 5 parts
+    let merged = split.merge_parts(1, 2).unwrap(); // back to 4
+    for part in [split, merged] {
+        let cfg = DistributedConfig::new(part).with_tol(1e-11);
+        let sol = v2::solve_v2(&problem, &cfg).unwrap();
+        assert!(sol.converged);
+        assert!(dist_inf(&sol.x, &exact) < 1e-8);
+    }
+}
+
+#[test]
+fn monitor_trace_total_fluid_eventually_below_tol() {
+    let problem = block_problem(32, 2, 0.2, 6);
+    let cfg = DistributedConfig::new(Partition::contiguous(32, 2).unwrap()).with_tol(1e-10);
+    let sol = v2::solve_v2(&problem, &cfg).unwrap();
+    assert!(sol.converged);
+    let last = sol.trace.points.last().unwrap();
+    assert!(last.error < 1e-10, "final monitored fluid {}", last.error);
+}
+
+#[test]
+fn paper_protocol_2pids_on_a1_through_threaded_v1() {
+    let problem =
+        FixedPointProblem::from_linear_system(&paper_matrix(1), &[1.0; 4]).unwrap();
+    let exact = problem.exact_solution().unwrap();
+    let cfg = DistributedConfig::new(Partition::contiguous(4, 2).unwrap()).with_tol(1e-12);
+    let sol = v1::solve_v1(&problem, &cfg).unwrap();
+    assert!(sol.converged);
+    assert!(dist_inf(&sol.x, &exact) < 1e-10);
+    // A(1) is block-diagonal w.r.t. this partition: V1 needs only the
+    // final consistency shares, so message volume stays tiny
+    assert!(sol.metrics["msgs_sent"] < 1000);
+}

@@ -1,0 +1,141 @@
+//! Integration: §3.2 live evolution of P — the running computation rebases
+//! onto P' and converges to the new limit, warm start beating cold start.
+
+use diter::coordinator::{sim, update, v2, DistributedConfig};
+use diter::graph::{block_coupled_matrix, paper_matrix};
+use diter::linalg::vec_ops::{dist1, dist_inf};
+use diter::partition::Partition;
+use diter::solver::{DIteration, FixedPointProblem, SolveOptions, Solver};
+use diter::sparse::{SparseMatrix, TripletBuilder};
+
+fn paper_problems() -> (FixedPointProblem, FixedPointProblem) {
+    (
+        FixedPointProblem::from_linear_system(&paper_matrix(1), &[1.0; 4]).unwrap(),
+        FixedPointProblem::from_linear_system(&paper_matrix(4), &[1.0; 4]).unwrap(),
+    )
+}
+
+#[test]
+fn fig4_scenario_lockstep() {
+    // P up to iteration 5, P' from 6 (paper §5.2), 2 PIDs
+    let (p_old, p_new) = paper_problems();
+    let cfg = sim::SimConfig {
+        partition: Partition::contiguous(4, 2).unwrap(),
+        sweeps_per_share: 2,
+        max_cost: 60,
+        switch_at: Some((6, p_new.clone())),
+    };
+    let snaps = sim::simulate_v1(&p_old, &cfg).unwrap();
+    let exact_new = p_new.exact_solution().unwrap();
+    let exact_old = p_old.exact_solution().unwrap();
+    // before the switch we approach the old limit...
+    let at5 = &snaps[5];
+    assert!(dist1(&at5.x, &exact_old) < dist1(&at5.x, &exact_new));
+    // ...after it we reach the new one
+    assert!(dist1(&snaps.last().unwrap().x, &exact_new) < 1e-10);
+}
+
+#[test]
+fn warm_restart_beats_cold_restart() {
+    // a large-ish system with a small perturbation: continuing from the
+    // old solution (with rebased B') must reach tolerance in fewer updates
+    // than starting over.
+    let n = 96;
+    let csr = block_coupled_matrix(n, 4, 0.4, 0.15, 5, 17);
+    let old = FixedPointProblem::new(SparseMatrix::from_csr(csr.clone()), vec![1.0; n]).unwrap();
+    // perturb a handful of entries (P' = P + small delta)
+    let mut b = TripletBuilder::new(n, n);
+    for i in 0..n {
+        let (idx, val) = csr.row(i);
+        for t in 0..idx.len() {
+            b.push(i, idx[t], val[t]);
+        }
+    }
+    for j in 0..5 {
+        b.push(j, (j + 7) % n, 0.02);
+    }
+    let new_m = SparseMatrix::from_csr(b.to_csr());
+    let new = FixedPointProblem::new(new_m.clone(), vec![1.0; n]).unwrap();
+    let exact_new = new.exact_solution().unwrap();
+
+    // converge on the old system
+    let opts_tight = SolveOptions {
+        tol: 1e-12,
+        max_cost: 100_000.0,
+        trace_every: 0.0,
+        exact: None,
+    };
+    let h = DIteration::cyclic().solve(&old, &opts_tight).unwrap().x;
+
+    // warm: rebase B' = P'H + B − H, solve the correction system
+    let b_prime = update::rebase_b(new.matrix(), &h, new.b()).unwrap();
+    let sub = FixedPointProblem::new(new_m, b_prime).unwrap();
+    let warm = DIteration::cyclic().solve(&sub, &opts_tight).unwrap();
+    let warm_x: Vec<f64> = h.iter().zip(&warm.x).map(|(a, b)| a + b).collect();
+    assert!(dist_inf(&warm_x, &exact_new) < 1e-9);
+
+    // cold: full solve of the new system
+    let cold = DIteration::cyclic().solve(&new, &opts_tight).unwrap();
+    assert!(
+        warm.cost < cold.cost,
+        "warm {} vs cold {}",
+        warm.cost,
+        cold.cost
+    );
+}
+
+#[test]
+fn distributed_warm_restart_via_v2() {
+    // each PID rebases its slice locally (no synchronization) and the V2
+    // run on the correction system lands on the new limit
+    let (p_old, p_new) = paper_problems();
+    let opts = SolveOptions {
+        tol: 0.0,
+        max_cost: 5.0,
+        trace_every: 0.0,
+        exact: None,
+    };
+    let h = DIteration::cyclic().solve(&p_old, &opts).unwrap().x;
+    // per-PID local rebase (slice API), then assemble B'
+    let part = Partition::contiguous(4, 2).unwrap();
+    let mut b_prime = vec![0.0; 4];
+    for k in 0..part.k() {
+        let slice = update::rebase_b_slice(p_new.matrix(), part.part(k), &h, p_new.b());
+        for (t, &i) in part.part(k).iter().enumerate() {
+            b_prime[i] = slice[t];
+        }
+    }
+    let sub = FixedPointProblem::new(p_new.matrix().clone(), b_prime).unwrap();
+    let cfg = DistributedConfig::new(part).with_tol(1e-12);
+    let sol = v2::solve_v2(&sub, &cfg).unwrap();
+    assert!(sol.converged);
+    let x: Vec<f64> = h.iter().zip(&sol.x).map(|(a, b)| a + b).collect();
+    let exact_new = p_new.exact_solution().unwrap();
+    assert!(dist_inf(&x, &exact_new) < 1e-9);
+}
+
+#[test]
+fn repeated_updates_chain() {
+    // A → A' → back to A: two §3.2 rebases in sequence stay exact
+    let (p_a, p_b) = paper_problems();
+    let opts = SolveOptions {
+        tol: 1e-13,
+        max_cost: 10_000.0,
+        trace_every: 0.0,
+        exact: None,
+    };
+    // converge on A
+    let x_a = DIteration::cyclic().solve(&p_a, &opts).unwrap().x;
+    // rebase to A', converge
+    let b1 = update::rebase_b(p_b.matrix(), &x_a, p_b.b()).unwrap();
+    let sub1 = FixedPointProblem::new(p_b.matrix().clone(), b1).unwrap();
+    let y1 = DIteration::cyclic().solve(&sub1, &opts).unwrap().x;
+    let x_b: Vec<f64> = x_a.iter().zip(&y1).map(|(a, b)| a + b).collect();
+    assert!(dist_inf(&x_b, &p_b.exact_solution().unwrap()) < 1e-10);
+    // rebase back to A, converge
+    let b2 = update::rebase_b(p_a.matrix(), &x_b, p_a.b()).unwrap();
+    let sub2 = FixedPointProblem::new(p_a.matrix().clone(), b2).unwrap();
+    let y2 = DIteration::cyclic().solve(&sub2, &opts).unwrap().x;
+    let x_back: Vec<f64> = x_b.iter().zip(&y2).map(|(a, b)| a + b).collect();
+    assert!(dist_inf(&x_back, &p_a.exact_solution().unwrap()) < 1e-10);
+}

@@ -1,0 +1,215 @@
+//! Integration: the PJRT runtime executing the AOT artifacts vs the pure
+//! rust reference implementations — the cross-layer correctness signal
+//! (L1 Pallas kernel ≡ L2 jax graph ≡ L3 rust oracle).
+//!
+//! Gated on `artifacts/manifest.txt` (produced by `make artifacts`); every
+//! test no-ops with a notice when artifacts are absent so plain
+//! `cargo test` stays green.
+
+use diter::graph::paper_matrix;
+use diter::linalg::vec_ops::{dist1, norm1};
+use diter::prng::Xoshiro256pp;
+use diter::runtime::{DenseAccelerator, Runtime};
+use diter::solver::FixedPointProblem;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !Runtime::artifacts_available() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load_default().expect("runtime loads"))
+}
+
+fn a1_problem() -> FixedPointProblem {
+    FixedPointProblem::from_linear_system(&paper_matrix(1), &[1.0; 4]).unwrap()
+}
+
+/// rust oracle for the sweep the kernel implements.
+fn sweep_ref(p_rows: &[f64], idx: &[i32], h: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+    let mut out = h.to_vec();
+    for (t, &i) in idx.iter().enumerate() {
+        let row = &p_rows[t * n..(t + 1) * n];
+        let dot: f64 = row.iter().zip(out.iter()).map(|(a, b)| a * b).sum();
+        out[i as usize] = dot + b[t];
+    }
+    out
+}
+
+#[test]
+fn manifest_lists_every_program_kind() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for kind in [
+        "d_sweep",
+        "d_round",
+        "fluid_norm",
+        "jacobi_step",
+        "power_step",
+        "pagerank_step",
+    ] {
+        assert!(
+            !rt.manifest().shapes_of(kind).is_empty(),
+            "missing artifacts for {kind}"
+        );
+    }
+}
+
+#[test]
+fn d_sweep_2x4_matches_rust_oracle() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let problem = a1_problem();
+    let owned = [0usize, 1];
+    let p_rows = problem.matrix().csr().dense_row_block(&owned);
+    let idx = [0i32, 1];
+    let h = problem.b().to_vec();
+    let b: Vec<f64> = owned.iter().map(|&i| problem.b()[i]).collect();
+    let got = rt.d_sweep(2, 4, &p_rows, &idx, &h, &b).unwrap();
+    let want = sweep_ref(&p_rows, &idx, &h, &b, 4);
+    assert!(dist1(&got, &want) < 1e-13, "Δ = {}", dist1(&got, &want));
+}
+
+#[test]
+fn d_sweep_random_shapes_match_oracle() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Xoshiro256pp::seed_from_u64(99);
+    for &(m, n) in &[(4usize, 4usize), (32, 128), (64, 256)] {
+        if rt.manifest().find("d_sweep", &[m, n]).is_none() {
+            continue;
+        }
+        let p_rows: Vec<f64> = (0..m * n).map(|_| rng.uniform(-0.01, 0.01)).collect();
+        let idx: Vec<i32> = rng
+            .sample_distinct(n, m)
+            .into_iter()
+            .map(|i| i as i32)
+            .collect();
+        let h: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let b: Vec<f64> = (0..m).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let got = rt.d_sweep(m, n, &p_rows, &idx, &h, &b).unwrap();
+        let want = sweep_ref(&p_rows, &idx, &h, &b, n);
+        assert!(
+            dist1(&got, &want) < 1e-10,
+            "shape {m}x{n}: Δ = {}",
+            dist1(&got, &want)
+        );
+    }
+}
+
+#[test]
+fn d_round_is_two_sweeps_plus_fluid() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let problem = a1_problem();
+    let owned = [2usize, 3];
+    let p_rows = problem.matrix().csr().dense_row_block(&owned);
+    let idx = [2i32, 3];
+    let h = problem.b().to_vec();
+    let b: Vec<f64> = owned.iter().map(|&i| problem.b()[i]).collect();
+    let (h2, fluid, rk) = rt.d_round(2, 4, &p_rows, &idx, &h, &b).unwrap();
+    // rust: two sequential sweeps
+    let want_h = sweep_ref(&p_rows, &idx, &sweep_ref(&p_rows, &idx, &h, &b, 4), &b, 4);
+    assert!(dist1(&h2, &want_h) < 1e-13);
+    // fluid = P_rows·H + B − H[idx]
+    for (t, &i) in owned.iter().enumerate() {
+        let row = &p_rows[t * 4..(t + 1) * 4];
+        let dot: f64 = row.iter().zip(&h2).map(|(a, b)| a * b).sum();
+        let want_f = dot + b[t] - h2[i];
+        assert!((fluid[t] - want_f).abs() < 1e-13);
+    }
+    assert!((rk - norm1(&fluid)).abs() < 1e-13);
+}
+
+#[test]
+fn jacobi_step_matches_rust() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let problem = a1_problem();
+    let p = problem.matrix().csr().to_dense();
+    let h = vec![0.1, 0.2, 0.3, 0.4];
+    let got = rt
+        .jacobi_step(4, p.data(), &h, problem.b())
+        .unwrap();
+    let mut want = problem.matrix().csr().matvec(&h).unwrap();
+    for i in 0..4 {
+        want[i] += problem.b()[i];
+    }
+    assert!(dist1(&got, &want) < 1e-13);
+}
+
+#[test]
+fn fluid_norm_matches_residual() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let problem = a1_problem();
+    let p = problem.matrix().csr().to_dense();
+    let h = vec![0.3, 0.1, 0.2, 0.5];
+    let got = rt.fluid_norm(4, p.data(), &h, problem.b()).unwrap();
+    let want = problem.residual_norm(&h);
+    assert!((got - want).abs() < 1e-13);
+}
+
+#[test]
+fn power_step_normalizes() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Xoshiro256pp::seed_from_u64(4);
+    let p: Vec<f64> = (0..16).map(|_| rng.uniform(0.0, 1.0)).collect();
+    let x = vec![0.25; 4];
+    let got = rt.power_step(4, &p, &x).unwrap();
+    assert!((norm1(&got) - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn pagerank_step_conserves_mass() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    if rt.manifest().find("pagerank_step", &[256]).is_none() {
+        return;
+    }
+    let n = 256;
+    let mut rng = Xoshiro256pp::seed_from_u64(8);
+    // column-stochastic dense S
+    let mut s = vec![0.0f64; n * n];
+    for j in 0..n {
+        let mut col: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let sum: f64 = col.iter().sum();
+        for v in col.iter_mut() {
+            *v /= sum;
+        }
+        for i in 0..n {
+            s[i * n + j] = col[i];
+        }
+    }
+    let x = vec![1.0 / n as f64; n];
+    let tp = vec![1.0 / n as f64; n];
+    let got = rt.pagerank_step(n, &s, &x, &tp, 0.85).unwrap();
+    assert!((got.iter().sum::<f64>() - 1.0).abs() < 1e-10);
+}
+
+#[test]
+fn dense_accelerator_full_solve_on_a1() {
+    // end-to-end: iterate the PJRT d_round program to convergence and
+    // compare with the LU oracle — the whole three-layer stack agrees.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let problem = a1_problem();
+    if rt.manifest().find("d_round", &[2, 4]).is_none() {
+        return;
+    }
+    let exact = problem.exact_solution().unwrap();
+    let acc0 = DenseAccelerator::prepare(&rt, &problem, &[0, 1]).unwrap();
+    let acc1 = DenseAccelerator::prepare(&rt, &problem, &[2, 3]).unwrap();
+    let mut h = problem.b().to_vec();
+    for _ in 0..60 {
+        // lockstep 2-PID protocol on the PJRT path: each accelerator
+        // updates its block (full-H view), then slices merge
+        let (h_a, _f, _r) = acc0.round(&mut rt, &h).unwrap();
+        let (h_b, _f, _r) = acc1.round(&mut rt, &h).unwrap();
+        h[0] = h_a[0];
+        h[1] = h_a[1];
+        h[2] = h_b[2];
+        h[3] = h_b[3];
+    }
+    assert!(dist1(&h, &exact) < 1e-12, "Δ = {}", dist1(&h, &exact));
+}
+
+#[test]
+fn accelerator_shape_mismatch_is_reported() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let problem = a1_problem();
+    // 3-row block has no compiled artifact
+    let err = DenseAccelerator::prepare(&rt, &problem, &[0, 1, 2]);
+    assert!(err.is_err());
+}

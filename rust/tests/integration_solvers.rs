@@ -1,0 +1,217 @@
+//! Integration: all sequential solvers agree with each other, with the
+//! direct LU oracle, and with the paper's worked examples.
+
+use diter::graph::{
+    block_coupled_matrix, pagerank_reference, pagerank_system, paper_matrix,
+    power_law_web_graph,
+};
+use diter::linalg::vec_ops::{dist1, dist_inf, norm1};
+use diter::linalg::DenseMat;
+use diter::solver::{
+    ConvergenceBound, DIteration, DIterationVariant, FixedPointProblem, GaussSeidel, Jacobi,
+    PowerIteration, SequenceKind, SolveOptions, Solver, Sor,
+};
+use diter::sparse::{diag_eliminate, CsrMatrix, SparseMatrix};
+
+fn all_solvers() -> Vec<Box<dyn Solver>> {
+    vec![
+        Box::new(Jacobi::new()),
+        Box::new(GaussSeidel::new()),
+        Box::new(Sor::new(0.9)),
+        Box::new(DIteration::cyclic()),
+        Box::new(DIteration::fluid_cyclic()),
+        Box::new(DIteration::greedy()),
+        Box::new(DIteration {
+            sequence: SequenceKind::Random,
+            variant: DIterationVariant::HForm,
+            seed: 3,
+        }),
+    ]
+}
+
+#[test]
+fn every_solver_agrees_with_lu_on_paper_matrices() {
+    for which in 1..=4u8 {
+        let problem =
+            FixedPointProblem::from_linear_system(&paper_matrix(which), &[1.0; 4]).unwrap();
+        let exact = problem.exact_solution().unwrap();
+        for solver in all_solvers() {
+            let sol = solver.solve(&problem, &SolveOptions::default()).unwrap();
+            assert!(sol.converged, "A({which}) / {}", solver.name());
+            assert!(
+                dist_inf(&sol.x, &exact) < 1e-9,
+                "A({which}) / {}: dist {}",
+                solver.name(),
+                dist_inf(&sol.x, &exact)
+            );
+        }
+    }
+}
+
+#[test]
+fn every_solver_agrees_on_random_block_systems() {
+    for seed in [1u64, 2, 3] {
+        let p = block_coupled_matrix(48, 4, 0.45, 0.2, 4, seed);
+        let problem =
+            FixedPointProblem::new(SparseMatrix::from_csr(p), vec![1.0; 48]).unwrap();
+        let exact = problem.exact_solution().unwrap();
+        for solver in all_solvers() {
+            let opts = SolveOptions {
+                tol: 1e-11,
+                max_cost: 100_000.0,
+                trace_every: 0.0,
+                exact: None,
+            };
+            let sol = solver.solve(&problem, &opts).unwrap();
+            assert!(sol.converged, "seed {seed} / {}", solver.name());
+            assert!(
+                dist_inf(&sol.x, &exact) < 1e-8,
+                "seed {seed} / {}",
+                solver.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn diteration_beats_jacobi_cost_on_every_paper_matrix() {
+    // the headline qualitative claim of Fig 1–3: D-iteration ≤ GS < Jacobi
+    for which in 1..=3u8 {
+        let problem =
+            FixedPointProblem::from_linear_system(&paper_matrix(which), &[1.0; 4]).unwrap();
+        let opts = SolveOptions {
+            tol: 1e-10,
+            ..Default::default()
+        };
+        let di = DIteration::cyclic().solve(&problem, &opts).unwrap();
+        let gs = GaussSeidel::new().solve(&problem, &opts).unwrap();
+        let ja = Jacobi::new().solve(&problem, &opts).unwrap();
+        assert!(di.cost <= gs.cost, "A({which})");
+        assert!(gs.cost < ja.cost, "A({which})");
+    }
+}
+
+#[test]
+fn greedy_no_worse_than_cyclic_on_skewed_fluid() {
+    // a system where one coordinate dominates the fluid: greedy should not
+    // lose (in updates) vs cyclic
+    let mut m = DenseMat::zeros(16, 16);
+    for i in 1..16 {
+        m[(i, 0)] = 0.45; // everything depends on coordinate 0
+        m[(0, i)] = 0.02;
+    }
+    let problem = FixedPointProblem::new(SparseMatrix::from_dense(&m), vec![1.0; 16]).unwrap();
+    let opts = SolveOptions {
+        tol: 1e-11,
+        max_cost: 10_000.0,
+        trace_every: 0.0,
+        exact: None,
+    };
+    let greedy = DIteration::greedy().solve(&problem, &opts).unwrap();
+    let cyclic = DIteration::fluid_cyclic().solve(&problem, &opts).unwrap();
+    assert!(greedy.converged && cyclic.converged);
+    assert!(greedy.cost <= cyclic.cost * 1.5);
+}
+
+#[test]
+fn pagerank_diteration_matches_power_iteration() {
+    let g = power_law_web_graph(800, 6, 0.12, 21);
+    let sys = pagerank_system(&g, 0.85, true).unwrap();
+    let problem = FixedPointProblem::new(sys.matrix.clone(), sys.b.clone()).unwrap();
+    let di = DIteration::fluid_cyclic()
+        .solve(
+            &problem,
+            &SolveOptions {
+                tol: 1e-13,
+                max_cost: 10_000.0,
+                trace_every: 0.0,
+                exact: None,
+            },
+        )
+        .unwrap();
+    assert!(di.converged);
+    let pr = pagerank_reference(&sys, 1e-14, 20_000);
+    assert!(dist1(&di.x, &pr) < 1e-9);
+    assert!((norm1(&di.x) - 1.0).abs() < 1e-9, "probability mass");
+
+    // eigenvector route (§1's Q.X = X): power iteration on d·S̄ runs fine
+    let power = PowerIteration::default().run(&sys.matrix, None, None);
+    assert!(power.is_ok());
+}
+
+#[test]
+fn convergence_bound_is_sound_during_solve() {
+    let g = power_law_web_graph(300, 5, 0.1, 5);
+    let sys = pagerank_system(&g, 0.85, true).unwrap();
+    let problem = FixedPointProblem::new(sys.matrix.clone(), sys.b.clone()).unwrap();
+    let exact = DIteration::fluid_cyclic()
+        .solve(
+            &problem,
+            &SolveOptions {
+                tol: 1e-15,
+                max_cost: 100_000.0,
+                trace_every: 0.0,
+                exact: None,
+            },
+        )
+        .unwrap()
+        .x;
+    let bound = ConvergenceBound::for_matrix(problem.matrix(), Some(0.85));
+    for budget in [2.0, 4.0, 8.0] {
+        let sol = DIteration::cyclic()
+            .solve(
+                &problem,
+                &SolveOptions {
+                    tol: 0.0,
+                    max_cost: budget,
+                    trace_every: 0.0,
+                    exact: None,
+                },
+            )
+            .unwrap();
+        let d = dist1(&sol.x, &exact);
+        let bd = bound.distance(problem.residual_norm(&sol.x));
+        assert!(d <= bd * (1.0 + 1e-9), "budget {budget}: {d} > {bd}");
+    }
+}
+
+#[test]
+fn diag_elimination_then_solve_matches_original() {
+    // build a system WITH diagonal entries, eliminate, solve, compare
+    let m = DenseMat::from_rows(&[
+        &[0.3, 0.2, 0.1],
+        &[0.05, 0.4, 0.1],
+        &[0.1, 0.1, 0.2],
+    ]);
+    let b = vec![1.0, -2.0, 0.5];
+    let original = FixedPointProblem::new(SparseMatrix::from_dense(&m), b.clone()).unwrap();
+    let exact = original.exact_solution().unwrap();
+
+    let elim = diag_eliminate(&CsrMatrix::from_dense(&m)).unwrap();
+    let b2: Vec<f64> = b.iter().zip(&elim.scale).map(|(x, s)| x * s).collect();
+    let transformed =
+        FixedPointProblem::new(SparseMatrix::from_csr(elim.matrix.clone()), b2).unwrap();
+    let sol = DIteration::cyclic()
+        .solve(&transformed, &SolveOptions::default())
+        .unwrap();
+    assert!(sol.converged);
+    assert!(dist_inf(&sol.x, &exact) < 1e-10);
+}
+
+#[test]
+fn traces_record_error_against_exact() {
+    let problem = FixedPointProblem::from_linear_system(&paper_matrix(2), &[1.0; 4]).unwrap();
+    let exact = problem.exact_solution().unwrap();
+    let opts = SolveOptions {
+        exact: Some(exact.clone()),
+        tol: 1e-12,
+        ..Default::default()
+    };
+    let sol = DIteration::cyclic().solve(&problem, &opts).unwrap();
+    assert!(sol.trace.points.len() > 3);
+    // final trace point ≈ final true distance
+    let last = sol.trace.points.last().unwrap();
+    assert!((last.error - dist1(&sol.x, &exact)).abs() < 1e-12);
+    // the time-to-tolerance helper works
+    assert!(sol.trace.cost_to_reach(1e-6).is_some());
+}

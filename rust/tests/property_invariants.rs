@@ -1,0 +1,245 @@
+//! Property tests over randomized inputs (via the in-crate `prop`
+//! framework): the algebraic invariants the whole system rests on.
+
+use diter::coordinator::{update, v2, DistributedConfig};
+use diter::linalg::vec_ops::{dist1, dist_inf, norm1};
+use diter::partition::Partition;
+use diter::prop::{run_cases, Gen};
+use diter::solver::{
+    DIteration, FixedPointProblem, GaussSeidel, Jacobi, SolveOptions, Solver,
+};
+use diter::sparse::{diag_eliminate, SparseMatrix};
+
+fn random_problem(g: &mut Gen, n: usize) -> FixedPointProblem {
+    let m = g.contraction_matrix(n, 3.min(n), 0.85);
+    let b = g.vec_f64(n, -2.0, 2.0);
+    FixedPointProblem::new(SparseMatrix::from_csr(m), b).unwrap()
+}
+
+/// eq. (4): H + F = F₀ + P·H after every diffusion step, any sequence.
+#[test]
+fn prop_eq4_invariant_under_random_sequences() {
+    run_cases(40, 0xE41, |g| {
+        let n = g.usize_in(2, 24);
+        let problem = random_problem(g, n);
+        let mut h = vec![0.0; n];
+        let mut f = problem.b().to_vec();
+        let steps = g.usize_in(1, 4 * n);
+        for _ in 0..steps {
+            let i = g.usize_in(0, n - 1);
+            DIteration::diffuse_once(&problem, &mut h, &mut f, i);
+        }
+        let ph = problem.matrix().csr().matvec(&h).unwrap();
+        for j in 0..n {
+            let lhs = h[j] + f[j];
+            let rhs = problem.b()[j] + ph[j];
+            assert!(
+                (lhs - rhs).abs() < 1e-11,
+                "eq4 violated at {j}: {lhs} vs {rhs}"
+            );
+        }
+    });
+}
+
+/// All solvers converge to the same fixed point on random contractions.
+#[test]
+fn prop_solver_agreement() {
+    run_cases(15, 0xA9EE, |g| {
+        let n = g.usize_in(2, 20);
+        let problem = random_problem(g, n);
+        let exact = problem.exact_solution().unwrap();
+        let opts = SolveOptions {
+            tol: 1e-12,
+            max_cost: 50_000.0,
+            trace_every: 0.0,
+            exact: None,
+        };
+        for solver in [
+            &Jacobi::new() as &dyn Solver,
+            &GaussSeidel::new(),
+            &DIteration::cyclic(),
+            &DIteration::fluid_cyclic(),
+        ] {
+            let sol = solver.solve(&problem, &opts).unwrap();
+            assert!(sol.converged, "{}", solver.name());
+            assert!(
+                dist_inf(&sol.x, &exact) < 1e-8,
+                "{} diverged: {}",
+                solver.name(),
+                dist_inf(&sol.x, &exact)
+            );
+        }
+    });
+}
+
+/// The distributed V2 scheme computes the sequential fixed point for any
+/// random partition.
+#[test]
+fn prop_v2_any_partition_matches_exact() {
+    run_cases(10, 0xD157, |g| {
+        let n = g.usize_in(6, 36);
+        let problem = random_problem(g, n);
+        let exact = problem.exact_solution().unwrap();
+        let k = g.usize_in(1, 4.min(n));
+        // random owner map with all parts non-empty
+        let owner: Vec<usize> = (0..n).map(|i| i % k).collect();
+        let perm = g.permutation(n);
+        let owner: Vec<usize> = perm.iter().map(|&i| owner[i]).collect();
+        let partition = Partition::from_owner(owner, k).unwrap();
+        partition.validate().unwrap();
+        let cfg = DistributedConfig::new(partition).with_tol(1e-11);
+        let sol = v2::solve_v2(&problem, &cfg).unwrap();
+        assert!(sol.converged, "k={k} n={n} residual={}", sol.residual);
+        assert!(dist_inf(&sol.x, &exact) < 1e-8);
+    });
+}
+
+/// Partitions: split/merge preserve the exact-cover invariant.
+#[test]
+fn prop_partition_split_merge_cover() {
+    run_cases(60, 0x9A27, |g| {
+        let n = g.usize_in(4, 60);
+        let k = g.usize_in(1, n.min(6));
+        let mut part = Partition::contiguous(n, k).unwrap();
+        for _ in 0..g.usize_in(0, 6) {
+            if g.bool() {
+                let target = g.usize_in(0, part.k() - 1);
+                if part.part(target).len() >= 2 {
+                    part = part.split_part(target).unwrap();
+                }
+            } else if part.k() >= 2 {
+                let a = g.usize_in(0, part.k() - 1);
+                let b = g.usize_in(0, part.k() - 1);
+                if a != b {
+                    part = part.merge_parts(a, b).unwrap();
+                }
+            }
+            part.validate().unwrap();
+        }
+    });
+}
+
+/// CSR ↔ CSC ↔ dense round-trips are lossless.
+#[test]
+fn prop_sparse_roundtrips() {
+    run_cases(50, 0x5BA2, |g| {
+        let n = g.usize_in(1, 30);
+        let m = g.contraction_matrix(n, 3.min(n), 0.9);
+        let via_csc = m.to_csc().to_csr();
+        assert_eq!(m.to_dense(), via_csc.to_dense());
+        let via_dense = diter::sparse::CsrMatrix::from_dense(&m.to_dense());
+        assert_eq!(m.to_dense(), via_dense.to_dense());
+        // matvec consistency
+        let x = g.vec_f64(n, -1.0, 1.0);
+        let a = m.matvec(&x).unwrap();
+        let b = m.to_dense().matvec(&x).unwrap();
+        assert!(dist1(&a, &b) < 1e-12);
+    });
+}
+
+/// Diagonal elimination never changes the fixed point.
+#[test]
+fn prop_diag_elimination_fixed_point() {
+    run_cases(30, 0xD1A6, |g| {
+        let n = g.usize_in(2, 16);
+        // contraction + random sub-unit diagonal
+        let base = g.contraction_matrix(n, 3.min(n), 0.6);
+        let mut t = diter::sparse::TripletBuilder::new(n, n);
+        for i in 0..n {
+            let (idx, val) = base.row(i);
+            for k in 0..idx.len() {
+                t.push(i, idx[k], val[k]);
+            }
+            if g.chance(0.7) {
+                t.push(i, i, g.f64_in(0.0, 0.3));
+            }
+        }
+        let with_diag = t.to_csr();
+        let b = g.vec_f64(n, -1.0, 1.0);
+        let original =
+            FixedPointProblem::new(SparseMatrix::from_csr(with_diag.clone()), b.clone())
+                .unwrap();
+        let exact = original.exact_solution().unwrap();
+        let elim = diag_eliminate(&with_diag).unwrap();
+        let b2: Vec<f64> = b.iter().zip(&elim.scale).map(|(x, s)| x * s).collect();
+        let transformed =
+            FixedPointProblem::new(SparseMatrix::from_csr(elim.matrix), b2).unwrap();
+        let x2 = transformed.exact_solution().unwrap();
+        assert!(dist_inf(&exact, &x2) < 1e-9);
+    });
+}
+
+/// §3.2 rebase: warm continuation equals the cold solution of P'.
+#[test]
+fn prop_rebase_equals_cold_start() {
+    run_cases(15, 0x3B2, |g| {
+        let n = g.usize_in(2, 16);
+        let old = random_problem(g, n);
+        let new = random_problem(g, n);
+        // partial progress on old
+        let opts = SolveOptions {
+            tol: 0.0,
+            max_cost: g.usize_in(0, 8) as f64,
+            trace_every: 0.0,
+            exact: None,
+        };
+        let h = DIteration::cyclic().solve(&old, &opts).unwrap().x;
+        let b_prime = update::rebase_b(new.matrix(), &h, new.b()).unwrap();
+        let sub = FixedPointProblem::new(new.matrix().clone(), b_prime).unwrap();
+        let tight = SolveOptions {
+            tol: 1e-13,
+            max_cost: 50_000.0,
+            trace_every: 0.0,
+            exact: None,
+        };
+        let y = DIteration::cyclic().solve(&sub, &tight).unwrap().x;
+        let x: Vec<f64> = h.iter().zip(&y).map(|(a, b)| a + b).collect();
+        let exact = new.exact_solution().unwrap();
+        assert!(dist_inf(&x, &exact) < 1e-8);
+    });
+}
+
+/// Fluid-form residual ‖F‖₁ equals the directly-computed remaining fluid.
+#[test]
+fn prop_fluid_norm_equals_residual() {
+    run_cases(40, 0xF1, |g| {
+        let n = g.usize_in(2, 20);
+        let problem = random_problem(g, n);
+        let mut h = vec![0.0; n];
+        let mut f = problem.b().to_vec();
+        for _ in 0..g.usize_in(0, 3 * n) {
+            let i = g.usize_in(0, n - 1);
+            DIteration::diffuse_once(&problem, &mut h, &mut f, i);
+        }
+        assert!((norm1(&f) - problem.residual_norm(&h)).abs() < 1e-11);
+    });
+}
+
+/// PageRank-style mass conservation: for non-negative P with column sums
+/// ≤ d and non-negative B, total H+F mass obeys the §4.4 accounting.
+#[test]
+fn prop_pagerank_bound_validity() {
+    run_cases(10, 0xB0B, |g| {
+        let n = g.usize_in(10, 60);
+        let graph = diter::graph::power_law_web_graph(n, 4, 0.15, g.case_seed);
+        let sys = diter::graph::pagerank_system(&graph, 0.85, true).unwrap();
+        let problem = FixedPointProblem::new(sys.matrix.clone(), sys.b.clone()).unwrap();
+        let tight = SolveOptions {
+            tol: 1e-14,
+            max_cost: 100_000.0,
+            trace_every: 0.0,
+            exact: None,
+        };
+        let exact = DIteration::fluid_cyclic().solve(&problem, &tight).unwrap().x;
+        let budget = SolveOptions {
+            tol: 0.0,
+            max_cost: g.usize_in(1, 10) as f64,
+            trace_every: 0.0,
+            exact: None,
+        };
+        let partial = DIteration::fluid_cyclic().solve(&problem, &budget).unwrap();
+        let bound = partial.residual / (1.0 - 0.85);
+        let dist = dist1(&partial.x, &exact);
+        assert!(dist <= bound * (1.0 + 1e-9), "dist {dist} > bound {bound}");
+    });
+}
