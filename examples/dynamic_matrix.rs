@@ -26,7 +26,7 @@ fn mutate(g: &Digraph, rng: &mut Xoshiro256pp, edits: usize) -> Digraph {
     Digraph::from_edges(n, edges)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n = 5_000;
     let damping = 0.85;
     let tight = SolveOptions {
@@ -74,7 +74,9 @@ fn main() -> anyhow::Result<()> {
         );
         // verify both routes agree
         let delta = dist1(&warm_x, &cold.x);
-        anyhow::ensure!(delta < 1e-6, "warm and cold disagree: {delta}");
+        if !(delta.is_finite() && delta < 1e-6) {
+            return Err(format!("warm and cold disagree: {delta}").into());
+        }
         problem = new_problem;
         h = warm_x;
     }

@@ -19,7 +19,7 @@ use diter::metrics::Stopwatch;
 use diter::partition::Partition;
 use diter::solver::{ConvergenceBound, FixedPointProblem, SequenceKind};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().collect();
     let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(50_000);
     let k: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
@@ -87,7 +87,9 @@ fn main() -> anyhow::Result<()> {
     println!("\n-- verification --");
     println!("sequential power-style reference: {seq_wall:.3} s");
     println!("‖x_distributed − x_reference‖₁ = {delta:.3e}");
-    anyhow::ensure!(delta < 1e-6, "distributed result disagrees with reference");
+    if !(delta.is_finite() && delta < 1e-6) {
+        return Err(format!("distributed result disagrees with reference: {delta}").into());
+    }
 
     let mut ranked: Vec<(usize, f64)> = sol.x.iter().copied().enumerate().collect();
     ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());

@@ -10,7 +10,7 @@ use diter::linalg::vec_ops::dist_inf;
 use diter::partition::Partition;
 use diter::solver::{DIteration, FixedPointProblem, SolveOptions, Solver};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // the paper's A(1) (§5.1): two independent 2x2 blocks
     let a = paper_matrix(1);
     let problem = FixedPointProblem::from_linear_system(&a, &[1.0; 4])?;

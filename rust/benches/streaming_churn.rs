@@ -1,0 +1,110 @@
+//! Bench: the streaming engine under sustained churn — steady-state
+//! updates/sec and time-to-reconverge per mutation batch, against a full
+//! V2 restart on every batch (the baseline an offline system pays).
+//!
+//! Expected shape: warm rebases cost a small fraction of a cold solve for
+//! small batches (the §3.2 claim at scale), and the gap narrows as the
+//! batch size grows towards rewriting the whole graph.
+
+use std::time::Duration;
+
+use diter::bench_harness::{bench_header, fmt_secs, Table};
+use diter::coordinator::{v2, DistributedConfig, StreamingEngine};
+use diter::graph::{power_law_web_graph, ChurnModel, MutableDigraph, MutationStream};
+use diter::partition::Partition;
+use diter::solver::SequenceKind;
+
+fn main() {
+    bench_header(
+        "streaming_churn",
+        "warm rebase vs cold restart under churn (web graph, V2, K=4)",
+    );
+    let n = std::env::var("DITER_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10_000usize);
+    let k = 4usize;
+    let tol = 1e-9;
+    let batches_per_size = 3usize;
+
+    let g = power_law_web_graph(n, 8, 0.1, 7);
+    println!("graph: {} nodes, {} edges; tol {tol:.0e}\n", g.n(), g.m());
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let mut cfg = DistributedConfig::new(Partition::contiguous(n, k).unwrap())
+        .with_tol(tol)
+        .with_seed(5)
+        .with_sequence(SequenceKind::GreedyMaxFluid);
+    cfg.max_wall = Duration::from_secs(300);
+    let cold_cfg = cfg.clone();
+
+    let mut engine = StreamingEngine::new(mg, 0.85, true, cfg).expect("engine");
+    let init = engine.converge().expect("initial solve");
+    assert!(init.solution.converged, "initial solve must converge");
+    println!(
+        "initial solve: {} updates, {} ({:.2e} upd/s)\n",
+        init.solution.total_updates,
+        fmt_secs(init.solution.wall_secs),
+        init.solution.total_updates as f64 / init.solution.wall_secs.max(1e-9)
+    );
+
+    let mut table = Table::new(&[
+        "batch-size",
+        "model",
+        "reconverge",
+        "warm-upd",
+        "cold-wall",
+        "cold-upd",
+        "upd-saving",
+        "steady-upd/s",
+    ]);
+    let mut stream = MutationStream::new(ChurnModel::RandomRewire, 31);
+    let mut burst = MutationStream::new(ChurnModel::HotSpotBurst { burst: 64 }, 37);
+
+    for &batch_size in &[16usize, 64, 256, 1024] {
+        let mut warm_wall = 0.0f64;
+        let mut warm_upd = 0u64;
+        let mut cold_wall = 0.0f64;
+        let mut cold_upd = 0u64;
+        for b in 0..batches_per_size {
+            let batch = if b == batches_per_size - 1 {
+                burst.next_batch(engine.graph(), batch_size)
+            } else {
+                stream.next_batch(engine.graph(), batch_size)
+            };
+            let report = engine.apply_batch(&batch).expect("apply");
+            assert!(
+                report.solution.converged,
+                "batch size {batch_size}: residual {:.3e}",
+                report.solution.residual
+            );
+            warm_wall += report.solution.wall_secs;
+            warm_upd += report.solution.total_updates;
+            let cold = v2::solve_v2(engine.problem(), &cold_cfg).expect("cold");
+            assert!(cold.converged);
+            cold_wall += cold.wall_secs;
+            cold_upd += cold.total_updates;
+        }
+        let inv = 1.0 / batches_per_size as f64;
+        table.row(&[
+            batch_size.to_string(),
+            "rewire+burst".into(),
+            fmt_secs(warm_wall * inv),
+            (warm_upd / batches_per_size as u64).to_string(),
+            fmt_secs(cold_wall * inv),
+            (cold_upd / batches_per_size as u64).to_string(),
+            format!("{:.1}x", cold_upd as f64 / warm_upd.max(1) as f64),
+            format!("{:.2e}", engine.steady_updates_per_sec()),
+        ]);
+    }
+    print!("{}", table.render());
+
+    let summary = engine.finish().expect("finish");
+    println!(
+        "\n{} epochs, {} mutations; whole-run mean {:.2e} upd/s; final residual {:.2e}",
+        summary.epochs,
+        summary.mutations_applied,
+        summary.steady_updates_per_sec,
+        summary.final_solution.residual
+    );
+    println!("(reconverge = mean wall-clock from batch application to total fluid < tol)");
+}

@@ -15,15 +15,20 @@
 //!
 //! [`sim`] contains a deterministic lockstep simulator of both schemes
 //! used to regenerate the paper's figures (same protocol, reproducible
-//! interleaving), and [`update`] implements the §3.2 live matrix-evolution
-//! rebase `B' = F + (P'−P)·H`.
+//! interleaving), [`update`] implements the §3.2 live matrix-evolution
+//! rebase `B' = F + (P'−P)·H`, and [`stream`] builds on it: a long-running
+//! [`stream::StreamingEngine`] that keeps the V2 workers diffusing across
+//! graph-mutation epochs instead of restarting.
 
 pub mod adaptive;
 pub mod monitor;
 pub mod sim;
+pub mod stream;
 pub mod update;
 pub mod v1;
 pub mod v2;
+
+pub use stream::{EpochReport, StreamSummary, StreamingEngine};
 
 use std::collections::BTreeMap;
 use std::time::Duration;

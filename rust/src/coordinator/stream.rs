@@ -1,0 +1,912 @@
+//! Streaming D-iteration engine: a long-running incremental solve that
+//! keeps V2 fluid workers diffusing while the graph mutates underneath
+//! them — §3.2's live matrix evolution promoted from a pair of free
+//! functions to a subsystem.
+//!
+//! ## Epoch / rebase protocol
+//!
+//! The engine owns one persistent worker thread per PID (the same
+//! partial-state fluid scheme as [`super::v2`]) plus a coordinator-side
+//! control channel. Applying a mutation batch advances an **epoch**:
+//!
+//! 1. **Checkpoint** — each worker is asked to pause; it replies with its
+//!    owned history slice `H_k` and waits. Any H snapshot is a valid
+//!    rebase point: the §3.2 identity `B' = P'·H + B − H` holds for
+//!    *whatever* H the computation has reached, converged or not.
+//! 2. **Rebuild** — the mutated [`MutableDigraph`] re-derives the
+//!    column-renormalized PageRank system `(P', B)`.
+//! 3. **Rebase + scatter** — the coordinator assembles the full H,
+//!    computes each PID's slice of the new fluid `F' = B' = P'·H + B − H`
+//!    via [`update::rebase_b_slice`] (the per-PID form: only the PID's
+//!    rows of P' are read), and resumes every worker with its slice.
+//!    Workers keep their H — **the computation never restarts**.
+//! 4. **Converge** — workers diffuse under the new matrix until the
+//!    monitored total fluid drops below tolerance.
+//!
+//! ## No bus draining
+//!
+//! Fluid parcels are tagged with their epoch. The rebase does **not** wait
+//! for the bus to empty: B' is a function of H alone, so every parcel
+//! from an older epoch is obsolete by construction — receivers discard it
+//! on arrival and commit its mass so the global in-flight account clears.
+//! Parcels from a *newer* epoch (a peer resumed first) are stashed
+//! uncommitted and applied once the local epoch catches up, so no
+//! new-epoch fluid is ever lost and the monitor can never observe an
+//! under-count.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::update;
+use super::{DistributedConfig, DistributedSolution};
+use crate::error::{DiterError, Result};
+use crate::graph::{MutableDigraph, Mutation};
+use crate::linalg::vec_ops::norm1;
+use crate::metrics::{ConvergenceTrace, MetricSet, RateMeter};
+use crate::partition::Partition;
+use crate::solver::{FixedPointProblem, GreedyQueue, SequenceKind, SequenceState};
+use crate::transport::{
+    bus, monitor_of, AtomicF64, BusConfig, BusMonitor, CoalesceBuffer, Endpoint, Received,
+};
+
+/// Epoch-tagged V2 fluid message.
+#[derive(Clone, Debug)]
+pub struct EpochFluid {
+    pub epoch: u64,
+    pub parcels: Vec<(usize, f64)>,
+}
+
+/// Coordinator → worker control messages.
+enum Ctrl {
+    /// Pause, reply with the owned H slice, wait for `Resume`.
+    Checkpoint { reply: Sender<(usize, Vec<f64>)> },
+    /// New epoch: swap the matrix, reset the fluid slice, keep H.
+    Resume {
+        epoch: u64,
+        problem: Arc<FixedPointProblem>,
+        f_slice: Vec<f64>,
+    },
+    /// Non-pausing read of the owned H slice (worker keeps running).
+    Snapshot { reply: Sender<(usize, Vec<f64>)> },
+    /// Terminate; the final H slice comes back through the join handle.
+    Shutdown,
+}
+
+/// Leader/worker shared state (the per-epoch convergence monitor's view).
+struct StreamShared {
+    /// per-PID published remaining fluid (local F + held coalesce mass)
+    published: Vec<AtomicF64>,
+    /// per-PID cumulative scalar-update counters
+    updates: Vec<AtomicU64>,
+}
+
+impl StreamShared {
+    fn new(k: usize) -> Arc<Self> {
+        Arc::new(Self {
+            published: (0..k).map(|_| AtomicF64::new(f64::INFINITY)).collect(),
+            updates: (0..k).map(|_| AtomicU64::new(0)).collect(),
+        })
+    }
+
+    fn published_total(&self) -> f64 {
+        self.published.iter().map(AtomicF64::get).sum()
+    }
+
+    fn update_counts(&self) -> Vec<u64> {
+        self.updates
+            .iter()
+            .map(|u| u.load(Ordering::Relaxed))
+            .collect()
+    }
+}
+
+/// Report for one epoch (one mutation batch, or the initial solve).
+#[derive(Clone, Debug)]
+pub struct EpochReport {
+    /// epoch id (0 = initial cold solve)
+    pub epoch: u64,
+    /// mutations that actually changed the graph this epoch
+    pub mutations_applied: usize,
+    /// the converged state, costed over THIS epoch only (updates, wall,
+    /// parallel cost and trace all restart at the rebase)
+    pub solution: DistributedSolution,
+}
+
+/// Summary returned by [`StreamingEngine::finish`].
+#[derive(Clone, Debug)]
+pub struct StreamSummary {
+    /// final assembled solution with whole-run cumulative counters
+    pub final_solution: DistributedSolution,
+    /// epochs completed (rebases + the initial solve)
+    pub epochs: u64,
+    /// total mutations that changed the graph
+    pub mutations_applied: u64,
+    /// EWMA steady-state updates/sec across epochs
+    pub steady_updates_per_sec: f64,
+}
+
+/// The streaming engine: owns the evolving graph, the persistent V2
+/// workers, and the epoch protocol.
+pub struct StreamingEngine {
+    graph: MutableDigraph,
+    damping: f64,
+    patch_dangling: bool,
+    cfg: DistributedConfig,
+    partition: Arc<Partition>,
+    problem: Arc<FixedPointProblem>,
+    shared: Arc<StreamShared>,
+    bus_mon: BusMonitor,
+    bus_metrics: Arc<MetricSet>,
+    ctrl: Vec<Sender<Ctrl>>,
+    handles: Vec<JoinHandle<(Vec<usize>, Vec<f64>)>>,
+    epoch: u64,
+    /// per-PID update counters at the current epoch's start
+    epoch_base: Vec<u64>,
+    epochs_done: u64,
+    mutations_applied: u64,
+    rate: RateMeter,
+}
+
+impl StreamingEngine {
+    /// Spawn the engine over `graph` (epoch 0 starts immediately from the
+    /// cold state `H = 0, F = B`; call [`StreamingEngine::converge`] to
+    /// wait for the initial solve). The partition in `cfg` must cover the
+    /// graph's coordinate capacity.
+    pub fn new(
+        graph: MutableDigraph,
+        damping: f64,
+        patch_dangling: bool,
+        cfg: DistributedConfig,
+    ) -> Result<StreamingEngine> {
+        let n = graph.n();
+        if cfg.partition.n() != n {
+            return Err(DiterError::shape("StreamingEngine partition", n, cfg.partition.n()));
+        }
+        let sys = graph.pagerank_system(damping, patch_dangling)?;
+        let problem = Arc::new(FixedPointProblem::new(sys.matrix, sys.b)?);
+        let k = cfg.partition.k();
+        let shared = StreamShared::new(k);
+        let (endpoints, bus_metrics) = bus::<EpochFluid>(
+            k,
+            &BusConfig {
+                latency: cfg.latency,
+                seed: cfg.seed,
+            },
+        );
+        let bus_mon = monitor_of(&endpoints[0]);
+        let partition = Arc::new(cfg.partition.clone());
+
+        let mut ctrl = Vec::with_capacity(k);
+        let mut handles = Vec::with_capacity(k);
+        for (kk, ep) in endpoints.into_iter().enumerate() {
+            let (tx, rx) = channel::<Ctrl>();
+            ctrl.push(tx);
+            let worker = StreamWorker::new(
+                kk,
+                ep,
+                rx,
+                problem.clone(),
+                partition.clone(),
+                shared.clone(),
+                cfg.clone(),
+            );
+            handles.push(std::thread::spawn(move || worker.run()));
+        }
+        Ok(StreamingEngine {
+            graph,
+            damping,
+            patch_dangling,
+            cfg,
+            partition,
+            problem,
+            shared,
+            bus_mon,
+            bus_metrics,
+            ctrl,
+            handles,
+            epoch: 0,
+            epoch_base: vec![0; k],
+            epochs_done: 0,
+            mutations_applied: 0,
+            rate: RateMeter::new(0.4),
+        })
+    }
+
+    /// The current epoch id.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Read-only view of the evolving graph.
+    pub fn graph(&self) -> &MutableDigraph {
+        &self.graph
+    }
+
+    /// The fixed-point system of the current epoch.
+    pub fn problem(&self) -> &FixedPointProblem {
+        &self.problem
+    }
+
+    /// EWMA steady-state updates/sec over completed epochs.
+    pub fn steady_updates_per_sec(&self) -> f64 {
+        self.rate.rate().unwrap_or(0.0)
+    }
+
+    /// Change the per-epoch convergence deadline (streaming deployments
+    /// often want a batch SLA rather than one global wall cap).
+    pub fn set_max_wall(&mut self, max_wall: Duration) {
+        self.cfg.max_wall = max_wall;
+    }
+
+    /// Apply a mutation batch: mutate the graph, rebase the running
+    /// computation onto the new matrix (without restarting it and without
+    /// draining the bus), then wait for reconvergence.
+    pub fn apply_batch(&mut self, batch: &[Mutation]) -> Result<EpochReport> {
+        let applied = batch.iter().filter(|m| self.graph.apply(m)).count();
+        self.mutations_applied += applied as u64;
+        if applied > 0 {
+            self.rebase()?;
+        }
+        let mut report = self.converge()?;
+        report.mutations_applied = applied;
+        Ok(report)
+    }
+
+    /// Wait for the current epoch to reach the configured tolerance and
+    /// return its report (epoch-scoped cost/wall/trace).
+    pub fn converge(&mut self) -> Result<EpochReport> {
+        let n = self.problem.n();
+        let t0 = Instant::now();
+        let deadline = t0 + self.cfg.max_wall;
+        let poll = Duration::from_micros(200);
+        let stable_needed = 3usize;
+        let mut stable = 0usize;
+        let mut converged = false;
+        let mut trace = ConvergenceTrace::new(format!("stream-epoch-{}", self.epoch));
+        loop {
+            let total = self.shared.published_total() + self.bus_mon.inflight_or_zero();
+            let cost = self.epoch_cost(n);
+            if total.is_finite() {
+                trace.push(cost, total);
+            }
+            // quiescence needs every sent parcel applied or discarded —
+            // stashed future-epoch parcels stay uncommitted, so a rebase
+            // racing this check can never fake convergence
+            if total < self.cfg.tol && self.bus_mon.undelivered() == 0 {
+                stable += 1;
+                if stable >= stable_needed {
+                    converged = true;
+                    break;
+                }
+            } else {
+                stable = 0;
+            }
+            if Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(poll);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let x = self.gather()?;
+        let residual = self.problem.residual_norm(&x);
+        let counts = self.shared.update_counts();
+        let epoch_updates: u64 = counts
+            .iter()
+            .zip(&self.epoch_base)
+            .map(|(now, base)| now - base)
+            .sum();
+        let cost = self.epoch_cost(n);
+        self.rate.record(epoch_updates, wall);
+        self.epochs_done += 1;
+        // subsequent converge() calls report from here
+        self.epoch_base = counts;
+        Ok(EpochReport {
+            epoch: self.epoch,
+            mutations_applied: 0,
+            solution: DistributedSolution {
+                residual,
+                converged: converged && residual <= self.cfg.tol * 10.0,
+                cost,
+                total_updates: epoch_updates,
+                wall_secs: wall,
+                trace,
+                metrics: self.bus_metrics.snapshot(),
+                x,
+            },
+        })
+    }
+
+    /// Assemble the current solution estimate without pausing the workers.
+    pub fn solution(&self) -> Result<Vec<f64>> {
+        self.gather()
+    }
+
+    /// Shut the workers down and return the whole-run summary.
+    pub fn finish(mut self) -> Result<StreamSummary> {
+        for tx in &self.ctrl {
+            let _ = tx.send(Ctrl::Shutdown);
+        }
+        self.ctrl.clear();
+        let n = self.problem.n();
+        let mut x = vec![0.0; n];
+        for h in self.handles.drain(..) {
+            let (owned, values) = h
+                .join()
+                .map_err(|_| DiterError::Coordinator("stream worker panicked".into()))?;
+            for (t, &i) in owned.iter().enumerate() {
+                x[i] = values[t];
+            }
+        }
+        let residual = self.problem.residual_norm(&x);
+        let counts = self.shared.update_counts();
+        let total_updates: u64 = counts.iter().sum();
+        let cost = counts.iter().copied().max().unwrap_or(0) as f64 / n as f64;
+        Ok(StreamSummary {
+            final_solution: DistributedSolution {
+                residual,
+                converged: residual <= self.cfg.tol * 10.0,
+                cost,
+                total_updates,
+                wall_secs: 0.0,
+                trace: ConvergenceTrace::new("stream-final"),
+                metrics: self.bus_metrics.snapshot(),
+                x,
+            },
+            epochs: self.epochs_done,
+            mutations_applied: self.mutations_applied,
+            steady_updates_per_sec: self.rate.rate().unwrap_or(0.0),
+        })
+    }
+
+    /// Parallel cost of the current epoch so far (max PID delta / N).
+    fn epoch_cost(&self, n: usize) -> f64 {
+        self.shared
+            .update_counts()
+            .iter()
+            .zip(&self.epoch_base)
+            .map(|(now, base)| now - base)
+            .max()
+            .unwrap_or(0) as f64
+            / n as f64
+    }
+
+    /// The epoch transition: checkpoint → rebuild → per-PID rebase →
+    /// resume. See the module docs for the protocol invariants.
+    fn rebase(&mut self) -> Result<()> {
+        let n = self.problem.n();
+        let k = self.partition.k();
+        // 1. checkpoint every worker (they pause as the requests land;
+        //    workers still running only produce old-epoch parcels, which
+        //    the new epoch discards on arrival)
+        let (tx, rx) = channel::<(usize, Vec<f64>)>();
+        for c in &self.ctrl {
+            c.send(Ctrl::Checkpoint { reply: tx.clone() })
+                .map_err(|_| DiterError::Coordinator("stream worker gone".into()))?;
+        }
+        drop(tx);
+        let mut h = vec![0.0; n];
+        for _ in 0..k {
+            let (kk, slice) = rx
+                .recv_timeout(Duration::from_secs(30))
+                .map_err(|_| DiterError::Coordinator("checkpoint reply timed out".into()))?;
+            for (t, &i) in self.partition.part(kk).iter().enumerate() {
+                h[i] = slice[t];
+            }
+        }
+        // 2. rebuild the system from the mutated graph
+        let sys = self.graph.pagerank_system(self.damping, self.patch_dangling)?;
+        let problem = Arc::new(FixedPointProblem::new(sys.matrix, sys.b)?);
+        // 3. per-PID rebase (only the PID's rows of P' are read) + resume
+        self.epoch += 1;
+        for (kk, c) in self.ctrl.iter().enumerate() {
+            let owned = self.partition.part(kk);
+            let f_slice = update::rebase_b_slice(problem.matrix(), owned, &h, problem.b());
+            // pre-publish so the monitor can't see a stale near-zero total
+            self.shared.published[kk].set(norm1(&f_slice));
+            c.send(Ctrl::Resume {
+                epoch: self.epoch,
+                problem: problem.clone(),
+                f_slice,
+            })
+            .map_err(|_| DiterError::Coordinator("stream worker gone".into()))?;
+        }
+        self.problem = problem;
+        self.epoch_base = self.shared.update_counts();
+        Ok(())
+    }
+
+    /// Gather the assembled H from all workers without pausing them.
+    fn gather(&self) -> Result<Vec<f64>> {
+        let n = self.problem.n();
+        let k = self.partition.k();
+        let (tx, rx) = channel::<(usize, Vec<f64>)>();
+        for c in &self.ctrl {
+            c.send(Ctrl::Snapshot { reply: tx.clone() })
+                .map_err(|_| DiterError::Coordinator("stream worker gone".into()))?;
+        }
+        drop(tx);
+        let mut x = vec![0.0; n];
+        for _ in 0..k {
+            let (kk, slice) = rx
+                .recv_timeout(Duration::from_secs(30))
+                .map_err(|_| DiterError::Coordinator("snapshot reply timed out".into()))?;
+            for (t, &i) in self.partition.part(kk).iter().enumerate() {
+                x[i] = slice[t];
+            }
+        }
+        Ok(x)
+    }
+}
+
+impl Drop for StreamingEngine {
+    fn drop(&mut self) {
+        // dropping the control senders terminates the worker loops; the
+        // threads unwind on their own (finish() joins them explicitly)
+        for tx in &self.ctrl {
+            let _ = tx.send(Ctrl::Shutdown);
+        }
+    }
+}
+
+/// One persistent PID worker: the V2 fluid loop plus epoch handling.
+struct StreamWorker {
+    k: usize,
+    ep: Endpoint<EpochFluid>,
+    ctrl: Receiver<Ctrl>,
+    problem: Arc<FixedPointProblem>,
+    partition: Arc<Partition>,
+    shared: Arc<StreamShared>,
+    cfg: DistributedConfig,
+    epoch: u64,
+    owned: Vec<usize>,
+    local_of: Vec<usize>,
+    h: Vec<f64>,
+    f: Vec<f64>,
+    coalesce: CoalesceBuffer,
+    heap: GreedyQueue,
+    seq: SequenceState,
+    use_heap: bool,
+    threshold: f64,
+    absorb_eps: f64,
+    /// future-epoch parcels held uncommitted until the epoch catches up
+    pending: Vec<Received<EpochFluid>>,
+}
+
+impl StreamWorker {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        k: usize,
+        ep: Endpoint<EpochFluid>,
+        ctrl: Receiver<Ctrl>,
+        problem: Arc<FixedPointProblem>,
+        partition: Arc<Partition>,
+        shared: Arc<StreamShared>,
+        cfg: DistributedConfig,
+    ) -> StreamWorker {
+        let n = problem.n();
+        let owned: Vec<usize> = partition.part(k).to_vec();
+        let m = owned.len();
+        let mut local_of = vec![usize::MAX; n];
+        for (t, &i) in owned.iter().enumerate() {
+            local_of[i] = t;
+        }
+        // epoch 0 cold state: F₀ = B on the owned slice, H₀ = 0
+        let f: Vec<f64> = owned.iter().map(|&i| problem.b()[i]).collect();
+        let h = vec![0.0; m];
+        let use_heap = cfg.sequence == SequenceKind::GreedyMaxFluid;
+        let mut heap = GreedyQueue::new(m);
+        if use_heap {
+            for (t, &fv) in f.iter().enumerate() {
+                heap.push(t, fv.abs());
+            }
+        }
+        let seq = SequenceState::new(
+            cfg.sequence,
+            (0..m).collect(),
+            cfg.seed ^ (k as u64).wrapping_mul(0x9E3779B97F4A7C15),
+        );
+        let coalesce = CoalesceBuffer::new(partition.k(), cfg.coalesce);
+        let threshold = cfg.threshold0;
+        // same absorb floor as v2: ≤ tol/10 extra residual, kills the
+        // sub-denormal ping-pong tail
+        let absorb_eps = (cfg.tol / (10.0 * n as f64)).max(1e-300);
+        StreamWorker {
+            k,
+            ep,
+            ctrl,
+            problem,
+            partition,
+            shared,
+            cfg,
+            epoch: 0,
+            owned,
+            local_of,
+            h,
+            f,
+            coalesce,
+            heap,
+            seq,
+            use_heap,
+            threshold,
+            absorb_eps,
+            pending: Vec::new(),
+        }
+    }
+
+    fn run(mut self) -> (Vec<usize>, Vec<f64>) {
+        loop {
+            match self.ctrl.try_recv() {
+                Ok(c) => {
+                    if !self.handle_ctrl(c) {
+                        break;
+                    }
+                    continue; // drain further control messages first
+                }
+                Err(TryRecvError::Empty) => {}
+                Err(TryRecvError::Disconnected) => break,
+            }
+            let got_fluid = self.absorb_bus();
+            let (did_work, r_k) = self.diffuse_quantum();
+            self.ship(did_work, r_k);
+            self.publish();
+            if !got_fluid && r_k == 0.0 && self.coalesce.is_empty() {
+                std::thread::sleep(Duration::from_micros(50));
+            }
+        }
+        self.ep.collect_acks();
+        (self.owned, self.h)
+    }
+
+    /// Returns false when the worker must terminate.
+    fn handle_ctrl(&mut self, c: Ctrl) -> bool {
+        match c {
+            Ctrl::Snapshot { reply } => {
+                let _ = reply.send((self.k, self.h.clone()));
+                true
+            }
+            Ctrl::Shutdown => false,
+            Ctrl::Checkpoint { reply } => {
+                let _ = reply.send((self.k, self.h.clone()));
+                // paused: block until the coordinator resumes us
+                loop {
+                    match self.ctrl.recv() {
+                        Ok(Ctrl::Resume {
+                            epoch,
+                            problem,
+                            f_slice,
+                        }) => {
+                            self.enter_epoch(epoch, problem, f_slice);
+                            return true;
+                        }
+                        Ok(Ctrl::Snapshot { reply }) => {
+                            let _ = reply.send((self.k, self.h.clone()));
+                        }
+                        Ok(Ctrl::Checkpoint { reply }) => {
+                            let _ = reply.send((self.k, self.h.clone()));
+                        }
+                        Ok(Ctrl::Shutdown) | Err(_) => return false,
+                    }
+                }
+            }
+            Ctrl::Resume {
+                epoch,
+                problem,
+                f_slice,
+            } => {
+                // resume without a checkpoint (defensive: coordinator
+                // always checkpoints first, but the transition is safe
+                // from any state)
+                self.enter_epoch(epoch, problem, f_slice);
+                true
+            }
+        }
+    }
+
+    /// Install a new epoch: new matrix, rebased fluid, H kept warm.
+    fn enter_epoch(&mut self, epoch: u64, problem: Arc<FixedPointProblem>, f_slice: Vec<f64>) {
+        self.epoch = epoch;
+        self.problem = problem;
+        self.f = f_slice;
+        // old-epoch outbound fluid still buffered is obsolete — B' already
+        // accounts for everything H absorbed; drop it
+        if !self.coalesce.is_empty() {
+            let _ = self.coalesce.take_all();
+        }
+        self.heap = GreedyQueue::new(self.owned.len());
+        if self.use_heap {
+            for (t, &fv) in self.f.iter().enumerate() {
+                self.heap.push(t, fv.abs());
+            }
+        }
+        self.threshold = self.cfg.threshold0;
+        // stashed parcels for exactly this epoch become applicable now;
+        // anything older is obsolete — commit both so the bus clears
+        let pending = std::mem::take(&mut self.pending);
+        for msg in pending {
+            if msg.payload.epoch == self.epoch {
+                for &(j, fl) in &msg.payload.parcels {
+                    let t = self.local_of[j];
+                    self.f[t] += fl;
+                    if self.use_heap {
+                        self.heap.push(t, self.f[t].abs());
+                    }
+                }
+                self.ep.commit(msg.from, msg.seq, msg.mass);
+            } else if msg.payload.epoch < self.epoch {
+                self.ep.commit(msg.from, msg.seq, msg.mass);
+            } else {
+                self.pending.push(msg);
+            }
+        }
+        self.publish();
+    }
+
+    /// Drain the bus: apply current-epoch parcels, discard stale ones,
+    /// stash future ones. Returns whether any current-epoch fluid landed.
+    fn absorb_bus(&mut self) -> bool {
+        let received = self.ep.drain_uncommitted();
+        if received.is_empty() {
+            self.ep.collect_acks();
+            return false;
+        }
+        let mut got = false;
+        let mut to_commit: Vec<(usize, u64, f64)> = Vec::new();
+        for msg in received {
+            match msg.payload.epoch.cmp(&self.epoch) {
+                std::cmp::Ordering::Equal => {
+                    for &(j, fl) in &msg.payload.parcels {
+                        let t = self.local_of[j];
+                        self.f[t] += fl;
+                        if self.use_heap {
+                            self.heap.push(t, self.f[t].abs());
+                        }
+                    }
+                    got = true;
+                    to_commit.push((msg.from, msg.seq, msg.mass));
+                }
+                std::cmp::Ordering::Less => {
+                    // obsolete epoch: discard, release its accounting
+                    to_commit.push((msg.from, msg.seq, msg.mass));
+                }
+                std::cmp::Ordering::Greater => self.pending.push(msg),
+            }
+        }
+        if got {
+            // publish the post-apply total BEFORE committing receipt, so
+            // the monitor always sees the fluid in at least one account
+            self.publish();
+        }
+        for (from, seq, mass) in to_commit {
+            self.ep.commit(from, seq, mass);
+        }
+        self.ep.collect_acks();
+        got
+    }
+
+    /// One diffusion work quantum (identical math to the v2 worker).
+    fn diffuse_quantum(&mut self) -> (bool, f64) {
+        let m = self.owned.len();
+        // persistent workers idle between epochs: skip the whole quantum
+        // (sweeps_per_round · m sequence scans) once the slice is drained,
+        // so a quiescent engine doesn't contend with cold-restart baselines
+        if self.f.iter().all(|&v| v == 0.0) {
+            return (false, 0.0);
+        }
+        let quanta = self.cfg.sweeps_per_round * m;
+        let mut did_work = false;
+        let mut work_count = 0u64;
+        for _ in 0..quanta {
+            let t = if self.use_heap {
+                match self.heap.pop_valid(|t| self.f[t]) {
+                    Some(t) => t,
+                    None => break, // locally drained
+                }
+            } else {
+                self.seq.next(&self.f)
+            };
+            let fi = self.f[t];
+            if fi == 0.0 {
+                continue;
+            }
+            if fi.abs() < self.absorb_eps {
+                self.h[t] += fi;
+                self.f[t] = 0.0;
+                continue;
+            }
+            did_work = true;
+            work_count += 1;
+            self.h[t] += fi;
+            self.f[t] = 0.0;
+            let global_i = self.owned[t];
+            let csc = self.problem.matrix().csc();
+            let (rows, vals) = csc.col(global_i);
+            for u in 0..rows.len() {
+                let j = rows[u];
+                let contrib = vals[u] * fi;
+                let lj = self.local_of[j];
+                if lj != usize::MAX {
+                    self.f[lj] += contrib;
+                    if self.use_heap {
+                        self.heap.push(lj, self.f[lj].abs());
+                    }
+                } else {
+                    self.coalesce.add(self.partition.owner(j), j, contrib);
+                }
+            }
+        }
+        self.shared.updates[self.k].fetch_add(work_count, Ordering::Relaxed);
+        (did_work, norm1(&self.f))
+    }
+
+    /// Ship coalesced parcels under the current epoch tag (§4.3 triggers).
+    fn ship(&mut self, did_work: bool, r_k: f64) {
+        let threshold_hit = did_work && r_k < self.threshold;
+        if threshold_hit || r_k < self.cfg.tol {
+            for (dest, batch, mass) in self.coalesce.take_all() {
+                self.send_batch(dest, batch, mass);
+            }
+        } else {
+            for dest in self.coalesce.ready() {
+                let (batch, mass) = self.coalesce.take(dest);
+                self.send_batch(dest, batch, mass);
+            }
+        }
+        if threshold_hit && self.threshold > self.cfg.tol * 1e-3 {
+            self.threshold /= self.cfg.threshold_alpha;
+        }
+    }
+
+    fn send_batch(&mut self, dest: usize, batch: Vec<(usize, f64)>, mass: f64) {
+        if batch.is_empty() {
+            return;
+        }
+        let bytes = batch.len() * 16 + 24;
+        let _ = self.ep.send(
+            dest,
+            EpochFluid {
+                epoch: self.epoch,
+                parcels: batch,
+            },
+            mass,
+            bytes,
+        );
+    }
+
+    fn publish(&self) {
+        self.shared.published[self.k].set(norm1(&self.f) + self.coalesce.held_mass());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{power_law_web_graph, ChurnModel, MutationStream};
+    use crate::linalg::vec_ops::dist1;
+    use crate::solver::{DIteration, SolveOptions, Solver};
+
+    fn engine(n: usize, k: usize, seed: u64) -> StreamingEngine {
+        let g = power_law_web_graph(n, 5, 0.1, seed);
+        let mg = MutableDigraph::from_digraph(&g, n);
+        let cfg = DistributedConfig::new(Partition::contiguous(n, k).unwrap())
+            .with_tol(1e-10)
+            .with_seed(seed);
+        StreamingEngine::new(mg, 0.85, true, cfg).unwrap()
+    }
+
+    fn cold_solution(problem: &FixedPointProblem) -> Vec<f64> {
+        let opts = SolveOptions {
+            tol: 1e-13,
+            max_cost: 200_000.0,
+            trace_every: 0.0,
+            exact: None,
+        };
+        DIteration::fluid_cyclic().solve(problem, &opts).unwrap().x
+    }
+
+    #[test]
+    fn initial_epoch_matches_cold_solve() {
+        let mut eng = engine(120, 3, 11);
+        let report = eng.converge().unwrap();
+        assert!(report.solution.converged, "residual {}", report.solution.residual);
+        let want = cold_solution(eng.problem());
+        assert!(dist1(&report.solution.x, &want) < 1e-7);
+        let summary = eng.finish().unwrap();
+        assert_eq!(summary.epochs, 1);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop_epoch() {
+        let mut eng = engine(80, 2, 3);
+        eng.converge().unwrap();
+        let report = eng.apply_batch(&[]).unwrap();
+        assert_eq!(report.epoch, 0, "no graph change, no rebase");
+        assert_eq!(report.mutations_applied, 0);
+        assert!(report.solution.converged);
+        eng.finish().unwrap();
+    }
+
+    #[test]
+    fn mutation_batch_reconverges_to_new_fixed_point() {
+        let mut eng = engine(100, 4, 7);
+        eng.converge().unwrap();
+        let batch = vec![
+            Mutation::EdgeInsert {
+                from: 3,
+                to: 42,
+                weight: 1.0,
+            },
+            Mutation::EdgeInsert {
+                from: 42,
+                to: 3,
+                weight: 2.0,
+            },
+            Mutation::EdgeDelete { from: 3, to: 42 },
+        ];
+        let report = eng.apply_batch(&batch).unwrap();
+        assert_eq!(report.epoch, 1);
+        assert!(report.mutations_applied >= 2);
+        assert!(report.solution.converged, "residual {}", report.solution.residual);
+        let want = cold_solution(eng.problem());
+        assert!(
+            dist1(&report.solution.x, &want) < 1e-7,
+            "Δ₁ = {}",
+            dist1(&report.solution.x, &want)
+        );
+        eng.finish().unwrap();
+    }
+
+    #[test]
+    fn mid_flight_rebase_conserves_the_computation() {
+        // rebase BEFORE the initial solve converges: the checkpointed H is
+        // a partial state, and the §3.2 identity must still land the run
+        // on the new system's exact fixed point (fluid conservation across
+        // the epoch boundary).
+        let mut eng = engine(100, 4, 13);
+        // no converge() here — workers are mid-diffusion
+        let mut stream = MutationStream::new(ChurnModel::RandomRewire, 5);
+        let batch = stream.next_batch(eng.graph(), 12);
+        let report = eng.apply_batch(&batch).unwrap();
+        assert!(report.solution.converged, "residual {}", report.solution.residual);
+        let want = cold_solution(eng.problem());
+        assert!(
+            dist1(&report.solution.x, &want) < 1e-7,
+            "Δ₁ = {}",
+            dist1(&report.solution.x, &want)
+        );
+        eng.finish().unwrap();
+    }
+
+    #[test]
+    fn greedy_sequence_streams_too() {
+        let n = 90;
+        let g = power_law_web_graph(n, 5, 0.1, 21);
+        let mg = MutableDigraph::from_digraph(&g, n);
+        let cfg = DistributedConfig::new(Partition::contiguous(n, 3).unwrap())
+            .with_tol(1e-10)
+            .with_sequence(SequenceKind::GreedyMaxFluid)
+            .with_seed(21);
+        let mut eng = StreamingEngine::new(mg, 0.85, true, cfg).unwrap();
+        eng.converge().unwrap();
+        let batch = vec![Mutation::EdgeInsert {
+            from: 1,
+            to: 50,
+            weight: 3.0,
+        }];
+        let report = eng.apply_batch(&batch).unwrap();
+        assert!(report.solution.converged);
+        let want = cold_solution(eng.problem());
+        assert!(dist1(&report.solution.x, &want) < 1e-7);
+        eng.finish().unwrap();
+    }
+
+    #[test]
+    fn partition_mismatch_rejected() {
+        let g = power_law_web_graph(50, 4, 0.1, 2);
+        let mg = MutableDigraph::from_digraph(&g, 50);
+        let cfg = DistributedConfig::new(Partition::contiguous(40, 2).unwrap());
+        assert!(StreamingEngine::new(mg, 0.85, true, cfg).is_err());
+    }
+}

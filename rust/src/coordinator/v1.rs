@@ -34,7 +34,10 @@ pub struct SliceMsg {
 
 /// Solve with the V1 scheme. The partition in `cfg` must cover the
 /// problem's coordinates.
-pub fn solve_v1(problem: &FixedPointProblem, cfg: &DistributedConfig) -> Result<DistributedSolution> {
+pub fn solve_v1(
+    problem: &FixedPointProblem,
+    cfg: &DistributedConfig,
+) -> Result<DistributedSolution> {
     let n = problem.n();
     if cfg.partition.n() != n {
         return Err(DiterError::shape("solve_v1 partition", n, cfg.partition.n()));

@@ -31,7 +31,10 @@ pub struct FluidMsg {
 }
 
 /// Solve with the V2 scheme.
-pub fn solve_v2(problem: &FixedPointProblem, cfg: &DistributedConfig) -> Result<DistributedSolution> {
+pub fn solve_v2(
+    problem: &FixedPointProblem,
+    cfg: &DistributedConfig,
+) -> Result<DistributedSolution> {
     let n = problem.n();
     if cfg.partition.n() != n {
         return Err(DiterError::shape("solve_v2 partition", n, cfg.partition.n()));

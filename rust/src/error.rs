@@ -1,12 +1,15 @@
 //! Crate-wide error type.
+//!
+//! Display/Error are implemented by hand: the crate builds with zero
+//! external dependencies so it compiles on a clean machine with no
+//! registry access (no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// All errors produced by the `diter` crate.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum DiterError {
     /// Dimension mismatch between operands (`what` describes the operation).
-    #[error("shape mismatch in {what}: expected {expected}, got {got}")]
     ShapeMismatch {
         what: &'static str,
         expected: String,
@@ -15,15 +18,12 @@ pub enum DiterError {
 
     /// The iteration matrix does not satisfy the convergence precondition
     /// (spectral radius / diagonal-dominance check failed).
-    #[error("convergence precondition violated: {0}")]
     NotContractive(String),
 
     /// Singular or near-singular matrix in a direct solve.
-    #[error("singular matrix: pivot {pivot} at column {col}")]
     Singular { col: usize, pivot: f64 },
 
     /// An iterative method hit its iteration cap before reaching tolerance.
-    #[error("did not converge: residual {residual} after {iterations} iterations (tol {tol})")]
     DidNotConverge {
         iterations: usize,
         residual: f64,
@@ -31,28 +31,71 @@ pub enum DiterError {
     },
 
     /// Partition is not an exact cover of `0..n`.
-    #[error("invalid partition: {0}")]
     InvalidPartition(String),
 
     /// Config file / CLI parse errors.
-    #[error("parse error at {location}: {message}")]
     Parse { location: String, message: String },
 
     /// Transport-level failure (closed endpoint, lost ack, ...).
-    #[error("transport error: {0}")]
     Transport(String),
 
     /// Coordinator-level failure (worker panic, protocol violation, ...).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// PJRT runtime failure (artifact missing, compile/execute error).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Generic I/O.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for DiterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DiterError::ShapeMismatch {
+                what,
+                expected,
+                got,
+            } => write!(f, "shape mismatch in {what}: expected {expected}, got {got}"),
+            DiterError::NotContractive(msg) => {
+                write!(f, "convergence precondition violated: {msg}")
+            }
+            DiterError::Singular { col, pivot } => {
+                write!(f, "singular matrix: pivot {pivot} at column {col}")
+            }
+            DiterError::DidNotConverge {
+                iterations,
+                residual,
+                tol,
+            } => write!(
+                f,
+                "did not converge: residual {residual} after {iterations} iterations (tol {tol})"
+            ),
+            DiterError::InvalidPartition(msg) => write!(f, "invalid partition: {msg}"),
+            DiterError::Parse { location, message } => {
+                write!(f, "parse error at {location}: {message}")
+            }
+            DiterError::Transport(msg) => write!(f, "transport error: {msg}"),
+            DiterError::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            DiterError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            DiterError::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for DiterError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DiterError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for DiterError {
+    fn from(e: std::io::Error) -> Self {
+        DiterError::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, DiterError>;
@@ -82,5 +125,13 @@ mod tests {
             tol: 1e-9,
         };
         assert!(e.to_string().contains("10"));
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing");
+        let e: DiterError = io.into();
+        assert!(e.to_string().contains("missing"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

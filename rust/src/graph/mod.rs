@@ -8,12 +8,17 @@
 
 pub mod generators;
 pub mod pagerank;
+pub mod stream;
 
 pub use generators::{
     barabasi_albert_digraph, block_coupled_matrix, erdos_renyi_digraph, grid_digraph,
     paper_author_graph, paper_matrix, power_law_web_graph, PaperAuthorGraph,
 };
-pub use pagerank::{pagerank_reference, pagerank_system, verify_pagerank_matrix, PageRankSystem};
+pub use pagerank::{
+    pagerank_from_links, pagerank_reference, pagerank_system, verify_pagerank_matrix,
+    PageRankSystem,
+};
+pub use stream::{ChurnModel, MutableDigraph, Mutation, MutationStream};
 
 use crate::sparse::TripletBuilder;
 

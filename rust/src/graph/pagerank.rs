@@ -30,9 +30,21 @@ pub struct PageRankSystem {
 /// distance `(Σ r_k)/(1−d)` is *exact*); if false, dangling mass is lost
 /// and the same expression is an upper bound — both paper variants.
 pub fn pagerank_system(g: &Digraph, damping: f64, patch_dangling: bool) -> Result<PageRankSystem> {
-    let n = g.n();
+    pagerank_from_links(&g.link_matrix(), &g.dangling_nodes(), damping, patch_dangling)
+}
+
+/// Build the system from an already-normalized link matrix `S` plus its
+/// dangling-column list — the shared back half of [`pagerank_system`],
+/// also used by the streaming engine's [`crate::graph::MutableDigraph`]
+/// (whose weighted columns renormalize on every mutation batch).
+pub fn pagerank_from_links(
+    s: &CsrMatrix,
+    dangling: &[usize],
+    damping: f64,
+    patch_dangling: bool,
+) -> Result<PageRankSystem> {
+    let n = s.nrows();
     let uniform = 1.0 / n as f64;
-    let s = g.link_matrix();
     let mut b = TripletBuilder::with_capacity(n, n, s.nnz() + n);
     // d * S entries
     for i in 0..n {
@@ -42,7 +54,7 @@ pub fn pagerank_system(g: &Digraph, damping: f64, patch_dangling: bool) -> Resul
         }
     }
     if patch_dangling {
-        for u in g.dangling_nodes() {
+        for &u in dangling {
             let w = damping * uniform;
             for i in 0..n {
                 b.push(i, u, w);

@@ -1,0 +1,592 @@
+//! Streaming graph substrate: an editable weighted digraph plus seeded
+//! churn generators — the workload side of the §3.2 live-evolution story.
+//!
+//! The papers "Evaluation of a Dynamic Partition Strategy" (1203.1715) and
+//! "Convergence of the D-iteration algorithm" (1301.3007) study D-iteration
+//! while the matrix changes underneath it; this module produces exactly
+//! that regime: a [`MutableDigraph`] absorbs a stream of [`Mutation`]s
+//! (edge insert/delete/reweight, node activate/deactivate) and re-derives
+//! a column-renormalized PageRank system after every batch, and a
+//! [`MutationStream`] generates reproducible churn under three models
+//! (preferential-attachment growth, random rewire, hot-spot bursts).
+//!
+//! **Fixed coordinate capacity.** The engine keeps one coordinate per
+//! potential node for the whole run: "node add" activates a dormant
+//! coordinate (until then it behaves as a dangling page holding only its
+//! teleport mass) and "node remove" deactivates one by dropping all its
+//! incident edges. This keeps every history/fluid vector the same length
+//! across rebases, which is what lets §3.2's `B' = P'·H + B − H` apply
+//! without re-indexing a running computation.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::pagerank::{pagerank_from_links, PageRankSystem};
+use super::Digraph;
+use crate::error::Result;
+use crate::prng::Xoshiro256pp;
+use crate::sparse::TripletBuilder;
+
+/// One atomic change to the evolving graph.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Mutation {
+    /// Add edge `from → to` with `weight` (no-op if it already exists).
+    EdgeInsert { from: usize, to: usize, weight: f64 },
+    /// Remove edge `from → to` (no-op if absent).
+    EdgeDelete { from: usize, to: usize },
+    /// Change the weight of an existing edge (no-op if absent); the
+    /// column renormalization `w / Σw` happens at matrix-build time.
+    EdgeReweight { from: usize, to: usize, weight: f64 },
+    /// Activate a dormant node with an initial set of out-links.
+    NodeActivate { node: usize, targets: Vec<usize> },
+    /// Deactivate a node: drop all its in- and out-edges (the coordinate
+    /// stays allocated and reverts to a pure teleport sink).
+    NodeDeactivate { node: usize },
+}
+
+/// An editable weighted digraph with O(log deg) edge updates and a fixed
+/// coordinate capacity.
+#[derive(Clone, Debug)]
+pub struct MutableDigraph {
+    n: usize,
+    /// out-adjacency with per-edge weights
+    out: Vec<BTreeMap<usize, f64>>,
+    /// in-adjacency (sources), kept in sync for node deactivation
+    ins: Vec<BTreeSet<usize>>,
+    /// explicitly-activated nodes (edge inserts auto-activate endpoints)
+    active: Vec<bool>,
+    m: usize,
+}
+
+impl MutableDigraph {
+    /// An empty graph with `capacity` coordinates, all dormant.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            n: capacity,
+            out: vec![BTreeMap::new(); capacity],
+            ins: vec![BTreeSet::new(); capacity],
+            active: vec![false; capacity],
+            m: 0,
+        }
+    }
+
+    /// Seed from a static [`Digraph`] (unit weights), leaving
+    /// `capacity − g.n()` dormant coordinates for future growth.
+    pub fn from_digraph(g: &Digraph, capacity: usize) -> Self {
+        assert!(capacity >= g.n(), "capacity must cover the seed graph");
+        let mut mg = Self::new(capacity);
+        for u in 0..g.n() {
+            for &v in g.out_neighbors(u) {
+                mg.insert_edge(u, v, 1.0);
+            }
+        }
+        mg
+    }
+
+    /// Coordinate capacity (the fixed system dimension).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Current edge count.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn out_degree(&self, u: usize) -> usize {
+        self.out[u].len()
+    }
+
+    pub fn in_degree(&self, v: usize) -> usize {
+        self.ins[v].len()
+    }
+
+    pub fn is_active(&self, u: usize) -> bool {
+        self.active[u]
+    }
+
+    /// Nodes never activated (or deactivated): candidates for growth.
+    pub fn dormant_nodes(&self) -> Vec<usize> {
+        (0..self.n).filter(|&u| !self.active[u]).collect()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Insert `u → v` with `weight`; returns whether the graph changed.
+    pub fn insert_edge(&mut self, u: usize, v: usize, weight: f64) -> bool {
+        if u == v || u >= self.n || v >= self.n || weight <= 0.0 {
+            return false;
+        }
+        if self.out[u].contains_key(&v) {
+            return false;
+        }
+        self.out[u].insert(v, weight);
+        self.ins[v].insert(u);
+        self.active[u] = true;
+        self.active[v] = true;
+        self.m += 1;
+        true
+    }
+
+    /// Remove `u → v`; returns whether the graph changed.
+    pub fn remove_edge(&mut self, u: usize, v: usize) -> bool {
+        if u >= self.n || v >= self.n {
+            return false;
+        }
+        if self.out[u].remove(&v).is_none() {
+            return false;
+        }
+        self.ins[v].remove(&u);
+        self.m -= 1;
+        true
+    }
+
+    /// Reweight an existing edge; returns whether the graph changed.
+    pub fn reweight_edge(&mut self, u: usize, v: usize, weight: f64) -> bool {
+        if u >= self.n || v >= self.n || weight <= 0.0 {
+            return false;
+        }
+        match self.out[u].get_mut(&v) {
+            Some(w) if *w != weight => {
+                *w = weight;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Drop all edges incident to `u` and mark it dormant. Returns the
+    /// number of edges removed.
+    pub fn deactivate_node(&mut self, u: usize) -> usize {
+        if u >= self.n {
+            return 0;
+        }
+        let outs: Vec<usize> = self.out[u].keys().copied().collect();
+        let mut removed = 0;
+        for v in outs {
+            if self.remove_edge(u, v) {
+                removed += 1;
+            }
+        }
+        let sources: Vec<usize> = self.ins[u].iter().copied().collect();
+        for s in sources {
+            if self.remove_edge(s, u) {
+                removed += 1;
+            }
+        }
+        self.active[u] = false;
+        removed
+    }
+
+    /// Apply one mutation; returns whether the graph changed.
+    pub fn apply(&mut self, m: &Mutation) -> bool {
+        match m {
+            Mutation::EdgeInsert { from, to, weight } => self.insert_edge(*from, *to, *weight),
+            Mutation::EdgeDelete { from, to } => self.remove_edge(*from, *to),
+            Mutation::EdgeReweight { from, to, weight } => {
+                self.reweight_edge(*from, *to, *weight)
+            }
+            Mutation::NodeActivate { node, targets } => {
+                if *node >= self.n {
+                    return false;
+                }
+                let mut changed = !self.active[*node];
+                self.active[*node] = true;
+                for &t in targets {
+                    changed |= self.insert_edge(*node, t, 1.0);
+                }
+                changed
+            }
+            Mutation::NodeDeactivate { node } => {
+                if *node >= self.n || !self.active[*node] {
+                    return false;
+                }
+                self.deactivate_node(*node);
+                true
+            }
+        }
+    }
+
+    /// All current edges as `(from, to, weight)` triples.
+    pub fn edges(&self) -> Vec<(usize, usize, f64)> {
+        let mut out = Vec::with_capacity(self.m);
+        for u in 0..self.n {
+            for (&v, &w) in &self.out[u] {
+                out.push((u, v, w));
+            }
+        }
+        out
+    }
+
+    /// Snapshot as a static (unweighted) [`Digraph`].
+    pub fn to_digraph(&self) -> Digraph {
+        Digraph::from_edges(self.n, self.edges().into_iter().map(|(u, v, _)| (u, v)))
+    }
+
+    /// Column-renormalized link matrix: `s_{vu} = w(u→v) / Σ_t w(u→t)` —
+    /// this is where edge reweights and degree changes renormalize.
+    /// Zero-out-degree columns stay empty (dangling).
+    pub fn link_matrix(&self) -> crate::sparse::CsrMatrix {
+        let mut b = TripletBuilder::with_capacity(self.n, self.n, self.m);
+        for u in 0..self.n {
+            let total: f64 = self.out[u].values().sum();
+            if total <= 0.0 {
+                continue;
+            }
+            for (&v, &w) in &self.out[u] {
+                b.push(v, u, w / total);
+            }
+        }
+        b.to_csr()
+    }
+
+    /// Nodes with no out-links (dangling in PageRank terms) — includes
+    /// dormant coordinates by construction.
+    pub fn dangling_nodes(&self) -> Vec<usize> {
+        (0..self.n).filter(|&u| self.out[u].is_empty()).collect()
+    }
+
+    /// Build the current PageRank fixed-point system `X = P·X + B`.
+    pub fn pagerank_system(&self, damping: f64, patch_dangling: bool) -> Result<PageRankSystem> {
+        pagerank_from_links(
+            &self.link_matrix(),
+            &self.dangling_nodes(),
+            damping,
+            patch_dangling,
+        )
+    }
+}
+
+/// Churn model for the mutation generator.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChurnModel {
+    /// Growth: activate dormant nodes, each linking to `links_per_node`
+    /// targets chosen (approximately) proportional to popularity —
+    /// preferential attachment, the web-growth null model.
+    PreferentialGrowth { links_per_node: usize },
+    /// Steady-state rewire: delete a random existing edge and insert a
+    /// random new one (constant edge count, shifting structure).
+    RandomRewire,
+    /// A burst of `burst` new edges all pointing at one suddenly-popular
+    /// node — the flash-crowd / breaking-news workload.
+    HotSpotBurst { burst: usize },
+}
+
+impl ChurnModel {
+    /// Parse a CLI name: `grow`, `rewire`, `hotspot`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "grow" => Some(Self::PreferentialGrowth { links_per_node: 4 }),
+            "rewire" => Some(Self::RandomRewire),
+            "hotspot" => Some(Self::HotSpotBurst { burst: 32 }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::PreferentialGrowth { .. } => "grow",
+            Self::RandomRewire => "rewire",
+            Self::HotSpotBurst { .. } => "hotspot",
+        }
+    }
+}
+
+/// Seeded generator of mutation batches against the current graph state.
+#[derive(Clone, Debug)]
+pub struct MutationStream {
+    model: ChurnModel,
+    rng: Xoshiro256pp,
+}
+
+impl MutationStream {
+    pub fn new(model: ChurnModel, seed: u64) -> Self {
+        Self {
+            model,
+            rng: Xoshiro256pp::seed_from_u64(seed),
+        }
+    }
+
+    pub fn model(&self) -> &ChurnModel {
+        &self.model
+    }
+
+    /// Pick an active node, biased towards high degree by sampling a
+    /// random edge endpoint 70% of the time (the pool trick of the static
+    /// generators — approximate preferential attachment).
+    fn popular_node(&mut self, g: &MutableDigraph) -> Option<usize> {
+        for _ in 0..64 {
+            let u = self.rng.below(g.n());
+            if g.out_degree(u) > 0 && self.rng.chance(0.7) {
+                // follow a random out-edge: targets are in-degree biased
+                let k = self.rng.below(g.out_degree(u));
+                let (v, _) = g.edges_of(u)[k];
+                return Some(v);
+            }
+            if g.is_active(u) {
+                return Some(u);
+            }
+        }
+        None
+    }
+
+    /// A uniformly-random existing edge (None if the graph is empty).
+    fn random_edge(&mut self, g: &MutableDigraph) -> Option<(usize, usize)> {
+        if g.m() == 0 {
+            return None;
+        }
+        for _ in 0..256 {
+            let u = self.rng.below(g.n());
+            let d = g.out_degree(u);
+            if d > 0 {
+                let k = self.rng.below(d);
+                let (v, _) = g.edges_of(u)[k];
+                return Some((u, v));
+            }
+        }
+        None
+    }
+
+    /// Generate the next batch of up to `size` mutations for `g`
+    /// (`size == 0` yields an empty batch — a no-churn epoch).
+    /// Deterministic given the seed and the sequence of graph states.
+    pub fn next_batch(&mut self, g: &MutableDigraph, size: usize) -> Vec<Mutation> {
+        if size == 0 {
+            return Vec::new();
+        }
+        let mut batch = Vec::with_capacity(size);
+        match self.model.clone() {
+            ChurnModel::PreferentialGrowth { links_per_node } => {
+                let dormant = g.dormant_nodes();
+                let mut di = 0usize;
+                while batch.len() < size && di < dormant.len() {
+                    let node = dormant[di];
+                    di += 1;
+                    let mut targets = Vec::with_capacity(links_per_node);
+                    for _ in 0..links_per_node {
+                        if let Some(t) = self.popular_node(g) {
+                            if t != node && !targets.contains(&t) {
+                                targets.push(t);
+                            }
+                        }
+                    }
+                    if targets.is_empty() {
+                        // bootstrap an empty graph: link to a random peer
+                        let t = self.rng.below(g.n());
+                        if t != node {
+                            targets.push(t);
+                        }
+                    }
+                    batch.push(Mutation::NodeActivate { node, targets });
+                }
+                // graph full: fall back to densification edges
+                let mut tries = 0;
+                while batch.len() < size && tries < 16 * size {
+                    tries += 1;
+                    let u = self.rng.below(g.n());
+                    let v = self.rng.below(g.n());
+                    if u != v {
+                        batch.push(Mutation::EdgeInsert {
+                            from: u,
+                            to: v,
+                            weight: 1.0,
+                        });
+                    }
+                }
+            }
+            ChurnModel::RandomRewire => {
+                // one reweight per batch first (so delete/insert pairs
+                // filling the batch to an even size cannot truncate it away)
+                if let Some((u, v)) = self.random_edge(g) {
+                    batch.push(Mutation::EdgeReweight {
+                        from: u,
+                        to: v,
+                        weight: self.rng.uniform(0.5, 4.0),
+                    });
+                }
+                while batch.len() + 1 < size {
+                    let Some((u, v)) = self.random_edge(g) else { break };
+                    batch.push(Mutation::EdgeDelete { from: u, to: v });
+                    // reconnect the source somewhere popular (or random)
+                    let t = self
+                        .popular_node(g)
+                        .unwrap_or_else(|| self.rng.below(g.n()));
+                    if t != u {
+                        batch.push(Mutation::EdgeInsert {
+                            from: u,
+                            to: t,
+                            weight: 1.0,
+                        });
+                    }
+                }
+            }
+            ChurnModel::HotSpotBurst { burst } => {
+                let hot = self
+                    .popular_node(g)
+                    .unwrap_or_else(|| self.rng.below(g.n()));
+                let count = burst.min(size);
+                let mut tries = 0;
+                while batch.len() < count && tries < 16 * count {
+                    tries += 1;
+                    let src = self.rng.below(g.n());
+                    if src != hot {
+                        batch.push(Mutation::EdgeInsert {
+                            from: src,
+                            to: hot,
+                            weight: 1.0,
+                        });
+                    }
+                }
+            }
+        }
+        batch.truncate(size);
+        batch
+    }
+}
+
+impl MutableDigraph {
+    /// Out-edges of `u` as a materialized `(target, weight)` list (the
+    /// BTreeMap has no random access; batch sizes are small).
+    fn edges_of(&self, u: usize) -> Vec<(usize, f64)> {
+        self.out[u].iter().map(|(&v, &w)| (v, w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::power_law_web_graph;
+
+    fn seeded(n: usize) -> MutableDigraph {
+        let g = power_law_web_graph(n, 4, 0.1, 7);
+        MutableDigraph::from_digraph(&g, n + 16)
+    }
+
+    #[test]
+    fn edge_ops_keep_counts_consistent() {
+        let mut g = MutableDigraph::new(8);
+        assert!(g.insert_edge(0, 1, 1.0));
+        assert!(!g.insert_edge(0, 1, 1.0), "duplicate rejected");
+        assert!(!g.insert_edge(2, 2, 1.0), "self-loop rejected");
+        assert!(g.insert_edge(1, 2, 2.0));
+        assert_eq!(g.m(), 2);
+        assert_eq!(g.in_degree(2), 1);
+        assert!(g.remove_edge(0, 1));
+        assert!(!g.remove_edge(0, 1));
+        assert_eq!(g.m(), 1);
+    }
+
+    #[test]
+    fn reweight_renormalizes_columns() {
+        let mut g = MutableDigraph::new(4);
+        g.insert_edge(0, 1, 1.0);
+        g.insert_edge(0, 2, 1.0);
+        let s = g.link_matrix();
+        assert_eq!(s.get(1, 0), 0.5);
+        assert!(g.reweight_edge(0, 1, 3.0));
+        let s = g.link_matrix();
+        assert!((s.get(1, 0) - 0.75).abs() < 1e-15);
+        assert!((s.get(2, 0) - 0.25).abs() < 1e-15);
+        assert!(!g.reweight_edge(0, 3, 1.0), "absent edge not reweighted");
+    }
+
+    #[test]
+    fn deactivate_drops_both_directions() {
+        let mut g = MutableDigraph::new(6);
+        g.insert_edge(0, 1, 1.0);
+        g.insert_edge(2, 1, 1.0);
+        g.insert_edge(1, 3, 1.0);
+        assert_eq!(g.deactivate_node(1), 3);
+        assert_eq!(g.m(), 0);
+        assert!(!g.is_active(1));
+        assert!(g.is_active(0), "peers stay active");
+    }
+
+    #[test]
+    fn mutations_apply_and_report_changes() {
+        let mut g = MutableDigraph::new(8);
+        assert!(g.apply(&Mutation::NodeActivate {
+            node: 0,
+            targets: vec![1, 2],
+        }));
+        assert!(g.apply(&Mutation::EdgeReweight {
+            from: 0,
+            to: 1,
+            weight: 2.0,
+        }));
+        assert!(g.apply(&Mutation::EdgeDelete { from: 0, to: 2 }));
+        assert!(!g.apply(&Mutation::EdgeDelete { from: 0, to: 2 }));
+        assert!(g.apply(&Mutation::NodeDeactivate { node: 0 }));
+        assert_eq!(g.m(), 0);
+    }
+
+    #[test]
+    fn pagerank_system_matches_digraph_path() {
+        // unit weights: the mutable path must produce the same system as
+        // the static Digraph path
+        let g = power_law_web_graph(200, 5, 0.1, 3);
+        let mg = MutableDigraph::from_digraph(&g, 200);
+        let a = crate::graph::pagerank_system(&g, 0.85, true).unwrap();
+        let b = mg.pagerank_system(0.85, true).unwrap();
+        assert_eq!(a.matrix.csr().to_dense(), b.matrix.csr().to_dense());
+        assert_eq!(a.b, b.b);
+    }
+
+    #[test]
+    fn growth_model_activates_dormant_nodes() {
+        let mut g = seeded(100);
+        let dormant_before = g.dormant_nodes().len();
+        assert!(dormant_before >= 16, "padding provides dormant capacity");
+        let mut stream = MutationStream::new(
+            ChurnModel::PreferentialGrowth { links_per_node: 3 },
+            11,
+        );
+        let batch = stream.next_batch(&g, 8);
+        assert!(!batch.is_empty());
+        let applied = batch.iter().filter(|m| g.apply(m)).count();
+        assert!(applied > 0);
+        assert!(g.dormant_nodes().len() < dormant_before);
+    }
+
+    #[test]
+    fn rewire_model_preserves_edge_count_roughly() {
+        let mut g = seeded(100);
+        let m0 = g.m();
+        let mut stream = MutationStream::new(ChurnModel::RandomRewire, 5);
+        for _ in 0..4 {
+            let batch = stream.next_batch(&g, 20);
+            for m in &batch {
+                g.apply(m);
+            }
+        }
+        let m1 = g.m();
+        let drift = (m1 as i64 - m0 as i64).unsigned_abs() as usize;
+        assert!(drift <= 80, "rewire drifted too much: {m0} -> {m1}");
+    }
+
+    #[test]
+    fn hotspot_model_concentrates_in_degree() {
+        let mut g = seeded(100);
+        let mut stream = MutationStream::new(ChurnModel::HotSpotBurst { burst: 24 }, 9);
+        let batch = stream.next_batch(&g, 24);
+        let mut targets: Vec<usize> = batch
+            .iter()
+            .filter_map(|m| match m {
+                Mutation::EdgeInsert { to, .. } => Some(*to),
+                _ => None,
+            })
+            .collect();
+        targets.sort_unstable();
+        targets.dedup();
+        assert_eq!(targets.len(), 1, "one hot node per burst");
+    }
+
+    #[test]
+    fn streams_are_deterministic_under_seed() {
+        let g = seeded(60);
+        let mut a = MutationStream::new(ChurnModel::RandomRewire, 42);
+        let mut b = MutationStream::new(ChurnModel::RandomRewire, 42);
+        assert_eq!(a.next_batch(&g, 10), b.next_batch(&g, 10));
+    }
+}

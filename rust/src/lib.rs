@@ -26,6 +26,11 @@
 //! to HLO text by `python/compile/aot.py`. Python never runs on the request
 //! path.
 //!
+//! The XLA-backed runtime is compiled only with the off-by-default `pjrt`
+//! cargo feature (see `runtime/pjrt.rs`); the default build substitutes a
+//! stub with the same API so the crate builds and tests on a clean machine
+//! with no native XLA toolchain and zero external dependencies.
+//!
 //! ## Quick start
 //!
 //! ```

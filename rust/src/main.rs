@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   solve      solve a synthetic system with any scheme/solver
 //!   pagerank   distributed PageRank on a synthetic web-like graph
+//!   stream     online PageRank: continuous graph churn, warm rebases
 //!   figure     regenerate a paper figure (1..4) as a text table
 //!   artifacts  inspect the AOT artifact manifest / smoke-test PJRT
 //!   help       this text
@@ -11,13 +12,15 @@
 //! (see `configfile`); CLI flags override file values.
 
 use std::process::ExitCode;
+use std::time::Duration;
 
-use diter::bench_harness::Table;
+use diter::bench_harness::{fmt_secs, Table};
 use diter::cli::{parse_args, usage, Args, OptSpec};
 use diter::configfile::Config;
-use diter::coordinator::{v1, v2, DistributedConfig};
+use diter::coordinator::{v1, v2, DistributedConfig, StreamingEngine};
 use diter::graph::{
-    block_coupled_matrix, pagerank_system, paper_matrix, power_law_web_graph,
+    block_coupled_matrix, pagerank_system, paper_matrix, power_law_web_graph, ChurnModel,
+    MutableDigraph, MutationStream,
 };
 use diter::linalg::vec_ops::dist1;
 use diter::partition::Partition;
@@ -28,6 +31,9 @@ use diter::solver::{
 };
 use diter::sparse::SparseMatrix;
 
+/// CLI-level result: any error renders through Display and exits non-zero.
+type CliResult<T = ()> = Result<T, Box<dyn std::error::Error>>;
+
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(String::as_str).unwrap_or("help");
@@ -35,6 +41,7 @@ fn main() -> ExitCode {
     let result = match cmd {
         "solve" => cmd_solve(rest),
         "pagerank" => cmd_pagerank(rest),
+        "stream" => cmd_stream(rest),
         "figure" => cmd_figure(rest),
         "artifacts" => cmd_artifacts(rest),
         "help" | "--help" | "-h" => {
@@ -62,6 +69,7 @@ fn print_help() {
          subcommands:\n\
          \x20 solve      solve a synthetic block-coupled system\n\
          \x20 pagerank   distributed PageRank on a synthetic web graph\n\
+         \x20 stream     online PageRank under continuous graph churn\n\
          \x20 figure     regenerate a paper figure (--id 1..4)\n\
          \x20 artifacts  inspect AOT artifacts / smoke-test the PJRT runtime\n\
          \x20 help       this text\n\n\
@@ -71,27 +79,77 @@ fn print_help() {
 
 fn solve_spec() -> Vec<OptSpec> {
     vec![
-        OptSpec { name: "help", help: "show usage", is_flag: true, default: None },
-        OptSpec { name: "config", help: "TOML-subset config file", is_flag: false, default: None },
-        OptSpec { name: "nodes", help: "system size N", is_flag: false, default: Some("256") },
-        OptSpec { name: "pids", help: "number of PIDs K", is_flag: false, default: Some("4") },
-        OptSpec { name: "coupling", help: "inter-block coupling (0..0.5)", is_flag: false, default: Some("0.1") },
-        OptSpec { name: "scheme", help: "v1 | v2 | seq | jacobi | gs", is_flag: false, default: Some("v2") },
-        OptSpec { name: "sequence", help: "cyclic | random | greedy", is_flag: false, default: Some("cyclic") },
-        OptSpec { name: "tol", help: "target residual", is_flag: false, default: Some("1e-10") },
-        OptSpec { name: "seed", help: "RNG seed", is_flag: false, default: Some("42") },
-        OptSpec { name: "alpha", help: "threshold divisor α", is_flag: false, default: Some("2.0") },
+        OptSpec {
+            name: "help",
+            help: "show usage",
+            is_flag: true,
+            default: None,
+        },
+        OptSpec {
+            name: "config",
+            help: "TOML-subset config file",
+            is_flag: false,
+            default: None,
+        },
+        OptSpec {
+            name: "nodes",
+            help: "system size N",
+            is_flag: false,
+            default: Some("256"),
+        },
+        OptSpec {
+            name: "pids",
+            help: "number of PIDs K",
+            is_flag: false,
+            default: Some("4"),
+        },
+        OptSpec {
+            name: "coupling",
+            help: "inter-block coupling (0..0.5)",
+            is_flag: false,
+            default: Some("0.1"),
+        },
+        OptSpec {
+            name: "scheme",
+            help: "v1 | v2 | seq | jacobi | gs",
+            is_flag: false,
+            default: Some("v2"),
+        },
+        OptSpec {
+            name: "sequence",
+            help: "cyclic | random | greedy",
+            is_flag: false,
+            default: Some("cyclic"),
+        },
+        OptSpec {
+            name: "tol",
+            help: "target residual",
+            is_flag: false,
+            default: Some("1e-10"),
+        },
+        OptSpec {
+            name: "seed",
+            help: "RNG seed",
+            is_flag: false,
+            default: Some("42"),
+        },
+        OptSpec {
+            name: "alpha",
+            help: "threshold divisor α",
+            is_flag: false,
+            default: Some("2.0"),
+        },
     ]
 }
 
-fn merge_cfg(args: &Args) -> anyhow::Result<Option<Config>> {
+fn merge_cfg(args: &Args) -> CliResult<Option<Config>> {
     Ok(match args.get("config") {
         Some(path) => Some(Config::load(path)?),
         None => None,
     })
 }
 
-fn cmd_solve(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_solve(argv: &[String]) -> CliResult {
     let spec = solve_spec();
     let args = parse_args(argv, &spec)?;
     if args.has_flag("help") {
@@ -99,7 +157,7 @@ fn cmd_solve(argv: &[String]) -> anyhow::Result<()> {
         return Ok(());
     }
     let file = merge_cfg(&args)?;
-    let get_f = |key: &str, d: f64| -> anyhow::Result<f64> {
+    let get_f = |key: &str, d: f64| -> CliResult<f64> {
         match file.as_ref() {
             Some(c) if args.get(key).is_none() => Ok(c.get_float("solve", key, d)),
             _ => Ok(args.get_f64(key, d)?),
@@ -113,7 +171,7 @@ fn cmd_solve(argv: &[String]) -> anyhow::Result<()> {
     let seed = args.get_u64("seed", 42)?;
     let scheme = args.get_str("scheme", "v2");
     let sequence = SequenceKind::parse(&args.get_str("sequence", "cyclic"))
-        .ok_or_else(|| anyhow::anyhow!("bad --sequence"))?;
+        .ok_or("bad --sequence (expected cyclic | random | greedy)")?;
 
     let p = block_coupled_matrix(n, k, 0.5, coupling, 6, seed);
     let problem = FixedPointProblem::new(SparseMatrix::from_csr(p), vec![1.0; n])?;
@@ -168,25 +226,65 @@ fn cmd_solve(argv: &[String]) -> anyhow::Result<()> {
                 sol.cost
             );
         }
-        other => anyhow::bail!("unknown scheme `{other}`"),
+        other => return Err(format!("unknown scheme `{other}`").into()),
     }
     Ok(())
 }
 
 fn pagerank_spec() -> Vec<OptSpec> {
     vec![
-        OptSpec { name: "help", help: "show usage", is_flag: true, default: None },
-        OptSpec { name: "nodes", help: "pages in the web graph", is_flag: false, default: Some("10000") },
-        OptSpec { name: "pids", help: "number of PIDs", is_flag: false, default: Some("4") },
-        OptSpec { name: "damping", help: "PageRank damping d", is_flag: false, default: Some("0.85") },
-        OptSpec { name: "out-deg", help: "average out-degree", is_flag: false, default: Some("8") },
-        OptSpec { name: "tol", help: "total-fluid target", is_flag: false, default: Some("1e-9") },
-        OptSpec { name: "seed", help: "RNG seed", is_flag: false, default: Some("7") },
-        OptSpec { name: "top", help: "print the top-k pages", is_flag: false, default: Some("10") },
+        OptSpec {
+            name: "help",
+            help: "show usage",
+            is_flag: true,
+            default: None,
+        },
+        OptSpec {
+            name: "nodes",
+            help: "pages in the web graph",
+            is_flag: false,
+            default: Some("10000"),
+        },
+        OptSpec {
+            name: "pids",
+            help: "number of PIDs",
+            is_flag: false,
+            default: Some("4"),
+        },
+        OptSpec {
+            name: "damping",
+            help: "PageRank damping d",
+            is_flag: false,
+            default: Some("0.85"),
+        },
+        OptSpec {
+            name: "out-deg",
+            help: "average out-degree",
+            is_flag: false,
+            default: Some("8"),
+        },
+        OptSpec {
+            name: "tol",
+            help: "total-fluid target",
+            is_flag: false,
+            default: Some("1e-9"),
+        },
+        OptSpec {
+            name: "seed",
+            help: "RNG seed",
+            is_flag: false,
+            default: Some("7"),
+        },
+        OptSpec {
+            name: "top",
+            help: "print the top-k pages",
+            is_flag: false,
+            default: Some("10"),
+        },
     ]
 }
 
-fn cmd_pagerank(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_pagerank(argv: &[String]) -> CliResult {
     let spec = pagerank_spec();
     let args = parse_args(argv, &spec)?;
     if args.has_flag("help") {
@@ -231,15 +329,220 @@ fn cmd_pagerank(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn figure_spec() -> Vec<OptSpec> {
+fn stream_spec() -> Vec<OptSpec> {
     vec![
-        OptSpec { name: "help", help: "show usage", is_flag: true, default: None },
-        OptSpec { name: "id", help: "paper figure id (1..4)", is_flag: false, default: Some("1") },
-        OptSpec { name: "max-cost", help: "iterations to chart", is_flag: false, default: Some("20") },
+        OptSpec {
+            name: "help",
+            help: "show usage",
+            is_flag: true,
+            default: None,
+        },
+        OptSpec {
+            name: "nodes",
+            help: "coordinate capacity N",
+            is_flag: false,
+            default: Some("5000"),
+        },
+        OptSpec {
+            name: "pids",
+            help: "number of PIDs",
+            is_flag: false,
+            default: Some("4"),
+        },
+        OptSpec {
+            name: "damping",
+            help: "PageRank damping d",
+            is_flag: false,
+            default: Some("0.85"),
+        },
+        OptSpec {
+            name: "batches",
+            help: "mutation batches to stream",
+            is_flag: false,
+            default: Some("8"),
+        },
+        OptSpec {
+            name: "batch-size",
+            help: "mutations per batch",
+            is_flag: false,
+            default: Some("64"),
+        },
+        OptSpec {
+            name: "model",
+            help: "churn model: grow | rewire | hotspot",
+            is_flag: false,
+            default: Some("rewire"),
+        },
+        OptSpec {
+            name: "tol",
+            help: "total-fluid target",
+            is_flag: false,
+            default: Some("1e-9"),
+        },
+        OptSpec {
+            name: "seed",
+            help: "RNG seed",
+            is_flag: false,
+            default: Some("7"),
+        },
+        OptSpec {
+            name: "compare-cold",
+            help: "also run a cold V2 restart per batch",
+            is_flag: true,
+            default: None,
+        },
     ]
 }
 
-fn cmd_figure(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_stream(argv: &[String]) -> CliResult {
+    let spec = stream_spec();
+    let args = parse_args(argv, &spec)?;
+    if args.has_flag("help") {
+        print!(
+            "{}",
+            usage("diter stream", "online PageRank under continuous churn", &spec)
+        );
+        return Ok(());
+    }
+    let n = args.get_usize("nodes", 5_000)?;
+    let k = args.get_usize("pids", 4)?;
+    let damping = args.get_f64("damping", 0.85)?;
+    let batches = args.get_usize("batches", 8)?;
+    let batch_size = args.get_usize("batch-size", 64)?;
+    let tol = args.get_f64("tol", 1e-9)?;
+    let seed = args.get_u64("seed", 7)?;
+    let model = ChurnModel::parse(&args.get_str("model", "rewire"))
+        .ok_or("bad --model (expected grow | rewire | hotspot)")?;
+    let compare_cold = args.has_flag("compare-cold");
+
+    // seed graph uses ~90% of the capacity so the growth model has room
+    let seed_nodes = if matches!(model, ChurnModel::PreferentialGrowth { .. }) {
+        n * 9 / 10
+    } else {
+        n
+    };
+    println!(
+        "streaming PageRank: capacity N={n} (seed graph {seed_nodes}), K={k} PIDs, \
+         model={}, {batches} batches x {batch_size}",
+        model.name()
+    );
+    let g = power_law_web_graph(seed_nodes, 8, 0.1, seed);
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let mut cfg = DistributedConfig::new(Partition::contiguous(n, k)?)
+        .with_tol(tol)
+        .with_seed(seed)
+        .with_sequence(SequenceKind::GreedyMaxFluid);
+    cfg.max_wall = Duration::from_secs(120);
+    let cold_cfg = cfg.clone();
+
+    let mut engine = StreamingEngine::new(mg, damping, true, cfg)?;
+    let init = engine.converge()?;
+    println!(
+        "initial solve: converged={} residual={:.2e} wall={} ({} updates)\n",
+        init.solution.converged,
+        init.solution.residual,
+        fmt_secs(init.solution.wall_secs),
+        init.solution.total_updates
+    );
+
+    let mut stream = MutationStream::new(model, seed ^ 0xC0FFEE);
+    let cold_header = [
+        "batch",
+        "applied",
+        "edges",
+        "warm-wall",
+        "warm-upd",
+        "cold-wall",
+        "cold-upd",
+        "speedup",
+        "residual",
+    ];
+    let warm_header = [
+        "batch",
+        "applied",
+        "edges",
+        "warm-wall",
+        "warm-upd",
+        "upd/s",
+        "residual",
+    ];
+    let mut table = Table::new(if compare_cold {
+        &cold_header[..]
+    } else {
+        &warm_header[..]
+    });
+    for b in 0..batches {
+        let batch = stream.next_batch(engine.graph(), batch_size);
+        let report = engine.apply_batch(&batch)?;
+        if !report.solution.converged {
+            return Err(format!(
+                "batch {b}: did not reconverge (residual {:.3e})",
+                report.solution.residual
+            )
+            .into());
+        }
+        if compare_cold {
+            let cold = v2::solve_v2(engine.problem(), &cold_cfg)?;
+            let speedup = cold.total_updates as f64 / report.solution.total_updates.max(1) as f64;
+            table.row(&[
+                b.to_string(),
+                report.mutations_applied.to_string(),
+                engine.graph().m().to_string(),
+                fmt_secs(report.solution.wall_secs),
+                report.solution.total_updates.to_string(),
+                fmt_secs(cold.wall_secs),
+                cold.total_updates.to_string(),
+                format!("{speedup:.1}x"),
+                format!("{:.1e}", report.solution.residual),
+            ]);
+        } else {
+            table.row(&[
+                b.to_string(),
+                report.mutations_applied.to_string(),
+                engine.graph().m().to_string(),
+                fmt_secs(report.solution.wall_secs),
+                report.solution.total_updates.to_string(),
+                format!("{:.2e}", engine.steady_updates_per_sec()),
+                format!("{:.1e}", report.solution.residual),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    let summary = engine.finish()?;
+    println!(
+        "\n{} epochs, {} mutations; steady-state {:.2e} upd/s; final residual {:.2e}",
+        summary.epochs,
+        summary.mutations_applied,
+        summary.steady_updates_per_sec,
+        summary.final_solution.residual
+    );
+    Ok(())
+}
+
+fn figure_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec {
+            name: "help",
+            help: "show usage",
+            is_flag: true,
+            default: None,
+        },
+        OptSpec {
+            name: "id",
+            help: "paper figure id (1..4)",
+            is_flag: false,
+            default: Some("1"),
+        },
+        OptSpec {
+            name: "max-cost",
+            help: "iterations to chart",
+            is_flag: false,
+            default: Some("20"),
+        },
+    ]
+}
+
+fn cmd_figure(argv: &[String]) -> CliResult {
     let spec = figure_spec();
     let args = parse_args(argv, &spec)?;
     if args.has_flag("help") {
@@ -255,23 +558,41 @@ fn cmd_figure(argv: &[String]) -> anyhow::Result<()> {
 
 fn artifacts_spec() -> Vec<OptSpec> {
     vec![
-        OptSpec { name: "help", help: "show usage", is_flag: true, default: None },
-        OptSpec { name: "smoke", help: "execute the 2x4 d_sweep artifact", is_flag: true, default: None },
+        OptSpec {
+            name: "help",
+            help: "show usage",
+            is_flag: true,
+            default: None,
+        },
+        OptSpec {
+            name: "smoke",
+            help: "execute the 2x4 d_sweep artifact",
+            is_flag: true,
+            default: None,
+        },
     ]
 }
 
-fn cmd_artifacts(argv: &[String]) -> anyhow::Result<()> {
+fn cmd_artifacts(argv: &[String]) -> CliResult {
     let spec = artifacts_spec();
     let args = parse_args(argv, &spec)?;
     if args.has_flag("help") {
         print!("{}", usage("diter artifacts", "inspect AOT artifacts", &spec));
         return Ok(());
     }
+    if cfg!(not(feature = "pjrt")) {
+        return Err(
+            "built without the `pjrt` feature — rebuild with `--features pjrt` \
+             (requires the xla crate) to use the AOT artifact runtime"
+                .into(),
+        );
+    }
     if !Runtime::artifacts_available() {
-        anyhow::bail!(
+        return Err(format!(
             "no artifacts at {:?} — run `make artifacts` first",
             Runtime::default_dir()
-        );
+        )
+        .into());
     }
     let mut rt = Runtime::load_default()?;
     println!("PJRT platform: {}", rt.platform());
@@ -301,7 +622,9 @@ fn cmd_artifacts(argv: &[String]) -> anyhow::Result<()> {
         }
         let delta = dist1(&got, &want);
         println!("smoke d_sweep_2x4: PJRT vs rust Δ₁ = {delta:.3e}");
-        anyhow::ensure!(delta < 1e-12, "PJRT/rust mismatch");
+        if !(delta.is_finite() && delta < 1e-12) {
+            return Err(format!("PJRT/rust mismatch: Δ₁ = {delta:.3e}").into());
+        }
         println!("smoke OK");
     }
     Ok(())

@@ -175,6 +175,59 @@ impl MetricSet {
     }
 }
 
+/// Steady-state rate estimator (events/second) for long-running streams:
+/// each epoch folds one `(events, secs)` observation into an EWMA, so the
+/// streaming engine can report a stable updates/sec figure that is not
+/// dominated by the first (cold) epoch.
+#[derive(Clone, Debug)]
+pub struct RateMeter {
+    alpha: f64,
+    ewma: Option<f64>,
+    total_events: u64,
+    total_secs: f64,
+}
+
+impl RateMeter {
+    /// `alpha` ∈ (0, 1]: weight of the newest observation (1.0 = last-only).
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        Self {
+            alpha,
+            ewma: None,
+            total_events: 0,
+            total_secs: 0.0,
+        }
+    }
+
+    /// Record one observation window. Zero-length windows are ignored.
+    pub fn record(&mut self, events: u64, secs: f64) {
+        if secs <= 0.0 {
+            return;
+        }
+        self.total_events += events;
+        self.total_secs += secs;
+        let r = events as f64 / secs;
+        self.ewma = Some(match self.ewma {
+            None => r,
+            Some(prev) => self.alpha * r + (1.0 - self.alpha) * prev,
+        });
+    }
+
+    /// Smoothed steady-state rate (None until the first observation).
+    pub fn rate(&self) -> Option<f64> {
+        self.ewma
+    }
+
+    /// Lifetime mean rate over every recorded window.
+    pub fn mean_rate(&self) -> f64 {
+        if self.total_secs == 0.0 {
+            0.0
+        } else {
+            self.total_events as f64 / self.total_secs
+        }
+    }
+}
+
 /// A simple stopwatch for coarse phase timing.
 #[derive(Debug)]
 pub struct Stopwatch {
@@ -228,6 +281,18 @@ mod tests {
         let csv = traces_to_csv(&[a, b]);
         assert_eq!(csv.lines().count(), 4);
         assert!(csv.starts_with("series,cost,error"));
+    }
+
+    #[test]
+    fn rate_meter_smooths_and_totals() {
+        let mut r = RateMeter::new(0.5);
+        assert!(r.rate().is_none());
+        r.record(100, 1.0); // 100/s
+        r.record(300, 1.0); // 300/s -> ewma 200
+        assert!((r.rate().unwrap() - 200.0).abs() < 1e-9);
+        assert!((r.mean_rate() - 200.0).abs() < 1e-9);
+        r.record(0, 0.0); // ignored
+        assert!((r.mean_rate() - 200.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,272 @@
+//! The XLA/PJRT-backed runtime (compiled only with the `pjrt` feature).
+//!
+//! NOTE: this module requires the `xla` crate (xla_extension 0.5.1) in
+//! `[dependencies]`; it is intentionally not declared in Cargo.toml so the
+//! default (feature-off) build resolves with zero registry access. Add
+//! `xla = "0.5.1"` before enabling the feature.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::{check_len, default_artifact_dir, Manifest};
+use crate::error::{DiterError, Result};
+
+fn rt_err<E: std::fmt::Debug>(what: &'static str) -> impl FnOnce(E) -> DiterError {
+    move |e| DiterError::Runtime(format!("{what}: {e:?}"))
+}
+
+/// The PJRT-backed kernel runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Default artifact directory (next to the workspace root).
+    pub fn default_dir() -> PathBuf {
+        default_artifact_dir()
+    }
+
+    /// True if the artifact directory looks usable.
+    pub fn artifacts_available() -> bool {
+        Self::default_dir().join("manifest.txt").exists()
+    }
+
+    /// Load the manifest and start a CPU PJRT client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(rt_err("PjRtClient::cpu"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(Self::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for (kind, dims).
+    fn executable(&mut self, kind: &str, dims: &[usize]) -> Result<&xla::PjRtLoadedExecutable> {
+        let entry = self
+            .manifest
+            .find(kind, dims)
+            .ok_or_else(|| {
+                DiterError::Runtime(format!(
+                    "no artifact for {kind} dims {dims:?} in {}",
+                    self.dir.display()
+                ))
+            })?
+            .clone();
+        let key = entry.key();
+        if !self.cache.contains_key(&key) {
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .map_err(rt_err("HloModuleProto::from_text_file"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(rt_err("client.compile"))?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(&self.cache[&key])
+    }
+
+    /// Execute an artifact on literals; returns the flattened tuple parts.
+    fn exec(
+        &mut self,
+        kind: &str,
+        dims: &[usize],
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(kind, dims)?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(rt_err("execute"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(rt_err("to_literal_sync"))?;
+        // aot.py lowers with return_tuple=True
+        lit.to_tuple().map_err(rt_err("to_tuple"))
+    }
+
+    /// One D-iteration sweep over a dense row block (`d_sweep` artifact):
+    /// `H[idx[t]] ← P_rows[t]·H + B[t]` sequentially for t in 0..m.
+    pub fn d_sweep(
+        &mut self,
+        m: usize,
+        n: usize,
+        p_rows: &[f64],
+        idx: &[i32],
+        h: &[f64],
+        b: &[f64],
+    ) -> Result<Vec<f64>> {
+        check_len("p_rows", p_rows.len(), m * n)?;
+        check_len("idx", idx.len(), m)?;
+        check_len("h", h.len(), n)?;
+        check_len("b", b.len(), m)?;
+        let p_lit = xla::Literal::vec1(p_rows)
+            .reshape(&[m as i64, n as i64])
+            .map_err(rt_err("reshape p"))?;
+        let args = [
+            p_lit,
+            xla::Literal::vec1(idx),
+            xla::Literal::vec1(h),
+            xla::Literal::vec1(b),
+        ];
+        let parts = self.exec("d_sweep", &[m, n], &args)?;
+        parts[0].to_vec::<f64>().map_err(rt_err("to_vec"))
+    }
+
+    /// A PID work quantum (`d_round` artifact): two sweeps + block fluid.
+    /// Returns (new H, block fluid, r_k).
+    pub fn d_round(
+        &mut self,
+        m: usize,
+        n: usize,
+        p_rows: &[f64],
+        idx: &[i32],
+        h: &[f64],
+        b: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>, f64)> {
+        check_len("p_rows", p_rows.len(), m * n)?;
+        let p_lit = xla::Literal::vec1(p_rows)
+            .reshape(&[m as i64, n as i64])
+            .map_err(rt_err("reshape p"))?;
+        let args = [
+            p_lit,
+            xla::Literal::vec1(idx),
+            xla::Literal::vec1(h),
+            xla::Literal::vec1(b),
+        ];
+        let parts = self.exec("d_round", &[m, n], &args)?;
+        let h2 = parts[0].to_vec::<f64>().map_err(rt_err("h"))?;
+        let fluid = parts[1].to_vec::<f64>().map_err(rt_err("fluid"))?;
+        let rk = parts[2].get_first_element::<f64>().map_err(rt_err("rk"))?;
+        Ok((h2, fluid, rk))
+    }
+
+    /// One synchronous Jacobi step (`jacobi_step` artifact).
+    pub fn jacobi_step(&mut self, n: usize, p: &[f64], h: &[f64], b: &[f64]) -> Result<Vec<f64>> {
+        check_len("p", p.len(), n * n)?;
+        let p_lit = xla::Literal::vec1(p)
+            .reshape(&[n as i64, n as i64])
+            .map_err(rt_err("reshape p"))?;
+        let args = [p_lit, xla::Literal::vec1(h), xla::Literal::vec1(b)];
+        let parts = self.exec("jacobi_step", &[n], &args)?;
+        parts[0].to_vec::<f64>().map_err(rt_err("to_vec"))
+    }
+
+    /// Global remaining fluid (`fluid_norm` artifact).
+    pub fn fluid_norm(&mut self, n: usize, p: &[f64], h: &[f64], b: &[f64]) -> Result<f64> {
+        let p_lit = xla::Literal::vec1(p)
+            .reshape(&[n as i64, n as i64])
+            .map_err(rt_err("reshape p"))?;
+        let args = [p_lit, xla::Literal::vec1(h), xla::Literal::vec1(b)];
+        let parts = self.exec("fluid_norm", &[n], &args)?;
+        parts[0].get_first_element::<f64>().map_err(rt_err("r"))
+    }
+
+    /// One normalized power step (`power_step` artifact).
+    pub fn power_step(&mut self, n: usize, p: &[f64], x: &[f64]) -> Result<Vec<f64>> {
+        let p_lit = xla::Literal::vec1(p)
+            .reshape(&[n as i64, n as i64])
+            .map_err(rt_err("reshape p"))?;
+        let args = [p_lit, xla::Literal::vec1(x)];
+        let parts = self.exec("power_step", &[n], &args)?;
+        parts[0].to_vec::<f64>().map_err(rt_err("to_vec"))
+    }
+
+    /// One dense PageRank step (`pagerank_step` artifact).
+    pub fn pagerank_step(
+        &mut self,
+        n: usize,
+        s: &[f64],
+        x: &[f64],
+        teleport: &[f64],
+        damping: f64,
+    ) -> Result<Vec<f64>> {
+        let s_lit = xla::Literal::vec1(s)
+            .reshape(&[n as i64, n as i64])
+            .map_err(rt_err("reshape s"))?;
+        let args = [
+            s_lit,
+            xla::Literal::vec1(x),
+            xla::Literal::vec1(teleport),
+            xla::Literal::from(damping),
+        ];
+        let parts = self.exec("pagerank_step", &[n], &args)?;
+        parts[0].to_vec::<f64>().map_err(rt_err("to_vec"))
+    }
+}
+
+/// Hot-path dense-block engine for one partition: keeps the row block and
+/// index data prepared so a PID's work quantum is a single PJRT call
+/// (`d_round`: two sweeps + fluid + r_k in one fused program).
+pub struct DenseAccelerator {
+    m: usize,
+    n: usize,
+    p_rows: Vec<f64>,
+    idx: Vec<i32>,
+    b: Vec<f64>,
+}
+
+impl DenseAccelerator {
+    /// Prepare a dense block for `owned` rows of `problem`. Fails if no
+    /// artifact was compiled for this (m, n).
+    pub fn prepare(
+        runtime: &Runtime,
+        problem: &crate::solver::FixedPointProblem,
+        owned: &[usize],
+    ) -> Result<DenseAccelerator> {
+        let m = owned.len();
+        let n = problem.n();
+        if runtime.manifest().find("d_round", &[m, n]).is_none() {
+            return Err(DiterError::Runtime(format!(
+                "no d_round artifact for shape {m}x{n} — recompile via `make artifacts`"
+            )));
+        }
+        let p_rows = problem.matrix().csr().dense_row_block(owned);
+        let idx: Vec<i32> = owned.iter().map(|&i| i as i32).collect();
+        let b: Vec<f64> = owned.iter().map(|&i| problem.b()[i]).collect();
+        Ok(DenseAccelerator {
+            m,
+            n,
+            p_rows,
+            idx,
+            b,
+        })
+    }
+
+    /// Run one work quantum on the PJRT runtime. Returns (H', fluid, r_k).
+    pub fn round(&self, runtime: &mut Runtime, h: &[f64]) -> Result<(Vec<f64>, Vec<f64>, f64)> {
+        runtime.d_round(self.m, self.n, &self.p_rows, &self.idx, h, &self.b)
+    }
+
+    /// One plain sweep (d_sweep artifact), for callers that manage their
+    /// own share cadence.
+    pub fn sweep(&self, runtime: &mut Runtime, h: &[f64]) -> Result<Vec<f64>> {
+        runtime.d_sweep(self.m, self.n, &self.p_rows, &self.idx, h, &self.b)
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+}
+
+// NOTE on tests: everything PJRT-dependent lives in
+// `rust/tests/integration_runtime.rs`, gated on artifacts being present, so
+// `cargo test` stays green before `make artifacts`.

@@ -1,0 +1,147 @@
+//! No-op runtime compiled when the `pjrt` feature is off (the default).
+//!
+//! Exposes the exact API of [`super::pjrt`] so call sites (CLI `artifacts`
+//! subcommand, hotpath bench, artifact-gated integration tests) compile
+//! unchanged: [`Runtime::artifacts_available`] always reports `false`,
+//! every loader returns a [`DiterError::Runtime`] explaining the feature
+//! flag, and no execution path can ever be reached.
+
+use std::path::{Path, PathBuf};
+
+use super::{default_artifact_dir, Manifest};
+use crate::error::{DiterError, Result};
+
+fn disabled() -> DiterError {
+    DiterError::Runtime(
+        "built without the `pjrt` feature — rebuild with `--features pjrt` \
+         (requires the xla crate) to execute AOT artifacts"
+            .into(),
+    )
+}
+
+/// Stub runtime: never constructible, so all methods are unreachable in
+/// practice but keep the call sites type-checking.
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Default artifact directory (next to the workspace root).
+    pub fn default_dir() -> PathBuf {
+        default_artifact_dir()
+    }
+
+    /// Always false: artifacts cannot be executed without the feature.
+    pub fn artifacts_available() -> bool {
+        false
+    }
+
+    pub fn load(_dir: impl AsRef<Path>) -> Result<Runtime> {
+        Err(disabled())
+    }
+
+    pub fn load_default() -> Result<Runtime> {
+        Err(disabled())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "none (pjrt feature disabled)".into()
+    }
+
+    pub fn d_sweep(
+        &mut self,
+        _m: usize,
+        _n: usize,
+        _p_rows: &[f64],
+        _idx: &[i32],
+        _h: &[f64],
+        _b: &[f64],
+    ) -> Result<Vec<f64>> {
+        Err(disabled())
+    }
+
+    pub fn d_round(
+        &mut self,
+        _m: usize,
+        _n: usize,
+        _p_rows: &[f64],
+        _idx: &[i32],
+        _h: &[f64],
+        _b: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>, f64)> {
+        Err(disabled())
+    }
+
+    pub fn jacobi_step(
+        &mut self,
+        _n: usize,
+        _p: &[f64],
+        _h: &[f64],
+        _b: &[f64],
+    ) -> Result<Vec<f64>> {
+        Err(disabled())
+    }
+
+    pub fn fluid_norm(&mut self, _n: usize, _p: &[f64], _h: &[f64], _b: &[f64]) -> Result<f64> {
+        Err(disabled())
+    }
+
+    pub fn power_step(&mut self, _n: usize, _p: &[f64], _x: &[f64]) -> Result<Vec<f64>> {
+        Err(disabled())
+    }
+
+    pub fn pagerank_step(
+        &mut self,
+        _n: usize,
+        _s: &[f64],
+        _x: &[f64],
+        _teleport: &[f64],
+        _damping: f64,
+    ) -> Result<Vec<f64>> {
+        Err(disabled())
+    }
+}
+
+/// Stub accelerator with the same surface as the PJRT-backed one.
+pub struct DenseAccelerator {
+    m: usize,
+    n: usize,
+}
+
+impl DenseAccelerator {
+    pub fn prepare(
+        _runtime: &Runtime,
+        _problem: &crate::solver::FixedPointProblem,
+        _owned: &[usize],
+    ) -> Result<DenseAccelerator> {
+        Err(disabled())
+    }
+
+    pub fn round(&self, _runtime: &mut Runtime, _h: &[f64]) -> Result<(Vec<f64>, Vec<f64>, f64)> {
+        Err(disabled())
+    }
+
+    pub fn sweep(&self, _runtime: &mut Runtime, _h: &[f64]) -> Result<Vec<f64>> {
+        Err(disabled())
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_disabled() {
+        assert!(!Runtime::artifacts_available());
+        let err = Runtime::load_default().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

@@ -1,0 +1,196 @@
+//! Integration: the streaming engine — a continuous mutation stream must
+//! keep the distributed computation on the moving fixed point, matching a
+//! cold solve of whatever matrix the stream ends on (the arXiv:1203.1715 /
+//! 1301.3007 live-update regime, end to end).
+
+use std::time::Duration;
+
+use diter::coordinator::{v2, DistributedConfig, StreamingEngine};
+use diter::graph::{power_law_web_graph, ChurnModel, MutableDigraph, Mutation, MutationStream};
+use diter::linalg::vec_ops::{dist1, norm1};
+use diter::partition::Partition;
+use diter::solver::{DIteration, FixedPointProblem, SequenceKind, SolveOptions, Solver};
+
+fn cold_solution(problem: &FixedPointProblem) -> Vec<f64> {
+    let opts = SolveOptions {
+        tol: 1e-13,
+        max_cost: 200_000.0,
+        trace_every: 0.0,
+        exact: None,
+    };
+    DIteration::fluid_cyclic().solve(problem, &opts).unwrap().x
+}
+
+fn base_cfg(n: usize, k: usize, seed: u64) -> DistributedConfig {
+    DistributedConfig::new(Partition::contiguous(n, k).unwrap())
+        .with_tol(1e-10)
+        .with_seed(seed)
+}
+
+#[test]
+fn streamed_sequence_matches_cold_solve_on_final_matrix() {
+    // the satellite acceptance property: after a seeded sequence of
+    // mutation batches, the streamed solution equals (tolerance-bounded)
+    // a cold solve of the final matrix
+    let n = 300;
+    let g = power_law_web_graph(n, 5, 0.1, 17);
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let mut eng = StreamingEngine::new(mg, 0.85, true, base_cfg(n, 4, 17)).unwrap();
+    eng.converge().unwrap();
+
+    let mut stream = MutationStream::new(ChurnModel::RandomRewire, 99);
+    for b in 0..5 {
+        let batch = stream.next_batch(eng.graph(), 24);
+        let report = eng.apply_batch(&batch).unwrap();
+        assert!(
+            report.solution.converged,
+            "batch {b}: residual {:.3e}",
+            report.solution.residual
+        );
+    }
+    let want = cold_solution(eng.problem());
+    let summary = eng.finish().unwrap();
+    let delta = dist1(&summary.final_solution.x, &want);
+    assert!(delta < 1e-7, "streamed vs cold Δ₁ = {delta:.3e}");
+    assert_eq!(summary.epochs, 6, "initial solve + 5 batches");
+}
+
+#[test]
+fn mid_flight_rebases_with_latency_and_coalescing() {
+    // fluid conservation across the epoch boundary under the adversarial
+    // transport settings: message latency keeps parcels in flight when
+    // the first rebase lands (the engine must discard stale epochs and
+    // hold future ones, never losing or inventing fluid)
+    let n = 400;
+    let g = power_law_web_graph(n, 5, 0.1, 3);
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let mut cfg = base_cfg(n, 4, 3);
+    cfg.latency = Some((Duration::from_micros(50), Duration::from_micros(400)));
+    cfg.coalesce = diter::transport::CoalescePolicy {
+        min_mass: 1e-5,
+        max_entries: 64,
+    };
+    let mut eng = StreamingEngine::new(mg, 0.85, true, cfg).unwrap();
+    // NO initial converge: the first batch rebases a mid-flight epoch 0
+    let mut stream = MutationStream::new(ChurnModel::RandomRewire, 7);
+    for _ in 0..3 {
+        let batch = stream.next_batch(eng.graph(), 16);
+        let report = eng.apply_batch(&batch).unwrap();
+        assert!(
+            report.solution.converged,
+            "residual {:.3e}",
+            report.solution.residual
+        );
+        // mass conservation: patched dangling makes x a probability vector
+        assert!(
+            (norm1(&report.solution.x) - 1.0).abs() < 1e-6,
+            "‖x‖₁ = {}",
+            norm1(&report.solution.x)
+        );
+    }
+    let want = cold_solution(eng.problem());
+    let got = eng.solution().unwrap();
+    assert!(dist1(&got, &want) < 1e-7, "Δ₁ = {}", dist1(&got, &want));
+    eng.finish().unwrap();
+}
+
+#[test]
+fn growth_and_deactivation_renormalize_correctly() {
+    // node adds (with re-normalization via fresh out-degrees) and node
+    // removals must both land on the cold fixed point of the final graph
+    let n = 200;
+    let g = power_law_web_graph(150, 4, 0.1, 5); // 50 dormant coordinates
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let mut eng = StreamingEngine::new(mg, 0.85, true, base_cfg(n, 3, 5)).unwrap();
+    eng.converge().unwrap();
+
+    let mut grow = MutationStream::new(ChurnModel::PreferentialGrowth { links_per_node: 3 }, 41);
+    let batch = grow.next_batch(eng.graph(), 20);
+    assert!(
+        batch
+            .iter()
+            .any(|m| matches!(m, Mutation::NodeActivate { .. })),
+        "growth model must activate dormant nodes"
+    );
+    let report = eng.apply_batch(&batch).unwrap();
+    assert!(report.solution.converged);
+
+    // deactivate a few pages and reweight an edge
+    let mut batch2: Vec<Mutation> = (0..4)
+        .map(|i| Mutation::NodeDeactivate { node: 10 + i })
+        .collect();
+    let snapshot = eng.graph().to_digraph();
+    let reweight_to = *snapshot.out_neighbors(0).first().unwrap_or(&1);
+    batch2.push(Mutation::EdgeReweight {
+        from: 0,
+        to: reweight_to,
+        weight: 5.0,
+    });
+    let report = eng.apply_batch(&batch2).unwrap();
+    assert!(report.solution.converged);
+
+    let want = cold_solution(eng.problem());
+    let summary = eng.finish().unwrap();
+    let delta = dist1(&summary.final_solution.x, &want);
+    assert!(delta < 1e-7, "Δ₁ = {delta:.3e}");
+}
+
+#[test]
+fn hotspot_burst_shifts_rank_to_the_hot_page() {
+    let n = 250;
+    let g = power_law_web_graph(n, 5, 0.1, 19);
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let mut eng = StreamingEngine::new(mg, 0.85, true, base_cfg(n, 4, 19)).unwrap();
+    let before = eng.converge().unwrap().solution.x;
+
+    // aim the burst at a concrete node so the rank shift is checkable
+    let hot = 123usize;
+    let batch: Vec<Mutation> = (0..60)
+        .filter(|&s| s != hot)
+        .map(|s| Mutation::EdgeInsert {
+            from: s,
+            to: hot,
+            weight: 1.0,
+        })
+        .collect();
+    let report = eng.apply_batch(&batch).unwrap();
+    assert!(report.solution.converged);
+    assert!(
+        report.solution.x[hot] > before[hot] * 1.5,
+        "hot page rank {} -> {} should jump",
+        before[hot],
+        report.solution.x[hot]
+    );
+    eng.finish().unwrap();
+}
+
+#[test]
+fn warm_rebase_beats_cold_restart_in_updates() {
+    // the headline economics: for small batches, reconvergence after a
+    // warm rebase costs well under a cold V2 restart of the same matrix
+    let n = 600;
+    let g = power_law_web_graph(n, 6, 0.1, 29);
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let cfg = base_cfg(n, 4, 29).with_sequence(SequenceKind::GreedyMaxFluid);
+    let cold_cfg = cfg.clone();
+    let mut eng = StreamingEngine::new(mg, 0.85, true, cfg).unwrap();
+    eng.converge().unwrap();
+
+    let mut stream = MutationStream::new(ChurnModel::RandomRewire, 47);
+    let mut warm = 0u64;
+    let mut cold = 0u64;
+    for _ in 0..3 {
+        let batch = stream.next_batch(eng.graph(), 10);
+        let report = eng.apply_batch(&batch).unwrap();
+        assert!(report.solution.converged);
+        warm += report.solution.total_updates;
+        let cold_sol = v2::solve_v2(eng.problem(), &cold_cfg).unwrap();
+        assert!(cold_sol.converged);
+        cold += cold_sol.total_updates;
+    }
+    eng.finish().unwrap();
+    assert!(
+        warm < cold,
+        "warm rebases ({warm} updates) must beat cold restarts ({cold})"
+    );
+}

@@ -199,6 +199,77 @@ fn prop_rebase_equals_cold_start() {
     });
 }
 
+/// §3.2 distributed form: the full rebase `B' = P'·H + B − H` equals the
+/// concatenation of per-PID `rebase_b_slice` results over ANY partition —
+/// the identity the streaming engine's scatter step rests on.
+#[test]
+fn prop_rebase_b_equals_slice_concatenation() {
+    run_cases(40, 0x511CE, |g| {
+        let n = g.usize_in(2, 40);
+        let problem = random_problem(g, n);
+        let h = g.vec_f64(n, -2.0, 2.0);
+        let full = update::rebase_b(problem.matrix(), &h, problem.b()).unwrap();
+        // random (possibly wildly unbalanced) partition
+        let k = g.usize_in(1, n.min(5));
+        let owner_base: Vec<usize> = (0..n).map(|i| i % k).collect();
+        let perm = g.permutation(n);
+        let owner: Vec<usize> = perm.iter().map(|&i| owner_base[i]).collect();
+        let part = Partition::from_owner(owner, k).unwrap();
+        let mut assembled = vec![0.0; n];
+        for kk in 0..part.k() {
+            let slice = update::rebase_b_slice(problem.matrix(), part.part(kk), &h, problem.b());
+            for (t, &i) in part.part(kk).iter().enumerate() {
+                assembled[i] = slice[t];
+            }
+        }
+        for i in 0..n {
+            assert!(
+                (assembled[i] - full[i]).abs() < 1e-12,
+                "slice/full mismatch at {i}: {} vs {}",
+                assembled[i],
+                full[i]
+            );
+        }
+    });
+}
+
+/// Streaming engine: a random mutation sequence lands on the cold fixed
+/// point of the final matrix (threaded end-to-end, small cases).
+#[test]
+fn prop_streamed_mutations_match_cold_fixed_point() {
+    use diter::coordinator::StreamingEngine;
+    use diter::graph::{ChurnModel, MutableDigraph, MutationStream};
+    run_cases(4, 0x57E4A, |g| {
+        let n = g.usize_in(40, 90);
+        let web = diter::graph::power_law_web_graph(n, 4, 0.1, g.case_seed);
+        let mg = MutableDigraph::from_digraph(&web, n);
+        let k = g.usize_in(1, 3);
+        let cfg = DistributedConfig::new(Partition::contiguous(n, k).unwrap())
+            .with_tol(1e-10)
+            .with_seed(g.case_seed);
+        let mut eng = StreamingEngine::new(mg, 0.85, true, cfg).unwrap();
+        let mut stream = MutationStream::new(ChurnModel::RandomRewire, g.case_seed ^ 0xABCD);
+        for _ in 0..g.usize_in(1, 3) {
+            let batch = stream.next_batch(eng.graph(), g.usize_in(4, 16));
+            let report = eng.apply_batch(&batch).unwrap();
+            assert!(report.solution.converged, "residual {}", report.solution.residual);
+        }
+        let tight = SolveOptions {
+            tol: 1e-13,
+            max_cost: 100_000.0,
+            trace_every: 0.0,
+            exact: None,
+        };
+        let want = DIteration::fluid_cyclic()
+            .solve(eng.problem(), &tight)
+            .unwrap()
+            .x;
+        let summary = eng.finish().unwrap();
+        let delta = dist1(&summary.final_solution.x, &want);
+        assert!(delta < 1e-7, "streamed vs cold Δ₁ = {delta:.3e}");
+    });
+}
+
 /// Fluid-form residual ‖F‖₁ equals the directly-computed remaining fluid.
 #[test]
 fn prop_fluid_norm_equals_residual() {
