@@ -6,10 +6,26 @@
 //! [`AdaptiveController`] watches per-PID progress (scalar updates per
 //! wall second, as published through [`super::monitor::MonitorState`]) and
 //! recommends repartitioning actions. The mechanics (exact-cover-preserving
-//! [`Partition::split_part`] / [`Partition::merge_parts`]) live in the
-//! partition module; this controller supplies the *policy*.
+//! [`Partition::split_part`] / [`Partition::merge_parts`] /
+//! [`Partition::transfer`]) live in the partition module; this controller
+//! supplies the *policy*.
+//!
+//! Two policy surfaces:
+//!
+//! * [`AdaptiveController::decide`] — the paper's elastic form: grow or
+//!   shrink the PID count (split the straggler's Ω, merge the two fastest)
+//!   for deployments that can spawn/retire workers between runs.
+//! * [`AdaptiveController::plan_rebalance`] — the **live** form used by
+//!   the running engines: on a fixed worker pool, "splitting the slowest
+//!   PID's Ω_k" means offloading half of it to the fastest PID. The plan
+//!   is installed into the [`crate::partition::OwnershipTable`] and the
+//!   workers ship the `(H, B, F)` slices themselves (see
+//!   [`super::worker`]).
 
-use crate::partition::Partition;
+use std::time::{Duration, Instant};
+
+use crate::metrics::MetricSet;
+use crate::partition::{OwnershipTable, Partition};
 
 /// A recommended repartitioning action.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -55,7 +71,6 @@ pub struct AdaptiveController {
     pub policy: AdaptivePolicy,
 }
 
-
 impl AdaptiveController {
     pub fn new(policy: AdaptivePolicy) -> Self {
         Self { policy }
@@ -70,26 +85,15 @@ impl AdaptiveController {
         if k < 2 {
             return Adaptation::Keep;
         }
-        let rates: Vec<f64> = (0..k)
-            .map(|p| updates[p] as f64 / partition.part(p).len().max(1) as f64)
-            .collect();
-        let mut sorted = rates.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let median = sorted[k / 2];
+        let (rates, median) = per_coord_rates(partition, updates);
         if median <= 0.0 {
             return Adaptation::Keep; // no signal yet
         }
         // straggler? split it (if splittable and we have PID headroom)
-        let (slowest, &slow_rate) = rates
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
-        if slow_rate < self.policy.split_ratio * median
-            && partition.part(slowest).len() >= 2 * self.policy.min_part
-            && k < self.policy.max_pids
-        {
-            return Adaptation::Split { pid: slowest };
+        if k < self.policy.max_pids {
+            if let Some(pid) = self.straggler(partition, &rates, median) {
+                return Adaptation::Split { pid };
+            }
         }
         // two clear over-performers? merge them
         let mut by_rate: Vec<usize> = (0..k).collect();
@@ -107,6 +111,23 @@ impl AdaptiveController {
         Adaptation::Keep
     }
 
+    /// The straggler criterion shared by both policy surfaces: the
+    /// lowest-rate PID, provided it is below `split_ratio` × median and
+    /// its Ω is big enough to shed half.
+    fn straggler(&self, partition: &Partition, rates: &[f64], median: f64) -> Option<usize> {
+        let (slowest, &slow_rate) = rates
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())?;
+        if slow_rate < self.policy.split_ratio * median
+            && partition.part(slowest).len() >= 2 * self.policy.min_part
+        {
+            Some(slowest)
+        } else {
+            None
+        }
+    }
+
     /// Apply a decision, returning the (validated) new partition.
     pub fn apply(
         &self,
@@ -120,6 +141,174 @@ impl AdaptiveController {
         };
         next.validate()?;
         Ok(next)
+    }
+
+    /// The fixed-pool form of §4.3: if one PID's per-coordinate rate fell
+    /// below `split_ratio` × median over the observation window AND it
+    /// still holds fluid, move the upper half of its Ω to the fastest
+    /// PID. `updates` are the per-PID scalar-update counts over the
+    /// window; `backlog` is each PID's published remaining fluid — a
+    /// drained PID updates nothing because it is *idle*, not slow, and
+    /// must never be mistaken for a straggler.
+    pub fn plan_rebalance(
+        &self,
+        partition: &Partition,
+        updates: &[u64],
+        backlog: &[f64],
+    ) -> Option<HandoffPlan> {
+        let k = partition.k();
+        assert_eq!(updates.len(), k, "one update count per PID");
+        assert_eq!(backlog.len(), k, "one backlog reading per PID");
+        if k < 2 {
+            return None;
+        }
+        let (rates, median) = per_coord_rates(partition, updates);
+        if median <= 0.0 {
+            return None; // no signal yet
+        }
+        let slowest = self.straggler(partition, &rates, median)?;
+        if backlog[slowest] <= 0.0 {
+            return None; // fluid-starved, not struggling
+        }
+        let (fastest, _) = rates
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())?;
+        if fastest == slowest {
+            return None;
+        }
+        let members = partition.part(slowest);
+        Some(HandoffPlan {
+            from: slowest,
+            to: fastest,
+            coords: members[members.len() / 2..].to_vec(),
+        })
+    }
+}
+
+/// Per-coordinate update rates and their median (the shared normalization
+/// of both [`AdaptiveController::decide`] and
+/// [`AdaptiveController::plan_rebalance`]).
+fn per_coord_rates(partition: &Partition, updates: &[u64]) -> (Vec<f64>, f64) {
+    let k = partition.k();
+    let rates: Vec<f64> = (0..k)
+        .map(|p| updates[p] as f64 / partition.part(p).len().max(1) as f64)
+        .collect();
+    let mut sorted = rates.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (rates, sorted[k / 2])
+}
+
+/// A concrete coordinate move on a fixed worker pool.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HandoffPlan {
+    /// straggling PID shedding load
+    pub from: usize,
+    /// fastest PID absorbing it
+    pub to: usize,
+    /// the coordinates to move (half of `from`'s Ω)
+    pub coords: Vec<usize>,
+}
+
+/// Knobs for live adaptation inside a running engine.
+#[derive(Clone, Debug)]
+pub struct AdaptiveConfig {
+    pub policy: AdaptivePolicy,
+    /// minimum wall time between rebalance decisions (the observation
+    /// window over which per-PID rates are measured)
+    pub interval: Duration,
+    /// hard cap on ownership moves per run (runaway guard)
+    pub max_moves: u64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        Self {
+            policy: AdaptivePolicy::default(),
+            interval: Duration::from_millis(40),
+            max_moves: 1000,
+        }
+    }
+}
+
+/// Leader-side driver: windows the per-PID update counters, asks the
+/// controller for a plan, and installs it into the ownership table. Used
+/// by both `solve_v2`'s monitor loop and `StreamingEngine::converge`.
+pub struct AdaptiveDriver {
+    ctl: AdaptiveController,
+    interval: Duration,
+    max_moves: u64,
+    /// below this much total fluid the run is nearly drained — migrating
+    /// then buys nothing and only races the shutdown
+    min_total: f64,
+    last_decision: Instant,
+    last_counts: Vec<u64>,
+    moves: u64,
+}
+
+impl AdaptiveDriver {
+    pub fn new(cfg: &AdaptiveConfig, k: usize, tol: f64) -> AdaptiveDriver {
+        AdaptiveDriver {
+            ctl: AdaptiveController::new(cfg.policy),
+            interval: cfg.interval,
+            max_moves: cfg.max_moves,
+            min_total: tol * 100.0,
+            last_decision: Instant::now(),
+            last_counts: vec![0; k],
+            moves: 0,
+        }
+    }
+
+    /// Ownership moves installed so far.
+    pub fn moves(&self) -> u64 {
+        self.moves
+    }
+
+    /// Poll with the current cumulative per-PID update counts, per-PID
+    /// published fluid backlog, and the monitored total fluid; installs at
+    /// most one rebalance per elapsed interval. Returns whether a new
+    /// ownership map was installed.
+    pub fn poll(
+        &mut self,
+        table: &OwnershipTable,
+        counts: &[u64],
+        backlog: &[f64],
+        total: f64,
+        metrics: &MetricSet,
+    ) -> bool {
+        if !total.is_finite() || total <= self.min_total {
+            return false; // not every PID published yet, or nearly drained
+        }
+        if self.last_decision.elapsed() < self.interval || self.moves >= self.max_moves {
+            return false;
+        }
+        if !table.all_acked(table.version()) || table.handoffs_inflight() > 0 {
+            return false; // let the previous move land before measuring
+        }
+        let deltas: Vec<u64> = counts
+            .iter()
+            .zip(&self.last_counts)
+            .map(|(now, base)| now.saturating_sub(*base))
+            .collect();
+        self.last_counts = counts.to_vec();
+        self.last_decision = Instant::now();
+        let part = table.partition();
+        let Some(plan) = self.ctl.plan_rebalance(&part, &deltas, backlog) else {
+            return false;
+        };
+        let Ok(next) = part.transfer(&plan.coords, plan.to) else {
+            return false;
+        };
+        if table.install(next).is_none() {
+            return false; // frozen (epoch transition in progress)
+        }
+        self.moves += 1;
+        metrics.set("handoffs_planned", self.moves);
+        metrics.set(
+            "load_imbalance_ppm",
+            (table.partition().imbalance() * 1e6) as u64,
+        );
+        true
     }
 }
 
@@ -213,5 +402,73 @@ mod tests {
         let p = Partition::contiguous(40, 4).unwrap();
         let a = c.decide(&p, &[100, 100, 10, 100]);
         assert_eq!(a, Adaptation::Keep, "at the PID cap, no split");
+    }
+
+    #[test]
+    fn rebalance_moves_half_of_straggler_to_fastest() {
+        let p = Partition::contiguous(40, 4).unwrap();
+        let backlog = [1.0; 4];
+        let plan = ctl()
+            .plan_rebalance(&p, &[100, 180, 20, 100], &backlog)
+            .unwrap();
+        assert_eq!(plan.from, 2);
+        assert_eq!(plan.to, 1);
+        assert_eq!(plan.coords, p.part(2)[5..].to_vec(), "upper half of Ω_2");
+        let next = p.transfer(&plan.coords, plan.to).unwrap();
+        next.validate().unwrap();
+        assert_eq!(next.part_sizes(), vec![10, 15, 5, 10]);
+    }
+
+    #[test]
+    fn rebalance_keeps_when_balanced_tiny_or_drained() {
+        let p = Partition::contiguous(40, 4).unwrap();
+        let backlog = [1.0; 4];
+        assert!(ctl()
+            .plan_rebalance(&p, &[100, 110, 95, 105], &backlog)
+            .is_none());
+        assert!(ctl().plan_rebalance(&p, &[0, 0, 0, 0], &backlog).is_none());
+        // a low-rate PID with NO fluid is idle, not slow — never offloaded
+        assert!(ctl()
+            .plan_rebalance(&p, &[100, 100, 0, 100], &[1.0, 1.0, 0.0, 1.0])
+            .is_none());
+        let policy = AdaptivePolicy {
+            min_part: 10,
+            ..Default::default()
+        };
+        let c = AdaptiveController::new(policy);
+        // straggler's part (10) is below 2×min_part: nothing to shed
+        assert!(c
+            .plan_rebalance(&p, &[100, 100, 10, 100], &backlog)
+            .is_none());
+    }
+
+    #[test]
+    fn driver_installs_on_straggler_trace() {
+        use crate::metrics::MetricSet;
+        use crate::partition::OwnershipTable;
+        let table = OwnershipTable::new(Partition::contiguous(40, 4).unwrap());
+        let metrics = MetricSet::new(&["handoffs_planned", "load_imbalance_ppm"]);
+        let cfg = AdaptiveConfig {
+            interval: Duration::from_millis(0),
+            ..Default::default()
+        };
+        let mut driver = AdaptiveDriver::new(&cfg, 4, 1e-9);
+        let backlog = [0.5; 4];
+        // synthetic straggler trace: PID 2 at 20% of the others
+        assert!(driver.poll(&table, &[100, 100, 20, 100], &backlog, 2.0, &metrics));
+        assert_eq!(driver.moves(), 1);
+        assert_eq!(table.version(), 1);
+        assert!(table.partition().part(2).len() < 10);
+        assert!(metrics.get("load_imbalance_ppm") > 1_000_000);
+        // nearly-drained run: no further migration
+        assert!(!driver.poll(&table, &[200, 200, 40, 200], &backlog, 1e-8, &metrics));
+        // frozen table: decision is a no-op (workers synced ⇒ acked)
+        table.ack_version(0, 1);
+        table.ack_version(1, 1);
+        table.ack_version(2, 1);
+        table.ack_version(3, 1);
+        table.freeze();
+        assert!(!driver.poll(&table, &[300, 300, 60, 300], &backlog, 2.0, &metrics));
+        assert_eq!(driver.moves(), 1);
     }
 }

@@ -19,6 +19,13 @@
 //! rebase `B' = F + (P'−P)·H`, and [`stream`] builds on it: a long-running
 //! [`stream::StreamingEngine`] that keeps the V2 workers diffusing across
 //! graph-mutation epochs instead of restarting.
+//!
+//! [`worker`] is the shared per-PID fluid loop both [`v2`] and [`stream`]
+//! instantiate: it routes through a **versioned ownership table** rather
+//! than a static partition, which is what makes §4.3's speed adaptation a
+//! *live* operation — [`adaptive`] supplies the policy, the worker core
+//! ships `(H, B, F)` slices between PIDs over the bus (`Handoff` control
+//! messages) without stopping the diffusion or losing a unit of fluid.
 
 pub mod adaptive;
 pub mod monitor;
@@ -27,8 +34,11 @@ pub mod stream;
 pub mod update;
 pub mod v1;
 pub mod v2;
+pub mod worker;
 
+pub use adaptive::{AdaptiveConfig, AdaptiveController, AdaptivePolicy, HandoffPlan};
 pub use stream::{EpochReport, StreamSummary, StreamingEngine};
+pub use worker::{Handoff, WorkerMsg};
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -61,6 +71,20 @@ pub struct DistributedConfig {
     pub coalesce: CoalescePolicy,
     /// RNG seed (sequences, latency jitter)
     pub seed: u64,
+    /// live §4.3 repartitioning (None = static partition for the run)
+    pub adaptive: Option<AdaptiveConfig>,
+    /// artificially cap one PID's update rate (straggler injection for
+    /// adaptive-repartitioning experiments and tests)
+    pub straggler: Option<Straggler>,
+}
+
+/// Straggler injection: PID `pid` is throttled to at most
+/// `updates_per_sec` scalar diffusions per second (a simulated slow or
+/// oversubscribed machine).
+#[derive(Clone, Copy, Debug)]
+pub struct Straggler {
+    pub pid: usize,
+    pub updates_per_sec: f64,
 }
 
 impl DistributedConfig {
@@ -76,6 +100,8 @@ impl DistributedConfig {
             latency: None,
             coalesce: CoalescePolicy::default(),
             seed: 0,
+            adaptive: None,
+            straggler: None,
         }
     }
 
@@ -91,6 +117,19 @@ impl DistributedConfig {
 
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    pub fn with_adaptive(mut self, adaptive: AdaptiveConfig) -> Self {
+        self.adaptive = Some(adaptive);
+        self
+    }
+
+    pub fn with_straggler(mut self, pid: usize, updates_per_sec: f64) -> Self {
+        self.straggler = Some(Straggler {
+            pid,
+            updates_per_sec,
+        });
         self
     }
 }

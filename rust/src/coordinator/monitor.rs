@@ -55,8 +55,21 @@ impl MonitorState {
         self.published.iter().map(AtomicF64::get).sum()
     }
 
+    /// Per-PID published remaining fluid (the rebalancer's backlog view).
+    pub fn published_values(&self) -> Vec<f64> {
+        self.published.iter().map(AtomicF64::get).collect()
+    }
+
     pub fn total_updates(&self) -> u64 {
         self.updates.iter().map(|u| u.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Per-PID cumulative update counts (the adaptive controller's input).
+    pub fn update_counts(&self) -> Vec<u64> {
+        self.updates
+            .iter()
+            .map(|u| u.load(Ordering::Relaxed))
+            .collect()
     }
 
     pub fn max_updates(&self) -> u64 {
@@ -80,6 +93,24 @@ pub fn run_monitor(
     poll: Duration,
     stable_polls: usize,
 ) -> (bool, ConvergenceTrace, f64) {
+    run_monitor_with(state, bus, n, tol, max_wall, poll, stable_polls, |_| {})
+}
+
+/// [`run_monitor`] with a per-poll hook: `on_poll(total_fluid)` runs once
+/// per sample, before the convergence check — the leader-side seam where
+/// the adaptive repartitioning driver observes progress and installs
+/// ownership changes while the workers keep diffusing.
+#[allow(clippy::too_many_arguments)]
+pub fn run_monitor_with(
+    state: &MonitorState,
+    bus: &BusMonitor,
+    n: usize,
+    tol: f64,
+    max_wall: Duration,
+    poll: Duration,
+    stable_polls: usize,
+    mut on_poll: impl FnMut(f64),
+) -> (bool, ConvergenceTrace, f64) {
     let t0 = Instant::now();
     let deadline = t0 + max_wall;
     let mut trace = ConvergenceTrace::new("monitor-total-fluid");
@@ -91,6 +122,7 @@ pub fn run_monitor(
         if total.is_finite() {
             trace.push(cost, total);
         }
+        on_poll(total);
         // quiescence: no message may be awaiting application — a PID that
         // hasn't absorbed a peer update yet publishes a stale (possibly
         // zero) r_k, so `total` alone can transiently under-count.

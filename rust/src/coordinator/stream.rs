@@ -5,23 +5,33 @@
 //!
 //! ## Epoch / rebase protocol
 //!
-//! The engine owns one persistent worker thread per PID (the same
-//! partial-state fluid scheme as [`super::v2`]) plus a coordinator-side
-//! control channel. Applying a mutation batch advances an **epoch**:
+//! The engine owns one persistent worker thread per PID (the shared
+//! [`super::worker::WorkerCore`] loop, same partial-state fluid scheme as
+//! [`super::v2`]) plus a coordinator-side control channel. Applying a
+//! mutation batch advances an **epoch**:
 //!
-//! 1. **Checkpoint** — each worker is asked to pause; it replies with its
-//!    owned history slice `H_k` and waits. Any H snapshot is a valid
-//!    rebase point: the §3.2 identity `B' = P'·H + B − H` holds for
-//!    *whatever* H the computation has reached, converged or not.
-//! 2. **Rebuild** — the mutated [`MutableDigraph`] re-derives the
-//!    column-renormalized PageRank system `(P', B)`.
-//! 3. **Rebase + scatter** — the coordinator assembles the full H,
+//! 1. **Quiesce handoffs** — with live repartitioning the coordinate →
+//!    PID map is dynamic: the engine freezes the
+//!    [`crate::partition::OwnershipTable`] (no new rebalances) and waits
+//!    for `handoffs_inflight == 0`, so no `(H, F)` slice is riding the
+//!    bus when the history is gathered. Workers keep diffusing.
+//! 2. **Checkpoint** — each worker is asked to pause; it replies with the
+//!    coordinate range it *currently holds* and its history slice `H_k`
+//!    over that range, and waits. Any H snapshot is a valid rebase point:
+//!    the §3.2 identity `B' = P'·H + B − H` holds for *whatever* H the
+//!    computation has reached, converged or not.
+//! 3. **Rebuild** — the mutated [`MutableDigraph`] re-derives the
+//!    column-renormalized PageRank system `(P', B)` (patching only the
+//!    mutated columns of the cached matrix).
+//! 4. **Rebase + scatter** — the coordinator assembles the full H,
 //!    computes each PID's slice of the new fluid `F' = B' = P'·H + B − H`
-//!    via [`update::rebase_b_slice`] (the per-PID form: only the PID's
-//!    rows of P' are read), and resumes every worker with its slice.
-//!    Workers keep their H — **the computation never restarts**.
-//! 4. **Converge** — workers diffuse under the new matrix until the
-//!    monitored total fluid drops below tolerance.
+//!    over its held range via [`update::rebase_b_slice`] (only those rows
+//!    of P' are read), and resumes every worker with its slice. Workers
+//!    keep their H — **the computation never restarts**.
+//! 5. **Converge** — workers diffuse under the new matrix until the
+//!    monitored total fluid drops below tolerance; with `cfg.adaptive`
+//!    set, the §4.3 rebalance driver runs inside this wait and may move
+//!    ownership between PIDs mid-epoch.
 //!
 //! ## No bus draining
 //!
@@ -34,73 +44,44 @@
 //! new-epoch fluid is ever lost and the monitor can never observe an
 //! under-count.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::adaptive::AdaptiveDriver;
+use super::monitor::MonitorState;
 use super::update;
+use super::worker::{WorkerCore, WorkerMsg, WORKER_METRICS};
 use super::{DistributedConfig, DistributedSolution};
 use crate::error::{DiterError, Result};
 use crate::graph::{MutableDigraph, Mutation};
 use crate::linalg::vec_ops::norm1;
 use crate::metrics::{ConvergenceTrace, MetricSet, RateMeter};
-use crate::partition::Partition;
-use crate::solver::{FixedPointProblem, GreedyQueue, SequenceKind, SequenceState};
-use crate::transport::{
-    bus, monitor_of, AtomicF64, BusConfig, BusMonitor, CoalesceBuffer, Endpoint, Received,
-};
+use crate::partition::{OwnershipTable, Partition};
+use crate::solver::FixedPointProblem;
+use crate::transport::{bus_with_metrics, monitor_of, BusConfig, BusMonitor};
 
-/// Epoch-tagged V2 fluid message.
-#[derive(Clone, Debug)]
-pub struct EpochFluid {
-    pub epoch: u64,
-    pub parcels: Vec<(usize, f64)>,
-}
-
-/// Coordinator → worker control messages.
+/// Coordinator → worker control messages. Checkpoint/Snapshot replies
+/// carry `(pid, held coords, H slice)` — with live repartitioning the
+/// held range is dynamic, so the coordinates always travel with the data.
 enum Ctrl {
-    /// Pause, reply with the owned H slice, wait for `Resume`.
-    Checkpoint { reply: Sender<(usize, Vec<f64>)> },
+    /// Pause, reply with the held range + H slice, wait for `Resume`.
+    Checkpoint {
+        reply: Sender<(usize, Vec<usize>, Vec<f64>)>,
+    },
     /// New epoch: swap the matrix, reset the fluid slice, keep H.
     Resume {
         epoch: u64,
         problem: Arc<FixedPointProblem>,
         f_slice: Vec<f64>,
     },
-    /// Non-pausing read of the owned H slice (worker keeps running).
-    Snapshot { reply: Sender<(usize, Vec<f64>)> },
-    /// Terminate; the final H slice comes back through the join handle.
+    /// Non-pausing read of the held range + H (worker keeps running).
+    Snapshot {
+        reply: Sender<(usize, Vec<usize>, Vec<f64>)>,
+    },
+    /// Terminate; the final (Ω, H) comes back through the join handle.
     Shutdown,
-}
-
-/// Leader/worker shared state (the per-epoch convergence monitor's view).
-struct StreamShared {
-    /// per-PID published remaining fluid (local F + held coalesce mass)
-    published: Vec<AtomicF64>,
-    /// per-PID cumulative scalar-update counters
-    updates: Vec<AtomicU64>,
-}
-
-impl StreamShared {
-    fn new(k: usize) -> Arc<Self> {
-        Arc::new(Self {
-            published: (0..k).map(|_| AtomicF64::new(f64::INFINITY)).collect(),
-            updates: (0..k).map(|_| AtomicU64::new(0)).collect(),
-        })
-    }
-
-    fn published_total(&self) -> f64 {
-        self.published.iter().map(AtomicF64::get).sum()
-    }
-
-    fn update_counts(&self) -> Vec<u64> {
-        self.updates
-            .iter()
-            .map(|u| u.load(Ordering::Relaxed))
-            .collect()
-    }
 }
 
 /// Report for one epoch (one mutation batch, or the initial solve).
@@ -129,19 +110,21 @@ pub struct StreamSummary {
 }
 
 /// The streaming engine: owns the evolving graph, the persistent V2
-/// workers, and the epoch protocol.
+/// workers, the versioned ownership table, and the epoch protocol.
 pub struct StreamingEngine {
     graph: MutableDigraph,
     damping: f64,
     patch_dangling: bool,
     cfg: DistributedConfig,
-    partition: Arc<Partition>,
+    k: usize,
+    table: Arc<OwnershipTable>,
     problem: Arc<FixedPointProblem>,
-    shared: Arc<StreamShared>,
+    shared: Arc<MonitorState>,
     bus_mon: BusMonitor,
     bus_metrics: Arc<MetricSet>,
     ctrl: Vec<Sender<Ctrl>>,
     handles: Vec<JoinHandle<(Vec<usize>, Vec<f64>)>>,
+    driver: Option<AdaptiveDriver>,
     epoch: u64,
     /// per-PID update counters at the current epoch's start
     epoch_base: Vec<u64>,
@@ -161,6 +144,7 @@ impl StreamingEngine {
         patch_dangling: bool,
         cfg: DistributedConfig,
     ) -> Result<StreamingEngine> {
+        let mut graph = graph;
         let n = graph.n();
         if cfg.partition.n() != n {
             return Err(DiterError::shape("StreamingEngine partition", n, cfg.partition.n()));
@@ -168,31 +152,38 @@ impl StreamingEngine {
         let sys = graph.pagerank_system(damping, patch_dangling)?;
         let problem = Arc::new(FixedPointProblem::new(sys.matrix, sys.b)?);
         let k = cfg.partition.k();
-        let shared = StreamShared::new(k);
-        let (endpoints, bus_metrics) = bus::<EpochFluid>(
+        let shared = MonitorState::new(k);
+        let (endpoints, bus_metrics) = bus_with_metrics::<WorkerMsg>(
             k,
             &BusConfig {
                 latency: cfg.latency,
                 seed: cfg.seed,
             },
+            WORKER_METRICS,
         );
         let bus_mon = monitor_of(&endpoints[0]);
-        let partition = Arc::new(cfg.partition.clone());
+        let table = OwnershipTable::new(cfg.partition.clone());
+        let driver = cfg
+            .adaptive
+            .as_ref()
+            .map(|a| AdaptiveDriver::new(a, k, cfg.tol));
 
         let mut ctrl = Vec::with_capacity(k);
         let mut handles = Vec::with_capacity(k);
         for (kk, ep) in endpoints.into_iter().enumerate() {
             let (tx, rx) = channel::<Ctrl>();
             ctrl.push(tx);
-            let worker = StreamWorker::new(
-                kk,
-                ep,
-                rx,
-                problem.clone(),
-                partition.clone(),
-                shared.clone(),
-                cfg.clone(),
-            );
+            let worker = StreamWorker {
+                core: WorkerCore::new(
+                    kk,
+                    ep,
+                    problem.clone(),
+                    table.clone(),
+                    shared.clone(),
+                    cfg.clone(),
+                ),
+                ctrl: rx,
+            };
             handles.push(std::thread::spawn(move || worker.run()));
         }
         Ok(StreamingEngine {
@@ -200,13 +191,15 @@ impl StreamingEngine {
             damping,
             patch_dangling,
             cfg,
-            partition,
+            k,
+            table,
             problem,
             shared,
             bus_mon,
             bus_metrics,
             ctrl,
             handles,
+            driver,
             epoch: 0,
             epoch_base: vec![0; k],
             epochs_done: 0,
@@ -228,6 +221,22 @@ impl StreamingEngine {
     /// The fixed-point system of the current epoch.
     pub fn problem(&self) -> &FixedPointProblem {
         &self.problem
+    }
+
+    /// The current coordinate → PID ownership map (moves under adaptive
+    /// repartitioning).
+    pub fn ownership(&self) -> Arc<Partition> {
+        self.table.partition()
+    }
+
+    /// Ownership handoffs shipped so far.
+    pub fn handoffs_total(&self) -> u64 {
+        self.table.handoffs_total()
+    }
+
+    /// Per-PID cumulative scalar-update counts.
+    pub fn update_counts(&self) -> Vec<u64> {
+        self.shared.update_counts()
     }
 
     /// EWMA steady-state updates/sec over completed epochs.
@@ -256,7 +265,8 @@ impl StreamingEngine {
     }
 
     /// Wait for the current epoch to reach the configured tolerance and
-    /// return its report (epoch-scoped cost/wall/trace).
+    /// return its report (epoch-scoped cost/wall/trace). With adaptation
+    /// enabled, the §4.3 rebalance driver runs inside this wait.
     pub fn converge(&mut self) -> Result<EpochReport> {
         let n = self.problem.n();
         let t0 = Instant::now();
@@ -266,16 +276,27 @@ impl StreamingEngine {
         let mut stable = 0usize;
         let mut converged = false;
         let mut trace = ConvergenceTrace::new(format!("stream-epoch-{}", self.epoch));
+        let tol = self.cfg.tol;
         loop {
             let total = self.shared.published_total() + self.bus_mon.inflight_or_zero();
             let cost = self.epoch_cost(n);
             if total.is_finite() {
                 trace.push(cost, total);
             }
+            if let Some(d) = self.driver.as_mut() {
+                d.poll(
+                    &self.table,
+                    &self.shared.update_counts(),
+                    &self.shared.published_values(),
+                    total,
+                    &self.bus_metrics,
+                );
+            }
             // quiescence needs every sent parcel applied or discarded —
             // stashed future-epoch parcels stay uncommitted, so a rebase
-            // racing this check can never fake convergence
-            if total < self.cfg.tol && self.bus_mon.undelivered() == 0 {
+            // racing this check can never fake convergence; the same
+            // check covers in-flight handoff slices (they ride the bus)
+            if total < tol && self.bus_mon.undelivered() == 0 {
                 stable += 1;
                 if stable >= stable_needed {
                     converged = true;
@@ -373,45 +394,71 @@ impl StreamingEngine {
             / n as f64
     }
 
-    /// The epoch transition: checkpoint → rebuild → per-PID rebase →
-    /// resume. See the module docs for the protocol invariants.
+    /// The epoch transition: quiesce handoffs → checkpoint → rebuild →
+    /// per-PID rebase → resume. See the module docs for the invariants.
     fn rebase(&mut self) -> Result<()> {
+        // no ownership installs while the epoch transition is in progress
+        self.table.freeze();
+        let r = self.rebase_frozen();
+        self.table.unfreeze();
+        r
+    }
+
+    fn rebase_frozen(&mut self) -> Result<()> {
         let n = self.problem.n();
-        let k = self.partition.k();
-        // 1. checkpoint every worker (they pause as the requests land;
+        // 1. wait until every worker has synced with the final (frozen)
+        //    ownership version AND every shipped (H, F) slice has folded
+        //    into its recipient — only then is the gathered history
+        //    guaranteed complete. Workers keep running meanwhile (they
+        //    are the ones applying the handoffs). The ack must be checked
+        //    BEFORE the inflight count: workers book begin_handoff before
+        //    acking, so this order can never observe a spurious zero.
+        let v = self.table.version();
+        let quiesce_deadline = Instant::now() + Duration::from_secs(10);
+        while !(self.table.all_acked(v) && self.table.handoffs_inflight() == 0) {
+            if Instant::now() >= quiesce_deadline {
+                return Err(DiterError::Coordinator(
+                    "handoff quiesce timed out before rebase".into(),
+                ));
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        // 2. checkpoint every worker (they pause as the requests land;
         //    workers still running only produce old-epoch parcels, which
         //    the new epoch discards on arrival)
-        let (tx, rx) = channel::<(usize, Vec<f64>)>();
+        let (tx, rx) = channel::<(usize, Vec<usize>, Vec<f64>)>();
         for c in &self.ctrl {
             c.send(Ctrl::Checkpoint { reply: tx.clone() })
                 .map_err(|_| DiterError::Coordinator("stream worker gone".into()))?;
         }
         drop(tx);
         let mut h = vec![0.0; n];
-        for _ in 0..k {
-            let (kk, slice) = rx
+        let mut held: Vec<(usize, Vec<usize>)> = Vec::with_capacity(self.k);
+        for _ in 0..self.k {
+            let (kk, coords, slice) = rx
                 .recv_timeout(Duration::from_secs(30))
                 .map_err(|_| DiterError::Coordinator("checkpoint reply timed out".into()))?;
-            for (t, &i) in self.partition.part(kk).iter().enumerate() {
+            for (t, &i) in coords.iter().enumerate() {
                 h[i] = slice[t];
             }
+            held.push((kk, coords));
         }
-        // 2. rebuild the system from the mutated graph
+        // 3. rebuild the system from the mutated graph
         let sys = self.graph.pagerank_system(self.damping, self.patch_dangling)?;
         let problem = Arc::new(FixedPointProblem::new(sys.matrix, sys.b)?);
-        // 3. per-PID rebase (only the PID's rows of P' are read) + resume
+        // 4. per-PID rebase over each worker's held range + resume
         self.epoch += 1;
-        for (kk, c) in self.ctrl.iter().enumerate() {
-            let owned = self.partition.part(kk);
-            let f_slice = update::rebase_b_slice(problem.matrix(), owned, &h, problem.b());
+        for (kk, coords) in held {
+            let f_slice = update::rebase_b_slice(problem.matrix(), &coords, &h, problem.b());
             // pre-publish so the monitor can't see a stale near-zero total
-            self.shared.published[kk].set(norm1(&f_slice));
-            c.send(Ctrl::Resume {
-                epoch: self.epoch,
-                problem: problem.clone(),
-                f_slice,
-            })
-            .map_err(|_| DiterError::Coordinator("stream worker gone".into()))?;
+            self.shared.publish(kk, norm1(&f_slice));
+            self.ctrl[kk]
+                .send(Ctrl::Resume {
+                    epoch: self.epoch,
+                    problem: problem.clone(),
+                    f_slice,
+                })
+                .map_err(|_| DiterError::Coordinator("stream worker gone".into()))?;
         }
         self.problem = problem;
         self.epoch_base = self.shared.update_counts();
@@ -421,19 +468,30 @@ impl StreamingEngine {
     /// Gather the assembled H from all workers without pausing them.
     fn gather(&self) -> Result<Vec<f64>> {
         let n = self.problem.n();
-        let k = self.partition.k();
-        let (tx, rx) = channel::<(usize, Vec<f64>)>();
+        // best-effort quiesce: a handoff slice in flight is held by
+        // neither worker, so snapshotting mid-migration would read zeros
+        // for the moving range. No installs can race this (the adaptive
+        // driver runs on this same thread), so waiting terminates; the
+        // deadline only guards against a wedged worker.
+        let v = self.table.version();
+        let quiesce_deadline = Instant::now() + Duration::from_secs(2);
+        while !(self.table.all_acked(v) && self.table.handoffs_inflight() == 0)
+            && Instant::now() < quiesce_deadline
+        {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        let (tx, rx) = channel::<(usize, Vec<usize>, Vec<f64>)>();
         for c in &self.ctrl {
             c.send(Ctrl::Snapshot { reply: tx.clone() })
                 .map_err(|_| DiterError::Coordinator("stream worker gone".into()))?;
         }
         drop(tx);
         let mut x = vec![0.0; n];
-        for _ in 0..k {
-            let (kk, slice) = rx
+        for _ in 0..self.k {
+            let (_kk, coords, slice) = rx
                 .recv_timeout(Duration::from_secs(30))
                 .map_err(|_| DiterError::Coordinator("snapshot reply timed out".into()))?;
-            for (t, &i) in self.partition.part(kk).iter().enumerate() {
+            for (t, &i) in coords.iter().enumerate() {
                 x[i] = slice[t];
             }
         }
@@ -451,91 +509,13 @@ impl Drop for StreamingEngine {
     }
 }
 
-/// One persistent PID worker: the V2 fluid loop plus epoch handling.
+/// One persistent PID worker: the shared core plus epoch control.
 struct StreamWorker {
-    k: usize,
-    ep: Endpoint<EpochFluid>,
+    core: WorkerCore,
     ctrl: Receiver<Ctrl>,
-    problem: Arc<FixedPointProblem>,
-    partition: Arc<Partition>,
-    shared: Arc<StreamShared>,
-    cfg: DistributedConfig,
-    epoch: u64,
-    owned: Vec<usize>,
-    local_of: Vec<usize>,
-    h: Vec<f64>,
-    f: Vec<f64>,
-    coalesce: CoalesceBuffer,
-    heap: GreedyQueue,
-    seq: SequenceState,
-    use_heap: bool,
-    threshold: f64,
-    absorb_eps: f64,
-    /// future-epoch parcels held uncommitted until the epoch catches up
-    pending: Vec<Received<EpochFluid>>,
 }
 
 impl StreamWorker {
-    #[allow(clippy::too_many_arguments)]
-    fn new(
-        k: usize,
-        ep: Endpoint<EpochFluid>,
-        ctrl: Receiver<Ctrl>,
-        problem: Arc<FixedPointProblem>,
-        partition: Arc<Partition>,
-        shared: Arc<StreamShared>,
-        cfg: DistributedConfig,
-    ) -> StreamWorker {
-        let n = problem.n();
-        let owned: Vec<usize> = partition.part(k).to_vec();
-        let m = owned.len();
-        let mut local_of = vec![usize::MAX; n];
-        for (t, &i) in owned.iter().enumerate() {
-            local_of[i] = t;
-        }
-        // epoch 0 cold state: F₀ = B on the owned slice, H₀ = 0
-        let f: Vec<f64> = owned.iter().map(|&i| problem.b()[i]).collect();
-        let h = vec![0.0; m];
-        let use_heap = cfg.sequence == SequenceKind::GreedyMaxFluid;
-        let mut heap = GreedyQueue::new(m);
-        if use_heap {
-            for (t, &fv) in f.iter().enumerate() {
-                heap.push(t, fv.abs());
-            }
-        }
-        let seq = SequenceState::new(
-            cfg.sequence,
-            (0..m).collect(),
-            cfg.seed ^ (k as u64).wrapping_mul(0x9E3779B97F4A7C15),
-        );
-        let coalesce = CoalesceBuffer::new(partition.k(), cfg.coalesce);
-        let threshold = cfg.threshold0;
-        // same absorb floor as v2: ≤ tol/10 extra residual, kills the
-        // sub-denormal ping-pong tail
-        let absorb_eps = (cfg.tol / (10.0 * n as f64)).max(1e-300);
-        StreamWorker {
-            k,
-            ep,
-            ctrl,
-            problem,
-            partition,
-            shared,
-            cfg,
-            epoch: 0,
-            owned,
-            local_of,
-            h,
-            f,
-            coalesce,
-            heap,
-            seq,
-            use_heap,
-            threshold,
-            absorb_eps,
-            pending: Vec::new(),
-        }
-    }
-
     fn run(mut self) -> (Vec<usize>, Vec<f64>) {
         loop {
             match self.ctrl.try_recv() {
@@ -548,28 +528,32 @@ impl StreamWorker {
                 Err(TryRecvError::Empty) => {}
                 Err(TryRecvError::Disconnected) => break,
             }
-            let got_fluid = self.absorb_bus();
-            let (did_work, r_k) = self.diffuse_quantum();
-            self.ship(did_work, r_k);
-            self.publish();
-            if !got_fluid && r_k == 0.0 && self.coalesce.is_empty() {
+            let (got_fluid, r_k) = self.core.step();
+            if !got_fluid && r_k == 0.0 && self.core.is_drained() {
                 std::thread::sleep(Duration::from_micros(50));
             }
         }
-        self.ep.collect_acks();
-        (self.owned, self.h)
+        self.core.finish()
+    }
+
+    fn reply_state(&self, reply: &Sender<(usize, Vec<usize>, Vec<f64>)>) {
+        let _ = reply.send((
+            self.core.pid(),
+            self.core.owned().to_vec(),
+            self.core.h().to_vec(),
+        ));
     }
 
     /// Returns false when the worker must terminate.
     fn handle_ctrl(&mut self, c: Ctrl) -> bool {
         match c {
             Ctrl::Snapshot { reply } => {
-                let _ = reply.send((self.k, self.h.clone()));
+                self.reply_state(&reply);
                 true
             }
             Ctrl::Shutdown => false,
             Ctrl::Checkpoint { reply } => {
-                let _ = reply.send((self.k, self.h.clone()));
+                self.reply_state(&reply);
                 // paused: block until the coordinator resumes us
                 loop {
                     match self.ctrl.recv() {
@@ -578,14 +562,11 @@ impl StreamWorker {
                             problem,
                             f_slice,
                         }) => {
-                            self.enter_epoch(epoch, problem, f_slice);
+                            self.core.enter_epoch(epoch, problem, f_slice);
                             return true;
                         }
-                        Ok(Ctrl::Snapshot { reply }) => {
-                            let _ = reply.send((self.k, self.h.clone()));
-                        }
-                        Ok(Ctrl::Checkpoint { reply }) => {
-                            let _ = reply.send((self.k, self.h.clone()));
+                        Ok(Ctrl::Snapshot { reply }) | Ok(Ctrl::Checkpoint { reply }) => {
+                            self.reply_state(&reply);
                         }
                         Ok(Ctrl::Shutdown) | Err(_) => return false,
                     }
@@ -599,184 +580,10 @@ impl StreamWorker {
                 // resume without a checkpoint (defensive: coordinator
                 // always checkpoints first, but the transition is safe
                 // from any state)
-                self.enter_epoch(epoch, problem, f_slice);
+                self.core.enter_epoch(epoch, problem, f_slice);
                 true
             }
         }
-    }
-
-    /// Install a new epoch: new matrix, rebased fluid, H kept warm.
-    fn enter_epoch(&mut self, epoch: u64, problem: Arc<FixedPointProblem>, f_slice: Vec<f64>) {
-        self.epoch = epoch;
-        self.problem = problem;
-        self.f = f_slice;
-        // old-epoch outbound fluid still buffered is obsolete — B' already
-        // accounts for everything H absorbed; drop it
-        if !self.coalesce.is_empty() {
-            let _ = self.coalesce.take_all();
-        }
-        self.heap = GreedyQueue::new(self.owned.len());
-        if self.use_heap {
-            for (t, &fv) in self.f.iter().enumerate() {
-                self.heap.push(t, fv.abs());
-            }
-        }
-        self.threshold = self.cfg.threshold0;
-        // stashed parcels for exactly this epoch become applicable now;
-        // anything older is obsolete — commit both so the bus clears
-        let pending = std::mem::take(&mut self.pending);
-        for msg in pending {
-            if msg.payload.epoch == self.epoch {
-                for &(j, fl) in &msg.payload.parcels {
-                    let t = self.local_of[j];
-                    self.f[t] += fl;
-                    if self.use_heap {
-                        self.heap.push(t, self.f[t].abs());
-                    }
-                }
-                self.ep.commit(msg.from, msg.seq, msg.mass);
-            } else if msg.payload.epoch < self.epoch {
-                self.ep.commit(msg.from, msg.seq, msg.mass);
-            } else {
-                self.pending.push(msg);
-            }
-        }
-        self.publish();
-    }
-
-    /// Drain the bus: apply current-epoch parcels, discard stale ones,
-    /// stash future ones. Returns whether any current-epoch fluid landed.
-    fn absorb_bus(&mut self) -> bool {
-        let received = self.ep.drain_uncommitted();
-        if received.is_empty() {
-            self.ep.collect_acks();
-            return false;
-        }
-        let mut got = false;
-        let mut to_commit: Vec<(usize, u64, f64)> = Vec::new();
-        for msg in received {
-            match msg.payload.epoch.cmp(&self.epoch) {
-                std::cmp::Ordering::Equal => {
-                    for &(j, fl) in &msg.payload.parcels {
-                        let t = self.local_of[j];
-                        self.f[t] += fl;
-                        if self.use_heap {
-                            self.heap.push(t, self.f[t].abs());
-                        }
-                    }
-                    got = true;
-                    to_commit.push((msg.from, msg.seq, msg.mass));
-                }
-                std::cmp::Ordering::Less => {
-                    // obsolete epoch: discard, release its accounting
-                    to_commit.push((msg.from, msg.seq, msg.mass));
-                }
-                std::cmp::Ordering::Greater => self.pending.push(msg),
-            }
-        }
-        if got {
-            // publish the post-apply total BEFORE committing receipt, so
-            // the monitor always sees the fluid in at least one account
-            self.publish();
-        }
-        for (from, seq, mass) in to_commit {
-            self.ep.commit(from, seq, mass);
-        }
-        self.ep.collect_acks();
-        got
-    }
-
-    /// One diffusion work quantum (identical math to the v2 worker).
-    fn diffuse_quantum(&mut self) -> (bool, f64) {
-        let m = self.owned.len();
-        // persistent workers idle between epochs: skip the whole quantum
-        // (sweeps_per_round · m sequence scans) once the slice is drained,
-        // so a quiescent engine doesn't contend with cold-restart baselines
-        if self.f.iter().all(|&v| v == 0.0) {
-            return (false, 0.0);
-        }
-        let quanta = self.cfg.sweeps_per_round * m;
-        let mut did_work = false;
-        let mut work_count = 0u64;
-        for _ in 0..quanta {
-            let t = if self.use_heap {
-                match self.heap.pop_valid(|t| self.f[t]) {
-                    Some(t) => t,
-                    None => break, // locally drained
-                }
-            } else {
-                self.seq.next(&self.f)
-            };
-            let fi = self.f[t];
-            if fi == 0.0 {
-                continue;
-            }
-            if fi.abs() < self.absorb_eps {
-                self.h[t] += fi;
-                self.f[t] = 0.0;
-                continue;
-            }
-            did_work = true;
-            work_count += 1;
-            self.h[t] += fi;
-            self.f[t] = 0.0;
-            let global_i = self.owned[t];
-            let csc = self.problem.matrix().csc();
-            let (rows, vals) = csc.col(global_i);
-            for u in 0..rows.len() {
-                let j = rows[u];
-                let contrib = vals[u] * fi;
-                let lj = self.local_of[j];
-                if lj != usize::MAX {
-                    self.f[lj] += contrib;
-                    if self.use_heap {
-                        self.heap.push(lj, self.f[lj].abs());
-                    }
-                } else {
-                    self.coalesce.add(self.partition.owner(j), j, contrib);
-                }
-            }
-        }
-        self.shared.updates[self.k].fetch_add(work_count, Ordering::Relaxed);
-        (did_work, norm1(&self.f))
-    }
-
-    /// Ship coalesced parcels under the current epoch tag (§4.3 triggers).
-    fn ship(&mut self, did_work: bool, r_k: f64) {
-        let threshold_hit = did_work && r_k < self.threshold;
-        if threshold_hit || r_k < self.cfg.tol {
-            for (dest, batch, mass) in self.coalesce.take_all() {
-                self.send_batch(dest, batch, mass);
-            }
-        } else {
-            for dest in self.coalesce.ready() {
-                let (batch, mass) = self.coalesce.take(dest);
-                self.send_batch(dest, batch, mass);
-            }
-        }
-        if threshold_hit && self.threshold > self.cfg.tol * 1e-3 {
-            self.threshold /= self.cfg.threshold_alpha;
-        }
-    }
-
-    fn send_batch(&mut self, dest: usize, batch: Vec<(usize, f64)>, mass: f64) {
-        if batch.is_empty() {
-            return;
-        }
-        let bytes = batch.len() * 16 + 24;
-        let _ = self.ep.send(
-            dest,
-            EpochFluid {
-                epoch: self.epoch,
-                parcels: batch,
-            },
-            mass,
-            bytes,
-        );
-    }
-
-    fn publish(&self) {
-        self.shared.published[self.k].set(norm1(&self.f) + self.coalesce.held_mass());
     }
 }
 
@@ -785,7 +592,7 @@ mod tests {
     use super::*;
     use crate::graph::{power_law_web_graph, ChurnModel, MutationStream};
     use crate::linalg::vec_ops::dist1;
-    use crate::solver::{DIteration, SolveOptions, Solver};
+    use crate::solver::{DIteration, SequenceKind, SolveOptions, Solver};
 
     fn engine(n: usize, k: usize, seed: u64) -> StreamingEngine {
         let g = power_law_web_graph(n, 5, 0.1, seed);

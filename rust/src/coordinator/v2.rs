@@ -12,23 +12,27 @@
 //! PID's local F (published), held in a coalescing buffer (published by
 //! its owner), or in flight (tracked by the bus) — the total is the
 //! paper's "locally updated F_n plus all fluids being transmitted".
+//!
+//! With `cfg.adaptive` set, the leader additionally runs the §4.3 speed
+//! adaptation while the solve is in progress: it windows the per-PID
+//! update counters, and when one PID straggles it installs a new owner
+//! map into the shared [`crate::partition::OwnershipTable`] — the workers
+//! (the shared [`super::worker::WorkerCore`] loop) then hand the
+//! reassigned `(H, B, F)` slices to each other over the bus without
+//! stopping the diffusion.
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::monitor::{run_monitor, MonitorState};
+use super::adaptive::AdaptiveDriver;
+use super::monitor::{run_monitor_with, MonitorState};
+use super::worker::{WorkerCore, WorkerMsg, WORKER_METRICS};
 use super::{DistributedConfig, DistributedSolution};
 use crate::error::{DiterError, Result};
-use crate::linalg::vec_ops::norm1;
 use crate::metrics::ConvergenceTrace;
-use crate::solver::{FixedPointProblem, SequenceKind, SequenceState};
-use crate::transport::{bus, monitor_of, BusConfig, CoalesceBuffer, Endpoint};
-
-/// V2 message: a batch of (global coordinate, fluid) parcels.
-#[derive(Clone, Debug)]
-pub struct FluidMsg {
-    pub parcels: Vec<(usize, f64)>,
-}
+use crate::partition::OwnershipTable;
+use crate::solver::{FixedPointProblem, SequenceKind};
+use crate::transport::{bus_with_metrics, monitor_of, BusConfig};
 
 /// Solve with the V2 scheme.
 pub fn solve_v2(
@@ -41,29 +45,37 @@ pub fn solve_v2(
     }
     let k = cfg.partition.k();
     let state = MonitorState::new(k);
-    let (endpoints, bus_metrics) = bus::<FluidMsg>(
+    let (endpoints, bus_metrics) = bus_with_metrics::<WorkerMsg>(
         k,
         &BusConfig {
             latency: cfg.latency,
             seed: cfg.seed,
         },
+        WORKER_METRICS,
     );
     let bus_mon = monitor_of(&endpoints[0]);
     let problem = Arc::new(problem.clone());
-    let partition = Arc::new(cfg.partition.clone());
+    let table = OwnershipTable::new(cfg.partition.clone());
 
     let mut handles = Vec::with_capacity(k);
     for (kk, ep) in endpoints.into_iter().enumerate() {
-        let problem = problem.clone();
-        let partition = partition.clone();
+        let core = WorkerCore::new(
+            kk,
+            ep,
+            problem.clone(),
+            table.clone(),
+            state.clone(),
+            cfg.clone(),
+        );
         let state = state.clone();
-        let cfg = cfg.clone();
-        handles.push(std::thread::spawn(move || {
-            v2_worker(kk, ep, &problem, &partition, &state, &cfg)
-        }));
+        handles.push(std::thread::spawn(move || v2_worker(core, &state)));
     }
 
-    let (converged_mon, trace, wall) = run_monitor(
+    let mut driver = cfg
+        .adaptive
+        .as_ref()
+        .map(|a| AdaptiveDriver::new(a, k, cfg.tol));
+    let (converged_mon, trace, wall) = run_monitor_with(
         &state,
         &bus_mon,
         n,
@@ -71,6 +83,17 @@ pub fn solve_v2(
         cfg.max_wall,
         Duration::from_micros(200),
         3,
+        |total| {
+            if let Some(d) = driver.as_mut() {
+                d.poll(
+                    &table,
+                    &state.update_counts(),
+                    &state.published_values(),
+                    total,
+                    &bus_metrics,
+                );
+            }
+        },
     );
 
     let mut x = vec![0.0; n];
@@ -100,173 +123,21 @@ fn relabel(mut t: ConvergenceTrace, name: &str) -> ConvergenceTrace {
     t
 }
 
-/// One PID's work loop. Local state is strictly the owned slice.
-fn v2_worker(
-    k: usize,
-    mut ep: Endpoint<FluidMsg>,
-    problem: &FixedPointProblem,
-    partition: &crate::partition::Partition,
-    state: &MonitorState,
-    cfg: &DistributedConfig,
-) -> (Vec<usize>, Vec<f64>) {
-    let csc = problem.matrix().csc();
-    let owned: Vec<usize> = partition.part(k).to_vec();
-    let m = owned.len();
-    // global index → local position (only valid for owned coordinates)
-    let mut local_of = vec![usize::MAX; problem.n()];
-    for (t, &i) in owned.iter().enumerate() {
-        local_of[i] = t;
-    }
-    // F₀ = B on the owned slice, H₀ = 0 (eq. 2/3 initial condition)
-    let mut f_loc: Vec<f64> = owned.iter().map(|&i| problem.b()[i]).collect();
-    let mut h_loc: Vec<f64> = vec![0.0; m];
-    let mut coalesce = CoalesceBuffer::new(partition.k(), cfg.coalesce);
-    // sequence over local positions 0..m. Greedy uses the exponent-bucket
-    // queue: an O(m) scan per pick makes a pass O(m²), and a per-increment
-    // snapshot heap explodes on hub columns (§Perf iterations 1-3).
-    let use_heap = cfg.sequence == SequenceKind::GreedyMaxFluid;
-    let mut heap = crate::solver::GreedyQueue::new(m);
-    if use_heap {
-        for (t, &fv) in f_loc.iter().enumerate() {
-            heap.push(t, fv.abs());
-        }
-    }
-    let mut seq = SequenceState::new(
-        cfg.sequence,
-        (0..m).collect(),
-        cfg.seed ^ (k as u64).wrapping_mul(0x9E3779B97F4A7C15),
-    );
-    let mut threshold = cfg.threshold0;
-    let quanta = cfg.sweeps_per_round * m;
-    // absorb-without-propagation floor: fluid below tol/(10·N) is folded
-    // into H but not re-emitted. Total extra residual ≤ N·floor = tol/10,
-    // well inside the target — and it terminates the asymptotic ping-pong
-    // tail that otherwise circulates ever-smaller parcels down to the
-    // float-zero limit (§Perf iteration 4: the 50k e2e spent most of its
-    // wall time pushing sub-1e-12 crumbs around).
-    let absorb_eps = (cfg.tol / (10.0 * problem.n() as f64)).max(1e-300);
-
+/// One PID's work loop: the shared [`WorkerCore`] driven until the leader
+/// raises the stop flag. Local state is strictly the held slice.
+fn v2_worker(mut core: WorkerCore, state: &MonitorState) -> (Vec<usize>, Vec<f64>) {
     loop {
         if state.should_stop() {
             break;
         }
-        // 1. absorb incoming fluid. Two-phase: apply, publish the new
-        //    local total, THEN commit — so at every instant the monitor
-        //    sees each unit of fluid in at least one account.
-        let received = ep.drain_uncommitted();
-        let got_fluid = !received.is_empty();
-        for msg in &received {
-            for &(j, fl) in &msg.payload.parcels {
-                let t = local_of[j];
-                f_loc[t] += fl;
-                if use_heap {
-                    heap.push(t, f_loc[t].abs());
-                }
-            }
-        }
-        if got_fluid {
-            state.publish(k, norm1(&f_loc) + coalesce.held_mass());
-            for msg in &received {
-                ep.commit(msg.from, msg.seq, msg.mass);
-            }
-        }
-        ep.collect_acks();
-        // 2. diffusion quantum over owned coordinates
-        let mut did_work = false;
-        let mut work_count = 0u64;
-        for _ in 0..quanta {
-            let t = if use_heap {
-                match heap.pop_valid(|t| f_loc[t]) {
-                    Some(t) => t,
-                    None => break, // locally drained
-                }
-            } else {
-                seq.next(&f_loc)
-            };
-            let fi = f_loc[t];
-            if fi == 0.0 {
-                continue;
-            }
-            if fi.abs() < absorb_eps {
-                h_loc[t] += fi;
-                f_loc[t] = 0.0;
-                continue;
-            }
-            did_work = true;
-            work_count += 1;
-            h_loc[t] += fi;
-            f_loc[t] = 0.0;
-            let (rows, vals) = csc.col(owned[t]);
-            for u in 0..rows.len() {
-                let j = rows[u];
-                let contrib = vals[u] * fi;
-                let lj = local_of[j];
-                if lj != usize::MAX {
-                    f_loc[lj] += contrib; // stays local
-                    if use_heap {
-                        heap.push(lj, f_loc[lj].abs());
-                    }
-                } else {
-                    coalesce.add(partition.owner(j), j, contrib); // §3.3 regroup
-                }
-            }
-        }
-        // only actual diffusions count as work: idle spinning while the
-        // monitor confirms quiescence must not inflate the cost metric
-        state.add_updates(k, work_count);
-        // 3. ship coalesced parcels: policy-ready destinations always;
-        //    everything when the threshold trips (§4.3: F sent when
-        //    r_k < T_k) or when the local fluid is fully diffused (so no
-        //    sub-`min_mass` remnant can strand — guarantees drainage).
-        let r_k = norm1(&f_loc);
-        let threshold_hit = did_work && r_k < threshold;
-        if threshold_hit || r_k < cfg.tol {
-            // locally (near-)drained: hold nothing back, whatever its size
-            for (dest, batch, mass) in coalesce.take_all() {
-                send_batch(&mut ep, dest, batch, mass);
-            }
-        } else {
-            for dest in coalesce.ready() {
-                let (batch, mass) = coalesce.take(dest);
-                send_batch(&mut ep, dest, batch, mass);
-            }
-        }
-        if threshold_hit && threshold > cfg.tol * 1e-3 {
-            // §4.1: T_k ← T_k/α — only after a quantum that did work, and
-            // floored near the global tolerance (dividing into denormals
-            // serves nothing once r_k itself is far below target).
-            threshold /= cfg.threshold_alpha;
-        }
-        // 4. publish local remaining fluid: F + held-back coalesced mass
-        state.publish(k, norm1(&f_loc) + coalesce.held_mass());
-        // 5. idle backoff when fully drained
-        if !got_fluid && r_k == 0.0 && coalesce.is_empty() {
+        let (got_fluid, r_k) = core.step();
+        if !got_fluid && r_k == 0.0 && core.is_drained() {
             std::thread::sleep(Duration::from_micros(50));
         }
     }
-    // final drain so no fluid is stranded in our inbox accounting
-    ep.collect_acks();
-    if std::env::var_os("DITER_DEBUG").is_some() {
-        let nonzero = f_loc.iter().filter(|v| **v != 0.0).count();
-        eprintln!(
-            "[v2 pid {k}] exit: r_k={:.3e} held={:.3e} threshold={:.3e} unacked={} heap={} nonzero_f={}",
-            norm1(&f_loc),
-            coalesce.held_mass(),
-            threshold,
-            ep.unacked(),
-            heap.len(),
-            nonzero
-        );
-    }
-    (owned, h_loc)
-}
-
-fn send_batch(ep: &mut Endpoint<FluidMsg>, dest: usize, batch: Vec<(usize, f64)>, mass: f64) {
-    if batch.is_empty() {
-        return;
-    }
-    let bytes = batch.len() * 16 + 16;
-    let _ = ep.send(dest, FluidMsg { parcels: batch }, mass, bytes);
+    // final drain so neither fluid accounting nor in-flight handoff
+    // history is stranded in our inbox
+    core.finish()
 }
 
 /// Sequence kinds that make sense for V2 (greedy reads local fluid, which
@@ -340,6 +211,31 @@ mod tests {
         let sol = solve_v2(&p, &cfg).unwrap();
         assert!(sol.converged);
         assert!(dist_inf(&sol.x, &p.exact_solution().unwrap()) < 1e-9);
+    }
+
+    #[test]
+    fn adaptive_repartitioning_reaches_fixed_point() {
+        // live §4.3: a throttled PID 0 plus an aggressive rebalance window
+        // — the solve must still land exactly on the fixed point with all
+        // fluid conserved through whatever handoffs fire
+        let g = power_law_web_graph(200, 5, 0.1, 19);
+        let sys = pagerank_system(&g, 0.85, true).unwrap();
+        let p = FixedPointProblem::new(sys.matrix.clone(), sys.b.clone()).unwrap();
+        let cfg = DistributedConfig::new(Partition::contiguous(200, 4).unwrap())
+            .with_tol(1e-10)
+            .with_sequence(SequenceKind::GreedyMaxFluid)
+            .with_straggler(0, 30_000.0)
+            .with_adaptive(crate::coordinator::AdaptiveConfig {
+                interval: Duration::from_millis(10),
+                ..Default::default()
+            });
+        let sol = solve_v2(&p, &cfg).unwrap();
+        assert!(sol.converged, "residual {}", sol.residual);
+        assert!(
+            (vnorm1(&sol.x) - 1.0).abs() < 1e-7,
+            "mass {} — fluid must be conserved through handoffs",
+            vnorm1(&sol.x)
+        );
     }
 
     #[test]

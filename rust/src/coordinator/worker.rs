@@ -1,0 +1,703 @@
+//! The shared per-PID worker core: one fluid-diffusion loop, two engines.
+//!
+//! [`super::v2`] (one-shot solves) and [`super::stream`] (the streaming
+//! engine) used to carry two copies of the same loop; both now instantiate
+//! [`WorkerCore`]. The core's defining difference from the old workers is
+//! that it routes through a **versioned [`OwnershipTable`]** instead of a
+//! static `Arc<Partition>` — which is what turns §4.3's speed adaptation
+//! into a *live* operation.
+//!
+//! ## The handoff protocol (DESIGN.md §4)
+//!
+//! The bus carries two message classes: fluid parcels (the §3.3 data
+//! plane) and [`Handoff`] control messages. When the coordinator installs
+//! a new ownership map (version v+1), the worker holding a reassigned
+//! coordinate range notices on its next loop iteration, freezes the range,
+//! and ships its `(H, B, F)` slice to the new owner in a single `Handoff`
+//! tagged with the ownership version and the streaming epoch. Invariants:
+//!
+//! * **single holder** — every coordinate is held by exactly one worker;
+//!   holdings change only through handoff messages (never by spontaneous
+//!   adoption from a table read), so the final gather is an exact cover;
+//! * **no fluid lost** — a handoff's `‖F‖₁` rides the bus's in-flight
+//!   account like any parcel; the shipper publishes its shrunken local
+//!   total only *after* the send is accounted, so the monitor's
+//!   `Σ_k ‖F_k‖₁ + in-flight` total errs high, never low, through every
+//!   transfer — the paper's exact convergence monitor stays valid;
+//! * **re-routing** — fluid that arrives for a coordinate the receiver no
+//!   longer owns is forwarded to the current owner (consulting the table);
+//!   fluid that arrives *ahead* of the handoff ("table says mine, slice
+//!   still in flight") is fostered — held on the local account — and
+//!   folded in when the slice lands;
+//! * **no stranded history** — `OwnershipTable::handoffs_inflight` counts
+//!   shipped-but-unapplied slices; the streaming rebase freezes the table
+//!   and waits for zero before checkpointing, so the gathered H used for
+//!   `B' = P'·H + B − H` is always complete.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::monitor::MonitorState;
+use super::DistributedConfig;
+use crate::linalg::vec_ops::norm1;
+use crate::metrics::MetricSet;
+use crate::partition::{OwnershipTable, Partition};
+use crate::solver::{FixedPointProblem, GreedyQueue, SequenceKind, SequenceState};
+use crate::transport::{CoalesceBuffer, Endpoint, Received};
+
+/// Metric names the worker core registers on top of the bus metrics.
+pub const WORKER_METRICS: &[&str] = &[
+    "handoffs_total",     // handoff slices shipped between PIDs
+    "handoffs_planned",   // rebalance decisions installed by the leader
+    "handoff_coords",     // coordinates moved across all handoffs
+    "fluid_forwarded",    // parcels re-routed after an ownership change
+    "load_imbalance_ppm", // current max Ω size / ideal × 1e6 (gauge)
+];
+
+/// Everything that travels between PIDs: the fluid data plane plus the
+/// repartitioning control plane.
+#[derive(Clone, Debug)]
+pub enum WorkerMsg {
+    /// Epoch-tagged fluid parcels (a one-shot solve stays at epoch 0).
+    Fluid {
+        epoch: u64,
+        parcels: Vec<(usize, f64)>,
+    },
+    /// Ownership transfer of a coordinate range with its local state.
+    Handoff(Handoff),
+}
+
+/// One ownership transfer: the shipped `(H, B, F)` slices for `coords`.
+/// `b_slice` is carried for protocol fidelity — a real multi-machine
+/// deployment has no shared `FixedPointProblem`, so the offset slice must
+/// travel with the range (in-process the recipient could read it from the
+/// shared problem).
+#[derive(Clone, Debug)]
+pub struct Handoff {
+    pub pid_from: usize,
+    pub pid_to: usize,
+    /// ownership-table version this transfer implements
+    pub version: u64,
+    /// streaming epoch the slices belong to
+    pub epoch: u64,
+    pub coords: Vec<usize>,
+    pub h_slice: Vec<f64>,
+    pub b_slice: Vec<f64>,
+    pub f_slice: Vec<f64>,
+}
+
+/// One PID's live state: the owned slice of `(B, H, F)`, the coalescing
+/// buffer, the diffusion-order state, and the ownership-version cache.
+pub struct WorkerCore {
+    k: usize,
+    ep: Endpoint<WorkerMsg>,
+    problem: Arc<FixedPointProblem>,
+    table: Arc<OwnershipTable>,
+    state: Arc<MonitorState>,
+    metrics: Arc<MetricSet>,
+    cfg: DistributedConfig,
+    /// cached ownership snapshot (refreshed when the version moves)
+    part: Arc<Partition>,
+    version: u64,
+    epoch: u64,
+    owned: Vec<usize>,
+    /// global index → local slot (usize::MAX = not held here)
+    local_of: Vec<usize>,
+    h: Vec<f64>,
+    f: Vec<f64>,
+    /// fluid received ahead of a handoff ("table says mine, slice in
+    /// flight") — counted on the local account until folded into `f`
+    foster: HashMap<usize, f64>,
+    coalesce: CoalesceBuffer,
+    heap: GreedyQueue,
+    seq: Option<SequenceState>,
+    use_heap: bool,
+    threshold: f64,
+    absorb_eps: f64,
+    /// future-epoch parcels held uncommitted until the epoch catches up
+    pending: Vec<Received<WorkerMsg>>,
+    /// exit path: fold incoming handoffs but never ship onward
+    shutting_down: bool,
+}
+
+impl WorkerCore {
+    pub fn new(
+        k: usize,
+        ep: Endpoint<WorkerMsg>,
+        problem: Arc<FixedPointProblem>,
+        table: Arc<OwnershipTable>,
+        state: Arc<MonitorState>,
+        cfg: DistributedConfig,
+    ) -> WorkerCore {
+        let n = problem.n();
+        let (version, part) = table.snapshot();
+        let owned: Vec<usize> = part.part(k).to_vec();
+        let mut local_of = vec![usize::MAX; n];
+        for (t, &i) in owned.iter().enumerate() {
+            local_of[i] = t;
+        }
+        // epoch 0 cold state: F₀ = B on the owned slice, H₀ = 0
+        let f: Vec<f64> = owned.iter().map(|&i| problem.b()[i]).collect();
+        let h = vec![0.0; owned.len()];
+        let use_heap = cfg.sequence == SequenceKind::GreedyMaxFluid;
+        // the queue is sized for the whole coordinate space so adopted
+        // slots never outgrow it (local slots are always < n)
+        let mut heap = GreedyQueue::new(n);
+        if use_heap {
+            for (t, &fv) in f.iter().enumerate() {
+                heap.push(t, fv.abs());
+            }
+        }
+        let seq = Self::make_seq(&cfg, k, owned.len());
+        let coalesce = CoalesceBuffer::new(part.k(), cfg.coalesce);
+        let threshold = cfg.threshold0;
+        // absorb-without-propagation floor: ≤ tol/10 extra residual, kills
+        // the sub-denormal ping-pong tail (see the v2 module docs)
+        let absorb_eps = (cfg.tol / (10.0 * n as f64)).max(1e-300);
+        let metrics = ep.metrics();
+        table.ack_version(k, version);
+        WorkerCore {
+            k,
+            ep,
+            problem,
+            table,
+            state,
+            metrics,
+            cfg,
+            part,
+            version,
+            epoch: 0,
+            owned,
+            local_of,
+            h,
+            f,
+            foster: HashMap::new(),
+            coalesce,
+            heap,
+            seq,
+            use_heap,
+            threshold,
+            absorb_eps,
+            pending: Vec::new(),
+            shutting_down: false,
+        }
+    }
+
+    fn make_seq(cfg: &DistributedConfig, k: usize, m: usize) -> Option<SequenceState> {
+        if m == 0 {
+            return None;
+        }
+        Some(SequenceState::new(
+            cfg.sequence,
+            (0..m).collect(),
+            cfg.seed ^ (k as u64).wrapping_mul(0x9E3779B97F4A7C15),
+        ))
+    }
+
+    pub fn pid(&self) -> usize {
+        self.k
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Coordinates currently held (the checkpoint/snapshot reply).
+    pub fn owned(&self) -> &[usize] {
+        &self.owned
+    }
+
+    /// The held history slice, aligned with [`WorkerCore::owned`].
+    pub fn h(&self) -> &[f64] {
+        &self.h
+    }
+
+    /// Whether nothing is buffered locally besides `f` itself.
+    pub fn is_drained(&self) -> bool {
+        self.coalesce.is_empty() && self.foster.is_empty()
+    }
+
+    /// One iteration of the fluid loop: ownership refresh, bus absorb,
+    /// diffusion quantum, ship, publish. Returns `(got_fluid, r_k)` for
+    /// the caller's idle-backoff decision.
+    pub fn step(&mut self) -> (bool, f64) {
+        self.refresh_ownership(false);
+        let got = self.absorb_bus();
+        let (did_work, work_count, r_k) = self.diffuse_quantum();
+        self.state.add_updates(self.k, work_count);
+        self.throttle(work_count);
+        self.ship(did_work, r_k);
+        self.publish();
+        (got, r_k)
+    }
+
+    /// Straggler injection: cap this PID's scalar-update rate.
+    fn throttle(&self, work: u64) {
+        if work == 0 {
+            return;
+        }
+        if let Some(s) = self.cfg.straggler {
+            if s.pid == self.k && s.updates_per_sec > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(work as f64 / s.updates_per_sec));
+            }
+        }
+    }
+
+    /// Sync with the ownership table; ship any coordinate range we hold
+    /// that now belongs elsewhere. `force` re-runs the scan even when the
+    /// cached version is current (after folding a handoff in, the range
+    /// may already have been reassigned onward).
+    fn refresh_ownership(&mut self, force: bool) {
+        if self.shutting_down {
+            return;
+        }
+        if !force && self.table.version() == self.version {
+            return;
+        }
+        let (v, part) = self.table.snapshot();
+        self.version = v;
+        self.part = part;
+        // the version is acked only at the END of this scan: by then every
+        // range the new map takes from us has been booked via
+        // begin_handoff, so `all_acked && inflight == 0` is a sound
+        // quiescence proof for the rebase
+        // fostered fluid whose designated owner moved on: forward it
+        if !self.foster.is_empty() {
+            let stale: Vec<usize> = self
+                .foster
+                .keys()
+                .copied()
+                .filter(|&j| self.part.owner(j) != self.k)
+                .collect();
+            for j in stale {
+                let fl = self.foster.remove(&j).unwrap();
+                self.coalesce.add(self.part.owner(j), j, fl);
+                self.metrics.incr("fluid_forwarded");
+            }
+        }
+        // group the slots we must give up by their new owner
+        let mut outgoing: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (t, &i) in self.owned.iter().enumerate() {
+            let o = self.part.owner(i);
+            if o != self.k {
+                outgoing.entry(o).or_default().push(t);
+            }
+        }
+        if outgoing.is_empty() {
+            self.table.ack_version(self.k, v);
+            return;
+        }
+        let mut shipped = vec![false; self.owned.len()];
+        for (dest, slots) in &outgoing {
+            let coords: Vec<usize> = slots.iter().map(|&t| self.owned[t]).collect();
+            let h_slice: Vec<f64> = slots.iter().map(|&t| self.h[t]).collect();
+            let f_slice: Vec<f64> = slots.iter().map(|&t| self.f[t]).collect();
+            let b_slice: Vec<f64> = coords.iter().map(|&i| self.problem.b()[i]).collect();
+            let mass: f64 = f_slice.iter().map(|v| v.abs()).sum();
+            let bytes = coords.len() * 32 + 48;
+            let ho = Handoff {
+                pid_from: self.k,
+                pid_to: *dest,
+                version: v,
+                epoch: self.epoch,
+                coords,
+                h_slice,
+                b_slice,
+                f_slice,
+            };
+            // in-flight accounting FIRST (the send books the fluid mass,
+            // begin_handoff books the slice) so neither the convergence
+            // monitor nor the rebase quiescence check can under-count
+            self.table.begin_handoff();
+            let n_coords = ho.coords.len() as u64;
+            if self
+                .ep
+                .send(*dest, WorkerMsg::Handoff(ho), mass, bytes)
+                .is_ok()
+            {
+                self.metrics.incr("handoffs_total");
+                self.metrics.add("handoff_coords", n_coords);
+                for &t in slots {
+                    shipped[t] = true;
+                }
+            } else {
+                // peer already gone (shutdown race): keep holding the range
+                self.table.end_handoff();
+            }
+        }
+        if shipped.iter().any(|&s| s) {
+            self.compact(&shipped);
+            self.publish();
+        }
+        self.table.ack_version(self.k, v);
+    }
+
+    /// Drop the shipped slots and rebuild the local index structures.
+    fn compact(&mut self, shipped: &[bool]) {
+        let mut owned = Vec::with_capacity(self.owned.len());
+        let mut h = Vec::with_capacity(self.h.len());
+        let mut f = Vec::with_capacity(self.f.len());
+        for t in 0..self.owned.len() {
+            if !shipped[t] {
+                owned.push(self.owned[t]);
+                h.push(self.h[t]);
+                f.push(self.f[t]);
+            } else {
+                self.local_of[self.owned[t]] = usize::MAX;
+            }
+        }
+        self.owned = owned;
+        self.h = h;
+        self.f = f;
+        for (t, &i) in self.owned.iter().enumerate() {
+            self.local_of[i] = t;
+        }
+        self.rebuild_order();
+    }
+
+    /// Rebuild the diffusion-order state after local slots were re-indexed
+    /// or appended (handoffs are rare; O(n + m) here is irrelevant).
+    fn rebuild_order(&mut self) {
+        if self.use_heap {
+            let mut heap = GreedyQueue::new(self.problem.n());
+            for (t, &fv) in self.f.iter().enumerate() {
+                heap.push(t, fv.abs());
+            }
+            self.heap = heap;
+        }
+        self.seq = Self::make_seq(&self.cfg, self.k, self.owned.len());
+    }
+
+    /// Take ownership of a coordinate we did not hold (handoff receipt).
+    fn adopt(&mut self, j: usize) -> usize {
+        debug_assert_eq!(self.local_of[j], usize::MAX);
+        let t = self.owned.len();
+        self.owned.push(j);
+        self.h.push(0.0);
+        self.f.push(0.0);
+        self.local_of[j] = t;
+        t
+    }
+
+    /// Drain the bus: apply current-epoch fluid, discard stale parcels,
+    /// stash future ones, fold handoffs in. Two-phase throughout: the new
+    /// local totals are published BEFORE the receipts are committed, so
+    /// the monitor always sees each unit of fluid in at least one account.
+    fn absorb_bus(&mut self) -> bool {
+        let received = self.ep.drain_uncommitted();
+        if received.is_empty() {
+            self.ep.collect_acks();
+            return false;
+        }
+        let mut got = false;
+        let mut to_commit: Vec<(usize, u64, f64)> = Vec::new();
+        for msg in received {
+            let Received {
+                from,
+                seq,
+                mass,
+                payload,
+            } = msg;
+            match payload {
+                WorkerMsg::Fluid { epoch, parcels } => match epoch.cmp(&self.epoch) {
+                    std::cmp::Ordering::Equal => {
+                        got |= self.apply_parcels(&parcels);
+                        to_commit.push((from, seq, mass));
+                    }
+                    std::cmp::Ordering::Less => {
+                        // obsolete epoch: discard, release its accounting
+                        to_commit.push((from, seq, mass));
+                    }
+                    std::cmp::Ordering::Greater => self.pending.push(Received {
+                        from,
+                        seq,
+                        mass,
+                        payload: WorkerMsg::Fluid { epoch, parcels },
+                    }),
+                },
+                WorkerMsg::Handoff(ho) => {
+                    self.apply_handoff(ho);
+                    got = true;
+                    to_commit.push((from, seq, mass));
+                }
+            }
+        }
+        if got {
+            self.publish();
+        }
+        for (from, seq, mass) in to_commit {
+            self.ep.commit(from, seq, mass);
+        }
+        self.ep.collect_acks();
+        got
+    }
+
+    /// Apply current-epoch fluid parcels, routing each coordinate: local →
+    /// absorb; table says mine but slice in flight → foster; otherwise →
+    /// forward to the current owner. Returns whether anything landed.
+    fn apply_parcels(&mut self, parcels: &[(usize, f64)]) -> bool {
+        let mut any = false;
+        for &(j, fl) in parcels {
+            let t = self.local_of[j];
+            if t != usize::MAX {
+                self.f[t] += fl;
+                if self.use_heap {
+                    self.heap.push(t, self.f[t].abs());
+                }
+            } else if self.part.owner(j) == self.k {
+                *self.foster.entry(j).or_insert(0.0) += fl;
+            } else {
+                self.coalesce.add(self.part.owner(j), j, fl);
+                self.metrics.incr("fluid_forwarded");
+            }
+            any = true;
+        }
+        any
+    }
+
+    /// Fold a received ownership transfer into the local state. H and F
+    /// add linearly: the coordinate may already have accumulated fostered
+    /// or diffused mass here, and the slices carry the remainder.
+    fn apply_handoff(&mut self, ho: Handoff) {
+        debug_assert_eq!(ho.pid_to, self.k);
+        // in a multi-process deployment the shipped b_slice is the
+        // recipient's only source of B for the range; in-process it must
+        // agree with the shared problem (same epoch ⇒ same B)
+        debug_assert!(
+            ho.epoch != self.epoch
+                || ho
+                    .coords
+                    .iter()
+                    .zip(&ho.b_slice)
+                    .all(|(&j, &b)| b == self.problem.b()[j]),
+            "handoff b_slice disagrees with the shared problem"
+        );
+        for (s, &j) in ho.coords.iter().enumerate() {
+            let t = if self.local_of[j] == usize::MAX {
+                self.adopt(j)
+            } else {
+                self.local_of[j]
+            };
+            self.h[t] += ho.h_slice[s];
+            let mut add = ho.f_slice[s];
+            if let Some(st) = self.foster.remove(&j) {
+                add += st;
+            }
+            self.f[t] += add;
+        }
+        self.rebuild_order();
+        // the range may already be reassigned onward: re-scan BEFORE
+        // releasing the in-flight slot, so `handoffs_inflight` can never
+        // dip to zero while coordinates are still migrating
+        self.refresh_ownership(true);
+        self.table.end_handoff();
+    }
+
+    /// One diffusion work quantum (the §3.3 inner loop). Returns
+    /// `(did_work, work_count, r_k)`.
+    fn diffuse_quantum(&mut self) -> (bool, u64, f64) {
+        let m = self.owned.len();
+        // idle fast-path: persistent workers spin between epochs; skip the
+        // whole quantum once the slice is drained
+        if m == 0 || self.f.iter().all(|&v| v == 0.0) {
+            return (false, 0, 0.0);
+        }
+        let problem = self.problem.clone();
+        let csc = problem.matrix().csc();
+        let quanta = self.cfg.sweeps_per_round * m;
+        let mut did_work = false;
+        let mut work_count = 0u64;
+        for _ in 0..quanta {
+            let t = if self.use_heap {
+                match self.heap.pop_valid(|t| self.f[t]) {
+                    Some(t) => t,
+                    None => break, // locally drained
+                }
+            } else {
+                match self.seq.as_mut() {
+                    Some(seq) => seq.next(&self.f),
+                    None => break,
+                }
+            };
+            let fi = self.f[t];
+            if fi == 0.0 {
+                continue;
+            }
+            if fi.abs() < self.absorb_eps {
+                self.h[t] += fi;
+                self.f[t] = 0.0;
+                continue;
+            }
+            did_work = true;
+            work_count += 1;
+            self.h[t] += fi;
+            self.f[t] = 0.0;
+            let (rows, vals) = csc.col(self.owned[t]);
+            for u in 0..rows.len() {
+                let j = rows[u];
+                let contrib = vals[u] * fi;
+                let lj = self.local_of[j];
+                if lj != usize::MAX {
+                    self.f[lj] += contrib; // stays local
+                    if self.use_heap {
+                        self.heap.push(lj, self.f[lj].abs());
+                    }
+                } else {
+                    // §3.3 regroup, routed by the live owner map
+                    self.coalesce.add(self.part.owner(j), j, contrib);
+                }
+            }
+        }
+        (did_work, work_count, norm1(&self.f))
+    }
+
+    /// Ship coalesced parcels under the current epoch tag (§4.1/§4.3
+    /// triggers: threshold crossing, or full flush when locally drained).
+    fn ship(&mut self, did_work: bool, r_k: f64) {
+        let threshold_hit = did_work && r_k < self.threshold;
+        if threshold_hit || r_k < self.cfg.tol {
+            for (dest, batch, mass) in self.coalesce.take_all() {
+                self.send_batch(dest, batch, mass);
+            }
+        } else {
+            for dest in self.coalesce.ready() {
+                let (batch, mass) = self.coalesce.take(dest);
+                self.send_batch(dest, batch, mass);
+            }
+        }
+        if threshold_hit && self.threshold > self.cfg.tol * 1e-3 {
+            self.threshold /= self.cfg.threshold_alpha;
+        }
+    }
+
+    fn send_batch(&mut self, dest: usize, batch: Vec<(usize, f64)>, mass: f64) {
+        if batch.is_empty() {
+            return;
+        }
+        let bytes = batch.len() * 16 + 24;
+        let _ = self.ep.send(
+            dest,
+            WorkerMsg::Fluid {
+                epoch: self.epoch,
+                parcels: batch,
+            },
+            mass,
+            bytes,
+        );
+    }
+
+    fn foster_mass(&self) -> f64 {
+        self.foster.values().map(|v| v.abs()).sum()
+    }
+
+    /// Publish the locally-known remaining fluid: F + held coalesce mass +
+    /// fostered mass.
+    pub fn publish(&self) {
+        self.state.publish(
+            self.k,
+            norm1(&self.f) + self.coalesce.held_mass() + self.foster_mass(),
+        );
+    }
+
+    /// Install a new streaming epoch: new matrix, rebased fluid slice
+    /// (aligned with the current owned set), H kept warm. Obsolete fluid —
+    /// buffered outbound, fostered, or pending with an older tag — is
+    /// dropped: `B' = P'·H + B − H` already accounts for everything H
+    /// absorbed and replaces all fluid of the previous epoch.
+    pub fn enter_epoch(&mut self, epoch: u64, problem: Arc<FixedPointProblem>, f_slice: Vec<f64>) {
+        assert_eq!(
+            f_slice.len(),
+            self.owned.len(),
+            "rebased slice must align with the held range"
+        );
+        self.epoch = epoch;
+        self.problem = problem;
+        self.f = f_slice;
+        if !self.coalesce.is_empty() {
+            let _ = self.coalesce.take_all();
+        }
+        self.foster.clear();
+        self.rebuild_order();
+        self.threshold = self.cfg.threshold0;
+        // stashed parcels for exactly this epoch become applicable now;
+        // anything older is obsolete — commit both so the bus clears
+        let pending = std::mem::take(&mut self.pending);
+        let mut to_commit: Vec<(usize, u64, f64)> = Vec::new();
+        for msg in pending {
+            let Received {
+                from,
+                seq,
+                mass,
+                payload,
+            } = msg;
+            match payload {
+                WorkerMsg::Fluid { epoch: e, parcels } if e == self.epoch => {
+                    self.apply_parcels(&parcels);
+                    to_commit.push((from, seq, mass));
+                }
+                WorkerMsg::Fluid { epoch: e, .. } if e < self.epoch => {
+                    to_commit.push((from, seq, mass));
+                }
+                payload => self.pending.push(Received {
+                    from,
+                    seq,
+                    mass,
+                    payload,
+                }),
+            }
+        }
+        self.publish();
+        for (from, seq, mass) in to_commit {
+            self.ep.commit(from, seq, mass);
+        }
+    }
+
+    /// Exit path: stop migrating, fold any in-flight handoffs so no
+    /// history is stranded on the bus, and return the held (Ω, H) pair.
+    pub fn finish(mut self) -> (Vec<usize>, Vec<f64>) {
+        self.shutting_down = true;
+        // Drain for a minimum grace window (catches slices shipped just
+        // after the stop signal, before their begin_handoff was visible),
+        // then keep draining while any handoff is still riding the bus —
+        // its H slice exists nowhere else. The hard deadline only guards
+        // against a peer that died without completing a send.
+        let min_deadline = Instant::now() + Duration::from_millis(5);
+        let hard_deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            while let Some(msg) = self.ep.try_recv_uncommitted() {
+                let Received {
+                    from,
+                    seq,
+                    mass,
+                    payload,
+                } = msg;
+                if let WorkerMsg::Handoff(ho) = payload {
+                    self.apply_handoff(ho);
+                }
+                self.ep.commit(from, seq, mass);
+            }
+            self.ep.collect_acks();
+            let now = Instant::now();
+            let quiesced = self.table.handoffs_inflight() == 0;
+            if (now >= min_deadline && quiesced) || now >= hard_deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        if std::env::var_os("DITER_DEBUG").is_some() {
+            let nonzero = self.f.iter().filter(|v| **v != 0.0).count();
+            eprintln!(
+                "[worker pid {}] exit: r_k={:.3e} held={:.3e} foster={:.3e} threshold={:.3e} unacked={} nonzero_f={}",
+                self.k,
+                norm1(&self.f),
+                self.coalesce.held_mass(),
+                self.foster_mass(),
+                self.threshold,
+                self.ep.unacked(),
+                nonzero
+            );
+        }
+        (self.owned, self.h)
+    }
+}

@@ -17,7 +17,9 @@ use std::time::Duration;
 use diter::bench_harness::{fmt_secs, Table};
 use diter::cli::{parse_args, usage, Args, OptSpec};
 use diter::configfile::Config;
-use diter::coordinator::{v1, v2, DistributedConfig, StreamingEngine};
+use diter::coordinator::{
+    v1, v2, AdaptiveConfig, AdaptivePolicy, DistributedConfig, StreamingEngine,
+};
 use diter::graph::{
     block_coupled_matrix, pagerank_system, paper_matrix, power_law_web_graph, ChurnModel,
     MutableDigraph, MutationStream,
@@ -391,6 +393,42 @@ fn stream_spec() -> Vec<OptSpec> {
             is_flag: true,
             default: None,
         },
+        OptSpec {
+            name: "adaptive",
+            help: "live §4.3 repartitioning (ownership handoff between PIDs)",
+            is_flag: true,
+            default: None,
+        },
+        OptSpec {
+            name: "split-ratio",
+            help: "straggler threshold: split below this × median rate",
+            is_flag: false,
+            default: Some("0.5"),
+        },
+        OptSpec {
+            name: "adapt-every-ms",
+            help: "rebalance observation window (ms)",
+            is_flag: false,
+            default: Some("40"),
+        },
+        OptSpec {
+            name: "min-part",
+            help: "never shrink a PID's share below this many coords",
+            is_flag: false,
+            default: Some("2"),
+        },
+        OptSpec {
+            name: "straggler",
+            help: "throttle this PID (straggler injection)",
+            is_flag: false,
+            default: None,
+        },
+        OptSpec {
+            name: "straggler-ups",
+            help: "throttled PID's max updates/sec",
+            is_flag: false,
+            default: Some("50000"),
+        },
     ]
 }
 
@@ -433,7 +471,33 @@ fn cmd_stream(argv: &[String]) -> CliResult {
         .with_seed(seed)
         .with_sequence(SequenceKind::GreedyMaxFluid);
     cfg.max_wall = Duration::from_secs(120);
-    let cold_cfg = cfg.clone();
+    if args.get("straggler").is_some() {
+        let pid = args.get_usize("straggler", 0)?;
+        if pid >= k {
+            return Err(format!("--straggler {pid} out of range (pids = {k})").into());
+        }
+        cfg = cfg.with_straggler(pid, args.get_f64("straggler-ups", 50_000.0)?);
+    }
+    let adaptive = args.has_flag("adaptive");
+    if adaptive {
+        let policy = AdaptivePolicy {
+            split_ratio: args.get_f64("split-ratio", 0.5)?,
+            min_part: args.get_usize("min-part", 2)?,
+            ..Default::default()
+        };
+        cfg = cfg.with_adaptive(AdaptiveConfig {
+            policy,
+            interval: Duration::from_millis(args.get_u64("adapt-every-ms", 40)?),
+            ..Default::default()
+        });
+    }
+    let cold_cfg = {
+        // the cold baseline is always a static, unthrottled solve
+        let mut c = cfg.clone();
+        c.adaptive = None;
+        c.straggler = None;
+        c
+    };
 
     let mut engine = StreamingEngine::new(mg, damping, true, cfg)?;
     let init = engine.converge()?;
@@ -508,6 +572,8 @@ fn cmd_stream(argv: &[String]) -> CliResult {
         }
     }
     print!("{}", table.render());
+    let ownership = engine.ownership();
+    let update_counts = engine.update_counts();
     let summary = engine.finish()?;
     println!(
         "\n{} epochs, {} mutations; steady-state {:.2e} upd/s; final residual {:.2e}",
@@ -516,6 +582,23 @@ fn cmd_stream(argv: &[String]) -> CliResult {
         summary.steady_updates_per_sec,
         summary.final_solution.residual
     );
+    println!("\nstats:");
+    for (name, v) in &summary.final_solution.metrics {
+        println!("  {name:<22} {v}");
+    }
+    println!("  {:<22} {:.3}", "load_imbalance", ownership.imbalance());
+    for (kk, size) in ownership.part_sizes().iter().enumerate() {
+        println!("  pid {kk}: |Ω| = {size:<6} updates = {}", update_counts[kk]);
+    }
+    if adaptive {
+        let moves = summary.final_solution.metrics.get("handoffs_planned");
+        let shipped = summary.final_solution.metrics.get("handoffs_total");
+        println!(
+            "  ownership moved {} times ({} handoffs shipped)",
+            moves.copied().unwrap_or(0),
+            shipped.copied().unwrap_or(0)
+        );
+    }
     Ok(())
 }
 

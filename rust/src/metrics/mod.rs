@@ -159,6 +159,15 @@ impl MetricSet {
         }
     }
 
+    /// Gauge-style overwrite (no-op if the name was not registered) — for
+    /// level metrics like the current partition load imbalance, where the
+    /// latest observation replaces the previous one.
+    pub fn set(&self, name: &'static str, v: u64) {
+        if let Some(c) = self.counters.get(name) {
+            c.store(v, Ordering::Relaxed);
+        }
+    }
+
     pub fn snapshot(&self) -> BTreeMap<&'static str, u64> {
         self.counters
             .iter()
@@ -304,6 +313,10 @@ mod tests {
         m.max("msgs", 5);
         assert_eq!(m.get("msgs"), 5);
         assert_eq!(m.get("bytes"), 120);
+        assert_eq!(m.get("unknown"), 0);
+        m.set("bytes", 7);
+        assert_eq!(m.get("bytes"), 7, "set overwrites");
+        m.set("unknown", 1); // unregistered: silently ignored
         assert_eq!(m.get("unknown"), 0);
         assert!(m.render().contains("bytes"));
     }

@@ -7,6 +7,9 @@
 //! refinement (Kernighan–Lin flavored, single pass) and the cut/balance
 //! metrics to compare them.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
 use crate::error::{DiterError, Result};
 use crate::sparse::CsrMatrix;
 
@@ -199,6 +202,33 @@ impl Partition {
         Self::from_owner(owner, new_k + 1)
     }
 
+    /// Live-rebalance mechanics: move `coords` to part `to`, keeping the
+    /// PID count fixed. This is how §4.3's split/merge is realized on a
+    /// fixed worker pool — "splitting the slowest PID's Ω_k" becomes
+    /// offloading part of it to a faster PID. Errors if the move would
+    /// empty a part (the exact-cover invariant requires K non-empty sets).
+    pub fn transfer(&self, coords: &[usize], to: usize) -> Result<Partition> {
+        if to >= self.k() {
+            return Err(DiterError::InvalidPartition(format!("no part {to}")));
+        }
+        let mut owner = self.owner.clone();
+        for &i in coords {
+            if i >= self.n {
+                return Err(DiterError::InvalidPartition(format!(
+                    "coordinate {i} out of range (n = {})",
+                    self.n
+                )));
+            }
+            owner[i] = to;
+        }
+        Self::from_owner(owner, self.k())
+    }
+
+    /// Sizes of every Ω_k (for load reports and rebalance policies).
+    pub fn part_sizes(&self) -> Vec<usize> {
+        self.parts.iter().map(Vec::len).collect()
+    }
+
     /// §4.3: merge part `b` into part `a` (regrouping fast PIDs).
     pub fn merge_parts(&self, a: usize, b: usize) -> Result<Partition> {
         if a == b || a >= self.k() || b >= self.k() {
@@ -241,6 +271,138 @@ impl Partition {
             return Err(DiterError::InvalidPartition("cover incomplete".into()));
         }
         Ok(())
+    }
+}
+
+/// The **versioned owner map** behind live repartitioning: one shared
+/// table per run, consulted by every worker to route fluid and by the
+/// coordinator to install rebalances.
+///
+/// The protocol invariants (DESIGN.md §4):
+///
+/// * every coordinate is *held* by exactly one worker at any instant;
+///   holdings change only through `Handoff` messages on the bus;
+/// * a worker whose cached version is stale still routes correctly in the
+///   eventual sense — receivers re-route misdelivered fluid by consulting
+///   the (always current) table;
+/// * `handoffs_inflight` counts slices shipped but not yet folded into
+///   the recipient's state; the streaming rebase freezes the table and
+///   waits for it to reach zero so a checkpoint can never miss history.
+pub struct OwnershipTable {
+    /// (version, partition) — swapped atomically under the lock
+    current: RwLock<(u64, Arc<Partition>)>,
+    /// cached copy of the version for cheap lock-free polling
+    version: AtomicU64,
+    /// while frozen no new version may be installed (epoch transitions)
+    frozen: AtomicBool,
+    /// handoff slices shipped but not yet applied by their recipient
+    inflight: AtomicU64,
+    /// lifetime handoff count (the `handoffs_total` gauge's source)
+    total: AtomicU64,
+    /// per-PID highest version fully synced (every coordinate the map
+    /// takes away from the PID has been shipped by the time it acks)
+    acked: Vec<AtomicU64>,
+}
+
+impl OwnershipTable {
+    pub fn new(p: Partition) -> Arc<OwnershipTable> {
+        let k = p.k();
+        Arc::new(OwnershipTable {
+            current: RwLock::new((0, Arc::new(p))),
+            version: AtomicU64::new(0),
+            frozen: AtomicBool::new(false),
+            inflight: AtomicU64::new(0),
+            total: AtomicU64::new(0),
+            acked: (0..k).map(|_| AtomicU64::new(0)).collect(),
+        })
+    }
+
+    /// Current version (lock-free; workers poll this every loop).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Consistent (version, partition) pair.
+    pub fn snapshot(&self) -> (u64, Arc<Partition>) {
+        let g = self.current.read().unwrap_or_else(|e| e.into_inner());
+        (g.0, g.1.clone())
+    }
+
+    /// The current partition.
+    pub fn partition(&self) -> Arc<Partition> {
+        self.snapshot().1
+    }
+
+    /// Current owner of coordinate `i` (prefer a cached
+    /// [`OwnershipTable::snapshot`] on hot paths — this takes the lock).
+    pub fn owner(&self, i: usize) -> usize {
+        self.partition().owner(i)
+    }
+
+    /// Install a new ownership map. Returns the new version, or `None`
+    /// while the table is frozen (an epoch transition is in progress).
+    /// The partition must keep the same n and K.
+    pub fn install(&self, p: Partition) -> Option<u64> {
+        let mut g = self.current.write().unwrap_or_else(|e| e.into_inner());
+        if self.frozen.load(Ordering::Acquire) {
+            return None;
+        }
+        debug_assert_eq!(p.n(), g.1.n());
+        debug_assert_eq!(p.k(), g.1.k());
+        g.0 += 1;
+        g.1 = Arc::new(p);
+        self.version.store(g.0, Ordering::Release);
+        Some(g.0)
+    }
+
+    /// Block installs (workers may still finish in-flight handoffs).
+    pub fn freeze(&self) {
+        self.frozen.store(true, Ordering::Release);
+    }
+
+    pub fn unfreeze(&self) {
+        self.frozen.store(false, Ordering::Release);
+    }
+
+    pub fn is_frozen(&self) -> bool {
+        self.frozen.load(Ordering::Acquire)
+    }
+
+    /// A worker is about to ship a handoff slice.
+    pub fn begin_handoff(&self) {
+        self.inflight.fetch_add(1, Ordering::AcqRel);
+        self.total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The recipient folded the slice into its local state.
+    pub fn end_handoff(&self) {
+        self.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    pub fn handoffs_inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    pub fn handoffs_total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Worker `pid` has fully synced with `version`: every coordinate the
+    /// map takes away from it was shipped (and booked via
+    /// [`OwnershipTable::begin_handoff`]) *before* this ack.
+    pub fn ack_version(&self, pid: usize, version: u64) {
+        self.acked[pid].store(version, Ordering::Release);
+    }
+
+    /// Every worker has synced with `version`. Together with
+    /// `handoffs_inflight() == 0` (checked AFTER this, matching the
+    /// begin-before-ack ordering on the worker side) this proves no
+    /// ownership migration is pending anywhere — the quiescence condition
+    /// the streaming rebase needs before gathering H.
+    pub fn all_acked(&self, version: u64) -> bool {
+        self.acked
+            .iter()
+            .all(|a| a.load(Ordering::Acquire) >= version)
     }
 }
 
@@ -328,5 +490,72 @@ mod tests {
         let p = Partition::contiguous(6, 3).unwrap();
         assert!(p.merge_parts(1, 1).is_err());
         assert!(p.merge_parts(0, 9).is_err());
+    }
+
+    #[test]
+    fn transfer_moves_coords_and_preserves_cover() {
+        let p = Partition::contiguous(10, 2).unwrap();
+        let next = p.transfer(&[3, 4], 1).unwrap();
+        next.validate().unwrap();
+        assert_eq!(next.k(), 2);
+        assert_eq!(next.owner(3), 1);
+        assert_eq!(next.owner(4), 1);
+        assert_eq!(next.part_sizes(), vec![3, 7]);
+        // moving a coord to its current owner is a no-op partition-wise
+        let same = next.transfer(&[3], 1).unwrap();
+        assert_eq!(same, next);
+    }
+
+    #[test]
+    fn transfer_rejects_emptying_and_bad_args() {
+        let p = Partition::contiguous(4, 2).unwrap();
+        assert!(p.transfer(&[0, 1], 1).is_err(), "would empty Ω_0");
+        assert!(p.transfer(&[0], 5).is_err(), "no such part");
+        assert!(p.transfer(&[9], 1).is_err(), "coord out of range");
+    }
+
+    #[test]
+    fn ownership_table_versions_and_freeze() {
+        let t = OwnershipTable::new(Partition::contiguous(8, 2).unwrap());
+        assert_eq!(t.version(), 0);
+        let next = t.partition().transfer(&[1], 1).unwrap();
+        assert_eq!(t.install(next.clone()), Some(1));
+        assert_eq!(t.version(), 1);
+        assert_eq!(t.owner(1), 1);
+        t.freeze();
+        assert!(t.is_frozen());
+        assert_eq!(t.install(next), None, "frozen table rejects installs");
+        assert_eq!(t.version(), 1);
+        t.unfreeze();
+        let (v, part) = t.snapshot();
+        assert_eq!(v, 1);
+        assert_eq!(part.owner(1), 1);
+    }
+
+    #[test]
+    fn ownership_table_handoff_accounting() {
+        let t = OwnershipTable::new(Partition::contiguous(4, 2).unwrap());
+        assert_eq!(t.handoffs_inflight(), 0);
+        t.begin_handoff();
+        t.begin_handoff();
+        assert_eq!(t.handoffs_inflight(), 2);
+        assert_eq!(t.handoffs_total(), 2);
+        t.end_handoff();
+        t.end_handoff();
+        assert_eq!(t.handoffs_inflight(), 0);
+        assert_eq!(t.handoffs_total(), 2, "total never decreases");
+    }
+
+    #[test]
+    fn ownership_table_version_acks() {
+        let t = OwnershipTable::new(Partition::contiguous(8, 2).unwrap());
+        assert!(t.all_acked(0), "initial version is trivially synced");
+        let next = t.partition().transfer(&[1], 1).unwrap();
+        let v = t.install(next).unwrap();
+        assert!(!t.all_acked(v), "no worker has synced with v1 yet");
+        t.ack_version(0, v);
+        assert!(!t.all_acked(v));
+        t.ack_version(1, v);
+        assert!(t.all_acked(v));
     }
 }

@@ -208,6 +208,24 @@ pub struct CscMatrix {
 }
 
 impl CscMatrix {
+    pub(crate) fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Self {
+        debug_assert_eq!(indptr.len(), ncols + 1);
+        debug_assert_eq!(indices.len(), values.len());
+        Self {
+            nrows,
+            ncols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
     pub fn nrows(&self) -> usize {
         self.nrows
     }
@@ -272,6 +290,14 @@ pub struct SparseMatrix {
 impl SparseMatrix {
     pub fn from_csr(csr: CsrMatrix) -> Self {
         let csc = csr.to_csc();
+        Self { csr, csc }
+    }
+
+    /// Build from an already-assembled CSC form (the incremental
+    /// column-patch path of [`crate::graph::MutableDigraph`]), deriving
+    /// the CSR twin without a triplet round-trip.
+    pub fn from_csc(csc: CscMatrix) -> Self {
+        let csr = csc.to_csr();
         Self { csr, csc }
     }
 
@@ -359,6 +385,15 @@ mod tests {
         let csr = CsrMatrix::from_dense(&paper_p1());
         let back = csr.to_csc().to_csr();
         assert_eq!(back.to_dense(), paper_p1());
+    }
+
+    #[test]
+    fn sparse_from_csc_matches_from_csr() {
+        let csr = CsrMatrix::from_dense(&paper_p1());
+        let a = SparseMatrix::from_csr(csr.clone());
+        let b = SparseMatrix::from_csc(csr.to_csc());
+        assert_eq!(a.csr().to_dense(), b.csr().to_dense());
+        assert_eq!(a.csc(), b.csc());
     }
 
     #[test]

@@ -41,21 +41,12 @@ pub const BUS_METRICS: &[&str] = &[
 ];
 
 /// Configuration for the bus.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct BusConfig {
     /// simulated one-way latency range (None = deliver immediately)
     pub latency: Option<(Duration, Duration)>,
     /// seed for latency jitter
     pub seed: u64,
-}
-
-impl Default for BusConfig {
-    fn default() -> Self {
-        Self {
-            latency: None,
-            seed: 0,
-        }
-    }
 }
 
 /// An addressed envelope with fluid-mass accounting.
@@ -133,7 +124,19 @@ pub struct Endpoint<T> {
 
 /// Build a fully-connected bus of `k` endpoints.
 pub fn bus<T: Send>(k: usize, cfg: &BusConfig) -> (Vec<Endpoint<T>>, Arc<MetricSet>) {
-    let metrics = Arc::new(MetricSet::new(BUS_METRICS));
+    bus_with_metrics(k, cfg, &[])
+}
+
+/// Build a bus whose [`MetricSet`] also registers `extra` counter names —
+/// layers above the transport (e.g. the coordinator's worker core) share
+/// the bus metric set so one snapshot captures the whole run.
+pub fn bus_with_metrics<T: Send>(
+    k: usize,
+    cfg: &BusConfig,
+    extra: &[&'static str],
+) -> (Vec<Endpoint<T>>, Arc<MetricSet>) {
+    let names: Vec<&'static str> = BUS_METRICS.iter().chain(extra).copied().collect();
+    let metrics = Arc::new(MetricSet::new(&names));
     let shared = Arc::new(Shared {
         inflight: AtomicF64::new(0.0),
         retained: AtomicU64::new(0),
@@ -322,6 +325,11 @@ impl<T: Send> Endpoint<T> {
     pub fn global_inflight(&self) -> f64 {
         self.shared.inflight.get()
     }
+
+    /// The bus-wide metric set (shared by all endpoints).
+    pub fn metrics(&self) -> Arc<MetricSet> {
+        self.shared.metrics.clone()
+    }
 }
 
 /// A read-only monitor handle onto the bus state (for the coordinator's
@@ -455,6 +463,14 @@ mod tests {
         std::thread::sleep(Duration::from_millis(80));
         let got = b.drain();
         assert_eq!(got.len(), 10);
+    }
+
+    #[test]
+    fn extra_metric_names_registered() {
+        let (eps, metrics) = bus_with_metrics::<u8>(2, &BusConfig::default(), &["handoffs_total"]);
+        metrics.incr("handoffs_total");
+        assert_eq!(metrics.get("handoffs_total"), 1);
+        assert_eq!(eps[0].metrics().get("handoffs_total"), 1, "shared set");
     }
 
     #[test]

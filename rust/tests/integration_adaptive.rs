@@ -1,0 +1,197 @@
+//! Integration: live adaptive repartitioning — §4.3 ownership handoff
+//! across the coordinator, transport, and streaming layers.
+//!
+//! The load-bearing property throughout is **fluid conservation through
+//! handoffs**: the solve must land on the exact fixed point no matter how
+//! many `(H, B, F)` slices migrated between PIDs mid-flight. For patched
+//! PageRank that is directly observable as `‖x‖₁ = 1` (any lost or
+//! duplicated mass ε shifts the total by ε/(1−d)) plus agreement with a
+//! cold sequential solve.
+
+use std::time::Duration;
+
+use diter::coordinator::{
+    v2, AdaptiveConfig, AdaptivePolicy, DistributedConfig, StreamingEngine,
+};
+use diter::graph::{
+    pagerank_system, power_law_web_graph, ChurnModel, MutableDigraph, MutationStream,
+};
+use diter::linalg::vec_ops::{dist1, norm1};
+use diter::partition::Partition;
+use diter::solver::{DIteration, FixedPointProblem, SequenceKind, SolveOptions, Solver};
+
+fn cold_solution(problem: &FixedPointProblem) -> Vec<f64> {
+    let opts = SolveOptions {
+        tol: 1e-13,
+        max_cost: 200_000.0,
+        trace_every: 0.0,
+        exact: None,
+    };
+    DIteration::fluid_cyclic().solve(problem, &opts).unwrap().x
+}
+
+fn pagerank_problem(n: usize, seed: u64) -> FixedPointProblem {
+    let g = power_law_web_graph(n, 6, 0.1, seed);
+    let sys = pagerank_system(&g, 0.85, true).unwrap();
+    FixedPointProblem::new(sys.matrix.clone(), sys.b.clone()).unwrap()
+}
+
+fn aggressive_adaptive(interval_ms: u64) -> AdaptiveConfig {
+    AdaptiveConfig {
+        policy: AdaptivePolicy::default(),
+        interval: Duration::from_millis(interval_ms),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn mid_flight_handoff_conserves_fluid() {
+    // a heavily throttled PID plus a tight rebalance window forces
+    // ownership handoffs while fluid is in flight; conservation means the
+    // run still converges to the exact fixed point with unit mass
+    let n = 400;
+    let problem = pagerank_problem(n, 23);
+    let cfg = DistributedConfig::new(Partition::contiguous(n, 4).unwrap())
+        .with_tol(1e-10)
+        .with_seed(23)
+        .with_sequence(SequenceKind::GreedyMaxFluid)
+        .with_straggler(1, 10_000.0)
+        .with_adaptive(aggressive_adaptive(8));
+    let sol = v2::solve_v2(&problem, &cfg).unwrap();
+    assert!(sol.converged, "residual {:.3e}", sol.residual);
+    assert!(
+        sol.metrics["handoffs_total"] >= 1,
+        "the straggler must have shed ownership at least once: {:?}",
+        sol.metrics
+    );
+    assert!(
+        (norm1(&sol.x) - 1.0).abs() < 1e-7,
+        "PageRank mass must survive every handoff: ‖x‖₁ = {}",
+        norm1(&sol.x)
+    );
+    let want = cold_solution(&problem);
+    assert!(
+        dist1(&sol.x, &want) < 1e-7,
+        "adaptive vs cold Δ₁ = {:.3e}",
+        dist1(&sol.x, &want)
+    );
+}
+
+#[test]
+fn handoffs_survive_latency_and_rerouting() {
+    // with injected transport latency, fluid addressed to the *old* owner
+    // keeps arriving after a handoff — the receiver must re-route it via
+    // the ownership table without losing a unit
+    let n = 300;
+    let problem = pagerank_problem(n, 31);
+    let mut cfg = DistributedConfig::new(Partition::contiguous(n, 4).unwrap())
+        .with_tol(1e-10)
+        .with_seed(31)
+        .with_sequence(SequenceKind::GreedyMaxFluid)
+        .with_straggler(0, 10_000.0)
+        .with_adaptive(aggressive_adaptive(8));
+    cfg.latency = Some((Duration::from_micros(50), Duration::from_micros(400)));
+    let sol = v2::solve_v2(&problem, &cfg).unwrap();
+    assert!(sol.converged, "residual {:.3e}", sol.residual);
+    assert!(sol.metrics["handoffs_total"] >= 1, "{:?}", sol.metrics);
+    assert!((norm1(&sol.x) - 1.0).abs() < 1e-7, "‖x‖₁ = {}", norm1(&sol.x));
+    let want = cold_solution(&problem);
+    assert!(dist1(&sol.x, &want) < 1e-7);
+}
+
+#[test]
+fn adaptive_beats_static_on_a_straggler() {
+    // the acceptance benchmark in test form: one PID throttled hard;
+    // adaptive repartitioning must cut time-to-converge vs the static
+    // partition (wide margin — the static run is sleep-dominated)
+    let n = 800;
+    let problem = pagerank_problem(n, 7);
+    let base = DistributedConfig::new(Partition::contiguous(n, 4).unwrap())
+        .with_tol(1e-9)
+        .with_seed(7)
+        .with_sequence(SequenceKind::GreedyMaxFluid)
+        .with_straggler(0, 8_000.0);
+    let mut slow = base.clone();
+    slow.max_wall = Duration::from_secs(60);
+    let static_sol = v2::solve_v2(&problem, &slow).unwrap();
+    assert!(static_sol.converged, "static residual {:.3e}", static_sol.residual);
+
+    let adaptive_cfg = slow.clone().with_adaptive(aggressive_adaptive(15));
+    let adaptive_sol = v2::solve_v2(&problem, &adaptive_cfg).unwrap();
+    assert!(
+        adaptive_sol.converged,
+        "adaptive residual {:.3e}",
+        adaptive_sol.residual
+    );
+    // the deterministic signal: ownership actually moved off the
+    // straggler (at least one half-split of its 200-coordinate share)
+    assert!(adaptive_sol.metrics["handoffs_total"] >= 1);
+    assert!(
+        adaptive_sol.metrics["handoff_coords"] >= 50,
+        "a real share of the straggler's Ω must have moved: {:?}",
+        adaptive_sol.metrics
+    );
+    // the timing claim: the static run is sleep-dominated (the throttled
+    // PID must grind through its full share at 8k upd/s), so adaptive
+    // should win with a wide gap — asserted here without a margin factor
+    // to stay robust on loaded CI runners; the quantified speedup claim
+    // lives in benches/adaptive_straggler.rs
+    assert!(
+        adaptive_sol.wall_secs < static_sol.wall_secs,
+        "adaptive {:.3}s must beat static {:.3}s",
+        adaptive_sol.wall_secs,
+        static_sol.wall_secs
+    );
+    // both land on the same fixed point
+    assert!(dist1(&adaptive_sol.x, &static_sol.x) < 1e-6);
+}
+
+#[test]
+fn streaming_engine_rebalances_across_epochs() {
+    // the full stack: the streaming engine runs with a straggler and live
+    // repartitioning, then a mutation batch forces an epoch rebase AFTER
+    // ownership has moved — the freeze/quiesce protocol must hand the
+    // complete history to the rebase, and the run must land on the cold
+    // fixed point of the mutated graph
+    let n = 300;
+    let g = power_law_web_graph(n, 6, 0.1, 41);
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let mut cfg = DistributedConfig::new(Partition::contiguous(n, 3).unwrap())
+        .with_tol(1e-9)
+        .with_seed(41)
+        .with_sequence(SequenceKind::GreedyMaxFluid)
+        .with_straggler(2, 10_000.0)
+        .with_adaptive(aggressive_adaptive(8));
+    cfg.max_wall = Duration::from_secs(60);
+    let mut eng = StreamingEngine::new(mg, 0.85, true, cfg).unwrap();
+    let init = eng.converge().unwrap();
+    assert!(init.solution.converged, "residual {:.3e}", init.solution.residual);
+    assert!(
+        eng.handoffs_total() >= 1,
+        "initial epoch must have rebalanced off the straggler"
+    );
+    let moved_ownership = eng.ownership();
+    assert!(
+        moved_ownership.part(2).len() < n / 3,
+        "straggler PID 2 must hold less than its contiguous share, has {}",
+        moved_ownership.part(2).len()
+    );
+
+    // epoch rebase across the rebalanced ownership
+    let mut stream = MutationStream::new(ChurnModel::RandomRewire, 99);
+    let batch = stream.next_batch(eng.graph(), 24);
+    let report = eng.apply_batch(&batch).unwrap();
+    assert!(report.solution.converged, "residual {:.3e}", report.solution.residual);
+    assert!(
+        (norm1(&report.solution.x) - 1.0).abs() < 1e-6,
+        "mass through rebase + handoffs: ‖x‖₁ = {}",
+        norm1(&report.solution.x)
+    );
+    let want = cold_solution(eng.problem());
+    assert!(
+        dist1(&report.solution.x, &want) < 1e-6,
+        "streamed vs cold Δ₁ = {:.3e}",
+        dist1(&report.solution.x, &want)
+    );
+    eng.finish().unwrap();
+}

@@ -270,6 +270,92 @@ fn prop_streamed_mutations_match_cold_fixed_point() {
     });
 }
 
+/// Incremental column-patched matrix rebuild ≡ full rebuild, for any
+/// mutation sequence (the streaming epoch loop's correctness condition).
+#[test]
+fn prop_incremental_matrix_equals_full_rebuild() {
+    use diter::graph::{ChurnModel, MutableDigraph, MutationStream};
+    run_cases(8, 0x1AC5, |g| {
+        let n = g.usize_in(30, 80);
+        let cap = n + 8;
+        let web = diter::graph::power_law_web_graph(n, 4, 0.1, g.case_seed);
+        let mut mg = MutableDigraph::from_digraph(&web, cap);
+        let model = if g.bool() {
+            ChurnModel::RandomRewire
+        } else {
+            ChurnModel::PreferentialGrowth { links_per_node: 3 }
+        };
+        let mut stream = MutationStream::new(model, g.case_seed ^ 0x5EED);
+        let patch = g.bool();
+        mg.pagerank_system(0.85, patch).unwrap(); // warm the column cache
+        for _ in 0..g.usize_in(1, 4) {
+            let batch = stream.next_batch(&mg, g.usize_in(2, 12));
+            for m in &batch {
+                mg.apply(m);
+            }
+            let inc = mg.pagerank_system(0.85, patch).unwrap();
+            let mut cold = MutableDigraph::new(cap);
+            for (u, v, w) in mg.edges() {
+                cold.insert_edge(u, v, w);
+            }
+            let full = cold.pagerank_system(0.85, patch).unwrap();
+            assert_eq!(
+                inc.matrix.csr().to_dense(),
+                full.matrix.csr().to_dense(),
+                "patched matrix must be bit-identical to a full rebuild"
+            );
+            assert_eq!(inc.b, full.b);
+        }
+    });
+}
+
+/// Ownership transfers preserve the exact cover for random move chains.
+#[test]
+fn prop_transfer_preserves_exact_cover() {
+    run_cases(40, 0x7A5F, |g| {
+        let n = g.usize_in(8, 60);
+        let k = g.usize_in(2, 5.min(n / 2));
+        let mut part = Partition::contiguous(n, k).unwrap();
+        for _ in 0..g.usize_in(1, 8) {
+            let from = g.usize_in(0, k - 1);
+            let to = g.usize_in(0, k - 1);
+            let members = part.part(from).to_vec();
+            if members.len() < 2 || from == to {
+                continue;
+            }
+            let take = g.usize_in(1, members.len() - 1);
+            let coords: Vec<usize> = members[..take].to_vec();
+            let next = part.transfer(&coords, to).unwrap();
+            next.validate().unwrap();
+            for &c in &coords {
+                assert_eq!(next.owner(c), to);
+            }
+            part = next;
+        }
+    });
+}
+
+/// §4.3 split/merge round-trips preserve the exact cover.
+#[test]
+fn prop_split_merge_preserve_exact_cover() {
+    run_cases(30, 0x5911, |g| {
+        let n = g.usize_in(6, 60);
+        let k = g.usize_in(2, 4.min(n / 2));
+        let part = Partition::contiguous(n, k).unwrap();
+        let target = g.usize_in(0, k - 1);
+        if part.part(target).len() < 2 {
+            return;
+        }
+        let split = part.split_part(target).unwrap();
+        split.validate().unwrap();
+        assert_eq!(split.k(), k + 1);
+        let merged = split.merge_parts(target, k).unwrap();
+        merged.validate().unwrap();
+        assert_eq!(merged.k(), k);
+        assert_eq!(merged.part(target), part.part(target));
+    });
+}
+
 /// Fluid-form residual ‖F‖₁ equals the directly-computed remaining fluid.
 #[test]
 fn prop_fluid_norm_equals_residual() {
