@@ -10,7 +10,7 @@
 //! share shrinks, while the static run degrades linearly with the
 //! throttle.
 
-use diter::bench_harness::{bench_header, fmt_secs, Table};
+use diter::bench_harness::{bench_header, bench_json_dir, fmt_secs, Json, Table};
 use diter::coordinator::{v2, AdaptiveConfig, DistributedConfig};
 use diter::graph::{pagerank_system, power_law_web_graph};
 use diter::partition::Partition;
@@ -64,6 +64,11 @@ fn main() {
         "adaptive-res",
     ]);
     let mut last_speedup = 0.0;
+    let mut throttles = Vec::new();
+    let mut static_walls = Vec::new();
+    let mut adaptive_walls = Vec::new();
+    let mut speedups = Vec::new();
+    let mut handoffs_total = 0u64;
     for &ups in &[200_000.0, 50_000.0, 20_000.0] {
         let static_sol = v2::solve_v2(&problem, &base(Some(ups))).unwrap();
         assert!(static_sol.converged, "static run must still converge");
@@ -74,6 +79,11 @@ fn main() {
         let adaptive_sol = v2::solve_v2(&problem, &adaptive_cfg).unwrap();
         assert!(adaptive_sol.converged, "adaptive run must converge");
         last_speedup = static_sol.wall_secs / adaptive_sol.wall_secs.max(1e-9);
+        throttles.push(ups);
+        static_walls.push(static_sol.wall_secs);
+        adaptive_walls.push(adaptive_sol.wall_secs);
+        speedups.push(last_speedup);
+        handoffs_total += adaptive_sol.metrics["handoffs_total"];
         table.row(&[
             format!("{ups:.0}"),
             fmt_secs(static_sol.wall_secs),
@@ -86,10 +96,34 @@ fn main() {
         ]);
     }
     print!("{}", table.render());
+
+    let bench_env = std::env::var("DITER_BENCH_ENV").unwrap_or_else(|_| "local".into());
+    let json = Json::new()
+        .int_field("schema", 1)
+        .str_field("bench", "adaptive_straggler")
+        .bool_field("measured", true)
+        .str_field("environment", &bench_env)
+        .int_field("n", n as u64)
+        .int_field("k", k as u64)
+        .num_field("tol", tol)
+        .num_field("unthrottled_wall_secs", unthrottled.wall_secs)
+        .num_field(
+            "unthrottled_updates_per_sec",
+            unthrottled.updates_per_sec(),
+        )
+        .arr_num_field("straggler_updates_per_sec", &throttles)
+        .arr_num_field("static_time_to_reconverge_secs", &static_walls)
+        .arr_num_field("adaptive_time_to_reconverge_secs", &adaptive_walls)
+        .arr_num_field("adaptive_vs_static_speedup", &speedups)
+        .int_field("handoffs_total", handoffs_total);
+    let path = bench_json_dir().join("BENCH_adaptive.json");
+    json.write(&path).expect("write BENCH_adaptive.json");
+    println!("\nwrote {}", path.display());
+
     assert!(
         last_speedup > 1.0,
         "adaptive repartitioning must beat the static partition on the \
          hardest straggler (speedup {last_speedup:.2}x)"
     );
-    println!("\nadaptive beats static on the 20k upd/s straggler: {last_speedup:.2}x");
+    println!("adaptive beats static on the 20k upd/s straggler: {last_speedup:.2}x");
 }

@@ -88,10 +88,32 @@ fn main() {
         for &(d, j) in &targets {
             buf.add(d, j, 1e-6);
         }
-        black_box(buf.take_all())
+        let mut out = 0usize;
+        buf.flush(true, |_, coords, _, _| out += coords.len());
+        black_box(out)
     });
     table.row(&[
-        "coalesce 10k adds+flush".into(),
+        "coalesce 10k keyed adds".into(),
+        fmt_secs(s.mean),
+        fmt_secs(s.p50),
+        fmt_secs(s.p99),
+        format!("{:.2e} add/s", 1e4 / s.mean),
+    ]);
+    // the remnant kernel's route: slots interned once, then indexed adds
+    let slots: Vec<(usize, u32)> = targets
+        .iter()
+        .map(|&(d, j)| (d, buf.intern(d, j)))
+        .collect();
+    let s = bench(3, 50, || {
+        for &(d, sl) in &slots {
+            buf.add_slot(d, sl, 1e-6);
+        }
+        let mut out = 0usize;
+        buf.flush(true, |_, coords, _, _| out += coords.len());
+        black_box(out)
+    });
+    table.row(&[
+        "coalesce 10k slot adds".into(),
         fmt_secs(s.mean),
         fmt_secs(s.p50),
         fmt_secs(s.p99),

@@ -1,40 +1,142 @@
 //! Bench: the streaming engine under sustained churn — steady-state
 //! updates/sec and time-to-reconverge per mutation batch, against a full
-//! V2 restart on every batch (the baseline an offline system pays).
+//! V2 restart on every batch (the baseline an offline system pays) — plus
+//! the **kernel head-to-head**: the same churn workload driven through the
+//! partition-local block kernel and through the pre-refactor global-walk
+//! kernel, in the same binary, recording the diffusions/sec ratio.
 //!
-//! Expected shape: warm rebases cost a small fraction of a cold solve for
-//! small batches (the §3.2 claim at scale), and the gap narrows as the
-//! batch size grows towards rewriting the whole graph.
+//! Emits `BENCH_stream.json` (machine-readable: updates/sec,
+//! time-to-reconverge, diffusions/sec per kernel, and the local/global
+//! speedup) into `DITER_BENCH_JSON_DIR` (default `.`). The committed copy
+//! at the repo root is the perf-trajectory baseline the CI gate
+//! (`tools/bench_gate.py`) compares against.
+//!
+//! Env knobs: `DITER_BENCH_N` (graph size), `DITER_BENCH_JSON_DIR`
+//! (relative paths resolve against the workspace root, not cargo's
+//! package-root cwd), `DITER_BENCH_ENV` (recorded as the measurement
+//! environment), `DITER_BENCH_ASSERT_SPEEDUP` (fail unless local ≥ this
+//! × global).
 
 use std::time::Duration;
 
-use diter::bench_harness::{bench_header, fmt_secs, Table};
-use diter::coordinator::{v2, DistributedConfig, StreamingEngine};
+use diter::bench_harness::{bench_header, bench_json_dir, fmt_secs, Json, Table};
+use diter::coordinator::{v2, DistributedConfig, KernelKind, StreamingEngine};
 use diter::graph::{power_law_web_graph, ChurnModel, MutableDigraph, MutationStream};
 use diter::partition::Partition;
 use diter::solver::SequenceKind;
 
+const K: usize = 4;
+const TOL: f64 = 1e-9;
+
+fn base_cfg(n: usize, kernel: KernelKind) -> DistributedConfig {
+    let mut cfg = DistributedConfig::new(Partition::contiguous(n, K).unwrap())
+        .with_tol(TOL)
+        .with_seed(5)
+        .with_sequence(SequenceKind::GreedyMaxFluid)
+        .with_kernel(kernel);
+    cfg.max_wall = Duration::from_secs(300);
+    cfg
+}
+
+/// One kernel's run over the shared churn workload.
+struct KernelStats {
+    init_updates: u64,
+    init_wall: f64,
+    reconverge_walls: Vec<f64>,
+    epoch_updates: u64,
+    epoch_wall: f64,
+}
+
+impl KernelStats {
+    /// Diffusions/sec over the initial cold solve — the headline kernel
+    /// throughput (scalar diffusions == scalar updates in this scheme).
+    fn init_diffusions_per_sec(&self) -> f64 {
+        self.init_updates as f64 / self.init_wall.max(1e-9)
+    }
+
+    fn epoch_diffusions_per_sec(&self) -> f64 {
+        self.epoch_updates as f64 / self.epoch_wall.max(1e-9)
+    }
+
+    fn reconverge_mean(&self) -> f64 {
+        if self.reconverge_walls.is_empty() {
+            return 0.0;
+        }
+        self.reconverge_walls.iter().sum::<f64>() / self.reconverge_walls.len() as f64
+    }
+
+    fn to_json(&self) -> Json {
+        Json::new()
+            .num_field("init_diffusions_per_sec", self.init_diffusions_per_sec())
+            .num_field("epoch_diffusions_per_sec", self.epoch_diffusions_per_sec())
+            .int_field("init_updates", self.init_updates)
+            .num_field("init_wall_secs", self.init_wall)
+            .num_field("reconverge_secs_mean", self.reconverge_mean())
+            .arr_num_field("reconverge_secs", &self.reconverge_walls)
+    }
+}
+
+/// Drive one engine (one kernel) through the head-to-head workload: cold
+/// solve + `batches` rewire batches of `batch_size`. Streams are re-seeded
+/// identically per kernel, and batches are generated against each engine's
+/// own evolving graph — the graphs evolve identically, so both kernels see
+/// the same mutation sequence.
+fn run_kernel(n: usize, kernel: KernelKind, batches: usize, batch_size: usize) -> KernelStats {
+    let g = power_law_web_graph(n, 8, 0.1, 7);
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let mut engine = StreamingEngine::new(mg, 0.85, true, base_cfg(n, kernel)).expect("engine");
+    let init = engine.converge().expect("initial solve");
+    assert!(
+        init.solution.converged,
+        "[{}] initial solve must converge (residual {:.3e})",
+        kernel.name(),
+        init.solution.residual
+    );
+    let mut stream = MutationStream::new(ChurnModel::RandomRewire, 131);
+    let mut walls = Vec::with_capacity(batches);
+    let mut epoch_updates = 0u64;
+    let mut epoch_wall = 0.0f64;
+    for _ in 0..batches {
+        let batch = stream.next_batch(engine.graph(), batch_size);
+        let report = engine.apply_batch(&batch).expect("apply");
+        assert!(
+            report.solution.converged,
+            "[{}] reconverge failed (residual {:.3e})",
+            kernel.name(),
+            report.solution.residual
+        );
+        walls.push(report.solution.wall_secs);
+        epoch_updates += report.solution.total_updates;
+        epoch_wall += report.solution.wall_secs;
+    }
+    engine.finish().expect("finish");
+    KernelStats {
+        init_updates: init.solution.total_updates,
+        init_wall: init.solution.wall_secs,
+        reconverge_walls: walls,
+        epoch_updates,
+        epoch_wall,
+    }
+}
+
 fn main() {
     bench_header(
         "streaming_churn",
-        "warm rebase vs cold restart under churn (web graph, V2, K=4)",
+        "warm rebase vs cold restart under churn (web graph, V2, K=4) \
+         + local-block vs global-walk kernel head-to-head",
     );
     let n = std::env::var("DITER_BENCH_N")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(10_000usize);
-    let k = 4usize;
-    let tol = 1e-9;
+    let bench_env = std::env::var("DITER_BENCH_ENV").unwrap_or_else(|_| "local".into());
     let batches_per_size = 3usize;
 
+    // ---- part 1: warm rebase vs cold restart (local kernel) -------------
     let g = power_law_web_graph(n, 8, 0.1, 7);
-    println!("graph: {} nodes, {} edges; tol {tol:.0e}\n", g.n(), g.m());
+    println!("graph: {} nodes, {} edges; tol {TOL:.0e}\n", g.n(), g.m());
     let mg = MutableDigraph::from_digraph(&g, n);
-    let mut cfg = DistributedConfig::new(Partition::contiguous(n, k).unwrap())
-        .with_tol(tol)
-        .with_seed(5)
-        .with_sequence(SequenceKind::GreedyMaxFluid);
-    cfg.max_wall = Duration::from_secs(300);
+    let cfg = base_cfg(n, KernelKind::LocalBlock);
     let cold_cfg = cfg.clone();
 
     let mut engine = StreamingEngine::new(mg, 0.85, true, cfg).expect("engine");
@@ -60,6 +162,8 @@ fn main() {
     let mut stream = MutationStream::new(ChurnModel::RandomRewire, 31);
     let mut burst = MutationStream::new(ChurnModel::HotSpotBurst { burst: 64 }, 37);
 
+    let mut warm_reconverge_secs = Vec::new();
+    let mut upd_savings = Vec::new();
     for &batch_size in &[16usize, 64, 256, 1024] {
         let mut warm_wall = 0.0f64;
         let mut warm_upd = 0u64;
@@ -85,6 +189,8 @@ fn main() {
             cold_upd += cold.total_updates;
         }
         let inv = 1.0 / batches_per_size as f64;
+        warm_reconverge_secs.push(warm_wall * inv);
+        upd_savings.push(cold_upd as f64 / warm_upd.max(1) as f64);
         table.row(&[
             batch_size.to_string(),
             "rewire+burst".into(),
@@ -98,6 +204,7 @@ fn main() {
     }
     print!("{}", table.render());
 
+    let steady_upd_per_sec = engine.steady_updates_per_sec();
     let summary = engine.finish().expect("finish");
     println!(
         "\n{} epochs, {} mutations; whole-run mean {:.2e} upd/s; final residual {:.2e}",
@@ -106,5 +213,57 @@ fn main() {
         summary.steady_updates_per_sec,
         summary.final_solution.residual
     );
-    println!("(reconverge = mean wall-clock from batch application to total fluid < tol)");
+    println!("(reconverge = mean wall-clock from batch application to total fluid < tol)\n");
+
+    // ---- part 2: kernel head-to-head ------------------------------------
+    println!("kernel head-to-head (same workload, same binary):");
+    let local = run_kernel(n, KernelKind::LocalBlock, 4, 64);
+    let global = run_kernel(n, KernelKind::GlobalWalk, 4, 64);
+    let speedup = local.init_diffusions_per_sec() / global.init_diffusions_per_sec().max(1e-9);
+    let mut head = Table::new(&[
+        "kernel",
+        "init-diff/s",
+        "epoch-diff/s",
+        "reconverge",
+    ]);
+    for (name, s) in [("local-block", &local), ("global-walk", &global)] {
+        head.row(&[
+            name.into(),
+            format!("{:.2e}", s.init_diffusions_per_sec()),
+            format!("{:.2e}", s.epoch_diffusions_per_sec()),
+            fmt_secs(s.reconverge_mean()),
+        ]);
+    }
+    print!("{}", head.render());
+    println!("\nlocal-block vs global-walk: {speedup:.2}x diffusions/sec on the cold solve");
+
+    // ---- part 3: machine-readable artifact ------------------------------
+    let json = Json::new()
+        .int_field("schema", 1)
+        .str_field("bench", "streaming_churn")
+        .bool_field("measured", true)
+        .str_field("environment", &bench_env)
+        .int_field("n", n as u64)
+        .int_field("k", K as u64)
+        .num_field("tol", TOL)
+        .num_field("steady_updates_per_sec", steady_upd_per_sec)
+        .arr_num_field("warm_reconverge_secs_by_batch", &warm_reconverge_secs)
+        .arr_num_field("cold_vs_warm_update_saving_by_batch", &upd_savings)
+        .obj_field("local", local.to_json())
+        .obj_field("global", global.to_json())
+        .num_field("local_vs_global_speedup", speedup);
+    let path = bench_json_dir().join("BENCH_stream.json");
+    json.write(&path).expect("write BENCH_stream.json");
+    println!("wrote {}", path.display());
+
+    if let Some(min) = std::env::var("DITER_BENCH_ASSERT_SPEEDUP")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+    {
+        assert!(
+            speedup >= min,
+            "local-block kernel must be ≥{min:.2}x the global walk \
+             (measured {speedup:.2}x)"
+        );
+    }
 }

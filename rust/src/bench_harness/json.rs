@@ -1,0 +1,172 @@
+//! Minimal JSON emission for the machine-readable bench artifacts
+//! (`BENCH_*.json`) — no serde offline; just enough structure for the CI
+//! perf-regression gate (`tools/bench_gate.py`) and the repo's recorded
+//! perf trajectory.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Where the `BENCH_*.json` artifacts go: `DITER_BENCH_JSON_DIR`
+/// (absolute, or relative to the **workspace root** — cargo runs benches
+/// with cwd = the package root `rust/`, so a plain relative path would
+/// silently land one level too deep), defaulting to the workspace root
+/// where the committed baselines live. The directory is created.
+pub fn bench_json_dir() -> PathBuf {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| Path::new("."))
+        .to_path_buf();
+    let dir = match std::env::var("DITER_BENCH_JSON_DIR") {
+        Ok(d) if Path::new(&d).is_absolute() => PathBuf::from(d),
+        Ok(d) => root.join(d),
+        Err(_) => root,
+    };
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// A JSON object builder (insertion-ordered, chainable).
+#[derive(Clone, Debug, Default)]
+pub struct Json {
+    fields: Vec<(String, String)>,
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn num(v: f64) -> String {
+    // JSON has no NaN/inf literals; record them as null
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+impl Json {
+    pub fn new() -> Json {
+        Json::default()
+    }
+
+    fn raw(mut self, name: &str, rendered: String) -> Json {
+        self.fields.push((name.to_string(), rendered));
+        self
+    }
+
+    pub fn str_field(self, name: &str, value: &str) -> Json {
+        let rendered = format!("\"{}\"", esc(value));
+        self.raw(name, rendered)
+    }
+
+    pub fn num_field(self, name: &str, value: f64) -> Json {
+        let rendered = num(value);
+        self.raw(name, rendered)
+    }
+
+    pub fn int_field(self, name: &str, value: u64) -> Json {
+        self.raw(name, value.to_string())
+    }
+
+    pub fn bool_field(self, name: &str, value: bool) -> Json {
+        self.raw(name, value.to_string())
+    }
+
+    pub fn null_field(self, name: &str) -> Json {
+        self.raw(name, "null".into())
+    }
+
+    pub fn obj_field(self, name: &str, inner: Json) -> Json {
+        let rendered = inner.render();
+        self.raw(name, rendered)
+    }
+
+    pub fn arr_num_field(self, name: &str, values: &[f64]) -> Json {
+        let rendered = format!(
+            "[{}]",
+            values.iter().map(|&v| num(v)).collect::<Vec<_>>().join(", ")
+        );
+        self.raw(name, rendered)
+    }
+
+    /// Render to a JSON object string.
+    pub fn render(&self) -> String {
+        let mut out = String::from("{");
+        for (i, (name, rendered)) in self.fields.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "\n  \"{}\": {}", esc(name), rendered);
+        }
+        out.push_str("\n}");
+        out
+    }
+
+    /// Render and write to `path` (with a trailing newline).
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.render() + "\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_field_kinds() {
+        let j = Json::new()
+            .str_field("name", "streaming_churn")
+            .int_field("n", 10_000)
+            .num_field("rate", 2.5e6)
+            .bool_field("measured", true)
+            .null_field("absent")
+            .arr_num_field("walls", &[0.5, 1.25])
+            .obj_field("inner", Json::new().num_field("x", 1.0));
+        let s = j.render();
+        assert!(s.contains("\"name\": \"streaming_churn\""));
+        assert!(s.contains("\"n\": 10000"));
+        assert!(s.contains("\"rate\": 2500000"));
+        assert!(s.contains("\"measured\": true"));
+        assert!(s.contains("\"absent\": null"));
+        assert!(s.contains("[0.5, 1.25]"));
+        assert!(s.contains("\"x\": 1"));
+        assert!(s.starts_with('{') && s.ends_with('}'));
+    }
+
+    #[test]
+    fn escapes_strings_and_nulls_non_finite() {
+        let s = Json::new()
+            .str_field("msg", "a \"b\"\\\n\t")
+            .num_field("nan", f64::NAN)
+            .num_field("inf", f64::INFINITY)
+            .render();
+        assert!(s.contains("a \\\"b\\\"\\\\\\n\\t"));
+        assert!(s.contains("\"nan\": null"));
+        assert!(s.contains("\"inf\": null"));
+    }
+
+    #[test]
+    fn writes_to_disk() {
+        let dir = std::env::temp_dir().join("diter_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        Json::new().int_field("v", 7).write(&path).unwrap();
+        let got = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(got, "{\n  \"v\": 7\n}\n");
+        let _ = std::fs::remove_file(&path);
+    }
+}

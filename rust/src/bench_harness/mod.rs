@@ -1,6 +1,11 @@
 //! Benchmark substrate (no `criterion` offline): warmup + timed repeats,
-//! robust stats, and aligned table rendering used by every `cargo bench`
-//! target to print the paper's tables/figures as text series.
+//! robust stats, aligned table rendering used by every `cargo bench`
+//! target to print the paper's tables/figures as text series, and the
+//! [`Json`] emitter behind the committed `BENCH_*.json` perf trajectory.
+
+mod json;
+
+pub use json::{bench_json_dir, Json};
 
 use std::fmt::Write as _;
 use std::time::Instant;

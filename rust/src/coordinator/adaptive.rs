@@ -26,6 +26,7 @@ use std::time::{Duration, Instant};
 
 use crate::metrics::MetricSet;
 use crate::partition::{OwnershipTable, Partition};
+use crate::sparse::SparseMatrix;
 
 /// A recommended repartitioning action.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -145,16 +146,27 @@ impl AdaptiveController {
 
     /// The fixed-pool form of §4.3: if one PID's per-coordinate rate fell
     /// below `split_ratio` × median over the observation window AND it
-    /// still holds fluid, move the upper half of its Ω to the fastest
-    /// PID. `updates` are the per-PID scalar-update counts over the
-    /// window; `backlog` is each PID's published remaining fluid — a
-    /// drained PID updates nothing because it is *idle*, not slow, and
-    /// must never be mistaken for a straggler.
+    /// still holds fluid, move half of its Ω to the fastest PID.
+    /// `updates` are the per-PID scalar-update counts over the window;
+    /// `backlog` is each PID's published remaining fluid — a drained PID
+    /// updates nothing because it is *idle*, not slow, and must never be
+    /// mistaken for a straggler.
+    ///
+    /// **Cut-aware half selection**: with the iteration matrix available,
+    /// the shed half (upper or lower) is the one whose transfer minimizes
+    /// the resulting edge cut (the [`Partition::cut_fraction`] criterion)
+    /// — a smaller cut is directly a smaller cross-part remnant for the
+    /// workers' local-block kernel to flush after the move. The candidates
+    /// are scored as cut *deltas* over only the edges incident to each
+    /// moved set (O(deg) per candidate, not O(nnz) — this runs on the
+    /// monitor thread). Without a matrix the upper half is moved (the
+    /// pre-cut-aware behaviour).
     pub fn plan_rebalance(
         &self,
         partition: &Partition,
         updates: &[u64],
         backlog: &[f64],
+        matrix: Option<&SparseMatrix>,
     ) -> Option<HandoffPlan> {
         let k = partition.k();
         assert_eq!(updates.len(), k, "one update count per PID");
@@ -178,12 +190,64 @@ impl AdaptiveController {
             return None;
         }
         let members = partition.part(slowest);
+        let shed = members.len() - members.len() / 2;
+        let upper = &members[members.len() / 2..];
+        let lower = &members[..shed];
+        let coords = match matrix {
+            None => upper.to_vec(),
+            Some(p) => {
+                let dl = cut_delta(p, partition, lower, fastest);
+                let du = cut_delta(p, partition, upper, fastest);
+                if dl < du {
+                    lower.to_vec()
+                } else {
+                    upper.to_vec() // tie: upper (the pre-cut-aware pick)
+                }
+            }
+        };
         Some(HandoffPlan {
             from: slowest,
             to: fastest,
-            coords: members[members.len() / 2..].to_vec(),
+            coords,
         })
     }
+}
+
+/// Change in total cut weight if the (sorted) coordinate set `cand` moved
+/// to part `to`: only edges incident to `cand` can change crossing state,
+/// so the scan is O(Σ deg(cand)) via the CSR rows (out-edges) and CSC
+/// columns (in-edges) — never the whole matrix. Comparing deltas orders
+/// candidates exactly like comparing full [`Partition::cut_fraction`]s
+/// (the common baseline cancels).
+fn cut_delta(matrix: &SparseMatrix, partition: &Partition, cand: &[usize], to: usize) -> f64 {
+    debug_assert!(cand.windows(2).all(|w| w[0] <= w[1]), "cand must be sorted");
+    let moved = |x: usize| cand.binary_search(&x).is_ok();
+    let mut delta = 0.0;
+    for &i in cand {
+        // out-edges (i → j), including those whose far end also moves
+        let (cols, vals) = matrix.csr().row(i);
+        for e in 0..cols.len() {
+            let j = cols[e];
+            let w = vals[e].abs();
+            let before = partition.owner(i) != partition.owner(j);
+            let after = to != if moved(j) { to } else { partition.owner(j) };
+            delta += (i32::from(after) - i32::from(before)) as f64 * w;
+        }
+        // in-edges (s → i) from coordinates staying put (moved sources
+        // were already counted by their own row scan above)
+        let (srcs, svals) = matrix.csc().col(i);
+        for e in 0..srcs.len() {
+            let s = srcs[e];
+            if moved(s) {
+                continue;
+            }
+            let w = svals[e].abs();
+            let before = partition.owner(s) != partition.owner(i);
+            let after = partition.owner(s) != to;
+            delta += (i32::from(after) - i32::from(before)) as f64 * w;
+        }
+    }
+    delta
 }
 
 /// Per-coordinate update rates and their median (the shared normalization
@@ -266,7 +330,8 @@ impl AdaptiveDriver {
 
     /// Poll with the current cumulative per-PID update counts, per-PID
     /// published fluid backlog, and the monitored total fluid; installs at
-    /// most one rebalance per elapsed interval. Returns whether a new
+    /// most one rebalance per elapsed interval. `matrix` (when available)
+    /// makes the half selection cut-aware. Returns whether a new
     /// ownership map was installed.
     pub fn poll(
         &mut self,
@@ -275,6 +340,7 @@ impl AdaptiveDriver {
         backlog: &[f64],
         total: f64,
         metrics: &MetricSet,
+        matrix: Option<&SparseMatrix>,
     ) -> bool {
         if !total.is_finite() || total <= self.min_total {
             return false; // not every PID published yet, or nearly drained
@@ -293,7 +359,7 @@ impl AdaptiveDriver {
         self.last_counts = counts.to_vec();
         self.last_decision = Instant::now();
         let part = table.partition();
-        let Some(plan) = self.ctl.plan_rebalance(&part, &deltas, backlog) else {
+        let Some(plan) = self.ctl.plan_rebalance(&part, &deltas, backlog, matrix) else {
             return false;
         };
         let Ok(next) = part.transfer(&plan.coords, plan.to) else {
@@ -409,7 +475,7 @@ mod tests {
         let p = Partition::contiguous(40, 4).unwrap();
         let backlog = [1.0; 4];
         let plan = ctl()
-            .plan_rebalance(&p, &[100, 180, 20, 100], &backlog)
+            .plan_rebalance(&p, &[100, 180, 20, 100], &backlog, None)
             .unwrap();
         assert_eq!(plan.from, 2);
         assert_eq!(plan.to, 1);
@@ -420,16 +486,88 @@ mod tests {
     }
 
     #[test]
+    fn rebalance_is_cut_aware_with_a_matrix() {
+        use crate::sparse::TripletBuilder;
+        // 12 coordinates, 3 contiguous parts of 4. The straggler is part
+        // 0; the fastest is part 2. Coordinates {0, 1} (the LOWER half of
+        // Ω_0) are strongly coupled to part 2's range, {2, 3} to part 1 —
+        // shedding the lower half to part 2 shrinks the cut, shedding the
+        // upper half grows it.
+        let mut b = TripletBuilder::new(12, 12);
+        for &i in &[0usize, 1] {
+            for j in 8..12 {
+                b.push(i, j, 0.2);
+                b.push(j, i, 0.2);
+            }
+        }
+        for &i in &[2usize, 3] {
+            for j in 4..8 {
+                b.push(i, j, 0.2);
+                b.push(j, i, 0.2);
+            }
+        }
+        let m = SparseMatrix::from_csr(b.to_csr());
+        let p = Partition::contiguous(12, 3).unwrap();
+        let backlog = [1.0; 3];
+        let updates = [10, 100, 200]; // straggler 0, fastest 2
+        let aware = ctl()
+            .plan_rebalance(&p, &updates, &backlog, Some(&m))
+            .unwrap();
+        assert_eq!((aware.from, aware.to), (0, 2));
+        assert_eq!(aware.coords, vec![0, 1], "lower half cuts less");
+        let blind = ctl()
+            .plan_rebalance(&p, &updates, &backlog, None)
+            .unwrap();
+        assert_eq!(blind.coords, vec![2, 3], "matrix-blind default: upper");
+        // and the chosen half really does yield the smaller cut
+        let cut_aware = p.transfer(&aware.coords, 2).unwrap().cut_fraction(m.csr());
+        let cut_blind = p.transfer(&blind.coords, 2).unwrap().cut_fraction(m.csr());
+        assert!(cut_aware < cut_blind, "{cut_aware} !< {cut_blind}");
+    }
+
+    #[test]
+    fn cut_delta_orders_candidates_like_full_cut_fraction() {
+        use crate::prop::run_cases;
+        // the O(deg) incremental score must induce the same ordering as
+        // rebuilding the partition and rescanning the whole matrix
+        run_cases(25, 0xC07DE17A, |g| {
+            let n = g.usize_in(9, 30);
+            let m = SparseMatrix::from_csr(g.contraction_matrix(n, 3, 0.9));
+            let k = 3;
+            let p = Partition::contiguous(n, k).unwrap();
+            let from = g.usize_in(0, k - 1);
+            let to = (from + 1 + g.usize_in(0, k - 2)) % k;
+            let members = p.part(from);
+            if members.len() < 3 {
+                return;
+            }
+            let shed = members.len() - members.len() / 2;
+            for cand in [&members[members.len() / 2..], &members[..shed]] {
+                let full = p.transfer(cand, to).unwrap().cut_fraction(m.csr());
+                let base = p.cut_fraction(m.csr());
+                let total: f64 = m.csr().row_l1_norms().iter().sum();
+                let delta = cut_delta(&m, &p, cand, to);
+                assert!(
+                    (full - (base + delta / total)).abs() < 1e-9,
+                    "delta {delta} disagrees with full rescan ({base} -> {full})"
+                );
+            }
+        });
+    }
+
+    #[test]
     fn rebalance_keeps_when_balanced_tiny_or_drained() {
         let p = Partition::contiguous(40, 4).unwrap();
         let backlog = [1.0; 4];
         assert!(ctl()
-            .plan_rebalance(&p, &[100, 110, 95, 105], &backlog)
+            .plan_rebalance(&p, &[100, 110, 95, 105], &backlog, None)
             .is_none());
-        assert!(ctl().plan_rebalance(&p, &[0, 0, 0, 0], &backlog).is_none());
+        assert!(ctl()
+            .plan_rebalance(&p, &[0, 0, 0, 0], &backlog, None)
+            .is_none());
         // a low-rate PID with NO fluid is idle, not slow — never offloaded
         assert!(ctl()
-            .plan_rebalance(&p, &[100, 100, 0, 100], &[1.0, 1.0, 0.0, 1.0])
+            .plan_rebalance(&p, &[100, 100, 0, 100], &[1.0, 1.0, 0.0, 1.0], None)
             .is_none());
         let policy = AdaptivePolicy {
             min_part: 10,
@@ -438,7 +576,7 @@ mod tests {
         let c = AdaptiveController::new(policy);
         // straggler's part (10) is below 2×min_part: nothing to shed
         assert!(c
-            .plan_rebalance(&p, &[100, 100, 10, 100], &backlog)
+            .plan_rebalance(&p, &[100, 100, 10, 100], &backlog, None)
             .is_none());
     }
 
@@ -455,20 +593,20 @@ mod tests {
         let mut driver = AdaptiveDriver::new(&cfg, 4, 1e-9);
         let backlog = [0.5; 4];
         // synthetic straggler trace: PID 2 at 20% of the others
-        assert!(driver.poll(&table, &[100, 100, 20, 100], &backlog, 2.0, &metrics));
+        assert!(driver.poll(&table, &[100, 100, 20, 100], &backlog, 2.0, &metrics, None));
         assert_eq!(driver.moves(), 1);
         assert_eq!(table.version(), 1);
         assert!(table.partition().part(2).len() < 10);
         assert!(metrics.get("load_imbalance_ppm") > 1_000_000);
         // nearly-drained run: no further migration
-        assert!(!driver.poll(&table, &[200, 200, 40, 200], &backlog, 1e-8, &metrics));
+        assert!(!driver.poll(&table, &[200, 200, 40, 200], &backlog, 1e-8, &metrics, None));
         // frozen table: decision is a no-op (workers synced ⇒ acked)
         table.ack_version(0, 1);
         table.ack_version(1, 1);
         table.ack_version(2, 1);
         table.ack_version(3, 1);
         table.freeze();
-        assert!(!driver.poll(&table, &[300, 300, 60, 300], &backlog, 2.0, &metrics));
+        assert!(!driver.poll(&table, &[300, 300, 60, 300], &backlog, 2.0, &metrics, None));
         assert_eq!(driver.moves(), 1);
     }
 }

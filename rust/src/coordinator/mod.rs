@@ -48,6 +48,40 @@ use crate::partition::Partition;
 use crate::solver::SequenceKind;
 use crate::transport::CoalescePolicy;
 
+/// Which inner diffusion kernel the worker core runs. The default is the
+/// partition-local fast path; the pre-refactor global-walk kernel stays
+/// selectable so the recorded perf trajectory
+/// (`benches/streaming_churn.rs` → `BENCH_stream.json`) can measure the
+/// before/after on any machine.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Reindexed local CSC block + SoA remnant accumulators — no
+    /// `local_of` lookups, no global column walks in the inner loop.
+    #[default]
+    LocalBlock,
+    /// Global-CSC column walk with per-coordinate routing (the pre-PR
+    /// baseline shape, kept for measured comparisons).
+    GlobalWalk,
+}
+
+impl KernelKind {
+    /// Parse a CLI/env name: `local`, `global`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "local" => Some(Self::LocalBlock),
+            "global" => Some(Self::GlobalWalk),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::LocalBlock => "local",
+            Self::GlobalWalk => "global",
+        }
+    }
+}
+
 /// Configuration shared by both distributed schemes.
 #[derive(Clone, Debug)]
 pub struct DistributedConfig {
@@ -76,6 +110,8 @@ pub struct DistributedConfig {
     /// artificially cap one PID's update rate (straggler injection for
     /// adaptive-repartitioning experiments and tests)
     pub straggler: Option<Straggler>,
+    /// which inner diffusion kernel the workers run (perf comparisons)
+    pub kernel: KernelKind,
 }
 
 /// Straggler injection: PID `pid` is throttled to at most
@@ -102,7 +138,13 @@ impl DistributedConfig {
             seed: 0,
             adaptive: None,
             straggler: None,
+            kernel: KernelKind::default(),
         }
+    }
+
+    pub fn with_kernel(mut self, kernel: KernelKind) -> Self {
+        self.kernel = kernel;
+        self
     }
 
     pub fn with_sequence(mut self, s: SequenceKind) -> Self {

@@ -71,10 +71,14 @@ enum Ctrl {
         reply: Sender<(usize, Vec<usize>, Vec<f64>)>,
     },
     /// New epoch: swap the matrix, reset the fluid slice, keep H.
+    /// `dirty` lists the matrix columns that changed since the previous
+    /// epoch (ascending) when the incremental build knows them — workers
+    /// patch their `LocalSystem` instead of rebuilding it.
     Resume {
         epoch: u64,
         problem: Arc<FixedPointProblem>,
         f_slice: Vec<f64>,
+        dirty: Option<Arc<Vec<usize>>>,
     },
     /// Non-pausing read of the held range + H (worker keeps running).
     Snapshot {
@@ -290,6 +294,7 @@ impl StreamingEngine {
                     &self.shared.published_values(),
                     total,
                     &self.bus_metrics,
+                    Some(self.problem.matrix()),
                 );
             }
             // quiescence needs every sent parcel applied or discarded —
@@ -443,8 +448,14 @@ impl StreamingEngine {
             }
             held.push((kk, coords));
         }
-        // 3. rebuild the system from the mutated graph
+        // 3. rebuild the system from the mutated graph; the incremental
+        //    build reports which columns it recomputed so the workers can
+        //    patch their LocalSystems instead of rebuilding them
         let sys = self.graph.pagerank_system(self.damping, self.patch_dangling)?;
+        let dirty: Option<Arc<Vec<usize>>> = self
+            .graph
+            .last_build_dirty()
+            .map(|d| Arc::new(d.to_vec()));
         let problem = Arc::new(FixedPointProblem::new(sys.matrix, sys.b)?);
         // 4. per-PID rebase over each worker's held range + resume
         self.epoch += 1;
@@ -457,6 +468,7 @@ impl StreamingEngine {
                     epoch: self.epoch,
                     problem: problem.clone(),
                     f_slice,
+                    dirty: dirty.clone(),
                 })
                 .map_err(|_| DiterError::Coordinator("stream worker gone".into()))?;
         }
@@ -561,8 +573,14 @@ impl StreamWorker {
                             epoch,
                             problem,
                             f_slice,
+                            dirty,
                         }) => {
-                            self.core.enter_epoch(epoch, problem, f_slice);
+                            self.core.enter_epoch(
+                                epoch,
+                                problem,
+                                f_slice,
+                                dirty.as_ref().map(|d| d.as_slice()),
+                            );
                             return true;
                         }
                         Ok(Ctrl::Snapshot { reply }) | Ok(Ctrl::Checkpoint { reply }) => {
@@ -576,11 +594,17 @@ impl StreamWorker {
                 epoch,
                 problem,
                 f_slice,
+                dirty,
             } => {
                 // resume without a checkpoint (defensive: coordinator
                 // always checkpoints first, but the transition is safe
                 // from any state)
-                self.core.enter_epoch(epoch, problem, f_slice);
+                self.core.enter_epoch(
+                    epoch,
+                    problem,
+                    f_slice,
+                    dirty.as_ref().map(|d| d.as_slice()),
+                );
                 true
             }
         }

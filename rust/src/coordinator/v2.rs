@@ -91,6 +91,7 @@ pub fn solve_v2(
                     &state.published_values(),
                     total,
                     &bus_metrics,
+                    Some(problem.matrix()),
                 );
             }
         },

@@ -7,6 +7,21 @@
 //! static `Arc<Partition>` — which is what turns §4.3's speed adaptation
 //! into a *live* operation.
 //!
+//! ## The hot path (DESIGN.md §5)
+//!
+//! The inner diffusion loop runs entirely in **local-slot space** against
+//! a per-worker [`LocalSystem`]: the owned columns of P reindexed into a
+//! local CSC block (intra-part contributions are two array reads and an
+//! FMA) plus a cross-part remnant whose entries were resolved at build
+//! time to `(destination PID, accumulator slot)` — a cross-part emission
+//! is one indexed add into a dense scratch accumulator, no `local_of`
+//! lookup, no owner lookup, no hashing. Accumulators flush to the bus as
+//! flat SoA parcels (`coords: Vec<u32>, mass: Vec<f64>`). The LocalSystem
+//! is rebuilt **handoff-atomically** whenever the held range or the owner
+//! map changes, and **patched** (dirty columns only) across streaming
+//! epochs. The pre-refactor global-walk kernel stays selectable
+//! ([`super::KernelKind::GlobalWalk`]) for measured perf comparisons.
+//!
 //! ## The handoff protocol (DESIGN.md §4)
 //!
 //! The bus carries two message classes: fluid parcels (the §3.3 data
@@ -39,11 +54,12 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::monitor::MonitorState;
-use super::DistributedConfig;
+use super::{DistributedConfig, KernelKind};
 use crate::linalg::vec_ops::norm1;
 use crate::metrics::MetricSet;
 use crate::partition::{OwnershipTable, Partition};
 use crate::solver::{FixedPointProblem, GreedyQueue, SequenceKind, SequenceState};
+use crate::sparse::LocalSystem;
 use crate::transport::{CoalesceBuffer, Endpoint, Received};
 
 /// Metric names the worker core registers on top of the bus metrics.
@@ -59,10 +75,14 @@ pub const WORKER_METRICS: &[&str] = &[
 /// repartitioning control plane.
 #[derive(Clone, Debug)]
 pub enum WorkerMsg {
-    /// Epoch-tagged fluid parcels (a one-shot solve stays at epoch 0).
+    /// Epoch-tagged fluid as a flat SoA parcel: `coords[u]` receives
+    /// `mass[u]` (a one-shot solve stays at epoch 0). The split layout
+    /// replaces `Vec<(usize, f64)>` — 12 bytes/entry instead of 16, and
+    /// the receiver walks two contiguous arrays.
     Fluid {
         epoch: u64,
-        parcels: Vec<(usize, f64)>,
+        coords: Vec<u32>,
+        mass: Vec<f64>,
     },
     /// Ownership transfer of a coordinate range with its local state.
     Handoff(Handoff),
@@ -87,8 +107,9 @@ pub struct Handoff {
     pub f_slice: Vec<f64>,
 }
 
-/// One PID's live state: the owned slice of `(B, H, F)`, the coalescing
-/// buffer, the diffusion-order state, and the ownership-version cache.
+/// One PID's live state: the owned slice of `(B, H, F)`, the local-block
+/// view of P, the coalescing accumulators, the diffusion-order state, and
+/// the ownership-version cache.
 pub struct WorkerCore {
     k: usize,
     ep: Endpoint<WorkerMsg>,
@@ -104,6 +125,8 @@ pub struct WorkerCore {
     owned: Vec<usize>,
     /// global index → local slot (usize::MAX = not held here)
     local_of: Vec<usize>,
+    /// the reindexed local block + remnant (None under the global kernel)
+    local: Option<LocalSystem>,
     h: Vec<f64>,
     f: Vec<f64>,
     /// fluid received ahead of a handoff ("table says mine, slice in
@@ -131,19 +154,21 @@ impl WorkerCore {
         cfg: DistributedConfig,
     ) -> WorkerCore {
         let n = problem.n();
+        assert!(n <= u32::MAX as usize, "SoA parcels carry u32 coordinates");
         let (version, part) = table.snapshot();
         let owned: Vec<usize> = part.part(k).to_vec();
         let mut local_of = vec![usize::MAX; n];
-        for (t, &i) in owned.iter().enumerate() {
-            local_of[i] = t;
+        for &i in &owned {
+            local_of[i] = part.slot(i);
         }
         // epoch 0 cold state: F₀ = B on the owned slice, H₀ = 0
         let f: Vec<f64> = owned.iter().map(|&i| problem.b()[i]).collect();
         let h = vec![0.0; owned.len()];
         let use_heap = cfg.sequence == SequenceKind::GreedyMaxFluid;
-        // the queue is sized for the whole coordinate space so adopted
-        // slots never outgrow it (local slots are always < n)
-        let mut heap = GreedyQueue::new(n);
+        // sized to the owned slice, not the whole coordinate space (K
+        // workers × n bucket state was the old cost); handoff adoption
+        // grows it (see `adopt` / `rebuild_order`)
+        let mut heap = GreedyQueue::new(owned.len());
         if use_heap {
             for (t, &fv) in f.iter().enumerate() {
                 heap.push(t, fv.abs());
@@ -157,7 +182,7 @@ impl WorkerCore {
         let absorb_eps = (cfg.tol / (10.0 * n as f64)).max(1e-300);
         let metrics = ep.metrics();
         table.ack_version(k, version);
-        WorkerCore {
+        let mut core = WorkerCore {
             k,
             ep,
             problem,
@@ -170,6 +195,7 @@ impl WorkerCore {
             epoch: 0,
             owned,
             local_of,
+            local: None,
             h,
             f,
             foster: HashMap::new(),
@@ -181,7 +207,9 @@ impl WorkerCore {
             absorb_eps,
             pending: Vec::new(),
             shutting_down: false,
-        }
+        };
+        core.rebuild_local();
+        core
     }
 
     fn make_seq(cfg: &DistributedConfig, k: usize, m: usize) -> Option<SequenceState> {
@@ -252,7 +280,8 @@ impl WorkerCore {
         if self.shutting_down {
             return;
         }
-        if !force && self.table.version() == self.version {
+        let version_moved = self.table.version() != self.version;
+        if !force && !version_moved {
             return;
         }
         let (v, part) = self.table.snapshot();
@@ -285,6 +314,12 @@ impl WorkerCore {
             }
         }
         if outgoing.is_empty() {
+            // the remnant's destination routing is stale whenever the
+            // owner map moved (even a peer-to-peer transfer we are not
+            // part of): rebuild before the next quantum
+            if version_moved {
+                self.rebuild_local();
+            }
             self.table.ack_version(self.k, v);
             return;
         }
@@ -329,6 +364,8 @@ impl WorkerCore {
         if shipped.iter().any(|&s| s) {
             self.compact(&shipped);
             self.publish();
+        } else if version_moved {
+            self.rebuild_local();
         }
         self.table.ack_version(self.k, v);
     }
@@ -354,19 +391,44 @@ impl WorkerCore {
             self.local_of[i] = t;
         }
         self.rebuild_order();
+        self.rebuild_local();
     }
 
     /// Rebuild the diffusion-order state after local slots were re-indexed
     /// or appended (handoffs are rare; O(n + m) here is irrelevant).
     fn rebuild_order(&mut self) {
         if self.use_heap {
-            let mut heap = GreedyQueue::new(self.problem.n());
+            let mut heap = GreedyQueue::new(self.owned.len());
             for (t, &fv) in self.f.iter().enumerate() {
                 heap.push(t, fv.abs());
             }
             self.heap = heap;
         }
         self.seq = Self::make_seq(&self.cfg, self.k, self.owned.len());
+    }
+
+    /// Rebuild the reindexed local block + remnant from the current owned
+    /// set, matrix and owner map. Called handoff-atomically: always after
+    /// the fold/compact completes, before the next diffusion quantum.
+    fn rebuild_local(&mut self) {
+        // every ownership change lands here under BOTH kernels: the one
+        // safe point to drop stale accumulator slots (pending fluid is
+        // preserved, and no cached slot survives this call — the local
+        // kernel re-interns its whole remnant below, the global kernel
+        // caches none); without it the interner accretes under churn
+        self.coalesce.compact();
+        if self.cfg.kernel != KernelKind::LocalBlock {
+            return;
+        }
+        let csc = self.problem.matrix().csc();
+        let coalesce = &mut self.coalesce;
+        self.local = Some(LocalSystem::build(
+            csc,
+            &self.owned,
+            &self.local_of,
+            self.part.owners(),
+            |d, j| coalesce.intern(d, j),
+        ));
     }
 
     /// Take ownership of a coordinate we did not hold (handoff receipt).
@@ -377,6 +439,8 @@ impl WorkerCore {
         self.h.push(0.0);
         self.f.push(0.0);
         self.local_of[j] = t;
+        // keep the queue addressable until rebuild_order resizes it
+        self.heap.grow(t + 1);
         t
     }
 
@@ -400,9 +464,13 @@ impl WorkerCore {
                 payload,
             } = msg;
             match payload {
-                WorkerMsg::Fluid { epoch, parcels } => match epoch.cmp(&self.epoch) {
+                WorkerMsg::Fluid {
+                    epoch,
+                    coords,
+                    mass: amounts,
+                } => match epoch.cmp(&self.epoch) {
                     std::cmp::Ordering::Equal => {
-                        got |= self.apply_parcels(&parcels);
+                        got |= self.apply_parcels(&coords, &amounts);
                         to_commit.push((from, seq, mass));
                     }
                     std::cmp::Ordering::Less => {
@@ -413,7 +481,7 @@ impl WorkerCore {
                         from,
                         seq,
                         mass,
-                        payload: WorkerMsg::Fluid { epoch, parcels },
+                        payload: WorkerMsg::Fluid { epoch, coords, mass: amounts },
                     }),
                 },
                 WorkerMsg::Handoff(ho) => {
@@ -433,12 +501,14 @@ impl WorkerCore {
         got
     }
 
-    /// Apply current-epoch fluid parcels, routing each coordinate: local →
+    /// Apply a current-epoch SoA parcel, routing each coordinate: local →
     /// absorb; table says mine but slice in flight → foster; otherwise →
     /// forward to the current owner. Returns whether anything landed.
-    fn apply_parcels(&mut self, parcels: &[(usize, f64)]) -> bool {
+    fn apply_parcels(&mut self, coords: &[u32], amounts: &[f64]) -> bool {
         let mut any = false;
-        for &(j, fl) in parcels {
+        for (u, &jj) in coords.iter().enumerate() {
+            let j = jj as usize;
+            let fl = amounts[u];
             let t = self.local_of[j];
             if t != usize::MAX {
                 self.f[t] += fl;
@@ -487,11 +557,22 @@ impl WorkerCore {
             self.f[t] += add;
         }
         self.rebuild_order();
+        self.rebuild_local();
         // the range may already be reassigned onward: re-scan BEFORE
         // releasing the in-flight slot, so `handoffs_inflight` can never
         // dip to zero while coordinates are still migrating
         self.refresh_ownership(true);
         self.table.end_handoff();
+    }
+
+    /// Pick the next local slot to diffuse (greedy heap or sequence).
+    #[inline]
+    fn next_slot(&mut self) -> Option<usize> {
+        if self.use_heap {
+            self.heap.pop_valid(|t| self.f[t])
+        } else {
+            self.seq.as_mut().map(|seq| seq.next(&self.f))
+        }
     }
 
     /// One diffusion work quantum (the §3.3 inner loop). Returns
@@ -503,23 +584,67 @@ impl WorkerCore {
         if m == 0 || self.f.iter().all(|&v| v == 0.0) {
             return (false, 0, 0.0);
         }
+        if self.cfg.kernel == KernelKind::LocalBlock {
+            self.diffuse_quantum_local(m)
+        } else {
+            self.diffuse_quantum_global(m)
+        }
+    }
+
+    /// The fast path: everything in local-slot space against the
+    /// [`LocalSystem`], cross-part emissions into pre-interned slots.
+    fn diffuse_quantum_local(&mut self, m: usize) -> (bool, u64, f64) {
+        let local = self
+            .local
+            .take()
+            .expect("LocalBlock kernel requires a built LocalSystem");
+        let quanta = self.cfg.sweeps_per_round * m;
+        let mut did_work = false;
+        let mut work_count = 0u64;
+        for _ in 0..quanta {
+            let Some(t) = self.next_slot() else { break };
+            let fi = self.f[t];
+            if fi == 0.0 {
+                continue;
+            }
+            if fi.abs() < self.absorb_eps {
+                self.h[t] += fi;
+                self.f[t] = 0.0;
+                continue;
+            }
+            did_work = true;
+            work_count += 1;
+            self.h[t] += fi;
+            self.f[t] = 0.0;
+            let (rows, vals) = local.block_col(t);
+            for u in 0..rows.len() {
+                let lj = rows[u] as usize;
+                self.f[lj] += vals[u] * fi; // stays local: no indirection
+                if self.use_heap {
+                    self.heap.push(lj, self.f[lj].abs());
+                }
+            }
+            let (dests, slots, vals) = local.remnant_col(t);
+            for u in 0..dests.len() {
+                // §3.3 regroup: one indexed add into the dest accumulator
+                self.coalesce.add_slot(dests[u] as usize, slots[u], vals[u] * fi);
+            }
+        }
+        self.local = Some(local);
+        (did_work, work_count, norm1(&self.f))
+    }
+
+    /// The pre-refactor kernel shape: walk the global CSC column and route
+    /// every entry through `local_of` + the owner map. Kept selectable so
+    /// the recorded perf trajectory measures the same binary both ways.
+    fn diffuse_quantum_global(&mut self, m: usize) -> (bool, u64, f64) {
         let problem = self.problem.clone();
         let csc = problem.matrix().csc();
         let quanta = self.cfg.sweeps_per_round * m;
         let mut did_work = false;
         let mut work_count = 0u64;
         for _ in 0..quanta {
-            let t = if self.use_heap {
-                match self.heap.pop_valid(|t| self.f[t]) {
-                    Some(t) => t,
-                    None => break, // locally drained
-                }
-            } else {
-                match self.seq.as_mut() {
-                    Some(seq) => seq.next(&self.f),
-                    None => break,
-                }
-            };
+            let Some(t) = self.next_slot() else { break };
             let fi = self.f[t];
             if fi == 0.0 {
                 continue;
@@ -556,35 +681,16 @@ impl WorkerCore {
     /// triggers: threshold crossing, or full flush when locally drained).
     fn ship(&mut self, did_work: bool, r_k: f64) {
         let threshold_hit = did_work && r_k < self.threshold;
-        if threshold_hit || r_k < self.cfg.tol {
-            for (dest, batch, mass) in self.coalesce.take_all() {
-                self.send_batch(dest, batch, mass);
-            }
-        } else {
-            for dest in self.coalesce.ready() {
-                let (batch, mass) = self.coalesce.take(dest);
-                self.send_batch(dest, batch, mass);
-            }
-        }
+        let flush_all = threshold_hit || r_k < self.cfg.tol;
+        let epoch = self.epoch;
+        let ep = &mut self.ep;
+        self.coalesce.flush(flush_all, |dest, coords, mass, total| {
+            let bytes = coords.len() * 12 + 24;
+            let _ = ep.send(dest, WorkerMsg::Fluid { epoch, coords, mass }, total, bytes);
+        });
         if threshold_hit && self.threshold > self.cfg.tol * 1e-3 {
             self.threshold /= self.cfg.threshold_alpha;
         }
-    }
-
-    fn send_batch(&mut self, dest: usize, batch: Vec<(usize, f64)>, mass: f64) {
-        if batch.is_empty() {
-            return;
-        }
-        let bytes = batch.len() * 16 + 24;
-        let _ = self.ep.send(
-            dest,
-            WorkerMsg::Fluid {
-                epoch: self.epoch,
-                parcels: batch,
-            },
-            mass,
-            bytes,
-        );
     }
 
     fn foster_mass(&self) -> f64 {
@@ -604,8 +710,18 @@ impl WorkerCore {
     /// (aligned with the current owned set), H kept warm. Obsolete fluid —
     /// buffered outbound, fostered, or pending with an older tag — is
     /// dropped: `B' = P'·H + B − H` already accounts for everything H
-    /// absorbed and replaces all fluid of the previous epoch.
-    pub fn enter_epoch(&mut self, epoch: u64, problem: Arc<FixedPointProblem>, f_slice: Vec<f64>) {
+    /// absorbed and replaces all fluid of the previous epoch. When `dirty`
+    /// lists the matrix columns that changed (the incremental
+    /// `MutableDigraph` build reports them), the LocalSystem is patched in
+    /// place instead of rebuilt — the owned set cannot have changed, the
+    /// rebase quiesced all handoffs first.
+    pub fn enter_epoch(
+        &mut self,
+        epoch: u64,
+        problem: Arc<FixedPointProblem>,
+        f_slice: Vec<f64>,
+        dirty: Option<&[usize]>,
+    ) {
         assert_eq!(
             f_slice.len(),
             self.owned.len(),
@@ -614,11 +730,28 @@ impl WorkerCore {
         self.epoch = epoch;
         self.problem = problem;
         self.f = f_slice;
-        if !self.coalesce.is_empty() {
-            let _ = self.coalesce.take_all();
-        }
+        self.coalesce.clear();
         self.foster.clear();
         self.rebuild_order();
+        let mut patched = false;
+        if self.cfg.kernel == KernelKind::LocalBlock {
+            if let (Some(local), Some(dirty)) = (self.local.as_mut(), dirty) {
+                let csc = self.problem.matrix().csc();
+                let coalesce = &mut self.coalesce;
+                local.patch(
+                    csc,
+                    &self.owned,
+                    &self.local_of,
+                    self.part.owners(),
+                    dirty,
+                    |d, j| coalesce.intern(d, j),
+                );
+                patched = true;
+            }
+        }
+        if !patched {
+            self.rebuild_local();
+        }
         self.threshold = self.cfg.threshold0;
         // stashed parcels for exactly this epoch become applicable now;
         // anything older is obsolete — commit both so the bus clears
@@ -632,8 +765,8 @@ impl WorkerCore {
                 payload,
             } = msg;
             match payload {
-                WorkerMsg::Fluid { epoch: e, parcels } if e == self.epoch => {
-                    self.apply_parcels(&parcels);
+                WorkerMsg::Fluid { epoch: e, coords, mass: amounts } if e == self.epoch => {
+                    self.apply_parcels(&coords, &amounts);
                     to_commit.push((from, seq, mass));
                 }
                 WorkerMsg::Fluid { epoch: e, .. } if e < self.epoch => {

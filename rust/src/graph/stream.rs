@@ -66,6 +66,8 @@ pub struct MutableDigraph {
     /// sources whose out-weights changed since the last matrix build
     dirty: BTreeSet<usize>,
     cache: Option<MatrixCache>,
+    /// columns recomputed by the last build (None = full rebuild)
+    last_dirty: Option<Vec<usize>>,
 }
 
 /// The P matrix of the last build, kept in CSC (column-contiguous) form so
@@ -88,6 +90,7 @@ impl MutableDigraph {
             m: 0,
             dirty: BTreeSet::new(),
             cache: None,
+            last_dirty: None,
         }
     }
 
@@ -283,11 +286,18 @@ impl MutableDigraph {
         damping: f64,
         patch_dangling: bool,
     ) -> Result<PageRankSystem> {
-        let csc = match self.cache.take() {
+        let (csc, warm) = match self.cache.take() {
             Some(c) if c.damping == damping && c.patch_dangling == patch_dangling => {
-                self.patch_csc(&c.csc, damping, patch_dangling)
+                (self.patch_csc(&c.csc, damping, patch_dangling), true)
             }
-            _ => self.build_csc(damping, patch_dangling),
+            _ => (self.build_csc(damping, patch_dangling), false),
+        };
+        // record which columns this build actually recomputed: streaming
+        // workers patch their LocalSystems with exactly this set
+        self.last_dirty = if warm {
+            Some(self.dirty.iter().copied().collect())
+        } else {
+            None
         };
         self.dirty.clear();
         // one O(nnz) memcpy to keep the cache copy: the SparseMatrix needs
@@ -307,6 +317,15 @@ impl MutableDigraph {
             damping,
             n: self.n,
         })
+    }
+
+    /// The columns the last [`MutableDigraph::pagerank_system`] call
+    /// recomputed, ascending — `None` when that build was from scratch
+    /// (parameter change or cold cache), i.e. "treat everything as
+    /// changed". Feeds the workers' `LocalSystem` dirty-column patching
+    /// across streaming epochs.
+    pub fn last_build_dirty(&self) -> Option<&[usize]> {
+        self.last_dirty.as_deref()
     }
 
     /// Column u of `P = d·S̄` (rows ascending): the renormalized out-links
@@ -681,6 +700,28 @@ mod tests {
             assert_eq!(inc.matrix.csr().to_dense(), full.matrix.csr().to_dense());
             assert_eq!(inc.b, full.b);
         }
+    }
+
+    #[test]
+    fn last_build_dirty_reports_patched_columns() {
+        let g = power_law_web_graph(40, 4, 0.1, 9);
+        let mut mg = MutableDigraph::from_digraph(&g, 41);
+        mg.pagerank_system(0.85, true).unwrap();
+        assert!(mg.last_build_dirty().is_none(), "cold build patches nothing");
+        // node 40 is dormant padding, so the edge is certainly new
+        assert!(mg.apply(&Mutation::EdgeInsert {
+            from: 3,
+            to: 40,
+            weight: 2.0,
+        }));
+        mg.pagerank_system(0.85, true).unwrap();
+        assert_eq!(mg.last_build_dirty(), Some(&[3usize][..]));
+        // a no-mutation rebuild reports an empty dirty set
+        mg.pagerank_system(0.85, true).unwrap();
+        assert_eq!(mg.last_build_dirty(), Some::<&[usize]>(&[]));
+        // a parameter change forces a full rebuild again
+        mg.pagerank_system(0.90, true).unwrap();
+        assert!(mg.last_build_dirty().is_none());
     }
 
     #[test]

@@ -18,7 +18,7 @@ use diter::bench_harness::{fmt_secs, Table};
 use diter::cli::{parse_args, usage, Args, OptSpec};
 use diter::configfile::Config;
 use diter::coordinator::{
-    v1, v2, AdaptiveConfig, AdaptivePolicy, DistributedConfig, StreamingEngine,
+    v1, v2, AdaptiveConfig, AdaptivePolicy, DistributedConfig, KernelKind, StreamingEngine,
 };
 use diter::graph::{
     block_coupled_matrix, pagerank_system, paper_matrix, power_law_web_graph, ChurnModel,
@@ -394,6 +394,12 @@ fn stream_spec() -> Vec<OptSpec> {
             default: None,
         },
         OptSpec {
+            name: "kernel",
+            help: "diffusion kernel: local (block+remnant) | global (baseline walk)",
+            is_flag: false,
+            default: Some("local"),
+        },
+        OptSpec {
             name: "adaptive",
             help: "live §4.3 repartitioning (ownership handoff between PIDs)",
             is_flag: true,
@@ -451,6 +457,8 @@ fn cmd_stream(argv: &[String]) -> CliResult {
     let seed = args.get_u64("seed", 7)?;
     let model = ChurnModel::parse(&args.get_str("model", "rewire"))
         .ok_or("bad --model (expected grow | rewire | hotspot)")?;
+    let kernel = KernelKind::parse(&args.get_str("kernel", "local"))
+        .ok_or("bad --kernel (expected local | global)")?;
     let compare_cold = args.has_flag("compare-cold");
 
     // seed graph uses ~90% of the capacity so the growth model has room
@@ -461,15 +469,17 @@ fn cmd_stream(argv: &[String]) -> CliResult {
     };
     println!(
         "streaming PageRank: capacity N={n} (seed graph {seed_nodes}), K={k} PIDs, \
-         model={}, {batches} batches x {batch_size}",
-        model.name()
+         model={}, kernel={}, {batches} batches x {batch_size}",
+        model.name(),
+        kernel.name()
     );
     let g = power_law_web_graph(seed_nodes, 8, 0.1, seed);
     let mg = MutableDigraph::from_digraph(&g, n);
     let mut cfg = DistributedConfig::new(Partition::contiguous(n, k)?)
         .with_tol(tol)
         .with_seed(seed)
-        .with_sequence(SequenceKind::GreedyMaxFluid);
+        .with_sequence(SequenceKind::GreedyMaxFluid)
+        .with_kernel(kernel);
     cfg.max_wall = Duration::from_secs(120);
     if args.get("straggler").is_some() {
         let pid = args.get_usize("straggler", 0)?;

@@ -21,19 +21,26 @@ pub struct Partition {
     owner: Vec<usize>,
     /// `parts[k]` = sorted members of Ω_k
     parts: Vec<Vec<usize>>,
+    /// `slot[i]` = position of i inside `parts[owner[i]]` — the
+    /// **local-slot map** the worker cores use to reindex their owned
+    /// range into local-slot space without re-deriving it per snapshot
+    slot: Vec<u32>,
 }
 
 impl Partition {
     /// Build from an explicit owner map.
     pub fn from_owner(owner: Vec<usize>, k: usize) -> Result<Partition> {
         let n = owner.len();
+        debug_assert!(n <= u32::MAX as usize, "coordinate space exceeds u32");
         let mut parts = vec![Vec::new(); k];
+        let mut slot = vec![0u32; n];
         for (i, &o) in owner.iter().enumerate() {
             if o >= k {
                 return Err(DiterError::InvalidPartition(format!(
                     "owner[{i}] = {o} out of range (k = {k})"
                 )));
             }
+            slot[i] = parts[o].len() as u32;
             parts[o].push(i);
         }
         for (kk, p) in parts.iter().enumerate() {
@@ -41,7 +48,12 @@ impl Partition {
                 return Err(DiterError::InvalidPartition(format!("Ω_{kk} is empty")));
             }
         }
-        Ok(Partition { n, owner, parts })
+        Ok(Partition {
+            n,
+            owner,
+            parts,
+            slot,
+        })
     }
 
     /// Contiguous ranges: Ω_k = [k·n/K, (k+1)·n/K). The paper's examples
@@ -125,8 +137,14 @@ impl Partition {
         self.owner[i] = to;
         let pos = self.parts[from].binary_search(&i).expect("member");
         self.parts[from].remove(pos);
+        for (s, &j) in self.parts[from].iter().enumerate().skip(pos) {
+            self.slot[j] = s as u32;
+        }
         let ins = self.parts[to].binary_search(&i).unwrap_err();
         self.parts[to].insert(ins, i);
+        for (s, &j) in self.parts[to].iter().enumerate().skip(ins) {
+            self.slot[j] = s as u32;
+        }
     }
 
     pub fn n(&self) -> usize {
@@ -148,6 +166,13 @@ impl Partition {
     /// Members of Ω_k (sorted).
     pub fn part(&self, k: usize) -> &[usize] {
         &self.parts[k]
+    }
+
+    /// Local slot of coordinate `i` within its part:
+    /// `part(owner(i))[slot(i)] == i`. This is what lets a worker build
+    /// its local-slot index in O(|Ω_k|) from any table snapshot.
+    pub fn slot(&self, i: usize) -> usize {
+        self.slot[i] as usize
     }
 
     /// Fraction of matrix weight crossing part boundaries:
@@ -253,7 +278,7 @@ impl Partition {
     pub fn validate(&self) -> Result<()> {
         let mut seen = vec![false; self.n];
         for (kk, part) in self.parts.iter().enumerate() {
-            for &i in part {
+            for (s, &i) in part.iter().enumerate() {
                 if i >= self.n || seen[i] {
                     return Err(DiterError::InvalidPartition(format!(
                         "duplicate or out-of-range member {i} in Ω_{kk}"
@@ -262,6 +287,12 @@ impl Partition {
                 if self.owner[i] != kk {
                     return Err(DiterError::InvalidPartition(format!(
                         "owner map disagrees for {i}"
+                    )));
+                }
+                if self.slot[i] as usize != s {
+                    return Err(DiterError::InvalidPartition(format!(
+                        "local-slot map disagrees for {i} (slot {} != {s})",
+                        self.slot[i]
                     )));
                 }
                 seen[i] = true;
@@ -512,6 +543,26 @@ mod tests {
         assert!(p.transfer(&[0, 1], 1).is_err(), "would empty Ω_0");
         assert!(p.transfer(&[0], 5).is_err(), "no such part");
         assert!(p.transfer(&[9], 1).is_err(), "coord out of range");
+    }
+
+    #[test]
+    fn local_slot_map_consistent_across_operations() {
+        let p = Partition::round_robin(12, 3).unwrap();
+        for i in 0..12 {
+            assert_eq!(p.part(p.owner(i))[p.slot(i)], i);
+        }
+        let moved = p.transfer(&[1, 4], 2).unwrap();
+        moved.validate().unwrap();
+        for i in 0..12 {
+            assert_eq!(moved.part(moved.owner(i))[moved.slot(i)], i);
+        }
+        // move_node path (greedy refinement) must keep slots in sync too
+        let m = block_coupled_matrix(32, 2, 0.5, 0.1, 3, 1);
+        let greedy = Partition::greedy_edge_cut(&m, 2, 0.4).unwrap();
+        greedy.validate().unwrap();
+        for i in 0..32 {
+            assert_eq!(greedy.part(greedy.owner(i))[greedy.slot(i)], i);
+        }
     }
 
     #[test]

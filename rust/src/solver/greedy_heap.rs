@@ -50,6 +50,20 @@ impl GreedyQueue {
         }
     }
 
+    /// Extend the coordinate space to `0..n` (no-op if already covered).
+    /// Queues are sized to a worker's *owned slice*, not the global
+    /// coordinate space — handoff adoption grows them on demand.
+    pub fn grow(&mut self, n: usize) {
+        if n > self.filed.len() {
+            self.filed.resize(n, NONE);
+        }
+    }
+
+    /// Coordinate capacity (the valid `t` range for `push`).
+    pub fn capacity(&self) -> usize {
+        self.filed.len()
+    }
+
     /// Record that coordinate `t` now carries `|fluid| = priority`.
     /// O(1); a no-op unless the exponent bucket changed.
     #[inline]
@@ -207,6 +221,21 @@ mod tests {
         for t in 0..64 {
             assert_eq!(seen[t], live_set[t], "coordinate {t} mismatch");
         }
+    }
+
+    #[test]
+    fn grow_extends_coordinate_space() {
+        let mut q = GreedyQueue::new(2);
+        assert_eq!(q.capacity(), 2);
+        q.push(0, 0.5);
+        q.grow(5);
+        assert_eq!(q.capacity(), 5);
+        q.push(4, 0.9);
+        let f = [0.5, 0.0, 0.0, 0.0, 0.9];
+        assert_eq!(q.pop_valid(|t| f[t]), Some(4));
+        assert_eq!(q.pop_valid(|t| f[t]), Some(0));
+        q.grow(3); // shrinking is a no-op
+        assert_eq!(q.capacity(), 5);
     }
 
     #[test]

@@ -9,11 +9,18 @@
 //!
 //! [`SparseMatrix`] keeps both forms in sync so each scheme takes its
 //! natural traversal with zero per-access conversion cost.
+//!
+//! [`LocalSystem`] is the per-worker view on top of the CSC: the owned
+//! columns reindexed into local-slot space (the intra-part fast path) plus
+//! the cross-part remnant resolved to destination accumulator slots — the
+//! V2 hot loop runs against it instead of the global matrix.
 
 mod build;
+mod local;
 mod ops;
 
 pub use build::TripletBuilder;
+pub use local::LocalSystem;
 pub use ops::{diag_eliminate, DiagElimination};
 
 use crate::error::{DiterError, Result};

@@ -2,8 +2,21 @@
 //! regrouped — we can regroup (f₁+f₂+…+f_m)·p_{ji} so that this quantity
 //! is not too small; we don't need to know who sent the fluid."
 //!
-//! A [`CoalesceBuffer`] accumulates per-destination-coordinate fluid and
-//! releases a batch when the policy says the parcel is worth a message.
+//! A [`CoalesceBuffer`] is a set of **per-destination dense scratch
+//! accumulators**. Each destination interns its target coordinates into
+//! stable slots (`intern`), so the worker hot loop accumulates with a
+//! single indexed add (`add_slot`) — no hashing, no per-emission
+//! allocation. A `touched` journal tracks which slots carry fluid since
+//! the last flush, so flushing is O(touched), not O(boundary), and
+//! produces flat **SoA parcels** `(coords: Vec<u32>, mass: Vec<f64>)` —
+//! the wire format of [`crate::coordinator::WorkerMsg::Fluid`]. The
+//! accumulator arrays themselves persist across flushes: only the
+//! outgoing parcel (which crosses a thread boundary and cannot be
+//! recycled) is allocated per message.
+//!
+//! The general keyed path (`add`) remains for cold routes — fluid
+//! re-forwarded after an ownership change, fostered coordinates — and
+//! interns on first sight.
 
 use std::collections::HashMap;
 
@@ -12,7 +25,7 @@ use std::collections::HashMap;
 pub struct CoalescePolicy {
     /// flush when a destination buffer holds at least this much |fluid|
     pub min_mass: f64,
-    /// flush when a destination buffer has this many distinct coordinates
+    /// flush when a destination buffer has this many touched coordinates
     pub max_entries: usize,
 }
 
@@ -25,74 +38,170 @@ impl Default for CoalescePolicy {
     }
 }
 
-/// Per-destination coalescing buffer: coordinate → accumulated fluid.
+/// One destination's dense scratch accumulator.
+#[derive(Debug, Default)]
+struct DestAcc {
+    /// coordinate → slot (interning map; persists across flushes)
+    slot_of: HashMap<usize, u32>,
+    /// slot → global coordinate
+    coords: Vec<u32>,
+    /// slot → accumulated fluid since the last flush
+    acc: Vec<f64>,
+    is_touched: Vec<bool>,
+    /// slots touched since the last flush (the flush work list)
+    touched: Vec<u32>,
+    /// Σ|fluid| added since the last flush (upper bound — opposite-sign
+    /// merges only shrink the true mass)
+    mass: f64,
+}
+
+impl DestAcc {
+    fn intern(&mut self, coord: usize) -> u32 {
+        if let Some(&s) = self.slot_of.get(&coord) {
+            return s;
+        }
+        let s = self.coords.len() as u32;
+        self.slot_of.insert(coord, s);
+        self.coords.push(coord as u32);
+        self.acc.push(0.0);
+        self.is_touched.push(false);
+        s
+    }
+
+    #[inline]
+    fn add_slot(&mut self, slot: u32, fluid: f64) {
+        let s = slot as usize;
+        self.acc[s] += fluid;
+        self.mass += fluid.abs();
+        if !self.is_touched[s] {
+            self.is_touched[s] = true;
+            self.touched.push(slot);
+        }
+    }
+
+    /// Drain touched slots into an SoA parcel; zero entries (exact
+    /// cancellation) are dropped. Returns (coords, mass, Σ|mass|).
+    fn take(&mut self) -> (Vec<u32>, Vec<f64>, f64) {
+        let mut coords = Vec::with_capacity(self.touched.len());
+        let mut mass = Vec::with_capacity(self.touched.len());
+        let mut total = 0.0;
+        for &s in &self.touched {
+            let si = s as usize;
+            self.is_touched[si] = false;
+            let v = self.acc[si];
+            self.acc[si] = 0.0;
+            if v != 0.0 {
+                coords.push(self.coords[si]);
+                mass.push(v);
+                total += v.abs();
+            }
+        }
+        self.touched.clear();
+        self.mass = 0.0;
+        (coords, mass, total)
+    }
+}
+
+/// Per-destination coalescing accumulators (one [`DestAcc`] per PID).
 #[derive(Debug)]
 pub struct CoalesceBuffer {
     policy: CoalescePolicy,
-    /// dest PID → (coordinate → fluid)
-    buffers: Vec<HashMap<usize, f64>>,
-    /// dest PID → Σ|fluid| currently buffered (approximate upper bound —
-    /// opposite-sign merges only shrink the true mass)
-    masses: Vec<f64>,
+    accs: Vec<DestAcc>,
 }
 
 impl CoalesceBuffer {
     pub fn new(k: usize, policy: CoalescePolicy) -> Self {
         Self {
             policy,
-            buffers: (0..k).map(|_| HashMap::new()).collect(),
-            masses: vec![0.0; k],
+            accs: (0..k).map(|_| DestAcc::default()).collect(),
         }
     }
 
-    /// Accumulate `fluid` for coordinate `j` owned by `dest`.
+    /// Assign (or look up) the accumulator slot for coordinate `j` at
+    /// `dest` — called at [`crate::sparse::LocalSystem`] build time so the
+    /// hot loop can use [`CoalesceBuffer::add_slot`].
+    pub fn intern(&mut self, dest: usize, j: usize) -> u32 {
+        self.accs[dest].intern(j)
+    }
+
+    /// Hot path: accumulate `fluid` into a pre-interned slot.
+    #[inline]
+    pub fn add_slot(&mut self, dest: usize, slot: u32, fluid: f64) {
+        self.accs[dest].add_slot(slot, fluid);
+    }
+
+    /// Cold path: accumulate `fluid` for coordinate `j` owned by `dest`,
+    /// interning the coordinate on first sight.
     pub fn add(&mut self, dest: usize, j: usize, fluid: f64) {
-        *self.buffers[dest].entry(j).or_insert(0.0) += fluid;
-        self.masses[dest] += fluid.abs();
+        let slot = self.accs[dest].intern(j);
+        self.accs[dest].add_slot(slot, fluid);
     }
 
-    /// Destinations whose buffer the policy says should flush now.
-    pub fn ready(&self) -> Vec<usize> {
-        (0..self.buffers.len())
-            .filter(|&d| {
-                !self.buffers[d].is_empty()
-                    && (self.masses[d] >= self.policy.min_mass
-                        || self.buffers[d].len() >= self.policy.max_entries)
-            })
-            .collect()
+    /// Flush destinations into SoA parcels: every non-empty destination
+    /// when `all`, otherwise only those the policy says are worth a
+    /// message. The sink receives `(dest, coords, mass, Σ|mass|)`.
+    pub fn flush(&mut self, all: bool, mut sink: impl FnMut(usize, Vec<u32>, Vec<f64>, f64)) {
+        for d in 0..self.accs.len() {
+            let a = &mut self.accs[d];
+            if a.touched.is_empty() {
+                continue;
+            }
+            if !all && a.mass < self.policy.min_mass && a.touched.len() < self.policy.max_entries
+            {
+                continue;
+            }
+            let (coords, mass, total) = a.take();
+            if !coords.is_empty() {
+                sink(d, coords, mass, total);
+            }
+        }
     }
 
-    /// Take dest's batch (sorted by coordinate for determinism) + its mass.
-    pub fn take(&mut self, dest: usize) -> (Vec<(usize, f64)>, f64) {
-        let map = std::mem::take(&mut self.buffers[dest]);
-        self.masses[dest] = 0.0;
-        let mut batch: Vec<(usize, f64)> = map.into_iter().collect();
-        batch.sort_unstable_by_key(|&(j, _)| j);
-        let mass = batch.iter().map(|&(_, f)| f.abs()).sum();
-        (batch, mass)
+    /// Take one destination's parcel unconditionally (tests/benches).
+    pub fn take(&mut self, dest: usize) -> (Vec<u32>, Vec<f64>, f64) {
+        self.accs[dest].take()
     }
 
-    /// Force-flush everything buffered (end of a work quantum).
-    pub fn take_all(&mut self) -> Vec<(usize, Vec<(usize, f64)>, f64)> {
-        (0..self.buffers.len())
-            .filter(|&d| !self.buffers[d].is_empty())
-            .collect::<Vec<_>>()
-            .into_iter()
-            .map(|d| {
-                let (batch, mass) = self.take(d);
-                (d, batch, mass)
-            })
-            .collect()
+    /// Discard everything buffered (epoch transitions: buffered outbound
+    /// fluid of the old epoch is obsolete by construction). Interned slots
+    /// survive — they stay valid for the patched [`crate::sparse::LocalSystem`].
+    pub fn clear(&mut self) {
+        for a in &mut self.accs {
+            let _ = a.take();
+        }
+    }
+
+    /// Drop every interned slot, preserving pending fluid by re-interning
+    /// it fresh. Without this the interner accretes one slot per
+    /// coordinate ever routed to a destination (ownership churn +
+    /// forwarded fluid trend it toward O(n) per dest over a long run).
+    /// Callers must re-intern any slots they cached — the worker core
+    /// compacts only immediately before a full `LocalSystem` rebuild,
+    /// which re-interns the whole remnant anyway.
+    pub fn compact(&mut self) {
+        for a in &mut self.accs {
+            let (coords, mass, _) = a.take();
+            *a = DestAcc::default();
+            for (u, &c) in coords.iter().enumerate() {
+                let s = a.intern(c as usize);
+                a.add_slot(s, mass[u]);
+            }
+        }
+    }
+
+    /// Interned slot count for a destination (diagnostics/tests).
+    pub fn interned(&self, dest: usize) -> usize {
+        self.accs[dest].coords.len()
     }
 
     /// Total |fluid| currently held back (upper bound) — counted by the
     /// convergence monitor as "not yet transmitted" local fluid.
     pub fn held_mass(&self) -> f64 {
-        self.masses.iter().sum()
+        self.accs.iter().map(|a| a.mass).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.buffers.iter().all(HashMap::is_empty)
+        self.accs.iter().all(|a| a.touched.is_empty())
     }
 }
 
@@ -100,33 +209,65 @@ impl CoalesceBuffer {
 mod tests {
     use super::*;
 
+    fn sorted(mut batch: Vec<(u32, f64)>) -> Vec<(u32, f64)> {
+        batch.sort_unstable_by_key(|&(j, _)| j);
+        batch
+    }
+
+    fn zip(coords: Vec<u32>, mass: Vec<f64>) -> Vec<(u32, f64)> {
+        coords.into_iter().zip(mass).collect()
+    }
+
     #[test]
     fn accumulates_same_coordinate() {
         let mut c = CoalesceBuffer::new(2, CoalescePolicy::default());
         c.add(1, 7, 0.25);
         c.add(1, 7, 0.25);
         c.add(1, 3, -0.1);
-        let (batch, mass) = c.take(1);
-        assert_eq!(batch, vec![(3, -0.1), (7, 0.5)]);
-        assert!((mass - 0.6).abs() < 1e-12);
+        let (coords, mass, total) = c.take(1);
+        assert_eq!(sorted(zip(coords, mass)), vec![(3, -0.1), (7, 0.5)]);
+        assert!((total - 0.6).abs() < 1e-12);
         assert!(c.is_empty());
     }
 
     #[test]
-    fn ready_respects_min_mass() {
+    fn interned_slots_match_keyed_path() {
+        let mut c = CoalesceBuffer::new(2, CoalescePolicy::default());
+        let s7 = c.intern(0, 7);
+        let s9 = c.intern(0, 9);
+        assert_ne!(s7, s9);
+        assert_eq!(c.intern(0, 7), s7, "interning is stable");
+        c.add_slot(0, s7, 0.5);
+        c.add(0, 7, 0.25); // keyed path lands in the same slot
+        c.add_slot(0, s9, 1.0);
+        let (coords, mass, total) = c.take(0);
+        assert_eq!(sorted(zip(coords, mass)), vec![(7, 0.75), (9, 1.0)]);
+        assert!((total - 1.75).abs() < 1e-12);
+        // slots survive the flush
+        c.add_slot(0, s7, 2.0);
+        let (coords, mass, _) = c.take(0);
+        assert_eq!(zip(coords, mass), vec![(7, 2.0)]);
+    }
+
+    #[test]
+    fn flush_respects_min_mass() {
         let policy = CoalescePolicy {
             min_mass: 1.0,
             max_entries: 100,
         };
         let mut c = CoalesceBuffer::new(2, policy);
         c.add(0, 1, 0.4);
-        assert!(c.ready().is_empty());
+        let mut flushed = Vec::new();
+        c.flush(false, |d, coords, _, _| flushed.push((d, coords.len())));
+        assert!(flushed.is_empty());
         c.add(0, 2, 0.7);
-        assert_eq!(c.ready(), vec![0]);
+        c.flush(false, |d, coords, _, _| flushed.push((d, coords.len())));
+        assert_eq!(flushed, vec![(0, 2)]);
+        assert!(c.is_empty());
     }
 
     #[test]
-    fn ready_respects_max_entries() {
+    fn flush_respects_max_entries() {
         let policy = CoalescePolicy {
             min_mass: 1e9,
             max_entries: 3,
@@ -134,20 +275,67 @@ mod tests {
         let mut c = CoalesceBuffer::new(1, policy);
         c.add(0, 1, 1e-12);
         c.add(0, 2, 1e-12);
-        assert!(c.ready().is_empty());
+        let mut n = 0;
+        c.flush(false, |_, _, _, _| n += 1);
+        assert_eq!(n, 0);
         c.add(0, 3, 1e-12);
-        assert_eq!(c.ready(), vec![0]);
+        c.flush(false, |_, _, _, _| n += 1);
+        assert_eq!(n, 1);
     }
 
     #[test]
-    fn take_all_flushes_everything() {
+    fn flush_all_takes_everything() {
         let mut c = CoalesceBuffer::new(3, CoalescePolicy::default());
         c.add(0, 1, 0.1);
         c.add(2, 5, 0.2);
-        let flushed = c.take_all();
-        assert_eq!(flushed.len(), 2);
+        let mut dests = Vec::new();
+        c.flush(true, |d, _, _, _| dests.push(d));
+        assert_eq!(dests, vec![0, 2]);
         assert!(c.is_empty());
         assert_eq!(c.held_mass(), 0.0);
+    }
+
+    #[test]
+    fn exact_cancellation_is_dropped_from_parcels() {
+        let mut c = CoalesceBuffer::new(1, CoalescePolicy::default());
+        c.add(0, 4, 0.5);
+        c.add(0, 4, -0.5);
+        c.add(0, 6, 0.25);
+        // held mass is an upper bound: still counts the cancelled adds
+        assert!((c.held_mass() - 1.25).abs() < 1e-12);
+        let (coords, mass, total) = c.take(0);
+        assert_eq!(zip(coords, mass), vec![(6, 0.25)]);
+        assert!((total - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clear_discards_but_keeps_slots_valid() {
+        let mut c = CoalesceBuffer::new(2, CoalescePolicy::default());
+        let s = c.intern(1, 10);
+        c.add_slot(1, s, 0.7);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.held_mass(), 0.0);
+        c.add_slot(1, s, 0.3);
+        let (coords, mass, _) = c.take(1);
+        assert_eq!(zip(coords, mass), vec![(10, 0.3)]);
+    }
+
+    #[test]
+    fn compact_drops_stale_slots_but_keeps_pending_fluid() {
+        let mut c = CoalesceBuffer::new(2, CoalescePolicy::default());
+        for j in 0..100 {
+            c.add(1, j, 0.01);
+        }
+        let _ = c.take(1); // flushed: 100 slots now stale
+        c.add(1, 7, 0.5); // pending fluid that must survive
+        assert_eq!(c.interned(1), 100);
+        c.compact();
+        assert_eq!(c.interned(1), 1, "only the pending coordinate survives");
+        assert!((c.held_mass() - 0.5).abs() < 1e-12);
+        let (coords, mass, total) = c.take(1);
+        assert_eq!(zip(coords, mass), vec![(7, 0.5)]);
+        assert!((total - 0.5).abs() < 1e-12);
     }
 
     #[test]

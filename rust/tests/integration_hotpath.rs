@@ -1,0 +1,130 @@
+//! End-to-end coverage for the partition-local hot path: the local-block
+//! and global-walk kernels must land on the same fixed point, and the SoA
+//! fluid parcels must conserve every unit of fluid under latency,
+//! coalescing, live handoffs and streaming epochs.
+
+use std::time::Duration;
+
+use diter::coordinator::{v2, AdaptiveConfig, DistributedConfig, KernelKind, StreamingEngine};
+use diter::graph::{
+    pagerank_system, power_law_web_graph, ChurnModel, MutableDigraph, MutationStream,
+};
+use diter::linalg::vec_ops::{dist1, dist_inf, norm1};
+use diter::partition::Partition;
+use diter::solver::{DIteration, FixedPointProblem, SequenceKind, SolveOptions, Solver};
+
+fn pagerank_problem(n: usize, seed: u64) -> FixedPointProblem {
+    let g = power_law_web_graph(n, 5, 0.1, seed);
+    let sys = pagerank_system(&g, 0.85, true).unwrap();
+    FixedPointProblem::new(sys.matrix.clone(), sys.b.clone()).unwrap()
+}
+
+#[test]
+fn both_kernels_reach_the_same_fixed_point() {
+    let p = pagerank_problem(300, 11);
+    for seq in [SequenceKind::Cyclic, SequenceKind::GreedyMaxFluid] {
+        let cfg = |kernel| {
+            DistributedConfig::new(Partition::contiguous(300, 4).unwrap())
+                .with_tol(1e-10)
+                .with_sequence(seq)
+                .with_kernel(kernel)
+        };
+        let local = v2::solve_v2(&p, &cfg(KernelKind::LocalBlock)).unwrap();
+        let global = v2::solve_v2(&p, &cfg(KernelKind::GlobalWalk)).unwrap();
+        assert!(local.converged, "local kernel residual {}", local.residual);
+        assert!(global.converged, "global kernel residual {}", global.residual);
+        assert!(
+            dist_inf(&local.x, &global.x) < 1e-7,
+            "kernels disagree by {:.3e}",
+            dist_inf(&local.x, &global.x)
+        );
+    }
+}
+
+#[test]
+fn soa_parcels_conserve_fluid_under_latency_and_coalescing() {
+    // coarse coalescing + injected latency keeps many SoA parcels in
+    // flight; exact conservation means the PageRank mass still sums to 1
+    let p = pagerank_problem(150, 13);
+    let mut cfg = DistributedConfig::new(Partition::contiguous(150, 4).unwrap())
+        .with_tol(1e-10)
+        .with_sequence(SequenceKind::GreedyMaxFluid);
+    cfg.latency = Some((Duration::from_micros(50), Duration::from_micros(400)));
+    cfg.coalesce = diter::transport::CoalescePolicy {
+        min_mass: 1e-4,
+        max_entries: 32,
+    };
+    let sol = v2::solve_v2(&p, &cfg).unwrap();
+    assert!(sol.converged, "residual {}", sol.residual);
+    assert!(
+        (norm1(&sol.x) - 1.0).abs() < 1e-7,
+        "mass {} — SoA parcels lost fluid",
+        norm1(&sol.x)
+    );
+    assert!(sol.metrics["msgs_sent"] > 0);
+}
+
+#[test]
+fn soa_parcels_conserve_fluid_through_live_handoffs() {
+    // straggler + aggressive rebalancing: fluid rides SoA parcels AND
+    // handoff slices concurrently; the fixed point must still be exact
+    let p = pagerank_problem(200, 19);
+    let cfg = DistributedConfig::new(Partition::contiguous(200, 4).unwrap())
+        .with_tol(1e-10)
+        .with_sequence(SequenceKind::GreedyMaxFluid)
+        .with_straggler(0, 30_000.0)
+        .with_adaptive(AdaptiveConfig {
+            interval: Duration::from_millis(10),
+            ..Default::default()
+        });
+    let sol = v2::solve_v2(&p, &cfg).unwrap();
+    assert!(sol.converged, "residual {}", sol.residual);
+    assert!(
+        (norm1(&sol.x) - 1.0).abs() < 1e-7,
+        "mass {} — fluid must be conserved through handoffs",
+        norm1(&sol.x)
+    );
+}
+
+#[test]
+fn streaming_epochs_patch_the_local_system_correctly() {
+    // churn through several epochs (dirty-column LocalSystem patching on
+    // every rebase) and check each reconverged state against a cold solve
+    let n = 120;
+    let g = power_law_web_graph(n, 5, 0.1, 23);
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let cfg = DistributedConfig::new(Partition::contiguous(n, 3).unwrap())
+        .with_tol(1e-10)
+        .with_sequence(SequenceKind::GreedyMaxFluid)
+        .with_seed(23);
+    let mut eng = StreamingEngine::new(mg, 0.85, true, cfg).unwrap();
+    eng.converge().unwrap();
+    let mut stream = MutationStream::new(ChurnModel::RandomRewire, 5);
+    for _ in 0..3 {
+        let batch = stream.next_batch(eng.graph(), 10);
+        let report = eng.apply_batch(&batch).unwrap();
+        assert!(
+            report.solution.converged,
+            "epoch {} residual {}",
+            report.epoch,
+            report.solution.residual
+        );
+        let opts = SolveOptions {
+            tol: 1e-13,
+            max_cost: 200_000.0,
+            trace_every: 0.0,
+            exact: None,
+        };
+        let want = DIteration::fluid_cyclic()
+            .solve(eng.problem(), &opts)
+            .unwrap()
+            .x;
+        assert!(
+            dist1(&report.solution.x, &want) < 1e-7,
+            "epoch {}: Δ₁ = {}",
+            report.epoch,
+            dist1(&report.solution.x, &want)
+        );
+    }
+    eng.finish().unwrap();
+}

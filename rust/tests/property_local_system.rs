@@ -1,0 +1,212 @@
+//! Property tests for the partition-local diffusion kernel: a
+//! [`LocalSystem`] diffusion must be **bit-identical** to walking the
+//! global CSC column and routing each entry by ownership — over random
+//! partitions, random handoff (ownership-churn) sequences, and
+//! dirty-column-patched streaming epochs.
+
+use std::collections::HashMap;
+
+use diter::graph::{power_law_web_graph, ChurnModel, MutableDigraph, MutationStream};
+use diter::partition::Partition;
+use diter::prop::{run_cases, Gen};
+use diter::sparse::{CscMatrix, LocalSystem, SparseMatrix};
+
+/// Per-destination slot interner mirroring the CoalesceBuffer's contract.
+struct Interner {
+    maps: Vec<HashMap<usize, u32>>,
+    coords: Vec<Vec<usize>>,
+}
+
+impl Interner {
+    fn new(k: usize) -> Interner {
+        Interner {
+            maps: (0..k).map(|_| HashMap::new()).collect(),
+            coords: vec![Vec::new(); k],
+        }
+    }
+
+    fn intern(&mut self, d: usize, j: usize) -> u32 {
+        if let Some(&s) = self.maps[d].get(&j) {
+            return s;
+        }
+        let s = self.coords[d].len() as u32;
+        self.maps[d].insert(j, s);
+        self.coords[d].push(j);
+        s
+    }
+}
+
+/// One PID's (owned, local_of, LocalSystem, interner) bundle.
+type BuiltLocal = (Vec<usize>, Vec<usize>, LocalSystem, Interner);
+
+/// Build one PID's local view off a partition.
+fn build_for_pid(csc: &CscMatrix, part: &Partition, pid: usize) -> BuiltLocal {
+    let n = part.n();
+    let owned = part.part(pid).to_vec();
+    let mut local_of = vec![usize::MAX; n];
+    for &i in &owned {
+        local_of[i] = part.slot(i);
+    }
+    let mut it = Interner::new(part.k());
+    let sys = LocalSystem::build(csc, &owned, &local_of, part.owners(), |d, j| it.intern(d, j));
+    (owned, local_of, sys, it)
+}
+
+/// Diffuse `fi` from owned slot `t` through the LocalSystem; returns
+/// (local f additions, per-dest coordinate→mass maps).
+fn diffuse_local(
+    sys: &LocalSystem,
+    it: &Interner,
+    k: usize,
+    m: usize,
+    t: usize,
+    fi: f64,
+) -> (Vec<f64>, Vec<HashMap<usize, f64>>) {
+    let mut f = vec![0.0; m];
+    let mut out: Vec<HashMap<usize, f64>> = vec![HashMap::new(); k];
+    let (rows, vals) = sys.block_col(t);
+    for u in 0..rows.len() {
+        f[rows[u] as usize] += vals[u] * fi;
+    }
+    let (dests, slots, vals) = sys.remnant_col(t);
+    for u in 0..dests.len() {
+        let d = dests[u] as usize;
+        let coord = it.coords[d][slots[u] as usize];
+        *out[d].entry(coord).or_insert(0.0) += vals[u] * fi;
+    }
+    (f, out)
+}
+
+/// Reference: walk the global CSC column, route by local_of/owner — the
+/// exact operations the global-walk kernel performs.
+fn diffuse_global(
+    csc: &CscMatrix,
+    part: &Partition,
+    local_of: &[usize],
+    m: usize,
+    i: usize,
+    fi: f64,
+) -> (Vec<f64>, Vec<HashMap<usize, f64>>) {
+    let mut f = vec![0.0; m];
+    let mut out: Vec<HashMap<usize, f64>> = vec![HashMap::new(); part.k()];
+    let (rows, vals) = csc.col(i);
+    for u in 0..rows.len() {
+        let j = rows[u];
+        let contrib = vals[u] * fi;
+        if local_of[j] != usize::MAX {
+            f[local_of[j]] += contrib;
+        } else {
+            *out[part.owner(j)].entry(j).or_insert(0.0) += contrib;
+        }
+    }
+    (f, out)
+}
+
+fn assert_diffusions_match(csc: &CscMatrix, part: &Partition, fi: f64) {
+    for pid in 0..part.k() {
+        let (owned, local_of, sys, it) = build_for_pid(csc, part, pid);
+        for (t, &i) in owned.iter().enumerate() {
+            let (fl, outl) = diffuse_local(&sys, &it, part.k(), owned.len(), t, fi);
+            let (fg, outg) = diffuse_global(csc, part, &local_of, owned.len(), i, fi);
+            assert_eq!(fl, fg, "local f mismatch, pid {pid}, coord {i}");
+            assert_eq!(outl, outg, "remnant mismatch, pid {pid}, coord {i}");
+        }
+    }
+}
+
+fn random_partition(g: &mut Gen, n: usize, k: usize) -> Partition {
+    // random owner map with a guaranteed non-empty part for every PID
+    let mut owner: Vec<usize> = (0..n).map(|i| i % k).collect();
+    let perm = g.permutation(n);
+    let shuffled: Vec<usize> = perm.iter().map(|&p| owner[p]).collect();
+    owner = shuffled;
+    Partition::from_owner(owner, k).unwrap()
+}
+
+#[test]
+fn local_system_diffusion_equals_global_walk_over_random_partitions() {
+    run_cases(40, 0x10CA1, |g| {
+        let n = g.usize_in(4, 48);
+        let k = g.usize_in(2, n.min(6));
+        let m = g.contraction_matrix(n, 4, 0.9);
+        let sparse = SparseMatrix::from_csr(m);
+        let part = random_partition(g, n, k);
+        assert_diffusions_match(sparse.csc(), &part, g.f64_in(0.1, 2.0));
+    });
+}
+
+#[test]
+fn local_system_diffusion_survives_random_handoff_sequences() {
+    // ownership churn: after every transfer the rebuilt LocalSystems must
+    // still agree with the global walk under the new owner map
+    run_cases(20, 0xA4D0FF ^ 0xBEEF, |g| {
+        let n = g.usize_in(8, 40);
+        let k = g.usize_in(2, 4);
+        let m = g.contraction_matrix(n, 3, 0.9);
+        let sparse = SparseMatrix::from_csr(m);
+        let mut part = Partition::contiguous(n, k).unwrap();
+        for _ in 0..g.usize_in(1, 6) {
+            // move a random chunk of a random part to a random other PID
+            let from = g.usize_in(0, k - 1);
+            let to = g.usize_in(0, k - 1);
+            let members = part.part(from).to_vec();
+            if from == to || members.len() < 2 {
+                continue;
+            }
+            let take = g.usize_in(1, members.len() - 1);
+            let Ok(next) = part.transfer(&members[..take], to) else {
+                continue;
+            };
+            part = next;
+            part.validate().unwrap();
+            assert_diffusions_match(sparse.csc(), &part, 0.7385);
+        }
+    });
+}
+
+#[test]
+fn patched_local_system_equals_fresh_build_across_epochs() {
+    run_cases(15, 0xEF0C4, |g| {
+        let n = g.usize_in(12, 40);
+        let k = g.usize_in(2, 4);
+        let web = power_law_web_graph(n, 4, 0.1, g.case_seed);
+        let mut mg = MutableDigraph::from_digraph(&web, n);
+        let sys0 = mg.pagerank_system(0.85, true).unwrap();
+        let part = random_partition(g, n, k);
+        // build every PID's LocalSystem on the epoch-0 matrix
+        let mut built: Vec<BuiltLocal> = (0..k)
+            .map(|pid| build_for_pid(sys0.matrix.csc(), &part, pid))
+            .collect();
+        // a few epochs of churn, patching after each rebuild
+        let model = if g.bool() {
+            ChurnModel::RandomRewire
+        } else {
+            ChurnModel::HotSpotBurst { burst: 6 }
+        };
+        let mut stream = MutationStream::new(model, g.case_seed ^ 0x5EED);
+        for _ in 0..g.usize_in(1, 3) {
+            let batch = stream.next_batch(&mg, g.usize_in(1, 10));
+            for mutation in &batch {
+                mg.apply(mutation);
+            }
+            let sys = mg.pagerank_system(0.85, true).unwrap();
+            let dirty = mg
+                .last_build_dirty()
+                .expect("warm rebuild reports its dirty columns")
+                .to_vec();
+            for (pid, (owned, local_of, local, it)) in built.iter_mut().enumerate() {
+                local.patch(sys.matrix.csc(), owned, local_of, part.owners(), &dirty, |d, j| {
+                    it.intern(d, j)
+                });
+                // the patched system must behave exactly like a fresh build
+                let (_, _, fresh, fresh_it) = build_for_pid(sys.matrix.csc(), &part, pid);
+                for t in 0..owned.len() {
+                    let (fp, op) = diffuse_local(local, it, k, owned.len(), t, 1.0);
+                    let (ff, of) = diffuse_local(&fresh, &fresh_it, k, owned.len(), t, 1.0);
+                    assert_eq!(fp, ff, "patched block diverged (pid {pid}, slot {t})");
+                    assert_eq!(op, of, "patched remnant diverged (pid {pid}, slot {t})");
+                }
+            }
+        }
+    });
+}

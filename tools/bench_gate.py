@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over the committed BENCH_stream.json baseline.
+
+Compares the streaming bench's fresh artifact against the committed
+baseline and fails (exit 1) when the kernel regressed by more than
+--max-regress (default 20%).
+
+Two comparisons, by reliability:
+
+  * local_vs_global_speedup — the local-block / global-walk diffusions/sec
+    ratio, measured in the same binary on the same machine. It is close to
+    machine-independent, so it is always enforced against the baseline.
+  * absolute diffusions/sec — only enforced when the baseline was recorded
+    in the same environment (the "environment" field matches), since raw
+    throughput across different machines is noise, not signal.
+
+A baseline with "measured": false is a bootstrap placeholder (the perf
+trajectory has not recorded its first real run yet): the gate prints the
+fresh numbers and exits 0 so the first CI run can seed the baseline from
+its uploaded artifact.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt(value, spec):
+    """Format a possibly-absent metric without crashing on None."""
+    return format(value, spec) if isinstance(value, (int, float)) else "n/a"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="committed BENCH_stream.json")
+    ap.add_argument("--current", required=True, help="freshly produced BENCH_stream.json")
+    ap.add_argument("--max-regress", type=float, default=0.20,
+                    help="allowed fractional regression (default 0.20)")
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    cur = load(args.current)
+
+    cur_speedup = cur.get("local_vs_global_speedup")
+    cur_rate = (cur.get("local") or {}).get("init_diffusions_per_sec")
+    print(f"current: speedup={fmt(cur_speedup, '.2f')}x  "
+          f"local diffusions/sec={fmt(cur_rate, '.3e')}  env={cur.get('environment')}")
+
+    if not base.get("measured", False):
+        print("baseline is a bootstrap placeholder (measured=false): gate passes; "
+              "seed it from this run's uploaded artifact to arm the gate.")
+        return 0
+
+    failures = []
+    tol = 1.0 - args.max_regress
+
+    base_speedup = base.get("local_vs_global_speedup")
+    if base_speedup:
+        floor = base_speedup * tol
+        print(f"baseline speedup={base_speedup:.2f}x  (floor {floor:.2f}x)")
+        if not isinstance(cur_speedup, (int, float)) or cur_speedup < floor:
+            failures.append(
+                f"local_vs_global_speedup regressed: {cur_speedup} < {floor:.2f} "
+                f"(baseline {base_speedup:.2f}, tolerance {args.max_regress:.0%})")
+
+    base_rate = (base.get("local") or {}).get("init_diffusions_per_sec")
+    if base_rate and base.get("environment") == cur.get("environment"):
+        floor = base_rate * tol
+        print(f"baseline diffusions/sec={base_rate:.3e}  (floor {floor:.3e}, same env)")
+        if not isinstance(cur_rate, (int, float)) or cur_rate < floor:
+            failures.append(
+                f"diffusions/sec regressed: {cur_rate} < {floor:.3e} "
+                f"(baseline {base_rate:.3e}, tolerance {args.max_regress:.0%})")
+    elif base_rate:
+        print("baseline recorded in a different environment: absolute "
+              "diffusions/sec not enforced (ratio gate above still applies)")
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print("perf gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
