@@ -1,0 +1,144 @@
+//! Bench: time-to-converge under a hotspot burst with one slowed PID —
+//! fixed-K (static and shed-only adaptive) vs the elastic worker pool.
+//!
+//! Scenario: K = 2 streaming workers, PID 0 throttled to a fixed
+//! updates/sec budget, a flash-crowd (`HotSpotBurst`) mutation batch
+//! landing mid-run. Fixed-K leaves half the coordinate space pinned to
+//! the straggler; the shed-only rebalancer can move load to PID 1 but
+//! the pool stays at two workers; the elastic pool **spawns** workers to
+//! absorb the straggler's share (and can retire them once idle), so its
+//! time-to-converge should approach the unthrottled budget. Emits
+//! `BENCH_elastic.json` for the CI perf gate (`tools/bench_gate.py
+//! --kind elastic`).
+
+use diter::bench_harness::{bench_header, bench_json_dir, fmt_secs, Json, Table};
+use diter::coordinator::{
+    AdaptiveConfig, DistributedConfig, ElasticConfig, PoolStats, StreamingEngine,
+};
+use diter::graph::{power_law_web_graph, ChurnModel, MutableDigraph, MutationStream};
+use diter::partition::Partition;
+use diter::solver::SequenceKind;
+use std::time::Duration;
+
+/// One full scenario run: initial converge + one hotspot batch.
+/// Returns (total wall seconds, final residual, pool stats).
+fn run(n: usize, cfg: DistributedConfig, seed: u64) -> (f64, f64, PoolStats) {
+    let g = power_law_web_graph(n, 6, 0.1, seed);
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let mut eng = StreamingEngine::new(mg, 0.85, true, cfg).unwrap();
+    let init = eng.converge().unwrap();
+    assert!(init.solution.converged, "initial solve must converge");
+    let mut stream = MutationStream::new(ChurnModel::HotSpotBurst { burst: 32 }, seed ^ 0xB00);
+    let batch = stream.next_batch(eng.graph(), 48);
+    let report = eng.apply_batch(&batch).unwrap();
+    assert!(report.solution.converged, "hotspot epoch must reconverge");
+    let wall = init.solution.wall_secs + report.solution.wall_secs;
+    let residual = report.solution.residual;
+    let stats = eng.pool_stats();
+    eng.finish().unwrap();
+    (wall, residual, stats)
+}
+
+fn main() {
+    bench_header(
+        "elastic_pool",
+        "hotspot burst with one slowed PID: fixed-K vs elastic worker pool (K0=2)",
+    );
+    let n = std::env::var("DITER_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3_000usize);
+    let k = 2usize;
+    let tol = 1e-9;
+    let straggler_ups = 20_000.0;
+    let seed = 11u64;
+    println!("graph: {n} nodes, K0={k}, straggler 0 @ {straggler_ups:.0} upd/s, tol {tol:.0e}\n");
+
+    let base = || {
+        let mut cfg = DistributedConfig::new(Partition::contiguous(n, k).unwrap())
+            .with_tol(tol)
+            .with_seed(seed)
+            .with_sequence(SequenceKind::GreedyMaxFluid)
+            .with_straggler(0, straggler_ups);
+        cfg.max_wall = Duration::from_secs(600);
+        cfg
+    };
+
+    let (fixed_wall, fixed_res, _) = run(n, base(), seed);
+    let (adaptive_wall, adaptive_res, _) = run(
+        n,
+        base().with_adaptive(AdaptiveConfig {
+            interval: Duration::from_millis(20),
+            ..Default::default()
+        }),
+        seed,
+    );
+    let elastic_cfg = ElasticConfig {
+        max_workers: 6,
+        spawn_threshold: 0.5,
+        retire_idle: Duration::from_secs(30),
+        interval: Duration::from_millis(15),
+        ..Default::default()
+    };
+    let (elastic_wall, elastic_res, stats) = run(n, base().with_elastic(elastic_cfg), seed);
+
+    let vs_fixed = fixed_wall / elastic_wall.max(1e-9);
+    let vs_adaptive = adaptive_wall / elastic_wall.max(1e-9);
+    let mut table = Table::new(&["config", "wall", "residual", "vs-elastic"]);
+    table.row(&[
+        "fixed-K static".into(),
+        fmt_secs(fixed_wall),
+        format!("{fixed_res:.1e}"),
+        format!("{vs_fixed:.2}x slower"),
+    ]);
+    table.row(&[
+        "fixed-K adaptive".into(),
+        fmt_secs(adaptive_wall),
+        format!("{adaptive_res:.1e}"),
+        format!("{vs_adaptive:.2}x slower"),
+    ]);
+    table.row(&[
+        format!("elastic (peak {} workers)", stats.peak_live),
+        fmt_secs(elastic_wall),
+        format!("{elastic_res:.1e}"),
+        "1.00x".into(),
+    ]);
+    print!("{}", table.render());
+    println!(
+        "\npool: spawned {} retired {} sheds {} peak {}",
+        stats.spawned, stats.retired, stats.sheds, stats.peak_live
+    );
+
+    let bench_env = std::env::var("DITER_BENCH_ENV").unwrap_or_else(|_| "local".into());
+    let json = Json::new()
+        .int_field("schema", 1)
+        .str_field("bench", "elastic_pool")
+        .bool_field("measured", true)
+        .str_field("environment", &bench_env)
+        .int_field("n", n as u64)
+        .int_field("k_fixed", k as u64)
+        .num_field("tol", tol)
+        .num_field("straggler_updates_per_sec", straggler_ups)
+        .num_field("fixed_time_to_converge_secs", fixed_wall)
+        .num_field("adaptive_time_to_converge_secs", adaptive_wall)
+        .num_field("elastic_time_to_converge_secs", elastic_wall)
+        .num_field("elastic_vs_fixed_speedup", vs_fixed)
+        .num_field("elastic_vs_adaptive_speedup", vs_adaptive)
+        .int_field("pool_spawned", stats.spawned)
+        .int_field("pool_retired", stats.retired)
+        .int_field("pool_peak_live", stats.peak_live as u64);
+    let path = bench_json_dir().join("BENCH_elastic.json");
+    json.write(&path).expect("write BENCH_elastic.json");
+    println!("\nwrote {}", path.display());
+
+    assert!(
+        stats.spawned >= 1,
+        "the elastic run must actually have spawned a worker"
+    );
+    assert!(
+        vs_fixed > 1.0,
+        "elastic must beat fixed-K time-to-converge under the hotspot \
+         scenario (got {vs_fixed:.2}x)"
+    );
+    println!("elastic beats fixed-K: {vs_fixed:.2}x (vs shed-only adaptive: {vs_adaptive:.2}x)");
+}

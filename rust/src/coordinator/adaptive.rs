@@ -189,27 +189,41 @@ impl AdaptiveController {
         if fastest == slowest {
             return None;
         }
-        let members = partition.part(slowest);
-        let shed = members.len() - members.len() / 2;
-        let upper = &members[members.len() / 2..];
-        let lower = &members[..shed];
-        let coords = match matrix {
-            None => upper.to_vec(),
-            Some(p) => {
-                let dl = cut_delta(p, partition, lower, fastest);
-                let du = cut_delta(p, partition, upper, fastest);
-                if dl < du {
-                    lower.to_vec()
-                } else {
-                    upper.to_vec() // tie: upper (the pre-cut-aware pick)
-                }
-            }
-        };
+        let coords = choose_shed_half(partition, slowest, fastest, matrix);
         Some(HandoffPlan {
             from: slowest,
             to: fastest,
             coords,
         })
+    }
+}
+
+/// Which half of `from`'s Ω should move to `to`: the cut-aware selection
+/// shared by [`AdaptiveController::plan_rebalance`] (fixed-pool shed) and
+/// the elastic pool's spawn-split (`to` is then a freshly-grown, still
+/// empty part). With a matrix, the half whose transfer minimizes the
+/// resulting edge cut (scored via [`cut_delta`]); without, the upper half.
+pub(crate) fn choose_shed_half(
+    partition: &Partition,
+    from: usize,
+    to: usize,
+    matrix: Option<&SparseMatrix>,
+) -> Vec<usize> {
+    let members = partition.part(from);
+    let shed = members.len() - members.len() / 2;
+    let upper = &members[members.len() / 2..];
+    let lower = &members[..shed];
+    match matrix {
+        None => upper.to_vec(),
+        Some(p) => {
+            let dl = cut_delta(p, partition, lower, to);
+            let du = cut_delta(p, partition, upper, to);
+            if dl < du {
+                lower.to_vec()
+            } else {
+                upper.to_vec() // tie: upper (the pre-cut-aware pick)
+            }
+        }
     }
 }
 

@@ -26,9 +26,16 @@
 //! *live* operation — [`adaptive`] supplies the policy, the worker core
 //! ships `(H, B, F)` slices between PIDs over the bus (`Handoff` control
 //! messages) without stopping the diffusion or losing a unit of fluid.
+//!
+//! [`pool`] owns the worker lifecycles behind both engines: a
+//! [`pool::WorkerPool`] scheduler that, with [`ElasticConfig`] set, also
+//! **spawns** new live workers (runtime bus endpoints, adopt-from-empty
+//! via the handoff machinery) for persistent stragglers and **retires**
+//! idle ones mid-convergence — the elastic half of §4.3 (DESIGN.md §6).
 
 pub mod adaptive;
 pub mod monitor;
+pub mod pool;
 pub mod sim;
 pub mod stream;
 pub mod update;
@@ -37,6 +44,7 @@ pub mod v2;
 pub mod worker;
 
 pub use adaptive::{AdaptiveConfig, AdaptiveController, AdaptivePolicy, HandoffPlan};
+pub use pool::{ElasticConfig, PoolStats, WorkerPool};
 pub use stream::{EpochReport, StreamSummary, StreamingEngine};
 pub use worker::{Handoff, WorkerMsg};
 
@@ -107,6 +115,11 @@ pub struct DistributedConfig {
     pub seed: u64,
     /// live §4.3 repartitioning (None = static partition for the run)
     pub adaptive: Option<AdaptiveConfig>,
+    /// elastic worker pool: spawn/retire PIDs at runtime (None = the
+    /// worker count stays at partition.k() for the whole run). Subsumes
+    /// `adaptive` when set — the pool scheduler handles straggler sheds
+    /// itself once it is out of spawn headroom.
+    pub elastic: Option<ElasticConfig>,
     /// artificially cap one PID's update rate (straggler injection for
     /// adaptive-repartitioning experiments and tests)
     pub straggler: Option<Straggler>,
@@ -137,6 +150,7 @@ impl DistributedConfig {
             coalesce: CoalescePolicy::default(),
             seed: 0,
             adaptive: None,
+            elastic: None,
             straggler: None,
             kernel: KernelKind::default(),
         }
@@ -164,6 +178,11 @@ impl DistributedConfig {
 
     pub fn with_adaptive(mut self, adaptive: AdaptiveConfig) -> Self {
         self.adaptive = Some(adaptive);
+        self
+    }
+
+    pub fn with_elastic(mut self, elastic: ElasticConfig) -> Self {
+        self.elastic = Some(elastic);
         self
     }
 

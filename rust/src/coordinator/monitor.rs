@@ -27,11 +27,28 @@ pub struct MonitorState {
 
 impl MonitorState {
     pub fn new(k: usize) -> Arc<Self> {
+        Self::with_capacity(k, k)
+    }
+
+    /// `k` active slots plus headroom up to `cap` for PIDs an elastic
+    /// pool may spawn later. Active slots start at ∞ (the total stays ∞
+    /// until every initial PID published once); vacant slots start at 0
+    /// — a not-yet-spawned worker holds no fluid, its share is counted by
+    /// whichever PID (or the bus) currently holds it.
+    pub fn with_capacity(k: usize, cap: usize) -> Arc<Self> {
+        let cap = cap.max(k);
         Arc::new(Self {
-            published: (0..k).map(|_| AtomicF64::new(f64::INFINITY)).collect(),
-            updates: (0..k).map(|_| AtomicU64::new(0)).collect(),
+            published: (0..cap)
+                .map(|i| AtomicF64::new(if i < k { f64::INFINITY } else { 0.0 }))
+                .collect(),
+            updates: (0..cap).map(|_| AtomicU64::new(0)).collect(),
             stop: AtomicBool::new(false),
         })
+    }
+
+    /// Slot count (active + spawnable headroom).
+    pub fn capacity(&self) -> usize {
+        self.published.len()
     }
 
     pub fn publish(&self, k: usize, remaining: f64) {
@@ -160,6 +177,21 @@ mod tests {
         s.add_updates(1, 4);
         assert_eq!(s.total_updates(), 14);
         assert_eq!(s.max_updates(), 10);
+    }
+
+    #[test]
+    fn capacity_slots_start_drained() {
+        let s = MonitorState::with_capacity(2, 4);
+        assert_eq!(s.capacity(), 4);
+        assert!(s.published_total().is_infinite(), "active slots gate the total");
+        s.publish(0, 0.5);
+        s.publish(1, 0.25);
+        // vacant slots contribute nothing until a spawned worker publishes
+        assert!((s.published_total() - 0.75).abs() < 1e-15);
+        s.publish(3, 0.125);
+        assert!((s.published_total() - 0.875).abs() < 1e-15);
+        s.add_updates(3, 7);
+        assert_eq!(s.update_counts(), vec![0, 0, 0, 7]);
     }
 
     #[test]

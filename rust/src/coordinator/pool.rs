@@ -1,0 +1,963 @@
+//! The elastic worker pool: one scheduler that owns every PID's
+//! lifecycle — spawn, run, drain, retire — and the control channel both
+//! engines drive it through.
+//!
+//! The paper's §4.3 speed adaptation has two halves. The *fixed-pool*
+//! half (PR 2) moves ownership between a constant K workers; this module
+//! adds the *elastic* half: the PID count itself tracks the workload
+//! (arXiv 1203.1715 evaluates exactly this dynamic-partition policy, and
+//! the flexible-communication results of arXiv 2210.04626 justify
+//! convergence with endpoints that appear and disappear mid-iteration).
+//!
+//! ## Lifecycle (DESIGN.md §6)
+//!
+//! ```text
+//!            add_endpoint        handoff folded
+//! (vacant) ──────────────▶ Spawning ────────────▶ Live
+//!                                                  │ drain install
+//!                                                  ▼
+//!            remove_endpoint + join            Draining
+//! (vacant) ◀──────────────────────── Retired ◀─────┘
+//!                                        acked ∧ inflight == 0
+//! ```
+//!
+//! **Spawn** (a persistent straggler, PID headroom available): reserve a
+//! slot → register its bus endpoint → widen the [`OwnershipTable`] →
+//! start the worker on an **empty** `LocalSystem` (it enters the current
+//! epoch with a zero-length fluid slice) → install the cut-aware half of
+//! the straggler's Ω. The straggler itself ships the `(H, B, F)` slice
+//! over the PR 2 [`super::worker::Handoff`] machinery; the new worker's
+//! adopt-from-empty is just the ordinary handoff fold.
+//!
+//! **Retire** (a worker idle past the policy window): install a
+//! transfer of its whole Ω to an absorber (the part goes empty, the slot
+//! stays) → wait until the drain acked and no handoff slice is in flight
+//! → deregister the endpoint **first**, then shut the thread down. The
+//! order matters: after `remove_endpoint` returns, stale senders fail
+//! fast and re-route, while everything already queued is drained by the
+//! worker's forwarding exit path ([`WorkerCore::finish`]) — so a retire
+//! mid-convergence conserves every unit of fluid.
+//!
+//! Both transitions run **asynchronously** against the diffusion: the
+//! pool installs an ownership version and lets the workers migrate state
+//! themselves; `poll` completes the lifecycle transitions on later
+//! ticks. All pool operations happen on the engine's monitor thread, so
+//! they are serial with epoch rebases (which freeze the table anyway).
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::adaptive::choose_shed_half;
+use super::monitor::MonitorState;
+use super::worker::{WorkerCore, WorkerMsg, WORKER_METRICS};
+use super::DistributedConfig;
+use crate::error::{DiterError, Result};
+use crate::metrics::MetricSet;
+use crate::partition::{OwnershipTable, PidState};
+use crate::solver::FixedPointProblem;
+use crate::transport::{bus_elastic, BusConfig, BusHub, BusMonitor};
+
+/// Pool gauges registered on top of the worker/bus metrics.
+pub const POOL_METRICS: &[&str] = &[
+    "pool_spawned",   // workers spawned at runtime
+    "pool_retired",   // workers retired at runtime
+    "pool_live",      // current live worker count (gauge)
+    "pool_peak_live", // high-water mark of live workers
+];
+
+/// Coordinator → worker control messages. Checkpoint/Snapshot replies
+/// carry `(pid, held coords, H slice)` — with live repartitioning the
+/// held range is dynamic, so the coordinates always travel with the data.
+pub(crate) enum Ctrl {
+    /// Pause, reply with the held range + H slice, wait for `Resume`.
+    Checkpoint {
+        reply: Sender<(usize, Vec<usize>, Vec<f64>)>,
+    },
+    /// New epoch: swap the matrix, reset the fluid slice, keep H.
+    /// `dirty` lists the matrix columns that changed since the previous
+    /// epoch (ascending) when the incremental build knows them — workers
+    /// patch their `LocalSystem` instead of rebuilding it.
+    Resume {
+        epoch: u64,
+        problem: Arc<FixedPointProblem>,
+        f_slice: Vec<f64>,
+        dirty: Option<Arc<Vec<usize>>>,
+    },
+    /// Non-pausing read of the held range + H (worker keeps running).
+    Snapshot {
+        reply: Sender<(usize, Vec<usize>, Vec<f64>)>,
+    },
+    /// Terminate; the final (Ω, H) comes back through the join handle.
+    Shutdown,
+}
+
+/// Elastic policy knobs (`--max-workers`, `--spawn-threshold`,
+/// `--retire-idle-ms` on the CLI).
+#[derive(Clone, Debug)]
+pub struct ElasticConfig {
+    /// hard cap on concurrently-live workers (bus/table/monitor capacity
+    /// is pre-sized to this)
+    pub max_workers: usize,
+    /// spawn a worker for a straggler whose per-coordinate rate is below
+    /// this fraction of the median (the §4.3 split criterion)
+    pub spawn_threshold: f64,
+    /// retire a worker continuously idle (no updates, no backlog) for
+    /// this long
+    pub retire_idle: Duration,
+    /// decision window: rates are measured and at most one lifecycle
+    /// operation is started per interval
+    pub interval: Duration,
+    /// never split a part below 2× this many coordinates
+    pub min_part: usize,
+    /// never retire below this many live workers
+    pub min_workers: usize,
+    /// hard cap on lifecycle operations per run (runaway guard)
+    pub max_ops: u64,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        Self {
+            max_workers: 8,
+            spawn_threshold: 0.5,
+            retire_idle: Duration::from_millis(250),
+            interval: Duration::from_millis(40),
+            min_part: 2,
+            min_workers: 1,
+            max_ops: 64,
+        }
+    }
+}
+
+/// Lifecycle counters exposed to engines, the CLI stats block and the
+/// elastic bench.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// workers spawned at runtime (beyond the initial K)
+    pub spawned: u64,
+    /// workers retired at runtime
+    pub retired: u64,
+    /// ownership sheds installed by the pool (straggler relief when the
+    /// pool is at max_workers)
+    pub sheds: u64,
+    /// high-water mark of concurrently-live workers
+    pub peak_live: usize,
+    /// live workers right now
+    pub live: usize,
+}
+
+/// One PID slot's worker-side handles.
+struct WorkerHandle {
+    ctrl: Sender<Ctrl>,
+    handle: JoinHandle<(Vec<usize>, Vec<f64>)>,
+}
+
+/// Elastic driver state (None on a fixed pool).
+struct ElasticState {
+    cfg: ElasticConfig,
+    last_counts: Vec<u64>,
+    last_decision: Instant,
+    /// per-slot instant the worker was first observed idle (None = busy)
+    idle_since: Vec<Option<Instant>>,
+    /// below this much total fluid no spawn/shed fires (nearly drained —
+    /// migrating buys nothing); retire stays allowed, that IS the win
+    min_total: f64,
+    ops: u64,
+}
+
+/// The worker-pool scheduler: owns the bus hub, the ownership table, the
+/// monitor slots, and every worker thread. Both engines
+/// ([`super::v2::solve_v2`] and [`super::stream::StreamingEngine`])
+/// instantiate one and drive it through checkpoint/resume/snapshot; with
+/// an [`ElasticConfig`] its `poll` additionally spawns and retires
+/// workers mid-convergence.
+pub struct WorkerPool {
+    hub: BusHub<WorkerMsg>,
+    table: Arc<OwnershipTable>,
+    state: Arc<MonitorState>,
+    problem: Arc<FixedPointProblem>,
+    cfg: DistributedConfig,
+    metrics: Arc<MetricSet>,
+    /// index = pid; None = vacant (never spawned, or retired)
+    slots: Vec<Option<WorkerHandle>>,
+    elastic: Option<ElasticState>,
+    stats: PoolStats,
+    epoch: u64,
+}
+
+impl WorkerPool {
+    /// Spawn the initial K workers over `cfg.partition`.
+    pub fn new(problem: Arc<FixedPointProblem>, cfg: DistributedConfig) -> Result<WorkerPool> {
+        let k = cfg.partition.k();
+        let cap = cfg
+            .elastic
+            .as_ref()
+            .map(|e| e.max_workers.max(k))
+            .unwrap_or(k);
+        let state = MonitorState::with_capacity(k, cap);
+        let names: Vec<&'static str> = WORKER_METRICS
+            .iter()
+            .chain(POOL_METRICS)
+            .copied()
+            .collect();
+        let (endpoints, hub, metrics) = bus_elastic::<WorkerMsg>(
+            k,
+            &BusConfig {
+                latency: cfg.latency,
+                seed: cfg.seed,
+            },
+            &names,
+        );
+        let table = OwnershipTable::new(cfg.partition.clone());
+        let elastic = cfg.elastic.as_ref().map(|e| ElasticState {
+            cfg: e.clone(),
+            last_counts: vec![0; cap],
+            last_decision: Instant::now(),
+            idle_since: vec![None; cap],
+            min_total: cfg.tol * 100.0,
+            ops: 0,
+        });
+        let mut pool = WorkerPool {
+            hub,
+            table,
+            state,
+            problem,
+            cfg,
+            metrics,
+            slots: Vec::with_capacity(cap),
+            elastic,
+            stats: PoolStats {
+                peak_live: k,
+                live: k,
+                ..Default::default()
+            },
+            epoch: 0,
+        };
+        for ep in endpoints {
+            let handle = pool.spawn_thread(ep);
+            pool.slots.push(Some(handle));
+        }
+        pool.metrics.set("pool_live", k as u64);
+        pool.metrics.set("pool_peak_live", k as u64);
+        Ok(pool)
+    }
+
+    /// Start one worker thread over an already-registered endpoint. The
+    /// ownership table must already cover its PID (a vacant part is fine
+    /// — the core starts with an empty Ω and adopts via handoff).
+    fn spawn_thread(&mut self, ep: crate::transport::Endpoint<WorkerMsg>) -> WorkerHandle {
+        let pid = ep.id();
+        let mut core = WorkerCore::new(
+            pid,
+            ep,
+            self.problem.clone(),
+            self.table.clone(),
+            self.state.clone(),
+            self.cfg.clone(),
+        );
+        if self.epoch > 0 {
+            // a worker spawned mid-stream joins the CURRENT epoch: empty
+            // owned set ⇒ empty fluid slice; the handoff that populates
+            // it carries epoch-tagged state
+            core.enter_epoch(self.epoch, self.problem.clone(), Vec::new(), None);
+        }
+        let (tx, rx) = channel::<Ctrl>();
+        let state = self.state.clone();
+        let worker = PoolWorker {
+            core,
+            ctrl: rx,
+            state,
+        };
+        WorkerHandle {
+            ctrl: tx,
+            handle: std::thread::spawn(move || worker.run()),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // engine-facing plumbing
+
+    pub fn table(&self) -> &Arc<OwnershipTable> {
+        &self.table
+    }
+
+    pub fn state(&self) -> &Arc<MonitorState> {
+        &self.state
+    }
+
+    pub fn metrics(&self) -> &Arc<MetricSet> {
+        &self.metrics
+    }
+
+    pub fn monitor(&self) -> BusMonitor {
+        self.hub.monitor()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    /// PIDs currently backed by a worker thread.
+    pub fn live_pids(&self) -> Vec<usize> {
+        (0..self.slots.len())
+            .filter(|&p| self.slots[p].is_some())
+            .collect()
+    }
+
+    /// Ask every live worker to pause and report `(pid, Ω, H)`.
+    pub fn checkpoint(&self) -> Result<Vec<(usize, Vec<usize>, Vec<f64>)>> {
+        self.collect(|reply| Ctrl::Checkpoint { reply })
+    }
+
+    /// Read every live worker's `(pid, Ω, H)` without pausing it.
+    pub fn snapshot(&self) -> Result<Vec<(usize, Vec<usize>, Vec<f64>)>> {
+        self.collect(|reply| Ctrl::Snapshot { reply })
+    }
+
+    fn collect(
+        &self,
+        make: impl Fn(Sender<(usize, Vec<usize>, Vec<f64>)>) -> Ctrl,
+    ) -> Result<Vec<(usize, Vec<usize>, Vec<f64>)>> {
+        let (tx, rx) = channel();
+        let mut expect = 0usize;
+        for slot in self.slots.iter().flatten() {
+            slot.ctrl
+                .send(make(tx.clone()))
+                .map_err(|_| DiterError::Coordinator("pool worker gone".into()))?;
+            expect += 1;
+        }
+        drop(tx);
+        let mut out = Vec::with_capacity(expect);
+        for _ in 0..expect {
+            out.push(
+                rx.recv_timeout(Duration::from_secs(30))
+                    .map_err(|_| DiterError::Coordinator("pool worker reply timed out".into()))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Resume every checkpointed worker into `epoch` with its rebased
+    /// fluid slice. Also retargets the pool's own problem handle so
+    /// workers spawned later join the right epoch.
+    pub fn resume(
+        &mut self,
+        epoch: u64,
+        problem: Arc<FixedPointProblem>,
+        slices: Vec<(usize, Vec<f64>)>,
+        dirty: Option<Arc<Vec<usize>>>,
+    ) -> Result<()> {
+        self.epoch = epoch;
+        self.problem = problem.clone();
+        for (pid, f_slice) in slices {
+            let slot = self.slots[pid]
+                .as_ref()
+                .ok_or_else(|| DiterError::Coordinator(format!("no worker at pid {pid}")))?;
+            slot.ctrl
+                .send(Ctrl::Resume {
+                    epoch,
+                    problem: problem.clone(),
+                    f_slice,
+                    dirty: dirty.clone(),
+                })
+                .map_err(|_| DiterError::Coordinator("pool worker gone".into()))?;
+        }
+        Ok(())
+    }
+
+    /// Shut every worker down and return their final `(Ω, H)` pairs.
+    /// Shutdown is broadcast to ALL workers before any join: a worker's
+    /// drain loop only quiesces once its peers stop producing fluid at
+    /// it, so stopping them one-by-one would serialize the exit (and, on
+    /// an unconverged run, bounce parcels off already-joined workers).
+    pub fn finish(mut self) -> Result<Vec<(Vec<usize>, Vec<f64>)>> {
+        for slot in self.slots.iter().flatten() {
+            let _ = slot.ctrl.send(Ctrl::Shutdown);
+        }
+        let mut out = Vec::new();
+        for slot in self.slots.iter_mut() {
+            if let Some(h) = slot.take() {
+                out.push(
+                    h.handle
+                        .join()
+                        .map_err(|_| DiterError::Coordinator("pool worker panicked".into()))?,
+                );
+            }
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // the elastic scheduler
+
+    /// One scheduler tick, called from the engine's monitor loop with the
+    /// currently-observed total fluid. Completes pending lifecycle
+    /// transitions, then (at most once per interval) starts a new one:
+    /// spawn for a straggler, shed when at capacity, retire the idle.
+    /// Returns true when a lifecycle operation started or completed.
+    pub fn poll(&mut self, total: f64) -> bool {
+        if self.elastic.is_none() || self.table.is_frozen() {
+            return false;
+        }
+        // one liveness snapshot per tick (this runs every monitor poll);
+        // the transition helpers keep it in sync with their writes
+        let mut states = self.table.liveness_states();
+        let mut acted = self.promote_spawning(&mut states);
+        acted |= self.complete_draining(&mut states);
+        let (interval, max_ops, min_workers, max_workers, min_total) = {
+            let es = self.elastic.as_ref().expect("checked above");
+            (
+                es.cfg.interval,
+                es.cfg.max_ops,
+                es.cfg.min_workers,
+                es.cfg.max_workers,
+                es.min_total,
+            )
+        };
+        {
+            let es = self.elastic.as_ref().expect("checked above");
+            if es.last_decision.elapsed() < interval || es.ops >= max_ops {
+                return acted;
+            }
+        }
+        // measure the window
+        let counts = self.state.update_counts();
+        let backlog = self.state.published_values();
+        let k = self.table.partition().k();
+        let deltas: Vec<u64> = {
+            let es = self.elastic.as_mut().expect("checked above");
+            let deltas = counts
+                .iter()
+                .zip(&es.last_counts)
+                .map(|(now, base)| now.saturating_sub(*base))
+                .collect();
+            es.last_counts = counts;
+            es.last_decision = Instant::now();
+            deltas
+        };
+        self.track_idleness(&states, &deltas, &backlog);
+        // a transition in flight (or an unsettled ownership move) blocks
+        // new decisions: measurements straddling a migration are noise,
+        // and the single-transition-at-a-time rule keeps the state
+        // machine trivially serializable
+        if states
+            .iter()
+            .any(|s| matches!(s, PidState::Spawning | PidState::Draining))
+            || !self.table.all_acked(self.table.version())
+            || self.table.handoffs_inflight() > 0
+        {
+            return acted;
+        }
+        let live = self.stats.live;
+        // 1. retire: a worker idle past the window hands its Ω away —
+        //    this is the merge-side policy from the ROADMAP (regrouping
+        //    persistently-idle PIDs frees a core)
+        if live > min_workers {
+            if let Some((pid, absorber)) = self.pick_retire(&states, &deltas) {
+                return self.retire(pid, absorber) || acted;
+            }
+        }
+        // 2. spawn / shed: a persistent straggler sheds half its Ω — to a
+        //    brand-new worker while there is headroom, else to the
+        //    fastest existing peer (the PR 2 fixed-pool rebalance)
+        if total.is_finite() && total > min_total {
+            if let Some((straggler, fastest)) = self.pick_straggler(&states, &deltas, &backlog, k)
+            {
+                if live < max_workers {
+                    return self.spawn_split(straggler).is_ok() || acted;
+                }
+                if let Some(fastest) = fastest {
+                    return self.shed(straggler, fastest) || acted;
+                }
+            }
+        }
+        acted
+    }
+
+    /// Spawning → Live once the worker acked the version that routed
+    /// coordinates at it (its handoff may still be flying — that's fine,
+    /// Live only means "fully registered and syncing"). Mirrors its
+    /// writes into the caller's liveness snapshot.
+    fn promote_spawning(&mut self, states: &mut [PidState]) -> bool {
+        let v = self.table.version();
+        let mut acted = false;
+        for pid in 0..states.len() {
+            if states[pid] == PidState::Spawning && self.table.acked_version(pid) >= v {
+                self.table.set_liveness(pid, PidState::Live);
+                states[pid] = PidState::Live;
+                acted = true;
+            }
+        }
+        acted
+    }
+
+    /// Draining → Retired once the drain version is acked everywhere and
+    /// no handoff slice is in flight: deregister the endpoint (stale
+    /// senders now fail fast and re-route), then stop and join the
+    /// thread — its forwarding exit path drains anything already queued.
+    fn complete_draining(&mut self, states: &mut [PidState]) -> bool {
+        let v = self.table.version();
+        let mut acted = false;
+        for pid in 0..states.len() {
+            if states[pid] != PidState::Draining {
+                continue;
+            }
+            if !self.table.all_acked(v) || self.table.handoffs_inflight() > 0 {
+                continue;
+            }
+            self.hub.remove_endpoint(pid);
+            if let Some(h) = self.slots[pid].take() {
+                let _ = h.ctrl.send(Ctrl::Shutdown);
+                let _ = h.handle.join();
+            }
+            self.table.set_liveness(pid, PidState::Retired);
+            states[pid] = PidState::Retired;
+            // the slot's published share is authoritatively zero now
+            self.state.publish(pid, 0.0);
+            self.stats.retired += 1;
+            self.stats.live -= 1;
+            self.metrics.incr("pool_retired");
+            self.metrics.set("pool_live", self.stats.live as u64);
+            acted = true;
+        }
+        acted
+    }
+
+    /// Update per-slot idle clocks: idle = no updates this window AND no
+    /// published backlog. A fluid-starved worker is idle, not slow — the
+    /// same distinction `plan_rebalance` draws, inverted.
+    fn track_idleness(&mut self, states: &[PidState], deltas: &[u64], backlog: &[f64]) {
+        let es = self.elastic.as_mut().unwrap();
+        let tol = self.cfg.tol;
+        for pid in 0..es.idle_since.len() {
+            let live = states.get(pid) == Some(&PidState::Live);
+            let idle = live && deltas[pid] == 0 && backlog[pid] <= tol;
+            if !idle {
+                es.idle_since[pid] = None;
+            } else if es.idle_since[pid].is_none() {
+                es.idle_since[pid] = Some(Instant::now());
+            }
+        }
+    }
+
+    /// The straggler criterion over live, occupied parts (vacant slots
+    /// must not drag the median down): lowest per-coordinate rate below
+    /// spawn_threshold × median, holding fluid, big enough to split.
+    /// Also returns the fastest live peer (the shed target at capacity).
+    fn pick_straggler(
+        &self,
+        states: &[PidState],
+        deltas: &[u64],
+        backlog: &[f64],
+        k: usize,
+    ) -> Option<(usize, Option<usize>)> {
+        let es = self.elastic.as_ref().unwrap();
+        let part = self.table.partition();
+        let mut rates: Vec<(usize, f64)> = Vec::new();
+        for pid in 0..k {
+            if states.get(pid) != Some(&PidState::Live) || part.part(pid).is_empty() {
+                continue;
+            }
+            rates.push((pid, deltas[pid] as f64 / part.part(pid).len() as f64));
+        }
+        if rates.len() < 2 {
+            return None;
+        }
+        let mut sorted: Vec<f64> = rates.iter().map(|r| r.1).collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[rates.len() / 2];
+        if median <= 0.0 {
+            return None;
+        }
+        let &(slowest, slow_rate) = rates
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+        // same idle floor as track_idleness: a worker whose residual is
+        // below tol is starved/drained, not slow — a window with zero
+        // updates and ~1e-14 backlog must not read as a straggler
+        if slow_rate >= es.cfg.spawn_threshold * median
+            || backlog[slowest] <= self.cfg.tol
+            || part.part(slowest).len() < 2 * es.cfg.min_part
+        {
+            return None;
+        }
+        let fastest = rates
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|r| r.0)
+            .filter(|&f| f != slowest);
+        Some((slowest, fastest))
+    }
+
+    /// The retire criterion: the longest-idle live worker past the
+    /// policy window, absorbed by the busiest other live worker (its
+    /// demonstrated capacity makes it the cheapest place to park an
+    /// already-drained Ω).
+    fn pick_retire(&self, states: &[PidState], deltas: &[u64]) -> Option<(usize, usize)> {
+        let es = self.elastic.as_ref().expect("elastic poll only");
+        let now = Instant::now();
+        let retiree = (0..es.idle_since.len())
+            .filter(|&p| states.get(p) == Some(&PidState::Live))
+            .filter_map(|p| {
+                es.idle_since[p]
+                    .filter(|t| now.duration_since(*t) >= es.cfg.retire_idle)
+                    .map(|t| (p, t))
+            })
+            .min_by_key(|&(_, t)| t)
+            .map(|(p, _)| p)?;
+        let absorber = (0..states.len())
+            .filter(|&p| p != retiree && states[p] == PidState::Live)
+            .max_by_key(|&p| deltas.get(p).copied().unwrap_or(0))?;
+        Some((retiree, absorber))
+    }
+
+    /// Spawn a new live worker and hand it the cut-aware half of
+    /// `from`'s Ω. Public so tests (and future policies) can drive the
+    /// mechanics directly; the policy path is [`WorkerPool::poll`].
+    pub fn spawn_split(&mut self, from: usize) -> Result<usize> {
+        let cap = self.state.capacity();
+        // prefer reusing a retired slot; else append, bounded by capacity
+        let states = self.table.liveness_states();
+        let vacant = states.iter().position(|s| *s == PidState::Retired);
+        let pid = match vacant {
+            Some(p) => p,
+            None => {
+                let p = self.slots.len();
+                if p >= cap {
+                    return Err(DiterError::Coordinator(format!(
+                        "worker pool at capacity ({cap})"
+                    )));
+                }
+                p
+            }
+        };
+        // 1. the mailbox must exist before any ownership map routes
+        //    fluid at the new PID
+        let ep = self.hub.add_endpoint(pid)?;
+        // 2. widen the table (new slots pre-acked ⇒ quiescence stays
+        //    sound while the worker boots) and give the partition a
+        //    vacant part for the PID if it does not have one yet
+        if pid >= self.table.width() {
+            self.table.grow(pid + 1);
+        } else {
+            self.table.reactivate(pid);
+        }
+        let part = self.table.partition();
+        if pid >= part.k() {
+            let grown = part.with_k(pid + 1)?;
+            if self.table.install_elastic(grown).is_none() {
+                // frozen mid-spawn cannot happen from the poll path (the
+                // engine freezes only on its own thread), but fail safe:
+                // withdraw the endpoint and report
+                self.hub.remove_endpoint(pid);
+                self.table.set_liveness(pid, PidState::Retired);
+                return Err(DiterError::Coordinator("table frozen during spawn".into()));
+            }
+        }
+        // 3. start the worker: empty Ω, current epoch
+        let handle = self.spawn_thread(ep);
+        if pid == self.slots.len() {
+            self.slots.push(Some(handle));
+        } else {
+            self.slots[pid] = Some(handle);
+        }
+        // 4. route the straggler's half at it — the handoff machinery
+        //    does the rest
+        let part = self.table.partition();
+        let coords = choose_shed_half(&part, from, pid, Some(self.problem.matrix()));
+        let next = part.transfer_elastic(&coords, pid)?;
+        if self.table.install_elastic(next).is_none() {
+            return Err(DiterError::Coordinator("table frozen during spawn".into()));
+        }
+        if let Some(es) = self.elastic.as_mut() {
+            es.ops += 1;
+        }
+        self.stats.spawned += 1;
+        self.stats.live += 1;
+        self.stats.peak_live = self.stats.peak_live.max(self.stats.live);
+        self.metrics.incr("pool_spawned");
+        self.metrics.set("pool_live", self.stats.live as u64);
+        self.metrics.set("pool_peak_live", self.stats.peak_live as u64);
+        Ok(pid)
+    }
+
+    /// Begin retiring `pid`: move its whole Ω to `absorber` and mark it
+    /// Draining. The retirement completes asynchronously in
+    /// [`WorkerPool::poll`] (or [`WorkerPool::settle`]) once the drain
+    /// quiesced. Public for tests and direct policy drivers.
+    pub fn retire(&mut self, pid: usize, absorber: usize) -> bool {
+        if pid == absorber || self.slots.get(pid).map(Option::is_none).unwrap_or(true) {
+            return false;
+        }
+        let part = self.table.partition();
+        let coords = part.part(pid).to_vec();
+        let Ok(next) = part.transfer_elastic(&coords, absorber) else {
+            return false;
+        };
+        self.table.set_liveness(pid, PidState::Draining);
+        if self.table.install_elastic(next).is_none() {
+            self.table.set_liveness(pid, PidState::Live);
+            return false;
+        }
+        if let Some(es) = self.elastic.as_mut() {
+            es.ops += 1;
+            es.idle_since[pid] = None;
+        }
+        true
+    }
+
+    /// Drive pending lifecycle transitions to completion (bounded wait).
+    /// Used by tests and by engines that must quiesce the pool outside
+    /// the poll loop.
+    pub fn settle(&mut self, deadline: Duration) -> bool {
+        let until = Instant::now() + deadline;
+        loop {
+            let mut states = self.table.liveness_states();
+            self.promote_spawning(&mut states);
+            self.complete_draining(&mut states);
+            if !states
+                .iter()
+                .any(|s| matches!(s, PidState::Spawning | PidState::Draining))
+            {
+                return true;
+            }
+            if Instant::now() >= until {
+                return false;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    /// Shed half of `from`'s Ω to `to` on the fixed pool (at capacity).
+    fn shed(&mut self, from: usize, to: usize) -> bool {
+        let part = self.table.partition();
+        let coords = choose_shed_half(&part, from, to, Some(self.problem.matrix()));
+        let Ok(next) = part.transfer_elastic(&coords, to) else {
+            return false;
+        };
+        if self.table.install_elastic(next).is_none() {
+            return false;
+        }
+        if let Some(es) = self.elastic.as_mut() {
+            es.ops += 1;
+        }
+        self.stats.sheds += 1;
+        self.metrics.set("handoffs_planned", self.stats.sheds);
+        true
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // dropping the control senders terminates the worker loops; the
+        // threads unwind on their own (finish() joins them explicitly)
+        for slot in self.slots.iter().flatten() {
+            let _ = slot.ctrl.send(Ctrl::Shutdown);
+        }
+    }
+}
+
+/// One persistent PID worker: the shared core plus pool control. Exits
+/// on `Ctrl::Shutdown`, a disconnected control channel, or the monitor's
+/// stop flag (the one-shot engines stop the whole pool at once).
+struct PoolWorker {
+    core: WorkerCore,
+    ctrl: Receiver<Ctrl>,
+    state: Arc<MonitorState>,
+}
+
+impl PoolWorker {
+    fn run(mut self) -> (Vec<usize>, Vec<f64>) {
+        loop {
+            if self.state.should_stop() {
+                break;
+            }
+            match self.ctrl.try_recv() {
+                Ok(c) => {
+                    if !self.handle_ctrl(c) {
+                        break;
+                    }
+                    continue; // drain further control messages first
+                }
+                Err(TryRecvError::Empty) => {}
+                Err(TryRecvError::Disconnected) => break,
+            }
+            let (got_fluid, r_k) = self.core.step();
+            if !got_fluid && r_k == 0.0 && self.core.is_drained() {
+                std::thread::sleep(Duration::from_micros(50));
+            }
+        }
+        self.core.finish()
+    }
+
+    fn reply_state(&self, reply: &Sender<(usize, Vec<usize>, Vec<f64>)>) {
+        let _ = reply.send((
+            self.core.pid(),
+            self.core.owned().to_vec(),
+            self.core.h().to_vec(),
+        ));
+    }
+
+    /// Returns false when the worker must terminate.
+    fn handle_ctrl(&mut self, c: Ctrl) -> bool {
+        match c {
+            Ctrl::Snapshot { reply } => {
+                self.reply_state(&reply);
+                true
+            }
+            Ctrl::Shutdown => false,
+            Ctrl::Checkpoint { reply } => {
+                self.reply_state(&reply);
+                // paused: block until the coordinator resumes us
+                loop {
+                    match self.ctrl.recv() {
+                        Ok(Ctrl::Resume {
+                            epoch,
+                            problem,
+                            f_slice,
+                            dirty,
+                        }) => {
+                            self.core.enter_epoch(
+                                epoch,
+                                problem,
+                                f_slice,
+                                dirty.as_ref().map(|d| d.as_slice()),
+                            );
+                            return true;
+                        }
+                        Ok(Ctrl::Snapshot { reply }) | Ok(Ctrl::Checkpoint { reply }) => {
+                            self.reply_state(&reply);
+                        }
+                        Ok(Ctrl::Shutdown) | Err(_) => return false,
+                    }
+                }
+            }
+            Ctrl::Resume {
+                epoch,
+                problem,
+                f_slice,
+                dirty,
+            } => {
+                // resume without a checkpoint (defensive: coordinator
+                // always checkpoints first, but the transition is safe
+                // from any state)
+                self.core.enter_epoch(
+                    epoch,
+                    problem,
+                    f_slice,
+                    dirty.as_ref().map(|d| d.as_slice()),
+                );
+                true
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{pagerank_system, power_law_web_graph};
+    use crate::linalg::vec_ops::norm1;
+    use crate::partition::Partition;
+
+    fn pagerank_problem(n: usize, seed: u64) -> Arc<FixedPointProblem> {
+        let g = power_law_web_graph(n, 5, 0.1, seed);
+        let sys = pagerank_system(&g, 0.85, true).unwrap();
+        Arc::new(FixedPointProblem::new(sys.matrix.clone(), sys.b.clone()).unwrap())
+    }
+
+    fn gather(pairs: &[(usize, Vec<usize>, Vec<f64>)], n: usize) -> Vec<f64> {
+        let mut x = vec![0.0; n];
+        for (_, coords, vals) in pairs {
+            for (t, &i) in coords.iter().enumerate() {
+                x[i] = vals[t];
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn pool_spawn_and_retire_lifecycle() {
+        let n = 60;
+        let problem = pagerank_problem(n, 3);
+        let cfg = DistributedConfig::new(Partition::contiguous(n, 2).unwrap())
+            .with_tol(1e-10)
+            .with_seed(3)
+            .with_elastic(ElasticConfig {
+                max_workers: 4,
+                ..Default::default()
+            });
+        let mut pool = WorkerPool::new(problem, cfg).unwrap();
+        assert_eq!(pool.live_pids(), vec![0, 1]);
+        // live split: a third worker absorbs half of PID 0's Ω
+        let pid = pool.spawn_split(0).unwrap();
+        assert_eq!(pid, 2);
+        assert!(pool.settle(Duration::from_secs(5)), "spawn must settle");
+        assert_eq!(pool.table.liveness(2), PidState::Live);
+        assert_eq!(pool.stats().spawned, 1);
+        assert_eq!(pool.stats().live, 3);
+        let part = pool.table.partition();
+        assert_eq!(part.k(), 3);
+        assert!(!part.part(2).is_empty(), "the spawn took real ownership");
+        // live merge: retire it again, absorbed by PID 1
+        assert!(pool.retire(2, 1));
+        assert!(pool.settle(Duration::from_secs(5)), "retire must settle");
+        assert_eq!(pool.table.liveness(2), PidState::Retired);
+        assert_eq!(pool.stats().retired, 1);
+        assert_eq!(pool.stats().live, 2);
+        assert!(pool.table.partition().part(2).is_empty());
+        // respawn reuses the vacant slot
+        let pid = pool.spawn_split(1).unwrap();
+        assert_eq!(pid, 2, "retired slot is recycled");
+        assert!(pool.settle(Duration::from_secs(5)));
+        assert_eq!(pool.stats().live, 3);
+        // the exact cover survived the whole dance, and so did the fluid:
+        // let the diffusion run out, then the gathered solution is the
+        // fixed point with unit mass
+        let state = pool.state().clone();
+        let mon = pool.monitor();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let total = state.published_total() + mon.inflight_or_zero();
+            if (total < 1e-10 && mon.undelivered() == 0) || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(300));
+        }
+        state.request_stop();
+        let pairs = pool.finish().unwrap();
+        let mut x = vec![0.0; n];
+        let mut covered = 0;
+        for (owned, vals) in &pairs {
+            for (t, &i) in owned.iter().enumerate() {
+                x[i] = vals[t];
+                covered += 1;
+            }
+        }
+        assert_eq!(covered, n, "exact cover after spawn/retire/respawn");
+        assert!(
+            (norm1(&x) - 1.0).abs() < 1e-7,
+            "PageRank mass conserved: ‖x‖₁ = {}",
+            norm1(&x)
+        );
+    }
+
+    #[test]
+    fn snapshot_covers_all_live_workers() {
+        let n = 40;
+        let problem = pagerank_problem(n, 9);
+        let cfg = DistributedConfig::new(Partition::contiguous(n, 3).unwrap())
+            .with_tol(1e-9)
+            .with_seed(9);
+        let pool = WorkerPool::new(problem, cfg).unwrap();
+        let pairs = pool.snapshot().unwrap();
+        assert_eq!(pairs.len(), 3);
+        let covered: usize = pairs.iter().map(|(_, c, _)| c.len()).sum();
+        assert_eq!(covered, n);
+        let _ = gather(&pairs, n);
+        pool.state().request_stop();
+        pool.finish().unwrap();
+    }
+}

@@ -44,15 +44,13 @@
 //! new-epoch fluid is ever lost and the monitor can never observe an
 //! under-count.
 
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::adaptive::AdaptiveDriver;
 use super::monitor::MonitorState;
+use super::pool::{PoolStats, WorkerPool};
 use super::update;
-use super::worker::{WorkerCore, WorkerMsg, WORKER_METRICS};
 use super::{DistributedConfig, DistributedSolution};
 use crate::error::{DiterError, Result};
 use crate::graph::{MutableDigraph, Mutation};
@@ -60,33 +58,7 @@ use crate::linalg::vec_ops::norm1;
 use crate::metrics::{ConvergenceTrace, MetricSet, RateMeter};
 use crate::partition::{OwnershipTable, Partition};
 use crate::solver::FixedPointProblem;
-use crate::transport::{bus_with_metrics, monitor_of, BusConfig, BusMonitor};
-
-/// Coordinator → worker control messages. Checkpoint/Snapshot replies
-/// carry `(pid, held coords, H slice)` — with live repartitioning the
-/// held range is dynamic, so the coordinates always travel with the data.
-enum Ctrl {
-    /// Pause, reply with the held range + H slice, wait for `Resume`.
-    Checkpoint {
-        reply: Sender<(usize, Vec<usize>, Vec<f64>)>,
-    },
-    /// New epoch: swap the matrix, reset the fluid slice, keep H.
-    /// `dirty` lists the matrix columns that changed since the previous
-    /// epoch (ascending) when the incremental build knows them — workers
-    /// patch their `LocalSystem` instead of rebuilding it.
-    Resume {
-        epoch: u64,
-        problem: Arc<FixedPointProblem>,
-        f_slice: Vec<f64>,
-        dirty: Option<Arc<Vec<usize>>>,
-    },
-    /// Non-pausing read of the held range + H (worker keeps running).
-    Snapshot {
-        reply: Sender<(usize, Vec<usize>, Vec<f64>)>,
-    },
-    /// Terminate; the final (Ω, H) comes back through the join handle.
-    Shutdown,
-}
+use crate::transport::BusMonitor;
 
 /// Report for one epoch (one mutation batch, or the initial solve).
 #[derive(Clone, Debug)]
@@ -113,21 +85,20 @@ pub struct StreamSummary {
     pub steady_updates_per_sec: f64,
 }
 
-/// The streaming engine: owns the evolving graph, the persistent V2
-/// workers, the versioned ownership table, and the epoch protocol.
+/// The streaming engine: owns the evolving graph, the worker pool (the
+/// persistent V2 workers behind their versioned ownership table), and
+/// the epoch protocol.
 pub struct StreamingEngine {
     graph: MutableDigraph,
     damping: f64,
     patch_dangling: bool,
     cfg: DistributedConfig,
-    k: usize,
+    pool: WorkerPool,
     table: Arc<OwnershipTable>,
     problem: Arc<FixedPointProblem>,
     shared: Arc<MonitorState>,
     bus_mon: BusMonitor,
     bus_metrics: Arc<MetricSet>,
-    ctrl: Vec<Sender<Ctrl>>,
-    handles: Vec<JoinHandle<(Vec<usize>, Vec<f64>)>>,
     driver: Option<AdaptiveDriver>,
     epoch: u64,
     /// per-PID update counters at the current epoch's start
@@ -156,56 +127,36 @@ impl StreamingEngine {
         let sys = graph.pagerank_system(damping, patch_dangling)?;
         let problem = Arc::new(FixedPointProblem::new(sys.matrix, sys.b)?);
         let k = cfg.partition.k();
-        let shared = MonitorState::new(k);
-        let (endpoints, bus_metrics) = bus_with_metrics::<WorkerMsg>(
-            k,
-            &BusConfig {
-                latency: cfg.latency,
-                seed: cfg.seed,
-            },
-            WORKER_METRICS,
-        );
-        let bus_mon = monitor_of(&endpoints[0]);
-        let table = OwnershipTable::new(cfg.partition.clone());
-        let driver = cfg
-            .adaptive
-            .as_ref()
-            .map(|a| AdaptiveDriver::new(a, k, cfg.tol));
-
-        let mut ctrl = Vec::with_capacity(k);
-        let mut handles = Vec::with_capacity(k);
-        for (kk, ep) in endpoints.into_iter().enumerate() {
-            let (tx, rx) = channel::<Ctrl>();
-            ctrl.push(tx);
-            let worker = StreamWorker {
-                core: WorkerCore::new(
-                    kk,
-                    ep,
-                    problem.clone(),
-                    table.clone(),
-                    shared.clone(),
-                    cfg.clone(),
-                ),
-                ctrl: rx,
-            };
-            handles.push(std::thread::spawn(move || worker.run()));
-        }
+        // the elastic pool subsumes the shed-only driver: its scheduler
+        // sheds to the fastest peer once it is out of spawn headroom, and
+        // the driver's fixed-K window state cannot follow a growing pool
+        let driver = if cfg.elastic.is_some() {
+            None
+        } else {
+            cfg.adaptive
+                .as_ref()
+                .map(|a| AdaptiveDriver::new(a, k, cfg.tol))
+        };
+        let pool = WorkerPool::new(problem.clone(), cfg.clone())?;
+        let table = pool.table().clone();
+        let shared = pool.state().clone();
+        let bus_mon = pool.monitor();
+        let bus_metrics = pool.metrics().clone();
+        let epoch_base = shared.update_counts();
         Ok(StreamingEngine {
             graph,
             damping,
             patch_dangling,
             cfg,
-            k,
+            pool,
             table,
             problem,
             shared,
             bus_mon,
             bus_metrics,
-            ctrl,
-            handles,
             driver,
             epoch: 0,
-            epoch_base: vec![0; k],
+            epoch_base,
             epochs_done: 0,
             mutations_applied: 0,
             rate: RateMeter::new(0.4),
@@ -236,6 +187,11 @@ impl StreamingEngine {
     /// Ownership handoffs shipped so far.
     pub fn handoffs_total(&self) -> u64 {
         self.table.handoffs_total()
+    }
+
+    /// Elastic pool lifecycle counters (all zero on a fixed pool).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
     }
 
     /// Per-PID cumulative scalar-update counts.
@@ -297,6 +253,10 @@ impl StreamingEngine {
                     Some(self.problem.matrix()),
                 );
             }
+            // the elastic scheduler: spawn for stragglers, retire the
+            // idle — lifecycle transitions run between polls while the
+            // diffusion continues (no-op on a fixed pool)
+            self.pool.poll(total);
             // quiescence needs every sent parcel applied or discarded —
             // stashed future-epoch parcels stay uncommitted, so a rebase
             // racing this check can never fake convergence; the same
@@ -351,17 +311,10 @@ impl StreamingEngine {
     }
 
     /// Shut the workers down and return the whole-run summary.
-    pub fn finish(mut self) -> Result<StreamSummary> {
-        for tx in &self.ctrl {
-            let _ = tx.send(Ctrl::Shutdown);
-        }
-        self.ctrl.clear();
+    pub fn finish(self) -> Result<StreamSummary> {
         let n = self.problem.n();
         let mut x = vec![0.0; n];
-        for h in self.handles.drain(..) {
-            let (owned, values) = h
-                .join()
-                .map_err(|_| DiterError::Coordinator("stream worker panicked".into()))?;
+        for (owned, values) in self.pool.finish()? {
             for (t, &i) in owned.iter().enumerate() {
                 x[i] = values[t];
             }
@@ -403,6 +356,8 @@ impl StreamingEngine {
     /// per-PID rebase → resume. See the module docs for the invariants.
     fn rebase(&mut self) -> Result<()> {
         // no ownership installs while the epoch transition is in progress
+        // (this also parks the elastic scheduler: its poll is a no-op on
+        // a frozen table, so no spawn/retire can straddle the rebase)
         self.table.freeze();
         let r = self.rebase_frozen();
         self.table.unfreeze();
@@ -428,21 +383,16 @@ impl StreamingEngine {
             }
             std::thread::sleep(Duration::from_micros(100));
         }
-        // 2. checkpoint every worker (they pause as the requests land;
-        //    workers still running only produce old-epoch parcels, which
-        //    the new epoch discards on arrival)
-        let (tx, rx) = channel::<(usize, Vec<usize>, Vec<f64>)>();
-        for c in &self.ctrl {
-            c.send(Ctrl::Checkpoint { reply: tx.clone() })
-                .map_err(|_| DiterError::Coordinator("stream worker gone".into()))?;
-        }
-        drop(tx);
+        // 2. checkpoint every live worker (they pause as the requests
+        //    land; workers still running only produce old-epoch parcels,
+        //    which the new epoch discards on arrival). With an elastic
+        //    pool the worker set is whatever survived spawn/retire — the
+        //    replies carry the coords, and the quiesce above guarantees
+        //    they form an exact cover.
+        let checkpointed = self.pool.checkpoint()?;
         let mut h = vec![0.0; n];
-        let mut held: Vec<(usize, Vec<usize>)> = Vec::with_capacity(self.k);
-        for _ in 0..self.k {
-            let (kk, coords, slice) = rx
-                .recv_timeout(Duration::from_secs(30))
-                .map_err(|_| DiterError::Coordinator("checkpoint reply timed out".into()))?;
+        let mut held: Vec<(usize, Vec<usize>)> = Vec::with_capacity(checkpointed.len());
+        for (kk, coords, slice) in checkpointed {
             for (t, &i) in coords.iter().enumerate() {
                 h[i] = slice[t];
             }
@@ -459,19 +409,14 @@ impl StreamingEngine {
         let problem = Arc::new(FixedPointProblem::new(sys.matrix, sys.b)?);
         // 4. per-PID rebase over each worker's held range + resume
         self.epoch += 1;
+        let mut slices = Vec::with_capacity(held.len());
         for (kk, coords) in held {
             let f_slice = update::rebase_b_slice(problem.matrix(), &coords, &h, problem.b());
             // pre-publish so the monitor can't see a stale near-zero total
             self.shared.publish(kk, norm1(&f_slice));
-            self.ctrl[kk]
-                .send(Ctrl::Resume {
-                    epoch: self.epoch,
-                    problem: problem.clone(),
-                    f_slice,
-                    dirty: dirty.clone(),
-                })
-                .map_err(|_| DiterError::Coordinator("stream worker gone".into()))?;
+            slices.push((kk, f_slice));
         }
+        self.pool.resume(self.epoch, problem.clone(), slices, dirty)?;
         self.problem = problem;
         self.epoch_base = self.shared.update_counts();
         Ok(())
@@ -483,8 +428,9 @@ impl StreamingEngine {
         // best-effort quiesce: a handoff slice in flight is held by
         // neither worker, so snapshotting mid-migration would read zeros
         // for the moving range. No installs can race this (the adaptive
-        // driver runs on this same thread), so waiting terminates; the
-        // deadline only guards against a wedged worker.
+        // driver and the pool scheduler run on this same thread), so
+        // waiting terminates; the deadline only guards against a wedged
+        // worker.
         let v = self.table.version();
         let quiesce_deadline = Instant::now() + Duration::from_secs(2);
         while !(self.table.all_acked(v) && self.table.handoffs_inflight() == 0)
@@ -492,122 +438,13 @@ impl StreamingEngine {
         {
             std::thread::sleep(Duration::from_micros(100));
         }
-        let (tx, rx) = channel::<(usize, Vec<usize>, Vec<f64>)>();
-        for c in &self.ctrl {
-            c.send(Ctrl::Snapshot { reply: tx.clone() })
-                .map_err(|_| DiterError::Coordinator("stream worker gone".into()))?;
-        }
-        drop(tx);
         let mut x = vec![0.0; n];
-        for _ in 0..self.k {
-            let (_kk, coords, slice) = rx
-                .recv_timeout(Duration::from_secs(30))
-                .map_err(|_| DiterError::Coordinator("snapshot reply timed out".into()))?;
+        for (_kk, coords, slice) in self.pool.snapshot()? {
             for (t, &i) in coords.iter().enumerate() {
                 x[i] = slice[t];
             }
         }
         Ok(x)
-    }
-}
-
-impl Drop for StreamingEngine {
-    fn drop(&mut self) {
-        // dropping the control senders terminates the worker loops; the
-        // threads unwind on their own (finish() joins them explicitly)
-        for tx in &self.ctrl {
-            let _ = tx.send(Ctrl::Shutdown);
-        }
-    }
-}
-
-/// One persistent PID worker: the shared core plus epoch control.
-struct StreamWorker {
-    core: WorkerCore,
-    ctrl: Receiver<Ctrl>,
-}
-
-impl StreamWorker {
-    fn run(mut self) -> (Vec<usize>, Vec<f64>) {
-        loop {
-            match self.ctrl.try_recv() {
-                Ok(c) => {
-                    if !self.handle_ctrl(c) {
-                        break;
-                    }
-                    continue; // drain further control messages first
-                }
-                Err(TryRecvError::Empty) => {}
-                Err(TryRecvError::Disconnected) => break,
-            }
-            let (got_fluid, r_k) = self.core.step();
-            if !got_fluid && r_k == 0.0 && self.core.is_drained() {
-                std::thread::sleep(Duration::from_micros(50));
-            }
-        }
-        self.core.finish()
-    }
-
-    fn reply_state(&self, reply: &Sender<(usize, Vec<usize>, Vec<f64>)>) {
-        let _ = reply.send((
-            self.core.pid(),
-            self.core.owned().to_vec(),
-            self.core.h().to_vec(),
-        ));
-    }
-
-    /// Returns false when the worker must terminate.
-    fn handle_ctrl(&mut self, c: Ctrl) -> bool {
-        match c {
-            Ctrl::Snapshot { reply } => {
-                self.reply_state(&reply);
-                true
-            }
-            Ctrl::Shutdown => false,
-            Ctrl::Checkpoint { reply } => {
-                self.reply_state(&reply);
-                // paused: block until the coordinator resumes us
-                loop {
-                    match self.ctrl.recv() {
-                        Ok(Ctrl::Resume {
-                            epoch,
-                            problem,
-                            f_slice,
-                            dirty,
-                        }) => {
-                            self.core.enter_epoch(
-                                epoch,
-                                problem,
-                                f_slice,
-                                dirty.as_ref().map(|d| d.as_slice()),
-                            );
-                            return true;
-                        }
-                        Ok(Ctrl::Snapshot { reply }) | Ok(Ctrl::Checkpoint { reply }) => {
-                            self.reply_state(&reply);
-                        }
-                        Ok(Ctrl::Shutdown) | Err(_) => return false,
-                    }
-                }
-            }
-            Ctrl::Resume {
-                epoch,
-                problem,
-                f_slice,
-                dirty,
-            } => {
-                // resume without a checkpoint (defensive: coordinator
-                // always checkpoints first, but the transition is safe
-                // from any state)
-                self.core.enter_epoch(
-                    epoch,
-                    problem,
-                    f_slice,
-                    dirty.as_ref().map(|d| d.as_slice()),
-                );
-                true
-            }
-        }
     }
 }
 

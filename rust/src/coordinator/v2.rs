@@ -25,16 +25,16 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use super::adaptive::AdaptiveDriver;
-use super::monitor::{run_monitor_with, MonitorState};
-use super::worker::{WorkerCore, WorkerMsg, WORKER_METRICS};
+use super::monitor::run_monitor_with;
+use super::pool::WorkerPool;
 use super::{DistributedConfig, DistributedSolution};
 use crate::error::{DiterError, Result};
 use crate::metrics::ConvergenceTrace;
-use crate::partition::OwnershipTable;
 use crate::solver::{FixedPointProblem, SequenceKind};
-use crate::transport::{bus_with_metrics, monitor_of, BusConfig};
 
-/// Solve with the V2 scheme.
+/// Solve with the V2 scheme. The worker lifecycle lives in the shared
+/// [`WorkerPool`]; with `cfg.elastic` set, the pool's scheduler spawns
+/// and retires PIDs while this solve is in progress.
 pub fn solve_v2(
     problem: &FixedPointProblem,
     cfg: &DistributedConfig,
@@ -44,37 +44,21 @@ pub fn solve_v2(
         return Err(DiterError::shape("solve_v2 partition", n, cfg.partition.n()));
     }
     let k = cfg.partition.k();
-    let state = MonitorState::new(k);
-    let (endpoints, bus_metrics) = bus_with_metrics::<WorkerMsg>(
-        k,
-        &BusConfig {
-            latency: cfg.latency,
-            seed: cfg.seed,
-        },
-        WORKER_METRICS,
-    );
-    let bus_mon = monitor_of(&endpoints[0]);
     let problem = Arc::new(problem.clone());
-    let table = OwnershipTable::new(cfg.partition.clone());
+    let mut pool = WorkerPool::new(problem.clone(), cfg.clone())?;
+    let state = pool.state().clone();
+    let table = pool.table().clone();
+    let bus_mon = pool.monitor();
+    let bus_metrics = pool.metrics().clone();
 
-    let mut handles = Vec::with_capacity(k);
-    for (kk, ep) in endpoints.into_iter().enumerate() {
-        let core = WorkerCore::new(
-            kk,
-            ep,
-            problem.clone(),
-            table.clone(),
-            state.clone(),
-            cfg.clone(),
-        );
-        let state = state.clone();
-        handles.push(std::thread::spawn(move || v2_worker(core, &state)));
-    }
-
-    let mut driver = cfg
-        .adaptive
-        .as_ref()
-        .map(|a| AdaptiveDriver::new(a, k, cfg.tol));
+    // the elastic pool subsumes the shed-only driver (see its scheduler)
+    let mut driver = if cfg.elastic.is_some() {
+        None
+    } else {
+        cfg.adaptive
+            .as_ref()
+            .map(|a| AdaptiveDriver::new(a, k, cfg.tol))
+    };
     let (converged_mon, trace, wall) = run_monitor_with(
         &state,
         &bus_mon,
@@ -94,14 +78,12 @@ pub fn solve_v2(
                     Some(problem.matrix()),
                 );
             }
+            pool.poll(total);
         },
     );
 
     let mut x = vec![0.0; n];
-    for h in handles {
-        let (owned, values) = h
-            .join()
-            .map_err(|_| DiterError::Coordinator("V2 worker panicked".into()))?;
+    for (owned, values) in pool.finish()? {
         for (t, &i) in owned.iter().enumerate() {
             x[i] = values[t];
         }
@@ -122,23 +104,6 @@ pub fn solve_v2(
 fn relabel(mut t: ConvergenceTrace, name: &str) -> ConvergenceTrace {
     t.name = name.to_string();
     t
-}
-
-/// One PID's work loop: the shared [`WorkerCore`] driven until the leader
-/// raises the stop flag. Local state is strictly the held slice.
-fn v2_worker(mut core: WorkerCore, state: &MonitorState) -> (Vec<usize>, Vec<f64>) {
-    loop {
-        if state.should_stop() {
-            break;
-        }
-        let (got_fluid, r_k) = core.step();
-        if !got_fluid && r_k == 0.0 && core.is_drained() {
-            std::thread::sleep(Duration::from_micros(50));
-        }
-    }
-    // final drain so neither fluid accounting nor in-flight handoff
-    // history is stranded in our inbox
-    core.finish()
 }
 
 /// Sequence kinds that make sense for V2 (greedy reads local fluid, which

@@ -71,6 +71,14 @@ pub const WORKER_METRICS: &[&str] = &[
     "load_imbalance_ppm", // current max Ω size / ideal × 1e6 (gauge)
 ];
 
+/// Ownership patches applied to a LocalSystem before the next full
+/// rebuild. The delta paths (shed/adopt/retarget) skip the coalesce-
+/// interner compaction — cached accumulator slots must stay valid — so a
+/// periodic full rebuild bounds the interner's accretion under churn to
+/// O(coords routed per window), the same bound the pre-patch code had
+/// per ownership event.
+const PATCHES_PER_REBUILD: u32 = 64;
+
 /// Everything that travels between PIDs: the fluid data plane plus the
 /// repartitioning control plane.
 #[derive(Clone, Debug)]
@@ -140,7 +148,9 @@ pub struct WorkerCore {
     absorb_eps: f64,
     /// future-epoch parcels held uncommitted until the epoch catches up
     pending: Vec<Received<WorkerMsg>>,
-    /// exit path: fold incoming handoffs but never ship onward
+    /// ownership patches since the last full LocalSystem rebuild
+    patches: u32,
+    /// exit path: fold incoming handoffs but never migrate ownership
     shutting_down: bool,
 }
 
@@ -206,6 +216,7 @@ impl WorkerCore {
             threshold,
             absorb_eps,
             pending: Vec::new(),
+            patches: 0,
             shutting_down: false,
         };
         core.rebuild_local();
@@ -316,8 +327,10 @@ impl WorkerCore {
         if outgoing.is_empty() {
             // the remnant's destination routing is stale whenever the
             // owner map moved (even a peer-to-peer transfer we are not
-            // part of): rebuild before the next quantum
-            if version_moved {
+            // part of): re-route it in place (cheap O(remnant) sweep)
+            // before the next quantum, rebuilding only when the patch
+            // budget ran out
+            if version_moved && !self.patch_local_retarget() {
                 self.rebuild_local();
             }
             self.table.ack_version(self.k, v);
@@ -372,6 +385,8 @@ impl WorkerCore {
 
     /// Drop the shipped slots and rebuild the local index structures.
     fn compact(&mut self, shipped: &[bool]) {
+        // patch the LocalSystem off the OLD owned set before compacting it
+        let patched = self.patch_local_shed(shipped);
         let mut owned = Vec::with_capacity(self.owned.len());
         let mut h = Vec::with_capacity(self.h.len());
         let mut f = Vec::with_capacity(self.f.len());
@@ -391,7 +406,75 @@ impl WorkerCore {
             self.local_of[i] = t;
         }
         self.rebuild_order();
-        self.rebuild_local();
+        if !patched {
+            self.rebuild_local();
+        }
+    }
+
+    /// Incremental shed (ROADMAP's `patch_handoff`): splice the shipped
+    /// columns out of the LocalSystem instead of re-extracting the whole
+    /// owned range from the global CSC. Returns false when the caller
+    /// must fall back to a full rebuild (global kernel, no system built
+    /// yet, or the patch budget bounding interner accretion ran out).
+    fn patch_local_shed(&mut self, shipped: &[bool]) -> bool {
+        if self.cfg.kernel != KernelKind::LocalBlock || self.patches >= PATCHES_PER_REBUILD {
+            return false;
+        }
+        let Some(local) = self.local.as_mut() else {
+            return false;
+        };
+        let mut new_slot = vec![u32::MAX; shipped.len()];
+        let mut s = 0u32;
+        for (t, &sh) in shipped.iter().enumerate() {
+            if !sh {
+                new_slot[t] = s;
+                s += 1;
+            }
+        }
+        let coalesce = &mut self.coalesce;
+        local.shed(&self.owned, shipped, &new_slot, self.part.owners(), |d, j| {
+            coalesce.intern(d, j)
+        });
+        self.patches += 1;
+        true
+    }
+
+    /// Incremental adoption: append only the received columns (extracted
+    /// fresh) and flip remnant entries that now point at local slots.
+    fn patch_local_adopt(&mut self, added: &[usize]) -> bool {
+        if self.cfg.kernel != KernelKind::LocalBlock || self.patches >= PATCHES_PER_REBUILD {
+            return false;
+        }
+        if self.local.is_none() {
+            return false;
+        }
+        let csc = self.problem.matrix().csc();
+        let local = self.local.as_mut().expect("checked above");
+        let coalesce = &mut self.coalesce;
+        local.adopt(csc, added, &self.local_of, self.part.owners(), |d, j| {
+            coalesce.intern(d, j)
+        });
+        self.patches += 1;
+        true
+    }
+
+    /// Incremental re-route after a peer-to-peer move (no columns of ours
+    /// changed — only remnant destinations).
+    fn patch_local_retarget(&mut self) -> bool {
+        if self.cfg.kernel != KernelKind::LocalBlock || self.patches >= PATCHES_PER_REBUILD {
+            return false;
+        }
+        let Some(local) = self.local.as_mut() else {
+            return false;
+        };
+        let coalesce = &mut self.coalesce;
+        let ok = local.retarget(&self.local_of, self.part.owners(), |d, j| {
+            coalesce.intern(d, j)
+        });
+        if ok {
+            self.patches += 1;
+        }
+        ok
     }
 
     /// Rebuild the diffusion-order state after local slots were re-indexed
@@ -411,11 +494,15 @@ impl WorkerCore {
     /// set, matrix and owner map. Called handoff-atomically: always after
     /// the fold/compact completes, before the next diffusion quantum.
     fn rebuild_local(&mut self) {
-        // every ownership change lands here under BOTH kernels: the one
+        // every ownership REBUILD lands here under BOTH kernels: the one
         // safe point to drop stale accumulator slots (pending fluid is
         // preserved, and no cached slot survives this call — the local
         // kernel re-interns its whole remnant below, the global kernel
-        // caches none); without it the interner accretes under churn
+        // caches none). The incremental patch paths deliberately skip it
+        // (their cached slots must stay valid); PATCHES_PER_REBUILD
+        // forces a periodic pass through here so the interner cannot
+        // accrete unboundedly under churn.
+        self.patches = 0;
         self.coalesce.compact();
         if self.cfg.kernel != KernelKind::LocalBlock {
             return;
@@ -543,8 +630,10 @@ impl WorkerCore {
                     .all(|(&j, &b)| b == self.problem.b()[j]),
             "handoff b_slice disagrees with the shared problem"
         );
+        let mut adopted: Vec<usize> = Vec::with_capacity(ho.coords.len());
         for (s, &j) in ho.coords.iter().enumerate() {
             let t = if self.local_of[j] == usize::MAX {
+                adopted.push(j);
                 self.adopt(j)
             } else {
                 self.local_of[j]
@@ -557,7 +646,9 @@ impl WorkerCore {
             self.f[t] += add;
         }
         self.rebuild_order();
-        self.rebuild_local();
+        if !self.patch_local_adopt(&adopted) {
+            self.rebuild_local();
+        }
         // the range may already be reassigned onward: re-scan BEFORE
         // releasing the in-flight slot, so `handoffs_inflight` can never
         // dip to zero while coordinates are still migrating
@@ -682,14 +773,41 @@ impl WorkerCore {
     fn ship(&mut self, did_work: bool, r_k: f64) {
         let threshold_hit = did_work && r_k < self.threshold;
         let flush_all = threshold_hit || r_k < self.cfg.tol;
-        let epoch = self.epoch;
-        let ep = &mut self.ep;
-        self.coalesce.flush(flush_all, |dest, coords, mass, total| {
-            let bytes = coords.len() * 12 + 24;
-            let _ = ep.send(dest, WorkerMsg::Fluid { epoch, coords, mass }, total, bytes);
-        });
+        self.flush_coalesce(flush_all);
         if threshold_hit && self.threshold > self.cfg.tol * 1e-3 {
             self.threshold /= self.cfg.threshold_alpha;
+        }
+    }
+
+    /// Flush coalesced parcels to the bus. A parcel whose destination
+    /// endpoint is gone — a PID retired between our routing decision and
+    /// this flush — comes back from [`Endpoint::try_send`] and is
+    /// re-routed to the coordinates' **current** owners through the
+    /// authoritative table (never the cached snapshot, which is what
+    /// aimed at the dead PID in the first place). Fluid is never dropped.
+    fn flush_coalesce(&mut self, flush_all: bool) {
+        let epoch = self.epoch;
+        let ep = &mut self.ep;
+        let mut failed: Vec<(Vec<u32>, Vec<f64>)> = Vec::new();
+        self.coalesce.flush(flush_all, |dest, coords, mass, total| {
+            let bytes = coords.len() * 12 + 24;
+            if let Err(msg) = ep.try_send(dest, WorkerMsg::Fluid { epoch, coords, mass }, total, bytes)
+            {
+                if let WorkerMsg::Fluid { coords, mass, .. } = msg {
+                    failed.push((coords, mass));
+                }
+            }
+        });
+        if failed.is_empty() {
+            return;
+        }
+        let part = self.table.partition();
+        for (coords, mass) in failed {
+            for (u, &j) in coords.iter().enumerate() {
+                let j = j as usize;
+                self.coalesce.add(part.owner(j), j, mass[u]);
+            }
+            self.metrics.incr("fluid_forwarded");
         }
     }
 
@@ -788,16 +906,28 @@ impl WorkerCore {
 
     /// Exit path: stop migrating, fold any in-flight handoffs so no
     /// history is stranded on the bus, and return the held (Ω, H) pair.
+    ///
+    /// Data-plane fluid that arrives while draining is **re-routed, not
+    /// dropped**: a retiring worker is shut down mid-convergence, so a
+    /// parcel already in flight toward it (or buffered under a peer's
+    /// stale owner snapshot) still carries mass the run needs. Parcels
+    /// for coordinates we hold land in F; everything else forwards to the
+    /// current owner, published before the receipt commits so the
+    /// monitor's total errs high, never low, through the exit.
     pub fn finish(mut self) -> (Vec<usize>, Vec<f64>) {
         self.shutting_down = true;
         // Drain for a minimum grace window (catches slices shipped just
         // after the stop signal, before their begin_handoff was visible),
         // then keep draining while any handoff is still riding the bus —
-        // its H slice exists nowhere else. The hard deadline only guards
-        // against a peer that died without completing a send.
+        // its H slice exists nowhere else — or any delayed envelope is
+        // still ripening toward us (its mass is accounted; abandoning it
+        // would strand the in-flight account above zero forever). The
+        // hard deadline only guards against a peer that died without
+        // completing a send.
         let min_deadline = Instant::now() + Duration::from_millis(5);
         let hard_deadline = Instant::now() + Duration::from_secs(2);
         loop {
+            let mut touched = false;
             while let Some(msg) = self.ep.try_recv_uncommitted() {
                 let Received {
                     from,
@@ -805,19 +935,43 @@ impl WorkerCore {
                     mass,
                     payload,
                 } = msg;
-                if let WorkerMsg::Handoff(ho) = payload {
-                    self.apply_handoff(ho);
+                match payload {
+                    WorkerMsg::Handoff(ho) => {
+                        self.apply_handoff(ho);
+                        touched = true;
+                    }
+                    WorkerMsg::Fluid {
+                        epoch,
+                        coords,
+                        mass: amounts,
+                    } if epoch == self.epoch => {
+                        self.apply_parcels(&coords, &amounts);
+                        touched = true;
+                    }
+                    WorkerMsg::Fluid { .. } => {} // obsolete epoch: discard
                 }
+                // publish before the commit releases the in-flight mass,
+                // so each unit stays visible in at least one account
+                self.publish();
                 self.ep.commit(from, seq, mass);
+            }
+            if touched {
+                // forward whatever the re-routing put in the buffers
+                self.flush_coalesce(true);
+                self.publish();
             }
             self.ep.collect_acks();
             let now = Instant::now();
-            let quiesced = self.table.handoffs_inflight() == 0;
+            let quiesced =
+                self.table.handoffs_inflight() == 0 && self.ep.pending_delayed() == 0;
             if (now >= min_deadline && quiesced) || now >= hard_deadline {
                 break;
             }
             std::thread::sleep(Duration::from_micros(200));
         }
+        // last sweep: anything still buffered outbound goes onto the bus
+        self.flush_coalesce(true);
+        self.publish();
         if std::env::var_os("DITER_DEBUG").is_some() {
             let nonzero = self.f.iter().filter(|v| **v != 0.0).count();
             eprintln!(

@@ -18,7 +18,8 @@ use diter::bench_harness::{fmt_secs, Table};
 use diter::cli::{parse_args, usage, Args, OptSpec};
 use diter::configfile::Config;
 use diter::coordinator::{
-    v1, v2, AdaptiveConfig, AdaptivePolicy, DistributedConfig, KernelKind, StreamingEngine,
+    v1, v2, AdaptiveConfig, AdaptivePolicy, DistributedConfig, ElasticConfig, KernelKind,
+    StreamingEngine,
 };
 use diter::graph::{
     block_coupled_matrix, pagerank_system, paper_matrix, power_law_web_graph, ChurnModel,
@@ -435,6 +436,30 @@ fn stream_spec() -> Vec<OptSpec> {
             is_flag: false,
             default: Some("50000"),
         },
+        OptSpec {
+            name: "elastic",
+            help: "elastic worker pool: spawn/retire PIDs at runtime",
+            is_flag: true,
+            default: None,
+        },
+        OptSpec {
+            name: "max-workers",
+            help: "elastic pool: cap on concurrently-live workers",
+            is_flag: false,
+            default: Some("8"),
+        },
+        OptSpec {
+            name: "spawn-threshold",
+            help: "elastic pool: spawn when a PID falls below this x median rate",
+            is_flag: false,
+            default: Some("0.5"),
+        },
+        OptSpec {
+            name: "retire-idle-ms",
+            help: "elastic pool: retire a worker idle this long (ms)",
+            is_flag: false,
+            default: Some("250"),
+        },
     ]
 }
 
@@ -501,10 +526,29 @@ fn cmd_stream(argv: &[String]) -> CliResult {
             ..Default::default()
         });
     }
+    let elastic = args.has_flag("elastic");
+    if elastic {
+        let max_workers = args.get_usize("max-workers", 8)?;
+        if max_workers < k {
+            return Err(format!(
+                "--max-workers {max_workers} below the initial --pids {k}"
+            )
+            .into());
+        }
+        cfg = cfg.with_elastic(ElasticConfig {
+            max_workers,
+            spawn_threshold: args.get_f64("spawn-threshold", 0.5)?,
+            retire_idle: Duration::from_millis(args.get_u64("retire-idle-ms", 250)?),
+            interval: Duration::from_millis(args.get_u64("adapt-every-ms", 40)?),
+            min_part: args.get_usize("min-part", 2)?,
+            ..Default::default()
+        });
+    }
     let cold_cfg = {
         // the cold baseline is always a static, unthrottled solve
         let mut c = cfg.clone();
         c.adaptive = None;
+        c.elastic = None;
         c.straggler = None;
         c
     };
@@ -584,6 +628,7 @@ fn cmd_stream(argv: &[String]) -> CliResult {
     print!("{}", table.render());
     let ownership = engine.ownership();
     let update_counts = engine.update_counts();
+    let pool_stats = engine.pool_stats();
     let summary = engine.finish()?;
     println!(
         "\n{} epochs, {} mutations; steady-state {:.2e} upd/s; final residual {:.2e}",
@@ -607,6 +652,16 @@ fn cmd_stream(argv: &[String]) -> CliResult {
             "  ownership moved {} times ({} handoffs shipped)",
             moves.copied().unwrap_or(0),
             shipped.copied().unwrap_or(0)
+        );
+    }
+    if elastic {
+        println!(
+            "  pool: spawned {} retired {} sheds {} peak {} live {}",
+            pool_stats.spawned,
+            pool_stats.retired,
+            pool_stats.sheds,
+            pool_stats.peak_live,
+            pool_stats.live
         );
     }
     Ok(())

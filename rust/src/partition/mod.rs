@@ -30,6 +30,22 @@ pub struct Partition {
 impl Partition {
     /// Build from an explicit owner map.
     pub fn from_owner(owner: Vec<usize>, k: usize) -> Result<Partition> {
+        let p = Self::from_owner_elastic(owner, k)?;
+        for (kk, part) in p.parts.iter().enumerate() {
+            if part.is_empty() {
+                return Err(DiterError::InvalidPartition(format!("Ω_{kk} is empty")));
+            }
+        }
+        Ok(p)
+    }
+
+    /// Build from an explicit owner map, **allowing empty parts** — the
+    /// elastic worker pool's view, where a part index is a stable PID
+    /// slot that may be vacant (a retired worker) or not yet populated (a
+    /// spawning worker whose handoff has not landed). The classic
+    /// [`Partition::from_owner`] stays strict: the paper's Ω_1..Ω_K are
+    /// non-empty by construction.
+    pub fn from_owner_elastic(owner: Vec<usize>, k: usize) -> Result<Partition> {
         let n = owner.len();
         debug_assert!(n <= u32::MAX as usize, "coordinate space exceeds u32");
         let mut parts = vec![Vec::new(); k];
@@ -42,11 +58,6 @@ impl Partition {
             }
             slot[i] = parts[o].len() as u32;
             parts[o].push(i);
-        }
-        for (kk, p) in parts.iter().enumerate() {
-            if p.is_empty() {
-                return Err(DiterError::InvalidPartition(format!("Ω_{kk} is empty")));
-            }
         }
         Ok(Partition {
             n,
@@ -249,6 +260,43 @@ impl Partition {
         Self::from_owner(owner, self.k())
     }
 
+    /// Elastic transfer: move `coords` to part `to`, where `to` may equal
+    /// `k()` (growing K by one — a freshly spawned PID) and the source
+    /// part may drain to empty (a retiring PID handing off its whole Ω).
+    /// The live worker pool's sibling of [`Partition::transfer`], which
+    /// keeps the strict non-empty invariant for the classic engines.
+    pub fn transfer_elastic(&self, coords: &[usize], to: usize) -> Result<Partition> {
+        if to > self.k() {
+            return Err(DiterError::InvalidPartition(format!(
+                "part {to} would leave a gap (k = {})",
+                self.k()
+            )));
+        }
+        let k = self.k().max(to + 1);
+        let mut owner = self.owner.clone();
+        for &i in coords {
+            if i >= self.n {
+                return Err(DiterError::InvalidPartition(format!(
+                    "coordinate {i} out of range (n = {})",
+                    self.n
+                )));
+            }
+            owner[i] = to;
+        }
+        Self::from_owner_elastic(owner, k)
+    }
+
+    /// Grow to `k_new` parts by appending vacant (empty) PID slots.
+    pub fn with_k(&self, k_new: usize) -> Result<Partition> {
+        if k_new < self.k() {
+            return Err(DiterError::InvalidPartition(format!(
+                "with_k cannot shrink ({} -> {k_new})",
+                self.k()
+            )));
+        }
+        Self::from_owner_elastic(self.owner.clone(), k_new)
+    }
+
     /// Sizes of every Ω_k (for load reports and rebalance policies).
     pub fn part_sizes(&self) -> Vec<usize> {
         self.parts.iter().map(Vec::len).collect()
@@ -305,6 +353,23 @@ impl Partition {
     }
 }
 
+/// Lifecycle state of one PID slot in an elastic pool (DESIGN.md §6).
+/// A fixed-pool run keeps every slot `Live` for its whole lifetime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PidState {
+    /// Bus endpoint registered, worker thread starting; its Ω is empty
+    /// until the spawn handoff lands.
+    Spawning,
+    /// Normal operation: holds (part of) the cover, acks versions.
+    Live,
+    /// Ownership transferred away; drains in-flight fluid, then exits.
+    Draining,
+    /// Thread joined, endpoint deregistered. The slot is vacant and may
+    /// be reused by a later spawn. Retired slots are exempt from version
+    /// acks — nobody is left to ack.
+    Retired,
+}
+
 /// The **versioned owner map** behind live repartitioning: one shared
 /// table per run, consulted by every worker to route fluid and by the
 /// coordinator to install rebalances.
@@ -319,6 +384,12 @@ impl Partition {
 /// * `handoffs_inflight` counts slices shipped but not yet folded into
 ///   the recipient's state; the streaming rebase freezes the table and
 ///   waits for it to reach zero so a checkpoint can never miss history.
+///
+/// With an elastic pool (DESIGN.md §6) the PID set itself is dynamic:
+/// the table's width ([`OwnershipTable::width`]) grows as workers spawn,
+/// each slot carries a [`PidState`], and [`OwnershipTable::all_acked`]
+/// skips retired slots (their threads are gone; their final ack was the
+/// drain that emptied their Ω).
 pub struct OwnershipTable {
     /// (version, partition) — swapped atomically under the lock
     current: RwLock<(u64, Arc<Partition>)>,
@@ -331,8 +402,12 @@ pub struct OwnershipTable {
     /// lifetime handoff count (the `handoffs_total` gauge's source)
     total: AtomicU64,
     /// per-PID highest version fully synced (every coordinate the map
-    /// takes away from the PID has been shipped by the time it acks)
-    acked: Vec<AtomicU64>,
+    /// takes away from the PID has been shipped by the time it acks);
+    /// behind a lock only so the elastic pool can widen it — ack reads
+    /// and writes stay atomic ops under the (uncontended) read lock
+    acked: RwLock<Vec<AtomicU64>>,
+    /// per-PID lifecycle state, same width as `acked`
+    liveness: RwLock<Vec<PidState>>,
 }
 
 impl OwnershipTable {
@@ -344,7 +419,8 @@ impl OwnershipTable {
             frozen: AtomicBool::new(false),
             inflight: AtomicU64::new(0),
             total: AtomicU64::new(0),
-            acked: (0..k).map(|_| AtomicU64::new(0)).collect(),
+            acked: RwLock::new((0..k).map(|_| AtomicU64::new(0)).collect()),
+            liveness: RwLock::new(vec![PidState::Live; k]),
         })
     }
 
@@ -374,16 +450,77 @@ impl OwnershipTable {
     /// while the table is frozen (an epoch transition is in progress).
     /// The partition must keep the same n and K.
     pub fn install(&self, p: Partition) -> Option<u64> {
+        debug_assert_eq!(p.k(), self.partition().k());
+        self.install_elastic(p)
+    }
+
+    /// [`OwnershipTable::install`] for the elastic pool: the partition's
+    /// K may differ from the current one, as long as the table has been
+    /// widened first (see [`OwnershipTable::grow`]) so every part index
+    /// has an ack slot and a liveness state.
+    pub fn install_elastic(&self, p: Partition) -> Option<u64> {
         let mut g = self.current.write().unwrap_or_else(|e| e.into_inner());
         if self.frozen.load(Ordering::Acquire) {
             return None;
         }
         debug_assert_eq!(p.n(), g.1.n());
-        debug_assert_eq!(p.k(), g.1.k());
+        debug_assert!(p.k() <= self.width(), "grow the table before installing");
         g.0 += 1;
         g.1 = Arc::new(p);
         self.version.store(g.0, Ordering::Release);
         Some(g.0)
+    }
+
+    /// PID slots tracked (live + vacant).
+    pub fn width(&self) -> usize {
+        self.acked.read().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Widen the table to `k_new` PID slots. New slots start `Spawning`
+    /// with their ack pre-set to the current version — a slot that owns
+    /// nothing has vacuously shipped everything the map demands of it, so
+    /// quiescence checks stay sound while the worker boots.
+    pub fn grow(&self, k_new: usize) {
+        let mut a = self.acked.write().unwrap_or_else(|e| e.into_inner());
+        let mut l = self.liveness.write().unwrap_or_else(|e| e.into_inner());
+        let v = self.version();
+        while a.len() < k_new {
+            a.push(AtomicU64::new(v));
+            l.push(PidState::Spawning);
+        }
+    }
+
+    /// Reuse a retired slot for a respawn: back to `Spawning`, ack reset
+    /// to the current version (same vacuous-truth argument as `grow`).
+    pub fn reactivate(&self, pid: usize) {
+        let a = self.acked.read().unwrap_or_else(|e| e.into_inner());
+        a[pid].store(self.version(), Ordering::Release);
+        drop(a);
+        self.set_liveness(pid, PidState::Spawning);
+    }
+
+    /// Current lifecycle state of a PID slot.
+    pub fn liveness(&self, pid: usize) -> PidState {
+        self.liveness.read().unwrap_or_else(|e| e.into_inner())[pid]
+    }
+
+    pub fn set_liveness(&self, pid: usize, s: PidState) {
+        self.liveness.write().unwrap_or_else(|e| e.into_inner())[pid] = s;
+    }
+
+    /// Snapshot of every slot's lifecycle state.
+    pub fn liveness_states(&self) -> Vec<PidState> {
+        self.liveness.read().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Slots currently backed by a worker thread (everything but Retired).
+    pub fn live_slots(&self) -> usize {
+        self.liveness
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .filter(|s| **s != PidState::Retired)
+            .count()
     }
 
     /// Block installs (workers may still finish in-flight handoffs).
@@ -422,18 +559,29 @@ impl OwnershipTable {
     /// map takes away from it was shipped (and booked via
     /// [`OwnershipTable::begin_handoff`]) *before* this ack.
     pub fn ack_version(&self, pid: usize, version: u64) {
-        self.acked[pid].store(version, Ordering::Release);
+        let a = self.acked.read().unwrap_or_else(|e| e.into_inner());
+        a[pid].store(version, Ordering::Release);
+    }
+
+    /// Highest version `pid` has fully synced with.
+    pub fn acked_version(&self, pid: usize) -> u64 {
+        let a = self.acked.read().unwrap_or_else(|e| e.into_inner());
+        a[pid].load(Ordering::Acquire)
     }
 
     /// Every worker has synced with `version`. Together with
     /// `handoffs_inflight() == 0` (checked AFTER this, matching the
     /// begin-before-ack ordering on the worker side) this proves no
     /// ownership migration is pending anywhere — the quiescence condition
-    /// the streaming rebase needs before gathering H.
+    /// the streaming rebase needs before gathering H. Retired slots are
+    /// exempt: their Ω drained to empty before their thread joined, so
+    /// no version can demand anything of them.
     pub fn all_acked(&self, version: u64) -> bool {
-        self.acked
-            .iter()
-            .all(|a| a.load(Ordering::Acquire) >= version)
+        let a = self.acked.read().unwrap_or_else(|e| e.into_inner());
+        let l = self.liveness.read().unwrap_or_else(|e| e.into_inner());
+        a.iter()
+            .zip(l.iter())
+            .all(|(a, s)| *s == PidState::Retired || a.load(Ordering::Acquire) >= version)
     }
 }
 
@@ -563,6 +711,90 @@ mod tests {
         for i in 0..32 {
             assert_eq!(greedy.part(greedy.owner(i))[greedy.slot(i)], i);
         }
+    }
+
+    #[test]
+    fn elastic_transfer_grows_k_and_allows_empty_parts() {
+        let p = Partition::contiguous(10, 2).unwrap();
+        // spawn: move the upper half of Ω_1 to a brand-new part 2
+        let coords: Vec<usize> = p.part(1)[3..].to_vec();
+        let grown = p.transfer_elastic(&coords, 2).unwrap();
+        assert_eq!(grown.k(), 3);
+        grown.validate().unwrap();
+        assert_eq!(grown.part_sizes(), vec![5, 3, 2]);
+        // retire: drain part 1 entirely into part 0 — slot stays, empty
+        let drain: Vec<usize> = grown.part(1).to_vec();
+        let drained = grown.transfer_elastic(&drain, 0).unwrap();
+        assert_eq!(drained.k(), 3);
+        drained.validate().unwrap();
+        assert_eq!(drained.part_sizes(), vec![8, 0, 2]);
+        // respawn into the vacant slot
+        let back = drained.transfer_elastic(&drained.part(0)[..2].to_vec(), 1).unwrap();
+        assert_eq!(back.part_sizes(), vec![6, 2, 2]);
+        // gaps rejected; strict transfer still refuses to empty a part
+        assert!(drained.transfer_elastic(&[0], 5).is_err());
+        assert!(Partition::contiguous(4, 2).unwrap().transfer(&[0, 1], 1).is_err());
+    }
+
+    #[test]
+    fn with_k_appends_vacant_slots() {
+        let p = Partition::contiguous(6, 2).unwrap();
+        let wide = p.with_k(4).unwrap();
+        assert_eq!(wide.k(), 4);
+        assert_eq!(wide.part_sizes(), vec![3, 3, 0, 0]);
+        wide.validate().unwrap();
+        assert!(wide.with_k(1).is_err(), "with_k never shrinks");
+        // strict from_owner still rejects the vacancy
+        assert!(Partition::from_owner(wide.owners().to_vec(), 4).is_err());
+    }
+
+    #[test]
+    fn ownership_table_grows_and_tracks_liveness() {
+        let t = OwnershipTable::new(Partition::contiguous(8, 2).unwrap());
+        assert_eq!(t.width(), 2);
+        assert_eq!(t.live_slots(), 2);
+        assert_eq!(t.liveness(0), PidState::Live);
+        // widen for a spawn: new slot starts Spawning, pre-acked; the
+        // table must be grown before a wider partition may install
+        t.grow(3);
+        let v0 = t.install_elastic(t.partition().with_k(3).unwrap()).unwrap();
+        assert_eq!(t.width(), 3);
+        assert_eq!(t.liveness(2), PidState::Spawning);
+        assert!(t.all_acked(0), "pre-acked slot does not block quiescence");
+        t.set_liveness(2, PidState::Live);
+        // the move install now demands acks of everyone incl. the spawn
+        let coords: Vec<usize> = t.partition().part(0)[..2].to_vec();
+        let v = t
+            .install_elastic(t.partition().transfer_elastic(&coords, 2).unwrap())
+            .unwrap();
+        assert_eq!(v, v0 + 1);
+        assert!(!t.all_acked(v));
+        t.ack_version(0, v);
+        t.ack_version(1, v);
+        t.ack_version(2, v);
+        assert!(t.all_acked(v));
+        assert_eq!(t.acked_version(2), v);
+        // retire slot 2: drain install + Retired exempts it from acks
+        let drain: Vec<usize> = t.partition().part(2).to_vec();
+        let v = t
+            .install_elastic(t.partition().transfer_elastic(&drain, 0).unwrap())
+            .unwrap();
+        t.ack_version(0, v);
+        t.ack_version(1, v);
+        t.ack_version(2, v);
+        t.set_liveness(2, PidState::Retired);
+        assert_eq!(t.live_slots(), 2);
+        let v = t
+            .install_elastic(t.partition().transfer_elastic(&[0], 1).unwrap())
+            .unwrap();
+        t.ack_version(0, v);
+        t.ack_version(1, v);
+        assert!(t.all_acked(v), "retired slots never block quiescence");
+        // respawn reuses the slot
+        t.reactivate(2);
+        assert_eq!(t.liveness(2), PidState::Spawning);
+        assert_eq!(t.acked_version(2), v);
+        assert_eq!(t.liveness_states(), vec![PidState::Live, PidState::Live, PidState::Spawning]);
     }
 
     #[test]

@@ -24,6 +24,19 @@
 //! columns the [`crate::graph::MutableDigraph`] build reported dirty are
 //! re-extracted, the rest are spliced from the previous epoch's arrays —
 //! the same dirty-column strategy the matrix cache itself uses.
+//!
+//! Ownership changes are patched too, not rebuilt: [`LocalSystem::shed`]
+//! drops shipped columns and flips block entries that pointed at them
+//! into remnant entries, [`LocalSystem::adopt`] appends the received
+//! columns and flips remnant entries whose target just became local, and
+//! [`LocalSystem::retarget`] re-routes remnant destinations in place
+//! after a peer-to-peer move this worker is not part of. Shed and adopt
+//! still copy the surviving entries (one linear splice over the arrays),
+//! but they avoid what made the full rebuild expensive: the global-CSC
+//! column walks and the per-entry interner hashing, which now happen
+//! only for flipped, re-routed, or freshly-received entries. Spawn-time
+//! adoption (an elastic worker starting from an empty Ω) is the limit
+//! case: O(nnz(received)) total.
 
 use super::CscMatrix;
 
@@ -42,6 +55,9 @@ pub struct LocalSystem {
     rem_dest: Vec<u32>,
     /// destination accumulator slot (interned at build time)
     rem_slot: Vec<u32>,
+    /// global coordinate of each cross-part target — what lets the
+    /// ownership patches re-route entries without the global CSC
+    rem_coord: Vec<u32>,
     rem_vals: Vec<f64>,
 }
 
@@ -58,6 +74,17 @@ impl LocalSystem {
         mut intern: impl FnMut(usize, usize) -> u32,
     ) -> LocalSystem {
         let m = owned.len();
+        let mut sys = LocalSystem::empty(m);
+        for &i in owned {
+            extract_column(csc, i, local_of, owner, &mut intern, &mut sys);
+            sys.blk_indptr.push(sys.blk_rows.len());
+            sys.rem_indptr.push(sys.rem_dest.len());
+        }
+        sys
+    }
+
+    /// An `m`-column shell with open indptrs (one sentinel pushed).
+    fn empty(m: usize) -> LocalSystem {
         let mut sys = LocalSystem {
             m,
             blk_indptr: Vec::with_capacity(m + 1),
@@ -66,26 +93,11 @@ impl LocalSystem {
             rem_indptr: Vec::with_capacity(m + 1),
             rem_dest: Vec::new(),
             rem_slot: Vec::new(),
+            rem_coord: Vec::new(),
             rem_vals: Vec::new(),
         };
         sys.blk_indptr.push(0);
         sys.rem_indptr.push(0);
-        for &i in owned {
-            extract_column(
-                csc,
-                i,
-                local_of,
-                owner,
-                &mut intern,
-                &mut sys.blk_rows,
-                &mut sys.blk_vals,
-                &mut sys.rem_dest,
-                &mut sys.rem_slot,
-                &mut sys.rem_vals,
-            );
-            sys.blk_indptr.push(sys.blk_rows.len());
-            sys.rem_indptr.push(sys.rem_dest.len());
-        }
         sys
     }
 
@@ -109,32 +121,10 @@ impl LocalSystem {
             self.m,
             "LocalSystem::patch requires an unchanged owned set"
         );
-        let mut next = LocalSystem {
-            m: self.m,
-            blk_indptr: Vec::with_capacity(self.m + 1),
-            blk_rows: Vec::with_capacity(self.blk_rows.len()),
-            blk_vals: Vec::with_capacity(self.blk_vals.len()),
-            rem_indptr: Vec::with_capacity(self.m + 1),
-            rem_dest: Vec::with_capacity(self.rem_dest.len()),
-            rem_slot: Vec::with_capacity(self.rem_slot.len()),
-            rem_vals: Vec::with_capacity(self.rem_vals.len()),
-        };
-        next.blk_indptr.push(0);
-        next.rem_indptr.push(0);
+        let mut next = LocalSystem::empty(self.m);
         for (t, &i) in owned.iter().enumerate() {
             if dirty.binary_search(&i).is_ok() {
-                extract_column(
-                    csc,
-                    i,
-                    local_of,
-                    owner,
-                    &mut intern,
-                    &mut next.blk_rows,
-                    &mut next.blk_vals,
-                    &mut next.rem_dest,
-                    &mut next.rem_slot,
-                    &mut next.rem_vals,
-                );
+                extract_column(csc, i, local_of, owner, &mut intern, &mut next);
             } else {
                 let (blo, bhi) = (self.blk_indptr[t], self.blk_indptr[t + 1]);
                 next.blk_rows.extend_from_slice(&self.blk_rows[blo..bhi]);
@@ -142,12 +132,151 @@ impl LocalSystem {
                 let (rlo, rhi) = (self.rem_indptr[t], self.rem_indptr[t + 1]);
                 next.rem_dest.extend_from_slice(&self.rem_dest[rlo..rhi]);
                 next.rem_slot.extend_from_slice(&self.rem_slot[rlo..rhi]);
+                next.rem_coord.extend_from_slice(&self.rem_coord[rlo..rhi]);
                 next.rem_vals.extend_from_slice(&self.rem_vals[rlo..rhi]);
             }
             next.blk_indptr.push(next.blk_rows.len());
             next.rem_indptr.push(next.rem_dest.len());
         }
         *self = next;
+    }
+
+    /// Ownership shed (handoff shipped): drop the columns whose old slot
+    /// is marked in `shipped`, renumber kept block rows through `new_slot`
+    /// (old local slot → compacted slot), and flip block entries that
+    /// pointed at a shipped slot into remnant entries routed by the *new*
+    /// `owner` map. Surviving remnant entries are re-routed through
+    /// `owner` too (the same install may have moved third-party
+    /// coordinates). One pass over the existing arrays — hashing only on
+    /// flipped or re-routed entries, never a global-CSC walk.
+    pub fn shed(
+        &mut self,
+        old_owned: &[usize],
+        shipped: &[bool],
+        new_slot: &[u32],
+        owner: &[usize],
+        mut intern: impl FnMut(usize, usize) -> u32,
+    ) {
+        debug_assert_eq!(shipped.len(), self.m, "one shipped flag per old slot");
+        debug_assert_eq!(old_owned.len(), self.m);
+        let m_new = shipped.iter().filter(|&&s| !s).count();
+        let mut next = LocalSystem::empty(m_new);
+        for t in 0..self.m {
+            if shipped[t] {
+                continue;
+            }
+            let (blo, bhi) = (self.blk_indptr[t], self.blk_indptr[t + 1]);
+            for e in blo..bhi {
+                let r = self.blk_rows[e] as usize;
+                if shipped[r] {
+                    // the target left the part: block entry becomes remnant
+                    let j = old_owned[r];
+                    let d = owner[j];
+                    next.rem_dest.push(d as u32);
+                    next.rem_slot.push(intern(d, j));
+                    next.rem_coord.push(j as u32);
+                    next.rem_vals.push(self.blk_vals[e]);
+                } else {
+                    next.blk_rows.push(new_slot[r]);
+                    next.blk_vals.push(self.blk_vals[e]);
+                }
+            }
+            let (rlo, rhi) = (self.rem_indptr[t], self.rem_indptr[t + 1]);
+            for e in rlo..rhi {
+                let j = self.rem_coord[e] as usize;
+                let d = owner[j];
+                let slot = if d == self.rem_dest[e] as usize {
+                    self.rem_slot[e] // destination unchanged: slot still valid
+                } else {
+                    intern(d, j)
+                };
+                next.rem_dest.push(d as u32);
+                next.rem_slot.push(slot);
+                next.rem_coord.push(j as u32);
+                next.rem_vals.push(self.rem_vals[e]);
+            }
+            next.blk_indptr.push(next.blk_rows.len());
+            next.rem_indptr.push(next.rem_dest.len());
+        }
+        *self = next;
+    }
+
+    /// Ownership adoption (handoff received): append the `added` columns
+    /// (extracted from the CSC — the only fresh extraction, O(nnz(added)))
+    /// and flip existing remnant entries whose target coordinate is now
+    /// held locally (per `local_of`) into block entries. Remnant entries
+    /// staying remote are re-routed through the new `owner` map. Existing
+    /// block rows keep their slots — adoption appends, it never renumbers.
+    pub fn adopt(
+        &mut self,
+        csc: &CscMatrix,
+        added: &[usize],
+        local_of: &[usize],
+        owner: &[usize],
+        mut intern: impl FnMut(usize, usize) -> u32,
+    ) {
+        let mut next = LocalSystem::empty(self.m + added.len());
+        for t in 0..self.m {
+            let (blo, bhi) = (self.blk_indptr[t], self.blk_indptr[t + 1]);
+            next.blk_rows.extend_from_slice(&self.blk_rows[blo..bhi]);
+            next.blk_vals.extend_from_slice(&self.blk_vals[blo..bhi]);
+            let (rlo, rhi) = (self.rem_indptr[t], self.rem_indptr[t + 1]);
+            for e in rlo..rhi {
+                let j = self.rem_coord[e] as usize;
+                let lt = local_of[j];
+                if lt != usize::MAX {
+                    // the target just became ours: remnant entry turns block
+                    next.blk_rows.push(lt as u32);
+                    next.blk_vals.push(self.rem_vals[e]);
+                } else {
+                    let d = owner[j];
+                    let slot = if d == self.rem_dest[e] as usize {
+                        self.rem_slot[e]
+                    } else {
+                        intern(d, j)
+                    };
+                    next.rem_dest.push(d as u32);
+                    next.rem_slot.push(slot);
+                    next.rem_coord.push(j as u32);
+                    next.rem_vals.push(self.rem_vals[e]);
+                }
+            }
+            next.blk_indptr.push(next.blk_rows.len());
+            next.rem_indptr.push(next.rem_dest.len());
+        }
+        for &i in added {
+            extract_column(csc, i, local_of, owner, &mut intern, &mut next);
+            next.blk_indptr.push(next.blk_rows.len());
+            next.rem_indptr.push(next.rem_dest.len());
+        }
+        *self = next;
+    }
+
+    /// Re-route remnant destinations in place after a peer-to-peer
+    /// ownership move this worker is not part of (its own columns are
+    /// untouched — only where cross-part fluid must be sent changed).
+    /// Returns `false` (caller must rebuild) if any remnant target became
+    /// local, which would change the block structure; that cannot happen
+    /// on the no-outgoing/no-incoming refresh path (adoption goes through
+    /// [`LocalSystem::adopt`]), so this is a cheap O(remnant) sweep.
+    pub fn retarget(
+        &mut self,
+        local_of: &[usize],
+        owner: &[usize],
+        mut intern: impl FnMut(usize, usize) -> u32,
+    ) -> bool {
+        for e in 0..self.rem_dest.len() {
+            let j = self.rem_coord[e] as usize;
+            if local_of[j] != usize::MAX {
+                return false;
+            }
+            let d = owner[j];
+            if d as u32 != self.rem_dest[e] {
+                self.rem_dest[e] = d as u32;
+                self.rem_slot[e] = intern(d, j);
+            }
+        }
+        true
     }
 
     /// Local columns (owned slots).
@@ -185,34 +314,32 @@ impl LocalSystem {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
+/// Extract global column `i` into the (open, indptrs not yet closed)
+/// tail of `sys`, splitting entries into block vs remnant.
 fn extract_column(
     csc: &CscMatrix,
     i: usize,
     local_of: &[usize],
     owner: &[usize],
     intern: &mut impl FnMut(usize, usize) -> u32,
-    blk_rows: &mut Vec<u32>,
-    blk_vals: &mut Vec<f64>,
-    rem_dest: &mut Vec<u32>,
-    rem_slot: &mut Vec<u32>,
-    rem_vals: &mut Vec<f64>,
+    sys: &mut LocalSystem,
 ) {
     let (rows, vals) = csc.col(i);
     for e in 0..rows.len() {
         let j = rows[e];
         let t = local_of[j];
         if t != usize::MAX {
-            blk_rows.push(t as u32);
-            blk_vals.push(vals[e]);
+            sys.blk_rows.push(t as u32);
+            sys.blk_vals.push(vals[e]);
         } else {
             // routing is decided at build time; a coordinate the table
             // assigns to us but whose handoff has not landed yet routes to
             // ourselves over the bus (same semantics as the global walk)
             let d = owner[j];
-            rem_dest.push(d as u32);
-            rem_slot.push(intern(d, j));
-            rem_vals.push(vals[e]);
+            sys.rem_dest.push(d as u32);
+            sys.rem_slot.push(intern(d, j));
+            sys.rem_coord.push(j as u32);
+            sys.rem_vals.push(vals[e]);
         }
     }
 }
@@ -333,6 +460,7 @@ mod tests {
         assert_eq!(sys.blk_vals, fresh.blk_vals);
         assert_eq!(sys.rem_indptr, fresh.rem_indptr);
         assert_eq!(sys.rem_dest, fresh.rem_dest);
+        assert_eq!(sys.rem_coord, fresh.rem_coord);
         assert_eq!(sys.rem_vals, fresh.rem_vals);
         for e in 0..sys.rem_slot.len() {
             let d = sys.rem_dest[e] as usize;
@@ -341,6 +469,100 @@ mod tests {
                 it2.coords[d][fresh.rem_slot[e] as usize]
             );
         }
+    }
+
+    /// Resolve a LocalSystem into an interner-independent, order-
+    /// independent form: per column, sorted (local slot, val) block
+    /// entries and sorted (dest, coord, val) remnant entries.
+    #[allow(clippy::type_complexity)]
+    fn canonical(
+        sys: &LocalSystem,
+        it: &Interner,
+    ) -> Vec<(Vec<(u32, f64)>, Vec<(usize, usize, f64)>)> {
+        (0..sys.cols())
+            .map(|t| {
+                let (rows, vals) = sys.block_col(t);
+                let mut blk: Vec<(u32, f64)> =
+                    rows.iter().copied().zip(vals.iter().copied()).collect();
+                blk.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let (dests, slots, vals) = sys.remnant_col(t);
+                let mut rem: Vec<(usize, usize, f64)> = (0..dests.len())
+                    .map(|e| {
+                        let d = dests[e] as usize;
+                        (d, it.coords[d][slots[e] as usize], vals[e])
+                    })
+                    .collect();
+                rem.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                (blk, rem)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shed_matches_fresh_build_on_remaining_columns() {
+        let (csc, owned, local_of, owner) = fixture();
+        let mut it = Interner::new(2);
+        let mut sys =
+            LocalSystem::build(&csc, &owned, &local_of, &owner, |d, j| it.intern(d, j));
+        // ship coordinate 1 (old slot 1) away to PID 1
+        let mut new_owner = owner.clone();
+        new_owner[1] = 1;
+        let shipped = vec![false, true];
+        let new_slot = vec![0u32, u32::MAX];
+        sys.shed(&owned, &shipped, &new_slot, &new_owner, |d, j| {
+            it.intern(d, j)
+        });
+        assert_eq!(sys.cols(), 1);
+        // reference: fresh build over the shrunken owned set + new owners
+        let mut lo2 = vec![usize::MAX; 4];
+        lo2[0] = 0;
+        let mut it2 = Interner::new(2);
+        let fresh = LocalSystem::build(&csc, &[0], &lo2, &new_owner, |d, j| it2.intern(d, j));
+        assert_eq!(canonical(&sys, &it), canonical(&fresh, &it2));
+        // the entry 0 → 1 (p₁₀ = .5) must have flipped from block to remnant
+        assert_eq!(sys.block_col(0).0.len(), 0);
+        assert_eq!(sys.remnant_col(0).0.len(), 2);
+    }
+
+    #[test]
+    fn adopt_matches_fresh_build_and_flips_remnant_to_block() {
+        let (csc, owned, mut local_of, mut owner) = fixture();
+        let mut it = Interner::new(2);
+        let mut sys =
+            LocalSystem::build(&csc, &owned, &local_of, &owner, |d, j| it.intern(d, j));
+        // adopt coordinate 2 from PID 1 (appended as local slot 2)
+        owner[2] = 0;
+        local_of[2] = 2;
+        sys.adopt(&csc, &[2], &local_of, &owner, |d, j| it.intern(d, j));
+        assert_eq!(sys.cols(), 3);
+        let mut it2 = Interner::new(2);
+        let fresh =
+            LocalSystem::build(&csc, &[0, 1, 2], &local_of, &owner, |d, j| it2.intern(d, j));
+        assert_eq!(canonical(&sys, &it), canonical(&fresh, &it2));
+        // column 0's entry to 2 (p₂₀ = .25) must now be a block entry
+        let (rows, vals) = sys.block_col(0);
+        assert!(rows.contains(&2), "{rows:?} {vals:?}");
+    }
+
+    #[test]
+    fn retarget_reroutes_after_peer_to_peer_move() {
+        let (csc, owned, local_of, owner) = fixture();
+        // three parts so a move between 1 and 2 is peer-to-peer for PID 0
+        let owner3: Vec<usize> = owner.iter().map(|&o| if o == 1 { 2 } else { o }).collect();
+        let mut it = Interner::new(3);
+        let mut sys =
+            LocalSystem::build(&csc, &owned, &local_of, &owner3, |d, j| it.intern(d, j));
+        // coordinate 2 moves from PID 2 to PID 1
+        let mut moved = owner3.clone();
+        moved[2] = 1;
+        assert!(sys.retarget(&local_of, &moved, |d, j| it.intern(d, j)));
+        let mut it2 = Interner::new(3);
+        let fresh = LocalSystem::build(&csc, &owned, &local_of, &moved, |d, j| it2.intern(d, j));
+        assert_eq!(canonical(&sys, &it), canonical(&fresh, &it2));
+        // a target that became local must force a rebuild instead
+        let mut lo2 = local_of.clone();
+        lo2[2] = 2;
+        assert!(!sys.retarget(&lo2, &moved, |d, j| it.intern(d, j)));
     }
 
     #[test]

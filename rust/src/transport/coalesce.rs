@@ -103,6 +103,12 @@ impl DestAcc {
 }
 
 /// Per-destination coalescing accumulators (one [`DestAcc`] per PID).
+///
+/// The destination table **grows on demand**: an elastic worker pool
+/// spawns PIDs at runtime, so a destination index seen for the first time
+/// (a routing decision against a newer ownership map than the buffer was
+/// sized for) simply extends the table. Vacated (retired) destinations
+/// keep their empty accumulator — the slot is reused if the PID respawns.
 #[derive(Debug)]
 pub struct CoalesceBuffer {
     policy: CoalescePolicy,
@@ -117,14 +123,31 @@ impl CoalesceBuffer {
         }
     }
 
+    /// Extend the destination table to cover `dest` (elastic PID pools
+    /// grow K while workers hold buffers sized to an older map).
+    #[inline]
+    fn ensure(&mut self, dest: usize) {
+        if dest >= self.accs.len() {
+            self.accs.resize_with(dest + 1, DestAcc::default);
+        }
+    }
+
+    /// Destinations currently addressable (diagnostics/tests).
+    pub fn dests(&self) -> usize {
+        self.accs.len()
+    }
+
     /// Assign (or look up) the accumulator slot for coordinate `j` at
     /// `dest` — called at [`crate::sparse::LocalSystem`] build time so the
     /// hot loop can use [`CoalesceBuffer::add_slot`].
     pub fn intern(&mut self, dest: usize, j: usize) -> u32 {
+        self.ensure(dest);
         self.accs[dest].intern(j)
     }
 
-    /// Hot path: accumulate `fluid` into a pre-interned slot.
+    /// Hot path: accumulate `fluid` into a pre-interned slot (slots only
+    /// come from [`CoalesceBuffer::intern`], so the table already covers
+    /// `dest`).
     #[inline]
     pub fn add_slot(&mut self, dest: usize, slot: u32, fluid: f64) {
         self.accs[dest].add_slot(slot, fluid);
@@ -133,6 +156,7 @@ impl CoalesceBuffer {
     /// Cold path: accumulate `fluid` for coordinate `j` owned by `dest`,
     /// interning the coordinate on first sight.
     pub fn add(&mut self, dest: usize, j: usize, fluid: f64) {
+        self.ensure(dest);
         let slot = self.accs[dest].intern(j);
         self.accs[dest].add_slot(slot, fluid);
     }
@@ -336,6 +360,37 @@ mod tests {
         let (coords, mass, total) = c.take(1);
         assert_eq!(zip(coords, mass), vec![(7, 0.5)]);
         assert!((total - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dest_table_grows_with_the_pid_set() {
+        // sized for K=2 at construction; the PID set then grows to 4
+        let mut c = CoalesceBuffer::new(2, CoalescePolicy::default());
+        c.add(1, 3, 0.5);
+        c.add(3, 8, 0.25); // destination beyond the constructed K
+        assert_eq!(c.dests(), 4);
+        let s = c.intern(2, 5);
+        c.add_slot(2, s, 0.125);
+        assert!((c.held_mass() - 0.875).abs() < 1e-12);
+        // flush after the K change must deliver every destination
+        let mut flushed = Vec::new();
+        c.flush(true, |d, coords, mass, total| {
+            flushed.push((d, zip(coords, mass), total));
+        });
+        flushed.sort_by(|a, b| a.0.cmp(&b.0));
+        assert_eq!(flushed.len(), 3);
+        assert_eq!(flushed[0].0, 1);
+        assert_eq!(flushed[0].1, vec![(3, 0.5)]);
+        assert_eq!(flushed[1].0, 2);
+        assert_eq!(flushed[1].1, vec![(5, 0.125)]);
+        assert_eq!(flushed[2].0, 3);
+        assert_eq!(flushed[2].1, vec![(8, 0.25)]);
+        assert!(c.is_empty());
+        // compact preserves the widened table
+        c.add(3, 9, 0.1);
+        c.compact();
+        assert_eq!(c.dests(), 4);
+        assert!((c.held_mass() - 0.1).abs() < 1e-12);
     }
 
     #[test]

@@ -13,6 +13,19 @@
 //! machines over TCP; an in-process bus with explicit ack/retention and
 //! delay injection reproduces the protocol-visible behaviour (reordering
 //! across endpoints, delay, conservation) deterministically under a seed.
+//!
+//! ## Elastic endpoints
+//!
+//! The bus is **elastic**: endpoints can be added and removed while the
+//! fabric is live (the worker-pool scheduler spawns and retires PIDs
+//! mid-convergence). The channel directory lives behind a shared
+//! [`BusHub`]; each send resolves its destination through the directory
+//! under a read lock, so [`BusHub::remove_endpoint`] (a write) strictly
+//! orders with in-progress sends — after removal returns, every
+//! successfully-sent envelope is already in the removed endpoint's queue
+//! (its owner drains them before exiting) and every later send fails fast
+//! at the sender, which re-routes instead of losing fluid (see
+//! [`Endpoint::try_send`]).
 
 mod atomic_f64;
 mod coalesce;
@@ -23,7 +36,7 @@ pub use coalesce::{CoalesceBuffer, CoalescePolicy};
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::error::{DiterError, Result};
@@ -105,13 +118,114 @@ struct Shared {
     metrics: Arc<MetricSet>,
 }
 
+/// The live channel directory: slot `k` holds PID k's inbound channels,
+/// `None` for a retired (or never-spawned) endpoint.
+struct Directory<T> {
+    txs: Vec<Option<Sender<Envelope<T>>>>,
+    /// ack channels: `ack_txs[k]` sends acked seqs back to endpoint k
+    ack_txs: Vec<Option<Sender<u64>>>,
+}
+
+/// A shared handle onto the bus fabric that can register and deregister
+/// endpoints while workers are running — the transport face of the
+/// elastic worker pool. Cloneable; all clones see the same directory.
+pub struct BusHub<T> {
+    dir: Arc<RwLock<Directory<T>>>,
+    shared: Arc<Shared>,
+    latency: Option<(Duration, Duration)>,
+    seed: u64,
+}
+
+impl<T> Clone for BusHub<T> {
+    fn clone(&self) -> Self {
+        BusHub {
+            dir: self.dir.clone(),
+            shared: self.shared.clone(),
+            latency: self.latency,
+            seed: self.seed,
+        }
+    }
+}
+
+impl<T: Send> BusHub<T> {
+    /// Register a new endpoint at slot `id`: either a vacant (retired)
+    /// slot, or exactly one past the current end (the directory never has
+    /// gaps of unknown width). Errors if the slot is occupied.
+    pub fn add_endpoint(&self, id: usize) -> Result<Endpoint<T>> {
+        let mut d = self.dir.write().unwrap_or_else(|e| e.into_inner());
+        if id > d.txs.len() {
+            return Err(DiterError::Transport(format!(
+                "endpoint {id} would leave a gap (directory holds {})",
+                d.txs.len()
+            )));
+        }
+        if id < d.txs.len() && d.txs[id].is_some() {
+            return Err(DiterError::Transport(format!("endpoint {id} already live")));
+        }
+        let (tx, rx) = channel::<Envelope<T>>();
+        let (ack_tx, ack_rx) = channel::<u64>();
+        if id == d.txs.len() {
+            d.txs.push(Some(tx));
+            d.ack_txs.push(Some(ack_tx));
+        } else {
+            d.txs[id] = Some(tx);
+            d.ack_txs[id] = Some(ack_tx);
+        }
+        Ok(Endpoint {
+            id,
+            dir: self.dir.clone(),
+            rx,
+            ack_rx,
+            retained: Vec::new(),
+            delayed: BinaryHeap::new(),
+            next_seq: 0,
+            shared: self.shared.clone(),
+            latency: self.latency,
+            rng: Xoshiro256pp::seed_from_u64(self.seed ^ (id as u64).wrapping_mul(0x9E3779B9)),
+        })
+    }
+
+    /// Deregister slot `id`: subsequent sends to it fail fast at the
+    /// sender (which re-routes the fluid). The write lock orders this
+    /// against in-progress sends — envelopes that made it into the queue
+    /// before removal are still drained by the endpoint's owner.
+    pub fn remove_endpoint(&self, id: usize) {
+        let mut d = self.dir.write().unwrap_or_else(|e| e.into_inner());
+        if id < d.txs.len() {
+            d.txs[id] = None;
+            d.ack_txs[id] = None;
+        }
+    }
+
+    /// Directory width (live + vacant slots).
+    pub fn capacity(&self) -> usize {
+        self.dir.read().unwrap_or_else(|e| e.into_inner()).txs.len()
+    }
+
+    /// Whether slot `id` currently has a live endpoint.
+    pub fn is_live(&self, id: usize) -> bool {
+        let d = self.dir.read().unwrap_or_else(|e| e.into_inner());
+        d.txs.get(id).is_some_and(Option::is_some)
+    }
+
+    /// A monitor handle onto the shared accounting.
+    pub fn monitor(&self) -> BusMonitor {
+        BusMonitor {
+            shared: self.shared.clone(),
+        }
+    }
+
+    /// The bus-wide metric set.
+    pub fn metrics(&self) -> Arc<MetricSet> {
+        self.shared.metrics.clone()
+    }
+}
+
 /// One PID's endpoint: owned by exactly one worker thread.
 pub struct Endpoint<T> {
     id: usize,
-    txs: Vec<Sender<Envelope<T>>>,
+    dir: Arc<RwLock<Directory<T>>>,
     rx: Receiver<Envelope<T>>,
-    /// ack channels: acks[k] sends (seq) back to endpoint k
-    ack_txs: Vec<Sender<u64>>,
     ack_rx: Receiver<u64>,
     /// parcels retained until acked (seq → mass); "as TCP"
     retained: Vec<(u64, f64)>,
@@ -135,6 +249,17 @@ pub fn bus_with_metrics<T: Send>(
     cfg: &BusConfig,
     extra: &[&'static str],
 ) -> (Vec<Endpoint<T>>, Arc<MetricSet>) {
+    let (endpoints, _hub, metrics) = bus_elastic(k, cfg, extra);
+    (endpoints, metrics)
+}
+
+/// [`bus_with_metrics`], returning the [`BusHub`] as well so endpoints
+/// can be added and removed at runtime (the elastic worker pool).
+pub fn bus_elastic<T: Send>(
+    k: usize,
+    cfg: &BusConfig,
+    extra: &[&'static str],
+) -> (Vec<Endpoint<T>>, BusHub<T>, Arc<MetricSet>) {
     let names: Vec<&'static str> = BUS_METRICS.iter().chain(extra).copied().collect();
     let metrics = Arc::new(MetricSet::new(&names));
     let shared = Arc::new(Shared {
@@ -143,37 +268,19 @@ pub fn bus_with_metrics<T: Send>(
         undelivered: AtomicU64::new(0),
         metrics: metrics.clone(),
     });
-    let mut txs = Vec::with_capacity(k);
-    let mut rxs = Vec::with_capacity(k);
-    for _ in 0..k {
-        let (tx, rx) = channel::<Envelope<T>>();
-        txs.push(tx);
-        rxs.push(rx);
-    }
-    let mut ack_txs = Vec::with_capacity(k);
-    let mut ack_rxs = Vec::with_capacity(k);
-    for _ in 0..k {
-        let (tx, rx) = channel::<u64>();
-        ack_txs.push(tx);
-        ack_rxs.push(rx);
-    }
-    let mut endpoints = Vec::with_capacity(k);
-    for (id, (rx, ack_rx)) in rxs.into_iter().zip(ack_rxs).enumerate() {
-        endpoints.push(Endpoint {
-            id,
-            txs: txs.clone(),
-            rx,
-            ack_txs: ack_txs.clone(),
-            ack_rx,
-            retained: Vec::new(),
-            delayed: BinaryHeap::new(),
-            next_seq: 0,
-            shared: shared.clone(),
-            latency: cfg.latency,
-            rng: Xoshiro256pp::seed_from_u64(cfg.seed ^ (id as u64).wrapping_mul(0x9E3779B9)),
-        });
-    }
-    (endpoints, metrics)
+    let hub = BusHub {
+        dir: Arc::new(RwLock::new(Directory {
+            txs: Vec::with_capacity(k),
+            ack_txs: Vec::with_capacity(k),
+        })),
+        shared,
+        latency: cfg.latency,
+        seed: cfg.seed,
+    };
+    let endpoints = (0..k)
+        .map(|id| hub.add_endpoint(id).expect("fresh directory has no gaps"))
+        .collect();
+    (endpoints, hub, metrics)
 }
 
 impl<T: Send> Endpoint<T> {
@@ -181,19 +288,31 @@ impl<T: Send> Endpoint<T> {
         self.id
     }
 
+    /// Directory width (live + vacant slots).
     pub fn peers(&self) -> usize {
-        self.txs.len()
+        self.dir.read().unwrap_or_else(|e| e.into_inner()).txs.len()
     }
 
     /// Send `payload` carrying `mass` units of |fluid| to `to`.
     /// The parcel is retained locally until the receiver acknowledges it.
     pub fn send(&mut self, to: usize, payload: T, mass: f64, approx_bytes: usize) -> Result<()> {
-        if to >= self.txs.len() {
-            return Err(DiterError::Transport(format!("no endpoint {to}")));
-        }
+        self.try_send(to, payload, mass, approx_bytes)
+            .map_err(|_| DiterError::Transport(format!("no endpoint {to}")))
+    }
+
+    /// Like [`Endpoint::send`], but hands the payload back when the
+    /// destination endpoint is missing or closed, so the caller can
+    /// re-route it — a retiring PID's fluid must never be dropped. On the
+    /// error path the in-flight accounting is fully undone (the fluid
+    /// never left the caller), which transiently errs high, never low.
+    pub fn try_send(
+        &mut self,
+        to: usize,
+        payload: T,
+        mass: f64,
+        approx_bytes: usize,
+    ) -> std::result::Result<(), T> {
         self.collect_acks();
-        let seq = self.next_seq;
-        self.next_seq += 1;
         let delay = match self.latency {
             None => Duration::ZERO,
             Some((lo, hi)) => {
@@ -203,12 +322,23 @@ impl<T: Send> Endpoint<T> {
                 )
             }
         };
+        let seq = self.next_seq;
         let env = Envelope {
             from: self.id,
             seq,
             mass,
             ready_at: Instant::now() + delay,
             payload,
+        };
+        // the directory read lock is held across the accounting AND the
+        // channel push: endpoint removal (a write) therefore strictly
+        // orders with this send — after remove_endpoint returns, either
+        // this envelope is already queued at the (still-draining) peer, or
+        // the lookup below fails and the caller re-routes
+        let d = self.dir.read().unwrap_or_else(|e| e.into_inner());
+        let Some(tx) = d.txs.get(to).and_then(Option::as_ref) else {
+            drop(d);
+            return Err(env.payload);
         };
         // in-flight accounting BEFORE the send so the monitor can never
         // observe fluid vanishing (conservation must err on the high side).
@@ -221,24 +351,36 @@ impl<T: Send> Endpoint<T> {
         self.shared
             .metrics
             .max("inflight_peak_ppm", (now_inflight * 1e6) as u64);
-        self.retained.push((seq, mass));
-        self.shared.retained.fetch_add(1, Ordering::Relaxed);
-        self.txs[to]
-            .send(env)
-            .map_err(|_| DiterError::Transport(format!("endpoint {to} closed")))?;
-        self.shared.metrics.incr("msgs_sent");
-        self.shared.metrics.add("bytes_sent", approx_bytes as u64);
-        Ok(())
+        match tx.send(env) {
+            Ok(()) => {
+                drop(d);
+                self.next_seq += 1;
+                self.retained.push((seq, mass));
+                self.shared.retained.fetch_add(1, Ordering::Relaxed);
+                self.shared.metrics.incr("msgs_sent");
+                self.shared.metrics.add("bytes_sent", approx_bytes as u64);
+                Ok(())
+            }
+            Err(send_err) => {
+                // receiver dropped (worker exiting): undo the accounting —
+                // the fluid never left the caller
+                drop(d);
+                self.shared.inflight.add(-mass);
+                self.shared.undelivered.fetch_sub(1, Ordering::AcqRel);
+                Err(send_err.0.payload)
+            }
+        }
     }
 
-    /// Broadcast to every other endpoint; `payload` must be cloneable.
+    /// Broadcast to every live endpoint; `payload` must be cloneable.
     pub fn broadcast(&mut self, payload: &T, mass: f64, approx_bytes: usize) -> Result<()>
     where
         T: Clone,
     {
-        for to in 0..self.txs.len() {
+        for to in 0..self.peers() {
             if to != self.id {
-                self.send(to, payload.clone(), mass, approx_bytes)?;
+                // vacant slots are skipped, closed peers are not an error
+                let _ = self.try_send(to, payload.clone(), mass, approx_bytes);
             }
         }
         Ok(())
@@ -272,11 +414,16 @@ impl<T: Send> Endpoint<T> {
 
     /// Confirm that a received message's payload has been fully applied:
     /// releases its fluid from the in-flight account, marks it delivered,
-    /// and acknowledges to the sender ("as TCP").
+    /// and acknowledges to the sender ("as TCP"). Acks to a sender that
+    /// has since retired are dropped — its retention list died with it.
     pub fn commit(&mut self, from: usize, seq: u64, mass: f64) {
         self.shared.inflight.add(-mass);
         self.shared.undelivered.fetch_sub(1, Ordering::AcqRel);
-        let _ = self.ack_txs[from].send(seq);
+        let d = self.dir.read().unwrap_or_else(|e| e.into_inner());
+        if let Some(tx) = d.ack_txs.get(from).and_then(Option::as_ref) {
+            let _ = tx.send(seq);
+        }
+        drop(d);
         self.shared.metrics.incr("acks");
     }
 
@@ -319,6 +466,18 @@ impl<T: Send> Endpoint<T> {
     /// Parcels still awaiting acknowledgment.
     pub fn unacked(&self) -> usize {
         self.retained.len()
+    }
+
+    /// Envelopes received but not yet ripe (latency injection). A
+    /// draining shutdown polls this to avoid stranding accounted mass in
+    /// the ripening heap: the inbound channel is swept into the heap
+    /// first, so a zero return means nothing queued is waiting out a
+    /// delay at this instant.
+    pub fn pending_delayed(&mut self) -> usize {
+        while let Ok(env) = self.rx.try_recv() {
+            self.delayed.push(Ripening(env));
+        }
+        self.delayed.len()
     }
 
     /// Global in-flight fluid (sent but not yet applied anywhere).
@@ -478,6 +637,87 @@ mod tests {
         let (mut eps, _m) = bus::<u8>(1, &BusConfig::default());
         let mut a = eps.pop().unwrap();
         assert!(a.send(3, 0, 0.0, 1).is_err());
+    }
+
+    #[test]
+    fn hub_adds_endpoint_at_runtime() {
+        let (mut eps, hub, metrics) = bus_elastic::<u8>(2, &BusConfig::default(), &[]);
+        assert_eq!(hub.capacity(), 2);
+        // fluid can be addressed to the new slot the moment it registers
+        let mut c = hub.add_endpoint(2).unwrap();
+        assert_eq!(hub.capacity(), 3);
+        assert!(hub.is_live(2));
+        eps[0].send(2, 7, 0.5, 1).unwrap();
+        let got = c.try_recv().unwrap();
+        assert_eq!(got.payload, 7);
+        assert_eq!(got.from, 0);
+        // and the late joiner can send back
+        c.send(1, 9, 0.25, 1).unwrap();
+        assert_eq!(eps[1].try_recv().unwrap().payload, 9);
+        eps[0].collect_acks();
+        assert_eq!(eps[0].unacked(), 0);
+        assert_eq!(metrics.get("msgs_recv"), 2);
+        // gaps are rejected, occupied slots are rejected
+        assert!(hub.add_endpoint(5).is_err());
+        assert!(hub.add_endpoint(1).is_err());
+    }
+
+    #[test]
+    fn removed_endpoint_fails_fast_and_returns_payload() {
+        let (mut eps, hub, _m) = bus_elastic::<u32>(2, &BusConfig::default(), &[]);
+        hub.remove_endpoint(1);
+        assert!(!hub.is_live(1));
+        // try_send hands the payload back with accounting fully undone
+        let a = &mut eps[0];
+        assert_eq!(a.try_send(1, 42, 1.5, 4), Err(42));
+        assert_eq!(a.global_inflight(), 0.0);
+        assert_eq!(a.unacked(), 0);
+        assert!(a.send(1, 42, 1.5, 4).is_err());
+        let mon = monitor_of(a);
+        assert_eq!(mon.undelivered(), 0);
+    }
+
+    #[test]
+    fn retired_slot_can_be_reused() {
+        let (mut eps, hub, _m) = bus_elastic::<u8>(3, &BusConfig::default(), &[]);
+        let c = eps.pop().unwrap(); // endpoint 2
+        drop(c);
+        hub.remove_endpoint(2);
+        let mut c2 = hub.add_endpoint(2).unwrap();
+        assert_eq!(c2.id(), 2);
+        eps[0].send(2, 5, 0.0, 1).unwrap();
+        assert_eq!(c2.try_recv().unwrap().payload, 5);
+        assert_eq!(hub.capacity(), 3, "slot reused, not appended");
+    }
+
+    #[test]
+    fn closed_receiver_returns_payload_with_accounting_undone() {
+        let (mut eps, _hub, _m) = bus_elastic::<u32>(2, &BusConfig::default(), &[]);
+        let b = eps.pop().unwrap();
+        drop(b); // receiver gone but slot still registered
+        let mut a = eps.pop().unwrap();
+        assert_eq!(a.try_send(1, 11, 0.75, 4), Err(11));
+        assert_eq!(a.global_inflight(), 0.0);
+        let mon = monitor_of(&a);
+        assert_eq!(mon.undelivered(), 0);
+        assert_eq!(mon.retained(), 0);
+    }
+
+    #[test]
+    fn pending_delayed_counts_ripening_envelopes() {
+        let cfg = BusConfig {
+            latency: Some((Duration::from_millis(25), Duration::from_millis(30))),
+            seed: 5,
+        };
+        let (mut eps, _m) = bus::<u8>(2, &cfg);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, 1, 0.0, 1).unwrap();
+        assert!(b.try_recv().is_none());
+        assert_eq!(b.pending_delayed(), 1, "delayed envelope is visible");
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(b.try_recv().is_some());
+        assert_eq!(b.pending_delayed(), 0);
     }
 
     #[test]

@@ -165,6 +165,127 @@ fn local_system_diffusion_survives_random_handoff_sequences() {
 }
 
 #[test]
+fn ownership_patched_local_system_equals_fresh_build() {
+    // the adopt/shed/retarget delta maintenance (ROADMAP's
+    // `patch_handoff`): across a random sequence of ownership transfers,
+    // every PID keeps its LocalSystem alive by patching — shipper sheds,
+    // receiver adopts, bystanders retarget — and after every transfer the
+    // patched system must diffuse exactly like a fresh build over the new
+    // owner map. This is the invariant that makes spawn-time adoption
+    // (an elastic worker growing from an empty Ω) safe.
+    run_cases(20, 0xE1A511C, |g| {
+        let n = g.usize_in(8, 40);
+        let k = g.usize_in(2, 4);
+        let m = g.contraction_matrix(n, 3, 0.9);
+        let sparse = SparseMatrix::from_csr(m);
+        let csc = sparse.csc();
+        let mut part = Partition::contiguous(n, k).unwrap();
+        // per-PID live state: (owned, local_of, LocalSystem, Interner)
+        let mut built: Vec<BuiltLocal> =
+            (0..k).map(|pid| build_for_pid(csc, &part, pid)).collect();
+        for _ in 0..g.usize_in(1, 6) {
+            let from = g.usize_in(0, k - 1);
+            let to = g.usize_in(0, k - 1);
+            let members = part.part(from).to_vec();
+            if from == to || members.len() < 2 {
+                continue;
+            }
+            let take = g.usize_in(1, members.len() - 1);
+            let moved: Vec<usize> = members[..take].to_vec();
+            let Ok(next) = part.transfer(&moved, to) else {
+                continue;
+            };
+            part = next;
+            // shipper sheds the moved slots
+            {
+                let (owned, local_of, sys, it) = &mut built[from];
+                let shipped: Vec<bool> =
+                    owned.iter().map(|i| moved.binary_search(i).is_ok()).collect();
+                let mut new_slot = vec![u32::MAX; owned.len()];
+                let mut s = 0u32;
+                for (t, &sh) in shipped.iter().enumerate() {
+                    if !sh {
+                        new_slot[t] = s;
+                        s += 1;
+                    }
+                }
+                sys.shed(owned, &shipped, &new_slot, part.owners(), |d, j| {
+                    it.intern(d, j)
+                });
+                let kept: Vec<usize> = owned
+                    .iter()
+                    .copied()
+                    .filter(|i| moved.binary_search(i).is_err())
+                    .collect();
+                for &i in &moved {
+                    local_of[i] = usize::MAX;
+                }
+                for (t, &i) in kept.iter().enumerate() {
+                    local_of[i] = t;
+                }
+                *owned = kept;
+            }
+            // receiver adopts them (appended, like a handoff fold)
+            {
+                let (owned, local_of, sys, it) = &mut built[to];
+                for &i in &moved {
+                    local_of[i] = owned.len();
+                    owned.push(i);
+                }
+                sys.adopt(csc, &moved, local_of, part.owners(), |d, j| {
+                    it.intern(d, j)
+                });
+            }
+            // bystanders retarget in place
+            for pid in 0..k {
+                if pid == from || pid == to {
+                    continue;
+                }
+                let (_, local_of, sys, it) = &mut built[pid];
+                assert!(
+                    sys.retarget(local_of, part.owners(), |d, j| it.intern(d, j)),
+                    "a bystander never needs a structural rebuild"
+                );
+            }
+            // every PID's patched system ≡ a fresh build + fresh interner
+            for pid in 0..k {
+                let (owned, _, sys, it) = &built[pid];
+                let (f_owned, _, fresh, fresh_it) = build_for_pid(csc, &part, pid);
+                assert_eq!(owned.len(), f_owned.len(), "pid {pid} cover drifted");
+                for t in 0..owned.len() {
+                    // patched slots are in adoption order, fresh slots in
+                    // sorted order: compare per *coordinate*
+                    let ft = f_owned
+                        .iter()
+                        .position(|&i| i == owned[t])
+                        .expect("same owned set");
+                    let (fp, op) = diffuse_local(sys, it, k, owned.len(), t, 1.0);
+                    let (ff, of) = diffuse_local(&fresh, &fresh_it, k, f_owned.len(), ft, 1.0);
+                    // block additions land on local slots — map both back
+                    // to coordinates before comparing
+                    let mut by_coord_p: Vec<(usize, f64)> = fp
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, v)| **v != 0.0)
+                        .map(|(s, &v)| (owned[s], v))
+                        .collect();
+                    let mut by_coord_f: Vec<(usize, f64)> = ff
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, v)| **v != 0.0)
+                        .map(|(s, &v)| (f_owned[s], v))
+                        .collect();
+                    by_coord_p.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    by_coord_f.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    assert_eq!(by_coord_p, by_coord_f, "pid {pid} block diverged");
+                    assert_eq!(op, of, "pid {pid} remnant diverged");
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn patched_local_system_equals_fresh_build_across_epochs() {
     run_cases(15, 0xEF0C4, |g| {
         let n = g.usize_in(12, 40);

@@ -1,18 +1,24 @@
 #!/usr/bin/env python3
-"""Perf-regression gate over the committed BENCH_stream.json baseline.
+"""Perf-regression gate over the committed BENCH_*.json baselines.
 
-Compares the streaming bench's fresh artifact against the committed
-baseline and fails (exit 1) when the kernel regressed by more than
---max-regress (default 20%).
+Compares a fresh bench artifact against its committed baseline and fails
+(exit 1) when the tracked metric regressed by more than --max-regress
+(default 20%). Two artifact kinds:
 
-Two comparisons, by reliability:
+  * --kind stream (default) — `benches/streaming_churn.rs`:
+      - local_vs_global_speedup: the local-block / global-walk
+        diffusions/sec ratio, measured in the same binary on the same
+        machine. Close to machine-independent, so always enforced.
+      - absolute diffusions/sec: only enforced when the baseline was
+        recorded in the same environment (the "environment" field
+        matches) — raw cross-machine throughput is noise, not signal.
 
-  * local_vs_global_speedup — the local-block / global-walk diffusions/sec
-    ratio, measured in the same binary on the same machine. It is close to
-    machine-independent, so it is always enforced against the baseline.
-  * absolute diffusions/sec — only enforced when the baseline was recorded
-    in the same environment (the "environment" field matches), since raw
-    throughput across different machines is noise, not signal.
+  * --kind elastic — `benches/elastic_pool.rs`:
+      - elastic_vs_fixed_speedup: elastic-pool vs fixed-K time-to-
+        converge under the hotspot/straggler scenario, same-binary
+        same-machine ratio; always enforced. It must also stay above
+        1.0 — elastic slower than fixed-K is a correctness-grade
+        regression of the pool scheduler, whatever the baseline says.
 
 A baseline with "measured": false is a bootstrap placeholder (the perf
 trajectory has not recorded its first real run yet): the gate prints the
@@ -35,39 +41,31 @@ def fmt(value, spec):
     return format(value, spec) if isinstance(value, (int, float)) else "n/a"
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", required=True, help="committed BENCH_stream.json")
-    ap.add_argument("--current", required=True, help="freshly produced BENCH_stream.json")
-    ap.add_argument("--max-regress", type=float, default=0.20,
-                    help="allowed fractional regression (default 0.20)")
-    args = ap.parse_args()
+def gate_ratio(failures, name, base_value, cur_value, tol, max_regress):
+    """Enforce a same-binary ratio metric against its baseline floor."""
+    if not base_value:
+        return
+    floor = base_value * tol
+    print(f"baseline {name}={base_value:.2f}x  (floor {floor:.2f}x)")
+    if not isinstance(cur_value, (int, float)) or cur_value < floor:
+        failures.append(
+            f"{name} regressed: {cur_value} < {floor:.2f} "
+            f"(baseline {base_value:.2f}, tolerance {max_regress:.0%})")
 
-    base = load(args.baseline)
-    cur = load(args.current)
 
+def gate_stream(base, cur, args, failures):
+    tol = 1.0 - args.max_regress
     cur_speedup = cur.get("local_vs_global_speedup")
     cur_rate = (cur.get("local") or {}).get("init_diffusions_per_sec")
     print(f"current: speedup={fmt(cur_speedup, '.2f')}x  "
           f"local diffusions/sec={fmt(cur_rate, '.3e')}  env={cur.get('environment')}")
-
     if not base.get("measured", False):
         print("baseline is a bootstrap placeholder (measured=false): gate passes; "
               "seed it from this run's uploaded artifact to arm the gate.")
-        return 0
-
-    failures = []
-    tol = 1.0 - args.max_regress
-
-    base_speedup = base.get("local_vs_global_speedup")
-    if base_speedup:
-        floor = base_speedup * tol
-        print(f"baseline speedup={base_speedup:.2f}x  (floor {floor:.2f}x)")
-        if not isinstance(cur_speedup, (int, float)) or cur_speedup < floor:
-            failures.append(
-                f"local_vs_global_speedup regressed: {cur_speedup} < {floor:.2f} "
-                f"(baseline {base_speedup:.2f}, tolerance {args.max_regress:.0%})")
-
+        return
+    gate_ratio(failures, "local_vs_global_speedup",
+               base.get("local_vs_global_speedup"), cur_speedup, tol,
+               args.max_regress)
     base_rate = (base.get("local") or {}).get("init_diffusions_per_sec")
     if base_rate and base.get("environment") == cur.get("environment"):
         floor = base_rate * tol
@@ -79,6 +77,47 @@ def main():
     elif base_rate:
         print("baseline recorded in a different environment: absolute "
               "diffusions/sec not enforced (ratio gate above still applies)")
+
+
+def gate_elastic(base, cur, args, failures):
+    tol = 1.0 - args.max_regress
+    cur_speedup = cur.get("elastic_vs_fixed_speedup")
+    print(f"current: elastic_vs_fixed={fmt(cur_speedup, '.2f')}x  "
+          f"spawned={cur.get('pool_spawned')}  peak={cur.get('pool_peak_live')}  "
+          f"env={cur.get('environment')}")
+    # elastic must beat fixed-K regardless of the baseline state — the
+    # bench asserts this too, so only an artifact edited by hand or a
+    # skipped assert could get here, but the gate is the last line
+    if isinstance(cur_speedup, (int, float)) and cur_speedup <= 1.0:
+        failures.append(
+            f"elastic_vs_fixed_speedup {cur_speedup:.2f}x <= 1.0: the elastic "
+            "pool no longer beats fixed-K under the hotspot scenario")
+    if not base.get("measured", False):
+        print("baseline is a bootstrap placeholder (measured=false): gate passes; "
+              "seed it from this run's uploaded artifact to arm the gate.")
+        return
+    gate_ratio(failures, "elastic_vs_fixed_speedup",
+               base.get("elastic_vs_fixed_speedup"), cur_speedup, tol,
+               args.max_regress)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="committed BENCH_*.json")
+    ap.add_argument("--current", required=True, help="freshly produced BENCH_*.json")
+    ap.add_argument("--kind", choices=["stream", "elastic"], default="stream",
+                    help="which bench artifact schema to gate (default stream)")
+    ap.add_argument("--max-regress", type=float, default=0.20,
+                    help="allowed fractional regression (default 0.20)")
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    cur = load(args.current)
+    failures = []
+    if args.kind == "elastic":
+        gate_elastic(base, cur, args, failures)
+    else:
+        gate_stream(base, cur, args, failures)
 
     if failures:
         for f in failures:
