@@ -3,12 +3,16 @@
 //! V2 restart on every batch (the baseline an offline system pays) — plus
 //! the **kernel head-to-head**: the same churn workload driven through the
 //! partition-local block kernel and through the pre-refactor global-walk
-//! kernel, in the same binary, recording the diffusions/sec ratio.
+//! kernel, in the same binary, recording the diffusions/sec ratio — plus
+//! the **epoch-protocol head-to-head**: the same churn driven through the
+//! gather (leader rebase) and local (V1 halo rebase) epoch protocols,
+//! recording the per-batch epoch-transition latency each pays.
 //!
 //! Emits `BENCH_stream.json` (machine-readable: updates/sec,
-//! time-to-reconverge, diffusions/sec per kernel, and the local/global
-//! speedup) into `DITER_BENCH_JSON_DIR` (default `.`). The committed copy
-//! at the repo root is the perf-trajectory baseline the CI gate
+//! time-to-reconverge, diffusions/sec per kernel, the local/global kernel
+//! speedup, and the local/gather transition speedup) into
+//! `DITER_BENCH_JSON_DIR` (default `.`). The committed copy at the repo
+//! root is the perf-trajectory baseline the CI gate
 //! (`tools/bench_gate.py`) compares against.
 //!
 //! Env knobs: `DITER_BENCH_N` (graph size), `DITER_BENCH_JSON_DIR`
@@ -20,8 +24,9 @@
 use std::time::Duration;
 
 use diter::bench_harness::{bench_header, bench_json_dir, fmt_secs, Json, Table};
-use diter::coordinator::{v2, DistributedConfig, KernelKind, StreamingEngine};
+use diter::coordinator::{v2, DistributedConfig, KernelKind, RebaseMode, StreamingEngine};
 use diter::graph::{power_law_web_graph, ChurnModel, MutableDigraph, MutationStream};
+use diter::linalg::vec_ops::dist1;
 use diter::partition::Partition;
 use diter::solver::SequenceKind;
 
@@ -116,6 +121,63 @@ fn run_kernel(n: usize, kernel: KernelKind, batches: usize, batch_size: usize) -
         reconverge_walls: walls,
         epoch_updates,
         epoch_wall,
+    }
+}
+
+/// One epoch protocol's run over the shared churn workload: the per-batch
+/// transition latency (the quantity the protocols trade — the
+/// reconvergence after it is common to both) and the final solution for
+/// the cross-protocol agreement check.
+struct RebaseStats {
+    transition_secs: Vec<f64>,
+    reconverge_secs: Vec<f64>,
+    final_x: Vec<f64>,
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Drive one engine (one epoch protocol) through the head-to-head
+/// workload — same seeds per protocol, so both see identical mutation
+/// sequences over identically-evolving graphs.
+fn run_rebase_mode(n: usize, mode: RebaseMode, batches: usize, batch_size: usize) -> RebaseStats {
+    let g = power_law_web_graph(n, 8, 0.1, 7);
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let cfg = base_cfg(n, KernelKind::LocalBlock).with_rebase(mode);
+    let mut engine = StreamingEngine::new(mg, 0.85, true, cfg).expect("engine");
+    let init = engine.converge().expect("initial solve");
+    assert!(
+        init.solution.converged,
+        "[{}] initial solve must converge (residual {:.3e})",
+        mode.name(),
+        init.solution.residual
+    );
+    let mut stream = MutationStream::new(ChurnModel::RandomRewire, 977);
+    let mut transition_secs = Vec::with_capacity(batches);
+    let mut reconverge_secs = Vec::with_capacity(batches);
+    for _ in 0..batches {
+        let batch = stream.next_batch(engine.graph(), batch_size);
+        let report = engine.apply_batch(&batch).expect("apply");
+        assert!(
+            report.solution.converged,
+            "[{}] reconverge failed (residual {:.3e})",
+            mode.name(),
+            report.solution.residual
+        );
+        transition_secs.push(engine.last_rebase_secs());
+        reconverge_secs.push(report.solution.wall_secs);
+    }
+    let final_x = engine.solution().expect("solution");
+    engine.finish().expect("finish");
+    RebaseStats {
+        transition_secs,
+        reconverge_secs,
+        final_x,
     }
 }
 
@@ -237,7 +299,28 @@ fn main() {
     print!("{}", head.render());
     println!("\nlocal-block vs global-walk: {speedup:.2}x diffusions/sec on the cold solve");
 
-    // ---- part 3: machine-readable artifact ------------------------------
+    // ---- part 3: epoch-protocol head-to-head ----------------------------
+    println!("\nepoch-protocol head-to-head (same churn, same binary):");
+    let gather = run_rebase_mode(n, RebaseMode::Gather, 6, 128);
+    let local_rb = run_rebase_mode(n, RebaseMode::Local, 6, 128);
+    let agreement = dist1(&gather.final_x, &local_rb.final_x);
+    assert!(agreement < 1e-6, "protocols disagree on the fixed point: Δ₁ = {agreement:.3e}");
+    let rebase_speedup = mean(&gather.transition_secs) / mean(&local_rb.transition_secs).max(1e-9);
+    let mut proto = Table::new(&["protocol", "transition", "reconverge"]);
+    for (name, s) in [("gather", &gather), ("local", &local_rb)] {
+        proto.row(&[
+            name.into(),
+            fmt_secs(mean(&s.transition_secs)),
+            fmt_secs(mean(&s.reconverge_secs)),
+        ]);
+    }
+    print!("{}", proto.render());
+    println!(
+        "\nlocal vs gather epoch transition: {rebase_speedup:.2}x \
+         (fixed points agree, Δ₁ = {agreement:.1e})"
+    );
+
+    // ---- part 4: machine-readable artifact ------------------------------
     let json = Json::new()
         .int_field("schema", 1)
         .str_field("bench", "streaming_churn")
@@ -251,7 +334,22 @@ fn main() {
         .arr_num_field("cold_vs_warm_update_saving_by_batch", &upd_savings)
         .obj_field("local", local.to_json())
         .obj_field("global", global.to_json())
-        .num_field("local_vs_global_speedup", speedup);
+        .num_field("local_vs_global_speedup", speedup)
+        .obj_field(
+            "rebase_gather",
+            Json::new()
+                .num_field("transition_secs_mean", mean(&gather.transition_secs))
+                .arr_num_field("transition_secs", &gather.transition_secs)
+                .num_field("reconverge_secs_mean", mean(&gather.reconverge_secs)),
+        )
+        .obj_field(
+            "rebase_local",
+            Json::new()
+                .num_field("transition_secs_mean", mean(&local_rb.transition_secs))
+                .arr_num_field("transition_secs", &local_rb.transition_secs)
+                .num_field("reconverge_secs_mean", mean(&local_rb.reconverge_secs)),
+        )
+        .num_field("rebase_local_vs_gather_speedup", rebase_speedup);
     let path = bench_json_dir().join("BENCH_stream.json");
     json.write(&path).expect("write BENCH_stream.json");
     println!("wrote {}", path.display());

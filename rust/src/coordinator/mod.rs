@@ -90,6 +90,45 @@ impl KernelKind {
     }
 }
 
+/// Which epoch-transition protocol the streaming engine runs when the
+/// graph mutates (DESIGN.md §7). Both reach the same fixed point; they
+/// differ in who computes the rebased fluid `B' = P'·H + B − H` and in
+/// what crosses the wire at an epoch boundary.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RebaseMode {
+    /// V2-style leader rebase (the PR 1 protocol): quiesce handoffs,
+    /// checkpoint every worker (pause + gather full H at the leader),
+    /// compute each PID's `B'` slice centrally, scatter and resume.
+    #[default]
+    Gather,
+    /// V1-style local rebase (§3.1 full/halo history): the coordinator
+    /// broadcasts only the mutation delta (dirty columns); each worker
+    /// recomputes its own fluid slice in place via
+    /// `F' = F + (P'−P)·H`, exchanging just the halo H values of the
+    /// dirty columns with owning peers ([`worker::WorkerMsg::HaloSlice`]).
+    /// No leader gather, no full-H scatter, and workers never stop
+    /// diffusing non-dirty fluid.
+    Local,
+}
+
+impl RebaseMode {
+    /// Parse a CLI/env name: `gather`, `local`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "gather" => Some(Self::Gather),
+            "local" => Some(Self::Local),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Gather => "gather",
+            Self::Local => "local",
+        }
+    }
+}
+
 /// Configuration shared by both distributed schemes.
 #[derive(Clone, Debug)]
 pub struct DistributedConfig {
@@ -125,6 +164,9 @@ pub struct DistributedConfig {
     pub straggler: Option<Straggler>,
     /// which inner diffusion kernel the workers run (perf comparisons)
     pub kernel: KernelKind,
+    /// which epoch-transition protocol the streaming engine runs
+    /// (`--rebase gather|local`; one-shot solves never rebase)
+    pub rebase: RebaseMode,
 }
 
 /// Straggler injection: PID `pid` is throttled to at most
@@ -153,11 +195,17 @@ impl DistributedConfig {
             elastic: None,
             straggler: None,
             kernel: KernelKind::default(),
+            rebase: RebaseMode::default(),
         }
     }
 
     pub fn with_kernel(mut self, kernel: KernelKind) -> Self {
         self.kernel = kernel;
+        self
+    }
+
+    pub fn with_rebase(mut self, rebase: RebaseMode) -> Self {
+        self.rebase = rebase;
         self
     }
 

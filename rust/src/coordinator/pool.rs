@@ -89,6 +89,19 @@ pub(crate) enum Ctrl {
     Snapshot {
         reply: Sender<(usize, Vec<usize>, Vec<f64>)>,
     },
+    /// V1-style local epoch transition ([`super::RebaseMode::Local`]):
+    /// the worker freezes its owned dirty columns, exchanges halo H
+    /// values with its peers over the bus, rebases its own fluid slice in
+    /// place, and sends its pid on `reply` once it has entered `epoch` —
+    /// all without pausing the diffusion of non-dirty fluid. No
+    /// checkpoint, no scatter.
+    RebaseLocal {
+        epoch: u64,
+        problem: Arc<FixedPointProblem>,
+        /// the mutation delta: matrix columns that changed, ascending
+        dirty: Arc<Vec<usize>>,
+        reply: Sender<usize>,
+    },
     /// Terminate; the final (Ω, H) comes back through the join handle.
     Shutdown,
 }
@@ -269,6 +282,7 @@ impl WorkerPool {
             core,
             ctrl: rx,
             state,
+            rebase_ack: None,
         };
         WorkerHandle {
             ctrl: tx,
@@ -363,6 +377,43 @@ impl WorkerPool {
                     dirty: dirty.clone(),
                 })
                 .map_err(|_| DiterError::Coordinator("pool worker gone".into()))?;
+        }
+        Ok(())
+    }
+
+    /// Drive a V1-style **local** epoch transition: broadcast the
+    /// mutation delta to every live worker and wait until each one has
+    /// exchanged its halo and entered `epoch`. Workers never pause — the
+    /// coordinator's wait here is for monitor sanity (convergence must
+    /// not be judged while fluid deltas are still unapplied), not a
+    /// barrier between workers: each worker proceeds the moment its own
+    /// halo values arrive, independent of its peers' progress.
+    pub fn rebase_local(
+        &mut self,
+        epoch: u64,
+        problem: Arc<FixedPointProblem>,
+        dirty: Arc<Vec<usize>>,
+    ) -> Result<()> {
+        self.epoch = epoch;
+        self.problem = problem.clone();
+        let (tx, rx) = channel::<usize>();
+        let mut expect = 0usize;
+        for slot in self.slots.iter().flatten() {
+            slot.ctrl
+                .send(Ctrl::RebaseLocal {
+                    epoch,
+                    problem: problem.clone(),
+                    dirty: dirty.clone(),
+                    reply: tx.clone(),
+                })
+                .map_err(|_| DiterError::Coordinator("pool worker gone".into()))?;
+            expect += 1;
+        }
+        drop(tx);
+        for _ in 0..expect {
+            rx.recv_timeout(Duration::from_secs(30)).map_err(|_| {
+                DiterError::Coordinator("local rebase ack timed out (halo exchange wedged)".into())
+            })?;
         }
         Ok(())
     }
@@ -766,6 +817,9 @@ struct PoolWorker {
     core: WorkerCore,
     ctrl: Receiver<Ctrl>,
     state: Arc<MonitorState>,
+    /// (target epoch, ack channel) of an in-flight local rebase — sent
+    /// once the core's halo state machine has entered the epoch
+    rebase_ack: Option<(u64, Sender<usize>)>,
 }
 
 impl PoolWorker {
@@ -774,6 +828,7 @@ impl PoolWorker {
             if self.state.should_stop() {
                 break;
             }
+            self.maybe_ack_rebase();
             match self.ctrl.try_recv() {
                 Ok(c) => {
                     if !self.handle_ctrl(c) {
@@ -790,6 +845,21 @@ impl PoolWorker {
             }
         }
         self.core.finish()
+    }
+
+    /// Ack a completed local epoch entry back to the coordinator. The
+    /// entry happens inside `step` (when the last awaited halo arrives)
+    /// or inside `handle_ctrl` (nothing awaited), so the check runs every
+    /// loop iteration.
+    fn maybe_ack_rebase(&mut self) {
+        let entered =
+            matches!(&self.rebase_ack, Some((target, _)) if self.core.epoch() >= *target);
+        if !entered {
+            return;
+        }
+        if let Some((_, tx)) = self.rebase_ack.take() {
+            let _ = tx.send(self.core.pid());
+        }
     }
 
     fn reply_state(&self, reply: &Sender<(usize, Vec<usize>, Vec<f64>)>) {
@@ -830,9 +900,26 @@ impl PoolWorker {
                         Ok(Ctrl::Snapshot { reply }) | Ok(Ctrl::Checkpoint { reply }) => {
                             self.reply_state(&reply);
                         }
+                        Ok(Ctrl::RebaseLocal { .. }) => {
+                            // the two protocols never mix within a run: a
+                            // checkpoint pause (gather) cannot receive a
+                            // local transition
+                            debug_assert!(false, "RebaseLocal during a checkpoint pause");
+                        }
                         Ok(Ctrl::Shutdown) | Err(_) => return false,
                     }
                 }
+            }
+            Ctrl::RebaseLocal {
+                epoch,
+                problem,
+                dirty,
+                reply,
+            } => {
+                self.core.begin_rebase_local(epoch, problem, dirty);
+                // acked from the run loop once the halo exchange settles
+                self.rebase_ack = Some((epoch, reply));
+                true
             }
             Ctrl::Resume {
                 epoch,

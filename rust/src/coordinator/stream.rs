@@ -5,6 +5,15 @@
 //!
 //! ## Epoch / rebase protocol
 //!
+//! Two selectable protocols drive the epoch transition
+//! ([`super::RebaseMode`], `stream --rebase gather|local`): the
+//! **gather** protocol below (PR 1's leader-side rebase), and the
+//! **local** protocol (§3.1 / V1 full-history: the coordinator
+//! broadcasts only the dirty-column delta, workers exchange halo H
+//! values peer-to-peer and recompute their own fluid slices in place via
+//! `F' = F + (P'−P)·H` — no leader gather, no scatter, and non-dirty
+//! diffusion never stops; see DESIGN.md §7).
+//!
 //! The engine owns one persistent worker thread per PID (the shared
 //! [`super::worker::WorkerCore`] loop, same partial-state fluid scheme as
 //! [`super::v2`]) plus a coordinator-side control channel. Applying a
@@ -51,7 +60,7 @@ use super::adaptive::AdaptiveDriver;
 use super::monitor::MonitorState;
 use super::pool::{PoolStats, WorkerPool};
 use super::update;
-use super::{DistributedConfig, DistributedSolution};
+use super::{DistributedConfig, DistributedSolution, RebaseMode};
 use crate::error::{DiterError, Result};
 use crate::graph::{MutableDigraph, Mutation};
 use crate::linalg::vec_ops::norm1;
@@ -106,6 +115,10 @@ pub struct StreamingEngine {
     epochs_done: u64,
     mutations_applied: u64,
     rate: RateMeter,
+    /// wall seconds of the most recent epoch transition (quiesce through
+    /// resume/acks) — the quantity the gather-vs-local bench head-to-head
+    /// compares
+    last_rebase_secs: f64,
 }
 
 impl StreamingEngine {
@@ -160,6 +173,7 @@ impl StreamingEngine {
             epochs_done: 0,
             mutations_applied: 0,
             rate: RateMeter::new(0.4),
+            last_rebase_secs: 0.0,
         })
     }
 
@@ -202,6 +216,22 @@ impl StreamingEngine {
     /// EWMA steady-state updates/sec over completed epochs.
     pub fn steady_updates_per_sec(&self) -> f64 {
         self.rate.rate().unwrap_or(0.0)
+    }
+
+    /// Wall seconds the most recent epoch transition took (0.0 before the
+    /// first mutation batch): handoff quiesce through worker resume. This
+    /// is the latency the `--rebase local|gather` protocols trade — the
+    /// reconvergence after it is common to both.
+    pub fn last_rebase_secs(&self) -> f64 {
+        self.last_rebase_secs
+    }
+
+    /// Mutable access to the worker pool, for tests and external
+    /// lifecycle drivers (the conservation fuzz harness fires
+    /// spawn/retire/handoff events directly between epochs). Production
+    /// policy goes through [`super::ElasticConfig`] and the poll loop.
+    pub fn pool_mut(&mut self) -> &mut WorkerPool {
+        &mut self.pool
     }
 
     /// Change the per-epoch convergence deadline (streaming deployments
@@ -352,15 +382,23 @@ impl StreamingEngine {
             / n as f64
     }
 
-    /// The epoch transition: quiesce handoffs → checkpoint → rebuild →
-    /// per-PID rebase → resume. See the module docs for the invariants.
+    /// The epoch transition. Common to both protocols: quiesce handoffs,
+    /// rebuild the system from the mutated graph. Then either the
+    /// **gather** protocol (checkpoint → leader-side per-PID rebase →
+    /// scatter/resume, the PR 1 scheme) or the **local** protocol
+    /// (broadcast the mutation delta; workers exchange halo H values and
+    /// rebase their own slices in place — no leader gather, no scatter,
+    /// non-dirty diffusion never stops). See the module docs and
+    /// DESIGN.md §7 for the invariants.
     fn rebase(&mut self) -> Result<()> {
         // no ownership installs while the epoch transition is in progress
         // (this also parks the elastic scheduler: its poll is a no-op on
         // a frozen table, so no spawn/retire can straddle the rebase)
+        let t0 = Instant::now();
         self.table.freeze();
         let r = self.rebase_frozen();
         self.table.unfreeze();
+        self.last_rebase_secs = t0.elapsed().as_secs_f64();
         r
     }
 
@@ -368,11 +406,12 @@ impl StreamingEngine {
         let n = self.problem.n();
         // 1. wait until every worker has synced with the final (frozen)
         //    ownership version AND every shipped (H, F) slice has folded
-        //    into its recipient — only then is the gathered history
-        //    guaranteed complete. Workers keep running meanwhile (they
-        //    are the ones applying the handoffs). The ack must be checked
-        //    BEFORE the inflight count: workers book begin_handoff before
-        //    acking, so this order can never observe a spurious zero.
+        //    into its recipient — only then is the held-coordinate cover
+        //    (and, for gather, the assembled history) guaranteed
+        //    complete. Workers keep running meanwhile (they are the ones
+        //    applying the handoffs). The ack must be checked BEFORE the
+        //    inflight count: workers book begin_handoff before acking, so
+        //    this order can never observe a spurious zero.
         let v = self.table.version();
         let quiesce_deadline = Instant::now() + Duration::from_secs(10);
         while !(self.table.all_acked(v) && self.table.handoffs_inflight() == 0) {
@@ -383,12 +422,44 @@ impl StreamingEngine {
             }
             std::thread::sleep(Duration::from_micros(100));
         }
-        // 2. checkpoint every live worker (they pause as the requests
-        //    land; workers still running only produce old-epoch parcels,
-        //    which the new epoch discards on arrival). With an elastic
-        //    pool the worker set is whatever survived spawn/retire — the
-        //    replies carry the coords, and the quiesce above guarantees
-        //    they form an exact cover.
+        // 2. rebuild the system from the mutated graph; the incremental
+        //    build reports which columns it recomputed — the workers'
+        //    LocalSystem patch set, and the local protocol's whole
+        //    mutation delta
+        let sys = self.graph.pagerank_system(self.damping, self.patch_dangling)?;
+        let dirty = self.graph.last_build_dirty_shared();
+        let problem = Arc::new(FixedPointProblem::new(sys.matrix, sys.b)?);
+        self.epoch += 1;
+        match self.cfg.rebase {
+            RebaseMode::Local => {
+                // §3.1 (V1): workers hold the history; each recomputes its
+                // own slice from the delta. A cold-cache build (dirty
+                // unknown) degenerates to the literal full-history
+                // exchange — every column treated as changed — which is
+                // still exact, just no longer cheap.
+                let dirty = dirty.unwrap_or_else(|| Arc::new((0..n).collect::<Vec<usize>>()));
+                self.pool.rebase_local(self.epoch, problem.clone(), dirty)?;
+            }
+            RebaseMode::Gather => self.rebase_gather(n, problem.clone(), dirty)?,
+        }
+        self.problem = problem;
+        self.epoch_base = self.shared.update_counts();
+        Ok(())
+    }
+
+    /// The PR 1 leader protocol: checkpoint every live worker (they pause
+    /// as the requests land; workers still running only produce old-epoch
+    /// parcels, which the new epoch discards on arrival), assemble the
+    /// full H, compute each PID's new fluid slice, scatter and resume.
+    /// With an elastic pool the worker set is whatever survived
+    /// spawn/retire — the replies carry the coords, and the quiesce in
+    /// `rebase_frozen` guarantees they form an exact cover.
+    fn rebase_gather(
+        &mut self,
+        n: usize,
+        problem: Arc<FixedPointProblem>,
+        dirty: Option<Arc<Vec<usize>>>,
+    ) -> Result<()> {
         let checkpointed = self.pool.checkpoint()?;
         let mut h = vec![0.0; n];
         let mut held: Vec<(usize, Vec<usize>)> = Vec::with_capacity(checkpointed.len());
@@ -398,28 +469,17 @@ impl StreamingEngine {
             }
             held.push((kk, coords));
         }
-        // 3. rebuild the system from the mutated graph; the incremental
-        //    build reports which columns it recomputed so the workers can
-        //    patch their LocalSystems instead of rebuilding them
-        let sys = self.graph.pagerank_system(self.damping, self.patch_dangling)?;
-        let dirty: Option<Arc<Vec<usize>>> = self
-            .graph
-            .last_build_dirty()
-            .map(|d| Arc::new(d.to_vec()));
-        let problem = Arc::new(FixedPointProblem::new(sys.matrix, sys.b)?);
-        // 4. per-PID rebase over each worker's held range + resume
-        self.epoch += 1;
         let mut slices = Vec::with_capacity(held.len());
         for (kk, coords) in held {
+            // the leader-side round-trip the local protocol eliminates —
+            // the scenario matrix asserts this counter stays 0 there
+            self.bus_metrics.add("rebase_gather_coords", coords.len() as u64);
             let f_slice = update::rebase_b_slice(problem.matrix(), &coords, &h, problem.b());
             // pre-publish so the monitor can't see a stale near-zero total
             self.shared.publish(kk, norm1(&f_slice));
             slices.push((kk, f_slice));
         }
-        self.pool.resume(self.epoch, problem.clone(), slices, dirty)?;
-        self.problem = problem;
-        self.epoch_base = self.shared.update_counts();
-        Ok(())
+        self.pool.resume(self.epoch, problem, slices, dirty)
     }
 
     /// Gather the assembled H from all workers without pausing them.
@@ -533,6 +593,62 @@ mod tests {
         // on the new system's exact fixed point (fluid conservation across
         // the epoch boundary).
         let mut eng = engine(100, 4, 13);
+        // no converge() here — workers are mid-diffusion
+        let mut stream = MutationStream::new(ChurnModel::RandomRewire, 5);
+        let batch = stream.next_batch(eng.graph(), 12);
+        let report = eng.apply_batch(&batch).unwrap();
+        assert!(report.solution.converged, "residual {}", report.solution.residual);
+        let want = cold_solution(eng.problem());
+        assert!(
+            dist1(&report.solution.x, &want) < 1e-7,
+            "Δ₁ = {}",
+            dist1(&report.solution.x, &want)
+        );
+        eng.finish().unwrap();
+    }
+
+    #[test]
+    fn local_rebase_reconverges_to_new_fixed_point() {
+        let n = 100;
+        let g = power_law_web_graph(n, 5, 0.1, 7);
+        let mg = MutableDigraph::from_digraph(&g, n);
+        let cfg = DistributedConfig::new(Partition::contiguous(n, 4).unwrap())
+            .with_tol(1e-10)
+            .with_seed(7)
+            .with_rebase(RebaseMode::Local);
+        let mut eng = StreamingEngine::new(mg, 0.85, true, cfg).unwrap();
+        eng.converge().unwrap();
+        let mut stream = MutationStream::new(ChurnModel::RandomRewire, 19);
+        for _ in 0..2 {
+            let batch = stream.next_batch(eng.graph(), 10);
+            let report = eng.apply_batch(&batch).unwrap();
+            assert!(report.solution.converged, "residual {}", report.solution.residual);
+            // the defining property: no leader gather/scatter ever ran
+            assert_eq!(report.solution.metrics["rebase_gather_coords"], 0);
+            let want = cold_solution(eng.problem());
+            assert!(
+                dist1(&report.solution.x, &want) < 1e-7,
+                "Δ₁ = {}",
+                dist1(&report.solution.x, &want)
+            );
+        }
+        assert!(eng.last_rebase_secs() > 0.0);
+        eng.finish().unwrap();
+    }
+
+    #[test]
+    fn local_rebase_mid_flight_conserves_the_computation() {
+        // the local transition fires BEFORE the initial solve converges:
+        // halo snapshots are then genuinely partial history, and the
+        // delta form must still land on the new system's fixed point
+        let n = 100;
+        let g = power_law_web_graph(n, 5, 0.1, 13);
+        let mg = MutableDigraph::from_digraph(&g, n);
+        let cfg = DistributedConfig::new(Partition::contiguous(n, 4).unwrap())
+            .with_tol(1e-10)
+            .with_seed(13)
+            .with_rebase(RebaseMode::Local);
+        let mut eng = StreamingEngine::new(mg, 0.85, true, cfg).unwrap();
         // no converge() here — workers are mid-diffusion
         let mut stream = MutationStream::new(ChurnModel::RandomRewire, 5);
         let batch = stream.next_batch(eng.graph(), 12);

@@ -20,7 +20,7 @@
 //! must be reset to the consistent `F'₀ = B'`.
 
 use crate::error::{DiterError, Result};
-use crate::sparse::SparseMatrix;
+use crate::sparse::{CscMatrix, SparseMatrix};
 
 /// Compute the rebased offset `B' = P'·H + B − H` (all coordinates).
 pub fn rebase_b(p_new: &SparseMatrix, h: &[f64], b: &[f64]) -> Result<Vec<f64>> {
@@ -47,6 +47,64 @@ pub fn rebase_b_slice(
         .iter()
         .map(|&i| csr.row_dot(i, h) + b[i] - h[i])
         .collect()
+}
+
+/// The §3.1 (V1, full/halo history) **local** rebase: patch one PID's
+/// fluid slice in place with the delta form `F' = F + (P' − P)·H`,
+/// reading only the columns that actually changed — everywhere else
+/// P' = P and the delta vanishes, which is why only the dirty columns'
+/// H values ever cross the wire.
+///
+/// `halo` carries `(u, H_u)` for every dirty column: the owner's own
+/// snapshot, or the value a peer shipped in a
+/// [`super::worker::WorkerMsg::HaloSlice`]. Each H_u must be the value
+/// at that column's switch instant (its owner freezes diffusion of `u`
+/// from the snapshot until its own epoch entry), which makes the delayed
+/// per-owner application exact — see DESIGN.md §7 for the argument.
+///
+/// Rows not owned here (`local_of[j] == usize::MAX`) are skipped; their
+/// owners apply the same contribution from their own halo view, so the
+/// per-PID applications concatenate to the full `(P'−P)·H` exactly once
+/// per coordinate. Returns the touched local slots (duplicates possible)
+/// so the caller can requeue them in its diffusion order.
+pub fn rebase_b_slice_local(
+    p_old: &CscMatrix,
+    p_new: &CscMatrix,
+    halo: &[(usize, f64)],
+    local_of: &[usize],
+    f: &mut [f64],
+) -> Vec<usize> {
+    let mut touched = Vec::new();
+    for &(u, hu) in halo {
+        if hu == 0.0 {
+            continue; // a never-diffused column contributes nothing
+        }
+        let (rows, vals) = p_old.col(u);
+        for e in 0..rows.len() {
+            let t = local_of[rows[e]];
+            if t != usize::MAX {
+                f[t] -= vals[e] * hu;
+                touched.push(t);
+            }
+        }
+        let (rows, vals) = p_new.col(u);
+        for e in 0..rows.len() {
+            let t = local_of[rows[e]];
+            if t != usize::MAX {
+                f[t] += vals[e] * hu;
+                touched.push(t);
+            }
+        }
+    }
+    touched
+}
+
+/// The dirty-column set two matrices disagree on (ascending): the inputs
+/// tests and callers without a [`crate::graph::MutableDigraph`] build
+/// report feed into [`rebase_b_slice_local`].
+pub fn differing_columns(a: &CscMatrix, b: &CscMatrix) -> Vec<usize> {
+    debug_assert_eq!(a.ncols(), b.ncols());
+    (0..a.ncols()).filter(|&u| a.col(u) != b.col(u)).collect()
 }
 
 #[cfg(test)]
@@ -108,5 +166,75 @@ mod tests {
     fn shape_errors() {
         let p = FixedPointProblem::from_linear_system(&paper_matrix(1), &[1.0; 4]).unwrap();
         assert!(rebase_b(p.matrix(), &[0.0; 3], p.b()).is_err());
+    }
+
+    /// The V1 delta form over dirty columns must agree with the leader's
+    /// `B'` slice: `F + (P'−P)·H ≡ P'·H + B − H` restricted to any owned
+    /// set, when F is the consistent fluid of the old system.
+    #[test]
+    fn local_delta_matches_leader_slice() {
+        let p_old = FixedPointProblem::from_linear_system(&paper_matrix(1), &[1.0; 4]).unwrap();
+        let p_new = FixedPointProblem::from_linear_system(&paper_matrix(4), &[1.0; 4]).unwrap();
+        let h = vec![0.07, 0.21, 0.33, 0.48];
+        let dirty = differing_columns(p_old.matrix().csc(), p_new.matrix().csc());
+        assert!(!dirty.is_empty(), "A(1) and A(4) must differ somewhere");
+        for owned in [vec![0usize, 1], vec![2, 3], vec![1, 3], vec![0, 1, 2, 3]] {
+            let mut local_of = vec![usize::MAX; 4];
+            for (t, &i) in owned.iter().enumerate() {
+                local_of[i] = t;
+            }
+            // F = consistent fluid of the old system over the owned slice
+            let full_f = p_old.fluid(&h);
+            let mut f: Vec<f64> = owned.iter().map(|&i| full_f[i]).collect();
+            let halo: Vec<(usize, f64)> = dirty.iter().map(|&u| (u, h[u])).collect();
+            let touched = rebase_b_slice_local(
+                p_old.matrix().csc(),
+                p_new.matrix().csc(),
+                &halo,
+                &local_of,
+                &mut f,
+            );
+            let want = rebase_b_slice(p_new.matrix(), &owned, &h, p_new.b());
+            for t in 0..owned.len() {
+                assert!(
+                    (f[t] - want[t]).abs() < 1e-12,
+                    "owned {owned:?} slot {t}: {} vs {}",
+                    f[t],
+                    want[t]
+                );
+            }
+            for &t in &touched {
+                assert!(t < owned.len(), "touched slot out of range");
+            }
+        }
+    }
+
+    /// Columns where P' = P contribute no delta, and zero-history columns
+    /// are skipped entirely.
+    #[test]
+    fn local_delta_ignores_clean_and_zero_history_columns() {
+        let p = FixedPointProblem::from_linear_system(&paper_matrix(2), &[1.0; 4]).unwrap();
+        let h = vec![0.1, 0.0, 0.3, 0.0];
+        let local_of: Vec<usize> = (0..4).collect();
+        let mut f = p.fluid(&h);
+        let before = f.clone();
+        // identical matrices: every "dirty" column's delta is zero
+        let halo: Vec<(usize, f64)> = (0..4).map(|u| (u, h[u])).collect();
+        let touched =
+            rebase_b_slice_local(p.matrix().csc(), p.matrix().csc(), &halo, &local_of, &mut f);
+        for t in 0..4 {
+            assert!((f[t] - before[t]).abs() < 1e-15);
+        }
+        // only nonzero-history columns walk their entries at all: every
+        // touched slot is a row of such a column
+        let live_cols: Vec<usize> = (0..4).filter(|&u| h[u] != 0.0).collect();
+        for &t in &touched {
+            let reachable = live_cols.iter().any(|&u| {
+                let (rows, _) = p.matrix().csc().col(u);
+                rows.contains(&t)
+            });
+            assert!(reachable, "slot {t} touched by a zero-history column");
+        }
+        assert!(differing_columns(p.matrix().csc(), p.matrix().csc()).is_empty());
     }
 }

@@ -32,6 +32,31 @@ pub struct SliceMsg {
     pub values: Vec<f64>,
 }
 
+/// The §4.1/§4.3 sharing decision for one V1 round, in one place: share
+/// when the local threshold was crossed **or** a peer update arrived —
+/// but only if the local slice actually changed since the last share
+/// (the dirty guard that keeps the literal share-on-receive rule from
+/// echoing forever once converged) — and decay `T_k ← T_k/α` only on a
+/// real crossing with progress, so a converged PID spinning at
+/// `r_k = 0 < T_k` cannot drive its threshold toward zero and its share
+/// rate toward infinity. Returns whether to share; the caller clears its
+/// dirty bit after a share. This is the edge of the seed V1 scheme the
+/// `RebaseMode::Local` streaming protocol builds on, extracted so it is
+/// unit-testable.
+pub fn share_and_decay(
+    r_k: f64,
+    threshold: &mut f64,
+    alpha: f64,
+    got_update: bool,
+    dirty: bool,
+) -> bool {
+    let threshold_hit = r_k < *threshold;
+    if threshold_hit && dirty {
+        *threshold /= alpha; // §4.1 (only on real progress)
+    }
+    (threshold_hit || got_update) && dirty
+}
+
 /// Solve with the V1 scheme. The partition in `cfg` must cover the
 /// problem's coordinates.
 pub fn solve_v1(
@@ -189,11 +214,7 @@ fn v1_worker(
         }
         state.publish(k, r_k);
         // 4. sharing triggers (§4.3)
-        let threshold_hit = r_k < threshold;
-        if threshold_hit && dirty {
-            threshold /= cfg.threshold_alpha; // §4.1 (only on real progress)
-        }
-        if (threshold_hit || got_update) && dirty {
+        if share_and_decay(r_k, &mut threshold, cfg.threshold_alpha, got_update, dirty) {
             let values: Vec<f64> = owned.iter().map(|&i| h[i]).collect();
             let bytes = values.len() * 8 + 16;
             let _ = ep.broadcast(
@@ -288,5 +309,52 @@ mod tests {
         let problem = a1_problem();
         let cfg = DistributedConfig::new(Partition::contiguous(6, 2).unwrap());
         assert!(solve_v1(&problem, &cfg).is_err());
+    }
+
+    #[test]
+    fn threshold_decays_geometrically_on_real_crossings() {
+        // §4.1: T_k ← T_k/α exactly once per crossing round with progress
+        let mut t = 1.0;
+        for round in 1..=5 {
+            assert!(share_and_decay(1e-6, &mut t, 2.0, false, true));
+            assert!((t - 1.0 / 2.0f64.powi(round)).abs() < 1e-15, "round {round}: T = {t}");
+        }
+        // a different α divides by that α
+        let mut t = 8.0;
+        assert!(share_and_decay(0.0, &mut t, 4.0, false, true));
+        assert_eq!(t, 2.0);
+    }
+
+    #[test]
+    fn threshold_never_decays_without_progress() {
+        // a converged PID (clean slice) spinning at r_k < T_k must not
+        // drive T_k to zero — the decay is gated on the dirty bit
+        let mut t = 1e-3;
+        for _ in 0..100 {
+            assert!(!share_and_decay(0.0, &mut t, 2.0, false, false));
+            assert!(!share_and_decay(0.0, &mut t, 2.0, true, false));
+        }
+        assert_eq!(t, 1e-3, "threshold untouched without progress");
+        // and never decays while above the threshold, dirty or not
+        let mut t = 1e-3;
+        assert!(!share_and_decay(1.0, &mut t, 2.0, false, true));
+        assert_eq!(t, 1e-3);
+    }
+
+    #[test]
+    fn dirty_guard_blocks_the_share_on_receive_echo() {
+        // the literal §4.3 rule ("share when you receive") echoes forever
+        // between converged PIDs; the dirty guard is what breaks the loop
+        let mut t = 1.0;
+        assert!(share_and_decay(0.5, &mut t, 2.0, true, true), "peer update + progress");
+        assert_eq!(t, 1.0, "no crossing, no decay");
+        assert!(
+            !share_and_decay(0.5, &mut t, 2.0, true, false),
+            "peer update without progress: suppressed"
+        );
+        assert!(
+            !share_and_decay(0.5, &mut t, 2.0, false, true),
+            "no trigger at all above the threshold"
+        );
     }
 }

@@ -49,12 +49,12 @@
 //!   and waits for zero before checkpointing, so the gathered H used for
 //!   `B' = P'·H + B − H` is always complete.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::monitor::MonitorState;
-use super::{DistributedConfig, KernelKind};
+use super::{update, DistributedConfig, KernelKind, RebaseMode};
 use crate::linalg::vec_ops::norm1;
 use crate::metrics::MetricSet;
 use crate::partition::{OwnershipTable, Partition};
@@ -64,11 +64,14 @@ use crate::transport::{CoalesceBuffer, Endpoint, Received};
 
 /// Metric names the worker core registers on top of the bus metrics.
 pub const WORKER_METRICS: &[&str] = &[
-    "handoffs_total",     // handoff slices shipped between PIDs
-    "handoffs_planned",   // rebalance decisions installed by the leader
-    "handoff_coords",     // coordinates moved across all handoffs
-    "fluid_forwarded",    // parcels re-routed after an ownership change
-    "load_imbalance_ppm", // current max Ω size / ideal × 1e6 (gauge)
+    "handoffs_total",      // handoff slices shipped between PIDs
+    "handoffs_planned",    // rebalance decisions installed by the leader
+    "handoff_coords",      // coordinates moved across all handoffs
+    "fluid_forwarded",     // parcels re-routed after an ownership change
+    "load_imbalance_ppm",  // current max Ω size / ideal × 1e6 (gauge)
+    "halo_slices_sent",    // V1-style halo messages between peers
+    "halo_values_sent",    // dirty-column H values shipped in halos
+    "rebase_gather_coords", // coords through the leader's gather/scatter
 ];
 
 /// Ownership patches applied to a LocalSystem before the next full
@@ -94,6 +97,21 @@ pub enum WorkerMsg {
     },
     /// Ownership transfer of a coordinate range with its local state.
     Handoff(Handoff),
+    /// V1-style history exchange for the **local** epoch protocol
+    /// ([`super::RebaseMode::Local`]): the sender's H snapshot over the
+    /// dirty columns it owns, taken at each column's switch instant.
+    /// [`super::v1::SliceMsg`] generalized to the pool bus — it carries
+    /// state, not fluid mass, so it rides with `mass = 0.0`; the real
+    /// fluid adjustment happens at each receiver when it folds the halo
+    /// into its delta rebase (`update::rebase_b_slice_local`).
+    HaloSlice {
+        /// the epoch this transition enters
+        epoch: u64,
+        /// dirty columns owned by the sender (ascending)
+        coords: Vec<u32>,
+        /// `H_u` for each coord, frozen at the switch instant
+        h: Vec<f64>,
+    },
 }
 
 /// One ownership transfer: the shipped `(H, B, F)` slices for `coords`.
@@ -147,11 +165,37 @@ pub struct WorkerCore {
     threshold: f64,
     absorb_eps: f64,
     /// future-epoch parcels held uncommitted until the epoch catches up
+    /// (gather protocol only; the local protocol applies every epoch's
+    /// fluid immediately — see `absorb_bus`)
     pending: Vec<Received<WorkerMsg>>,
+    /// in-flight local (V1-style) epoch transition, if any
+    pending_local: Option<LocalRebase>,
+    /// halo slices that raced ahead of our `Ctrl::RebaseLocal`
+    halo_stash: Vec<(u64, Vec<u32>, Vec<f64>)>,
+    /// local slots whose diffusion is paused mid-transition (owned dirty
+    /// columns: their H values are the halo peers compute deltas from,
+    /// so they must not move until the epoch entry completes; incoming
+    /// fluid still accumulates in F)
+    frozen: HashSet<usize>,
     /// ownership patches since the last full LocalSystem rebuild
     patches: u32,
     /// exit path: fold incoming handoffs but never migrate ownership
     shutting_down: bool,
+}
+
+/// State of one in-flight V1-style epoch transition (`RebaseMode::Local`):
+/// the halo H values collected so far and the dirty columns still awaited
+/// from their owning peers. The worker keeps diffusing its non-frozen
+/// slots the whole time — the transition is a state machine inside the
+/// ordinary step loop, not a pause.
+struct LocalRebase {
+    epoch: u64,
+    problem: Arc<FixedPointProblem>,
+    dirty: Arc<Vec<usize>>,
+    /// dirty columns whose H must still arrive from owning peers
+    waiting: HashSet<usize>,
+    /// `(dirty column, H_u at its owner's switch instant)` — own + received
+    halo: Vec<(usize, f64)>,
 }
 
 impl WorkerCore {
@@ -216,6 +260,9 @@ impl WorkerCore {
             threshold,
             absorb_eps,
             pending: Vec::new(),
+            pending_local: None,
+            halo_stash: Vec::new(),
+            frozen: HashSet::new(),
             patches: 0,
             shutting_down: false,
         };
@@ -555,24 +602,35 @@ impl WorkerCore {
                     epoch,
                     coords,
                     mass: amounts,
-                } => match epoch.cmp(&self.epoch) {
-                    std::cmp::Ordering::Equal => {
+                } => {
+                    // under the LOCAL protocol epochs are fluid-continuous:
+                    // the rebase patches F in place (F' = F + (P'−P)·H), so
+                    // a parcel from ANY epoch still carries live mass and
+                    // is applied on arrival. The GATHER protocol recomputes
+                    // F from H, so its stale parcels are obsolete by
+                    // construction and its future ones must wait.
+                    if self.cfg.rebase == RebaseMode::Local || epoch == self.epoch {
                         got |= self.apply_parcels(&coords, &amounts);
                         to_commit.push((from, seq, mass));
-                    }
-                    std::cmp::Ordering::Less => {
+                    } else if epoch < self.epoch {
                         // obsolete epoch: discard, release its accounting
                         to_commit.push((from, seq, mass));
+                    } else {
+                        self.pending.push(Received {
+                            from,
+                            seq,
+                            mass,
+                            payload: WorkerMsg::Fluid { epoch, coords, mass: amounts },
+                        });
                     }
-                    std::cmp::Ordering::Greater => self.pending.push(Received {
-                        from,
-                        seq,
-                        mass,
-                        payload: WorkerMsg::Fluid { epoch, coords, mass: amounts },
-                    }),
-                },
+                }
                 WorkerMsg::Handoff(ho) => {
                     self.apply_handoff(ho);
+                    got = true;
+                    to_commit.push((from, seq, mass));
+                }
+                WorkerMsg::HaloSlice { epoch, coords, h } => {
+                    self.recv_halo(epoch, &coords, &h);
                     got = true;
                     to_commit.push((from, seq, mass));
                 }
@@ -618,6 +676,13 @@ impl WorkerCore {
     /// or diffused mass here, and the slices carry the remainder.
     fn apply_handoff(&mut self, ho: Handoff) {
         debug_assert_eq!(ho.pid_to, self.k);
+        // an epoch transition quiesces handoffs first and holds the table
+        // frozen, so a slice can never land while slots are pinned (the
+        // fold below would invalidate the frozen slot indices)
+        debug_assert!(
+            self.pending_local.is_none() && self.frozen.is_empty(),
+            "handoff during an epoch transition"
+        );
         // in a multi-process deployment the shipped b_slice is the
         // recipient's only source of B for the range; in-process it must
         // agree with the shared problem (same epoch ⇒ same B)
@@ -694,6 +759,9 @@ impl WorkerCore {
         let mut work_count = 0u64;
         for _ in 0..quanta {
             let Some(t) = self.next_slot() else { break };
+            if !self.frozen.is_empty() && self.frozen.contains(&t) {
+                continue; // mid-transition: this column's H is a halo snapshot
+            }
             let fi = self.f[t];
             if fi == 0.0 {
                 continue;
@@ -736,6 +804,9 @@ impl WorkerCore {
         let mut work_count = 0u64;
         for _ in 0..quanta {
             let Some(t) = self.next_slot() else { break };
+            if !self.frozen.is_empty() && self.frozen.contains(&t) {
+                continue; // mid-transition: this column's H is a halo snapshot
+            }
             let fi = self.f[t];
             if fi == 0.0 {
                 continue;
@@ -904,6 +975,189 @@ impl WorkerCore {
         }
     }
 
+    /// Begin a V1-style **local** epoch transition (`RebaseMode::Local`,
+    /// DESIGN.md §7): freeze the owned dirty columns (their H values are
+    /// about to become halo snapshots), multicast those snapshots to every
+    /// peer whose rows the delta touches, and record which halo values we
+    /// must receive before we can enter the epoch ourselves. The worker
+    /// keeps diffusing all non-frozen fluid throughout — there is no
+    /// checkpoint pause and no leader round-trip.
+    ///
+    /// Preconditions (the coordinator enforces both before broadcasting):
+    /// the ownership table is frozen and every handoff has folded, so the
+    /// owner map is a consistent exact cover for the whole transition.
+    pub fn begin_rebase_local(
+        &mut self,
+        epoch: u64,
+        problem: Arc<FixedPointProblem>,
+        dirty: Arc<Vec<usize>>,
+    ) {
+        debug_assert!(epoch > self.epoch, "epochs advance monotonically");
+        debug_assert!(self.pending_local.is_none(), "one epoch transition at a time");
+        let old_csc = self.problem.matrix().csc();
+        let new_csc = problem.matrix().csc();
+        let mut own_coords: Vec<u32> = Vec::new();
+        let mut own_h: Vec<f64> = Vec::new();
+        let mut dests: BTreeSet<usize> = BTreeSet::new();
+        let mut waiting: HashSet<usize> = HashSet::new();
+        let mut halo: Vec<(usize, f64)> = Vec::new();
+        for &u in dirty.iter() {
+            let t = self.local_of[u];
+            if t != usize::MAX {
+                // ours: freeze + snapshot. The frozen slot keeps
+                // accumulating incoming fluid in F; only its H is pinned.
+                self.frozen.insert(t);
+                let hu = self.h[t];
+                own_coords.push(u as u32);
+                own_h.push(hu);
+                halo.push((u, hu));
+                // every owner of a row in the old or new column needs H_u
+                for csc in [old_csc, new_csc] {
+                    let (rows, _) = csc.col(u);
+                    for &j in rows {
+                        let o = self.part.owner(j);
+                        if o != self.k {
+                            dests.insert(o);
+                        }
+                    }
+                }
+            } else {
+                // theirs: we need H_u iff the delta touches a row we own
+                let needed = [old_csc, new_csc].iter().any(|csc| {
+                    let (rows, _) = csc.col(u);
+                    rows.iter().any(|&j| self.local_of[j] != usize::MAX)
+                });
+                if needed {
+                    waiting.insert(u);
+                }
+            }
+        }
+        if !own_coords.is_empty() && !dests.is_empty() {
+            // one slice per needing peer, all our dirty columns at once
+            // (receivers ignore columns whose delta misses their rows —
+            // both sides compute "need" from the same frozen owner map,
+            // so neither waits on a message the other will not send)
+            let dests: Vec<usize> = dests.into_iter().collect();
+            let bytes = own_coords.len() * 12 + 24;
+            let n_vals = own_coords.len() as u64;
+            let sent = self.ep.multicast(
+                &dests,
+                &WorkerMsg::HaloSlice {
+                    epoch,
+                    coords: own_coords,
+                    h: own_h,
+                },
+                0.0, // state plane: halo slices carry history, not fluid
+                bytes,
+            );
+            self.metrics.add("halo_slices_sent", sent as u64);
+            self.metrics.add("halo_values_sent", sent as u64 * n_vals);
+        }
+        let mut pending = LocalRebase {
+            epoch,
+            problem,
+            dirty,
+            waiting,
+            halo,
+        };
+        // halo slices that raced ahead of our control message
+        let stashed = std::mem::take(&mut self.halo_stash);
+        for (e, coords, h) in stashed {
+            if e == epoch {
+                Self::fold_halo(&mut pending, &coords, &h);
+            }
+        }
+        self.pending_local = Some(pending);
+        self.try_finish_rebase_local();
+    }
+
+    /// Route a received halo slice into the transition state machine.
+    fn recv_halo(&mut self, epoch: u64, coords: &[u32], h: &[f64]) {
+        let folded = match self.pending_local.as_mut() {
+            Some(p) if p.epoch == epoch => {
+                Self::fold_halo(p, coords, h);
+                true
+            }
+            _ => false,
+        };
+        if folded {
+            self.try_finish_rebase_local();
+        } else if epoch > self.epoch {
+            // the peer's transition raced ahead of our Ctrl::RebaseLocal
+            self.halo_stash.push((epoch, coords.to_vec(), h.to_vec()));
+        }
+        // anything else is a duplicate for a transition already completed
+    }
+
+    /// Fold received halo values into the pending transition, resolving
+    /// only columns we are actually waiting for.
+    fn fold_halo(p: &mut LocalRebase, coords: &[u32], h: &[f64]) {
+        for (idx, &c) in coords.iter().enumerate() {
+            let u = c as usize;
+            if p.waiting.remove(&u) {
+                p.halo.push((u, h[idx]));
+            }
+        }
+    }
+
+    /// Complete the local transition once every awaited halo value has
+    /// arrived: apply the delta rebase `F ← F + (P'−P)·H` over the owned
+    /// rows, swap the problem, patch the LocalSystem with the dirty
+    /// columns (the owned set cannot have changed — the table is frozen
+    /// and handoffs were quiesced), unfreeze, and requeue.
+    fn try_finish_rebase_local(&mut self) {
+        let ready = self
+            .pending_local
+            .as_ref()
+            .map(|p| p.waiting.is_empty())
+            .unwrap_or(false);
+        if !ready {
+            return;
+        }
+        let p = self.pending_local.take().expect("checked above");
+        let touched = update::rebase_b_slice_local(
+            self.problem.matrix().csc(),
+            p.problem.matrix().csc(),
+            &p.halo,
+            &self.local_of,
+            &mut self.f,
+        );
+        self.epoch = p.epoch;
+        self.problem = p.problem;
+        let mut patched = false;
+        if self.cfg.kernel == KernelKind::LocalBlock {
+            if let Some(local) = self.local.as_mut() {
+                let csc = self.problem.matrix().csc();
+                let coalesce = &mut self.coalesce;
+                local.patch(
+                    csc,
+                    &self.owned,
+                    &self.local_of,
+                    self.part.owners(),
+                    &p.dirty,
+                    |d, j| coalesce.intern(d, j),
+                );
+                patched = true;
+            }
+        }
+        if !patched {
+            self.rebuild_local();
+        }
+        // unfreeze + requeue: every pinned or delta-touched slot re-enters
+        // the diffusion order with its current fluid
+        if self.use_heap {
+            for &t in self.frozen.iter() {
+                self.heap.push(t, self.f[t].abs());
+            }
+            for &t in &touched {
+                self.heap.push(t, self.f[t].abs());
+            }
+        }
+        self.frozen.clear();
+        self.threshold = self.cfg.threshold0;
+        self.publish();
+    }
+
     /// Exit path: stop migrating, fold any in-flight handoffs so no
     /// history is stranded on the bus, and return the held (Ω, H) pair.
     ///
@@ -944,11 +1198,17 @@ impl WorkerCore {
                         epoch,
                         coords,
                         mass: amounts,
-                    } if epoch == self.epoch => {
+                    } if epoch == self.epoch || self.cfg.rebase == RebaseMode::Local => {
+                        // local protocol: every epoch's fluid is live
                         self.apply_parcels(&coords, &amounts);
                         touched = true;
                     }
                     WorkerMsg::Fluid { .. } => {} // obsolete epoch: discard
+                    // a halo slice is state-plane; no transition can be in
+                    // flight once the pool is shutting down (the engine's
+                    // rebase holds the table frozen until every worker
+                    // acked the epoch entry)
+                    WorkerMsg::HaloSlice { .. } => {}
                 }
                 // publish before the commit releases the in-flight mass,
                 // so each unit stays visible in at least one account

@@ -19,6 +19,7 @@
 //! without re-indexing a running computation.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 
 use super::pagerank::PageRankSystem;
 use super::Digraph;
@@ -66,8 +67,10 @@ pub struct MutableDigraph {
     /// sources whose out-weights changed since the last matrix build
     dirty: BTreeSet<usize>,
     cache: Option<MatrixCache>,
-    /// columns recomputed by the last build (None = full rebuild)
-    last_dirty: Option<Vec<usize>>,
+    /// columns recomputed by the last build (None = full rebuild);
+    /// shared so the epoch protocols can ship it to every worker (and,
+    /// in the local protocol, slice it per PID) without copying
+    last_dirty: Option<Arc<Vec<usize>>>,
 }
 
 /// The P matrix of the last build, kept in CSC (column-contiguous) form so
@@ -293,9 +296,10 @@ impl MutableDigraph {
             _ => (self.build_csc(damping, patch_dangling), false),
         };
         // record which columns this build actually recomputed: streaming
-        // workers patch their LocalSystems with exactly this set
+        // workers patch their LocalSystems with exactly this set, and the
+        // local epoch protocol broadcasts it as the mutation delta
         self.last_dirty = if warm {
-            Some(self.dirty.iter().copied().collect())
+            Some(Arc::new(self.dirty.iter().copied().collect()))
         } else {
             None
         };
@@ -325,7 +329,16 @@ impl MutableDigraph {
     /// changed". Feeds the workers' `LocalSystem` dirty-column patching
     /// across streaming epochs.
     pub fn last_build_dirty(&self) -> Option<&[usize]> {
-        self.last_dirty.as_deref()
+        self.last_dirty.as_ref().map(|d| d.as_slice())
+    }
+
+    /// [`MutableDigraph::last_build_dirty`] as a shared handle: the epoch
+    /// protocols fan the same list out to every worker (gather ships it
+    /// inside `Ctrl::Resume` for LocalSystem patching; the local protocol
+    /// broadcasts it as the whole mutation delta), so the coordinate list
+    /// is allocated once per build, never per worker.
+    pub fn last_build_dirty_shared(&self) -> Option<Arc<Vec<usize>>> {
+        self.last_dirty.clone()
     }
 
     /// Column u of `P = d·S̄` (rows ascending): the renormalized out-links
@@ -716,6 +729,9 @@ mod tests {
         }));
         mg.pagerank_system(0.85, true).unwrap();
         assert_eq!(mg.last_build_dirty(), Some(&[3usize][..]));
+        // the shared handle exposes the same list without copying
+        let shared = mg.last_build_dirty_shared().unwrap();
+        assert_eq!(shared.as_slice(), &[3usize]);
         // a no-mutation rebuild reports an empty dirty set
         mg.pagerank_system(0.85, true).unwrap();
         assert_eq!(mg.last_build_dirty(), Some::<&[usize]>(&[]));

@@ -19,7 +19,7 @@ use diter::cli::{parse_args, usage, Args, OptSpec};
 use diter::configfile::Config;
 use diter::coordinator::{
     v1, v2, AdaptiveConfig, AdaptivePolicy, DistributedConfig, ElasticConfig, KernelKind,
-    StreamingEngine,
+    RebaseMode, StreamingEngine,
 };
 use diter::graph::{
     block_coupled_matrix, pagerank_system, paper_matrix, power_law_web_graph, ChurnModel,
@@ -401,6 +401,12 @@ fn stream_spec() -> Vec<OptSpec> {
             default: Some("local"),
         },
         OptSpec {
+            name: "rebase",
+            help: "epoch protocol: gather (leader rebase) | local (V1 halo rebase, no gather/scatter)",
+            is_flag: false,
+            default: Some("gather"),
+        },
+        OptSpec {
             name: "adaptive",
             help: "live §4.3 repartitioning (ownership handoff between PIDs)",
             is_flag: true,
@@ -484,6 +490,8 @@ fn cmd_stream(argv: &[String]) -> CliResult {
         .ok_or("bad --model (expected grow | rewire | hotspot)")?;
     let kernel = KernelKind::parse(&args.get_str("kernel", "local"))
         .ok_or("bad --kernel (expected local | global)")?;
+    let rebase = RebaseMode::parse(&args.get_str("rebase", "gather"))
+        .ok_or("bad --rebase (expected gather | local)")?;
     let compare_cold = args.has_flag("compare-cold");
 
     // seed graph uses ~90% of the capacity so the growth model has room
@@ -494,9 +502,10 @@ fn cmd_stream(argv: &[String]) -> CliResult {
     };
     println!(
         "streaming PageRank: capacity N={n} (seed graph {seed_nodes}), K={k} PIDs, \
-         model={}, kernel={}, {batches} batches x {batch_size}",
+         model={}, kernel={}, rebase={}, {batches} batches x {batch_size}",
         model.name(),
-        kernel.name()
+        kernel.name(),
+        rebase.name()
     );
     let g = power_law_web_graph(seed_nodes, 8, 0.1, seed);
     let mg = MutableDigraph::from_digraph(&g, n);
@@ -504,7 +513,8 @@ fn cmd_stream(argv: &[String]) -> CliResult {
         .with_tol(tol)
         .with_seed(seed)
         .with_sequence(SequenceKind::GreedyMaxFluid)
-        .with_kernel(kernel);
+        .with_kernel(kernel)
+        .with_rebase(rebase);
     cfg.max_wall = Duration::from_secs(120);
     if args.get("straggler").is_some() {
         let pid = args.get_usize("straggler", 0)?;

@@ -121,6 +121,13 @@ impl LocalSystem {
             self.m,
             "LocalSystem::patch requires an unchanged owned set"
         );
+        // epoch transitions patch unconditionally; a delta that misses
+        // this worker's columns entirely must not pay the full
+        // splice-copy (only OWNED columns live in the structure — a
+        // dirty column elsewhere never changes it)
+        if dirty.is_empty() || !owned.iter().any(|i| dirty.binary_search(i).is_ok()) {
+            return;
+        }
         let mut next = LocalSystem::empty(self.m);
         for (t, &i) in owned.iter().enumerate() {
             if dirty.binary_search(&i).is_ok() {
@@ -563,6 +570,22 @@ mod tests {
         let mut lo2 = local_of.clone();
         lo2[2] = 2;
         assert!(!sys.retarget(&lo2, &moved, |d, j| it.intern(d, j)));
+    }
+
+    #[test]
+    fn patch_misses_are_noops() {
+        let (csc, owned, local_of, owner) = fixture();
+        let mut it = Interner::new(2);
+        let mut sys =
+            LocalSystem::build(&csc, &owned, &local_of, &owner, |d, j| it.intern(d, j));
+        let before = sys.clone();
+        // empty delta, and a delta entirely outside the owned columns
+        sys.patch(&csc, &owned, &local_of, &owner, &[], |d, j| it.intern(d, j));
+        assert_eq!(sys, before);
+        sys.patch(&csc, &owned, &local_of, &owner, &[2, 3], |d, j| {
+            it.intern(d, j)
+        });
+        assert_eq!(sys, before, "foreign dirty columns change nothing");
     }
 
     #[test]

@@ -386,6 +386,33 @@ impl<T: Send> Endpoint<T> {
         Ok(())
     }
 
+    /// Send one payload to each endpoint in `dests` (cloned per peer) —
+    /// the targeted middle ground between [`Endpoint::send`] and
+    /// [`Endpoint::broadcast`], used by state-plane exchanges (e.g. the
+    /// V1 halo slices) whose recipient set is computed, not "everyone".
+    /// Self and closed/vacant destinations are skipped — the caller's
+    /// protocol must tolerate an absent peer (a retiring PID owns no
+    /// coordinates, so a state multicast loses nothing by skipping it).
+    /// Returns how many sends were delivered.
+    pub fn multicast(
+        &mut self,
+        dests: &[usize],
+        payload: &T,
+        mass: f64,
+        approx_bytes: usize,
+    ) -> usize
+    where
+        T: Clone,
+    {
+        let mut delivered = 0;
+        for &to in dests {
+            if to != self.id && self.try_send(to, payload.clone(), mass, approx_bytes).is_ok() {
+                delivered += 1;
+            }
+        }
+        delivered
+    }
+
     /// Non-blocking receive of the next ripe message WITHOUT committing:
     /// the fluid stays on the in-flight account and the message stays on
     /// the undelivered count until [`Endpoint::commit`] is called. Use this
@@ -576,6 +603,20 @@ mod tests {
         b.drain();
         a.collect_acks();
         assert_eq!(a.unacked(), 0);
+    }
+
+    #[test]
+    fn multicast_reaches_exactly_the_dest_set() {
+        let (mut eps, hub, _m) = bus_elastic::<u8>(4, &BusConfig::default(), &[]);
+        let mut rest: Vec<_> = eps.drain(1..).collect();
+        let mut a = eps.pop().unwrap();
+        // dead peer 3 and self are skipped without error
+        hub.remove_endpoint(3);
+        let delivered = a.multicast(&[0, 1, 3], &7, 0.0, 1);
+        assert_eq!(delivered, 1, "self and the dead peer are skipped");
+        assert_eq!(rest[0].try_recv().unwrap().payload, 7); // endpoint 1
+        assert!(rest[1].try_recv().is_none(), "endpoint 2 was not addressed");
+        assert_eq!(a.global_inflight(), 0.0);
     }
 
     #[test]

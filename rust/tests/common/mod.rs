@@ -1,0 +1,51 @@
+//! Shared machinery for the integration suites — the reusable half of
+//! what `integration_elastic.rs` grew inline: the sequential reference
+//! solve and the conservation/fixed-point assertions every streaming
+//! scenario ends on.
+//!
+//! Included per test crate via `mod common;`, so each crate compiles its
+//! own copy and only uses what it needs.
+#![allow(dead_code)]
+
+use diter::coordinator::StreamingEngine;
+use diter::linalg::vec_ops::{dist1, norm1};
+use diter::solver::{DIteration, FixedPointProblem, SolveOptions, Solver};
+
+/// Reference fixed point: a tight sequential cold solve of `problem`.
+pub fn cold_solution(problem: &FixedPointProblem) -> Vec<f64> {
+    let opts = SolveOptions {
+        tol: 1e-13,
+        max_cost: 200_000.0,
+        trace_every: 0.0,
+        exact: None,
+    };
+    DIteration::fluid_cyclic().solve(problem, &opts).unwrap().x
+}
+
+/// The two invariants every streaming scenario must land on, whatever
+/// interleaving of epochs, handoffs, spawns and retirements produced
+/// `x`: exact fluid conservation (for patched PageRank, unit L1 mass)
+/// and agreement with a sequential cold solve of the engine's current
+/// system.
+pub fn assert_fixed_point(engine: &StreamingEngine, x: &[f64], eps: f64, ctx: &str) {
+    assert!(
+        (norm1(x) - 1.0).abs() < eps,
+        "[{ctx}] PageRank mass not conserved: ‖x‖₁ = {}",
+        norm1(x)
+    );
+    let want = cold_solution(engine.problem());
+    assert!(
+        dist1(x, &want) < eps,
+        "[{ctx}] fixed point off the cold solve: Δ₁ = {:.3e}",
+        dist1(x, &want)
+    );
+}
+
+/// Render a caught panic payload for failure reports.
+pub fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".into())
+}

@@ -7,10 +7,17 @@
 //! PageRank that is directly observable as `‖x‖₁ = 1` plus agreement
 //! with a cold sequential solve; for the custom-B retire scenario the
 //! fixed point itself is the witness.
+//!
+//! The cold-solve reference and fixed-point assertions live in
+//! `tests/common` — the shared harness the scenario matrix and the
+//! conservation fuzz grew out of this file's machinery.
+
+mod common;
 
 use std::sync::Arc;
 use std::time::Duration;
 
+use common::cold_solution;
 use diter::coordinator::{
     v2, DistributedConfig, ElasticConfig, StreamingEngine, WorkerPool,
 };
@@ -20,18 +27,8 @@ use diter::graph::{
 };
 use diter::linalg::vec_ops::{dist1, norm1};
 use diter::partition::Partition;
-use diter::solver::{DIteration, FixedPointProblem, SequenceKind, SolveOptions, Solver};
+use diter::solver::{FixedPointProblem, SequenceKind};
 use diter::sparse::SparseMatrix;
-
-fn cold_solution(problem: &FixedPointProblem) -> Vec<f64> {
-    let opts = SolveOptions {
-        tol: 1e-13,
-        max_cost: 200_000.0,
-        trace_every: 0.0,
-        exact: None,
-    };
-    DIteration::fluid_cyclic().solve(problem, &opts).unwrap().x
-}
 
 fn pagerank_problem(n: usize, seed: u64) -> FixedPointProblem {
     let g = power_law_web_graph(n, 6, 0.1, seed);

@@ -5,7 +5,7 @@
 
 use std::time::Duration;
 
-use diter::coordinator::{v2, DistributedConfig, StreamingEngine};
+use diter::coordinator::{v2, DistributedConfig, RebaseMode, StreamingEngine};
 use diter::graph::{power_law_web_graph, ChurnModel, MutableDigraph, Mutation, MutationStream};
 use diter::linalg::vec_ops::{dist1, norm1};
 use diter::partition::Partition;
@@ -193,4 +193,126 @@ fn warm_rebase_beats_cold_restart_in_updates() {
         warm < cold,
         "warm rebases ({warm} updates) must beat cold restarts ({cold})"
     );
+}
+
+#[test]
+fn local_rebase_skips_leader_and_exchanges_halo() {
+    // a crafted cross-partition mutation pair: a dirty column owned by
+    // PID 0 whose delta touches PID 2's rows, and one owned by PID 1
+    // touching PID 0's — the local protocol MUST ship halo slices and
+    // must never route a coordinate through the leader; the gather
+    // protocol routes all of them and never touches the halo machinery.
+    // Both must land on the same fixed point.
+    let n = 90;
+    let k = 3; // contiguous: Ω_0 = 0..30, Ω_1 = 30..60, Ω_2 = 60..90
+    let g = power_law_web_graph(n, 5, 0.1, 23);
+    // insert + reweight pairs: whichever of the two applies (the edge
+    // may or may not exist in the random web graph), the source column
+    // is certainly dirtied
+    let batch = vec![
+        Mutation::EdgeInsert {
+            from: 5,
+            to: 70,
+            weight: 2.0,
+        },
+        Mutation::EdgeReweight {
+            from: 5,
+            to: 70,
+            weight: 3.0,
+        },
+        Mutation::EdgeInsert {
+            from: 35,
+            to: 2,
+            weight: 1.5,
+        },
+        Mutation::EdgeReweight {
+            from: 35,
+            to: 2,
+            weight: 2.5,
+        },
+    ];
+    let mut results: Vec<Vec<f64>> = Vec::new();
+    for rebase in [RebaseMode::Local, RebaseMode::Gather] {
+        let mg = MutableDigraph::from_digraph(&g, n);
+        let cfg = base_cfg(n, k, 23).with_rebase(rebase);
+        let mut eng = StreamingEngine::new(mg, 0.85, true, cfg).unwrap();
+        eng.converge().unwrap();
+        let report = eng.apply_batch(&batch).unwrap();
+        assert!(report.solution.converged, "residual {:.3e}", report.solution.residual);
+        let m = &report.solution.metrics;
+        match rebase {
+            RebaseMode::Local => {
+                assert_eq!(
+                    m["rebase_gather_coords"],
+                    0,
+                    "zero leader-side gather/scatter on the local path"
+                );
+                assert!(
+                    m["halo_slices_sent"] >= 2,
+                    "both cross-part dirty columns must ship halos: {m:?}"
+                );
+                assert!(m["halo_values_sent"] >= m["halo_slices_sent"]);
+            }
+            RebaseMode::Gather => {
+                assert_eq!(
+                    m["rebase_gather_coords"],
+                    n as u64,
+                    "gather routes every coordinate through the leader"
+                );
+                assert_eq!(m["halo_slices_sent"], 0, "no halo machinery on the gather path");
+            }
+        }
+        results.push(report.solution.x.clone());
+        eng.finish().unwrap();
+    }
+    let delta = dist1(&results[0], &results[1]);
+    assert!(delta < 1e-7, "protocols disagree on the fixed point: Δ₁ = {delta:.3e}");
+}
+
+#[test]
+fn local_rebase_with_mid_flight_handoff_and_latency() {
+    // the property satellite's engine half: a leader-planned ownership
+    // move is installed while the initial diffusion is mid-flight, then a
+    // local-protocol epoch transition lands on top of it (the rebase must
+    // quiesce the handoff, halo-exchange against the post-move cover, and
+    // still reach the mutated graph's exact fixed point)
+    let n = 120;
+    let k = 3;
+    let g = power_law_web_graph(n, 5, 0.1, 31);
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let mut cfg = base_cfg(n, k, 31)
+        .with_sequence(SequenceKind::GreedyMaxFluid)
+        .with_rebase(RebaseMode::Local);
+    cfg.latency = Some((Duration::from_micros(50), Duration::from_micros(400)));
+    let mut eng = StreamingEngine::new(mg, 0.85, true, cfg).unwrap();
+    // no converge(): the handoff and the epoch transition both hit a
+    // computation that is still diffusing hard
+    {
+        let table = eng.pool_mut().table().clone();
+        let part = table.partition();
+        let own = part.part(0).to_vec();
+        let next = part.transfer_elastic(&own[..own.len() / 2], 1).unwrap();
+        assert!(table.install_elastic(next).is_some(), "install must land");
+    }
+    let mut stream = MutationStream::new(ChurnModel::RandomRewire, 61);
+    let batch = stream.next_batch(eng.graph(), 12);
+    let report = eng.apply_batch(&batch).unwrap();
+    assert!(report.solution.converged, "residual {:.3e}", report.solution.residual);
+    assert_eq!(report.solution.metrics["rebase_gather_coords"], 0);
+    assert!(
+        report.solution.metrics["handoffs_total"] >= 1,
+        "the installed move must have shipped a handoff"
+    );
+    assert!(
+        (norm1(&report.solution.x) - 1.0).abs() < 1e-7,
+        "mass through handoff + local rebase: ‖x‖₁ = {}",
+        norm1(&report.solution.x)
+    );
+    let want = cold_solution(eng.problem());
+    assert!(
+        dist1(&report.solution.x, &want) < 1e-7,
+        "Δ₁ = {:.3e}",
+        dist1(&report.solution.x, &want)
+    );
+    eng.finish().unwrap();
 }

@@ -233,6 +233,72 @@ fn prop_rebase_b_equals_slice_concatenation() {
     });
 }
 
+/// The V1 local rebase ≡ the leader's slice rebase: over random web
+/// graphs, random mutation batches through the real churn generators
+/// (so the dirty-column machinery is the production one), and random
+/// exact covers (mid-flight handoffs leave ANY cover, not just a
+/// contiguous one), applying `F + (P'−P)·H` per PID over the dirty halo
+/// must equal `B' = P'·H + B − H` on every coordinate.
+#[test]
+fn prop_local_rebase_equals_leader_slice() {
+    use diter::graph::{ChurnModel, MutableDigraph, MutationStream};
+
+    run_cases(15, 0x10CA1, |g| {
+        let n = g.usize_in(12, 60);
+        let web = diter::graph::power_law_web_graph(n, 3, 0.1, g.case_seed);
+        let mut mg = MutableDigraph::from_digraph(&web, n);
+        let sys_old = mg.pagerank_system(0.85, true).unwrap();
+        let p_old = FixedPointProblem::new(sys_old.matrix.clone(), sys_old.b.clone()).unwrap();
+        let model = match g.usize_in(0, 2) {
+            0 => ChurnModel::RandomRewire,
+            1 => ChurnModel::HotSpotBurst { burst: 6 },
+            _ => ChurnModel::PreferentialGrowth { links_per_node: 2 },
+        };
+        let mut stream = MutationStream::new(model, g.case_seed ^ 0x7);
+        let batch = stream.next_batch(&mg, g.usize_in(1, 10));
+        let applied = batch.iter().filter(|m| mg.apply(m)).count();
+        let sys_new = mg.pagerank_system(0.85, true).unwrap();
+        let p_new = FixedPointProblem::new(sys_new.matrix.clone(), sys_new.b.clone()).unwrap();
+        let dirty: Vec<usize> = mg.last_build_dirty().expect("warm cache").to_vec();
+        assert!(applied == 0 || !dirty.is_empty());
+        // a partially-converged history and its consistent old-system fluid
+        let h = g.vec_f64(n, 0.0, 1.0 / n as f64);
+        let f_full = p_old.fluid(&h);
+        // random exact cover: each coordinate at a random PID
+        let k = g.usize_in(1, 4);
+        let owner: Vec<usize> = (0..n).map(|_| g.usize_in(0, k - 1)).collect();
+        let mut got = vec![0.0; n];
+        for pid in 0..k {
+            let owned: Vec<usize> = (0..n).filter(|&i| owner[i] == pid).collect();
+            let mut local_of = vec![usize::MAX; n];
+            for (t, &i) in owned.iter().enumerate() {
+                local_of[i] = t;
+            }
+            let mut f: Vec<f64> = owned.iter().map(|&i| f_full[i]).collect();
+            let halo: Vec<(usize, f64)> = dirty.iter().map(|&u| (u, h[u])).collect();
+            update::rebase_b_slice_local(
+                p_old.matrix().csc(),
+                p_new.matrix().csc(),
+                &halo,
+                &local_of,
+                &mut f,
+            );
+            for (t, &i) in owned.iter().enumerate() {
+                got[i] = f[t];
+            }
+        }
+        let want = update::rebase_b(p_new.matrix(), &h, p_new.b()).unwrap();
+        for i in 0..n {
+            assert!(
+                (got[i] - want[i]).abs() < 1e-9,
+                "coord {i}: local {} vs leader {} (dirty {dirty:?})",
+                got[i],
+                want[i]
+            );
+        }
+    });
+}
+
 /// Streaming engine: a random mutation sequence lands on the cold fixed
 /// point of the final matrix (threaded end-to-end, small cases).
 #[test]

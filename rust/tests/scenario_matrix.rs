@@ -1,0 +1,183 @@
+//! Deterministic cross-protocol scenario matrix:
+//! {churn: grow | rewire | hotspot} × {kernel: local | global} ×
+//! {rebase: local | gather} × {elastic on | off} × {latency on | off}.
+//!
+//! Every cell runs the streaming engine through seeded mutation epochs
+//! and asserts the two invariants the whole system rests on — exact
+//! fluid conservation (unit PageRank mass) and fixed-point equality with
+//! a sequential cold solve — plus the epoch-protocol contract observed
+//! through the bus metrics: the local path routes **zero** coordinates
+//! through the leader's gather/scatter; the gather path routes all of
+//! them.
+//!
+//! Seeds are fixed per cell and baked into the scenario name
+//! (`model-kernel-rebase-pool-bus-sSEED`), so any failure is
+//! reproducible by name alone. When `DITER_MATRIX_FAIL_FILE` is set
+//! (the CI `test-matrix` step), failing names are appended there and
+//! uploaded as a build artifact.
+
+mod common;
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use diter::coordinator::{
+    DistributedConfig, ElasticConfig, KernelKind, RebaseMode, StreamingEngine,
+};
+use diter::graph::{power_law_web_graph, ChurnModel, MutableDigraph, MutationStream};
+use diter::partition::Partition;
+use diter::solver::SequenceKind;
+
+const N: usize = 130;
+const K: usize = 3;
+const BATCHES: usize = 2;
+const BATCH_SIZE: usize = 12;
+
+#[derive(Clone, Copy)]
+struct Scenario {
+    kernel: KernelKind,
+    rebase: RebaseMode,
+    elastic: bool,
+    latency: bool,
+    seed: u64,
+}
+
+fn scenario_name(model: &ChurnModel, s: &Scenario) -> String {
+    format!(
+        "{}-{}-{}-{}-{}-s{}",
+        model.name(),
+        s.kernel.name(),
+        s.rebase.name(),
+        if s.elastic { "elastic" } else { "fixed" },
+        if s.latency { "latency" } else { "instant" },
+        s.seed
+    )
+}
+
+fn run_scenario(model: ChurnModel, s: Scenario) {
+    // growth needs dormant headroom; the other models run at capacity
+    let seed_nodes = match model {
+        ChurnModel::PreferentialGrowth { .. } => N - 20,
+        _ => N,
+    };
+    let g = power_law_web_graph(seed_nodes, 5, 0.1, s.seed);
+    let mg = MutableDigraph::from_digraph(&g, N);
+    let mut cfg = DistributedConfig::new(Partition::contiguous(N, K).unwrap())
+        .with_tol(1e-9)
+        .with_seed(s.seed)
+        .with_sequence(SequenceKind::GreedyMaxFluid)
+        .with_kernel(s.kernel)
+        .with_rebase(s.rebase);
+    cfg.max_wall = Duration::from_secs(60);
+    if s.latency {
+        cfg.latency = Some((Duration::from_micros(40), Duration::from_micros(250)));
+    }
+    if s.elastic {
+        // live policy: the scheduler may spawn and retire on its own
+        // while the epochs run — conservation must hold regardless
+        cfg = cfg.with_elastic(ElasticConfig {
+            max_workers: K + 2,
+            interval: Duration::from_millis(10),
+            ..Default::default()
+        });
+    }
+    let mut engine = StreamingEngine::new(mg, 0.85, true, cfg).unwrap();
+    let init = engine.converge().unwrap();
+    assert!(init.solution.converged, "init residual {:.3e}", init.solution.residual);
+    let mut stream = MutationStream::new(model, s.seed ^ 0xD117);
+    let mut applied_any = false;
+    let mut last_metrics = init.solution.metrics;
+    for b in 0..BATCHES {
+        let batch = stream.next_batch(engine.graph(), BATCH_SIZE);
+        let report = engine.apply_batch(&batch).unwrap();
+        applied_any |= report.mutations_applied > 0;
+        assert!(report.solution.converged, "batch {b}: {:.3e}", report.solution.residual);
+        // exact fluid conservation + cold-solve equality, every epoch
+        common::assert_fixed_point(&engine, &report.solution.x, 1e-6, "epoch");
+        last_metrics = report.solution.metrics;
+    }
+    // the epoch-protocol contract, observed through the bus metrics
+    match s.rebase {
+        RebaseMode::Local => assert_eq!(
+            last_metrics["rebase_gather_coords"],
+            0,
+            "leader gather/scatter ran on the local path"
+        ),
+        RebaseMode::Gather => {
+            if applied_any {
+                assert!(
+                    last_metrics["rebase_gather_coords"] > 0,
+                    "the gather path must route coords through the leader"
+                );
+            }
+            assert_eq!(
+                last_metrics["halo_slices_sent"],
+                0,
+                "halo machinery ran on the gather path"
+            );
+        }
+    }
+    engine.finish().unwrap();
+}
+
+/// Append failing scenario names to the CI artifact file, if configured.
+fn record_failures(failures: &[String]) {
+    let Ok(path) = std::env::var("DITER_MATRIX_FAIL_FILE") else {
+        return;
+    };
+    if let Ok(mut f) = OpenOptions::new().create(true).append(true).open(&path) {
+        for line in failures {
+            let _ = writeln!(f, "{line}");
+        }
+    }
+}
+
+/// Run all 16 {kernel × rebase × elastic × latency} cells of one churn
+/// model, collecting every failure (not just the first) so one CI run
+/// reports the whole failing set by name.
+fn run_grid(model: ChurnModel, base_seed: u64) {
+    let mut failures: Vec<String> = Vec::new();
+    let mut idx = 0u64;
+    for kernel in [KernelKind::LocalBlock, KernelKind::GlobalWalk] {
+        for rebase in [RebaseMode::Local, RebaseMode::Gather] {
+            for elastic in [false, true] {
+                for latency in [false, true] {
+                    idx += 1;
+                    let s = Scenario {
+                        kernel,
+                        rebase,
+                        elastic,
+                        latency,
+                        seed: base_seed + idx,
+                    };
+                    let name = scenario_name(&model, &s);
+                    let m = model.clone();
+                    if let Err(payload) = catch_unwind(AssertUnwindSafe(|| run_scenario(m, s))) {
+                        failures.push(format!("{name}: {}", common::panic_message(payload)));
+                    }
+                }
+            }
+        }
+    }
+    if !failures.is_empty() {
+        record_failures(&failures);
+        panic!("{} scenario(s) failed:\n{}", failures.len(), failures.join("\n"));
+    }
+}
+
+#[test]
+fn matrix_grow() {
+    run_grid(ChurnModel::PreferentialGrowth { links_per_node: 3 }, 0x6A00);
+}
+
+#[test]
+fn matrix_rewire() {
+    run_grid(ChurnModel::RandomRewire, 0x4E00);
+}
+
+#[test]
+fn matrix_hotspot() {
+    run_grid(ChurnModel::HotSpotBurst { burst: 12 }, 0x1500);
+}

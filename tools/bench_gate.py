@@ -9,6 +9,10 @@ Compares a fresh bench artifact against its committed baseline and fails
       - local_vs_global_speedup: the local-block / global-walk
         diffusions/sec ratio, measured in the same binary on the same
         machine. Close to machine-independent, so always enforced.
+      - rebase_local_vs_gather_speedup: the gather/local epoch-
+        transition-latency ratio (how much faster the V1 halo rebase
+        turns an epoch over than the leader gather/scatter), same-binary
+        same-machine; always enforced once a measured baseline lands.
       - absolute diffusions/sec: only enforced when the baseline was
         recorded in the same environment (the "environment" field
         matches) — raw cross-machine throughput is noise, not signal.
@@ -56,8 +60,10 @@ def gate_ratio(failures, name, base_value, cur_value, tol, max_regress):
 def gate_stream(base, cur, args, failures):
     tol = 1.0 - args.max_regress
     cur_speedup = cur.get("local_vs_global_speedup")
+    cur_rebase = cur.get("rebase_local_vs_gather_speedup")
     cur_rate = (cur.get("local") or {}).get("init_diffusions_per_sec")
     print(f"current: speedup={fmt(cur_speedup, '.2f')}x  "
+          f"rebase local/gather={fmt(cur_rebase, '.2f')}x  "
           f"local diffusions/sec={fmt(cur_rate, '.3e')}  env={cur.get('environment')}")
     if not base.get("measured", False):
         print("baseline is a bootstrap placeholder (measured=false): gate passes; "
@@ -65,6 +71,9 @@ def gate_stream(base, cur, args, failures):
         return
     gate_ratio(failures, "local_vs_global_speedup",
                base.get("local_vs_global_speedup"), cur_speedup, tol,
+               args.max_regress)
+    gate_ratio(failures, "rebase_local_vs_gather_speedup",
+               base.get("rebase_local_vs_gather_speedup"), cur_rebase, tol,
                args.max_regress)
     base_rate = (base.get("local") or {}).get("init_diffusions_per_sec")
     if base_rate and base.get("environment") == cur.get("environment"):
