@@ -1,0 +1,216 @@
+//! Wire encoding of [`WorkerMsg`] (DESIGN.md §8.3): what a fluid parcel,
+//! an ownership handoff, and a halo slice look like as bytes.
+//!
+//! Layout principles, in order of importance:
+//!
+//! * **SoA stays SoA** — a `Fluid` parcel's mass column is one bulk
+//!   little-endian `f64` copy; nothing is interleaved per entry;
+//! * **coordinate columns are delta-encoded** — workers emit coalesced
+//!   parcels with ascending coordinates, so the zigzag-varint delta
+//!   column costs ~1 byte per coordinate instead of 4–8;
+//! * **explicit epoch tags** — every payload carries the epoch (and a
+//!   handoff its ownership version) so receivers can stash/foster
+//!   exactly as they do in-process; the wire adds reordering and delay,
+//!   never ambiguity;
+//! * **strict decode** — trailing bytes, truncation, or a count that
+//!   cannot fit the frame are errors that kill the connection, not
+//!   best-effort data.
+
+use crate::coordinator::worker::{Handoff, WorkerMsg};
+use crate::error::Result;
+use crate::transport::wire::{
+    corrupt, read_deltas, read_f64_slice, read_varint, write_deltas, write_f64_slice,
+    write_varint, WireCodec,
+};
+
+/// Payload tag of [`WorkerMsg::Fluid`].
+pub const TAG_FLUID: u8 = 0x10;
+/// Payload tag of [`WorkerMsg::Handoff`].
+pub const TAG_HANDOFF: u8 = 0x11;
+/// Payload tag of [`WorkerMsg::HaloSlice`].
+pub const TAG_HALO: u8 = 0x12;
+
+fn coords_u32(raw: Vec<u64>) -> Result<Vec<u32>> {
+    raw.into_iter()
+        .map(|v| u32::try_from(v).map_err(|_| corrupt("coordinate exceeds u32")))
+        .collect()
+}
+
+impl WireCodec for WorkerMsg {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            WorkerMsg::Fluid {
+                epoch,
+                coords,
+                mass,
+            } => {
+                debug_assert_eq!(coords.len(), mass.len());
+                out.push(TAG_FLUID);
+                write_varint(out, *epoch);
+                write_varint(out, coords.len() as u64);
+                write_deltas(out, coords.iter().map(|&c| u64::from(c)));
+                write_f64_slice(out, mass);
+            }
+            WorkerMsg::Handoff(ho) => {
+                debug_assert!(
+                    ho.coords.len() == ho.h_slice.len()
+                        && ho.coords.len() == ho.b_slice.len()
+                        && ho.coords.len() == ho.f_slice.len()
+                );
+                out.push(TAG_HANDOFF);
+                write_varint(out, ho.pid_from as u64);
+                write_varint(out, ho.pid_to as u64);
+                write_varint(out, ho.version);
+                write_varint(out, ho.epoch);
+                write_varint(out, ho.coords.len() as u64);
+                write_deltas(out, ho.coords.iter().map(|&c| c as u64));
+                write_f64_slice(out, &ho.h_slice);
+                write_f64_slice(out, &ho.b_slice);
+                write_f64_slice(out, &ho.f_slice);
+            }
+            WorkerMsg::HaloSlice { epoch, coords, h } => {
+                debug_assert_eq!(coords.len(), h.len());
+                out.push(TAG_HALO);
+                write_varint(out, *epoch);
+                write_varint(out, coords.len() as u64);
+                write_deltas(out, coords.iter().map(|&c| u64::from(c)));
+                write_f64_slice(out, h);
+            }
+        }
+    }
+
+    fn decode(buf: &[u8]) -> Result<WorkerMsg> {
+        let Some(&tag) = buf.first() else {
+            return Err(corrupt("empty payload"));
+        };
+        let mut pos = 1;
+        let msg = match tag {
+            TAG_FLUID => {
+                let epoch = read_varint(buf, &mut pos)?;
+                let count = read_varint(buf, &mut pos)? as usize;
+                let coords = coords_u32(read_deltas(buf, &mut pos, count)?)?;
+                let mass = read_f64_slice(buf, &mut pos, count)?;
+                WorkerMsg::Fluid {
+                    epoch,
+                    coords,
+                    mass,
+                }
+            }
+            TAG_HANDOFF => {
+                let pid_from = read_varint(buf, &mut pos)? as usize;
+                let pid_to = read_varint(buf, &mut pos)? as usize;
+                let version = read_varint(buf, &mut pos)?;
+                let epoch = read_varint(buf, &mut pos)?;
+                let count = read_varint(buf, &mut pos)? as usize;
+                let coords = read_deltas(buf, &mut pos, count)?
+                    .into_iter()
+                    .map(|v| v as usize)
+                    .collect();
+                let h_slice = read_f64_slice(buf, &mut pos, count)?;
+                let b_slice = read_f64_slice(buf, &mut pos, count)?;
+                let f_slice = read_f64_slice(buf, &mut pos, count)?;
+                WorkerMsg::Handoff(Handoff {
+                    pid_from,
+                    pid_to,
+                    version,
+                    epoch,
+                    coords,
+                    h_slice,
+                    b_slice,
+                    f_slice,
+                })
+            }
+            TAG_HALO => {
+                let epoch = read_varint(buf, &mut pos)?;
+                let count = read_varint(buf, &mut pos)? as usize;
+                let coords = coords_u32(read_deltas(buf, &mut pos, count)?)?;
+                let h = read_f64_slice(buf, &mut pos, count)?;
+                WorkerMsg::HaloSlice { epoch, coords, h }
+            }
+            other => return Err(corrupt(&format!("unknown payload tag {other:#04x}"))),
+        };
+        if pos != buf.len() {
+            return Err(corrupt("trailing bytes after payload"));
+        }
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(msg: &WorkerMsg) -> WorkerMsg {
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        WorkerMsg::decode(&buf).expect("decode what we encoded")
+    }
+
+    #[test]
+    fn fluid_round_trip() {
+        let msg = WorkerMsg::Fluid {
+            epoch: 3,
+            coords: vec![1, 5, 6, 900],
+            mass: vec![0.25, -0.5, 1e-17, 3.75],
+        };
+        assert_eq!(round_trip(&msg), msg);
+    }
+
+    #[test]
+    fn empty_fluid_round_trip() {
+        let msg = WorkerMsg::Fluid {
+            epoch: 0,
+            coords: vec![],
+            mass: vec![],
+        };
+        assert_eq!(round_trip(&msg), msg);
+    }
+
+    #[test]
+    fn handoff_round_trip() {
+        let msg = WorkerMsg::Handoff(Handoff {
+            pid_from: 2,
+            pid_to: 0,
+            version: 7,
+            epoch: 4,
+            coords: vec![10, 11, 12],
+            h_slice: vec![0.1, 0.2, 0.3],
+            b_slice: vec![1.0, 0.0, -1.0],
+            f_slice: vec![1e-9, 0.5, 0.0],
+        });
+        assert_eq!(round_trip(&msg), msg);
+    }
+
+    #[test]
+    fn halo_round_trip() {
+        let msg = WorkerMsg::HaloSlice {
+            epoch: 9,
+            coords: vec![0, 219],
+            h: vec![0.75, 0.125],
+        };
+        assert_eq!(round_trip(&msg), msg);
+    }
+
+    #[test]
+    fn strict_decode_rejects_mutations() {
+        let msg = WorkerMsg::Fluid {
+            epoch: 1,
+            coords: vec![4, 8],
+            mass: vec![0.5, 0.5],
+        };
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        // truncation anywhere fails
+        for cut in 0..buf.len() {
+            assert!(WorkerMsg::decode(&buf[..cut]).is_err(), "cut at {cut}");
+        }
+        // trailing garbage fails
+        let mut longer = buf.clone();
+        longer.push(0);
+        assert!(WorkerMsg::decode(&longer).is_err());
+        // unknown tag fails
+        let mut bad = buf;
+        bad[0] = 0x3F;
+        assert!(WorkerMsg::decode(&bad).is_err());
+    }
+}

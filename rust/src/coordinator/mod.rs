@@ -34,8 +34,10 @@
 //! idle ones mid-convergence — the elastic half of §4.3 (DESIGN.md §6).
 
 pub mod adaptive;
+pub mod codec;
 pub mod monitor;
 pub mod pool;
+pub mod remote;
 pub mod sim;
 pub mod stream;
 pub mod update;
@@ -55,6 +57,7 @@ use crate::metrics::ConvergenceTrace;
 use crate::partition::Partition;
 use crate::solver::SequenceKind;
 use crate::transport::CoalescePolicy;
+pub use crate::transport::TransportKind;
 
 /// Which inner diffusion kernel the worker core runs. The default is the
 /// partition-local fast path; the pre-refactor global-walk kernel stays
@@ -167,6 +170,11 @@ pub struct DistributedConfig {
     /// which epoch-transition protocol the streaming engine runs
     /// (`--rebase gather|local`; one-shot solves never rebase)
     pub rebase: RebaseMode,
+    /// which message fabric carries the workers (in-process bus or
+    /// loopback TCP wire). Defaults from the `DITER_TRANSPORT`
+    /// environment variable so the whole test-suite can be re-run over
+    /// the wire without touching a line of it.
+    pub transport: TransportKind,
 }
 
 /// Straggler injection: PID `pid` is throttled to at most
@@ -196,11 +204,17 @@ impl DistributedConfig {
             straggler: None,
             kernel: KernelKind::default(),
             rebase: RebaseMode::default(),
+            transport: TransportKind::from_env(),
         }
     }
 
     pub fn with_kernel(mut self, kernel: KernelKind) -> Self {
         self.kernel = kernel;
+        self
+    }
+
+    pub fn with_transport(mut self, transport: TransportKind) -> Self {
+        self.transport = transport;
         self
     }
 

@@ -57,7 +57,7 @@ use crate::error::{DiterError, Result};
 use crate::metrics::MetricSet;
 use crate::partition::{OwnershipTable, PidState};
 use crate::solver::FixedPointProblem;
-use crate::transport::{bus_elastic, BusConfig, BusHub, BusMonitor};
+use crate::transport::{fabric, BusConfig, BusMonitor, Transport, TransportHub};
 
 /// Pool gauges registered on top of the worker/bus metrics.
 pub const POOL_METRICS: &[&str] = &[
@@ -187,7 +187,9 @@ struct ElasticState {
 /// an [`ElasticConfig`] its `poll` additionally spawns and retires
 /// workers mid-convergence.
 pub struct WorkerPool {
-    hub: BusHub<WorkerMsg>,
+    /// the fabric-management face of whichever transport
+    /// `cfg.transport` selected (in-process bus or loopback TCP wire)
+    hub: Box<dyn TransportHub<WorkerMsg>>,
     table: Arc<OwnershipTable>,
     state: Arc<MonitorState>,
     problem: Arc<FixedPointProblem>,
@@ -215,14 +217,15 @@ impl WorkerPool {
             .chain(POOL_METRICS)
             .copied()
             .collect();
-        let (endpoints, hub, metrics) = bus_elastic::<WorkerMsg>(
+        let (endpoints, hub, metrics) = fabric::<WorkerMsg>(
+            cfg.transport,
             k,
             &BusConfig {
                 latency: cfg.latency,
                 seed: cfg.seed,
             },
             &names,
-        );
+        )?;
         let table = OwnershipTable::new(cfg.partition.clone());
         let elastic = cfg.elastic.as_ref().map(|e| ElasticState {
             cfg: e.clone(),
@@ -260,7 +263,7 @@ impl WorkerPool {
     /// Start one worker thread over an already-registered endpoint. The
     /// ownership table must already cover its PID (a vacant part is fine
     /// — the core starts with an empty Ω and adopts via handoff).
-    fn spawn_thread(&mut self, ep: crate::transport::Endpoint<WorkerMsg>) -> WorkerHandle {
+    fn spawn_thread(&mut self, ep: Box<dyn Transport<WorkerMsg>>) -> WorkerHandle {
         let pid = ep.id();
         let mut core = WorkerCore::new(
             pid,

@@ -1,0 +1,761 @@
+//! Process-per-worker distributed solve over the TCP wire transport
+//! (`diter stream --listen` / `--connect`, DESIGN.md §8.6).
+//!
+//! One **coordinator** process accepts `k` worker processes on a control
+//! socket, assigns each a PID, and ships the *recipe* for the problem —
+//! the graph-generation parameters, not the matrix — so every process
+//! regenerates the identical [`FixedPointProblem`] locally (the
+//! generators are seeded and deterministic). Workers then open their
+//! data-plane [`WireHub`] endpoints, exchange listening addresses
+//! through the coordinator (JOINED → PEERS), and run the ordinary
+//! [`WorkerCore`] fluid loop: the same code path the in-process
+//! engines use, pointed at a TCP endpoint instead of a bus endpoint.
+//!
+//! Convergence is monitored with the paper's exact invariant, assembled
+//! from per-process REPORT frames: each worker reports its published
+//! remaining fluid plus its *sender-side* in-flight account (mass it
+//! has written to a socket and not yet seen ACKed — see
+//! [`WireHub::remote`]). The coordinator declares quiescence only when
+//! `Σ undelivered == 0` **and** `Σ published + Σ in-flight < tol` hold
+//! across three consecutive polls, mirroring
+//! [`super::monitor::run_monitor`].
+//!
+//! Scope (documented limitation): remote mode is a **one-shot V2-style
+//! solve over a static partition of a generated problem**. The elastic
+//! pool, adaptive repartitioning, and streaming epoch protocols stay
+//! in-process — their control traffic rides the same wire frames, but
+//! the cross-process orchestration of spawn/retire/rebase is future
+//! work (ROADMAP).
+
+use std::io::ErrorKind;
+use std::net::{IpAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::monitor::MonitorState;
+use crate::coordinator::worker::{WorkerCore, WorkerMsg, WORKER_METRICS};
+use crate::coordinator::{DistributedConfig, TransportKind};
+use crate::error::{DiterError, Result};
+use crate::graph::generators::power_law_web_graph;
+use crate::graph::pagerank::pagerank_system;
+use crate::partition::{OwnershipTable, Partition};
+use crate::solver::FixedPointProblem;
+use crate::transport::wire::{
+    corrupt, read_ctrl_frame, read_deltas, read_f64_slice, read_varint, write_ctrl_frame,
+    write_deltas, write_f64_slice, write_varint, WireCodec,
+};
+use crate::transport::{BusConfig, WireHub};
+
+/// Dangling-page fraction baked into the generated PageRank workload
+/// (matches the `stream`/`pagerank` CLI paths).
+const DANGLING_FRAC: f64 = 0.1;
+
+/// How often a worker emits a REPORT frame.
+const REPORT_EVERY: Duration = Duration::from_millis(25);
+
+/// Consecutive quiescent polls required before shutdown (the same
+/// stability rule as [`super::monitor::run_monitor`]).
+const STABLE_POLLS: u32 = 3;
+
+// ---------------------------------------------------------------------------
+// Control-plane messages
+// ---------------------------------------------------------------------------
+
+/// The problem recipe the coordinator ships in ASSIGN: enough to
+/// regenerate the identical [`FixedPointProblem`] in every process.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RemoteParams {
+    /// number of coordinates (graph nodes)
+    pub n: usize,
+    /// average out-degree of the generated web graph
+    pub avg_out: usize,
+    /// PageRank damping factor
+    pub damping: f64,
+    /// generator + worker RNG seed
+    pub seed: u64,
+    /// stop when total remaining fluid drops below this
+    pub tol: f64,
+    /// coordinator-enforced wall-clock cap
+    pub max_wall: Duration,
+}
+
+/// Control-plane protocol (DESIGN.md §8.6): every variant is one frame
+/// on the coordinator⇆worker control socket. Payload tags live in the
+/// `0x20` block, disjoint from the data-plane tags (`0x10` block) and
+/// the framing kinds (`0x01`–`0x04`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireCtrl {
+    /// worker → coordinator: first frame after connecting
+    Join,
+    /// coordinator → worker: your PID, the worker count, and the recipe
+    Assign {
+        pid: usize,
+        k: usize,
+        params: RemoteParams,
+    },
+    /// worker → coordinator: my data-plane listening address
+    Joined { addr: String },
+    /// coordinator → worker: every PID's data-plane address, by slot
+    Peers { addrs: Vec<String> },
+    /// coordinator → worker: begin diffusing
+    Start,
+    /// worker → coordinator: periodic accounting snapshot
+    Report {
+        pid: usize,
+        /// published remaining fluid (local ‖F‖₁ + coalesced + foster)
+        published: f64,
+        /// sender-side in-flight mass (written, not yet ACKed)
+        inflight: f64,
+        /// sender-side undelivered message count
+        undelivered: u64,
+        /// cumulative scalar updates
+        updates: u64,
+    },
+    /// coordinator → worker: stop stepping, send your STATE
+    Shutdown,
+    /// worker → coordinator: final owned slice of the history vector
+    State { owned: Vec<usize>, h: Vec<f64> },
+}
+
+const CTRL_JOIN: u8 = 0x20;
+const CTRL_ASSIGN: u8 = 0x21;
+const CTRL_JOINED: u8 = 0x22;
+const CTRL_PEERS: u8 = 0x23;
+const CTRL_START: u8 = 0x24;
+const CTRL_REPORT: u8 = 0x25;
+const CTRL_SHUTDOWN: u8 = 0x26;
+const CTRL_STATE: u8 = 0x27;
+
+fn write_str(out: &mut Vec<u8>, s: &str) {
+    write_varint(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn read_str(buf: &[u8], pos: &mut usize) -> Result<String> {
+    let len = read_varint(buf, pos)? as usize;
+    if buf.len() - *pos < len {
+        return Err(corrupt("string runs past frame"));
+    }
+    let s = std::str::from_utf8(&buf[*pos..*pos + len])
+        .map_err(|_| corrupt("string not UTF-8"))?
+        .to_string();
+    *pos += len;
+    Ok(s)
+}
+
+impl WireCodec for WireCtrl {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            WireCtrl::Join => out.push(CTRL_JOIN),
+            WireCtrl::Assign { pid, k, params } => {
+                out.push(CTRL_ASSIGN);
+                write_varint(out, *pid as u64);
+                write_varint(out, *k as u64);
+                write_varint(out, params.n as u64);
+                write_varint(out, params.avg_out as u64);
+                write_f64_slice(out, &[params.damping, params.tol]);
+                write_varint(out, params.seed);
+                write_varint(out, params.max_wall.as_millis() as u64);
+            }
+            WireCtrl::Joined { addr } => {
+                out.push(CTRL_JOINED);
+                write_str(out, addr);
+            }
+            WireCtrl::Peers { addrs } => {
+                out.push(CTRL_PEERS);
+                write_varint(out, addrs.len() as u64);
+                for a in addrs {
+                    write_str(out, a);
+                }
+            }
+            WireCtrl::Start => out.push(CTRL_START),
+            WireCtrl::Report {
+                pid,
+                published,
+                inflight,
+                undelivered,
+                updates,
+            } => {
+                out.push(CTRL_REPORT);
+                write_varint(out, *pid as u64);
+                write_f64_slice(out, &[*published, *inflight]);
+                write_varint(out, *undelivered);
+                write_varint(out, *updates);
+            }
+            WireCtrl::Shutdown => out.push(CTRL_SHUTDOWN),
+            WireCtrl::State { owned, h } => {
+                debug_assert_eq!(owned.len(), h.len());
+                out.push(CTRL_STATE);
+                write_varint(out, owned.len() as u64);
+                write_deltas(out, owned.iter().map(|&c| c as u64));
+                write_f64_slice(out, h);
+            }
+        }
+    }
+
+    fn decode(buf: &[u8]) -> Result<WireCtrl> {
+        let Some(&tag) = buf.first() else {
+            return Err(corrupt("empty control payload"));
+        };
+        let mut pos = 1;
+        let msg = match tag {
+            CTRL_JOIN => WireCtrl::Join,
+            CTRL_ASSIGN => {
+                let pid = read_varint(buf, &mut pos)? as usize;
+                let k = read_varint(buf, &mut pos)? as usize;
+                let n = read_varint(buf, &mut pos)? as usize;
+                let avg_out = read_varint(buf, &mut pos)? as usize;
+                let dt = read_f64_slice(buf, &mut pos, 2)?;
+                let seed = read_varint(buf, &mut pos)?;
+                let max_wall = Duration::from_millis(read_varint(buf, &mut pos)?);
+                WireCtrl::Assign {
+                    pid,
+                    k,
+                    params: RemoteParams {
+                        n,
+                        avg_out,
+                        damping: dt[0],
+                        seed,
+                        tol: dt[1],
+                        max_wall,
+                    },
+                }
+            }
+            CTRL_JOINED => WireCtrl::Joined {
+                addr: read_str(buf, &mut pos)?,
+            },
+            CTRL_PEERS => {
+                let count = read_varint(buf, &mut pos)? as usize;
+                if count > buf.len() {
+                    return Err(corrupt("peer count exceeds frame"));
+                }
+                let mut addrs = Vec::with_capacity(count);
+                for _ in 0..count {
+                    addrs.push(read_str(buf, &mut pos)?);
+                }
+                WireCtrl::Peers { addrs }
+            }
+            CTRL_START => WireCtrl::Start,
+            CTRL_REPORT => {
+                let pid = read_varint(buf, &mut pos)? as usize;
+                let pi = read_f64_slice(buf, &mut pos, 2)?;
+                let undelivered = read_varint(buf, &mut pos)?;
+                let updates = read_varint(buf, &mut pos)?;
+                WireCtrl::Report {
+                    pid,
+                    published: pi[0],
+                    inflight: pi[1],
+                    undelivered,
+                    updates,
+                }
+            }
+            CTRL_SHUTDOWN => WireCtrl::Shutdown,
+            CTRL_STATE => {
+                let count = read_varint(buf, &mut pos)? as usize;
+                let owned = read_deltas(buf, &mut pos, count)?
+                    .into_iter()
+                    .map(|v| v as usize)
+                    .collect();
+                let h = read_f64_slice(buf, &mut pos, count)?;
+                WireCtrl::State { owned, h }
+            }
+            other => return Err(corrupt(&format!("unknown control tag {other:#04x}"))),
+        };
+        if pos != buf.len() {
+            return Err(corrupt("trailing bytes after control payload"));
+        }
+        Ok(msg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Control connection: blocking frames + a non-blocking poll
+// ---------------------------------------------------------------------------
+
+/// One control-plane socket. Frames are written and read blocking (they
+/// are small and the peer is cooperative); [`CtrlConn::try_recv`] gives
+/// the run-phase a non-blocking poll by peeking before committing to a
+/// blocking frame read — once the length prefix's first byte is
+/// visible, the rest of the (already fully written and flushed) frame
+/// is imminent.
+struct CtrlConn {
+    stream: TcpStream,
+}
+
+impl CtrlConn {
+    fn send(&mut self, msg: &WireCtrl) -> Result<()> {
+        write_ctrl_frame(&mut self.stream, msg)
+    }
+
+    fn recv(&mut self) -> Result<WireCtrl> {
+        read_ctrl_frame(&mut self.stream)
+    }
+
+    /// Non-blocking poll: `Ok(None)` when no frame has started arriving.
+    /// A closed peer is an error — the protocol ends with an explicit
+    /// frame exchange, never a silent hangup.
+    fn try_recv(&mut self) -> Result<Option<WireCtrl>> {
+        self.stream.set_nonblocking(true)?;
+        let mut probe = [0u8; 1];
+        let ready = match self.stream.peek(&mut probe) {
+            Ok(0) => {
+                let _ = self.stream.set_nonblocking(false);
+                return Err(DiterError::Coordinator(
+                    "control peer hung up mid-protocol".into(),
+                ));
+            }
+            Ok(_) => true,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => false,
+            Err(e) => {
+                let _ = self.stream.set_nonblocking(false);
+                return Err(e.into());
+            }
+        };
+        self.stream.set_nonblocking(false)?;
+        if ready {
+            Ok(Some(self.recv()?))
+        } else {
+            Ok(None)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------------
+
+/// What a remote solve produced, as assembled at the coordinator.
+#[derive(Clone, Debug)]
+pub struct RemoteSummary {
+    /// the assembled solution (every coordinate from its owner's STATE)
+    pub x: Vec<f64>,
+    /// authoritative residual of `x`, recomputed against the
+    /// regenerated problem
+    pub residual: f64,
+    pub converged: bool,
+    /// total scalar updates across all worker processes
+    pub total_updates: u64,
+    pub wall_secs: f64,
+}
+
+fn regenerate(params: &RemoteParams) -> Result<Arc<FixedPointProblem>> {
+    let g = power_law_web_graph(params.n, params.avg_out, DANGLING_FRAC, params.seed);
+    let sys = pagerank_system(&g, params.damping, true)?;
+    Ok(Arc::new(FixedPointProblem::new(sys.matrix, sys.b)?))
+}
+
+/// Run the coordinator role: bind `listen`, accept `k` workers, drive
+/// the join → assign → peers → start → report → shutdown → state
+/// protocol, and assemble the solution.
+pub fn run_coordinator(listen: &str, k: usize, params: &RemoteParams) -> Result<RemoteSummary> {
+    let listener = TcpListener::bind(listen)?;
+    serve_coordinator(listener, k, params)
+}
+
+/// [`run_coordinator`] over an already-bound listener (lets tests and
+/// embedders use an OS-assigned port).
+pub fn serve_coordinator(
+    listener: TcpListener,
+    k: usize,
+    params: &RemoteParams,
+) -> Result<RemoteSummary> {
+    if k == 0 {
+        return Err(DiterError::Coordinator("need at least one worker".into()));
+    }
+    // Join phase: accept k workers; join order is PID order.
+    let mut conns: Vec<CtrlConn> = Vec::with_capacity(k);
+    for pid in 0..k {
+        let (stream, peer) = listener.accept()?;
+        stream.set_nodelay(true)?;
+        let mut conn = CtrlConn { stream };
+        match conn.recv()? {
+            WireCtrl::Join => {}
+            other => {
+                return Err(DiterError::Coordinator(format!(
+                    "expected JOIN from {peer}, got {other:?}"
+                )))
+            }
+        }
+        conn.send(&WireCtrl::Assign {
+            pid,
+            k,
+            params: params.clone(),
+        })?;
+        eprintln!("[coordinator] worker {pid}/{k} joined from {peer}");
+        conns.push(conn);
+    }
+
+    // Address exchange: collect every JOINED, then broadcast PEERS + START.
+    let mut addrs = vec![String::new(); k];
+    for (pid, conn) in conns.iter_mut().enumerate() {
+        match conn.recv()? {
+            WireCtrl::Joined { addr } => addrs[pid] = addr,
+            other => {
+                return Err(DiterError::Coordinator(format!(
+                    "expected JOINED from pid {pid}, got {other:?}"
+                )))
+            }
+        }
+    }
+    for conn in conns.iter_mut() {
+        conn.send(&WireCtrl::Peers {
+            addrs: addrs.clone(),
+        })?;
+        conn.send(&WireCtrl::Start)?;
+    }
+    eprintln!("[coordinator] {k} workers started, monitoring convergence");
+
+    // Run phase: poll REPORTs, apply the exact-monitor quiescence rule.
+    let start = Instant::now();
+    let mut latest: Vec<Option<(f64, f64, u64, u64)>> = vec![None; k];
+    let mut stable = 0u32;
+    let mut converged = false;
+    loop {
+        for conn in conns.iter_mut() {
+            while let Some(msg) = conn.try_recv()? {
+                match msg {
+                    WireCtrl::Report {
+                        pid,
+                        published,
+                        inflight,
+                        undelivered,
+                        updates,
+                    } if pid < k => {
+                        latest[pid] = Some((published, inflight, undelivered, updates));
+                    }
+                    other => {
+                        return Err(DiterError::Coordinator(format!(
+                            "expected REPORT, got {other:?}"
+                        )))
+                    }
+                }
+            }
+        }
+        if latest.iter().all(Option::is_some) {
+            let undelivered: u64 = latest.iter().map(|r| r.unwrap().2).sum();
+            // per-process gating, as in BusMonitor::inflight_or_zero:
+            // with nothing undelivered the in-flight float is residue,
+            // not mass
+            let total: f64 = latest
+                .iter()
+                .map(|r| {
+                    let (published, inflight, und, _) = r.unwrap();
+                    published + if und > 0 { inflight } else { 0.0 }
+                })
+                .sum();
+            if undelivered == 0 && total < params.tol {
+                stable += 1;
+                if stable >= STABLE_POLLS {
+                    converged = true;
+                    break;
+                }
+            } else {
+                stable = 0;
+            }
+        }
+        if start.elapsed() > params.max_wall {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Shutdown: every worker answers with its STATE (late REPORTs may
+    // still be queued ahead of it).
+    for conn in conns.iter_mut() {
+        conn.send(&WireCtrl::Shutdown)?;
+    }
+    let mut x = vec![0.0; params.n];
+    let mut total_updates = 0u64;
+    for (pid, conn) in conns.iter_mut().enumerate() {
+        loop {
+            match conn.recv()? {
+                WireCtrl::Report { pid, updates, .. } if pid < k => {
+                    if let Some(r) = latest.get_mut(pid).and_then(|r| r.as_mut()) {
+                        r.3 = updates;
+                    }
+                }
+                WireCtrl::State { owned, h } => {
+                    if owned.len() != h.len() {
+                        return Err(DiterError::Coordinator(format!(
+                            "pid {pid} STATE shape mismatch"
+                        )));
+                    }
+                    for (&c, &hv) in owned.iter().zip(&h) {
+                        if c >= params.n {
+                            return Err(DiterError::Coordinator(format!(
+                                "pid {pid} STATE coordinate {c} out of range"
+                            )));
+                        }
+                        x[c] = hv;
+                    }
+                    break;
+                }
+                other => {
+                    return Err(DiterError::Coordinator(format!(
+                        "expected STATE from pid {pid}, got {other:?}"
+                    )))
+                }
+            }
+        }
+    }
+    total_updates += latest.iter().flatten().map(|r| r.3).sum::<u64>();
+
+    let problem = regenerate(params)?;
+    let residual = problem.residual_norm(&x);
+    Ok(RemoteSummary {
+        x,
+        residual,
+        converged,
+        total_updates,
+        wall_secs: start.elapsed().as_secs_f64(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Worker
+// ---------------------------------------------------------------------------
+
+/// Run the worker role: connect to the coordinator at `connect`, join,
+/// regenerate the assigned problem, and diffuse until SHUTDOWN.
+/// `bind_ip` is the local interface the data-plane listener binds
+/// (must be reachable by peer workers).
+pub fn run_worker(connect: &str, bind_ip: IpAddr) -> Result<()> {
+    let stream = TcpStream::connect(connect)?;
+    stream.set_nodelay(true)?;
+    let mut ctrl = CtrlConn { stream };
+    ctrl.send(&WireCtrl::Join)?;
+    let (pid, k, params) = match ctrl.recv()? {
+        WireCtrl::Assign { pid, k, params } => (pid, k, params),
+        other => {
+            return Err(DiterError::Coordinator(format!(
+                "expected ASSIGN, got {other:?}"
+            )))
+        }
+    };
+    eprintln!(
+        "[worker {pid}] assigned: n={} k={k} seed={} tol={:.0e}",
+        params.n, params.seed, params.tol
+    );
+
+    let problem = regenerate(&params)?;
+    let partition = Partition::contiguous(params.n, k)?;
+    let cfg = DistributedConfig::new(partition.clone())
+        .with_tol(params.tol)
+        .with_seed(params.seed)
+        .with_transport(TransportKind::Wire);
+
+    let hub = WireHub::<WorkerMsg>::remote(
+        k,
+        bind_ip,
+        &BusConfig {
+            latency: None,
+            seed: params.seed,
+        },
+        WORKER_METRICS,
+    );
+    let ep = hub.add_endpoint(pid)?;
+    ctrl.send(&WireCtrl::Joined {
+        addr: ep.local_addr().to_string(),
+    })?;
+
+    match ctrl.recv()? {
+        WireCtrl::Peers { addrs } => {
+            if addrs.len() != k {
+                return Err(DiterError::Coordinator(format!(
+                    "PEERS table has {} slots, expected {k}",
+                    addrs.len()
+                )));
+            }
+            for (i, a) in addrs.iter().enumerate() {
+                if i == pid {
+                    continue;
+                }
+                let addr = a.parse().map_err(|_| {
+                    DiterError::Coordinator(format!("bad peer address {a:?} for pid {i}"))
+                })?;
+                hub.set_peer_addr(i, addr);
+            }
+        }
+        other => {
+            return Err(DiterError::Coordinator(format!(
+                "expected PEERS, got {other:?}"
+            )))
+        }
+    }
+    match ctrl.recv()? {
+        WireCtrl::Start => {}
+        other => {
+            return Err(DiterError::Coordinator(format!(
+                "expected START, got {other:?}"
+            )))
+        }
+    }
+
+    let table = OwnershipTable::new(partition);
+    let state = MonitorState::with_capacity(k, k);
+    let mut core = WorkerCore::new(pid, Box::new(ep), problem, table, state.clone(), cfg);
+
+    // The fluid loop, with a worker-side wall cap twice the
+    // coordinator's in case the coordinator dies without a SHUTDOWN.
+    let start = Instant::now();
+    let wall_cap = params.max_wall * 2 + Duration::from_secs(5);
+    let mut last_report = Instant::now();
+    loop {
+        match ctrl.try_recv()? {
+            Some(WireCtrl::Shutdown) => break,
+            Some(other) => {
+                return Err(DiterError::Coordinator(format!(
+                    "expected SHUTDOWN, got {other:?}"
+                )))
+            }
+            None => {}
+        }
+        let (got_fluid, r_k) = core.step();
+        if !got_fluid && r_k == 0.0 {
+            // locally drained: don't spin the socket at full speed
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        if last_report.elapsed() >= REPORT_EVERY {
+            last_report = Instant::now();
+            let mon = hub.monitor();
+            ctrl.send(&WireCtrl::Report {
+                pid,
+                published: state.published_values()[pid],
+                inflight: mon.inflight(),
+                undelivered: mon.undelivered(),
+                updates: state.update_counts()[pid],
+            })?;
+        }
+        if start.elapsed() > wall_cap {
+            return Err(DiterError::Coordinator(
+                "worker wall-clock cap exceeded with no SHUTDOWN".into(),
+            ));
+        }
+    }
+
+    let (owned, h) = core.finish();
+    eprintln!("[worker {pid}] shutting down: {} coordinates held", owned.len());
+    ctrl.send(&WireCtrl::State { owned, h })?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::Ipv4Addr;
+
+    fn round_trip(msg: &WireCtrl) -> WireCtrl {
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        WireCtrl::decode(&buf).expect("decode what we encoded")
+    }
+
+    #[test]
+    fn ctrl_messages_round_trip() {
+        let params = RemoteParams {
+            n: 5000,
+            avg_out: 8,
+            damping: 0.85,
+            seed: 7,
+            tol: 1e-9,
+            max_wall: Duration::from_secs(60),
+        };
+        let msgs = [
+            WireCtrl::Join,
+            WireCtrl::Assign {
+                pid: 3,
+                k: 4,
+                params,
+            },
+            WireCtrl::Joined {
+                addr: "127.0.0.1:45123".into(),
+            },
+            WireCtrl::Peers {
+                addrs: vec!["127.0.0.1:1".into(), "10.0.0.2:2".into()],
+            },
+            WireCtrl::Start,
+            WireCtrl::Report {
+                pid: 1,
+                published: 0.5,
+                inflight: 1e-3,
+                undelivered: 2,
+                updates: 12345,
+            },
+            WireCtrl::Shutdown,
+            WireCtrl::State {
+                owned: vec![4, 5, 6, 100],
+                h: vec![0.1, 0.2, 0.3, 0.4],
+            },
+        ];
+        for msg in &msgs {
+            assert_eq!(&round_trip(msg), msg);
+        }
+    }
+
+    #[test]
+    fn ctrl_decode_rejects_garbage() {
+        assert!(WireCtrl::decode(&[]).is_err());
+        assert!(WireCtrl::decode(&[0x7F]).is_err());
+        // trailing bytes after a tag-only message
+        assert!(WireCtrl::decode(&[CTRL_START, 0]).is_err());
+        // truncated ASSIGN
+        let mut buf = Vec::new();
+        WireCtrl::Assign {
+            pid: 0,
+            k: 2,
+            params: RemoteParams {
+                n: 100,
+                avg_out: 4,
+                damping: 0.85,
+                seed: 1,
+                tol: 1e-9,
+                max_wall: Duration::from_secs(1),
+            },
+        }
+        .encode(&mut buf);
+        for cut in 0..buf.len() {
+            assert!(WireCtrl::decode(&buf[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    /// End-to-end remote solve with the coordinator and two "processes"
+    /// as threads: three separate hubs, three accounting domains, real
+    /// TCP on both planes — exactly the process topology minus fork().
+    #[test]
+    fn remote_solve_two_workers() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        let params = RemoteParams {
+            n: 400,
+            avg_out: 6,
+            damping: 0.85,
+            seed: 11,
+            tol: 1e-10,
+            max_wall: Duration::from_secs(30),
+        };
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    run_worker(&addr, IpAddr::V4(Ipv4Addr::LOCALHOST))
+                })
+            })
+            .collect();
+        let summary = serve_coordinator(listener, 2, &params).expect("coordinator");
+        for w in workers {
+            w.join().expect("worker thread").expect("worker ok");
+        }
+        assert!(summary.converged, "should quiesce well inside the cap");
+        assert!(
+            summary.residual < 1e-8,
+            "assembled residual {} too large",
+            summary.residual
+        );
+        assert!(summary.total_updates > 0);
+        // PageRank mass: Σx ≈ 1 for the damped system with teleport b
+        let mass: f64 = summary.x.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-6, "Σx = {mass}");
+    }
+}

@@ -60,7 +60,7 @@ use crate::metrics::MetricSet;
 use crate::partition::{OwnershipTable, Partition};
 use crate::solver::{FixedPointProblem, GreedyQueue, SequenceKind, SequenceState};
 use crate::sparse::LocalSystem;
-use crate::transport::{CoalesceBuffer, Endpoint, Received};
+use crate::transport::{CoalesceBuffer, Received, Transport};
 
 /// Metric names the worker core registers on top of the bus metrics.
 pub const WORKER_METRICS: &[&str] = &[
@@ -84,7 +84,7 @@ const PATCHES_PER_REBUILD: u32 = 64;
 
 /// Everything that travels between PIDs: the fluid data plane plus the
 /// repartitioning control plane.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum WorkerMsg {
     /// Epoch-tagged fluid as a flat SoA parcel: `coords[u]` receives
     /// `mass[u]` (a one-shot solve stays at epoch 0). The split layout
@@ -119,7 +119,7 @@ pub enum WorkerMsg {
 /// deployment has no shared `FixedPointProblem`, so the offset slice must
 /// travel with the range (in-process the recipient could read it from the
 /// shared problem).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Handoff {
     pub pid_from: usize,
     pub pid_to: usize,
@@ -138,7 +138,9 @@ pub struct Handoff {
 /// the ownership-version cache.
 pub struct WorkerCore {
     k: usize,
-    ep: Endpoint<WorkerMsg>,
+    /// the transport face: in-process bus or TCP wire, chosen by
+    /// [`crate::transport::TransportKind`] — the core cannot tell
+    ep: Box<dyn Transport<WorkerMsg>>,
     problem: Arc<FixedPointProblem>,
     table: Arc<OwnershipTable>,
     state: Arc<MonitorState>,
@@ -201,7 +203,7 @@ struct LocalRebase {
 impl WorkerCore {
     pub fn new(
         k: usize,
-        ep: Endpoint<WorkerMsg>,
+        ep: Box<dyn Transport<WorkerMsg>>,
         problem: Arc<FixedPointProblem>,
         table: Arc<OwnershipTable>,
         state: Arc<MonitorState>,

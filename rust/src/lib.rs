@@ -31,6 +31,26 @@
 //! stub with the same API so the crate builds and tests on a clean machine
 //! with no native XLA toolchain and zero external dependencies.
 //!
+//! ## Transports
+//!
+//! Worker-to-worker messaging goes through the
+//! [`transport::Transport`] / [`transport::TransportHub`] trait pair,
+//! with two implementations selected by
+//! [`transport::TransportKind`] (CLI `--transport`, env
+//! `DITER_TRANSPORT`):
+//!
+//! * **bus** — the in-process channel fabric
+//!   ([`transport::Endpoint`] / [`transport::BusHub`]): exact shared
+//!   accounting, optional simulated latency, the default;
+//! * **wire** — length-prefixed TCP framing
+//!   ([`transport::WireEndpoint`] / [`transport::WireHub`],
+//!   spec in `DESIGN.md` §8): the same fluid parcels and control
+//!   messages as bytes on a socket, either as a single-process
+//!   loopback harness (the whole test-suite re-runs over it
+//!   unchanged) or process-per-worker via
+//!   `diter stream --listen/--connect`
+//!   ([`coordinator::remote`]).
+//!
 //! ## Quick start
 //!
 //! ```

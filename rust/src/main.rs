@@ -17,9 +17,10 @@ use std::time::Duration;
 use diter::bench_harness::{fmt_secs, Table};
 use diter::cli::{parse_args, usage, Args, OptSpec};
 use diter::configfile::Config;
+use diter::coordinator::remote::{self, RemoteParams};
 use diter::coordinator::{
     v1, v2, AdaptiveConfig, AdaptivePolicy, DistributedConfig, ElasticConfig, KernelKind,
-    RebaseMode, StreamingEngine,
+    RebaseMode, StreamingEngine, TransportKind,
 };
 use diter::graph::{
     block_coupled_matrix, pagerank_system, paper_matrix, power_law_web_graph, ChurnModel,
@@ -466,6 +467,30 @@ fn stream_spec() -> Vec<OptSpec> {
             is_flag: false,
             default: Some("250"),
         },
+        OptSpec {
+            name: "transport",
+            help: "message fabric: bus (in-process) | wire (loopback TCP); default from DITER_TRANSPORT",
+            is_flag: false,
+            default: None,
+        },
+        OptSpec {
+            name: "listen",
+            help: "coordinator role: accept --pids worker processes on ADDR (one-shot remote solve)",
+            is_flag: false,
+            default: None,
+        },
+        OptSpec {
+            name: "connect",
+            help: "worker role: join the coordinator at ADDR",
+            is_flag: false,
+            default: None,
+        },
+        OptSpec {
+            name: "bind",
+            help: "worker role: local IP the data-plane listener binds",
+            is_flag: false,
+            default: Some("127.0.0.1"),
+        },
     ]
 }
 
@@ -494,6 +519,48 @@ fn cmd_stream(argv: &[String]) -> CliResult {
         .ok_or("bad --rebase (expected gather | local)")?;
     let compare_cold = args.has_flag("compare-cold");
 
+    // Process-per-worker roles (DESIGN.md §8.6): a one-shot remote solve
+    // over TCP instead of the in-process streaming run.
+    if let Some(connect) = args.get("connect") {
+        let bind = args
+            .get_str("bind", "127.0.0.1")
+            .parse()
+            .map_err(|_| "bad --bind (expected an IP address)")?;
+        println!("worker: joining coordinator at {connect}");
+        remote::run_worker(connect, bind)?;
+        println!("worker: done");
+        return Ok(());
+    }
+    if let Some(listen) = args.get("listen") {
+        let params = RemoteParams {
+            n,
+            avg_out: 8,
+            damping,
+            seed,
+            tol,
+            max_wall: Duration::from_secs(120),
+        };
+        println!("coordinator: waiting for {k} workers on {listen}");
+        let summary = remote::run_coordinator(listen, k, &params)?;
+        println!(
+            "remote solve: converged={} residual={:.2e} wall={} ({} updates across {k} processes)",
+            summary.converged,
+            summary.residual,
+            fmt_secs(summary.wall_secs),
+            summary.total_updates
+        );
+        if !summary.converged {
+            return Err("remote solve did not converge inside the wall cap".into());
+        }
+        return Ok(());
+    }
+    let transport = match args.get("transport") {
+        Some(name) => {
+            TransportKind::parse(name).ok_or("bad --transport (expected bus | wire)")?
+        }
+        None => TransportKind::from_env(),
+    };
+
     // seed graph uses ~90% of the capacity so the growth model has room
     let seed_nodes = if matches!(model, ChurnModel::PreferentialGrowth { .. }) {
         n * 9 / 10
@@ -502,10 +569,11 @@ fn cmd_stream(argv: &[String]) -> CliResult {
     };
     println!(
         "streaming PageRank: capacity N={n} (seed graph {seed_nodes}), K={k} PIDs, \
-         model={}, kernel={}, rebase={}, {batches} batches x {batch_size}",
+         model={}, kernel={}, rebase={}, transport={}, {batches} batches x {batch_size}",
         model.name(),
         kernel.name(),
-        rebase.name()
+        rebase.name(),
+        transport.name()
     );
     let g = power_law_web_graph(seed_nodes, 8, 0.1, seed);
     let mg = MutableDigraph::from_digraph(&g, n);
@@ -514,7 +582,8 @@ fn cmd_stream(argv: &[String]) -> CliResult {
         .with_seed(seed)
         .with_sequence(SequenceKind::GreedyMaxFluid)
         .with_kernel(kernel)
-        .with_rebase(rebase);
+        .with_rebase(rebase)
+        .with_transport(transport);
     cfg.max_wall = Duration::from_secs(120);
     if args.get("straggler").is_some() {
         let pid = args.get_usize("straggler", 0)?;

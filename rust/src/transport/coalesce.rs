@@ -116,6 +116,8 @@ pub struct CoalesceBuffer {
 }
 
 impl CoalesceBuffer {
+    /// A buffer addressing `k` destinations under `policy` (the table
+    /// grows on demand when the PID pool widens).
     pub fn new(k: usize, policy: CoalescePolicy) -> Self {
         Self {
             policy,
@@ -224,6 +226,7 @@ impl CoalesceBuffer {
         self.accs.iter().map(|a| a.mass).sum()
     }
 
+    /// Whether no destination holds any unflushed fluid.
     pub fn is_empty(&self) -> bool {
         self.accs.iter().all(|a| a.touched.is_empty())
     }

@@ -14,6 +14,25 @@
 //! delay injection reproduces the protocol-visible behaviour (reordering
 //! across endpoints, delay, conservation) deterministically under a seed.
 //!
+//! ## Transports
+//!
+//! All of the above is expressed once, abstractly, by the [`Transport`] /
+//! [`TransportHub`] trait pair, with two implementations behind it:
+//!
+//! * the in-process **bus** ([`Endpoint`] / [`BusHub`]) — mpsc channels
+//!   between worker threads, the default and the deterministic test
+//!   substrate;
+//! * the **wire** ([`WireEndpoint`] / [`WireHub`], module [`wire`]) — a
+//!   TCP backend speaking the length-prefixed frame protocol specified in
+//!   DESIGN.md §8, usable both as a loopback harness inside one process
+//!   and across real processes via `diter stream --listen/--connect`.
+//!
+//! Code above this module selects between them with [`TransportKind`]
+//! (or the `DITER_TRANSPORT` environment variable) and builds the fabric
+//! through [`fabric`]; everything downstream holds `Box<dyn Transport>`
+//! and cannot tell the difference — which is precisely the property the
+//! conservation test-suite exercises.
+//!
 //! ## Elastic endpoints
 //!
 //! The bus is **elastic**: endpoints can be added and removed while the
@@ -29,9 +48,11 @@
 
 mod atomic_f64;
 mod coalesce;
+pub mod wire;
 
 pub use atomic_f64::AtomicF64;
 pub use coalesce::{CoalesceBuffer, CoalescePolicy};
+pub use wire::{WireCodec, WireEndpoint, WireHub};
 
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -284,6 +305,7 @@ pub fn bus_elastic<T: Send>(
 }
 
 impl<T: Send> Endpoint<T> {
+    /// This endpoint's PID (its slot in the directory).
     pub fn id(&self) -> usize {
         self.id
     }
@@ -525,10 +547,13 @@ pub struct BusMonitor {
 }
 
 impl BusMonitor {
+    /// Total |fluid| currently sent-but-not-applied (raw accumulator —
+    /// see [`BusMonitor::inflight_or_zero`] for the monitor-safe read).
     pub fn inflight(&self) -> f64 {
         self.shared.inflight.get()
     }
 
+    /// Parcels retained by senders awaiting acknowledgement.
     pub fn retained(&self) -> u64 {
         self.shared.retained.load(Ordering::Relaxed)
     }
@@ -557,6 +582,329 @@ impl BusMonitor {
 pub fn monitor_of<T>(endpoint: &Endpoint<T>) -> BusMonitor {
     BusMonitor {
         shared: endpoint.shared.clone(),
+    }
+}
+
+/// The abstract worker-side face of the message fabric: everything a PID
+/// worker needs from its transport, object-safe so the coordinator can
+/// hold `Box<dyn Transport<WorkerMsg>>` and swap the substrate (in-process
+/// bus vs TCP wire) without recompiling a single worker line.
+///
+/// The contract mirrors the paper's three transport requirements (§3.3):
+///
+/// * **asynchrony** — every method is non-blocking;
+/// * **no fluid loss** — [`Transport::try_send`] books the parcel's mass
+///   on the global in-flight account *before* it leaves, retains it until
+///   acknowledged, and hands the payload back (accounting undone) when the
+///   destination is gone, so the caller re-routes instead of dropping;
+/// * **exact accounting** — a received parcel's mass stays in flight until
+///   the receiver [`Transport::commit`]s it, so the convergence monitor
+///   can never observe fluid that is nowhere.
+///
+/// A minimal send/receive/commit round-trip, written against the trait so
+/// it runs identically over any implementation:
+///
+/// ```
+/// use diter::transport::{bus, BusConfig, Transport};
+///
+/// let (mut eps, _metrics) = bus::<&'static str>(2, &BusConfig::default());
+/// let mut b = eps.pop().unwrap();
+/// let mut a = eps.pop().unwrap();
+/// // view both ends purely through the trait
+/// let a: &mut dyn Transport<&'static str> = &mut a;
+/// let b: &mut dyn Transport<&'static str> = &mut b;
+///
+/// a.send(1, "parcel", 0.25, 6).unwrap();
+/// let got = b.try_recv_uncommitted().expect("ripe immediately");
+/// assert_eq!((got.from, got.payload), (0, "parcel"));
+/// assert_eq!(b.global_inflight(), 0.25, "still in flight until committed");
+/// b.commit(got.from, got.seq, got.mass);
+/// assert_eq!(b.global_inflight(), 0.0);
+/// a.collect_acks();
+/// assert_eq!(a.unacked(), 0, "ack released the sender's retention");
+/// ```
+pub trait Transport<T: Clone>: Send {
+    /// This endpoint's PID (its address on the fabric).
+    fn id(&self) -> usize;
+
+    /// Directory width (live + vacant slots).
+    fn peers(&self) -> usize;
+
+    /// Send `payload` carrying `mass` units of |fluid| to `to`, handing
+    /// the payload back when the destination is missing or closed so the
+    /// caller can re-route it — a retiring PID's fluid must never be
+    /// dropped. On the error path the in-flight accounting is fully
+    /// undone (the fluid never left the caller), which transiently errs
+    /// high, never low. `approx_bytes` feeds the `bytes_sent` metric.
+    fn try_send(
+        &mut self,
+        to: usize,
+        payload: T,
+        mass: f64,
+        approx_bytes: usize,
+    ) -> std::result::Result<(), T>;
+
+    /// Non-blocking receive of the next ripe message WITHOUT committing:
+    /// the fluid stays on the in-flight account until
+    /// [`Transport::commit`] is called with the message's coordinates.
+    fn try_recv_uncommitted(&mut self) -> Option<Received<T>>;
+
+    /// Confirm that a received message's payload has been fully applied:
+    /// releases its fluid from the in-flight account, marks it delivered,
+    /// and acknowledges to the sender ("as TCP"). Acks to a sender that
+    /// has since retired are dropped — its retention list died with it.
+    fn commit(&mut self, from: usize, seq: u64, mass: f64);
+
+    /// Process acknowledgments: drop retained parcels the peers confirmed.
+    fn collect_acks(&mut self);
+
+    /// Parcels still awaiting acknowledgment.
+    fn unacked(&self) -> usize;
+
+    /// Messages received but not yet ripe (latency injection) or not yet
+    /// surfaced. A draining shutdown polls this until it reaches zero to
+    /// avoid stranding accounted mass inside the transport.
+    fn pending_delayed(&mut self) -> usize;
+
+    /// Global in-flight fluid (sent but not yet applied anywhere this
+    /// transport can see; a multi-process wire sees its own process).
+    fn global_inflight(&self) -> f64;
+
+    /// The fabric-wide metric set (shared by all endpoints).
+    fn metrics(&self) -> Arc<MetricSet>;
+
+    /// [`Transport::try_send`] that converts the returned payload into a
+    /// transport error (for destinations that must exist).
+    fn send(&mut self, to: usize, payload: T, mass: f64, approx_bytes: usize) -> Result<()> {
+        self.try_send(to, payload, mass, approx_bytes)
+            .map_err(|_| DiterError::Transport(format!("no endpoint {to}")))
+    }
+
+    /// Send a clone of `payload` to every live peer (vacant slots and
+    /// closed peers are skipped without error).
+    fn broadcast(&mut self, payload: &T, mass: f64, approx_bytes: usize) -> Result<()> {
+        for to in 0..self.peers() {
+            if to != self.id() {
+                let _ = self.try_send(to, payload.clone(), mass, approx_bytes);
+            }
+        }
+        Ok(())
+    }
+
+    /// Send one payload to each endpoint in `dests` (cloned per peer).
+    /// Self and closed/vacant destinations are skipped — the caller's
+    /// protocol must tolerate an absent peer. Returns how many sends
+    /// were delivered.
+    fn multicast(&mut self, dests: &[usize], payload: &T, mass: f64, approx_bytes: usize) -> usize {
+        let mut delivered = 0;
+        for &to in dests {
+            if to != self.id() && self.try_send(to, payload.clone(), mass, approx_bytes).is_ok() {
+                delivered += 1;
+            }
+        }
+        delivered
+    }
+
+    /// Non-blocking receive with immediate commit (small payloads that
+    /// are applied on the spot).
+    fn try_recv(&mut self) -> Option<Received<T>> {
+        let r = self.try_recv_uncommitted()?;
+        self.commit(r.from, r.seq, r.mass);
+        Some(r)
+    }
+
+    /// Drain everything ripe right now (immediate commit).
+    fn drain(&mut self) -> Vec<Received<T>> {
+        let mut out = Vec::new();
+        while let Some(m) = self.try_recv() {
+            out.push(m);
+        }
+        out
+    }
+
+    /// Drain everything ripe right now WITHOUT committing.
+    fn drain_uncommitted(&mut self) -> Vec<Received<T>> {
+        let mut out = Vec::new();
+        while let Some(m) = self.try_recv_uncommitted() {
+            out.push(m);
+        }
+        out
+    }
+}
+
+/// The abstract fabric-management face: registering and deregistering
+/// endpoints while workers run (the elastic pool's transport seam) plus
+/// the shared conservation accounting. Counterpart of [`Transport`];
+/// implemented by [`BusHub`] and [`WireHub`].
+pub trait TransportHub<T: Clone>: Send {
+    /// Register a new endpoint at slot `id`: either a vacant (retired)
+    /// slot, or exactly one past the current end (the directory never
+    /// has gaps of unknown width). Errors if the slot is occupied.
+    fn add_endpoint(&self, id: usize) -> Result<Box<dyn Transport<T>>>;
+
+    /// Deregister slot `id`: subsequent sends to it fail fast at the
+    /// sender (which re-routes the fluid). Strictly ordered against
+    /// in-progress sends — messages that were accepted before removal
+    /// are still drained by the endpoint's owner.
+    fn remove_endpoint(&self, id: usize);
+
+    /// Directory width (live + vacant slots).
+    fn capacity(&self) -> usize;
+
+    /// Whether slot `id` currently has a live endpoint.
+    fn is_live(&self, id: usize) -> bool;
+
+    /// A monitor handle onto the shared conservation accounting.
+    fn monitor(&self) -> BusMonitor;
+
+    /// The fabric-wide metric set.
+    fn metrics(&self) -> Arc<MetricSet>;
+}
+
+impl<T: Send + Clone + 'static> Transport<T> for Endpoint<T> {
+    fn id(&self) -> usize {
+        Endpoint::id(self)
+    }
+    fn peers(&self) -> usize {
+        Endpoint::peers(self)
+    }
+    fn try_send(
+        &mut self,
+        to: usize,
+        payload: T,
+        mass: f64,
+        approx_bytes: usize,
+    ) -> std::result::Result<(), T> {
+        Endpoint::try_send(self, to, payload, mass, approx_bytes)
+    }
+    fn try_recv_uncommitted(&mut self) -> Option<Received<T>> {
+        Endpoint::try_recv_uncommitted(self)
+    }
+    fn commit(&mut self, from: usize, seq: u64, mass: f64) {
+        Endpoint::commit(self, from, seq, mass)
+    }
+    fn collect_acks(&mut self) {
+        Endpoint::collect_acks(self)
+    }
+    fn unacked(&self) -> usize {
+        Endpoint::unacked(self)
+    }
+    fn pending_delayed(&mut self) -> usize {
+        Endpoint::pending_delayed(self)
+    }
+    fn global_inflight(&self) -> f64 {
+        Endpoint::global_inflight(self)
+    }
+    fn metrics(&self) -> Arc<MetricSet> {
+        Endpoint::metrics(self)
+    }
+}
+
+impl<T: Send + Clone + 'static> TransportHub<T> for BusHub<T> {
+    fn add_endpoint(&self, id: usize) -> Result<Box<dyn Transport<T>>> {
+        Ok(Box::new(BusHub::add_endpoint(self, id)?))
+    }
+    fn remove_endpoint(&self, id: usize) {
+        BusHub::remove_endpoint(self, id)
+    }
+    fn capacity(&self) -> usize {
+        BusHub::capacity(self)
+    }
+    fn is_live(&self, id: usize) -> bool {
+        BusHub::is_live(self, id)
+    }
+    fn monitor(&self) -> BusMonitor {
+        BusHub::monitor(self)
+    }
+    fn metrics(&self) -> Arc<MetricSet> {
+        BusHub::metrics(self)
+    }
+}
+
+/// Which [`Transport`] implementation carries the worker fabric.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// The in-process bus: mpsc channels between worker threads.
+    #[default]
+    Bus,
+    /// The TCP wire (loopback sockets when built through [`fabric`]).
+    Wire,
+}
+
+impl TransportKind {
+    /// Parse `"bus" | "wire" | "tcp"` (the CLI/config surface).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "bus" => Some(TransportKind::Bus),
+            "wire" | "tcp" => Some(TransportKind::Wire),
+            _ => None,
+        }
+    }
+
+    /// Stable lower-case name (inverse of [`TransportKind::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Bus => "bus",
+            TransportKind::Wire => "wire",
+        }
+    }
+
+    /// The default transport, overridable through the `DITER_TRANSPORT`
+    /// environment variable — the seam that lets the whole conservation
+    /// test-suite run unchanged over the wire (`DITER_TRANSPORT=wire`).
+    ///
+    /// # Panics
+    ///
+    /// On an unrecognised value: a CI job that *believes* it is testing
+    /// the wire must never silently fall back to the bus.
+    pub fn from_env() -> Self {
+        match std::env::var("DITER_TRANSPORT") {
+            Ok(v) => TransportKind::parse(v.trim()).unwrap_or_else(|| {
+                panic!("DITER_TRANSPORT={v:?} is not a transport (expected bus | wire)")
+            }),
+            Err(_) => TransportKind::Bus,
+        }
+    }
+}
+
+/// What [`fabric`] builds: the endpoints (boxed, worker-owned), the hub
+/// (for the elastic pool), and the shared [`MetricSet`].
+pub type Fabric<T> = (
+    Vec<Box<dyn Transport<T>>>,
+    Box<dyn TransportHub<T>>,
+    Arc<MetricSet>,
+);
+
+/// Build a `k`-endpoint worker fabric of the chosen [`TransportKind`],
+/// registering `extra` metric names beyond the transport's own.
+/// `T: WireCodec` even for the bus arm — the message type must be
+/// wire-encodable for the fabric to be substitutable.
+pub fn fabric<T: WireCodec + Send + Clone + 'static>(
+    kind: TransportKind,
+    k: usize,
+    cfg: &BusConfig,
+    extra: &[&'static str],
+) -> Result<Fabric<T>> {
+    match kind {
+        TransportKind::Bus => {
+            let (eps, hub, metrics) = bus_elastic::<T>(k, cfg, extra);
+            let eps = eps
+                .into_iter()
+                .map(|e| Box::new(e) as Box<dyn Transport<T>>)
+                .collect();
+            Ok((eps, Box::new(hub), metrics))
+        }
+        TransportKind::Wire => {
+            let hub = WireHub::<T>::loopback(cfg, extra);
+            let metrics = WireHub::metrics(&hub);
+            let eps = (0..k)
+                .map(|id| {
+                    WireHub::add_endpoint(&hub, id)
+                        .map(|e| Box::new(e) as Box<dyn Transport<T>>)
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok((eps, Box::new(hub), metrics))
+        }
     }
 }
 

@@ -1,0 +1,1214 @@
+//! TCP wire transport: the multi-process implementation of [`Transport`].
+//!
+//! Frame-level protocol is specified normatively in DESIGN.md §8; this
+//! module is one conforming implementation. In one sentence: every
+//! connection carries length-prefixed frames; a `MSG` frame books its
+//! fluid mass on the sender's in-flight account before the first byte is
+//! written and keeps the parcel retained until the receiver's `ACK`
+//! ("as TCP", §3.3 of the paper), so conservation accounting errs high,
+//! never low, across process boundaries.
+//!
+//! Two deployment shapes share this code:
+//!
+//! * **loopback harness** ([`WireHub::loopback`]): all endpoints live in
+//!   one process and share one accounting block, so the convergence
+//!   monitor sees *exactly* the in-process bus semantics while every
+//!   parcel genuinely rides a TCP socket — this is how the scenario
+//!   matrix and the conservation fuzzer run unchanged over the wire
+//!   (`DITER_TRANSPORT=wire`);
+//! * **process-per-worker** ([`WireHub::remote`]): each process holds one
+//!   endpoint plus a directory of peer socket addresses learned from the
+//!   coordinator (`diter stream --listen/--connect`, see
+//!   `coordinator::remote`). Accounting is then sender-side: mass is
+//!   released when the `ACK` arrives, not when the remote receiver
+//!   commits, which still errs high and still reaches zero at
+//!   quiescence.
+//!
+//! The encoding helpers ([`write_varint`], [`zigzag`],
+//! [`write_deltas`], …) are exported because the message-type codecs
+//! (`coordinator::codec`) and the framing tests are built from them.
+
+use std::collections::BinaryHeap;
+use std::io::{ErrorKind, Read, Write};
+use std::marker::PhantomData;
+use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use super::{
+    BusConfig, BusMonitor, Envelope, Received, Ripening, Shared, Transport, TransportHub,
+    BUS_METRICS,
+};
+use crate::error::{DiterError, Result};
+use crate::metrics::MetricSet;
+use crate::prng::Xoshiro256pp;
+use crate::transport::AtomicF64;
+
+/// Wire protocol version carried by every `HELLO` (DESIGN.md §8.2).
+pub const PROTO_VERSION: u8 = 1;
+
+/// Hard upper bound on a frame body (corruption guard): a length prefix
+/// above this is treated as a corrupt stream, not an allocation request.
+pub const MAX_FRAME: usize = 256 << 20;
+
+// Frame kinds (first byte of every frame body) — DESIGN.md §8.2.
+const KIND_HELLO: u8 = 0x01;
+const KIND_MSG: u8 = 0x02;
+const KIND_ACK: u8 = 0x03;
+const KIND_BYE: u8 = 0x04;
+
+/// Construct the canonical corrupt-frame error.
+pub fn corrupt(what: &str) -> DiterError {
+    DiterError::Transport(format!("corrupt frame: {what}"))
+}
+
+// ---------------------------------------------------------------------------
+// Encoding primitives (DESIGN.md §8.1)
+// ---------------------------------------------------------------------------
+
+/// Append `v` as an LEB128 varint (7 data bits per byte, high bit = more).
+pub fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Read an LEB128 varint at `*pos`, advancing it. Rejects truncation and
+/// encodings that overflow 64 bits.
+pub fn read_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v: u64 = 0;
+    let mut shift: u32 = 0;
+    loop {
+        let Some(&byte) = buf.get(*pos) else {
+            return Err(corrupt("varint truncated"));
+        };
+        *pos += 1;
+        if shift > 63 || (shift == 63 && (byte & 0x7f) > 1) {
+            return Err(corrupt("varint overflows u64"));
+        }
+        v |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Zigzag-map a signed delta onto an unsigned varint-friendly value
+/// (small magnitudes of either sign become small numbers).
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// Append an `f64` in IEEE-754 little-endian (8 bytes, exact).
+pub fn write_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Read an `f64` at `*pos`, advancing it.
+pub fn read_f64(buf: &[u8], pos: &mut usize) -> Result<f64> {
+    let end = pos.checked_add(8).ok_or_else(|| corrupt("f64 offset"))?;
+    let Some(bytes) = buf.get(*pos..end) else {
+        return Err(corrupt("f64 truncated"));
+    };
+    *pos = end;
+    Ok(f64::from_le_bytes(bytes.try_into().expect("8-byte slice")))
+}
+
+/// Append `vals` back to back as little-endian `f64`s (the SoA mass
+/// column of a fluid parcel: one bulk copy, no per-entry framing).
+pub fn write_f64_slice(out: &mut Vec<u8>, vals: &[f64]) {
+    out.reserve(vals.len() * 8);
+    for &v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Read `count` little-endian `f64`s at `*pos`, advancing it. The count
+/// is validated against the remaining buffer *before* allocating.
+pub fn read_f64_slice(buf: &[u8], pos: &mut usize, count: usize) -> Result<Vec<f64>> {
+    if buf.len().saturating_sub(*pos) < count.saturating_mul(8) {
+        return Err(corrupt("f64 column truncated"));
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        out.push(read_f64(buf, pos)?);
+    }
+    Ok(out)
+}
+
+/// Append a coordinate column delta-encoded (DESIGN.md §8.1): the first
+/// value is written absolutely, each subsequent value as the zigzag
+/// difference from its predecessor — sorted SoA columns (fluid parcels,
+/// halo slices) collapse to ~1 byte per coordinate.
+pub fn write_deltas(out: &mut Vec<u8>, vals: impl IntoIterator<Item = u64>) {
+    let mut prev: i64 = 0;
+    for v in vals {
+        let v = v as i64;
+        write_varint(out, zigzag(v.wrapping_sub(prev)));
+        prev = v;
+    }
+}
+
+/// Read a `count`-entry delta-encoded coordinate column at `*pos`,
+/// advancing it. Rejects columns that decode to a negative coordinate
+/// and counts that cannot fit in the remaining buffer.
+pub fn read_deltas(buf: &[u8], pos: &mut usize, count: usize) -> Result<Vec<u64>> {
+    // every delta is at least one byte, so an honest count is bounded
+    // by the remaining bytes — reject before allocating
+    if count > buf.len().saturating_sub(*pos) {
+        return Err(corrupt("coordinate count exceeds frame"));
+    }
+    let mut out = Vec::with_capacity(count);
+    let mut prev: i64 = 0;
+    for _ in 0..count {
+        let v = prev
+            .checked_add(unzigzag(read_varint(buf, pos)?))
+            .ok_or_else(|| corrupt("coordinate delta overflow"))?;
+        if v < 0 {
+            return Err(corrupt("negative coordinate"));
+        }
+        out.push(v as u64);
+        prev = v;
+    }
+    Ok(out)
+}
+
+/// A message type that can ride the wire. Implemented by the
+/// coordinator's `WorkerMsg` (see `coordinator::codec`) and by the
+/// control-plane messages of remote mode.
+///
+/// `decode` must be the exact inverse of `encode` and must consume the
+/// whole buffer — trailing bytes are a framing error, which is what the
+/// corrupt-frame tests pin down.
+pub trait WireCodec: Sized {
+    /// Append this message's payload encoding to `out`.
+    fn encode(&self, out: &mut Vec<u8>);
+    /// Decode a payload produced by [`WireCodec::encode`].
+    fn decode(buf: &[u8]) -> Result<Self>;
+}
+
+// ---------------------------------------------------------------------------
+// Blocking control-plane framing (used by coordinator::remote)
+// ---------------------------------------------------------------------------
+
+/// Write one `[u32 length][payload]` frame of `msg` to a blocking stream
+/// and flush it — the control-plane counterpart of the non-blocking data
+/// path (remote mode's JOIN/ASSIGN/REPORT traffic).
+pub fn write_ctrl_frame<T: WireCodec>(stream: &mut TcpStream, msg: &T) -> Result<()> {
+    let mut body = Vec::new();
+    msg.encode(&mut body);
+    let mut frame = Vec::with_capacity(body.len() + 4);
+    frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&body);
+    stream.write_all(&frame)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one `[u32 length][payload]` frame of `T` from a blocking stream.
+pub fn read_ctrl_frame<T: WireCodec>(stream: &mut TcpStream) -> Result<T> {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(corrupt("control frame length"));
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    T::decode(&body)
+}
+
+// ---------------------------------------------------------------------------
+// The hub: directory of peer addresses + shared accounting
+// ---------------------------------------------------------------------------
+
+/// Address directory: slot `k` holds PID k's listening address, `None`
+/// for a retired (or never-spawned) endpoint. The wire analogue of the
+/// bus's channel directory, with the same locking discipline: sends
+/// resolve (and write) under a read lock, removal takes the write lock,
+/// so removal strictly orders with in-progress sends.
+struct WireDirectory {
+    addrs: Vec<Option<SocketAddr>>,
+}
+
+/// A shared handle onto the wire fabric that can register and deregister
+/// endpoints while workers are running — the TCP implementation of
+/// [`TransportHub`]. Cloneable; all clones see the same directory.
+pub struct WireHub<T> {
+    dir: Arc<RwLock<WireDirectory>>,
+    shared: Arc<Shared>,
+    latency: Option<(Duration, Duration)>,
+    seed: u64,
+    bind_ip: IpAddr,
+    /// true in the loopback harness: all endpoints share this process's
+    /// accounting block, so a receiver commit settles the account
+    /// directly (exact bus semantics). false per-process: commits only
+    /// emit the ACK and the *sender* releases on ACK receipt.
+    local_commit: bool,
+    _msg: PhantomData<fn() -> T>,
+}
+
+impl<T> Clone for WireHub<T> {
+    fn clone(&self) -> Self {
+        WireHub {
+            dir: self.dir.clone(),
+            shared: self.shared.clone(),
+            latency: self.latency,
+            seed: self.seed,
+            bind_ip: self.bind_ip,
+            local_commit: self.local_commit,
+            _msg: PhantomData,
+        }
+    }
+}
+
+fn new_shared(extra: &[&'static str]) -> Arc<Shared> {
+    let names: Vec<&'static str> = BUS_METRICS.iter().chain(extra).copied().collect();
+    Arc::new(Shared {
+        inflight: AtomicF64::new(0.0),
+        retained: AtomicU64::new(0),
+        undelivered: AtomicU64::new(0),
+        metrics: Arc::new(MetricSet::new(&names)),
+    })
+}
+
+impl<T: WireCodec + Send + 'static> WireHub<T> {
+    /// An empty single-process hub on `127.0.0.1`: every
+    /// [`WireHub::add_endpoint`] binds a fresh loopback listener, and
+    /// commits settle the shared account exactly like the in-process
+    /// bus. This is the harness behind `DITER_TRANSPORT=wire`.
+    pub fn loopback(cfg: &BusConfig, extra: &[&'static str]) -> WireHub<T> {
+        WireHub {
+            dir: Arc::new(RwLock::new(WireDirectory { addrs: Vec::new() })),
+            shared: new_shared(extra),
+            latency: cfg.latency,
+            seed: cfg.seed,
+            bind_ip: IpAddr::V4(Ipv4Addr::LOCALHOST),
+            local_commit: true,
+            _msg: PhantomData,
+        }
+    }
+
+    /// A process-per-worker hub: `width` directory slots (filled in by
+    /// [`WireHub::set_peer_addr`] as the coordinator's PEERS table
+    /// arrives), local endpoints bound on `bind_ip`, and sender-side
+    /// accounting (in-flight mass is released on ACK receipt).
+    pub fn remote(width: usize, bind_ip: IpAddr, cfg: &BusConfig, extra: &[&'static str]) -> WireHub<T> {
+        WireHub {
+            dir: Arc::new(RwLock::new(WireDirectory {
+                addrs: vec![None; width],
+            })),
+            shared: new_shared(extra),
+            latency: cfg.latency,
+            seed: cfg.seed,
+            bind_ip,
+            local_commit: false,
+            _msg: PhantomData,
+        }
+    }
+
+    /// Register a new endpoint at slot `id`, binding a listener on an
+    /// OS-assigned port. Slot rules match the bus exactly: a vacant
+    /// (retired) slot or exactly one past the current end; occupied
+    /// slots and gaps are errors.
+    pub fn add_endpoint(&self, id: usize) -> Result<WireEndpoint<T>> {
+        let listener = TcpListener::bind((self.bind_ip, 0))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        {
+            let mut d = self.dir.write().unwrap_or_else(|e| e.into_inner());
+            if id > d.addrs.len() {
+                return Err(DiterError::Transport(format!(
+                    "endpoint {id} would leave a gap (directory holds {})",
+                    d.addrs.len()
+                )));
+            }
+            if id < d.addrs.len() && d.addrs[id].is_some() {
+                return Err(DiterError::Transport(format!("endpoint {id} already live")));
+            }
+            if id == d.addrs.len() {
+                d.addrs.push(Some(addr));
+            } else {
+                d.addrs[id] = Some(addr);
+            }
+        }
+        Ok(WireEndpoint {
+            id,
+            listener,
+            local_addr: addr,
+            dir: self.dir.clone(),
+            shared: self.shared.clone(),
+            conns: Vec::new(),
+            inbox: BinaryHeap::new(),
+            retained: Vec::new(),
+            next_seq: 0,
+            latency: self.latency,
+            rng: Xoshiro256pp::seed_from_u64(self.seed ^ (id as u64).wrapping_mul(0x9E3779B9)),
+            local_commit: self.local_commit,
+        })
+    }
+
+    /// Install a *remote* peer's listening address in slot `id` (growing
+    /// the directory if needed) — remote mode's PEERS table. Sends to
+    /// `id` dial this address.
+    pub fn set_peer_addr(&self, id: usize, addr: SocketAddr) {
+        let mut d = self.dir.write().unwrap_or_else(|e| e.into_inner());
+        if id >= d.addrs.len() {
+            d.addrs.resize(id + 1, None);
+        }
+        d.addrs[id] = Some(addr);
+    }
+
+    /// Deregister slot `id`: subsequent sends to it fail fast at the
+    /// sender, which re-routes the fluid. Because each send resolves the
+    /// slot (and writes its frame) under the directory read lock, every
+    /// frame accepted before this write-locked removal returns is
+    /// already in the retiree's socket buffer, where its final drain
+    /// will find it.
+    pub fn remove_endpoint(&self, id: usize) {
+        let mut d = self.dir.write().unwrap_or_else(|e| e.into_inner());
+        if id < d.addrs.len() {
+            d.addrs[id] = None;
+        }
+    }
+
+    /// Directory width (live + vacant slots).
+    pub fn capacity(&self) -> usize {
+        self.dir.read().unwrap_or_else(|e| e.into_inner()).addrs.len()
+    }
+
+    /// Whether slot `id` currently has a live (addressable) endpoint.
+    pub fn is_live(&self, id: usize) -> bool {
+        let d = self.dir.read().unwrap_or_else(|e| e.into_inner());
+        d.addrs.get(id).is_some_and(Option::is_some)
+    }
+
+    /// A monitor handle onto this process's conservation accounting.
+    pub fn monitor(&self) -> BusMonitor {
+        BusMonitor {
+            shared: self.shared.clone(),
+        }
+    }
+
+    /// The fabric-wide metric set.
+    pub fn metrics(&self) -> Arc<MetricSet> {
+        self.shared.metrics.clone()
+    }
+}
+
+impl<T: WireCodec + Send + Clone + 'static> TransportHub<T> for WireHub<T> {
+    fn add_endpoint(&self, id: usize) -> Result<Box<dyn Transport<T>>> {
+        Ok(Box::new(WireHub::add_endpoint(self, id)?))
+    }
+    fn remove_endpoint(&self, id: usize) {
+        WireHub::remove_endpoint(self, id)
+    }
+    fn capacity(&self) -> usize {
+        WireHub::capacity(self)
+    }
+    fn is_live(&self, id: usize) -> bool {
+        WireHub::is_live(self, id)
+    }
+    fn monitor(&self) -> BusMonitor {
+        WireHub::monitor(self)
+    }
+    fn metrics(&self) -> Arc<MetricSet> {
+        WireHub::metrics(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The endpoint
+// ---------------------------------------------------------------------------
+
+/// One live connection (inbound-accepted or outbound-dialed; the
+/// protocol is full duplex, so either kind carries traffic both ways).
+struct Conn {
+    stream: TcpStream,
+    /// peer PID: set at dial time (outbound) or by the peer's HELLO
+    /// (inbound); frames on an unidentified connection are a protocol
+    /// error except HELLO itself
+    peer: Option<usize>,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    alive: bool,
+}
+
+/// One PID's wire endpoint: a nonblocking listener plus its connection
+/// set, owned by exactly one worker (thread or process). The TCP
+/// implementation of [`Transport`].
+pub struct WireEndpoint<T: WireCodec> {
+    id: usize,
+    listener: TcpListener,
+    local_addr: SocketAddr,
+    dir: Arc<RwLock<WireDirectory>>,
+    shared: Arc<Shared>,
+    conns: Vec<Conn>,
+    /// decoded MSG frames ripening through latency injection (applied on
+    /// the receive side here; protocol-equivalent to the bus's
+    /// sender-side stamping)
+    inbox: BinaryHeap<Ripening<T>>,
+    /// parcels retained until acked (seq → mass); "as TCP"
+    retained: Vec<(u64, f64)>,
+    next_seq: u64,
+    latency: Option<(Duration, Duration)>,
+    rng: Xoshiro256pp,
+    local_commit: bool,
+}
+
+impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
+    /// The address this endpoint's listener is bound to (advertised to
+    /// peers through the directory, or remote mode's JOINED message).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// This endpoint's PID.
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Directory width (live + vacant slots).
+    pub fn peers(&self) -> usize {
+        self.dir.read().unwrap_or_else(|e| e.into_inner()).addrs.len()
+    }
+
+    fn sample_delay(&mut self) -> Duration {
+        match self.latency {
+            None => Duration::ZERO,
+            Some((lo, hi)) => {
+                let span = hi.saturating_sub(lo);
+                lo + Duration::from_nanos((self.rng.next_f64() * span.as_nanos() as f64) as u64)
+            }
+        }
+    }
+
+    /// Accept pending connections, flush pending writes, read and parse
+    /// everything readable, and dispatch complete frames. Every
+    /// non-blocking entry point starts with a pump, so progress needs no
+    /// background thread.
+    fn pump(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nonblocking(true);
+                    let _ = stream.set_nodelay(true);
+                    self.conns.push(Conn {
+                        stream,
+                        peer: None,
+                        rbuf: Vec::new(),
+                        wbuf: Vec::new(),
+                        alive: true,
+                    });
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+        let mut scratch = [0u8; 16 * 1024];
+        for ci in 0..self.conns.len() {
+            let c = &mut self.conns[ci];
+            if !c.alive {
+                continue;
+            }
+            let _ = Self::flush_wbuf(c);
+            loop {
+                match c.stream.read(&mut scratch) {
+                    Ok(0) => {
+                        // EOF: no more bytes will come, but frames already
+                        // in rbuf still get parsed below
+                        c.alive = false;
+                        break;
+                    }
+                    Ok(n) => c.rbuf.extend_from_slice(&scratch[..n]),
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        c.alive = false;
+                        break;
+                    }
+                }
+            }
+        }
+        for ci in 0..self.conns.len() {
+            loop {
+                let frame = {
+                    let c = &mut self.conns[ci];
+                    if c.rbuf.len() < 4 {
+                        break;
+                    }
+                    let len =
+                        u32::from_le_bytes(c.rbuf[..4].try_into().expect("4-byte slice")) as usize;
+                    if len == 0 || len > MAX_FRAME {
+                        c.alive = false; // corrupt stream: stop parsing it
+                        break;
+                    }
+                    if c.rbuf.len() < 4 + len {
+                        break;
+                    }
+                    let frame: Vec<u8> = c.rbuf[4..4 + len].to_vec();
+                    c.rbuf.drain(..4 + len);
+                    frame
+                };
+                self.dispatch(ci, &frame);
+            }
+        }
+        // complete frames were already dispatched above, so a dead
+        // connection has nothing left to contribute
+        self.conns.retain(|c| c.alive);
+    }
+
+    /// Handle one complete frame received on connection `ci`.
+    fn dispatch(&mut self, ci: usize, frame: &[u8]) {
+        let kill = |conns: &mut Vec<Conn>, ci: usize| conns[ci].alive = false;
+        let Some(&kind) = frame.first() else {
+            return kill(&mut self.conns, ci);
+        };
+        let body = &frame[1..];
+        match kind {
+            KIND_HELLO => {
+                let mut pos = 0;
+                let Ok(pid) = read_varint(body, &mut pos) else {
+                    return kill(&mut self.conns, ci);
+                };
+                if body.get(pos).copied() != Some(PROTO_VERSION) {
+                    return kill(&mut self.conns, ci);
+                }
+                self.conns[ci].peer = Some(pid as usize);
+            }
+            KIND_MSG => {
+                // sender attribution comes from the connection's HELLO
+                let Some(from) = self.conns[ci].peer else {
+                    return kill(&mut self.conns, ci);
+                };
+                let mut pos = 0;
+                let decoded = read_varint(body, &mut pos).and_then(|seq| {
+                    let mass = read_f64(body, &mut pos)?;
+                    let payload = T::decode(&body[pos..])?;
+                    Ok((seq, mass, payload))
+                });
+                let Ok((seq, mass, payload)) = decoded else {
+                    return kill(&mut self.conns, ci);
+                };
+                let ready_at = Instant::now() + self.sample_delay();
+                self.inbox.push(Ripening(Envelope {
+                    from,
+                    seq,
+                    mass,
+                    ready_at,
+                    payload,
+                }));
+            }
+            KIND_ACK => {
+                let mut pos = 0;
+                let Ok(seq) = read_varint(body, &mut pos) else {
+                    return kill(&mut self.conns, ci);
+                };
+                if let Some(p) = self.retained.iter().position(|&(s, _)| s == seq) {
+                    let (_, mass) = self.retained.swap_remove(p);
+                    self.shared.retained.fetch_sub(1, Ordering::Relaxed);
+                    if !self.local_commit {
+                        // sender-side release: the remote receiver has
+                        // applied the parcel, its mass leaves this
+                        // process's in-flight account now
+                        self.shared.inflight.add(-mass);
+                        self.shared.undelivered.fetch_sub(1, Ordering::AcqRel);
+                    }
+                }
+            }
+            KIND_BYE => kill(&mut self.conns, ci),
+            _ => kill(&mut self.conns, ci),
+        }
+    }
+
+    /// Flush as much of `wbuf` as the socket accepts right now.
+    fn flush_wbuf(c: &mut Conn) -> std::io::Result<()> {
+        while !c.wbuf.is_empty() {
+            match c.stream.write(&c.wbuf) {
+                Ok(0) => {
+                    c.alive = false;
+                    return Err(std::io::Error::new(ErrorKind::WriteZero, "peer closed"));
+                }
+                Ok(n) => {
+                    c.wbuf.drain(..n);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()), // resumed by a later pump
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    c.alive = false;
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Queue `[len][body]` on connection `ci` and try to flush.
+    fn write_frame(&mut self, ci: usize, body: &[u8]) -> std::io::Result<()> {
+        let c = &mut self.conns[ci];
+        if !c.alive {
+            return Err(std::io::Error::new(ErrorKind::NotConnected, "dead connection"));
+        }
+        c.wbuf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        c.wbuf.extend_from_slice(body);
+        Self::flush_wbuf(c)
+    }
+
+    /// A live connection to PID `to`, dialing `addr` if none exists.
+    /// Outbound connections introduce themselves with HELLO first, so
+    /// the peer can attribute every later frame.
+    fn conn_to(&mut self, to: usize, addr: SocketAddr) -> Option<usize> {
+        if let Some(ci) = self.conns.iter().position(|c| c.alive && c.peer == Some(to)) {
+            return Some(ci);
+        }
+        let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5)).ok()?;
+        let _ = stream.set_nodelay(true);
+        stream.set_nonblocking(true).ok()?;
+        let ci = self.conns.len();
+        self.conns.push(Conn {
+            stream,
+            peer: Some(to),
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            alive: true,
+        });
+        let mut hello = Vec::with_capacity(11);
+        hello.push(KIND_HELLO);
+        write_varint(&mut hello, self.id as u64);
+        hello.push(PROTO_VERSION);
+        if self.write_frame(ci, &hello).is_err() {
+            return None;
+        }
+        Some(ci)
+    }
+
+    /// See [`Transport::try_send`]. The destination address is resolved
+    /// — and the frame queued — under the directory read lock on *every*
+    /// send, so [`WireHub::remove_endpoint`] (a write) strictly orders
+    /// with in-progress sends exactly like the bus: after removal
+    /// returns, every accepted frame is already in the retiree's socket
+    /// buffer and every later send fails fast and re-routes. A cached
+    /// connection is deliberately *not* trusted across that boundary.
+    pub fn try_send(
+        &mut self,
+        to: usize,
+        payload: T,
+        mass: f64,
+        approx_bytes: usize,
+    ) -> std::result::Result<(), T> {
+        self.pump();
+        let dir = self.dir.clone();
+        let d = dir.read().unwrap_or_else(|e| e.into_inner());
+        let Some(addr) = d.addrs.get(to).and_then(|a| *a) else {
+            return Err(payload);
+        };
+        let Some(ci) = self.conn_to(to, addr) else {
+            return Err(payload);
+        };
+        let seq = self.next_seq;
+        let mut body = Vec::with_capacity(approx_bytes + 16);
+        body.push(KIND_MSG);
+        write_varint(&mut body, seq);
+        write_f64(&mut body, mass);
+        payload.encode(&mut body);
+        // in-flight accounting BEFORE the write so the monitor can never
+        // observe fluid vanishing; `undelivered` first (see the bus) so
+        // the float accumulator is authoritative only while it is >0
+        self.shared.undelivered.fetch_add(1, Ordering::AcqRel);
+        let now_inflight = self.shared.inflight.add(mass);
+        self.shared
+            .metrics
+            .max("inflight_peak_ppm", (now_inflight * 1e6) as u64);
+        if self.write_frame(ci, &body).is_err() {
+            // connection died before the frame was fully written: undo —
+            // the fluid never left the caller, who re-routes it
+            self.shared.inflight.add(-mass);
+            self.shared.undelivered.fetch_sub(1, Ordering::AcqRel);
+            return Err(payload);
+        }
+        drop(d);
+        self.next_seq += 1;
+        self.retained.push((seq, mass));
+        self.shared.retained.fetch_add(1, Ordering::Relaxed);
+        self.shared.metrics.incr("msgs_sent");
+        self.shared.metrics.add("bytes_sent", (body.len() + 4) as u64);
+        Ok(())
+    }
+
+    /// See [`Transport::try_recv_uncommitted`].
+    pub fn try_recv_uncommitted(&mut self) -> Option<Received<T>> {
+        self.pump();
+        let now = Instant::now();
+        if let Some(top) = self.inbox.peek() {
+            if top.0.ready_at <= now {
+                let env = self.inbox.pop().expect("peeked").0;
+                self.shared.metrics.incr("msgs_recv");
+                return Some(Received {
+                    from: env.from,
+                    seq: env.seq,
+                    mass: env.mass,
+                    payload: env.payload,
+                });
+            }
+        }
+        None
+    }
+
+    /// See [`Transport::commit`]. In the loopback harness this settles
+    /// the shared account directly (exact bus semantics) and the ACK
+    /// only releases the sender's retention; per-process, the ACK *is*
+    /// the release — the sender's accounting drops when it arrives.
+    pub fn commit(&mut self, from: usize, seq: u64, mass: f64) {
+        if self.local_commit {
+            self.shared.inflight.add(-mass);
+            self.shared.undelivered.fetch_sub(1, Ordering::AcqRel);
+        }
+        let mut ack = Vec::with_capacity(11);
+        ack.push(KIND_ACK);
+        write_varint(&mut ack, seq);
+        if let Some(ci) = self.conns.iter().position(|c| c.alive && c.peer == Some(from)) {
+            let _ = self.write_frame(ci, &ack);
+        } else {
+            // no live connection back: dial, unless the sender retired —
+            // then the ack is dropped, its retention list died with it
+            let addr = {
+                let dir = self.dir.clone();
+                let d = dir.read().unwrap_or_else(|e| e.into_inner());
+                d.addrs.get(from).and_then(|a| *a)
+            };
+            if let Some(addr) = addr {
+                if let Some(ci) = self.conn_to(from, addr) {
+                    let _ = self.write_frame(ci, &ack);
+                }
+            }
+        }
+        self.shared.metrics.incr("acks");
+    }
+
+    /// See [`Transport::collect_acks`] (on the wire, acks arrive through
+    /// the same pump as everything else).
+    pub fn collect_acks(&mut self) {
+        self.pump();
+    }
+
+    /// See [`Transport::unacked`].
+    pub fn unacked(&self) -> usize {
+        self.retained.len()
+    }
+
+    /// See [`Transport::pending_delayed`]: everything readable is pumped
+    /// into the inbox first, so a zero return means no received frame is
+    /// waiting out its latency at this instant.
+    pub fn pending_delayed(&mut self) -> usize {
+        self.pump();
+        self.inbox.len()
+    }
+
+    /// See [`Transport::global_inflight`] (this process's account).
+    pub fn global_inflight(&self) -> f64 {
+        self.shared.inflight.get()
+    }
+
+    /// The fabric-wide metric set (shared by all endpoints of this hub).
+    pub fn metrics(&self) -> Arc<MetricSet> {
+        self.shared.metrics.clone()
+    }
+}
+
+impl<T: WireCodec> Drop for WireEndpoint<T> {
+    /// Best-effort goodbye: flush buffered frames (a peer may be waiting
+    /// on a buffered ACK) and send BYE so peers close promptly instead
+    /// of discovering the EOF later.
+    ///
+    /// Deliberately does NOT release unapplied inbox mass in per-process
+    /// mode and does not touch the loopback account for frames a peer
+    /// may still commit — inventing a release here would let the monitor
+    /// observe mass destruction. The retirement protocol (drain, then
+    /// re-route) is what removes mass correctly; in the loopback harness
+    /// the inbox is drained by `WorkerCore::finish` before the endpoint
+    /// drops, and undrained mass after an abnormal exit keeps the
+    /// monitor (correctly) above zero.
+    fn drop(&mut self) {
+        let bye = [1u8, 0, 0, 0, KIND_BYE];
+        for c in self.conns.iter_mut() {
+            if c.alive {
+                let _ = Self::flush_wbuf(c);
+                let _ = c.stream.write_all(&bye);
+            }
+        }
+        // retention bookkeeping only (a count, not mass): these parcels
+        // were delivered or lost with the sockets; nobody will ack them
+        if !self.retained.is_empty() {
+            self.shared
+                .retained
+                .fetch_sub(self.retained.len() as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+impl<T: WireCodec + Send + Clone + 'static> Transport<T> for WireEndpoint<T> {
+    fn id(&self) -> usize {
+        WireEndpoint::id(self)
+    }
+    fn peers(&self) -> usize {
+        WireEndpoint::peers(self)
+    }
+    fn try_send(
+        &mut self,
+        to: usize,
+        payload: T,
+        mass: f64,
+        approx_bytes: usize,
+    ) -> std::result::Result<(), T> {
+        WireEndpoint::try_send(self, to, payload, mass, approx_bytes)
+    }
+    fn try_recv_uncommitted(&mut self) -> Option<Received<T>> {
+        WireEndpoint::try_recv_uncommitted(self)
+    }
+    fn commit(&mut self, from: usize, seq: u64, mass: f64) {
+        WireEndpoint::commit(self, from, seq, mass)
+    }
+    fn collect_acks(&mut self) {
+        WireEndpoint::collect_acks(self)
+    }
+    fn unacked(&self) -> usize {
+        WireEndpoint::unacked(self)
+    }
+    fn pending_delayed(&mut self) -> usize {
+        WireEndpoint::pending_delayed(self)
+    }
+    fn global_inflight(&self) -> f64 {
+        WireEndpoint::global_inflight(self)
+    }
+    fn metrics(&self) -> Arc<MetricSet> {
+        WireEndpoint::metrics(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal test payload: a tag byte plus a varint, exercising the
+    /// strict no-trailing-bytes rule.
+    #[derive(Clone, Debug, PartialEq)]
+    struct Probe(u64);
+
+    impl WireCodec for Probe {
+        fn encode(&self, out: &mut Vec<u8>) {
+            out.push(0x7E);
+            write_varint(out, self.0);
+        }
+        fn decode(buf: &[u8]) -> Result<Self> {
+            if buf.first() != Some(&0x7E) {
+                return Err(corrupt("probe tag"));
+            }
+            let mut pos = 1;
+            let v = read_varint(buf, &mut pos)?;
+            if pos != buf.len() {
+                return Err(corrupt("probe trailing bytes"));
+            }
+            Ok(Probe(v))
+        }
+    }
+
+    fn pair() -> (WireEndpoint<Probe>, WireEndpoint<Probe>, WireHub<Probe>) {
+        let hub = WireHub::<Probe>::loopback(&BusConfig::default(), &[]);
+        let a = hub.add_endpoint(0).unwrap();
+        let b = hub.add_endpoint(1).unwrap();
+        (a, b, hub)
+    }
+
+    /// Drive `recv` until a message ripens or the deadline passes (TCP
+    /// delivery needs a pump or two even on loopback).
+    fn recv_within(ep: &mut WireEndpoint<Probe>, ms: u64) -> Option<Received<Probe>> {
+        let deadline = Instant::now() + Duration::from_millis(ms);
+        while Instant::now() < deadline {
+            if let Some(r) = ep.try_recv_uncommitted() {
+                return Some(r);
+            }
+            std::thread::yield_now();
+        }
+        None
+    }
+
+    #[test]
+    fn varint_round_trip_and_overflow() {
+        for v in [0u64, 1, 127, 128, 16_383, 16_384, u64::MAX] {
+            let mut buf = Vec::new();
+            write_varint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(read_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+        // 11 continuation bytes can never be a u64
+        let over = [0xFFu8; 11];
+        let mut pos = 0;
+        assert!(read_varint(&over, &mut pos).is_err());
+        let mut pos = 0;
+        assert!(read_varint(&[0x80], &mut pos).is_err(), "truncated");
+    }
+
+    #[test]
+    fn zigzag_round_trip() {
+        for v in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        assert_eq!(zigzag(-1), 1, "small magnitudes stay small");
+        assert_eq!(zigzag(1), 2);
+    }
+
+    #[test]
+    fn delta_coords_round_trip_and_rejection() {
+        let coords: Vec<u64> = vec![3, 4, 7, 100, 101, 9000];
+        let mut buf = Vec::new();
+        write_deltas(&mut buf, coords.iter().copied());
+        assert!(buf.len() <= 9, "sorted columns compress to ~1 byte/coord");
+        let mut pos = 0;
+        assert_eq!(read_deltas(&buf, &mut pos, coords.len()).unwrap(), coords);
+        // a count larger than the remaining bytes is rejected pre-alloc
+        let mut pos = 0;
+        assert!(read_deltas(&buf, &mut pos, usize::MAX).is_err());
+        // a column decoding below zero is rejected
+        let mut neg = Vec::new();
+        write_deltas(&mut neg, [5u64].into_iter());
+        write_varint(&mut neg, zigzag(-9)); // 5 - 9 < 0
+        let mut pos = 0;
+        assert!(read_deltas(&neg, &mut pos, 2).is_err());
+    }
+
+    #[test]
+    fn f64_slice_round_trip_and_truncation() {
+        let vals = [0.0, -1.5, f64::MIN_POSITIVE, 1e300];
+        let mut buf = Vec::new();
+        write_f64_slice(&mut buf, &vals);
+        let mut pos = 0;
+        assert_eq!(read_f64_slice(&buf, &mut pos, 4).unwrap(), vals);
+        let mut pos = 0;
+        assert!(read_f64_slice(&buf, &mut pos, 5).is_err(), "truncated");
+    }
+
+    #[test]
+    fn point_to_point_over_tcp() {
+        let (mut a, mut b, _hub) = pair();
+        let t: &mut dyn Transport<Probe> = &mut a;
+        t.send(1, Probe(7), 0.5, 3).unwrap();
+        let got = recv_within(&mut b, 2000).expect("delivered");
+        assert_eq!(got.payload, Probe(7));
+        assert_eq!(got.from, 0);
+        assert!((b.global_inflight() - 0.5).abs() < 1e-15, "uncommitted");
+        b.commit(got.from, got.seq, got.mass);
+        assert_eq!(b.global_inflight(), 0.0);
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while a.unacked() > 0 && Instant::now() < deadline {
+            a.collect_acks();
+        }
+        assert_eq!(a.unacked(), 0, "ack released retention");
+        assert_eq!(a.metrics().get("msgs_sent"), 1);
+        assert_eq!(a.metrics().get("msgs_recv"), 1);
+        assert_eq!(a.metrics().get("acks"), 1);
+    }
+
+    #[test]
+    fn removed_endpoint_fails_fast_and_returns_payload() {
+        let (mut a, mut b, hub) = pair();
+        // warm a connection so the per-send directory check, not the
+        // dial, is what must refuse after removal
+        a.try_send(1, Probe(1), 0.25, 1).unwrap();
+        let got = recv_within(&mut b, 2000).unwrap();
+        b.commit(got.from, got.seq, got.mass);
+        hub.remove_endpoint(1);
+        assert!(!hub.is_live(1));
+        assert_eq!(a.try_send(1, Probe(42), 1.5, 1), Err(Probe(42)));
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while (a.unacked() > 0 || a.global_inflight() != 0.0) && Instant::now() < deadline {
+            a.collect_acks();
+        }
+        assert_eq!(a.global_inflight(), 0.0);
+        assert_eq!(a.unacked(), 0);
+        assert_eq!(hub.monitor().undelivered(), 0);
+    }
+
+    #[test]
+    fn latency_delays_tcp_delivery() {
+        let cfg = BusConfig {
+            latency: Some((Duration::from_millis(30), Duration::from_millis(40))),
+            seed: 1,
+        };
+        let hub = WireHub::<Probe>::loopback(&cfg, &[]);
+        let mut a = hub.add_endpoint(0).unwrap();
+        let mut b = hub.add_endpoint(1).unwrap();
+        a.try_send(1, Probe(9), 0.0, 1).unwrap();
+        // let the frame arrive, then confirm it ripens late
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while b.pending_delayed() == 0 && Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(b.pending_delayed(), 1, "arrived but not ripe");
+        assert!(b.try_recv_uncommitted().is_none(), "not before its delay");
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(b.try_recv_uncommitted().is_some());
+        assert_eq!(b.pending_delayed(), 0);
+    }
+
+    #[test]
+    fn corrupt_length_prefix_kills_connection_not_process() {
+        let (_a, mut b, _hub) = pair();
+        // dial b's listener raw and write a poisoned length prefix
+        let mut s = TcpStream::connect(b.local_addr()).unwrap();
+        s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        s.write_all(&[0xAA; 64]).unwrap();
+        s.flush().unwrap();
+        // the poisoned connection must die without delivering anything:
+        // pump until the accepted connection has been culled again
+        let t0 = Instant::now();
+        while Instant::now() < t0 + Duration::from_millis(300) {
+            assert!(b.try_recv_uncommitted().is_none());
+            std::thread::yield_now();
+        }
+        assert!(
+            b.conns.is_empty(),
+            "the corrupt connection must be culled"
+        );
+    }
+
+    #[test]
+    fn corrupt_payload_kills_connection() {
+        let (_a, mut b, _hub) = pair();
+        let mut s = TcpStream::connect(b.local_addr()).unwrap();
+        // a well-formed HELLO for pid 5 ...
+        let mut hello = vec![KIND_HELLO];
+        write_varint(&mut hello, 5);
+        hello.push(PROTO_VERSION);
+        let mut frame = (hello.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&hello);
+        // ... then a MSG whose payload fails to decode
+        let mut msg = vec![KIND_MSG];
+        write_varint(&mut msg, 0);
+        write_f64(&mut msg, 0.0);
+        msg.extend_from_slice(&[0xFF, 0xFF, 0xFF]); // not a Probe
+        frame.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&msg);
+        s.write_all(&frame).unwrap();
+        s.flush().unwrap();
+        let t0 = Instant::now();
+        while Instant::now() < t0 + Duration::from_millis(300) {
+            assert!(
+                b.try_recv_uncommitted().is_none(),
+                "a corrupt payload must never surface"
+            );
+            std::thread::yield_now();
+        }
+        assert!(
+            !b.conns.iter().any(|c| c.peer == Some(5) && c.alive),
+            "the connection carrying the corrupt payload must be dead"
+        );
+    }
+
+    #[test]
+    fn hub_slot_rules_match_the_bus() {
+        let hub = WireHub::<Probe>::loopback(&BusConfig::default(), &[]);
+        let _a = hub.add_endpoint(0).unwrap();
+        let _b = hub.add_endpoint(1).unwrap();
+        assert_eq!(hub.capacity(), 2);
+        assert!(hub.add_endpoint(5).is_err(), "gaps rejected");
+        assert!(hub.add_endpoint(1).is_err(), "occupied rejected");
+        hub.remove_endpoint(1);
+        assert!(!hub.is_live(1));
+        let c = hub.add_endpoint(1).unwrap();
+        assert_eq!(c.id(), 1);
+        assert_eq!(hub.capacity(), 2, "slot reused, not appended");
+    }
+
+    #[test]
+    fn remote_mode_releases_on_ack_receipt() {
+        // two hubs = two accounting domains, as in process-per-worker
+        let cfg = BusConfig::default();
+        let bind = IpAddr::V4(Ipv4Addr::LOCALHOST);
+        let hub_a = WireHub::<Probe>::remote(2, bind, &cfg, &[]);
+        let hub_b = WireHub::<Probe>::remote(2, bind, &cfg, &[]);
+        let mut a = hub_a.add_endpoint(0).unwrap();
+        let mut b = hub_b.add_endpoint(1).unwrap();
+        hub_a.set_peer_addr(1, b.local_addr());
+        hub_b.set_peer_addr(0, a.local_addr());
+        a.try_send(1, Probe(3), 0.75, 1).unwrap();
+        assert!((a.global_inflight() - 0.75).abs() < 1e-15);
+        assert_eq!(hub_a.monitor().undelivered(), 1);
+        let got = recv_within(&mut b, 2000).expect("delivered");
+        // the receiving process never saw the increment, so commit must
+        // not touch its account
+        b.commit(got.from, got.seq, got.mass);
+        assert_eq!(b.global_inflight(), 0.0);
+        assert_eq!(hub_b.monitor().undelivered(), 0);
+        // the sender releases when the ACK lands
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while hub_a.monitor().undelivered() > 0 && Instant::now() < deadline {
+            a.collect_acks();
+        }
+        assert_eq!(a.global_inflight(), 0.0);
+        assert_eq!(hub_a.monitor().undelivered(), 0);
+        assert_eq!(a.unacked(), 0);
+    }
+
+    #[test]
+    fn ctrl_frame_round_trip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let got: Probe = read_ctrl_frame(&mut s).unwrap();
+            write_ctrl_frame(&mut s, &Probe(got.0 + 1)).unwrap();
+        });
+        let mut s = TcpStream::connect(addr).unwrap();
+        write_ctrl_frame(&mut s, &Probe(41)).unwrap();
+        let back: Probe = read_ctrl_frame(&mut s).unwrap();
+        assert_eq!(back, Probe(42));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn cross_thread_wire_traffic() {
+        let (mut a, mut b, _hub) = pair();
+        let t = std::thread::spawn(move || {
+            for i in 0..100u64 {
+                let mut payload = Probe(i);
+                loop {
+                    match a.try_send(1, payload, 0.01, 8) {
+                        Ok(()) => break,
+                        Err(p) => payload = p,
+                    }
+                }
+            }
+            a
+        });
+        let mut seen = 0;
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while seen < 100 && Instant::now() < deadline {
+            if let Some(r) = b.try_recv_uncommitted() {
+                b.commit(r.from, r.seq, r.mass);
+                seen += 1;
+            }
+        }
+        let mut a = t.join().unwrap();
+        assert_eq!(seen, 100);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while a.unacked() > 0 && Instant::now() < deadline {
+            a.collect_acks();
+        }
+        assert_eq!(a.unacked(), 0);
+        assert!(b.global_inflight().abs() < 1e-12);
+    }
+}

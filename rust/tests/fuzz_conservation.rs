@@ -18,7 +18,9 @@ mod common;
 
 use std::time::Duration;
 
-use diter::coordinator::{DistributedConfig, ElasticConfig, RebaseMode, StreamingEngine};
+use diter::coordinator::{
+    DistributedConfig, ElasticConfig, RebaseMode, StreamingEngine, TransportKind,
+};
 use diter::graph::{power_law_web_graph, ChurnModel, MutableDigraph, MutationStream};
 use diter::linalg::vec_ops::norm1;
 use diter::partition::{Partition, PidState};
@@ -81,6 +83,10 @@ fn handoff_somewhere(engine: &mut StreamingEngine, rng: &mut Xoshiro256pp) {
 }
 
 fn fuzz(rebase: RebaseMode, seed: u64) {
+    fuzz_with(rebase, seed, None)
+}
+
+fn fuzz_with(rebase: RebaseMode, seed: u64, transport: Option<TransportKind>) {
     let g = power_law_web_graph(N, 5, 0.1, seed);
     let mg = MutableDigraph::from_digraph(&g, N);
     let mut cfg = DistributedConfig::new(Partition::contiguous(N, K).unwrap())
@@ -107,6 +113,9 @@ fn fuzz(rebase: RebaseMode, seed: u64) {
         max_entries: 48,
     };
     cfg.max_wall = Duration::from_secs(60);
+    if let Some(t) = transport {
+        cfg = cfg.with_transport(t);
+    }
     let mut engine = StreamingEngine::new(mg, 0.85, true, cfg).unwrap();
     let mut stream = MutationStream::new(ChurnModel::RandomRewire, seed ^ 0xF0);
     let mut burst = MutationStream::new(ChurnModel::HotSpotBurst { burst: 16 }, seed ^ 0xB0);
@@ -169,4 +178,14 @@ fn fuzz_conservation_gather_protocol() {
 #[test]
 fn fuzz_conservation_local_protocol() {
     fuzz(RebaseMode::Local, 0xFA57_0002);
+}
+
+/// The same fuzz, but every parcel, handoff, and halo slice crosses a
+/// real TCP socket: the loopback wire harness (DESIGN.md §8.5) must
+/// preserve exact conservation under the identical event storm. (The
+/// whole suite re-runs over the wire via `DITER_TRANSPORT=wire` in CI;
+/// this cell keeps one wire run in the default suite.)
+#[test]
+fn fuzz_conservation_wire_loopback() {
+    fuzz_with(RebaseMode::Local, 0xFA57_0003, Some(TransportKind::Wire));
 }
