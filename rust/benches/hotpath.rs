@@ -5,22 +5,95 @@
 //!  * L3 fluid diffusion: the V2 per-node diffusion
 //!  * transport: send/recv round-trips and coalescing overhead
 //!  * end-to-end: V2 PageRank updates/second at K = cores
+//!  * kernel head-to-head: global-walk vs local-block vs blocked, same
+//!    graph and binary, with per-solve allocation counts from the
+//!    installed [`CountingAlloc`]
 //!  * runtime (if artifacts present): PJRT d_round dispatch latency vs the
 //!    equivalent rust sweep, amortization vs block size
+//!
+//! Emits `BENCH_hotpath.json` (diffusions/sec and edges/sec per kernel,
+//! the blocked/local and local/global speedups, allocation counts) into
+//! `DITER_BENCH_JSON_DIR` (default `.`). The committed copy at the repo
+//! root is the baseline `tools/bench_gate.py --kind hotpath` compares
+//! against. Env knobs: `DITER_BENCH_N` (head-to-head graph size),
+//! `DITER_BENCH_ENV` (recorded measurement environment).
 
 use std::time::Duration;
 
-use diter::bench_harness::{bench, bench_header, black_box, fmt_secs, Table};
-use diter::coordinator::{v2, DistributedConfig};
+use diter::bench_harness::{bench, bench_header, bench_json_dir, black_box, fmt_secs, Json, Table};
+use diter::coordinator::{v2, DistributedConfig, KernelKind};
 use diter::graph::{pagerank_system, power_law_web_graph};
 use diter::partition::Partition;
+use diter::perf::CountingAlloc;
 use diter::prng::Xoshiro256pp;
 use diter::runtime::Runtime;
 use diter::solver::{DIteration, FixedPointProblem, SequenceKind, SolveOptions, Solver};
 use diter::transport::{bus, BusConfig, CoalesceBuffer, CoalescePolicy};
 
+// Count every heap allocation the bench makes — the kernel head-to-head
+// reports allocs/solve, turning "the blocked kernel is allocation-free in
+// steady state" into a measured number instead of a claim.
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+/// One kernel's end-to-end V2 solve: throughput plus allocator traffic.
+struct KernelRun {
+    updates: u64,
+    wall_secs: f64,
+    allocations: u64,
+}
+
+impl KernelRun {
+    fn diffusions_per_sec(&self) -> f64 {
+        self.updates as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// Edge traversals/sec: each diffusion walks the node's out-column, so
+    /// edges ≈ updates × mean out-degree (exact only in aggregate).
+    fn edges_per_sec(&self, avg_deg: f64) -> f64 {
+        self.diffusions_per_sec() * avg_deg
+    }
+
+    fn allocs_per_kupdate(&self) -> f64 {
+        self.allocations as f64 * 1e3 / self.updates.max(1) as f64
+    }
+
+    fn to_json(&self, avg_deg: f64) -> Json {
+        Json::new()
+            .num_field("diffusions_per_sec", self.diffusions_per_sec())
+            .num_field("edges_per_sec", self.edges_per_sec(avg_deg))
+            .int_field("updates", self.updates)
+            .num_field("wall_secs", self.wall_secs)
+            .int_field("allocations", self.allocations)
+            .num_field("allocs_per_kupdate", self.allocs_per_kupdate())
+    }
+}
+
+/// Solve the same problem twice with one kernel (cold + warm) and report
+/// the warm run — the steady-state number the gate tracks. Allocations are
+/// process-wide across the warm solve (the workers are threads).
+fn run_kernel(
+    problem: &FixedPointProblem,
+    base: &DistributedConfig,
+    kernel: KernelKind,
+) -> KernelRun {
+    let cfg = base.clone().with_kernel(kernel);
+    let cold = v2::solve_v2(problem, &cfg).expect("cold solve");
+    assert!(cold.converged, "[{}] cold solve must converge", kernel.name());
+    let a0 = CountingAlloc::total_allocations();
+    let sol = v2::solve_v2(problem, &cfg).expect("warm solve");
+    let allocations = CountingAlloc::total_allocations() - a0;
+    assert!(sol.converged, "[{}] warm solve must converge", kernel.name());
+    KernelRun {
+        updates: sol.total_updates,
+        wall_secs: sol.wall_secs,
+        allocations,
+    }
+}
+
 fn main() {
     bench_header("hotpath", "per-layer hot-path microbenchmarks");
+    let bench_env = std::env::var("DITER_BENCH_ENV").unwrap_or_else(|_| "local".into());
     let mut table = Table::new(&["bench", "mean", "p50", "p99", "throughput"]);
 
     // --- L3 sparse sweep (the eq. 6 inner loop) -------------------------
@@ -121,7 +194,10 @@ fn main() {
     ]);
 
     // --- end-to-end V2 ----------------------------------------------------
-    let n2 = 20_000;
+    let n2 = std::env::var("DITER_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20_000usize);
     let g2 = power_law_web_graph(n2, 8, 0.1, 5);
     let sys2 = pagerank_system(&g2, 0.85, false).unwrap();
     let problem2 = FixedPointProblem::new(sys2.matrix.clone(), sys2.b.clone()).unwrap();
@@ -159,6 +235,50 @@ fn main() {
         "-".into(),
         format!("{:.2e} upd/s", seq.cost * n2 as f64 / wall),
     ]);
+
+    // --- kernel head-to-head: global vs local vs blocked ------------------
+    let avg_deg = g2.m() as f64 / n2 as f64;
+    let global = run_kernel(&problem2, &cfg, KernelKind::GlobalWalk);
+    let local = run_kernel(&problem2, &cfg, KernelKind::LocalBlock);
+    let blocked = run_kernel(&problem2, &cfg, KernelKind::Blocked);
+    let local_vs_global = local.diffusions_per_sec() / global.diffusions_per_sec().max(1e-9);
+    let blocked_vs_local = blocked.diffusions_per_sec() / local.diffusions_per_sec().max(1e-9);
+    let mut head = Table::new(&["kernel", "diff/s", "edges/s", "allocs", "allocs/kupd"]);
+    for (name, r) in [
+        ("global-walk", &global),
+        ("local-block", &local),
+        ("blocked", &blocked),
+    ] {
+        head.row(&[
+            name.into(),
+            format!("{:.2e}", r.diffusions_per_sec()),
+            format!("{:.2e}", r.edges_per_sec(avg_deg)),
+            r.allocations.to_string(),
+            format!("{:.2}", r.allocs_per_kupdate()),
+        ]);
+    }
+    print!("{}", head.render());
+    println!(
+        "\nlocal vs global: {local_vs_global:.2}x; blocked vs local: {blocked_vs_local:.2}x \
+         diffusions/sec (warm solve, {n2} nodes, K={k})"
+    );
+
+    let json = Json::new()
+        .int_field("schema", 1)
+        .str_field("bench", "hotpath")
+        .bool_field("measured", true)
+        .str_field("environment", &bench_env)
+        .int_field("n", n2 as u64)
+        .int_field("k", k as u64)
+        .num_field("avg_out_degree", avg_deg)
+        .obj_field("global", global.to_json(avg_deg))
+        .obj_field("local", local.to_json(avg_deg))
+        .obj_field("blocked", blocked.to_json(avg_deg))
+        .num_field("local_vs_global_speedup", local_vs_global)
+        .num_field("blocked_vs_local_speedup", blocked_vs_local);
+    let path = bench_json_dir().join("BENCH_hotpath.json");
+    json.write(&path).expect("write BENCH_hotpath.json");
+    println!("wrote {}", path.display());
 
     // --- PJRT runtime dispatch (optional) ---------------------------------
     if Runtime::artifacts_available() {

@@ -73,14 +73,22 @@ pub enum KernelKind {
     /// Global-CSC column walk with per-coordinate routing (the pre-PR
     /// baseline shape, kept for measured comparisons).
     GlobalWalk,
+    /// Batched variant of [`Self::LocalBlock`] (DESIGN.md §9): drains a
+    /// small batch of greedy-queue slots per iteration, walks their local
+    /// CSC columns with 4-wide unrolled f64 accumulation, and defers
+    /// greedy-queue refiling to one pass over a touched-slot journal. All
+    /// scratch is preallocated — the steady-state quantum performs zero
+    /// heap allocations (asserted by the counting-allocator test).
+    Blocked,
 }
 
 impl KernelKind {
-    /// Parse a CLI/env name: `local`, `global`.
+    /// Parse a CLI/env name: `local`, `global`, `blocked`.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "local" => Some(Self::LocalBlock),
             "global" => Some(Self::GlobalWalk),
+            "blocked" => Some(Self::Blocked),
             _ => None,
         }
     }
@@ -89,7 +97,16 @@ impl KernelKind {
         match self {
             Self::LocalBlock => "local",
             Self::GlobalWalk => "global",
+            Self::Blocked => "blocked",
         }
+    }
+
+    /// Whether this kernel diffuses against a built
+    /// [`crate::sparse::LocalSystem`] — and therefore shares every
+    /// LocalSystem build / patch / shed / adopt / retarget path with the
+    /// other local kernels. The global walk is the only one that does not.
+    pub fn uses_local_system(&self) -> bool {
+        !matches!(self, Self::GlobalWalk)
     }
 }
 
@@ -175,6 +192,13 @@ pub struct DistributedConfig {
     /// environment variable so the whole test-suite can be re-run over
     /// the wire without touching a line of it.
     pub transport: TransportKind,
+    /// opt-in Linux core pinning for pool-spawned workers (`--pin-cores`
+    /// CLI flag; defaults from `DITER_PIN=1`): each worker thread pins
+    /// itself to core `pid % available_parallelism` via a raw
+    /// `sched_setaffinity` syscall ([`crate::perf::pin_to_core`]), so
+    /// elastic spawns land on distinct cores. Best-effort: a no-op off
+    /// Linux or under a restricting cgroup mask.
+    pub pin_cores: bool,
 }
 
 /// Straggler injection: PID `pid` is throttled to at most
@@ -205,7 +229,15 @@ impl DistributedConfig {
             kernel: KernelKind::default(),
             rebase: RebaseMode::default(),
             transport: TransportKind::from_env(),
+            pin_cores: std::env::var("DITER_PIN")
+                .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+                .unwrap_or(false),
         }
+    }
+
+    pub fn with_pin_cores(mut self, pin: bool) -> Self {
+        self.pin_cores = pin;
+        self
     }
 
     pub fn with_kernel(mut self, kernel: KernelKind) -> Self {

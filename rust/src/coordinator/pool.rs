@@ -287,9 +287,22 @@ impl WorkerPool {
             state,
             rebase_ack: None,
         };
+        let pin_cores = self.cfg.pin_cores;
         WorkerHandle {
             ctrl: tx,
-            handle: std::thread::spawn(move || worker.run()),
+            handle: std::thread::spawn(move || {
+                if pin_cores {
+                    // best-effort affinity from inside the spawned thread:
+                    // pid % cores spreads elastic spawns across distinct
+                    // cores (DESIGN.md §9); failure leaves the thread
+                    // wherever the scheduler had it
+                    let cores = std::thread::available_parallelism()
+                        .map(|c| c.get())
+                        .unwrap_or(1);
+                    let _ = crate::perf::pin_to_core(pid % cores);
+                }
+                worker.run()
+            }),
         }
     }
 

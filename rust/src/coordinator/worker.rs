@@ -19,8 +19,11 @@
 //! flat SoA parcels (`coords: Vec<u32>, mass: Vec<f64>`). The LocalSystem
 //! is rebuilt **handoff-atomically** whenever the held range or the owner
 //! map changes, and **patched** (dirty columns only) across streaming
-//! epochs. The pre-refactor global-walk kernel stays selectable
-//! ([`super::KernelKind::GlobalWalk`]) for measured perf comparisons.
+//! epochs. Three kernels share this machinery and stay selectable in the
+//! same binary for measured A/B: the scalar local walk
+//! ([`super::KernelKind::LocalBlock`], the default), the batched
+//! allocation-free variant ([`super::KernelKind::Blocked`], DESIGN.md §9),
+//! and the pre-refactor global walk ([`super::KernelKind::GlobalWalk`]).
 //!
 //! ## The handoff protocol (DESIGN.md §4)
 //!
@@ -58,6 +61,7 @@ use super::{update, DistributedConfig, KernelKind, RebaseMode};
 use crate::linalg::vec_ops::norm1;
 use crate::metrics::MetricSet;
 use crate::partition::{OwnershipTable, Partition};
+use crate::perf::VecQueue;
 use crate::solver::{FixedPointProblem, GreedyQueue, SequenceKind, SequenceState};
 use crate::sparse::LocalSystem;
 use crate::transport::{CoalesceBuffer, Received, Transport};
@@ -81,6 +85,12 @@ pub const WORKER_METRICS: &[&str] = &[
 /// O(coords routed per window), the same bound the pre-patch code had
 /// per ownership event.
 const PATCHES_PER_REBUILD: u32 = 64;
+
+/// Slots drained per [`KernelKind::Blocked`] batch. Small enough that the
+/// greedy order stays fresh (fluid snapshots are only approximate within
+/// a batch), large enough to amortize the deferred heap-refiling pass and
+/// keep four independent column accumulations in flight.
+const BLOCK_BATCH: usize = 8;
 
 /// Everything that travels between PIDs: the fluid data plane plus the
 /// repartitioning control plane.
@@ -183,6 +193,27 @@ pub struct WorkerCore {
     patches: u32,
     /// exit path: fold incoming handoffs but never migrate ownership
     shutting_down: bool,
+    /// count of nonzero entries in `f`, maintained at every write site
+    /// (`add_f` / `clear_f` on the hot paths, `recount_f` after bulk
+    /// rewrites) so the idle fast-path is O(1) instead of an O(m) scan
+    /// per quantum
+    nonzero_f: usize,
+    /// preallocated scratch for the blocked kernel (batch + journal)
+    blocked: BlockedScratch,
+}
+
+/// Reusable scratch for [`KernelKind::Blocked`]: the drained batch and
+/// the touched-slot journal, preallocated so the steady-state quantum is
+/// allocation-free (asserted by the counting-allocator test in
+/// `tests/integration_hotpath.rs`).
+#[derive(Default)]
+struct BlockedScratch {
+    /// `(slot, fluid)` pairs selected this batch
+    batch: VecQueue<(u32, f64)>,
+    /// local slots written by this batch's column walks. Duplicates are
+    /// allowed: the deferred refiling pass delegates dedup to the greedy
+    /// queue's exponent-bucket no-op, keeping the append branchless.
+    journal: VecQueue<u32>,
 }
 
 /// State of one in-flight V1-style epoch transition (`RebaseMode::Local`):
@@ -219,6 +250,7 @@ impl WorkerCore {
         }
         // epoch 0 cold state: F₀ = B on the owned slice, H₀ = 0
         let f: Vec<f64> = owned.iter().map(|&i| problem.b()[i]).collect();
+        let nonzero_f = f.iter().filter(|v| **v != 0.0).count();
         let h = vec![0.0; owned.len()];
         let use_heap = cfg.sequence == SequenceKind::GreedyMaxFluid;
         // sized to the owned slice, not the whole coordinate space (K
@@ -267,9 +299,35 @@ impl WorkerCore {
             frozen: HashSet::new(),
             patches: 0,
             shutting_down: false,
+            nonzero_f,
+            blocked: BlockedScratch::default(),
         };
         core.rebuild_local();
         core
+    }
+
+    /// Write `f[t] += dv`, maintaining the nonzero-fluid counter.
+    #[inline]
+    fn add_f(&mut self, t: usize, dv: f64) {
+        let old = self.f[t];
+        let new = old + dv;
+        self.f[t] = new;
+        self.nonzero_f += (new != 0.0) as usize;
+        self.nonzero_f -= (old != 0.0) as usize;
+    }
+
+    /// Write `f[t] = 0.0`, maintaining the nonzero-fluid counter.
+    #[inline]
+    fn clear_f(&mut self, t: usize) {
+        self.nonzero_f -= (self.f[t] != 0.0) as usize;
+        self.f[t] = 0.0;
+    }
+
+    /// Recount after a bulk rewrite of `f` (compact, epoch entry, local
+    /// rebase — all rare events; the per-quantum sites maintain the
+    /// counter incrementally).
+    fn recount_f(&mut self) {
+        self.nonzero_f = self.f.iter().filter(|v| **v != 0.0).count();
     }
 
     fn make_seq(cfg: &DistributedConfig, k: usize, m: usize) -> Option<SequenceState> {
@@ -451,6 +509,7 @@ impl WorkerCore {
         self.owned = owned;
         self.h = h;
         self.f = f;
+        self.recount_f();
         for (t, &i) in self.owned.iter().enumerate() {
             self.local_of[i] = t;
         }
@@ -466,7 +525,7 @@ impl WorkerCore {
     /// must fall back to a full rebuild (global kernel, no system built
     /// yet, or the patch budget bounding interner accretion ran out).
     fn patch_local_shed(&mut self, shipped: &[bool]) -> bool {
-        if self.cfg.kernel != KernelKind::LocalBlock || self.patches >= PATCHES_PER_REBUILD {
+        if !self.cfg.kernel.uses_local_system() || self.patches >= PATCHES_PER_REBUILD {
             return false;
         }
         let Some(local) = self.local.as_mut() else {
@@ -491,7 +550,7 @@ impl WorkerCore {
     /// Incremental adoption: append only the received columns (extracted
     /// fresh) and flip remnant entries that now point at local slots.
     fn patch_local_adopt(&mut self, added: &[usize]) -> bool {
-        if self.cfg.kernel != KernelKind::LocalBlock || self.patches >= PATCHES_PER_REBUILD {
+        if !self.cfg.kernel.uses_local_system() || self.patches >= PATCHES_PER_REBUILD {
             return false;
         }
         if self.local.is_none() {
@@ -510,7 +569,7 @@ impl WorkerCore {
     /// Incremental re-route after a peer-to-peer move (no columns of ours
     /// changed — only remnant destinations).
     fn patch_local_retarget(&mut self) -> bool {
-        if self.cfg.kernel != KernelKind::LocalBlock || self.patches >= PATCHES_PER_REBUILD {
+        if !self.cfg.kernel.uses_local_system() || self.patches >= PATCHES_PER_REBUILD {
             return false;
         }
         let Some(local) = self.local.as_mut() else {
@@ -530,11 +589,12 @@ impl WorkerCore {
     /// or appended (handoffs are rare; O(n + m) here is irrelevant).
     fn rebuild_order(&mut self) {
         if self.use_heap {
-            let mut heap = GreedyQueue::new(self.owned.len());
+            // reset-in-place: the bucket storage stays warm across epoch
+            // rebases (a fresh queue is ~2k vector allocations)
+            self.heap.reset(self.owned.len());
             for (t, &fv) in self.f.iter().enumerate() {
-                heap.push(t, fv.abs());
+                self.heap.push(t, fv.abs());
             }
-            self.heap = heap;
         }
         self.seq = Self::make_seq(&self.cfg, self.k, self.owned.len());
     }
@@ -553,7 +613,7 @@ impl WorkerCore {
         // accrete unboundedly under churn.
         self.patches = 0;
         self.coalesce.compact();
-        if self.cfg.kernel != KernelKind::LocalBlock {
+        if !self.cfg.kernel.uses_local_system() {
             return;
         }
         let csc = self.problem.matrix().csc();
@@ -658,7 +718,7 @@ impl WorkerCore {
             let fl = amounts[u];
             let t = self.local_of[j];
             if t != usize::MAX {
-                self.f[t] += fl;
+                self.add_f(t, fl);
                 if self.use_heap {
                     self.heap.push(t, self.f[t].abs());
                 }
@@ -710,7 +770,7 @@ impl WorkerCore {
             if let Some(st) = self.foster.remove(&j) {
                 add += st;
             }
-            self.f[t] += add;
+            self.add_f(t, add);
         }
         self.rebuild_order();
         if !self.patch_local_adopt(&adopted) {
@@ -737,15 +797,22 @@ impl WorkerCore {
     /// `(did_work, work_count, r_k)`.
     fn diffuse_quantum(&mut self) -> (bool, u64, f64) {
         let m = self.owned.len();
+        debug_assert_eq!(
+            self.nonzero_f,
+            self.f.iter().filter(|v| **v != 0.0).count(),
+            "nonzero-fluid counter drifted from f"
+        );
         // idle fast-path: persistent workers spin between epochs; skip the
-        // whole quantum once the slice is drained
-        if m == 0 || self.f.iter().all(|&v| v == 0.0) {
+        // whole quantum once the slice is drained. The counter is
+        // maintained at the f write sites, so this is O(1) — not the old
+        // O(m) scan per quantum.
+        if m == 0 || self.nonzero_f == 0 {
             return (false, 0, 0.0);
         }
-        if self.cfg.kernel == KernelKind::LocalBlock {
-            self.diffuse_quantum_local(m)
-        } else {
-            self.diffuse_quantum_global(m)
+        match self.cfg.kernel {
+            KernelKind::LocalBlock => self.diffuse_quantum_local(m),
+            KernelKind::Blocked => self.diffuse_quantum_blocked(m),
+            KernelKind::GlobalWalk => self.diffuse_quantum_global(m),
         }
     }
 
@@ -770,17 +837,17 @@ impl WorkerCore {
             }
             if fi.abs() < self.absorb_eps {
                 self.h[t] += fi;
-                self.f[t] = 0.0;
+                self.clear_f(t);
                 continue;
             }
             did_work = true;
             work_count += 1;
             self.h[t] += fi;
-            self.f[t] = 0.0;
+            self.clear_f(t);
             let (rows, vals) = local.block_col(t);
             for u in 0..rows.len() {
                 let lj = rows[u] as usize;
-                self.f[lj] += vals[u] * fi; // stays local: no indirection
+                self.add_f(lj, vals[u] * fi); // stays local: no indirection
                 if self.use_heap {
                     self.heap.push(lj, self.f[lj].abs());
                 }
@@ -791,6 +858,118 @@ impl WorkerCore {
                 self.coalesce.add_slot(dests[u] as usize, slots[u], vals[u] * fi);
             }
         }
+        self.local = Some(local);
+        (did_work, work_count, norm1(&self.f))
+    }
+
+    /// The batched fast path (DESIGN.md §9). Three structural differences
+    /// from [`Self::diffuse_quantum_local`], none of which move the fixed
+    /// point:
+    ///
+    /// * **batch select** — up to [`BLOCK_BATCH`] slots are drained from
+    ///   the greedy queue before any column is walked, and the frozen /
+    ///   zero-fluid / `absorb_eps` branches run once per *selected slot*
+    ///   here instead of inside the walk;
+    /// * **4-wide unrolled column walk** — the local CSC block's rows are
+    ///   processed in `chunks_exact(4)`, four independent accumulations
+    ///   per step (every entry of a column targets a distinct local slot,
+    ///   so the unroll cannot reorder adds into the same `f` entry);
+    /// * **journal-deferred refiling** — instead of one `heap.push` per
+    ///   edge, every touched slot is appended (unchecked, branchless) to
+    ///   a journal and refiled in one pass after the batch; duplicate
+    ///   entries are no-ops in the queue's exponent-bucket check.
+    ///
+    /// All scratch lives in the preallocated [`BlockedScratch`]; once the
+    /// buffers have warmed up, a quantum performs zero heap allocations
+    /// (asserted by the counting-allocator test).
+    fn diffuse_quantum_blocked(&mut self, m: usize) -> (bool, u64, f64) {
+        let local = self
+            .local
+            .take()
+            .expect("Blocked kernel requires a built LocalSystem");
+        let mut scratch = std::mem::take(&mut self.blocked);
+        scratch.batch.reserve_total(BLOCK_BATCH);
+        let quanta = self.cfg.sweeps_per_round * m;
+        let mut did_work = false;
+        let mut work_count = 0u64;
+        let mut spent = 0usize;
+        let mut drained = false;
+        while spent < quanta && !drained {
+            scratch.batch.clear();
+            let mut journal_cap = 0usize;
+            while scratch.batch.len() < BLOCK_BATCH && spent < quanta {
+                spent += 1;
+                let Some(t) = self.next_slot() else {
+                    drained = true;
+                    break;
+                };
+                if !self.frozen.is_empty() && self.frozen.contains(&t) {
+                    continue; // mid-transition: this H is a halo snapshot
+                }
+                let fi = self.f[t];
+                if fi == 0.0 {
+                    continue;
+                }
+                self.h[t] += fi;
+                self.clear_f(t);
+                if fi.abs() < self.absorb_eps {
+                    continue; // absorbed without propagation
+                }
+                did_work = true;
+                work_count += 1;
+                journal_cap += local.block_col(t).0.len();
+                // SAFETY: `reserve_total(BLOCK_BATCH)` above and
+                // `len() < BLOCK_BATCH` in the loop condition
+                unsafe { scratch.batch.push_unchecked((t as u32, fi)) };
+            }
+            if scratch.batch.is_empty() {
+                continue; // every selection was a skip; quanta still spent
+            }
+            scratch.journal.clear();
+            // one reservation per batch (a no-op once warmed up) buys a
+            // branchless unchecked append for every edge below
+            scratch.journal.reserve_total(journal_cap);
+            for &(t, fi) in scratch.batch.as_slice() {
+                let (rows, vals) = local.block_col(t as usize);
+                let mut rc = rows.chunks_exact(4);
+                let mut vc = vals.chunks_exact(4);
+                for (r4, v4) in (&mut rc).zip(&mut vc) {
+                    // four independent accumulations per step: distinct
+                    // rows within a column mean no add can alias another
+                    self.add_f(r4[0] as usize, v4[0] * fi);
+                    self.add_f(r4[1] as usize, v4[1] * fi);
+                    self.add_f(r4[2] as usize, v4[2] * fi);
+                    self.add_f(r4[3] as usize, v4[3] * fi);
+                    // SAFETY: journal reserved to the batch's total
+                    // column length above
+                    unsafe {
+                        scratch.journal.push_unchecked(r4[0]);
+                        scratch.journal.push_unchecked(r4[1]);
+                        scratch.journal.push_unchecked(r4[2]);
+                        scratch.journal.push_unchecked(r4[3]);
+                    }
+                }
+                for (&r, &v) in rc.remainder().iter().zip(vc.remainder()) {
+                    self.add_f(r as usize, v * fi);
+                    // SAFETY: covered by the same per-batch reservation
+                    unsafe { scratch.journal.push_unchecked(r) };
+                }
+                let (dests, slots, rvals) = local.remnant_col(t as usize);
+                for u in 0..dests.len() {
+                    // §3.3 regroup: one indexed add into the accumulator
+                    self.coalesce.add_slot(dests[u] as usize, slots[u], rvals[u] * fi);
+                }
+            }
+            if self.use_heap {
+                // the deferred refiling pass: duplicates land in the same
+                // exponent bucket and are no-ops
+                for &lj in scratch.journal.as_slice() {
+                    let lj = lj as usize;
+                    self.heap.push(lj, self.f[lj].abs());
+                }
+            }
+        }
+        self.blocked = scratch;
         self.local = Some(local);
         (did_work, work_count, norm1(&self.f))
     }
@@ -815,20 +994,20 @@ impl WorkerCore {
             }
             if fi.abs() < self.absorb_eps {
                 self.h[t] += fi;
-                self.f[t] = 0.0;
+                self.clear_f(t);
                 continue;
             }
             did_work = true;
             work_count += 1;
             self.h[t] += fi;
-            self.f[t] = 0.0;
+            self.clear_f(t);
             let (rows, vals) = csc.col(self.owned[t]);
             for u in 0..rows.len() {
                 let j = rows[u];
                 let contrib = vals[u] * fi;
                 let lj = self.local_of[j];
                 if lj != usize::MAX {
-                    self.f[lj] += contrib; // stays local
+                    self.add_f(lj, contrib); // stays local
                     if self.use_heap {
                         self.heap.push(lj, self.f[lj].abs());
                     }
@@ -881,6 +1060,9 @@ impl WorkerCore {
                 self.coalesce.add(part.owner(j), j, mass[u]);
             }
             self.metrics.incr("fluid_forwarded");
+            // the parcel never left the process: its storage backs the
+            // next flush instead of being dropped
+            self.coalesce.recycle(coords, mass);
         }
     }
 
@@ -921,11 +1103,12 @@ impl WorkerCore {
         self.epoch = epoch;
         self.problem = problem;
         self.f = f_slice;
+        self.recount_f();
         self.coalesce.clear();
         self.foster.clear();
         self.rebuild_order();
         let mut patched = false;
-        if self.cfg.kernel == KernelKind::LocalBlock {
+        if self.cfg.kernel.uses_local_system() {
             if let (Some(local), Some(dirty)) = (self.local.as_mut(), dirty) {
                 let csc = self.problem.matrix().csc();
                 let coalesce = &mut self.coalesce;
@@ -1124,10 +1307,11 @@ impl WorkerCore {
             &self.local_of,
             &mut self.f,
         );
+        self.recount_f();
         self.epoch = p.epoch;
         self.problem = p.problem;
         let mut patched = false;
-        if self.cfg.kernel == KernelKind::LocalBlock {
+        if self.cfg.kernel.uses_local_system() {
             if let Some(local) = self.local.as_mut() {
                 let csc = self.problem.matrix().csc();
                 let coalesce = &mut self.coalesce;

@@ -80,6 +80,7 @@ pub mod graph;
 pub mod linalg;
 pub mod metrics;
 pub mod partition;
+pub mod perf;
 pub mod prng;
 pub mod prop;
 pub mod runtime;

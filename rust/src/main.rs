@@ -397,9 +397,15 @@ fn stream_spec() -> Vec<OptSpec> {
         },
         OptSpec {
             name: "kernel",
-            help: "diffusion kernel: local (block+remnant) | global (baseline walk)",
+            help: "diffusion kernel: local (block+remnant) | blocked (batched, unrolled) | global (baseline walk)",
             is_flag: false,
             default: Some("local"),
+        },
+        OptSpec {
+            name: "pin-cores",
+            help: "pin each worker thread to a core (Linux; also DITER_PIN=1)",
+            is_flag: true,
+            default: None,
         },
         OptSpec {
             name: "rebase",
@@ -514,7 +520,7 @@ fn cmd_stream(argv: &[String]) -> CliResult {
     let model = ChurnModel::parse(&args.get_str("model", "rewire"))
         .ok_or("bad --model (expected grow | rewire | hotspot)")?;
     let kernel = KernelKind::parse(&args.get_str("kernel", "local"))
-        .ok_or("bad --kernel (expected local | global)")?;
+        .ok_or("bad --kernel (expected local | blocked | global)")?;
     let rebase = RebaseMode::parse(&args.get_str("rebase", "gather"))
         .ok_or("bad --rebase (expected gather | local)")?;
     let compare_cold = args.has_flag("compare-cold");
@@ -584,6 +590,9 @@ fn cmd_stream(argv: &[String]) -> CliResult {
         .with_kernel(kernel)
         .with_rebase(rebase)
         .with_transport(transport);
+    if args.has_flag("pin-cores") {
+        cfg = cfg.with_pin_cores(true);
+    }
     cfg.max_wall = Duration::from_secs(120);
     if args.get("straggler").is_some() {
         let pid = args.get_usize("straggler", 0)?;

@@ -1,0 +1,393 @@
+//! Allocation discipline for the hot paths (DESIGN.md §9).
+//!
+//! The diffusion quantum, the coalesce flush, and the wire encoder all
+//! sit inside loops that run millions of times per solve; a single
+//! `Vec::with_capacity` per iteration turns the allocator into the
+//! bottleneck long before the FPU is busy. This module collects the three
+//! reusable pieces that keep those loops allocation-free in steady state:
+//!
+//! * [`VecQueue`] — a bounded scratch vector with an explicit
+//!   capacity-reservation step and an unchecked push, so the inner loop
+//!   carries no capacity branch and can never reallocate mid-batch;
+//! * [`Arena`] — a recycling pool of `Vec<T>` buffers for values that
+//!   must be *owned* at their point of use (bus parcels, wire frames)
+//!   but whose backing storage can be reclaimed when the owner is done;
+//! * [`CountingAlloc`] — a `System`-wrapping global allocator that counts
+//!   allocations (process-wide and per-thread), used by the debug test
+//!   and the hotpath bench to *assert* the zero-allocation claim instead
+//!   of trusting it.
+//!
+//! [`pin_to_core`] rounds the module out: opt-in Linux core pinning for
+//! pool-spawned workers (`--pin-cores` / `DITER_PIN=1`), a raw
+//! `sched_setaffinity` syscall so the zero-dependency policy holds.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+// ---------------------------------------------------------------------------
+// VecQueue: bounded scratch with unchecked push
+
+/// A scratch vector for bounded hot-loop batches: reserve once per batch
+/// with [`VecQueue::reserve_total`], then append with
+/// [`VecQueue::push_unchecked`] — no capacity check, no reallocation, no
+/// allocator call on the append path. The backing buffer persists across
+/// batches (and across quanta, when the queue lives in a worker), so a
+/// warmed-up queue never touches the allocator again.
+#[derive(Debug)]
+pub struct VecQueue<T> {
+    buf: Vec<T>,
+}
+
+impl<T> Default for VecQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> VecQueue<T> {
+    /// An empty queue with no backing storage (first `reserve_total`
+    /// allocates).
+    pub fn new() -> Self {
+        VecQueue { buf: Vec::new() }
+    }
+
+    /// Grow the backing buffer so that `cap` total elements fit. A no-op
+    /// once the buffer has warmed up past `cap` — the steady-state path.
+    pub fn reserve_total(&mut self, cap: usize) {
+        let len = self.buf.len();
+        if cap > len {
+            self.buf.reserve(cap - len);
+        }
+    }
+
+    /// Append without a capacity check.
+    ///
+    /// # Safety
+    ///
+    /// The caller must have established `len() < capacity()` — i.e. a
+    /// preceding [`VecQueue::reserve_total`] covers every push since the
+    /// last [`VecQueue::clear`]. Debug builds assert it.
+    #[inline]
+    pub unsafe fn push_unchecked(&mut self, v: T) {
+        debug_assert!(self.buf.len() < self.buf.capacity(), "VecQueue overflow");
+        let len = self.buf.len();
+        std::ptr::write(self.buf.as_mut_ptr().add(len), v);
+        self.buf.set_len(len + 1);
+    }
+
+    /// Checked append (cold paths; may reallocate).
+    pub fn push(&mut self, v: T) {
+        self.buf.push(v);
+    }
+
+    /// Drop the contents, keeping the backing storage warm.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        &self.buf
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Arena: recycling pool for owned buffers
+
+/// A recycling pool of `Vec<T>` buffers for values that must be **owned**
+/// where they are used — a bus parcel's SoA columns, a wire frame's body —
+/// but whose backing storage can come back once the owner is done with it.
+/// [`Arena::take`] hands out a cleared buffer with warm capacity (or a
+/// fresh empty one when the pool is dry); [`Arena::give`] returns storage,
+/// keeping at most `max_pooled` buffers so a burst cannot pin memory
+/// forever. Buffers that cross a thread boundary and never come back are
+/// simply replaced — the arena is a cache, not an accounting system.
+#[derive(Debug)]
+pub struct Arena<T> {
+    pool: Vec<Vec<T>>,
+    max_pooled: usize,
+}
+
+impl<T> Arena<T> {
+    /// An empty arena retaining at most `max_pooled` returned buffers.
+    pub fn new(max_pooled: usize) -> Self {
+        Arena {
+            pool: Vec::new(),
+            max_pooled,
+        }
+    }
+
+    /// A cleared buffer: recycled (warm capacity) when the pool has one,
+    /// fresh otherwise.
+    pub fn take(&mut self) -> Vec<T> {
+        self.pool.pop().unwrap_or_default()
+    }
+
+    /// Return a buffer's storage to the pool (cleared first). Dropped on
+    /// the floor once `max_pooled` buffers are already cached.
+    pub fn give(&mut self, mut buf: Vec<T>) {
+        if self.pool.len() < self.max_pooled && buf.capacity() > 0 {
+            buf.clear();
+            self.pool.push(buf);
+        }
+    }
+
+    /// Buffers currently cached.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CountingAlloc: the zero-allocation claim, asserted
+
+static TOTAL_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// A [`System`]-wrapping allocator that counts allocation calls — one
+/// relaxed atomic increment process-wide plus a thread-local counter per
+/// `alloc`/`alloc_zeroed`/`realloc` (`dealloc` is free). Install it in a
+/// test or bench binary:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: diter::perf::CountingAlloc = diter::perf::CountingAlloc::new();
+/// ```
+///
+/// then bracket the region under test with
+/// [`CountingAlloc::thread_allocations`] (immune to allocations from
+/// concurrently running test threads) or
+/// [`CountingAlloc::total_allocations`] (whole process, for multi-threaded
+/// solves). This is how "zero heap allocations per quantum in steady
+/// state" is *asserted* rather than assumed.
+#[derive(Debug, Default)]
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    pub const fn new() -> Self {
+        CountingAlloc
+    }
+
+    #[inline]
+    fn count() {
+        TOTAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        // try_with: the allocator may be called while this thread's TLS is
+        // being torn down — skip the per-thread count rather than panic
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+    }
+
+    /// Allocation calls across the whole process since start.
+    pub fn total_allocations() -> u64 {
+        TOTAL_ALLOCS.load(Ordering::Relaxed)
+    }
+
+    /// Allocation calls made by the current thread since it started.
+    pub fn thread_allocations() -> u64 {
+        THREAD_ALLOCS.try_with(Cell::get).unwrap_or(0)
+    }
+}
+
+// SAFETY: defers every operation to `System`, which upholds the
+// GlobalAlloc contract; the counters never touch the returned memory.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        Self::count();
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        Self::count();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        Self::count();
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Core pinning: raw sched_setaffinity, zero dependencies
+
+/// Whether [`pin_to_core`] can do anything on this target.
+pub const fn pin_supported() -> bool {
+    cfg!(all(
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))
+}
+
+/// Pin the **calling thread** to one CPU core via `sched_setaffinity(2)`
+/// (raw syscall — the crate has no libc dependency). Returns whether the
+/// kernel accepted the mask; a `false` (unsupported target, cgroup
+/// restriction, core out of range) leaves the thread where it was —
+/// pinning is strictly best-effort. Workers call this from their own
+/// spawned thread when `--pin-cores` / `DITER_PIN=1` is set, with
+/// `core = pid % available_parallelism`, so elastic spawns land on
+/// distinct cores instead of piling onto whichever core the scheduler
+/// favors.
+#[cfg(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+pub fn pin_to_core(core: usize) -> bool {
+    const MASK_WORDS: usize = 16; // 1024 CPUs
+    if core >= MASK_WORDS * 64 {
+        return false;
+    }
+    let mut mask = [0u64; MASK_WORDS];
+    mask[core / 64] = 1u64 << (core % 64);
+    // pid 0 = the calling thread
+    let ret = unsafe { sched_setaffinity_raw(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+    ret == 0
+}
+
+/// Fallback for targets without the raw-syscall implementation: report
+/// "not pinned" and do nothing.
+#[cfg(not(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+)))]
+pub fn pin_to_core(_core: usize) -> bool {
+    false
+}
+
+// SAFETY (both arches): the syscall reads `size` bytes from `mask`, which
+// the caller keeps alive across the call; no memory is written.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+unsafe fn sched_setaffinity_raw(pid: i64, size: usize, mask: *const u64) -> i64 {
+    let mut ret: i64;
+    std::arch::asm!(
+        "syscall",
+        inlateout("rax") 203i64 => ret, // __NR_sched_setaffinity
+        in("rdi") pid,
+        in("rsi") size,
+        in("rdx") mask,
+        lateout("rcx") _,
+        lateout("r11") _,
+        options(nostack),
+    );
+    ret
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+unsafe fn sched_setaffinity_raw(pid: i64, size: usize, mask: *const u64) -> i64 {
+    let mut ret: i64;
+    std::arch::asm!(
+        "svc #0",
+        in("x8") 122i64, // __NR_sched_setaffinity
+        inlateout("x0") pid => ret,
+        in("x1") size,
+        in("x2") mask,
+        options(nostack),
+    );
+    ret
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_queue_reserve_then_push_unchecked() {
+        let mut q: VecQueue<u32> = VecQueue::new();
+        assert!(q.is_empty());
+        q.reserve_total(8);
+        assert!(q.capacity() >= 8);
+        for i in 0..8 {
+            // SAFETY: reserved 8 above, pushing exactly 8
+            unsafe { q.push_unchecked(i) };
+        }
+        assert_eq!(q.len(), 8);
+        assert_eq!(q.as_slice(), &[0, 1, 2, 3, 4, 5, 6, 7]);
+        let cap = q.capacity();
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.capacity(), cap, "clear must keep the storage warm");
+    }
+
+    #[test]
+    fn vec_queue_reserve_total_counts_live_elements() {
+        let mut q: VecQueue<u8> = VecQueue::new();
+        q.reserve_total(4);
+        for _ in 0..4 {
+            unsafe { q.push_unchecked(7) };
+        }
+        // 4 live + room for 4 more
+        q.reserve_total(8);
+        assert!(q.capacity() >= 8);
+        for _ in 0..4 {
+            unsafe { q.push_unchecked(9) };
+        }
+        assert_eq!(q.len(), 8);
+    }
+
+    #[test]
+    fn arena_recycles_capacity() {
+        let mut a: Arena<u32> = Arena::new(2);
+        let mut b = a.take();
+        assert!(b.is_empty());
+        b.extend_from_slice(&[1, 2, 3]);
+        let cap = b.capacity();
+        a.give(b);
+        assert_eq!(a.pooled(), 1);
+        let b2 = a.take();
+        assert!(b2.is_empty(), "recycled buffers come back cleared");
+        assert_eq!(b2.capacity(), cap, "recycled buffers keep their storage");
+        assert_eq!(a.pooled(), 0);
+    }
+
+    #[test]
+    fn arena_bounds_the_pool() {
+        let mut a: Arena<u8> = Arena::new(1);
+        a.give(Vec::with_capacity(4));
+        a.give(Vec::with_capacity(4)); // over the cap: dropped
+        assert_eq!(a.pooled(), 1);
+        a.give(Vec::new()); // zero capacity: nothing worth caching
+        assert_eq!(a.pooled(), 1);
+    }
+
+    #[test]
+    fn counting_alloc_counters_are_monotonic() {
+        // the test binary may or may not have CountingAlloc installed as
+        // its global allocator; either way the counters must be readable
+        // and monotonic
+        let t0 = CountingAlloc::total_allocations();
+        let h0 = CountingAlloc::thread_allocations();
+        let v: Vec<u64> = (0..64).collect();
+        assert_eq!(v.len(), 64);
+        assert!(CountingAlloc::total_allocations() >= t0);
+        assert!(CountingAlloc::thread_allocations() >= h0);
+    }
+
+    #[test]
+    fn pin_to_core_is_best_effort() {
+        // must not crash anywhere; success is environment-dependent
+        // (cgroup CPU masks can exclude core 0), so only the contract
+        // "unsupported target ⇒ false" is asserted
+        let ok = pin_to_core(0);
+        if !pin_supported() {
+            assert!(!ok);
+        }
+        assert!(!pin_to_core(usize::MAX), "out-of-range core must fail");
+    }
+}

@@ -59,6 +59,21 @@ impl GreedyQueue {
         }
     }
 
+    /// Empty the queue over a (possibly resized) coordinate space
+    /// `0..n`, keeping every bucket's backing storage warm. Epoch rebases
+    /// refile the whole owned slice; building a fresh queue there would
+    /// put ~2k bucket allocations back into the streaming path that the
+    /// counting-allocator test asserts is allocation-free.
+    pub fn reset(&mut self, n: usize) {
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.filed.clear();
+        self.filed.resize(n, NONE);
+        self.top = 0;
+        self.len = 0;
+    }
+
     /// Coordinate capacity (the valid `t` range for `push`).
     pub fn capacity(&self) -> usize {
         self.filed.len()
@@ -236,6 +251,22 @@ mod tests {
         assert_eq!(q.pop_valid(|t| f[t]), Some(0));
         q.grow(3); // shrinking is a no-op
         assert_eq!(q.capacity(), 5);
+    }
+
+    #[test]
+    fn reset_empties_but_keeps_bucket_storage() {
+        let mut q = GreedyQueue::new(4);
+        for (t, v) in [(0usize, 0.9f64), (1, 0.4), (2, 0.1), (3, 0.05)] {
+            q.push(t, v);
+        }
+        assert_eq!(q.len(), 4);
+        q.reset(6);
+        assert!(q.is_empty());
+        assert_eq!(q.capacity(), 6);
+        let f = [0.0, 0.0, 0.0, 0.0, 0.7, 0.0];
+        assert_eq!(q.pop_valid(|t| f[t]), None, "reset must drop old entries");
+        q.push(4, 0.7);
+        assert_eq!(q.pop_valid(|t| f[t]), Some(4));
     }
 
     #[test]

@@ -10,15 +10,20 @@
 //! the last flush, so flushing is O(touched), not O(boundary), and
 //! produces flat **SoA parcels** `(coords: Vec<u32>, mass: Vec<f64>)` —
 //! the wire format of [`crate::coordinator::WorkerMsg::Fluid`]. The
-//! accumulator arrays themselves persist across flushes: only the
-//! outgoing parcel (which crosses a thread boundary and cannot be
-//! recycled) is allocated per message.
+//! accumulator arrays themselves persist across flushes, and parcels are
+//! backed by a [`crate::perf::Arena`]: a parcel must be *owned* (it
+//! crosses a thread boundary), but storage that comes back — a failed
+//! send re-routed by the worker ([`CoalesceBuffer::recycle`]), the
+//! internal clear/compact paths — is pooled and reused by the next flush
+//! instead of reallocated.
 //!
 //! The general keyed path (`add`) remains for cold routes — fluid
 //! re-forwarded after an ownership change, fostered coordinates — and
 //! interns on first sight.
 
 use std::collections::HashMap;
+
+use crate::perf::Arena;
 
 /// When to flush a destination's accumulated fluid.
 #[derive(Clone, Copy, Debug)]
@@ -79,11 +84,18 @@ impl DestAcc {
         }
     }
 
-    /// Drain touched slots into an SoA parcel; zero entries (exact
+    /// Drain touched slots into an SoA parcel built over the supplied
+    /// (cleared, possibly recycled) buffers; zero entries (exact
     /// cancellation) are dropped. Returns (coords, mass, Σ|mass|).
-    fn take(&mut self) -> (Vec<u32>, Vec<f64>, f64) {
-        let mut coords = Vec::with_capacity(self.touched.len());
-        let mut mass = Vec::with_capacity(self.touched.len());
+    fn take_into(
+        &mut self,
+        mut coords: Vec<u32>,
+        mut mass: Vec<f64>,
+    ) -> (Vec<u32>, Vec<f64>, f64) {
+        debug_assert!(coords.is_empty() && mass.is_empty());
+        // no-ops on a recycled buffer that has warmed past touched.len()
+        coords.reserve(self.touched.len());
+        mass.reserve(self.touched.len());
         let mut total = 0.0;
         for &s in &self.touched {
             let si = s as usize;
@@ -113,7 +125,17 @@ impl DestAcc {
 pub struct CoalesceBuffer {
     policy: CoalescePolicy,
     accs: Vec<DestAcc>,
+    /// recycled parcel storage (coords / mass columns); filled by
+    /// [`CoalesceBuffer::recycle`] and the internal clear/compact paths,
+    /// drained by every parcel build
+    coords_arena: Arena<u32>,
+    mass_arena: Arena<f64>,
 }
+
+/// Parcel buffers pooled per column kind. Successful sends never return
+/// their storage (it crosses a thread), so the pool only ever holds the
+/// cold-path returns — a handful suffices.
+const PARCEL_POOL: usize = 8;
 
 impl CoalesceBuffer {
     /// A buffer addressing `k` destinations under `policy` (the table
@@ -122,7 +144,19 @@ impl CoalesceBuffer {
         Self {
             policy,
             accs: (0..k).map(|_| DestAcc::default()).collect(),
+            coords_arena: Arena::new(PARCEL_POOL),
+            mass_arena: Arena::new(PARCEL_POOL),
         }
+    }
+
+    /// Return a parcel's backing storage (e.g. from a failed send whose
+    /// fluid was re-routed): the next flush builds over it instead of
+    /// allocating. Parcels that ship successfully cross a thread boundary
+    /// and never come back — the arena is a bounded cache, not an
+    /// accounting system.
+    pub fn recycle(&mut self, coords: Vec<u32>, mass: Vec<f64>) {
+        self.coords_arena.give(coords);
+        self.mass_arena.give(mass);
     }
 
     /// Extend the destination table to cover `dest` (elastic PID pools
@@ -176,8 +210,14 @@ impl CoalesceBuffer {
             {
                 continue;
             }
-            let (coords, mass, total) = a.take();
-            if !coords.is_empty() {
+            let (coords, mass, total) =
+                a.take_into(self.coords_arena.take(), self.mass_arena.take());
+            if coords.is_empty() {
+                // every touched entry cancelled exactly: no message, and
+                // the storage goes straight back to the pool
+                self.coords_arena.give(coords);
+                self.mass_arena.give(mass);
+            } else {
                 sink(d, coords, mass, total);
             }
         }
@@ -185,7 +225,9 @@ impl CoalesceBuffer {
 
     /// Take one destination's parcel unconditionally (tests/benches).
     pub fn take(&mut self, dest: usize) -> (Vec<u32>, Vec<f64>, f64) {
-        self.accs[dest].take()
+        let coords = self.coords_arena.take();
+        let mass = self.mass_arena.take();
+        self.accs[dest].take_into(coords, mass)
     }
 
     /// Discard everything buffered (epoch transitions: buffered outbound
@@ -193,7 +235,10 @@ impl CoalesceBuffer {
     /// survive — they stay valid for the patched [`crate::sparse::LocalSystem`].
     pub fn clear(&mut self) {
         for a in &mut self.accs {
-            let _ = a.take();
+            let (coords, mass, _) =
+                a.take_into(self.coords_arena.take(), self.mass_arena.take());
+            self.coords_arena.give(coords);
+            self.mass_arena.give(mass);
         }
     }
 
@@ -206,12 +251,15 @@ impl CoalesceBuffer {
     /// which re-interns the whole remnant anyway.
     pub fn compact(&mut self) {
         for a in &mut self.accs {
-            let (coords, mass, _) = a.take();
+            let (coords, mass, _) =
+                a.take_into(self.coords_arena.take(), self.mass_arena.take());
             *a = DestAcc::default();
             for (u, &c) in coords.iter().enumerate() {
                 let s = a.intern(c as usize);
                 a.add_slot(s, mass[u]);
             }
+            self.coords_arena.give(coords);
+            self.mass_arena.give(mass);
         }
     }
 
@@ -394,6 +442,26 @@ mod tests {
         c.compact();
         assert_eq!(c.dests(), 4);
         assert!((c.held_mass() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recycled_storage_backs_the_next_parcel() {
+        let mut c = CoalesceBuffer::new(1, CoalescePolicy::default());
+        for j in 0..64 {
+            c.add(0, j, 0.01);
+        }
+        let (coords, mass, _) = c.take(0);
+        let cap = coords.capacity();
+        assert!(cap >= 64);
+        c.recycle(coords, mass);
+        c.add(0, 3, 0.5);
+        let (coords, mass, total) = c.take(0);
+        assert!(
+            coords.capacity() >= cap,
+            "the next parcel must build over the recycled storage"
+        );
+        assert_eq!(zip(coords, mass), vec![(3, 0.5)]);
+        assert!((total - 0.5).abs() < 1e-12);
     }
 
     #[test]

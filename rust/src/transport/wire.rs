@@ -42,6 +42,7 @@ use super::{
 };
 use crate::error::{DiterError, Result};
 use crate::metrics::MetricSet;
+use crate::perf::Arena;
 use crate::prng::Xoshiro256pp;
 use crate::transport::AtomicF64;
 
@@ -358,6 +359,7 @@ impl<T: WireCodec + Send + 'static> WireHub<T> {
             latency: self.latency,
             rng: Xoshiro256pp::seed_from_u64(self.seed ^ (id as u64).wrapping_mul(0x9E3779B9)),
             local_commit: self.local_commit,
+            scratch: Arena::new(FRAME_POOL),
         })
     }
 
@@ -467,7 +469,15 @@ pub struct WireEndpoint<T: WireCodec> {
     latency: Option<(Duration, Duration)>,
     rng: Xoshiro256pp,
     local_commit: bool,
+    /// recycled frame/body buffers: the encoder takes one per
+    /// MSG/ACK/inbound frame and gives it back as soon as the bytes are
+    /// in a connection buffer, so steady-state framing allocates nothing
+    scratch: Arena<u8>,
 }
+
+/// Frame buffers pooled per endpoint — MSG body, ACK, and inbound frame
+/// all share the arena, and each is returned before the next is taken.
+const FRAME_POOL: usize = 4;
 
 impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
     /// The address this endpoint's listener is bound to (advertised to
@@ -545,7 +555,7 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
         }
         for ci in 0..self.conns.len() {
             loop {
-                let frame = {
+                let len = {
                     let c = &mut self.conns[ci];
                     if c.rbuf.len() < 4 {
                         break;
@@ -559,11 +569,16 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
                     if c.rbuf.len() < 4 + len {
                         break;
                     }
-                    let frame: Vec<u8> = c.rbuf[4..4 + len].to_vec();
-                    c.rbuf.drain(..4 + len);
-                    frame
+                    len
                 };
+                // copy out through a recycled buffer (dispatch needs &mut
+                // self, so the frame cannot stay borrowed from rbuf) —
+                // per-frame allocation becomes a per-frame arena cycle
+                let mut frame = self.scratch.take();
+                frame.extend_from_slice(&self.conns[ci].rbuf[4..4 + len]);
+                self.conns[ci].rbuf.drain(..4 + len);
                 self.dispatch(ci, &frame);
+                self.scratch.give(frame);
             }
         }
         // complete frames were already dispatched above, so a dead
@@ -719,7 +734,10 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
             return Err(payload);
         };
         let seq = self.next_seq;
-        let mut body = Vec::with_capacity(approx_bytes + 16);
+        // encode over a recycled buffer; returned to the arena once the
+        // bytes sit in the connection's write buffer
+        let mut body = self.scratch.take();
+        body.reserve(approx_bytes + 16);
         body.push(KIND_MSG);
         write_varint(&mut body, seq);
         write_f64(&mut body, mass);
@@ -737,6 +755,7 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
             // the fluid never left the caller, who re-routes it
             self.shared.inflight.add(-mass);
             self.shared.undelivered.fetch_sub(1, Ordering::AcqRel);
+            self.scratch.give(body);
             return Err(payload);
         }
         drop(d);
@@ -745,6 +764,7 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
         self.shared.retained.fetch_add(1, Ordering::Relaxed);
         self.shared.metrics.incr("msgs_sent");
         self.shared.metrics.add("bytes_sent", (body.len() + 4) as u64);
+        self.scratch.give(body);
         Ok(())
     }
 
@@ -776,7 +796,7 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
             self.shared.inflight.add(-mass);
             self.shared.undelivered.fetch_sub(1, Ordering::AcqRel);
         }
-        let mut ack = Vec::with_capacity(11);
+        let mut ack = self.scratch.take();
         ack.push(KIND_ACK);
         write_varint(&mut ack, seq);
         if let Some(ci) = self.conns.iter().position(|c| c.alive && c.peer == Some(from)) {
@@ -795,6 +815,7 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
                 }
             }
         }
+        self.scratch.give(ack);
         self.shared.metrics.incr("acks");
     }
 

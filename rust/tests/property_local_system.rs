@@ -114,6 +114,65 @@ fn assert_diffusions_match(csc: &CscMatrix, part: &Partition, fi: f64) {
     }
 }
 
+/// The blocked kernel's 4-wide unrolled column walk (`chunks_exact(4)` +
+/// remainder), mirrored exactly: same visit order, same multiply, same
+/// accumulation target per entry.
+fn diffuse_local_unrolled(sys: &LocalSystem, m: usize, t: usize, fi: f64) -> Vec<f64> {
+    let mut f = vec![0.0; m];
+    let (rows, vals) = sys.block_col(t);
+    let mut rc = rows.chunks_exact(4);
+    let mut vc = vals.chunks_exact(4);
+    for (r4, v4) in (&mut rc).zip(&mut vc) {
+        f[r4[0] as usize] += v4[0] * fi;
+        f[r4[1] as usize] += v4[1] * fi;
+        f[r4[2] as usize] += v4[2] * fi;
+        f[r4[3] as usize] += v4[3] * fi;
+    }
+    for (&r, &v) in rc.remainder().iter().zip(vc.remainder()) {
+        f[r as usize] += v * fi;
+    }
+    f
+}
+
+#[test]
+fn unrolled_block_walk_is_bit_identical_to_the_scalar_walk() {
+    // two invariants the blocked kernel's unroll rests on, over random
+    // partitions: (1) a block column never repeats a local row — so the
+    // four accumulations per step cannot alias, and reordering them could
+    // never change a sum; (2) the unrolled walk produces bit-identical f
+    // to the scalar walk (not merely ≈: same entries, same order, same
+    // one-add-per-slot)
+    run_cases(40, 0xB10CED, |g| {
+        let n = g.usize_in(4, 48);
+        let k = g.usize_in(2, n.min(6));
+        let m = g.contraction_matrix(n, 4, 0.9);
+        let sparse = SparseMatrix::from_csr(m);
+        let part = random_partition(g, n, k);
+        let fi = g.f64_in(0.1, 2.0);
+        for pid in 0..part.k() {
+            let (owned, _, sys, it) = build_for_pid(sparse.csc(), &part, pid);
+            for t in 0..owned.len() {
+                let (rows, _) = sys.block_col(t);
+                let mut seen = vec![false; owned.len()];
+                for &r in rows {
+                    assert!(
+                        !seen[r as usize],
+                        "block column {t} (pid {pid}) repeats local row {r} — \
+                         the 4-wide unroll would alias"
+                    );
+                    seen[r as usize] = true;
+                }
+                let scalar = diffuse_local(&sys, &it, part.k(), owned.len(), t, fi).0;
+                let unrolled = diffuse_local_unrolled(&sys, owned.len(), t, fi);
+                assert!(
+                    scalar.iter().zip(&unrolled).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "unrolled walk diverged from the scalar walk (pid {pid}, slot {t})"
+                );
+            }
+        }
+    });
+}
+
 fn random_partition(g: &mut Gen, n: usize, k: usize) -> Partition {
     // random owner map with a guaranteed non-empty part for every PID
     let mut owner: Vec<usize> = (0..n).map(|i| i % k).collect();

@@ -1,6 +1,6 @@
 //! Deterministic cross-protocol scenario matrix:
-//! {churn: grow | rewire | hotspot} × {kernel: local | global} ×
-//! {rebase: local | gather} × {elastic on | off} × {latency on | off}.
+//! {churn: grow | rewire | hotspot} × {kernel: local | blocked | global}
+//! × {rebase: local | gather} × {elastic on | off} × {latency on | off}.
 //!
 //! Every cell runs the streaming engine through seeded mutation epochs
 //! and asserts the two invariants the whole system rests on — exact
@@ -134,13 +134,17 @@ fn record_failures(failures: &[String]) {
     }
 }
 
-/// Run all 16 {kernel × rebase × elastic × latency} cells of one churn
+/// Run all 24 {kernel × rebase × elastic × latency} cells of one churn
 /// model, collecting every failure (not just the first) so one CI run
 /// reports the whole failing set by name.
 fn run_grid(model: ChurnModel, base_seed: u64) {
     let mut failures: Vec<String> = Vec::new();
     let mut idx = 0u64;
-    for kernel in [KernelKind::LocalBlock, KernelKind::GlobalWalk] {
+    for kernel in [
+        KernelKind::LocalBlock,
+        KernelKind::Blocked,
+        KernelKind::GlobalWalk,
+    ] {
         for rebase in [RebaseMode::Local, RebaseMode::Gather] {
             for elastic in [false, true] {
                 for latency in [false, true] {

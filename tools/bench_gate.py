@@ -24,6 +24,19 @@ Compares a fresh bench artifact against its committed baseline and fails
         1.0 — elastic slower than fixed-K is a correctness-grade
         regression of the pool scheduler, whatever the baseline says.
 
+  * --kind hotpath — `benches/hotpath.rs`:
+      - blocked_vs_local_speedup: the blocked / local-block kernel
+        diffusions/sec ratio, same-binary same-machine; once a measured
+        baseline lands it must stay above 1.0 — the batched, unrolled
+        kernel existing *and being slower* than the kernel it batches is
+        a hot-loop regression, whatever the baseline ratio says.
+      - local_vs_global_speedup: ratio floor against the baseline, as
+        in --kind stream.
+      - blocked allocs_per_kupdate: only enforced same-environment, and
+        only as a floor-style regression bound — allocator traffic in
+        the hot loop creeping back up is exactly what this bench exists
+        to catch.
+
 A baseline with "measured": false is a bootstrap placeholder (the perf
 trajectory has not recorded its first real run yet): the gate prints the
 fresh numbers and exits 0 so the first CI run can seed the baseline from
@@ -110,11 +123,53 @@ def gate_elastic(base, cur, args, failures):
                args.max_regress)
 
 
+def gate_hotpath(base, cur, args, failures):
+    tol = 1.0 - args.max_regress
+    cur_blocked = cur.get("blocked_vs_local_speedup")
+    cur_lvg = cur.get("local_vs_global_speedup")
+    cur_allocs = (cur.get("blocked") or {}).get("allocs_per_kupdate")
+    print(f"current: blocked_vs_local={fmt(cur_blocked, '.2f')}x  "
+          f"local_vs_global={fmt(cur_lvg, '.2f')}x  "
+          f"blocked allocs/kupd={fmt(cur_allocs, '.2f')}  "
+          f"env={cur.get('environment')}")
+    if not base.get("measured", False):
+        print("baseline is a bootstrap placeholder (measured=false): gate passes; "
+              "seed it from this run's uploaded artifact to arm the gate.")
+        return
+    # the blocked kernel must beat the kernel it batches, full stop —
+    # a <= 1.0 ratio means the unrolled/journaled path is pure overhead
+    if not isinstance(cur_blocked, (int, float)) or cur_blocked <= 1.0:
+        failures.append(
+            f"blocked_vs_local_speedup {fmt(cur_blocked, '.2f')}x <= 1.0: the "
+            "blocked kernel no longer beats the local-block kernel it batches")
+    gate_ratio(failures, "blocked_vs_local_speedup",
+               base.get("blocked_vs_local_speedup"), cur_blocked, tol,
+               args.max_regress)
+    gate_ratio(failures, "local_vs_global_speedup",
+               base.get("local_vs_global_speedup"), cur_lvg, tol,
+               args.max_regress)
+    base_allocs = (base.get("blocked") or {}).get("allocs_per_kupdate")
+    if isinstance(base_allocs, (int, float)) and \
+            base.get("environment") == cur.get("environment"):
+        ceiling = base_allocs * (1.0 + args.max_regress) + 1.0
+        print(f"baseline blocked allocs/kupd={base_allocs:.2f}  "
+              f"(ceiling {ceiling:.2f}, same env)")
+        if not isinstance(cur_allocs, (int, float)) or cur_allocs > ceiling:
+            failures.append(
+                f"blocked allocs_per_kupdate regressed: {cur_allocs} > "
+                f"{ceiling:.2f} (baseline {base_allocs:.2f}) — allocator "
+                "traffic is creeping back into the hot loop")
+    elif isinstance(base_allocs, (int, float)):
+        print("baseline recorded in a different environment: allocs/kupd "
+              "not enforced (ratio gates above still apply)")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True, help="committed BENCH_*.json")
     ap.add_argument("--current", required=True, help="freshly produced BENCH_*.json")
-    ap.add_argument("--kind", choices=["stream", "elastic"], default="stream",
+    ap.add_argument("--kind", choices=["stream", "elastic", "hotpath"],
+                    default="stream",
                     help="which bench artifact schema to gate (default stream)")
     ap.add_argument("--max-regress", type=float, default=0.20,
                     help="allowed fractional regression (default 0.20)")
@@ -125,6 +180,8 @@ def main():
     failures = []
     if args.kind == "elastic":
         gate_elastic(base, cur, args, failures)
+    elif args.kind == "hotpath":
+        gate_hotpath(base, cur, args, failures)
     else:
         gate_stream(base, cur, args, failures)
 
