@@ -1,0 +1,227 @@
+//! Perf bench: the TCP wire transport's zero-copy fast path
+//! (DESIGN.md §8.8) over loopback sockets.
+//!
+//!  * parcel throughput per parcel size (16 / 256 / 4096 coordinates):
+//!    parcels/sec and payload bytes/sec through the full cycle — pooled
+//!    encode, vectored flush, ring read, in-place pooled decode, commit,
+//!    ACK
+//!  * syscall batching: writev calls per 1 000 parcels (hub-wide, both
+//!    directions — smaller is better)
+//!  * allocator traffic: heap allocations per parcel in steady state,
+//!    from the installed [`CountingAlloc`] (the §8.8 target is 0)
+//!  * batched vs unbatched: the same traffic under the default
+//!    [`FlushPolicy`] vs a flush-per-frame policy (`max_frames = 1`),
+//!    i.e. the PR 6 behaviour — the speedup the batching fast path buys
+//!
+//! Emits `BENCH_wire.json` into `DITER_BENCH_JSON_DIR` (default `.`).
+//! The committed copy at the repo root is the baseline
+//! `tools/bench_gate.py --kind wire` compares against. Env knobs:
+//! `DITER_BENCH_ENV` (recorded measurement environment),
+//! `DITER_BENCH_WIRE_HOPS` (measured parcel hops per configuration).
+
+use std::time::{Duration, Instant};
+
+use diter::bench_harness::{bench_header, bench_json_dir, fmt_secs, Json, Table};
+use diter::coordinator::WorkerMsg;
+use diter::perf::CountingAlloc;
+use diter::transport::{
+    BusConfig, FlushPolicy, Received, Transport, WireEndpoint, WireHub,
+};
+
+// Count every heap allocation the bench makes — allocs/parcel turns the
+// "steady-state wire traffic is allocation-free" claim into a number.
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+/// Parcels kept circulating between the two endpoints — enough to keep
+/// frames queued at every flush decision without overrunning the pools.
+const PARCELS: usize = 8;
+
+/// One configuration's steady-state run.
+struct WireRun {
+    coords: usize,
+    parcels: u64,
+    wall_secs: f64,
+    bytes: u64,
+    writev_calls: u64,
+    allocations: u64,
+}
+
+impl WireRun {
+    fn parcels_per_sec(&self) -> f64 {
+        self.parcels as f64 / self.wall_secs.max(1e-9)
+    }
+
+    fn bytes_per_sec(&self) -> f64 {
+        self.bytes as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// Vectored-write syscalls per 1 000 parcel hops, hub-wide (data
+    /// frames and ACKs, both directions). Perfect batching drives this
+    /// far below 2 000 (one data write + one ACK write per hop).
+    fn syscalls_per_kparcel(&self) -> f64 {
+        self.writev_calls as f64 * 1e3 / self.parcels.max(1) as f64
+    }
+
+    fn allocs_per_parcel(&self) -> f64 {
+        self.allocations as f64 / self.parcels.max(1) as f64
+    }
+
+    fn to_json(&self) -> Json {
+        Json::new()
+            .int_field("coords", self.coords as u64)
+            .int_field("parcels", self.parcels)
+            .num_field("wall_secs", self.wall_secs)
+            .num_field("parcels_per_sec", self.parcels_per_sec())
+            .num_field("bytes_per_sec", self.bytes_per_sec())
+            .num_field("syscalls_per_kparcel", self.syscalls_per_kparcel())
+            .int_field("allocations", self.allocations)
+            .num_field("allocs_per_parcel", self.allocs_per_parcel())
+    }
+}
+
+/// Drain everything ripe at `e`, commit, echo the payload back — the
+/// received columns flow straight back out through the pooled encode.
+fn bounce(e: &mut WireEndpoint<WorkerMsg>, dest: usize, approx: usize) -> usize {
+    let mut moved = 0;
+    while let Some(Received {
+        from,
+        seq,
+        mass,
+        payload,
+    }) = e.try_recv_uncommitted()
+    {
+        e.commit(from, seq, mass);
+        Transport::send(e, dest, payload, mass, approx).expect("echo");
+        moved += 1;
+    }
+    e.flush();
+    e.collect_acks();
+    moved
+}
+
+/// Circulate `PARCELS` parcels of `coords` coordinates under `policy`:
+/// warm every pool to its high-water mark, then measure `hops` hops.
+fn run_wire(coords: usize, policy: FlushPolicy, warm_hops: usize, hops: usize) -> WireRun {
+    let cfg = BusConfig {
+        flush: policy,
+        ..BusConfig::default()
+    };
+    let hub = WireHub::<WorkerMsg>::loopback(&cfg, &[]);
+    let mut a = hub.add_endpoint(0).expect("endpoint 0");
+    let mut b = hub.add_endpoint(1).expect("endpoint 1");
+    for s in 0..PARCELS {
+        let parcel = WorkerMsg::Fluid {
+            epoch: 1,
+            coords: (0..coords as u32).map(|i| i * 3 + s as u32).collect(),
+            mass: (0..coords).map(|i| 1.0 / (coords * (i + 1)) as f64).collect(),
+        };
+        Transport::send(&mut a, 1, parcel, 1.0, coords).expect("prime send");
+    }
+    a.flush();
+
+    let spin = |a: &mut WireEndpoint<WorkerMsg>, b: &mut WireEndpoint<WorkerMsg>, goal: usize| {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        let mut moved = 0;
+        while moved < goal {
+            let m = bounce(a, 1, coords) + bounce(b, 0, coords);
+            moved += m;
+            if m == 0 {
+                assert!(Instant::now() < deadline, "wire bench stalled at {moved} hops");
+                std::thread::yield_now();
+            }
+        }
+        moved
+    };
+    spin(&mut a, &mut b, warm_hops);
+
+    let metrics = a.metrics();
+    let bytes0 = metrics.get("wire_bytes_sent");
+    let writev0 = metrics.get("wire_writev_calls");
+    let a0 = CountingAlloc::thread_allocations();
+    let t0 = Instant::now();
+    let moved = spin(&mut a, &mut b, hops);
+    let wall_secs = t0.elapsed().as_secs_f64();
+    WireRun {
+        coords,
+        parcels: moved as u64,
+        wall_secs,
+        bytes: metrics.get("wire_bytes_sent") - bytes0,
+        writev_calls: metrics.get("wire_writev_calls") - writev0,
+        allocations: CountingAlloc::thread_allocations() - a0,
+    }
+}
+
+fn main() {
+    bench_header("wire", "TCP wire transport zero-copy fast path");
+    let bench_env = std::env::var("DITER_BENCH_ENV").unwrap_or_else(|_| "local".into());
+    let hops: usize = std::env::var("DITER_BENCH_WIRE_HOPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20_000);
+
+    let mut table = Table::new(&[
+        "config",
+        "parcels/s",
+        "MB/s",
+        "syscalls/kparcel",
+        "allocs/parcel",
+        "wall",
+    ]);
+    let mut row = |name: &str, r: &WireRun| {
+        table.row(&[
+            name.into(),
+            format!("{:.2e}", r.parcels_per_sec()),
+            format!("{:.1}", r.bytes_per_sec() / 1e6),
+            format!("{:.1}", r.syscalls_per_kparcel()),
+            format!("{:.3}", r.allocs_per_parcel()),
+            fmt_secs(r.wall_secs),
+        ]);
+    };
+
+    // --- throughput per parcel size, default (batched) policy -----------
+    let warm = (hops / 10).max(500);
+    let small = run_wire(16, FlushPolicy::default(), warm, hops);
+    row("batched, 16 coords", &small);
+    let medium = run_wire(256, FlushPolicy::default(), warm, hops);
+    row("batched, 256 coords", &medium);
+    let large = run_wire(4096, FlushPolicy::default(), warm, hops / 4);
+    row("batched, 4096 coords", &large);
+
+    // --- batched vs unbatched (flush-per-frame, the PR 6 behaviour) -----
+    let unbatched = run_wire(
+        256,
+        FlushPolicy {
+            max_bytes: 1,
+            max_frames: 1,
+            deadline: Duration::ZERO,
+        },
+        warm,
+        hops,
+    );
+    row("unbatched, 256 coords", &unbatched);
+    let speedup = medium.parcels_per_sec() / unbatched.parcels_per_sec().max(1e-9);
+    print!("{}", table.render());
+    println!(
+        "\nbatched vs unbatched: {speedup:.2}x parcels/sec \
+         ({:.1} vs {:.1} syscalls/kparcel, 256-coord parcels)",
+        medium.syscalls_per_kparcel(),
+        unbatched.syscalls_per_kparcel()
+    );
+
+    let json = Json::new()
+        .int_field("schema", 1)
+        .str_field("bench", "wire")
+        .bool_field("measured", true)
+        .str_field("environment", &bench_env)
+        .int_field("parcels_in_flight", PARCELS as u64)
+        .int_field("hops", hops as u64)
+        .obj_field("small", small.to_json())
+        .obj_field("batched", medium.to_json())
+        .obj_field("large", large.to_json())
+        .obj_field("unbatched", unbatched.to_json())
+        .num_field("batched_vs_unbatched_speedup", speedup);
+    let path = bench_json_dir().join("BENCH_wire.json");
+    json.write(&path).expect("write BENCH_wire.json");
+    println!("wrote {}", path.display());
+}

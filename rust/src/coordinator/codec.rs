@@ -19,8 +19,9 @@
 use crate::coordinator::worker::{Handoff, WorkerMsg};
 use crate::error::Result;
 use crate::transport::wire::{
-    corrupt, read_deltas, read_f64_slice, read_varint, write_deltas, write_f64_slice,
-    write_varint, WireCodec,
+    corrupt, read_deltas, read_deltas_u32_into, read_deltas_usize_into, read_f64_slice,
+    read_f64_slice_into, read_varint, write_deltas, write_f64_slice, write_varint, ColumnPools,
+    WireCodec,
 };
 
 /// Payload tag of [`WorkerMsg::Fluid`].
@@ -134,6 +135,112 @@ impl WireCodec for WorkerMsg {
         }
         Ok(msg)
     }
+
+    /// [`WireCodec::decode`] with every column vector drawn from `pools`
+    /// instead of the allocator — the wire receive path's steady state.
+    /// Decodes exactly the same values as `decode` (the codec tests pin
+    /// the equivalence); on any decode error the storage taken so far
+    /// goes straight back to the pools.
+    fn decode_pooled(buf: &[u8], pools: &mut ColumnPools) -> Result<WorkerMsg> {
+        let Some(&tag) = buf.first() else {
+            return Err(corrupt("empty payload"));
+        };
+        let mut pos = 1;
+        let msg = match tag {
+            TAG_FLUID => {
+                let epoch = read_varint(buf, &mut pos)?;
+                let count = read_varint(buf, &mut pos)? as usize;
+                let mut coords = pools.u32s.take();
+                let mut mass = pools.f64s.take();
+                let cols = read_deltas_u32_into(buf, &mut pos, count, &mut coords)
+                    .and_then(|()| read_f64_slice_into(buf, &mut pos, count, &mut mass));
+                if let Err(e) = cols {
+                    pools.u32s.give(coords);
+                    pools.f64s.give(mass);
+                    return Err(e);
+                }
+                WorkerMsg::Fluid {
+                    epoch,
+                    coords,
+                    mass,
+                }
+            }
+            TAG_HANDOFF => {
+                let pid_from = read_varint(buf, &mut pos)? as usize;
+                let pid_to = read_varint(buf, &mut pos)? as usize;
+                let version = read_varint(buf, &mut pos)?;
+                let epoch = read_varint(buf, &mut pos)?;
+                let count = read_varint(buf, &mut pos)? as usize;
+                let mut coords = pools.usizes.take();
+                let mut h_slice = pools.f64s.take();
+                let mut b_slice = pools.f64s.take();
+                let mut f_slice = pools.f64s.take();
+                let cols = read_deltas_usize_into(buf, &mut pos, count, &mut coords)
+                    .and_then(|()| read_f64_slice_into(buf, &mut pos, count, &mut h_slice))
+                    .and_then(|()| read_f64_slice_into(buf, &mut pos, count, &mut b_slice))
+                    .and_then(|()| read_f64_slice_into(buf, &mut pos, count, &mut f_slice));
+                if let Err(e) = cols {
+                    pools.usizes.give(coords);
+                    pools.f64s.give(h_slice);
+                    pools.f64s.give(b_slice);
+                    pools.f64s.give(f_slice);
+                    return Err(e);
+                }
+                WorkerMsg::Handoff(Handoff {
+                    pid_from,
+                    pid_to,
+                    version,
+                    epoch,
+                    coords,
+                    h_slice,
+                    b_slice,
+                    f_slice,
+                })
+            }
+            TAG_HALO => {
+                let epoch = read_varint(buf, &mut pos)?;
+                let count = read_varint(buf, &mut pos)? as usize;
+                let mut coords = pools.u32s.take();
+                let mut h = pools.f64s.take();
+                let cols = read_deltas_u32_into(buf, &mut pos, count, &mut coords)
+                    .and_then(|()| read_f64_slice_into(buf, &mut pos, count, &mut h));
+                if let Err(e) = cols {
+                    pools.u32s.give(coords);
+                    pools.f64s.give(h);
+                    return Err(e);
+                }
+                WorkerMsg::HaloSlice { epoch, coords, h }
+            }
+            other => return Err(corrupt(&format!("unknown payload tag {other:#04x}"))),
+        };
+        if pos != buf.len() {
+            msg.reclaim(pools);
+            return Err(corrupt("trailing bytes after payload"));
+        }
+        Ok(msg)
+    }
+
+    /// Return every column vector to `pools` — called by the wire send
+    /// path after the payload has been encoded into its frame, closing
+    /// the storage cycle (decode → worker → coalesce → encode → pools).
+    fn reclaim(self, pools: &mut ColumnPools) {
+        match self {
+            WorkerMsg::Fluid { coords, mass, .. } => {
+                pools.u32s.give(coords);
+                pools.f64s.give(mass);
+            }
+            WorkerMsg::Handoff(ho) => {
+                pools.usizes.give(ho.coords);
+                pools.f64s.give(ho.h_slice);
+                pools.f64s.give(ho.b_slice);
+                pools.f64s.give(ho.f_slice);
+            }
+            WorkerMsg::HaloSlice { coords, h, .. } => {
+                pools.u32s.give(coords);
+                pools.f64s.give(h);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +296,67 @@ mod tests {
             h: vec![0.75, 0.125],
         };
         assert_eq!(round_trip(&msg), msg);
+    }
+
+    #[test]
+    fn pooled_decode_matches_plain_decode() {
+        let msgs = [
+            WorkerMsg::Fluid {
+                epoch: 3,
+                coords: vec![1, 5, 6, 900],
+                mass: vec![0.25, -0.5, 1e-17, 3.75],
+            },
+            WorkerMsg::Handoff(Handoff {
+                pid_from: 2,
+                pid_to: 0,
+                version: 7,
+                epoch: 4,
+                coords: vec![10, 11, 12],
+                h_slice: vec![0.1, 0.2, 0.3],
+                b_slice: vec![1.0, 0.0, -1.0],
+                f_slice: vec![1e-9, 0.5, 0.0],
+            }),
+            WorkerMsg::HaloSlice {
+                epoch: 9,
+                coords: vec![0, 219],
+                h: vec![0.75, 0.125],
+            },
+        ];
+        let mut pools = ColumnPools::new(8);
+        for msg in &msgs {
+            let mut buf = Vec::new();
+            msg.encode(&mut buf);
+            // repeat so the second pass decodes into recycled storage
+            for _ in 0..2 {
+                let pooled = WorkerMsg::decode_pooled(&buf, &mut pools).unwrap();
+                assert_eq!(&pooled, msg);
+                pooled.reclaim(&mut pools);
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_decode_rejects_what_plain_decode_rejects() {
+        let msg = WorkerMsg::Fluid {
+            epoch: 1,
+            coords: vec![4, 8],
+            mass: vec![0.5, 0.5],
+        };
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        let mut pools = ColumnPools::new(8);
+        for cut in 0..buf.len() {
+            assert!(
+                WorkerMsg::decode_pooled(&buf[..cut], &mut pools).is_err(),
+                "cut at {cut}"
+            );
+        }
+        let mut longer = buf.clone();
+        longer.push(0);
+        assert!(WorkerMsg::decode_pooled(&longer, &mut pools).is_err());
+        // and the pools still hand out working storage afterwards
+        let ok = WorkerMsg::decode_pooled(&buf, &mut pools).unwrap();
+        assert_eq!(ok, msg);
     }
 
     #[test]

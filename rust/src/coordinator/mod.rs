@@ -56,7 +56,7 @@ use std::time::Duration;
 use crate::metrics::ConvergenceTrace;
 use crate::partition::Partition;
 use crate::solver::SequenceKind;
-use crate::transport::CoalescePolicy;
+use crate::transport::{CoalescePolicy, FlushPolicy};
 pub use crate::transport::TransportKind;
 
 /// Which inner diffusion kernel the worker core runs. The default is the
@@ -192,6 +192,9 @@ pub struct DistributedConfig {
     /// environment variable so the whole test-suite can be re-run over
     /// the wire without touching a line of it.
     pub transport: TransportKind,
+    /// when the wire transport flushes queued frames to the sockets
+    /// (`--wire-flush-bytes/-frames/-us`; ignored by the in-process bus)
+    pub wire_flush: FlushPolicy,
     /// opt-in Linux core pinning for pool-spawned workers (`--pin-cores`
     /// CLI flag; defaults from `DITER_PIN=1`): each worker thread pins
     /// itself to core `pid % available_parallelism` via a raw
@@ -229,6 +232,7 @@ impl DistributedConfig {
             kernel: KernelKind::default(),
             rebase: RebaseMode::default(),
             transport: TransportKind::from_env(),
+            wire_flush: FlushPolicy::default(),
             pin_cores: std::env::var("DITER_PIN")
                 .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
                 .unwrap_or(false),
@@ -247,6 +251,11 @@ impl DistributedConfig {
 
     pub fn with_transport(mut self, transport: TransportKind) -> Self {
         self.transport = transport;
+        self
+    }
+
+    pub fn with_wire_flush(mut self, flush: FlushPolicy) -> Self {
+        self.wire_flush = flush;
         self
     }
 

@@ -223,6 +223,7 @@ impl WorkerPool {
             &BusConfig {
                 latency: cfg.latency,
                 seed: cfg.seed,
+                flush: cfg.wire_flush,
             },
             &names,
         )?;

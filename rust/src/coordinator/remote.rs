@@ -550,6 +550,7 @@ pub fn run_worker(connect: &str, bind_ip: IpAddr) -> Result<()> {
         &BusConfig {
             latency: None,
             seed: params.seed,
+            flush: cfg.wire_flush,
         },
         WORKER_METRICS,
     );

@@ -74,6 +74,7 @@ pub fn solve_v1(
         &BusConfig {
             latency: cfg.latency,
             seed: cfg.seed,
+            flush: cfg.wire_flush,
         },
     );
     let bus_mon = monitor_of(&endpoints[0]);

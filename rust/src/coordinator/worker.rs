@@ -674,9 +674,14 @@ impl WorkerCore {
                     if self.cfg.rebase == RebaseMode::Local || epoch == self.epoch {
                         got |= self.apply_parcels(&coords, &amounts);
                         to_commit.push((from, seq, mass));
+                        // applied: the parcel's column storage backs the
+                        // next outbound flush (wire decode → coalesce →
+                        // wire encode, a closed allocation-free cycle)
+                        self.coalesce.recycle(coords, amounts);
                     } else if epoch < self.epoch {
                         // obsolete epoch: discard, release its accounting
                         to_commit.push((from, seq, mass));
+                        self.coalesce.recycle(coords, amounts);
                     } else {
                         self.pending.push(Received {
                             from,
@@ -1050,6 +1055,12 @@ impl WorkerCore {
                 }
             }
         });
+        if flush_all {
+            // a full flush is a latency-sensitive moment (threshold
+            // crossing or local drain): push the queued frames to the
+            // network now instead of waiting out the wire flush policy
+            self.ep.flush();
+        }
         if failed.is_empty() {
             return;
         }
@@ -1142,9 +1153,11 @@ impl WorkerCore {
                 WorkerMsg::Fluid { epoch: e, coords, mass: amounts } if e == self.epoch => {
                     self.apply_parcels(&coords, &amounts);
                     to_commit.push((from, seq, mass));
+                    self.coalesce.recycle(coords, amounts);
                 }
-                WorkerMsg::Fluid { epoch: e, .. } if e < self.epoch => {
+                WorkerMsg::Fluid { epoch: e, coords, mass: amounts } if e < self.epoch => {
                     to_commit.push((from, seq, mass));
+                    self.coalesce.recycle(coords, amounts);
                 }
                 payload => self.pending.push(Received {
                     from,
@@ -1158,6 +1171,9 @@ impl WorkerCore {
         for (from, seq, mass) in to_commit {
             self.ep.commit(from, seq, mass);
         }
+        // epoch entry is a latency-sensitive edge: senders may be waiting
+        // on the receipts just committed
+        self.ep.flush();
     }
 
     /// Begin a V1-style **local** epoch transition (`RebaseMode::Local`,
@@ -1237,6 +1253,9 @@ impl WorkerCore {
             );
             self.metrics.add("halo_slices_sent", sent as u64);
             self.metrics.add("halo_values_sent", sent as u64 * n_vals);
+            // peers block their own epoch entry on these slices: bypass
+            // the wire flush policy rather than batch them
+            self.ep.flush();
         }
         let mut pending = LocalRebase {
             epoch,
@@ -1388,8 +1407,14 @@ impl WorkerCore {
                         // local protocol: every epoch's fluid is live
                         self.apply_parcels(&coords, &amounts);
                         touched = true;
+                        self.coalesce.recycle(coords, amounts);
                     }
-                    WorkerMsg::Fluid { .. } => {} // obsolete epoch: discard
+                    // obsolete epoch: discard, keep the storage
+                    WorkerMsg::Fluid {
+                        coords,
+                        mass: amounts,
+                        ..
+                    } => self.coalesce.recycle(coords, amounts),
                     // a halo slice is state-plane; no transition can be in
                     // flight once the pool is shutting down (the engine's
                     // rebase holds the table frozen until every worker
@@ -1406,6 +1431,9 @@ impl WorkerCore {
                 self.flush_coalesce(true);
                 self.publish();
             }
+            // the receipts just committed may be queued behind the wire
+            // flush policy; senders are waiting on them to release mass
+            self.ep.flush();
             self.ep.collect_acks();
             let now = Instant::now();
             let quiesced =

@@ -34,6 +34,7 @@ use diter::solver::{
     SolveOptions, Solver,
 };
 use diter::sparse::SparseMatrix;
+use diter::transport::FlushPolicy;
 
 /// CLI-level result: any error renders through Display and exits non-zero.
 type CliResult<T = ()> = Result<T, Box<dyn std::error::Error>>;
@@ -480,6 +481,24 @@ fn stream_spec() -> Vec<OptSpec> {
             default: None,
         },
         OptSpec {
+            name: "wire-flush-bytes",
+            help: "wire transport: flush a connection once this many bytes are queued",
+            is_flag: false,
+            default: Some("65536"),
+        },
+        OptSpec {
+            name: "wire-flush-frames",
+            help: "wire transport: flush a connection once this many frames are queued",
+            is_flag: false,
+            default: Some("64"),
+        },
+        OptSpec {
+            name: "wire-flush-us",
+            help: "wire transport: flush deadline in microseconds (staleness bound)",
+            is_flag: false,
+            default: Some("1000"),
+        },
+        OptSpec {
             name: "listen",
             help: "coordinator role: accept --pids worker processes on ADDR (one-shot remote solve)",
             is_flag: false,
@@ -566,6 +585,11 @@ fn cmd_stream(argv: &[String]) -> CliResult {
         }
         None => TransportKind::from_env(),
     };
+    let wire_flush = FlushPolicy {
+        max_bytes: args.get_usize("wire-flush-bytes", 64 * 1024)?,
+        max_frames: args.get_usize("wire-flush-frames", 64)?,
+        deadline: Duration::from_micros(args.get_u64("wire-flush-us", 1000)?),
+    };
 
     // seed graph uses ~90% of the capacity so the growth model has room
     let seed_nodes = if matches!(model, ChurnModel::PreferentialGrowth { .. }) {
@@ -589,7 +613,8 @@ fn cmd_stream(argv: &[String]) -> CliResult {
         .with_sequence(SequenceKind::GreedyMaxFluid)
         .with_kernel(kernel)
         .with_rebase(rebase)
-        .with_transport(transport);
+        .with_transport(transport)
+        .with_wire_flush(wire_flush);
     if args.has_flag("pin-cores") {
         cfg = cfg.with_pin_cores(true);
     }

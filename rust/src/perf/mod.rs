@@ -17,9 +17,10 @@
 //!   and the hotpath bench to *assert* the zero-allocation claim instead
 //!   of trusting it.
 //!
-//! [`pin_to_core`] rounds the module out: opt-in Linux core pinning for
-//! pool-spawned workers (`--pin-cores` / `DITER_PIN=1`), a raw
-//! `sched_setaffinity` syscall so the zero-dependency policy holds.
+//! [`pin_to_core`] and [`writev`] round the module out: opt-in Linux core
+//! pinning for pool-spawned workers (`--pin-cores` / `DITER_PIN=1`) and a
+//! vectored-write syscall for the wire transport's batched frame flush —
+//! both raw syscalls so the zero-dependency policy holds.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
@@ -303,6 +304,82 @@ unsafe fn sched_setaffinity_raw(pid: i64, size: usize, mask: *const u64) -> i64 
     ret
 }
 
+// ---------------------------------------------------------------------------
+// Vectored writes: raw writev, zero dependencies
+
+/// Whether [`writev`] uses the raw `writev(2)` syscall on this target
+/// (elsewhere it is not compiled; callers fall back to
+/// `Write::write_vectored`, which issues one `write` per call on most
+/// std implementations for `TcpStream`).
+pub const fn writev_supported() -> bool {
+    cfg!(all(
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))
+}
+
+/// Gather-write `bufs` to `fd` with a single `writev(2)` syscall (raw —
+/// the crate has no libc dependency). Returns the number of bytes
+/// written, which may cover only a prefix of the slices (short write);
+/// the caller advances its queue and retries, exactly as with `write`.
+/// `std::io::IoSlice` is guaranteed ABI-compatible with `struct iovec`,
+/// so the slice pointer is passed straight to the kernel.
+///
+/// Errors map from the raw `-errno` return: `EAGAIN`/`EWOULDBLOCK`
+/// surfaces as [`std::io::ErrorKind::WouldBlock`], `EINTR` as
+/// [`std::io::ErrorKind::Interrupted`] — the two the nonblocking flush
+/// loop handles — and everything else as the corresponding OS error.
+#[cfg(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+pub fn writev(fd: i32, bufs: &[std::io::IoSlice<'_>]) -> std::io::Result<usize> {
+    if bufs.is_empty() {
+        return Ok(0);
+    }
+    // SAFETY: the iovec array lives in `bufs` for the duration of the
+    // call; the kernel only reads the described buffers.
+    let ret = unsafe { writev_raw(fd as i64, bufs.as_ptr() as *const u8, bufs.len() as i64) };
+    if ret < 0 {
+        Err(std::io::Error::from_raw_os_error((-ret) as i32))
+    } else {
+        Ok(ret as usize)
+    }
+}
+
+// SAFETY (both arches): writev(fd, iov, iovcnt) reads `iovcnt` iovec
+// structs from `iov` and the buffers they describe; nothing is written
+// to caller memory.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+unsafe fn writev_raw(fd: i64, iov: *const u8, iovcnt: i64) -> i64 {
+    let mut ret: i64;
+    std::arch::asm!(
+        "syscall",
+        inlateout("rax") 20i64 => ret, // __NR_writev
+        in("rdi") fd,
+        in("rsi") iov,
+        in("rdx") iovcnt,
+        lateout("rcx") _,
+        lateout("r11") _,
+        options(nostack),
+    );
+    ret
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+unsafe fn writev_raw(fd: i64, iov: *const u8, iovcnt: i64) -> i64 {
+    let mut ret: i64;
+    std::arch::asm!(
+        "svc #0",
+        in("x8") 66i64, // __NR_writev
+        inlateout("x0") fd => ret,
+        in("x1") iov,
+        in("x2") iovcnt,
+        options(nostack),
+    );
+    ret
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -377,6 +454,50 @@ mod tests {
         assert_eq!(v.len(), 64);
         assert!(CountingAlloc::total_allocations() >= t0);
         assert!(CountingAlloc::thread_allocations() >= h0);
+    }
+
+    #[cfg(all(
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))]
+    #[test]
+    fn writev_gathers_multiple_slices_in_one_call() {
+        use std::io::{IoSlice, Read};
+        use std::os::fd::AsRawFd;
+
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let tx = std::net::TcpStream::connect(addr).unwrap();
+        let (mut rx, _) = listener.accept().unwrap();
+
+        let parts: [&[u8]; 3] = [b"hello ", b"vectored ", b"world"];
+        let slices = [
+            IoSlice::new(parts[0]),
+            IoSlice::new(parts[1]),
+            IoSlice::new(parts[2]),
+        ];
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        // a tiny blocking write to a fresh socket never short-writes
+        let n = writev(tx.as_raw_fd(), &slices).unwrap();
+        assert_eq!(n, total);
+
+        let mut got = vec![0u8; total];
+        rx.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"hello vectored world");
+
+        assert_eq!(writev(tx.as_raw_fd(), &[]).unwrap(), 0);
+    }
+
+    #[cfg(all(
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))]
+    #[test]
+    fn writev_reports_errors_as_errno() {
+        use std::io::IoSlice;
+        // fd -1 is never valid: the raw -EBADF must surface as an error
+        let err = writev(-1, &[IoSlice::new(b"x")]).unwrap_err();
+        assert_eq!(err.raw_os_error(), Some(9), "expected EBADF, got {err:?}");
     }
 
     #[test]

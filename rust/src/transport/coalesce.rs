@@ -20,6 +20,17 @@
 //! The general keyed path (`add`) remains for cold routes — fluid
 //! re-forwarded after an ownership change, fostered coordinates — and
 //! interns on first sight.
+//!
+//! Over the wire transport this buffer is one stage of a **closed
+//! storage cycle** (DESIGN.md §8.8): parcels decoded out of the receive
+//! ring borrow pooled columns, the worker applies them and hands the
+//! columns back here ([`CoalesceBuffer::recycle`]), the next flush
+//! builds outbound parcels over that same storage, and the wire send
+//! path reclaims it again once the parcel is encoded into a frame. The
+//! policy-triggered `flush(all=true)` calls are also where the worker
+//! invokes [`crate::transport::Transport::flush`], so a threshold
+//! crossing or drain pushes the batched frames out immediately instead
+//! of waiting for the wire's [`crate::transport::FlushPolicy`] deadline.
 
 use std::collections::HashMap;
 

@@ -52,7 +52,7 @@ pub mod wire;
 
 pub use atomic_f64::AtomicF64;
 pub use coalesce::{CoalesceBuffer, CoalescePolicy};
-pub use wire::{WireCodec, WireEndpoint, WireHub};
+pub use wire::{ColumnPools, WireCodec, WireEndpoint, WireHub};
 
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -81,6 +81,42 @@ pub struct BusConfig {
     pub latency: Option<(Duration, Duration)>,
     /// seed for latency jitter
     pub seed: u64,
+    /// when the wire transport flushes its per-connection send queue
+    /// (the in-process bus delivers directly and ignores this)
+    pub flush: FlushPolicy,
+}
+
+/// When the wire transport pushes queued frames to the socket (DESIGN.md
+/// §8.8). Outgoing frames accumulate per connection and are flushed with
+/// one vectored `writev` as soon as **any** bound trips:
+///
+/// * `max_bytes` — queued payload reaches this many bytes;
+/// * `max_frames` — this many frames are queued;
+/// * `deadline` — the oldest queued frame has waited this long (checked
+///   on every pump, so any endpoint activity bounds staleness).
+///
+/// The degenerate policy `max_frames = 1` (or `max_bytes = 1`) recovers
+/// flush-per-send. The iteration tolerates arbitrary message delay and
+/// reordering, so batching is purely a throughput/latency trade — it can
+/// never affect convergence or conservation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FlushPolicy {
+    /// flush once this many bytes are queued on a connection
+    pub max_bytes: usize,
+    /// flush once this many frames are queued on a connection
+    pub max_frames: usize,
+    /// flush a connection whose oldest queued frame is this stale
+    pub deadline: Duration,
+}
+
+impl Default for FlushPolicy {
+    fn default() -> Self {
+        FlushPolicy {
+            max_bytes: 64 * 1024,
+            max_frames: 64,
+            deadline: Duration::from_micros(1000),
+        }
+    }
 }
 
 /// An addressed envelope with fluid-mass accounting.
@@ -673,6 +709,13 @@ pub trait Transport<T: Clone>: Send {
     /// The fabric-wide metric set (shared by all endpoints).
     fn metrics(&self) -> Arc<MetricSet>;
 
+    /// Push any queued outgoing frames to the network **now**, regardless
+    /// of the flush policy — called at latency-sensitive moments (epoch
+    /// edges, drains, shutdown) to bound staleness. The default is a
+    /// no-op: transports that deliver eagerly (the bus) have nothing
+    /// queued.
+    fn flush(&mut self) {}
+
     /// [`Transport::try_send`] that converts the returned payload into a
     /// transport error (for destinations that must exist).
     fn send(&mut self, to: usize, payload: T, mass: f64, approx_bytes: usize) -> Result<()> {
@@ -985,6 +1028,7 @@ mod tests {
         let cfg = BusConfig {
             latency: Some((Duration::from_millis(30), Duration::from_millis(40))),
             seed: 1,
+            ..BusConfig::default()
         };
         let (mut eps, _m) = bus::<u8>(2, &cfg);
         let mut b = eps.pop().unwrap();
@@ -1001,6 +1045,7 @@ mod tests {
         let cfg = BusConfig {
             latency: Some((Duration::from_millis(1), Duration::from_millis(50))),
             seed: 3,
+            ..BusConfig::default()
         };
         let (mut eps, _m) = bus::<u32>(2, &cfg);
         let mut b = eps.pop().unwrap();
@@ -1097,6 +1142,7 @@ mod tests {
         let cfg = BusConfig {
             latency: Some((Duration::from_millis(25), Duration::from_millis(30))),
             seed: 5,
+            ..BusConfig::default()
         };
         let (mut eps, _m) = bus::<u8>(2, &cfg);
         let mut b = eps.pop().unwrap();

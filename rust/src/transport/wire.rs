@@ -24,12 +24,30 @@
 //!   commits, which still errs high and still reaches zero at
 //!   quiescence.
 //!
+//! ## Zero-copy fast path (DESIGN.md §8.8)
+//!
+//! Both directions avoid per-message allocation and per-message syscalls
+//! in steady state:
+//!
+//! * **send**: [`encode_msg_frame`] encodes straight into an
+//!   [`Arena`]-pooled frame buffer (length prefix reserved up front,
+//!   patched after the body is written — no intermediate `Vec`); frames
+//!   accumulate in a per-connection queue and flush with one vectored
+//!   `writev` ([`crate::perf::writev`], a raw syscall like
+//!   `pin_to_core`) under a [`FlushPolicy`] — size/frame caps flush
+//!   early, a deadline bounds staleness under light load;
+//! * **receive**: each connection owns one growable ring buffer; frames
+//!   are parsed and dispatched *in place* (no body copy), and the pooled
+//!   codec hooks ([`WireCodec::decode_pooled`] / [`WireCodec::reclaim`])
+//!   cycle SoA column storage through [`ColumnPools`] so decoding a
+//!   parcel and encoding the next one reuse the same vectors.
+//!
 //! The encoding helpers ([`write_varint`], [`zigzag`],
 //! [`write_deltas`], …) are exported because the message-type codecs
 //! (`coordinator::codec`) and the framing tests are built from them.
 
-use std::collections::BinaryHeap;
-use std::io::{ErrorKind, Read, Write};
+use std::collections::{BinaryHeap, VecDeque};
+use std::io::{ErrorKind, IoSlice, Read, Write};
 use std::marker::PhantomData;
 use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -37,8 +55,8 @@ use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use super::{
-    BusConfig, BusMonitor, Envelope, Received, Ripening, Shared, Transport, TransportHub,
-    BUS_METRICS,
+    BusConfig, BusMonitor, Envelope, FlushPolicy, Received, Ripening, Shared, Transport,
+    TransportHub, BUS_METRICS,
 };
 use crate::error::{DiterError, Result};
 use crate::metrics::MetricSet;
@@ -53,11 +71,53 @@ pub const PROTO_VERSION: u8 = 1;
 /// above this is treated as a corrupt stream, not an allocation request.
 pub const MAX_FRAME: usize = 256 << 20;
 
-// Frame kinds (first byte of every frame body) — DESIGN.md §8.2.
-const KIND_HELLO: u8 = 0x01;
-const KIND_MSG: u8 = 0x02;
-const KIND_ACK: u8 = 0x03;
-const KIND_BYE: u8 = 0x04;
+// Frame kinds (first byte of every frame body) — DESIGN.md §8.2. Public
+// so the framing tests can build frames byte-for-byte.
+/// First frame on a dialed connection: `[pid varint][version u8]`.
+pub const KIND_HELLO: u8 = 0x01;
+/// A fluid-bearing message: `[seq varint][mass f64][payload]`.
+pub const KIND_MSG: u8 = 0x02;
+/// Acknowledgment of a `MSG`: `[seq varint]`.
+pub const KIND_ACK: u8 = 0x03;
+/// Orderly close.
+pub const KIND_BYE: u8 = 0x04;
+
+/// Metric names registered by the wire transport (on top of
+/// [`BUS_METRICS`], which it shares with the bus).
+pub const WIRE_METRICS: &[&str] = &[
+    "wire_bytes_sent",
+    "wire_bytes_recv",
+    "wire_frames_sent",
+    "wire_frames_recv",
+    "wire_writev_calls",
+    "wire_frames_per_write", // peak frames completed by one writev
+    "wire_flush_deadline_hits",
+];
+
+/// Fairness cap: at most this many frames parsed per connection per pump
+/// entry, so a chatty peer cannot starve the send/flush half of the pump
+/// (deferred frames stay in the ring for the next pump).
+const PUMP_FRAMES_PER_CONN: usize = 64;
+
+/// Read granularity of the receive ring.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Per-connection read budget per pump, and the ring high-water mark
+/// above which reading pauses until parsing catches up (TCP backpressure
+/// then throttles the sender).
+const READ_BUDGET: usize = 256 * 1024;
+
+/// Max frames gathered into a single `writev`.
+const WRITEV_BATCH: usize = 64;
+
+/// Frame buffers pooled per endpoint: a full default send-queue batch
+/// ([`FlushPolicy::max_frames`] = 64) plus HELLO/ACK traffic, so a
+/// flushed batch returns every buffer instead of dropping the overflow.
+const FRAME_POOL: usize = 80;
+
+/// Column vectors pooled per endpoint, per element type (the pooled
+/// decode/encode cycle of [`ColumnPools`]).
+const COLUMN_POOL: usize = 16;
 
 /// Construct the canonical corrupt-frame error.
 pub fn corrupt(what: &str) -> DiterError {
@@ -137,16 +197,33 @@ pub fn write_f64_slice(out: &mut Vec<u8>, vals: &[f64]) {
     }
 }
 
-/// Read `count` little-endian `f64`s at `*pos`, advancing it. The count
-/// is validated against the remaining buffer *before* allocating.
-pub fn read_f64_slice(buf: &[u8], pos: &mut usize, count: usize) -> Result<Vec<f64>> {
+/// Read `count` little-endian `f64`s at `*pos` into `out` (cleared
+/// first), advancing `pos`. The count is validated against the remaining
+/// buffer *before* reserving — the in-place variant behind
+/// [`read_f64_slice`], used by the pooled decoders so a recycled vector
+/// with warm capacity never touches the allocator.
+pub fn read_f64_slice_into(
+    buf: &[u8],
+    pos: &mut usize,
+    count: usize,
+    out: &mut Vec<f64>,
+) -> Result<()> {
     if buf.len().saturating_sub(*pos) < count.saturating_mul(8) {
         return Err(corrupt("f64 column truncated"));
     }
-    let mut out = Vec::with_capacity(count);
+    out.clear();
+    out.reserve(count);
     for _ in 0..count {
         out.push(read_f64(buf, pos)?);
     }
+    Ok(())
+}
+
+/// Read `count` little-endian `f64`s at `*pos`, advancing it. The count
+/// is validated against the remaining buffer *before* allocating.
+pub fn read_f64_slice(buf: &[u8], pos: &mut usize, count: usize) -> Result<Vec<f64>> {
+    let mut out = Vec::new();
+    read_f64_slice_into(buf, pos, count, &mut out)?;
     Ok(out)
 }
 
@@ -187,6 +264,96 @@ pub fn read_deltas(buf: &[u8], pos: &mut usize, count: usize) -> Result<Vec<u64>
     Ok(out)
 }
 
+/// Read a `count`-entry delta-encoded coordinate column at `*pos` into
+/// `out` (cleared first) as `u32`s, advancing `pos` — the in-place
+/// variant used by the pooled `WorkerMsg` decoders. Rejects everything
+/// [`read_deltas`] rejects, plus coordinates above `u32::MAX`.
+pub fn read_deltas_u32_into(
+    buf: &[u8],
+    pos: &mut usize,
+    count: usize,
+    out: &mut Vec<u32>,
+) -> Result<()> {
+    if count > buf.len().saturating_sub(*pos) {
+        return Err(corrupt("coordinate count exceeds frame"));
+    }
+    out.clear();
+    out.reserve(count);
+    let mut prev: i64 = 0;
+    for _ in 0..count {
+        let v = prev
+            .checked_add(unzigzag(read_varint(buf, pos)?))
+            .ok_or_else(|| corrupt("coordinate delta overflow"))?;
+        if v < 0 {
+            return Err(corrupt("negative coordinate"));
+        }
+        if v > i64::from(u32::MAX) {
+            return Err(corrupt("coordinate exceeds u32"));
+        }
+        out.push(v as u32);
+        prev = v;
+    }
+    Ok(())
+}
+
+/// [`read_deltas_u32_into`] for `usize` columns (handoff slices carry
+/// global coordinates).
+pub fn read_deltas_usize_into(
+    buf: &[u8],
+    pos: &mut usize,
+    count: usize,
+    out: &mut Vec<usize>,
+) -> Result<()> {
+    if count > buf.len().saturating_sub(*pos) {
+        return Err(corrupt("coordinate count exceeds frame"));
+    }
+    out.clear();
+    out.reserve(count);
+    let mut prev: i64 = 0;
+    for _ in 0..count {
+        let v = prev
+            .checked_add(unzigzag(read_varint(buf, pos)?))
+            .ok_or_else(|| corrupt("coordinate delta overflow"))?;
+        if v < 0 {
+            return Err(corrupt("negative coordinate"));
+        }
+        out.push(v as usize);
+        prev = v;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Codec trait + pooled column storage
+// ---------------------------------------------------------------------------
+
+/// Recycled SoA column storage shared by the pooled codec paths
+/// ([`WireCodec::decode_pooled`] / [`WireCodec::reclaim`]): one arena per
+/// column element type. Decoders take cleared, warm-capacity vectors from
+/// here; the send path gives an encoded payload's storage back — a closed
+/// cycle (pools → decoded parcel → worker → coalesce → outgoing parcel →
+/// pools) that keeps steady-state wire traffic off the allocator.
+#[derive(Debug)]
+pub struct ColumnPools {
+    /// u32 coordinate columns (fluid parcels, halo slices)
+    pub u32s: Arena<u32>,
+    /// usize coordinate columns (handoff slices)
+    pub usizes: Arena<usize>,
+    /// f64 mass/value columns
+    pub f64s: Arena<f64>,
+}
+
+impl ColumnPools {
+    /// Pools retaining at most `max_pooled` buffers per element type.
+    pub fn new(max_pooled: usize) -> Self {
+        ColumnPools {
+            u32s: Arena::new(max_pooled),
+            usizes: Arena::new(max_pooled),
+            f64s: Arena::new(max_pooled),
+        }
+    }
+}
+
 /// A message type that can ride the wire. Implemented by the
 /// coordinator's `WorkerMsg` (see `coordinator::codec`) and by the
 /// control-plane messages of remote mode.
@@ -197,8 +364,41 @@ pub fn read_deltas(buf: &[u8], pos: &mut usize, count: usize) -> Result<Vec<u64>
 pub trait WireCodec: Sized {
     /// Append this message's payload encoding to `out`.
     fn encode(&self, out: &mut Vec<u8>);
+
     /// Decode a payload produced by [`WireCodec::encode`].
     fn decode(buf: &[u8]) -> Result<Self>;
+
+    /// [`WireCodec::decode`], drawing any owned column storage from
+    /// `pools` instead of the allocator — the receive path's
+    /// zero-allocation steady state. Must produce exactly the value
+    /// `decode` would. The default ignores the pools.
+    fn decode_pooled(buf: &[u8], _pools: &mut ColumnPools) -> Result<Self> {
+        Self::decode(buf)
+    }
+
+    /// Return this message's owned column storage to `pools` — called by
+    /// the wire send path once the payload is encoded into a frame, so
+    /// the vectors decoded out of one message can carry the next. The
+    /// default just drops the message.
+    fn reclaim(self, _pools: &mut ColumnPools) {}
+}
+
+/// Encode one complete data frame — `[u32 len][KIND_MSG][seq varint]
+/// [mass f64][payload]` — in place into `frame` (cleared first): four
+/// zero bytes are reserved for the length prefix up front and patched
+/// once the body is encoded, so no intermediate body `Vec` exists. With
+/// a recycled warm-capacity buffer this is the allocation-free send
+/// encode; the bytes produced are identical to framing a separately
+/// encoded body (the property test pins this).
+pub fn encode_msg_frame<T: WireCodec>(frame: &mut Vec<u8>, seq: u64, mass: f64, payload: &T) {
+    frame.clear();
+    frame.extend_from_slice(&[0u8; 4]);
+    frame.push(KIND_MSG);
+    write_varint(frame, seq);
+    write_f64(frame, mass);
+    payload.encode(frame);
+    let len = (frame.len() - 4) as u32;
+    frame[..4].copy_from_slice(&len.to_le_bytes());
 }
 
 // ---------------------------------------------------------------------------
@@ -239,8 +439,8 @@ pub fn read_ctrl_frame<T: WireCodec>(stream: &mut TcpStream) -> Result<T> {
 /// Address directory: slot `k` holds PID k's listening address, `None`
 /// for a retired (or never-spawned) endpoint. The wire analogue of the
 /// bus's channel directory, with the same locking discipline: sends
-/// resolve (and write) under a read lock, removal takes the write lock,
-/// so removal strictly orders with in-progress sends.
+/// resolve (and queue their frame) under a read lock, removal takes the
+/// write lock, so removal strictly orders with in-progress sends.
 struct WireDirectory {
     addrs: Vec<Option<SocketAddr>>,
 }
@@ -254,6 +454,7 @@ pub struct WireHub<T> {
     latency: Option<(Duration, Duration)>,
     seed: u64,
     bind_ip: IpAddr,
+    policy: FlushPolicy,
     /// true in the loopback harness: all endpoints share this process's
     /// accounting block, so a receiver commit settles the account
     /// directly (exact bus semantics). false per-process: commits only
@@ -270,6 +471,7 @@ impl<T> Clone for WireHub<T> {
             latency: self.latency,
             seed: self.seed,
             bind_ip: self.bind_ip,
+            policy: self.policy,
             local_commit: self.local_commit,
             _msg: PhantomData,
         }
@@ -277,7 +479,12 @@ impl<T> Clone for WireHub<T> {
 }
 
 fn new_shared(extra: &[&'static str]) -> Arc<Shared> {
-    let names: Vec<&'static str> = BUS_METRICS.iter().chain(extra).copied().collect();
+    let names: Vec<&'static str> = BUS_METRICS
+        .iter()
+        .chain(WIRE_METRICS)
+        .chain(extra)
+        .copied()
+        .collect();
     Arc::new(Shared {
         inflight: AtomicF64::new(0.0),
         retained: AtomicU64::new(0),
@@ -298,6 +505,7 @@ impl<T: WireCodec + Send + 'static> WireHub<T> {
             latency: cfg.latency,
             seed: cfg.seed,
             bind_ip: IpAddr::V4(Ipv4Addr::LOCALHOST),
+            policy: cfg.flush,
             local_commit: true,
             _msg: PhantomData,
         }
@@ -316,6 +524,7 @@ impl<T: WireCodec + Send + 'static> WireHub<T> {
             latency: cfg.latency,
             seed: cfg.seed,
             bind_ip,
+            policy: cfg.flush,
             local_commit: false,
             _msg: PhantomData,
         }
@@ -359,7 +568,9 @@ impl<T: WireCodec + Send + 'static> WireHub<T> {
             latency: self.latency,
             rng: Xoshiro256pp::seed_from_u64(self.seed ^ (id as u64).wrapping_mul(0x9E3779B9)),
             local_commit: self.local_commit,
-            scratch: Arena::new(FRAME_POOL),
+            policy: self.policy,
+            frames: Arena::new(FRAME_POOL),
+            pools: ColumnPools::new(COLUMN_POOL),
         })
     }
 
@@ -375,11 +586,12 @@ impl<T: WireCodec + Send + 'static> WireHub<T> {
     }
 
     /// Deregister slot `id`: subsequent sends to it fail fast at the
-    /// sender, which re-routes the fluid. Because each send resolves the
-    /// slot (and writes its frame) under the directory read lock, every
-    /// frame accepted before this write-locked removal returns is
-    /// already in the retiree's socket buffer, where its final drain
-    /// will find it.
+    /// sender, which re-routes the fluid. Each send resolves the slot
+    /// (and queues its frame) under the directory read lock, so this
+    /// write-locked removal strictly orders with in-progress sends:
+    /// after it returns, every accepted frame is at worst in its
+    /// sender's send queue, bounded by that sender's flush deadline —
+    /// see the retirement-drain note in DESIGN.md §8.8.
     pub fn remove_endpoint(&self, id: usize) {
         let mut d = self.dir.write().unwrap_or_else(|e| e.into_inner());
         if id < d.addrs.len() {
@@ -436,6 +648,98 @@ impl<T: WireCodec + Send + Clone + 'static> TransportHub<T> for WireHub<T> {
 // The endpoint
 // ---------------------------------------------------------------------------
 
+/// Raw `writev` where the target supports it (Linux x86-64/aarch64, via
+/// `perf::writev`), falling back to `Write::write_vectored` elsewhere.
+#[cfg(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+fn writev_stream(stream: &mut TcpStream, bufs: &[IoSlice<'_>]) -> std::io::Result<usize> {
+    use std::os::fd::AsRawFd;
+    crate::perf::writev(stream.as_raw_fd(), bufs)
+}
+
+#[cfg(not(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+)))]
+fn writev_stream(stream: &mut TcpStream, bufs: &[IoSlice<'_>]) -> std::io::Result<usize> {
+    stream.write_vectored(bufs)
+}
+
+/// One connection's receive buffer: a growable ring that frames are
+/// parsed out of **in place** — bytes land once (`read` into the tail),
+/// the dispatcher borrows the frame body straight from the buffer, and
+/// `consume` advances the head. Compaction is a `copy_within` when the
+/// head has moved; the backing storage only ever grows to its high-water
+/// mark, so a warmed-up connection never reallocates.
+#[derive(Default)]
+struct RecvRing {
+    buf: Vec<u8>,
+    pos: usize,
+    end: usize,
+}
+
+impl RecvRing {
+    fn buffered(&self) -> usize {
+        self.end - self.pos
+    }
+
+    fn readable(&self) -> &[u8] {
+        &self.buf[self.pos..self.end]
+    }
+
+    fn consume(&mut self, n: usize) {
+        self.pos += n;
+        if self.pos == self.end {
+            self.pos = 0;
+            self.end = 0;
+        }
+    }
+
+    fn clear(&mut self) {
+        self.pos = 0;
+        self.end = 0;
+    }
+
+    /// Ensure at least `min_free` writable bytes after `end`, compacting
+    /// (and, cold, growing) as needed.
+    fn make_room(&mut self, min_free: usize) {
+        if self.buf.len() - self.end >= min_free {
+            return;
+        }
+        if self.pos > 0 {
+            self.buf.copy_within(self.pos..self.end, 0);
+            self.end -= self.pos;
+            self.pos = 0;
+        }
+        if self.buf.len() - self.end < min_free {
+            self.buf.resize(self.end + min_free, 0);
+        }
+    }
+
+    fn space(&mut self) -> &mut [u8] {
+        &mut self.buf[self.end..]
+    }
+
+    fn filled(&mut self, n: usize) {
+        self.end += n;
+    }
+
+    /// Whether a complete, well-formed-length frame is parseable right
+    /// now (used to keep an EOF'd connection alive until the fairness
+    /// cap has let its backlog drain).
+    fn has_complete_frame(&self) -> bool {
+        let avail = self.buffered();
+        if avail < 4 {
+            return false;
+        }
+        let b = self.readable();
+        let len = u32::from_le_bytes(b[..4].try_into().expect("4-byte slice")) as usize;
+        len != 0 && len <= MAX_FRAME && avail >= 4 + len
+    }
+}
+
 /// One live connection (inbound-accepted or outbound-dialed; the
 /// protocol is full duplex, so either kind carries traffic both ways).
 struct Conn {
@@ -444,9 +748,89 @@ struct Conn {
     /// (inbound); frames on an unidentified connection are a protocol
     /// error except HELLO itself
     peer: Option<usize>,
-    rbuf: Vec<u8>,
-    wbuf: Vec<u8>,
+    rbuf: RecvRing,
+    /// complete `[len][body]` frames queued for the next vectored flush
+    /// (buffers from the endpoint's frame arena; returned when written)
+    sendq: VecDeque<Vec<u8>>,
+    /// bytes of `sendq[0]` already written (partial-write progress)
+    head_off: usize,
+    /// unwritten bytes across the queue (the FlushPolicy byte cap)
+    queued_bytes: usize,
+    /// when the oldest queued frame was queued (the deadline trigger)
+    queued_since: Option<Instant>,
     alive: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, peer: Option<usize>) -> Conn {
+        Conn {
+            stream,
+            peer,
+            rbuf: RecvRing::default(),
+            sendq: VecDeque::new(),
+            head_off: 0,
+            queued_bytes: 0,
+            queued_since: None,
+            alive: true,
+        }
+    }
+
+    /// Flush queued frames with vectored writes: one `writev` per batch
+    /// of up to [`WRITEV_BATCH`] frames, looping until the queue empties
+    /// or the socket pushes back (`WouldBlock` — a later pump resumes).
+    /// Fully written frame buffers return to the arena; a partial write
+    /// leaves the head frame with an offset. A write error kills the
+    /// connection; frames stranded in the queue stay *accounted* (the
+    /// monitor errs high, exactly like frames lost in a dead socket).
+    fn flush(&mut self, metrics: &MetricSet, frames: &mut Arena<u8>) {
+        while self.alive && !self.sendq.is_empty() {
+            let empty: &[u8] = &[];
+            let mut iovs = [IoSlice::new(empty); WRITEV_BATCH];
+            let mut n_iov = 0;
+            for f in self.sendq.iter() {
+                if n_iov == WRITEV_BATCH {
+                    break;
+                }
+                let start = if n_iov == 0 { self.head_off } else { 0 };
+                iovs[n_iov] = IoSlice::new(&f[start..]);
+                n_iov += 1;
+            }
+            match writev_stream(&mut self.stream, &iovs[..n_iov]) {
+                Ok(0) => {
+                    self.alive = false;
+                }
+                Ok(mut n) => {
+                    metrics.incr("wire_writev_calls");
+                    metrics.add("wire_bytes_sent", n as u64);
+                    self.queued_bytes -= n;
+                    let mut completed: u64 = 0;
+                    while n > 0 {
+                        let rem = self.sendq.front().expect("bytes imply a frame").len()
+                            - self.head_off;
+                        if n >= rem {
+                            n -= rem;
+                            frames.give(self.sendq.pop_front().expect("nonempty"));
+                            self.head_off = 0;
+                            completed += 1;
+                        } else {
+                            self.head_off += n;
+                            n = 0;
+                        }
+                    }
+                    metrics.add("wire_frames_sent", completed);
+                    metrics.max("wire_frames_per_write", completed);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.alive = false;
+                }
+            }
+        }
+        if self.sendq.is_empty() {
+            self.queued_since = None;
+        }
+    }
 }
 
 /// One PID's wire endpoint: a nonblocking listener plus its connection
@@ -469,15 +853,14 @@ pub struct WireEndpoint<T: WireCodec> {
     latency: Option<(Duration, Duration)>,
     rng: Xoshiro256pp,
     local_commit: bool,
-    /// recycled frame/body buffers: the encoder takes one per
-    /// MSG/ACK/inbound frame and gives it back as soon as the bytes are
-    /// in a connection buffer, so steady-state framing allocates nothing
-    scratch: Arena<u8>,
+    /// when queued frames get pushed to the sockets (see [`FlushPolicy`])
+    policy: FlushPolicy,
+    /// recycled frame buffers: each MSG/ACK/HELLO frame is encoded into
+    /// one, queued, and the buffer returns here after its writev
+    frames: Arena<u8>,
+    /// recycled SoA column storage for the pooled codec paths
+    pools: ColumnPools,
 }
-
-/// Frame buffers pooled per endpoint — MSG body, ACK, and inbound frame
-/// all share the arena, and each is returned before the next is taken.
-const FRAME_POOL: usize = 4;
 
 impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
     /// The address this endpoint's listener is bound to (advertised to
@@ -506,44 +889,95 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
         }
     }
 
-    /// Accept pending connections, flush pending writes, read and parse
-    /// everything readable, and dispatch complete frames. Every
-    /// non-blocking entry point starts with a pump, so progress needs no
-    /// background thread.
+    /// Flush connection `ci`'s send queue now (vectored writes).
+    fn flush_conn(&mut self, ci: usize) {
+        self.conns[ci].flush(&self.shared.metrics, &mut self.frames);
+    }
+
+    /// Push every queued frame on every connection to the network now,
+    /// regardless of the flush policy — see [`Transport::flush`]. Called
+    /// at latency-sensitive moments (threshold crossings, drains,
+    /// retirement) where staleness matters more than batching.
+    pub fn flush(&mut self) {
+        for ci in 0..self.conns.len() {
+            self.flush_conn(ci);
+        }
+    }
+
+    /// Queue one complete `[len][body]` frame on connection `ci`. The
+    /// frame is *accepted* from this point on: it will reach the socket
+    /// at the next policy-triggered or explicit flush.
+    fn enqueue_frame(&mut self, ci: usize, frame: Vec<u8>) {
+        let c = &mut self.conns[ci];
+        c.queued_bytes += frame.len();
+        if c.queued_since.is_none() {
+            c.queued_since = Some(Instant::now());
+        }
+        c.sendq.push_back(frame);
+    }
+
+    /// Flush `ci` if its queue trips the size or frame cap.
+    fn maybe_flush(&mut self, ci: usize) {
+        let c = &self.conns[ci];
+        if c.sendq.len() >= self.policy.max_frames || c.queued_bytes >= self.policy.max_bytes {
+            self.flush_conn(ci);
+        }
+    }
+
+    /// Accept pending connections, flush deadline-stale send queues,
+    /// read everything readable into the per-connection rings, and
+    /// dispatch complete frames in place. Every non-blocking entry point
+    /// starts with a pump, so progress needs no background thread.
     fn pump(&mut self) {
         loop {
             match self.listener.accept() {
                 Ok((stream, _)) => {
                     let _ = stream.set_nonblocking(true);
                     let _ = stream.set_nodelay(true);
-                    self.conns.push(Conn {
-                        stream,
-                        peer: None,
-                        rbuf: Vec::new(),
-                        wbuf: Vec::new(),
-                        alive: true,
-                    });
+                    self.conns.push(Conn::new(stream, None));
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => break,
                 Err(_) => break,
             }
         }
-        let mut scratch = [0u8; 16 * 1024];
+        // deadline flush first: any endpoint activity bounds how long a
+        // queued frame can wait, even if no further send ever comes
+        let now = Instant::now();
+        for ci in 0..self.conns.len() {
+            let due = self.conns[ci]
+                .queued_since
+                .is_some_and(|t| now.duration_since(t) >= self.policy.deadline);
+            if due {
+                self.shared.metrics.incr("wire_flush_deadline_hits");
+                self.flush_conn(ci);
+            }
+        }
+        // read phase: budgeted per connection, and paused entirely while
+        // a ring is over its high-water mark — parsing (capped below for
+        // fairness) catches up and TCP backpressure throttles the peer
         for ci in 0..self.conns.len() {
             let c = &mut self.conns[ci];
-            if !c.alive {
+            if !c.alive || c.rbuf.buffered() >= READ_BUDGET {
                 continue;
             }
-            let _ = Self::flush_wbuf(c);
+            let mut budget = READ_BUDGET;
             loop {
-                match c.stream.read(&mut scratch) {
+                c.rbuf.make_room(READ_CHUNK);
+                match c.stream.read(c.rbuf.space()) {
                     Ok(0) => {
-                        // EOF: no more bytes will come, but frames already
-                        // in rbuf still get parsed below
+                        // EOF: no more bytes will come, but complete
+                        // frames already in the ring still get parsed
                         c.alive = false;
                         break;
                     }
-                    Ok(n) => c.rbuf.extend_from_slice(&scratch[..n]),
+                    Ok(n) => {
+                        c.rbuf.filled(n);
+                        self.shared.metrics.add("wire_bytes_recv", n as u64);
+                        budget = budget.saturating_sub(n);
+                        if budget == 0 {
+                            break;
+                        }
+                    }
                     Err(e) if e.kind() == ErrorKind::WouldBlock => break,
                     Err(e) if e.kind() == ErrorKind::Interrupted => continue,
                     Err(_) => {
@@ -553,40 +987,50 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
                 }
             }
         }
+        // parse phase: frames dispatch straight out of the ring (no body
+        // copy), at most PUMP_FRAMES_PER_CONN per connection per pump so
+        // a flooding peer cannot starve the others or the send half
         for ci in 0..self.conns.len() {
-            loop {
-                let len = {
-                    let c = &mut self.conns[ci];
-                    if c.rbuf.len() < 4 {
-                        break;
-                    }
-                    let len =
-                        u32::from_le_bytes(c.rbuf[..4].try_into().expect("4-byte slice")) as usize;
-                    if len == 0 || len > MAX_FRAME {
-                        c.alive = false; // corrupt stream: stop parsing it
-                        break;
-                    }
-                    if c.rbuf.len() < 4 + len {
-                        break;
-                    }
-                    len
-                };
-                // copy out through a recycled buffer (dispatch needs &mut
-                // self, so the frame cannot stay borrowed from rbuf) —
-                // per-frame allocation becomes a per-frame arena cycle
-                let mut frame = self.scratch.take();
-                frame.extend_from_slice(&self.conns[ci].rbuf[4..4 + len]);
-                self.conns[ci].rbuf.drain(..4 + len);
-                self.dispatch(ci, &frame);
-                self.scratch.give(frame);
+            let mut ring = std::mem::take(&mut self.conns[ci].rbuf);
+            let mut parsed = 0;
+            while parsed < PUMP_FRAMES_PER_CONN {
+                let avail = ring.buffered();
+                if avail < 4 {
+                    break;
+                }
+                let len = u32::from_le_bytes(ring.readable()[..4].try_into().expect("4-byte slice"))
+                    as usize;
+                if len == 0 || len > MAX_FRAME {
+                    self.conns[ci].alive = false; // corrupt stream: stop parsing it
+                    ring.clear();
+                    break;
+                }
+                if avail < 4 + len {
+                    break;
+                }
+                self.dispatch(ci, &ring.readable()[4..4 + len]);
+                ring.consume(4 + len);
+                parsed += 1;
+                self.shared.metrics.incr("wire_frames_recv");
+                if !self.conns[ci].alive {
+                    // dispatch killed the connection (BYE or protocol
+                    // error): nothing after this frame is trustworthy
+                    ring.clear();
+                    break;
+                }
             }
+            self.conns[ci].rbuf = ring;
         }
-        // complete frames were already dispatched above, so a dead
-        // connection has nothing left to contribute
-        self.conns.retain(|c| c.alive);
+        // a dead connection sticks around only while its ring still
+        // holds complete frames the fairness cap deferred (an EOF'd
+        // backlog drains across pumps); corrupt streams were cleared
+        // above, so they cull immediately
+        self.conns.retain(|c| c.alive || c.rbuf.has_complete_frame());
     }
 
-    /// Handle one complete frame received on connection `ci`.
+    /// Handle one complete frame received on connection `ci`. `frame`
+    /// borrows the connection's receive ring — decoding pulls column
+    /// storage from the pools rather than copying the body anywhere.
     fn dispatch(&mut self, ci: usize, frame: &[u8]) {
         let kill = |conns: &mut Vec<Conn>, ci: usize| conns[ci].alive = false;
         let Some(&kind) = frame.first() else {
@@ -609,10 +1053,11 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
                 let Some(from) = self.conns[ci].peer else {
                     return kill(&mut self.conns, ci);
                 };
+                let pools = &mut self.pools;
                 let mut pos = 0;
                 let decoded = read_varint(body, &mut pos).and_then(|seq| {
                     let mass = read_f64(body, &mut pos)?;
-                    let payload = T::decode(&body[pos..])?;
+                    let payload = T::decode_pooled(&body[pos..], pools)?;
                     Ok((seq, mass, payload))
                 });
                 let Ok((seq, mass, payload)) = decoded else {
@@ -649,42 +1094,10 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
         }
     }
 
-    /// Flush as much of `wbuf` as the socket accepts right now.
-    fn flush_wbuf(c: &mut Conn) -> std::io::Result<()> {
-        while !c.wbuf.is_empty() {
-            match c.stream.write(&c.wbuf) {
-                Ok(0) => {
-                    c.alive = false;
-                    return Err(std::io::Error::new(ErrorKind::WriteZero, "peer closed"));
-                }
-                Ok(n) => {
-                    c.wbuf.drain(..n);
-                }
-                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()), // resumed by a later pump
-                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-                Err(e) => {
-                    c.alive = false;
-                    return Err(e);
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// Queue `[len][body]` on connection `ci` and try to flush.
-    fn write_frame(&mut self, ci: usize, body: &[u8]) -> std::io::Result<()> {
-        let c = &mut self.conns[ci];
-        if !c.alive {
-            return Err(std::io::Error::new(ErrorKind::NotConnected, "dead connection"));
-        }
-        c.wbuf.extend_from_slice(&(body.len() as u32).to_le_bytes());
-        c.wbuf.extend_from_slice(body);
-        Self::flush_wbuf(c)
-    }
-
     /// A live connection to PID `to`, dialing `addr` if none exists.
-    /// Outbound connections introduce themselves with HELLO first, so
-    /// the peer can attribute every later frame.
+    /// Outbound connections introduce themselves with HELLO first (the
+    /// send queue is FIFO, so HELLO leads the first flushed batch and
+    /// the peer can attribute every later frame).
     fn conn_to(&mut self, to: usize, addr: SocketAddr) -> Option<usize> {
         if let Some(ci) = self.conns.iter().position(|c| c.alive && c.peer == Some(to)) {
             return Some(ci);
@@ -693,20 +1106,15 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
         let _ = stream.set_nodelay(true);
         stream.set_nonblocking(true).ok()?;
         let ci = self.conns.len();
-        self.conns.push(Conn {
-            stream,
-            peer: Some(to),
-            rbuf: Vec::new(),
-            wbuf: Vec::new(),
-            alive: true,
-        });
-        let mut hello = Vec::with_capacity(11);
+        self.conns.push(Conn::new(stream, Some(to)));
+        let mut hello = self.frames.take();
+        hello.extend_from_slice(&[0u8; 4]);
         hello.push(KIND_HELLO);
         write_varint(&mut hello, self.id as u64);
         hello.push(PROTO_VERSION);
-        if self.write_frame(ci, &hello).is_err() {
-            return None;
-        }
+        let len = (hello.len() - 4) as u32;
+        hello[..4].copy_from_slice(&len.to_le_bytes());
+        self.enqueue_frame(ci, hello);
         Some(ci)
     }
 
@@ -714,9 +1122,17 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
     /// — and the frame queued — under the directory read lock on *every*
     /// send, so [`WireHub::remove_endpoint`] (a write) strictly orders
     /// with in-progress sends exactly like the bus: after removal
-    /// returns, every accepted frame is already in the retiree's socket
-    /// buffer and every later send fails fast and re-routes. A cached
-    /// connection is deliberately *not* trusted across that boundary.
+    /// returns, every accepted frame is queued (its flush deadline
+    /// bounds delivery) and every later send fails fast and re-routes.
+    /// A cached connection is deliberately *not* trusted across that
+    /// boundary.
+    ///
+    /// Once the frame is queued the send has **succeeded**: accounting
+    /// happened before queueing, and a connection that later dies during
+    /// its flush strands that mass on the in-flight account — the
+    /// monitor errs high (exactly like bytes lost in a dead socket's
+    /// buffer), never low. Directory misses and dial failures still fail
+    /// fast *before* any accounting and hand the payload back.
     pub fn try_send(
         &mut self,
         to: usize,
@@ -734,37 +1150,31 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
             return Err(payload);
         };
         let seq = self.next_seq;
-        // encode over a recycled buffer; returned to the arena once the
-        // bytes sit in the connection's write buffer
-        let mut body = self.scratch.take();
-        body.reserve(approx_bytes + 16);
-        body.push(KIND_MSG);
-        write_varint(&mut body, seq);
-        write_f64(&mut body, mass);
-        payload.encode(&mut body);
-        // in-flight accounting BEFORE the write so the monitor can never
-        // observe fluid vanishing; `undelivered` first (see the bus) so
-        // the float accumulator is authoritative only while it is >0
+        // encode in place into a recycled frame buffer — length prefix
+        // reserved up front, patched after the body (no body Vec)
+        let mut frame = self.frames.take();
+        frame.reserve(approx_bytes + 21);
+        encode_msg_frame(&mut frame, seq, mass, &payload);
+        let frame_len = frame.len();
+        // in-flight accounting BEFORE the frame is queued so the monitor
+        // can never observe fluid vanishing; `undelivered` first (see
+        // the bus) so the float accumulator is authoritative only while
+        // it is >0
         self.shared.undelivered.fetch_add(1, Ordering::AcqRel);
         let now_inflight = self.shared.inflight.add(mass);
         self.shared
             .metrics
             .max("inflight_peak_ppm", (now_inflight * 1e6) as u64);
-        if self.write_frame(ci, &body).is_err() {
-            // connection died before the frame was fully written: undo —
-            // the fluid never left the caller, who re-routes it
-            self.shared.inflight.add(-mass);
-            self.shared.undelivered.fetch_sub(1, Ordering::AcqRel);
-            self.scratch.give(body);
-            return Err(payload);
-        }
+        self.enqueue_frame(ci, frame);
         drop(d);
+        // the payload's column storage feeds the next decode
+        payload.reclaim(&mut self.pools);
         self.next_seq += 1;
         self.retained.push((seq, mass));
         self.shared.retained.fetch_add(1, Ordering::Relaxed);
         self.shared.metrics.incr("msgs_sent");
-        self.shared.metrics.add("bytes_sent", (body.len() + 4) as u64);
-        self.scratch.give(body);
+        self.shared.metrics.add("bytes_sent", frame_len as u64);
+        self.maybe_flush(ci);
         Ok(())
     }
 
@@ -790,32 +1200,43 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
     /// See [`Transport::commit`]. In the loopback harness this settles
     /// the shared account directly (exact bus semantics) and the ACK
     /// only releases the sender's retention; per-process, the ACK *is*
-    /// the release — the sender's accounting drops when it arrives.
+    /// the release — the sender's accounting drops when it arrives. The
+    /// ACK rides the send queue like any frame (flush policy applies);
+    /// the sender's retention is memory, not mass, so ACK staleness is
+    /// bounded by the deadline and costs nothing else.
     pub fn commit(&mut self, from: usize, seq: u64, mass: f64) {
         if self.local_commit {
             self.shared.inflight.add(-mass);
             self.shared.undelivered.fetch_sub(1, Ordering::AcqRel);
         }
-        let mut ack = self.scratch.take();
+        let mut ack = self.frames.take();
+        ack.extend_from_slice(&[0u8; 4]);
         ack.push(KIND_ACK);
         write_varint(&mut ack, seq);
-        if let Some(ci) = self.conns.iter().position(|c| c.alive && c.peer == Some(from)) {
-            let _ = self.write_frame(ci, &ack);
-        } else {
-            // no live connection back: dial, unless the sender retired —
-            // then the ack is dropped, its retention list died with it
-            let addr = {
-                let dir = self.dir.clone();
-                let d = dir.read().unwrap_or_else(|e| e.into_inner());
-                d.addrs.get(from).and_then(|a| *a)
-            };
-            if let Some(addr) = addr {
-                if let Some(ci) = self.conn_to(from, addr) {
-                    let _ = self.write_frame(ci, &ack);
-                }
+        let len = (ack.len() - 4) as u32;
+        ack[..4].copy_from_slice(&len.to_le_bytes());
+        // reuse a live connection back to the sender, else dial — unless
+        // the sender retired, in which case the ack is dropped (its
+        // retention list died with it) and the buffer goes back to the pool
+        let ci = self
+            .conns
+            .iter()
+            .position(|c| c.alive && c.peer == Some(from))
+            .or_else(|| {
+                let addr = {
+                    let dir = self.dir.clone();
+                    let d = dir.read().unwrap_or_else(|e| e.into_inner());
+                    d.addrs.get(from).and_then(|a| *a)
+                };
+                addr.and_then(|addr| self.conn_to(from, addr))
+            });
+        match ci {
+            Some(ci) => {
+                self.enqueue_frame(ci, ack);
+                self.maybe_flush(ci);
             }
+            None => self.frames.give(ack),
         }
-        self.scratch.give(ack);
         self.shared.metrics.incr("acks");
     }
 
@@ -850,9 +1271,9 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
 }
 
 impl<T: WireCodec> Drop for WireEndpoint<T> {
-    /// Best-effort goodbye: flush buffered frames (a peer may be waiting
-    /// on a buffered ACK) and send BYE so peers close promptly instead
-    /// of discovering the EOF later.
+    /// Best-effort goodbye: drive queued frames out (a peer may be
+    /// waiting on a queued ACK) with a bounded retry loop, then send BYE
+    /// so peers close promptly instead of discovering the EOF later.
     ///
     /// Deliberately does NOT release unapplied inbox mass in per-process
     /// mode and does not touch the loopback account for frames a peer
@@ -863,10 +1284,22 @@ impl<T: WireCodec> Drop for WireEndpoint<T> {
     /// drops, and undrained mass after an abnormal exit keeps the
     /// monitor (correctly) above zero.
     fn drop(&mut self) {
+        for _ in 0..50 {
+            let mut queued = 0;
+            for c in self.conns.iter_mut() {
+                if c.alive {
+                    c.flush(&self.shared.metrics, &mut self.frames);
+                    queued += c.sendq.len();
+                }
+            }
+            if queued == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
         let bye = [1u8, 0, 0, 0, KIND_BYE];
         for c in self.conns.iter_mut() {
             if c.alive {
-                let _ = Self::flush_wbuf(c);
                 let _ = c.stream.write_all(&bye);
             }
         }
@@ -917,6 +1350,9 @@ impl<T: WireCodec + Send + Clone + 'static> Transport<T> for WireEndpoint<T> {
     fn metrics(&self) -> Arc<MetricSet> {
         WireEndpoint::metrics(self)
     }
+    fn flush(&mut self) {
+        WireEndpoint::flush(self)
+    }
 }
 
 #[cfg(test)]
@@ -951,6 +1387,14 @@ mod tests {
         let a = hub.add_endpoint(0).unwrap();
         let b = hub.add_endpoint(1).unwrap();
         (a, b, hub)
+    }
+
+    fn hub_with(policy: FlushPolicy) -> WireHub<Probe> {
+        let cfg = BusConfig {
+            flush: policy,
+            ..BusConfig::default()
+        };
+        WireHub::<Probe>::loopback(&cfg, &[])
     }
 
     /// Drive `recv` until a message ripens or the deadline passes (TCP
@@ -1012,6 +1456,35 @@ mod tests {
     }
 
     #[test]
+    fn in_place_delta_readers_match_and_reject_overflow() {
+        let coords: Vec<u64> = vec![0, 2, 5, 1000, 1001];
+        let mut buf = Vec::new();
+        write_deltas(&mut buf, coords.iter().copied());
+        let mut out32: Vec<u32> = Vec::new();
+        let mut pos = 0;
+        read_deltas_u32_into(&buf, &mut pos, coords.len(), &mut out32).unwrap();
+        assert_eq!(out32, vec![0u32, 2, 5, 1000, 1001]);
+        assert_eq!(pos, buf.len());
+        let mut outus: Vec<usize> = Vec::new();
+        let mut pos = 0;
+        read_deltas_usize_into(&buf, &mut pos, coords.len(), &mut outus).unwrap();
+        assert_eq!(outus, vec![0usize, 2, 5, 1000, 1001]);
+        // recycled storage comes back cleared even when it had content
+        let mut pos = 0;
+        read_deltas_u32_into(&buf, &mut pos, 2, &mut out32).unwrap();
+        assert_eq!(out32, vec![0u32, 2]);
+        // a coordinate above u32::MAX is rejected by the u32 reader
+        let mut big = Vec::new();
+        write_deltas(&mut big, [1u64 << 33].into_iter());
+        let mut pos = 0;
+        let mut out: Vec<u32> = Vec::new();
+        assert!(read_deltas_u32_into(&big, &mut pos, 1, &mut out).is_err());
+        let mut pos = 0;
+        let mut outus: Vec<usize> = Vec::new();
+        assert!(read_deltas_usize_into(&big, &mut pos, 1, &mut outus).is_ok());
+    }
+
+    #[test]
     fn f64_slice_round_trip_and_truncation() {
         let vals = [0.0, -1.5, f64::MIN_POSITIVE, 1e300];
         let mut buf = Vec::new();
@@ -1020,6 +1493,30 @@ mod tests {
         assert_eq!(read_f64_slice(&buf, &mut pos, 4).unwrap(), vals);
         let mut pos = 0;
         assert!(read_f64_slice(&buf, &mut pos, 5).is_err(), "truncated");
+        // the in-place reader clears recycled storage first
+        let mut out = vec![9.0; 3];
+        let mut pos = 0;
+        read_f64_slice_into(&buf, &mut pos, 2, &mut out).unwrap();
+        assert_eq!(out, vec![0.0, -1.5]);
+    }
+
+    #[test]
+    fn encode_msg_frame_matches_separate_body_framing() {
+        // the in-place patched-prefix encode must be byte-identical to
+        // the PR 6 shape: encode the body into its own Vec, then frame
+        for (seq, mass, v) in [(0u64, 0.0f64, 0u64), (300, -2.5, 1 << 40), (7, 1e-12, 127)] {
+            let probe = Probe(v);
+            let mut body = Vec::new();
+            body.push(KIND_MSG);
+            write_varint(&mut body, seq);
+            write_f64(&mut body, mass);
+            probe.encode(&mut body);
+            let mut expect = (body.len() as u32).to_le_bytes().to_vec();
+            expect.extend_from_slice(&body);
+            let mut frame = vec![0xAB; 3]; // stale content must not leak
+            encode_msg_frame(&mut frame, seq, mass, &probe);
+            assert_eq!(frame, expect);
+        }
     }
 
     #[test]
@@ -1027,6 +1524,7 @@ mod tests {
         let (mut a, mut b, _hub) = pair();
         let t: &mut dyn Transport<Probe> = &mut a;
         t.send(1, Probe(7), 0.5, 3).unwrap();
+        a.flush();
         let got = recv_within(&mut b, 2000).expect("delivered");
         assert_eq!(got.payload, Probe(7));
         assert_eq!(got.from, 0);
@@ -1035,12 +1533,16 @@ mod tests {
         assert_eq!(b.global_inflight(), 0.0);
         let deadline = Instant::now() + Duration::from_secs(2);
         while a.unacked() > 0 && Instant::now() < deadline {
+            b.collect_acks(); // drives b's deadline flush of the queued ACK
             a.collect_acks();
         }
         assert_eq!(a.unacked(), 0, "ack released retention");
         assert_eq!(a.metrics().get("msgs_sent"), 1);
         assert_eq!(a.metrics().get("msgs_recv"), 1);
         assert_eq!(a.metrics().get("acks"), 1);
+        assert!(a.metrics().get("wire_writev_calls") >= 1);
+        assert!(a.metrics().get("wire_bytes_sent") > 0);
+        assert!(a.metrics().get("wire_bytes_recv") > 0);
     }
 
     #[test]
@@ -1049,6 +1551,7 @@ mod tests {
         // warm a connection so the per-send directory check, not the
         // dial, is what must refuse after removal
         a.try_send(1, Probe(1), 0.25, 1).unwrap();
+        a.flush();
         let got = recv_within(&mut b, 2000).unwrap();
         b.commit(got.from, got.seq, got.mass);
         hub.remove_endpoint(1);
@@ -1056,6 +1559,7 @@ mod tests {
         assert_eq!(a.try_send(1, Probe(42), 1.5, 1), Err(Probe(42)));
         let deadline = Instant::now() + Duration::from_secs(2);
         while (a.unacked() > 0 || a.global_inflight() != 0.0) && Instant::now() < deadline {
+            b.collect_acks();
             a.collect_acks();
         }
         assert_eq!(a.global_inflight(), 0.0);
@@ -1068,11 +1572,13 @@ mod tests {
         let cfg = BusConfig {
             latency: Some((Duration::from_millis(30), Duration::from_millis(40))),
             seed: 1,
+            ..BusConfig::default()
         };
         let hub = WireHub::<Probe>::loopback(&cfg, &[]);
         let mut a = hub.add_endpoint(0).unwrap();
         let mut b = hub.add_endpoint(1).unwrap();
         a.try_send(1, Probe(9), 0.0, 1).unwrap();
+        a.flush();
         // let the frame arrive, then confirm it ripens late
         let deadline = Instant::now() + Duration::from_secs(2);
         while b.pending_delayed() == 0 && Instant::now() < deadline {
@@ -1083,6 +1589,155 @@ mod tests {
         std::thread::sleep(Duration::from_millis(60));
         assert!(b.try_recv_uncommitted().is_some());
         assert_eq!(b.pending_delayed(), 0);
+    }
+
+    #[test]
+    fn deadline_flush_fires_under_light_load() {
+        let hub = hub_with(FlushPolicy {
+            max_bytes: usize::MAX,
+            max_frames: usize::MAX,
+            deadline: Duration::from_millis(5),
+        });
+        let mut a = hub.add_endpoint(0).unwrap();
+        let mut b = hub.add_endpoint(1).unwrap();
+        a.try_send(1, Probe(7), 0.0, 1).unwrap();
+        // no cap will ever trip; only a's deadline (observed by any pump
+        // of a) pushes the parcel out
+        let deadline = Instant::now() + Duration::from_secs(2);
+        let mut got = None;
+        while got.is_none() && Instant::now() < deadline {
+            a.collect_acks();
+            got = b.try_recv_uncommitted();
+            std::thread::yield_now();
+        }
+        let got = got.expect("deadline flush delivered the parcel");
+        assert_eq!(got.payload, Probe(7));
+        assert!(a.metrics().get("wire_flush_deadline_hits") >= 1);
+    }
+
+    #[test]
+    fn frame_cap_triggers_early_flush_in_one_writev() {
+        let hub = hub_with(FlushPolicy {
+            max_bytes: usize::MAX,
+            max_frames: 4,
+            deadline: Duration::from_secs(3600),
+        });
+        let mut a = hub.add_endpoint(0).unwrap();
+        let mut b = hub.add_endpoint(1).unwrap();
+        // warm the connection so HELLO is long gone from the queue
+        a.try_send(1, Probe(0), 0.0, 1).unwrap();
+        a.flush();
+        let got = recv_within(&mut b, 2000).expect("warm-up");
+        b.commit(got.from, got.seq, got.mass);
+        let calls0 = a.metrics().get("wire_writev_calls");
+        for i in 1..=3u64 {
+            a.try_send(1, Probe(i), 0.0, 1).unwrap();
+        }
+        // three queued frames sit below the cap: nothing may arrive
+        let t0 = Instant::now();
+        while Instant::now() < t0 + Duration::from_millis(80) {
+            assert!(b.try_recv_uncommitted().is_none(), "leaked before the cap");
+            std::thread::yield_now();
+        }
+        // the fourth send trips max_frames: all four flush as one batch
+        a.try_send(1, Probe(4), 0.0, 1).unwrap();
+        let mut got = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while got.len() < 4 && Instant::now() < deadline {
+            if let Some(r) = b.try_recv_uncommitted() {
+                got.push(r.payload.0);
+            }
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2, 3, 4]);
+        assert_eq!(
+            a.metrics().get("wire_writev_calls") - calls0,
+            1,
+            "one vectored write for the whole batch"
+        );
+        assert!(a.metrics().get("wire_frames_per_write") >= 4);
+    }
+
+    #[test]
+    fn byte_cap_triggers_early_flush() {
+        let hub = hub_with(FlushPolicy {
+            max_bytes: 64,
+            max_frames: usize::MAX,
+            deadline: Duration::from_secs(3600),
+        });
+        let mut a = hub.add_endpoint(0).unwrap();
+        let mut b = hub.add_endpoint(1).unwrap();
+        // each Probe MSG frame is ~16 bytes; five sends cross the 64-byte
+        // cap inside try_send, with no explicit or deadline flush
+        for i in 1..=5u64 {
+            a.try_send(1, Probe(i), 0.0, 1).unwrap();
+        }
+        let mut got = 0;
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while got < 5 && Instant::now() < deadline {
+            if b.try_recv_uncommitted().is_some() {
+                got += 1;
+            } else {
+                // the tail below the cap still needs a's deadline… no:
+                // drive a so any sub-cap remainder flushes too
+                a.collect_acks();
+                std::thread::yield_now();
+            }
+        }
+        assert_eq!(got, 5, "byte cap must flush without explicit flushes");
+    }
+
+    #[test]
+    fn fairness_cap_bounds_frames_per_pump_and_flood_still_drains() {
+        let (mut a, mut b, _hub) = pair();
+        // flood b from a raw socket: HELLO then 300 tiny MSG frames in
+        // one concatenated writev-style blob
+        let mut s = TcpStream::connect(b.local_addr()).unwrap();
+        let mut blob = Vec::new();
+        let mut hello = vec![KIND_HELLO];
+        write_varint(&mut hello, 7);
+        hello.push(PROTO_VERSION);
+        blob.extend_from_slice(&(hello.len() as u32).to_le_bytes());
+        blob.extend_from_slice(&hello);
+        for i in 0..300u64 {
+            let mut msg = vec![KIND_MSG];
+            write_varint(&mut msg, i);
+            write_f64(&mut msg, 0.0);
+            Probe(i).encode(&mut msg);
+            blob.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+            blob.extend_from_slice(&msg);
+        }
+        s.write_all(&blob).unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        // the first pump of b sees the whole backlog but may parse at
+        // most PUMP_FRAMES_PER_CONN frames of it
+        let after_one = b.pending_delayed();
+        assert!(after_one >= 1, "flood arrived");
+        assert!(
+            after_one <= PUMP_FRAMES_PER_CONN,
+            "one pump parsed {after_one} frames; the fairness cap is {PUMP_FRAMES_PER_CONN}"
+        );
+        // the flooded endpoint's send half is not starved: it can still
+        // ship a parcel of its own mid-flood
+        b.try_send(0, Probe(9), 0.0, 1).unwrap();
+        b.flush();
+        assert!(
+            recv_within(&mut a, 2000).is_some(),
+            "flooded endpoint must still send"
+        );
+        // and repeated pumps drain the whole flood
+        let mut drained = 0;
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while drained < 300 && Instant::now() < deadline {
+            if b.try_recv_uncommitted().is_some() {
+                drained += 1;
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        assert_eq!(drained, 300, "the flood must drain completely");
+        drop(s);
     }
 
     #[test]
@@ -1168,15 +1823,18 @@ mod tests {
         a.try_send(1, Probe(3), 0.75, 1).unwrap();
         assert!((a.global_inflight() - 0.75).abs() < 1e-15);
         assert_eq!(hub_a.monitor().undelivered(), 1);
+        a.flush();
         let got = recv_within(&mut b, 2000).expect("delivered");
         // the receiving process never saw the increment, so commit must
         // not touch its account
         b.commit(got.from, got.seq, got.mass);
         assert_eq!(b.global_inflight(), 0.0);
         assert_eq!(hub_b.monitor().undelivered(), 0);
-        // the sender releases when the ACK lands
+        // the sender releases when the ACK lands (b's deadline flush
+        // pushes it out as soon as b is driven again)
         let deadline = Instant::now() + Duration::from_secs(2);
         while hub_a.monitor().undelivered() > 0 && Instant::now() < deadline {
+            b.collect_acks();
             a.collect_acks();
         }
         assert_eq!(a.global_inflight(), 0.0);
@@ -1213,6 +1871,8 @@ mod tests {
                     }
                 }
             }
+            // push any tail below the flush caps before handing a back
+            a.flush();
             a
         });
         let mut seen = 0;
@@ -1227,6 +1887,7 @@ mod tests {
         assert_eq!(seen, 100);
         let deadline = Instant::now() + Duration::from_secs(5);
         while a.unacked() > 0 && Instant::now() < deadline {
+            b.collect_acks(); // b's queued ACKs flush on its deadline
             a.collect_acks();
         }
         assert_eq!(a.unacked(), 0);

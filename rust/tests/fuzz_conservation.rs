@@ -26,7 +26,7 @@ use diter::linalg::vec_ops::norm1;
 use diter::partition::{Partition, PidState};
 use diter::prng::Xoshiro256pp;
 use diter::solver::SequenceKind;
-use diter::transport::CoalescePolicy;
+use diter::transport::{CoalescePolicy, FlushPolicy};
 
 const N: usize = 220;
 const K: usize = 3;
@@ -83,10 +83,15 @@ fn handoff_somewhere(engine: &mut StreamingEngine, rng: &mut Xoshiro256pp) {
 }
 
 fn fuzz(rebase: RebaseMode, seed: u64) {
-    fuzz_with(rebase, seed, None)
+    fuzz_with(rebase, seed, None, None)
 }
 
-fn fuzz_with(rebase: RebaseMode, seed: u64, transport: Option<TransportKind>) {
+fn fuzz_with(
+    rebase: RebaseMode,
+    seed: u64,
+    transport: Option<TransportKind>,
+    wire_flush: Option<FlushPolicy>,
+) {
     let g = power_law_web_graph(N, 5, 0.1, seed);
     let mg = MutableDigraph::from_digraph(&g, N);
     let mut cfg = DistributedConfig::new(Partition::contiguous(N, K).unwrap())
@@ -115,6 +120,9 @@ fn fuzz_with(rebase: RebaseMode, seed: u64, transport: Option<TransportKind>) {
     cfg.max_wall = Duration::from_secs(60);
     if let Some(t) = transport {
         cfg = cfg.with_transport(t);
+    }
+    if let Some(f) = wire_flush {
+        cfg = cfg.with_wire_flush(f);
     }
     let mut engine = StreamingEngine::new(mg, 0.85, true, cfg).unwrap();
     let mut stream = MutationStream::new(ChurnModel::RandomRewire, seed ^ 0xF0);
@@ -187,5 +195,25 @@ fn fuzz_conservation_local_protocol() {
 /// this cell keeps one wire run in the default suite.)
 #[test]
 fn fuzz_conservation_wire_loopback() {
-    fuzz_with(RebaseMode::Local, 0xFA57_0003, Some(TransportKind::Wire));
+    fuzz_with(RebaseMode::Local, 0xFA57_0003, Some(TransportKind::Wire), None);
+}
+
+/// The wire fuzz again under an adversarially tiny flush policy: every
+/// bound trips on every send (1-byte budget, 1-frame cap, zero
+/// deadline), so frames flush one syscall at a time through the exact
+/// degenerate path the batching fast path is supposed to subsume.
+/// Conservation must be bit-for-bit indifferent to *when* queued frames
+/// reach the socket.
+#[test]
+fn fuzz_conservation_wire_degenerate_flush() {
+    fuzz_with(
+        RebaseMode::Local,
+        0xFA57_0004,
+        Some(TransportKind::Wire),
+        Some(FlushPolicy {
+            max_bytes: 1,
+            max_frames: 1,
+            deadline: Duration::ZERO,
+        }),
+    );
 }

@@ -7,7 +7,10 @@
 
 use diter::coordinator::{Handoff, WorkerMsg};
 use diter::prng::Xoshiro256pp;
-use diter::transport::{BusConfig, Transport, WireCodec, WireHub};
+use diter::transport::wire::{
+    encode_msg_frame, read_f64, read_varint, write_f64, write_varint, KIND_MSG, MAX_FRAME,
+};
+use diter::transport::{BusConfig, ColumnPools, Transport, WireCodec, WireHub};
 
 /// Ascending, distinct coordinates — the shape coalesced parcels have
 /// on the real send path (the codec itself accepts any order).
@@ -148,6 +151,9 @@ fn loopback_tcp_round_trip_conserves_accounting() {
     a.send(1, parcel.clone(), 1.0, 64).expect("send parcel");
     let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
     let got = loop {
+        // sends are deferred under the flush policy: the sender has to
+        // keep being pumped for its deadline flush to fire
+        a.collect_acks();
         if let Some(r) = b.try_recv_uncommitted() {
             break r;
         }
@@ -171,9 +177,11 @@ fn loopback_tcp_round_trip_conserves_accounting() {
         0.0,
         "loopback commit settles the shared account"
     );
-    // the ACK flows back and releases the sender's retention
+    // the ACK flows back and releases the sender's retention; the
+    // receiver has to be pumped too so its queued ACK frame flushes
     let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
     loop {
+        b.collect_acks();
         a.collect_acks();
         if a.unacked() == 0 {
             break;
@@ -183,5 +191,181 @@ fn loopback_tcp_round_trip_conserves_accounting() {
             "ACK never released the retained parcel"
         );
         std::thread::yield_now();
+    }
+}
+
+/// The pooled in-place frame encode (length prefix reserved up front and
+/// patched after the body lands) must be byte-identical to the PR 6
+/// shape — encode the body into its own `Vec`, then prepend the length —
+/// across the full seeded corpus, including when the frame buffer is a
+/// dirty recycled one.
+#[test]
+fn pooled_frame_encode_is_byte_identical_to_vec_encode() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x0D17_E001);
+    let mut frame = vec![0xEEu8; 37]; // stale bytes from a previous frame
+    for case in 0..200 {
+        let msg = random_msg(&mut rng);
+        let seq = rng.next_u64() >> 16;
+        let mass = rng.uniform(-2.0, 2.0);
+
+        let mut body = vec![KIND_MSG];
+        write_varint(&mut body, seq);
+        write_f64(&mut body, mass);
+        msg.encode(&mut body);
+        let mut expect = (body.len() as u32).to_le_bytes().to_vec();
+        expect.extend_from_slice(&body);
+
+        encode_msg_frame(&mut frame, seq, mass, &msg);
+        assert_eq!(frame, expect, "case {case}: pooled encode diverged");
+    }
+}
+
+/// The pooled column decode must accept exactly what the plain decode
+/// accepts and produce equal messages, with the column vectors cycling
+/// through the pools between cases.
+#[test]
+fn pooled_decode_matches_plain_decode_over_corpus() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x0D17_E001);
+    let mut pools = ColumnPools::new(8);
+    for case in 0..200 {
+        let msg = random_msg(&mut rng);
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        let plain = WorkerMsg::decode(&buf)
+            .unwrap_or_else(|e| panic!("case {case}: plain decode failed: {e}"));
+        let pooled = WorkerMsg::decode_pooled(&buf, &mut pools)
+            .unwrap_or_else(|e| panic!("case {case}: pooled decode failed: {e}"));
+        assert_eq!(pooled, plain, "case {case}");
+        pooled.reclaim(&mut pools);
+    }
+}
+
+/// Concatenate `msgs` into one `writev`-style buffer of back-to-back
+/// frames, the exact byte stream a batched flush puts on the socket.
+fn concat_frames(msgs: &[(u64, f64, WorkerMsg)]) -> Vec<u8> {
+    let mut blob = Vec::new();
+    let mut frame = Vec::new();
+    for (seq, mass, msg) in msgs {
+        encode_msg_frame(&mut frame, *seq, *mass, msg);
+        blob.extend_from_slice(&frame);
+    }
+    blob
+}
+
+/// Byte offsets where each frame in `blob` ends (cumulative), plus a
+/// leading 0 — the oracle for which frames are wholly inside a prefix.
+fn frame_bounds(blob: &[u8]) -> Vec<usize> {
+    let mut bounds = vec![0usize];
+    let mut pos = 0;
+    while pos < blob.len() {
+        let len = u32::from_le_bytes(blob[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 4 + len;
+        bounds.push(pos);
+    }
+    bounds
+}
+
+/// Walk a concatenated buffer exactly like the endpoint's pump does:
+/// length prefix, validity check, strict body decode. `Ok` carries the
+/// messages decoded before an incomplete tail; `Err` carries the ones
+/// decoded before a corrupt frame killed the stream.
+#[allow(clippy::type_complexity)]
+fn parse_frames(
+    buf: &[u8],
+) -> std::result::Result<Vec<(u64, f64, WorkerMsg)>, Vec<(u64, f64, WorkerMsg)>> {
+    let mut out = Vec::new();
+    let mut pos = 0;
+    while buf.len() - pos >= 4 {
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        if len == 0 || len > MAX_FRAME {
+            return Err(out);
+        }
+        if buf.len() - pos - 4 < len {
+            break; // incomplete tail: wait for more bytes
+        }
+        let body = &buf[pos + 4..pos + 4 + len];
+        let parsed = (|| {
+            if body.first() != Some(&KIND_MSG) {
+                return None;
+            }
+            let mut p = 1;
+            let seq = read_varint(body, &mut p).ok()?;
+            let mass = read_f64(body, &mut p).ok()?;
+            let msg = WorkerMsg::decode(&body[p..]).ok()?;
+            Some((seq, mass, msg))
+        })();
+        match parsed {
+            Some(t) => out.push(t),
+            None => return Err(out),
+        }
+        pos += 4 + len;
+    }
+    Ok(out)
+}
+
+/// Truncating a multi-frame batched buffer at *every* byte offset must
+/// yield exactly the frames wholly inside the cut — never a corrupt
+/// stream, never a partially-decoded message, never a panic.
+#[test]
+fn multi_frame_truncation_yields_only_complete_prefix_frames() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x0D17_E004);
+    for round in 0..8 {
+        let msgs: Vec<(u64, f64, WorkerMsg)> = (0..4)
+            .map(|i| (rng.next_u64() >> 16, 0.25 * (i + 1) as f64, random_msg(&mut rng)))
+            .collect();
+        let blob = concat_frames(&msgs);
+        let bounds = frame_bounds(&blob);
+        for cut in 0..=blob.len() {
+            let complete = bounds.iter().filter(|&&b| b > 0 && b <= cut).count();
+            match parse_frames(&blob[..cut]) {
+                Ok(got) => {
+                    assert_eq!(
+                        got.len(),
+                        complete,
+                        "round {round} cut {cut}: wrong frame count"
+                    );
+                    for (g, m) in got.iter().zip(&msgs) {
+                        assert_eq!(g, m, "round {round} cut {cut}");
+                    }
+                }
+                Err(_) => panic!(
+                    "round {round} cut {cut}: truncation must read as \
+                     incomplete, never as corruption"
+                ),
+            }
+        }
+    }
+}
+
+/// Flipping any single bit in a batched buffer must never panic and
+/// must never disturb the frames that lie wholly before the flipped
+/// byte — corruption detection is per-frame, not per-batch.
+#[test]
+fn multi_frame_bit_flips_never_forge_prior_frames() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x0D17_E005);
+    for _ in 0..4 {
+        let msgs: Vec<(u64, f64, WorkerMsg)> = (0..4)
+            .map(|_| (rng.next_u64() >> 16, 0.5, random_msg(&mut rng)))
+            .collect();
+        let blob = concat_frames(&msgs);
+        let bounds = frame_bounds(&blob);
+        for _ in 0..256 {
+            let mut bad = blob.clone();
+            let at = rng.below(bad.len());
+            bad[at] ^= 1 << rng.below(8);
+            // frames ending at or before the flipped byte are untouched
+            let intact = bounds.iter().filter(|&&b| b > 0 && b <= at).count();
+            let decoded = match parse_frames(&bad) {
+                Ok(v) | Err(v) => v, // either way: must not panic
+            };
+            assert!(
+                decoded.len() >= intact,
+                "flip at {at}: lost {} intact prior frames",
+                intact - decoded.len()
+            );
+            for (g, m) in decoded.iter().take(intact).zip(&msgs) {
+                assert_eq!(g, m, "flip at {at} disturbed a prior frame");
+            }
+        }
     }
 }

@@ -37,6 +37,20 @@ Compares a fresh bench artifact against its committed baseline and fails
         the hot loop creeping back up is exactly what this bench exists
         to catch.
 
+  * --kind wire — `benches/wire_throughput.rs`:
+      - batched_vs_unbatched_speedup: parcels/sec under the default
+        batching FlushPolicy vs flush-per-frame (the pre-batching
+        behaviour), same-binary same-machine; once a measured baseline
+        lands it must stay above 1.0 — the vectored-write fast path
+        existing *and being slower* than flushing every frame is a
+        transport regression, whatever the baseline ratio says. Also
+        gated as a ratio floor against the baseline.
+      - batched parcels_per_sec: only enforced when the baseline was
+        recorded in the same environment.
+      - batched allocs_per_parcel: same-environment ceiling — allocator
+        traffic creeping back into the pooled encode/decode cycle is
+        exactly what this bench exists to catch (§8.8 target is 0).
+
 A baseline with "measured": false is a bootstrap placeholder (the perf
 trajectory has not recorded its first real run yet): the gate prints the
 fresh numbers and exits 0 so the first CI run can seed the baseline from
@@ -164,11 +178,63 @@ def gate_hotpath(base, cur, args, failures):
               "not enforced (ratio gates above still apply)")
 
 
+def gate_wire(base, cur, args, failures):
+    tol = 1.0 - args.max_regress
+    cur_speedup = cur.get("batched_vs_unbatched_speedup")
+    cur_rate = (cur.get("batched") or {}).get("parcels_per_sec")
+    cur_allocs = (cur.get("batched") or {}).get("allocs_per_parcel")
+    cur_syscalls = (cur.get("batched") or {}).get("syscalls_per_kparcel")
+    print(f"current: batched_vs_unbatched={fmt(cur_speedup, '.2f')}x  "
+          f"batched parcels/sec={fmt(cur_rate, '.3e')}  "
+          f"allocs/parcel={fmt(cur_allocs, '.3f')}  "
+          f"syscalls/kparcel={fmt(cur_syscalls, '.1f')}  "
+          f"env={cur.get('environment')}")
+    if not base.get("measured", False):
+        print("baseline is a bootstrap placeholder (measured=false): gate passes; "
+              "seed it from this run's uploaded artifact to arm the gate.")
+        return
+    # batching must beat flush-per-frame, full stop — a <= 1.0 ratio
+    # means the vectored-write queue is pure overhead
+    if not isinstance(cur_speedup, (int, float)) or cur_speedup <= 1.0:
+        failures.append(
+            f"batched_vs_unbatched_speedup {fmt(cur_speedup, '.2f')}x <= 1.0: "
+            "the batching fast path no longer beats flush-per-frame")
+    gate_ratio(failures, "batched_vs_unbatched_speedup",
+               base.get("batched_vs_unbatched_speedup"), cur_speedup, tol,
+               args.max_regress)
+    base_rate = (base.get("batched") or {}).get("parcels_per_sec")
+    if base_rate and base.get("environment") == cur.get("environment"):
+        floor = base_rate * tol
+        print(f"baseline batched parcels/sec={base_rate:.3e}  "
+              f"(floor {floor:.3e}, same env)")
+        if not isinstance(cur_rate, (int, float)) or cur_rate < floor:
+            failures.append(
+                f"batched parcels/sec regressed: {cur_rate} < {floor:.3e} "
+                f"(baseline {base_rate:.3e}, tolerance {args.max_regress:.0%})")
+    elif base_rate:
+        print("baseline recorded in a different environment: absolute "
+              "parcels/sec not enforced (ratio gate above still applies)")
+    base_allocs = (base.get("batched") or {}).get("allocs_per_parcel")
+    if isinstance(base_allocs, (int, float)) and \
+            base.get("environment") == cur.get("environment"):
+        ceiling = base_allocs * (1.0 + args.max_regress) + 1.0
+        print(f"baseline batched allocs/parcel={base_allocs:.3f}  "
+              f"(ceiling {ceiling:.3f}, same env)")
+        if not isinstance(cur_allocs, (int, float)) or cur_allocs > ceiling:
+            failures.append(
+                f"batched allocs_per_parcel regressed: {cur_allocs} > "
+                f"{ceiling:.3f} (baseline {base_allocs:.3f}) — allocator "
+                "traffic is creeping back into the wire fast path")
+    elif isinstance(base_allocs, (int, float)):
+        print("baseline recorded in a different environment: allocs/parcel "
+              "not enforced (ratio gates above still apply)")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True, help="committed BENCH_*.json")
     ap.add_argument("--current", required=True, help="freshly produced BENCH_*.json")
-    ap.add_argument("--kind", choices=["stream", "elastic", "hotpath"],
+    ap.add_argument("--kind", choices=["stream", "elastic", "hotpath", "wire"],
                     default="stream",
                     help="which bench artifact schema to gate (default stream)")
     ap.add_argument("--max-regress", type=float, default=0.20,
@@ -182,6 +248,8 @@ def main():
         gate_elastic(base, cur, args, failures)
     elif args.kind == "hotpath":
         gate_hotpath(base, cur, args, failures)
+    elif args.kind == "wire":
+        gate_wire(base, cur, args, failures)
     else:
         gate_stream(base, cur, args, failures)
 
