@@ -104,7 +104,9 @@ const READ_CHUNK: usize = 16 * 1024;
 
 /// Per-connection read budget per pump, and the ring high-water mark
 /// above which reading pauses until parsing catches up (TCP backpressure
-/// then throttles the sender).
+/// then throttles the sender). The mark is frame-aware: a frame whose
+/// `4+len` exceeds it keeps reading until complete, because parsing only
+/// consumes complete frames and pausing would wedge the connection.
 const READ_BUDGET: usize = 256 * 1024;
 
 /// Max frames gathered into a single `writev`.
@@ -728,7 +730,8 @@ impl RecvRing {
 
     /// Whether a complete, well-formed-length frame is parseable right
     /// now (used to keep an EOF'd connection alive until the fairness
-    /// cap has let its backlog drain).
+    /// cap has let its backlog drain, and to report deferred frames to
+    /// quiescence checks).
     fn has_complete_frame(&self) -> bool {
         let avail = self.buffered();
         if avail < 4 {
@@ -737,6 +740,26 @@ impl RecvRing {
         let b = self.readable();
         let len = u32::from_le_bytes(b[..4].try_into().expect("4-byte slice")) as usize;
         len != 0 && len <= MAX_FRAME && avail >= 4 + len
+    }
+
+    /// Bytes the frame at the head of the ring still needs before it is
+    /// parseable — zero when the head frame is complete, its length
+    /// prefix is corrupt (the parse phase will kill the connection), or
+    /// fewer than 4 bytes are buffered. Parsing only consumes complete
+    /// frames, so the read phase must keep reading past the high-water
+    /// mark while this is non-zero: a frame larger than `READ_BUDGET`
+    /// could otherwise never finish arriving.
+    fn head_frame_deficit(&self) -> usize {
+        let avail = self.buffered();
+        if avail < 4 {
+            return 0;
+        }
+        let b = self.readable();
+        let len = u32::from_le_bytes(b[..4].try_into().expect("4-byte slice")) as usize;
+        if len == 0 || len > MAX_FRAME {
+            return 0;
+        }
+        (4 + len).saturating_sub(avail)
     }
 }
 
@@ -952,15 +975,21 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
                 self.flush_conn(ci);
             }
         }
-        // read phase: budgeted per connection, and paused entirely while
-        // a ring is over its high-water mark — parsing (capped below for
-        // fairness) catches up and TCP backpressure throttles the peer
+        // read phase: budgeted per connection, and paused while a ring
+        // is over its high-water mark — parsing (capped below for
+        // fairness) catches up and TCP backpressure throttles the peer.
+        // The pause is frame-aware: an in-progress frame with 4+len over
+        // the mark keeps reading (budget raised to cover its deficit,
+        // bounded by MAX_FRAME via the length check) because parsing
+        // only consumes complete frames — pausing on such a frame would
+        // wedge the connection forever
         for ci in 0..self.conns.len() {
             let c = &mut self.conns[ci];
-            if !c.alive || c.rbuf.buffered() >= READ_BUDGET {
+            let deficit = c.rbuf.head_frame_deficit();
+            if !c.alive || (c.rbuf.buffered() >= READ_BUDGET && deficit == 0) {
                 continue;
             }
-            let mut budget = READ_BUDGET;
+            let mut budget = READ_BUDGET.max(deficit);
             loop {
                 c.rbuf.make_room(READ_CHUNK);
                 match c.stream.read(c.rbuf.space()) {
@@ -1119,13 +1148,17 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
     }
 
     /// See [`Transport::try_send`]. The destination address is resolved
-    /// — and the frame queued — under the directory read lock on *every*
-    /// send, so [`WireHub::remove_endpoint`] (a write) strictly orders
-    /// with in-progress sends exactly like the bus: after removal
-    /// returns, every accepted frame is queued (its flush deadline
-    /// bounds delivery) and every later send fails fast and re-routes.
-    /// A cached connection is deliberately *not* trusted across that
-    /// boundary.
+    /// under a short directory read lock, any dial happens with the lock
+    /// *released* (a blocking `connect_timeout` must not stall directory
+    /// writers or other senders), and the slot is re-checked under a
+    /// fresh read lock — the frame is queued under that lock — so
+    /// [`WireHub::remove_endpoint`] (a write) strictly orders with
+    /// in-progress sends exactly like the bus: after removal returns,
+    /// every accepted frame is queued (its flush deadline bounds
+    /// delivery) and every later send fails fast and re-routes; a
+    /// removal or re-registration that raced the dial fails the send
+    /// before any accounting. A cached connection is deliberately *not*
+    /// trusted across that boundary.
     ///
     /// Once the frame is queued the send has **succeeded**: accounting
     /// happened before queueing, and a connection that later dies during
@@ -1142,13 +1175,22 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
     ) -> std::result::Result<(), T> {
         self.pump();
         let dir = self.dir.clone();
-        let d = dir.read().unwrap_or_else(|e| e.into_inner());
-        let Some(addr) = d.addrs.get(to).and_then(|a| *a) else {
-            return Err(payload);
+        let addr = {
+            let d = dir.read().unwrap_or_else(|e| e.into_inner());
+            match d.addrs.get(to).and_then(|a| *a) {
+                Some(addr) => addr,
+                None => return Err(payload),
+            }
         };
+        // dial (if needed) with the lock released, then re-validate the
+        // slot under a fresh read lock before accounting and queueing
         let Some(ci) = self.conn_to(to, addr) else {
             return Err(payload);
         };
+        let d = dir.read().unwrap_or_else(|e| e.into_inner());
+        if d.addrs.get(to).and_then(|a| *a) != Some(addr) {
+            return Err(payload);
+        }
         let seq = self.next_seq;
         // encode in place into a recycled frame buffer — length prefix
         // reserved up front, patched after the body (no body Vec)
@@ -1252,11 +1294,21 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
     }
 
     /// See [`Transport::pending_delayed`]: everything readable is pumped
-    /// into the inbox first, so a zero return means no received frame is
-    /// waiting out its latency at this instant.
+    /// first, and the count covers both the inbox (frames waiting out
+    /// their latency) and every connection whose ring still holds a
+    /// complete frame the per-pump fairness cap deferred — so a zero
+    /// return really does mean no received frame is waiting anywhere at
+    /// this instant. A deferred frame may turn out to be a control frame
+    /// (ACK/HELLO), which errs conservative: quiescence checks observe a
+    /// non-zero count until the next pump parses it, never a false zero.
     pub fn pending_delayed(&mut self) -> usize {
         self.pump();
-        self.inbox.len()
+        let deferred = self
+            .conns
+            .iter()
+            .filter(|c| c.rbuf.has_complete_frame())
+            .count();
+        self.inbox.len() + deferred
     }
 
     /// See [`Transport::global_inflight`] (this process's account).
@@ -1711,12 +1763,20 @@ mod tests {
         s.flush().unwrap();
         std::thread::sleep(Duration::from_millis(50));
         // the first pump of b sees the whole backlog but may parse at
-        // most PUMP_FRAMES_PER_CONN frames of it
+        // most PUMP_FRAMES_PER_CONN frames of it into the inbox ...
         let after_one = b.pending_delayed();
         assert!(after_one >= 1, "flood arrived");
+        let parsed = b.inbox.len();
         assert!(
-            after_one <= PUMP_FRAMES_PER_CONN,
-            "one pump parsed {after_one} frames; the fairness cap is {PUMP_FRAMES_PER_CONN}"
+            parsed <= PUMP_FRAMES_PER_CONN,
+            "one pump parsed {parsed} frames; the fairness cap is {PUMP_FRAMES_PER_CONN}"
+        );
+        // ... and pending_delayed still reports the deferred ring
+        // backlog on top, so the cap cannot fake quiescence
+        assert!(
+            after_one > parsed,
+            "pending_delayed ({after_one}) must count the complete frames \
+             the fairness cap left in the ring beyond the {parsed} parsed"
         );
         // the flooded endpoint's send half is not starved: it can still
         // ship a parcel of its own mid-flood
@@ -1738,6 +1798,64 @@ mod tests {
         }
         assert_eq!(drained, 300, "the flood must drain completely");
         drop(s);
+    }
+
+    /// A payload whose encoded frame can be made arbitrarily large
+    /// (Probe is a single varint, which can't cross the read budget).
+    #[derive(Debug, Clone, PartialEq)]
+    struct Blob(Vec<u8>);
+    impl WireCodec for Blob {
+        fn encode(&self, out: &mut Vec<u8>) {
+            write_varint(out, self.0.len() as u64);
+            out.extend_from_slice(&self.0);
+        }
+        fn decode(buf: &[u8]) -> Result<Self> {
+            let mut pos = 0;
+            let n = read_varint(buf, &mut pos)? as usize;
+            if buf.len() - pos != n {
+                return Err(corrupt("blob length"));
+            }
+            Ok(Blob(buf[pos..].to_vec()))
+        }
+    }
+
+    /// Regression: a single frame with `4+len > READ_BUDGET` must still
+    /// arrive. Parsing only consumes complete frames, so a high-water
+    /// pause that is not frame-aware stops reading such a frame midway
+    /// and the connection wedges forever — the sender's in-flight mass
+    /// never releases and the epoch/handoff protocol hangs.
+    #[test]
+    fn frame_larger_than_read_budget_is_received() {
+        let hub = WireHub::<Blob>::loopback(&BusConfig::default(), &[]);
+        let mut a = hub.add_endpoint(0).unwrap();
+        let mut b = hub.add_endpoint(1).unwrap();
+        let big = vec![0x5A; 3 * READ_BUDGET + 13];
+        a.try_send(1, Blob(big.clone()), 1.0, big.len()).unwrap();
+        a.flush();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let got = loop {
+            if let Some(r) = b.try_recv_uncommitted() {
+                break r;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "oversized frame never completed: the high-water mark wedged the connection"
+            );
+            // keep draining a's send queue (partial writev progress) and
+            // collecting the eventual ACK
+            a.collect_acks();
+            std::thread::yield_now();
+        };
+        assert_eq!(got.payload.0.len(), big.len());
+        assert_eq!(got.payload.0, big);
+        b.commit(got.from, got.seq, got.mass);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while a.unacked() > 0 && Instant::now() < deadline {
+            b.collect_acks();
+            a.collect_acks();
+        }
+        assert_eq!(a.unacked(), 0, "the oversized parcel must be acked");
+        assert!(a.global_inflight().abs() < 1e-12);
     }
 
     #[test]

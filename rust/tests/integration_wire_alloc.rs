@@ -128,9 +128,16 @@ fn wire_loopback_steady_state_is_allocation_free() {
         metrics.get("wire_frames_per_write") >= 2,
         "writev batching never packed ≥2 frames into one syscall"
     );
-    assert_eq!(
-        a.global_inflight() + b.global_inflight(),
-        2.0 * a.global_inflight(), // same shared account, read twice
-        "loopback endpoints must share one in-flight account"
-    );
+    // every bounce re-sends immediately after committing, so at any
+    // rest point the whole primed mass (PARCELS parcels of 1.0 each) is
+    // in flight — and both endpoints must read it off the one shared
+    // loopback account (split accounts would each hold only that
+    // endpoint's sends minus its commits, nowhere near the total)
+    for (name, inflight) in [("a", a.global_inflight()), ("b", b.global_inflight())] {
+        assert!(
+            (inflight - PARCELS as f64).abs() < 1e-9,
+            "endpoint {name} reads an in-flight account of {inflight}; the shared \
+             loopback account must hold exactly the {PARCELS} circulating parcels"
+        );
+    }
 }
