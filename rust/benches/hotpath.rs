@@ -162,7 +162,7 @@ fn main() {
             buf.add(d, j, 1e-6);
         }
         let mut out = 0usize;
-        buf.flush(true, |_, coords, _, _| out += coords.len());
+        buf.flush(true, |_, coords, _, _, _| out += coords.len());
         black_box(out)
     });
     table.row(&[
@@ -182,7 +182,7 @@ fn main() {
             buf.add_slot(d, sl, 1e-6);
         }
         let mut out = 0usize;
-        buf.flush(true, |_, coords, _, _| out += coords.len());
+        buf.flush(true, |_, coords, _, _, _| out += coords.len());
         black_box(out)
     });
     table.row(&[

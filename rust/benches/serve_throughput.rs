@@ -1,0 +1,141 @@
+//! Bench: multi-tenant query serving throughput — L concurrent query
+//! lanes sharing one matrix walk vs a sequential one-query-at-a-time
+//! baseline, with graph churn landing mid-serve.
+//!
+//! D-iteration is linear in B, so lanes amortize the matrix walk and the
+//! wire: the batched configuration should complete the same query load
+//! in less wall time than draining the queue one lane at a time. Emits
+//! `BENCH_serve.json` (queries/sec, p50/p99 time-to-ε) for the CI perf
+//! gate (`tools/bench_gate.py --kind serve`).
+
+use diter::bench_harness::{bench_header, bench_json_dir, fmt_secs, Json, Table};
+use diter::coordinator::{DistributedConfig, Query, QueryState, ServeConfig, ServeEngine};
+use diter::graph::{power_law_web_graph, ChurnModel, MutableDigraph, MutationStream};
+use diter::partition::Partition;
+use diter::prng::Xoshiro256pp;
+use std::time::{Duration, Instant};
+
+/// Serve `queries` PPR queries through `lanes` concurrent lanes with a
+/// churn batch after every other completion. Returns (wall seconds,
+/// sorted time-to-ε samples).
+fn run(n: usize, k: usize, lanes: usize, queries: usize, eps: f64, seed: u64) -> (f64, Vec<f64>) {
+    let g = power_law_web_graph(n, 6, 0.1, seed);
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let cfg = DistributedConfig::new(Partition::contiguous(n, k).unwrap())
+        .with_tol(1e-9)
+        .with_seed(seed);
+    let serve_cfg = ServeConfig {
+        queue_cap: queries,
+        default_eps: eps,
+        ..Default::default()
+    };
+    let mut serve = ServeEngine::new(mg, 0.85, true, cfg, serve_cfg, lanes).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x5EED);
+    for _ in 0..queries {
+        let seeds = [rng.below(n), rng.below(n)];
+        serve
+            .submit(Query::ppr(&seeds, 0.85, eps))
+            .expect("queue sized for the full load");
+    }
+    let mut churn = MutationStream::new(ChurnModel::RandomRewire, seed ^ 0xC0FFEE);
+    let mut times = Vec::with_capacity(queries);
+    let mut since_churn = 0usize;
+    let t0 = Instant::now();
+    let deadline = t0 + Duration::from_secs(300);
+    while times.len() < queries && Instant::now() < deadline {
+        for done in serve.poll().unwrap() {
+            assert_eq!(done.state, QueryState::Served, "no deadlines configured");
+            times.push(done.time_to_eps_secs.unwrap_or(0.0));
+            since_churn += 1;
+            if since_churn >= 2 {
+                since_churn = 0;
+                let batch = churn.next_batch(serve.engine().graph(), 12);
+                serve.apply_mutations(&batch).unwrap();
+            }
+        }
+        std::thread::sleep(Duration::from_micros(100));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(times.len(), queries, "every query must be served");
+    serve.finish().unwrap();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (wall, times)
+}
+
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn main() {
+    bench_header(
+        "serve_throughput",
+        "multi-lane query serving vs sequential one-query-at-a-time, churn underneath",
+    );
+    let n = std::env::var("DITER_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000usize);
+    let k = 3usize;
+    let lanes = 3usize;
+    let queries = 12usize;
+    let eps = 1e-6;
+    let seed = 17u64;
+    println!("graph: {n} nodes, K={k}, {queries} PPR queries, ε={eps:.0e}\n");
+
+    let (seq_wall, seq_times) = run(n, k, 1, queries, eps, seed);
+    let (bat_wall, bat_times) = run(n, k, lanes, queries, eps, seed);
+    let speedup = seq_wall / bat_wall.max(1e-9);
+    let seq_qps = queries as f64 / seq_wall.max(1e-9);
+    let bat_qps = queries as f64 / bat_wall.max(1e-9);
+
+    let mut table = Table::new(&["config", "wall", "queries/s", "p50 tte", "p99 tte"]);
+    table.row(&[
+        "sequential (1 lane)".into(),
+        fmt_secs(seq_wall),
+        format!("{seq_qps:.2}"),
+        fmt_secs(pct(&seq_times, 0.50)),
+        fmt_secs(pct(&seq_times, 0.99)),
+    ]);
+    table.row(&[
+        format!("batched ({lanes} lanes)"),
+        fmt_secs(bat_wall),
+        format!("{bat_qps:.2}"),
+        fmt_secs(pct(&bat_times, 0.50)),
+        fmt_secs(pct(&bat_times, 0.99)),
+    ]);
+    print!("{}", table.render());
+    println!("\nbatched vs sequential: {speedup:.2}x");
+
+    let bench_env = std::env::var("DITER_BENCH_ENV").unwrap_or_else(|_| "local".into());
+    let json = Json::new()
+        .int_field("schema", 1)
+        .str_field("bench", "serve_throughput")
+        .bool_field("measured", true)
+        .str_field("environment", &bench_env)
+        .int_field("n", n as u64)
+        .int_field("k", k as u64)
+        .int_field("lanes", lanes as u64)
+        .int_field("queries", queries as u64)
+        .num_field("eps", eps)
+        .num_field("sequential_wall_secs", seq_wall)
+        .num_field("batched_wall_secs", bat_wall)
+        .num_field("sequential_queries_per_sec", seq_qps)
+        .num_field("batched_queries_per_sec", bat_qps)
+        .num_field("p50_time_to_eps_secs", pct(&bat_times, 0.50))
+        .num_field("p99_time_to_eps_secs", pct(&bat_times, 0.99))
+        .num_field("sequential_p50_time_to_eps_secs", pct(&seq_times, 0.50))
+        .num_field("sequential_p99_time_to_eps_secs", pct(&seq_times, 0.99))
+        .num_field("batched_vs_sequential_speedup", speedup);
+    let path = bench_json_dir().join("BENCH_serve.json");
+    json.write(&path).expect("write BENCH_serve.json");
+    println!("\nwrote {}", path.display());
+
+    assert!(
+        speedup > 1.0,
+        "lanes must beat one-at-a-time serving (got {speedup:.2}x)"
+    );
+}

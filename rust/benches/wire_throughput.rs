@@ -115,6 +115,7 @@ fn run_wire(coords: usize, policy: FlushPolicy, warm_hops: usize, hops: usize) -
             epoch: 1,
             coords: (0..coords as u32).map(|i| i * 3 + s as u32).collect(),
             mass: (0..coords).map(|i| 1.0 / (coords * (i + 1)) as f64).collect(),
+            qids: vec![],
         };
         Transport::send(&mut a, 1, parcel, 1.0, coords).expect("prime send");
     }

@@ -15,6 +15,23 @@
 //! * **strict decode** — trailing bytes, truncation, or a count that
 //!   cannot fit the frame are errors that kill the connection, not
 //!   best-effort data.
+//!
+//! **Query-lane extension (DESIGN.md §10.4).** Multi-RHS serving adds
+//! three payload tags, chosen so a single-query engine's bytes are
+//! *identical* to the pre-lane format:
+//!
+//! * `0x13 FLUID_MQ` — a fluid parcel whose entries target more than
+//!   one query lane: the `0x10` layout plus a trailing `qids` column
+//!   (zigzag-varint deltas, one **global query id** per entry). A
+//!   parcel whose entries are all lane 0 always encodes as plain
+//!   `0x10` with no column;
+//! * `0x14 HANDOFF_ML` / `0x15 HALO_ML` — the `0x11`/`0x12` layouts
+//!   plus a `lanes` varint (≥ 2) after the count; the `h` (and for a
+//!   handoff `f`) columns are lane-blocked, `count*lanes` long, while
+//!   `b` stays `count` (the base problem owns the only static source
+//!   term — query seeds travel through the registry, not the wire).
+//!   Encode infers the lane count from the column shape, so `lanes ==
+//!   1` engines emit the plain tags unconditionally.
 
 use crate::coordinator::worker::{Handoff, WorkerMsg};
 use crate::error::Result;
@@ -24,17 +41,49 @@ use crate::transport::wire::{
     WireCodec,
 };
 
-/// Payload tag of [`WorkerMsg::Fluid`].
+/// Payload tag of [`WorkerMsg::Fluid`] with every entry on lane 0.
 pub const TAG_FLUID: u8 = 0x10;
-/// Payload tag of [`WorkerMsg::Handoff`].
+/// Payload tag of [`WorkerMsg::Handoff`] with single-lane columns.
 pub const TAG_HANDOFF: u8 = 0x11;
-/// Payload tag of [`WorkerMsg::HaloSlice`].
+/// Payload tag of [`WorkerMsg::HaloSlice`] with a single-lane column.
 pub const TAG_HALO: u8 = 0x12;
+/// Payload tag of [`WorkerMsg::Fluid`] carrying a `qids` column.
+pub const TAG_FLUID_MQ: u8 = 0x13;
+/// Payload tag of [`WorkerMsg::Handoff`] with lane-blocked `h`/`f`.
+pub const TAG_HANDOFF_ML: u8 = 0x14;
+/// Payload tag of [`WorkerMsg::HaloSlice`] with a lane-blocked `h`.
+pub const TAG_HALO_ML: u8 = 0x15;
 
 fn coords_u32(raw: Vec<u64>) -> Result<Vec<u32>> {
     raw.into_iter()
         .map(|v| u32::try_from(v).map_err(|_| corrupt("coordinate exceeds u32")))
         .collect()
+}
+
+/// Lane count implied by a lane-blocked column over `count` coordinates
+/// (1 for an empty slice: an empty message has no lane structure).
+fn infer_lanes(count: usize, blocked_len: usize) -> usize {
+    if count == 0 {
+        1
+    } else {
+        debug_assert_eq!(blocked_len % count, 0, "column is not lane-blocked");
+        blocked_len / count
+    }
+}
+
+/// Read and validate the `lanes` varint of a `*_ML` payload, returning
+/// `(lanes, count*lanes)`. Plain tags are the canonical encoding for a
+/// single lane, so `lanes < 2` is a corrupt frame, as is a blocked
+/// column too large to index.
+fn read_lanes(buf: &[u8], pos: &mut usize, count: usize) -> Result<(usize, usize)> {
+    let lanes = read_varint(buf, pos)? as usize;
+    if lanes < 2 {
+        return Err(corrupt("multi-lane payload with lanes < 2"));
+    }
+    let wide = count
+        .checked_mul(lanes)
+        .ok_or_else(|| corrupt("lane-blocked column length overflows"))?;
+    Ok((lanes, wide))
 }
 
 impl WireCodec for WorkerMsg {
@@ -44,36 +93,53 @@ impl WireCodec for WorkerMsg {
                 epoch,
                 coords,
                 mass,
+                qids,
             } => {
                 debug_assert_eq!(coords.len(), mass.len());
-                out.push(TAG_FLUID);
+                debug_assert!(qids.is_empty() || qids.len() == coords.len());
+                out.push(if qids.is_empty() {
+                    TAG_FLUID
+                } else {
+                    TAG_FLUID_MQ
+                });
                 write_varint(out, *epoch);
                 write_varint(out, coords.len() as u64);
                 write_deltas(out, coords.iter().map(|&c| u64::from(c)));
                 write_f64_slice(out, mass);
+                if !qids.is_empty() {
+                    write_deltas(out, qids.iter().map(|&q| u64::from(q)));
+                }
             }
             WorkerMsg::Handoff(ho) => {
-                debug_assert!(
-                    ho.coords.len() == ho.h_slice.len()
-                        && ho.coords.len() == ho.b_slice.len()
-                        && ho.coords.len() == ho.f_slice.len()
-                );
-                out.push(TAG_HANDOFF);
+                let count = ho.coords.len();
+                let lanes = infer_lanes(count, ho.h_slice.len());
+                debug_assert_eq!(ho.h_slice.len(), count * lanes);
+                debug_assert_eq!(ho.b_slice.len(), count);
+                debug_assert_eq!(ho.f_slice.len(), count * lanes);
+                out.push(if lanes == 1 { TAG_HANDOFF } else { TAG_HANDOFF_ML });
                 write_varint(out, ho.pid_from as u64);
                 write_varint(out, ho.pid_to as u64);
                 write_varint(out, ho.version);
                 write_varint(out, ho.epoch);
-                write_varint(out, ho.coords.len() as u64);
+                write_varint(out, count as u64);
+                if lanes > 1 {
+                    write_varint(out, lanes as u64);
+                }
                 write_deltas(out, ho.coords.iter().map(|&c| c as u64));
                 write_f64_slice(out, &ho.h_slice);
                 write_f64_slice(out, &ho.b_slice);
                 write_f64_slice(out, &ho.f_slice);
             }
             WorkerMsg::HaloSlice { epoch, coords, h } => {
-                debug_assert_eq!(coords.len(), h.len());
-                out.push(TAG_HALO);
+                let count = coords.len();
+                let lanes = infer_lanes(count, h.len());
+                debug_assert_eq!(h.len(), count * lanes);
+                out.push(if lanes == 1 { TAG_HALO } else { TAG_HALO_ML });
                 write_varint(out, *epoch);
-                write_varint(out, coords.len() as u64);
+                write_varint(out, count as u64);
+                if lanes > 1 {
+                    write_varint(out, lanes as u64);
+                }
                 write_deltas(out, coords.iter().map(|&c| u64::from(c)));
                 write_f64_slice(out, h);
             }
@@ -86,30 +152,41 @@ impl WireCodec for WorkerMsg {
         };
         let mut pos = 1;
         let msg = match tag {
-            TAG_FLUID => {
+            TAG_FLUID | TAG_FLUID_MQ => {
                 let epoch = read_varint(buf, &mut pos)?;
                 let count = read_varint(buf, &mut pos)? as usize;
                 let coords = coords_u32(read_deltas(buf, &mut pos, count)?)?;
                 let mass = read_f64_slice(buf, &mut pos, count)?;
+                let qids = if tag == TAG_FLUID_MQ {
+                    coords_u32(read_deltas(buf, &mut pos, count)?)?
+                } else {
+                    Vec::new()
+                };
                 WorkerMsg::Fluid {
                     epoch,
                     coords,
                     mass,
+                    qids,
                 }
             }
-            TAG_HANDOFF => {
+            TAG_HANDOFF | TAG_HANDOFF_ML => {
                 let pid_from = read_varint(buf, &mut pos)? as usize;
                 let pid_to = read_varint(buf, &mut pos)? as usize;
                 let version = read_varint(buf, &mut pos)?;
                 let epoch = read_varint(buf, &mut pos)?;
                 let count = read_varint(buf, &mut pos)? as usize;
+                let wide = if tag == TAG_HANDOFF_ML {
+                    read_lanes(buf, &mut pos, count)?.1
+                } else {
+                    count
+                };
                 let coords = read_deltas(buf, &mut pos, count)?
                     .into_iter()
                     .map(|v| v as usize)
                     .collect();
-                let h_slice = read_f64_slice(buf, &mut pos, count)?;
+                let h_slice = read_f64_slice(buf, &mut pos, wide)?;
                 let b_slice = read_f64_slice(buf, &mut pos, count)?;
-                let f_slice = read_f64_slice(buf, &mut pos, count)?;
+                let f_slice = read_f64_slice(buf, &mut pos, wide)?;
                 WorkerMsg::Handoff(Handoff {
                     pid_from,
                     pid_to,
@@ -121,11 +198,16 @@ impl WireCodec for WorkerMsg {
                     f_slice,
                 })
             }
-            TAG_HALO => {
+            TAG_HALO | TAG_HALO_ML => {
                 let epoch = read_varint(buf, &mut pos)?;
                 let count = read_varint(buf, &mut pos)? as usize;
+                let wide = if tag == TAG_HALO_ML {
+                    read_lanes(buf, &mut pos, count)?.1
+                } else {
+                    count
+                };
                 let coords = coords_u32(read_deltas(buf, &mut pos, count)?)?;
-                let h = read_f64_slice(buf, &mut pos, count)?;
+                let h = read_f64_slice(buf, &mut pos, wide)?;
                 WorkerMsg::HaloSlice { epoch, coords, h }
             }
             other => return Err(corrupt(&format!("unknown payload tag {other:#04x}"))),
@@ -147,38 +229,56 @@ impl WireCodec for WorkerMsg {
         };
         let mut pos = 1;
         let msg = match tag {
-            TAG_FLUID => {
+            TAG_FLUID | TAG_FLUID_MQ => {
                 let epoch = read_varint(buf, &mut pos)?;
                 let count = read_varint(buf, &mut pos)? as usize;
                 let mut coords = pools.u32s.take();
                 let mut mass = pools.f64s.take();
+                let mut qids = pools.u32s.take();
                 let cols = read_deltas_u32_into(buf, &mut pos, count, &mut coords)
-                    .and_then(|()| read_f64_slice_into(buf, &mut pos, count, &mut mass));
+                    .and_then(|()| read_f64_slice_into(buf, &mut pos, count, &mut mass))
+                    .and_then(|()| {
+                        if tag == TAG_FLUID_MQ {
+                            read_deltas_u32_into(buf, &mut pos, count, &mut qids)
+                        } else {
+                            Ok(())
+                        }
+                    });
                 if let Err(e) = cols {
                     pools.u32s.give(coords);
                     pools.f64s.give(mass);
+                    pools.u32s.give(qids);
                     return Err(e);
                 }
                 WorkerMsg::Fluid {
                     epoch,
                     coords,
                     mass,
+                    qids,
                 }
             }
-            TAG_HANDOFF => {
+            TAG_HANDOFF | TAG_HANDOFF_ML => {
                 let pid_from = read_varint(buf, &mut pos)? as usize;
                 let pid_to = read_varint(buf, &mut pos)? as usize;
                 let version = read_varint(buf, &mut pos)?;
                 let epoch = read_varint(buf, &mut pos)?;
                 let count = read_varint(buf, &mut pos)? as usize;
+                let wide = if tag == TAG_HANDOFF_ML {
+                    match read_lanes(buf, &mut pos, count) {
+                        Ok((_, w)) => w,
+                        Err(e) => return Err(e),
+                    }
+                } else {
+                    count
+                };
                 let mut coords = pools.usizes.take();
                 let mut h_slice = pools.f64s.take();
                 let mut b_slice = pools.f64s.take();
                 let mut f_slice = pools.f64s.take();
                 let cols = read_deltas_usize_into(buf, &mut pos, count, &mut coords)
-                    .and_then(|()| read_f64_slice_into(buf, &mut pos, count, &mut h_slice))
+                    .and_then(|()| read_f64_slice_into(buf, &mut pos, wide, &mut h_slice))
                     .and_then(|()| read_f64_slice_into(buf, &mut pos, count, &mut b_slice))
-                    .and_then(|()| read_f64_slice_into(buf, &mut pos, count, &mut f_slice));
+                    .and_then(|()| read_f64_slice_into(buf, &mut pos, wide, &mut f_slice));
                 if let Err(e) = cols {
                     pools.usizes.give(coords);
                     pools.f64s.give(h_slice);
@@ -197,13 +297,21 @@ impl WireCodec for WorkerMsg {
                     f_slice,
                 })
             }
-            TAG_HALO => {
+            TAG_HALO | TAG_HALO_ML => {
                 let epoch = read_varint(buf, &mut pos)?;
                 let count = read_varint(buf, &mut pos)? as usize;
+                let wide = if tag == TAG_HALO_ML {
+                    match read_lanes(buf, &mut pos, count) {
+                        Ok((_, w)) => w,
+                        Err(e) => return Err(e),
+                    }
+                } else {
+                    count
+                };
                 let mut coords = pools.u32s.take();
                 let mut h = pools.f64s.take();
                 let cols = read_deltas_u32_into(buf, &mut pos, count, &mut coords)
-                    .and_then(|()| read_f64_slice_into(buf, &mut pos, count, &mut h));
+                    .and_then(|()| read_f64_slice_into(buf, &mut pos, wide, &mut h));
                 if let Err(e) = cols {
                     pools.u32s.give(coords);
                     pools.f64s.give(h);
@@ -225,9 +333,12 @@ impl WireCodec for WorkerMsg {
     /// the storage cycle (decode → worker → coalesce → encode → pools).
     fn reclaim(self, pools: &mut ColumnPools) {
         match self {
-            WorkerMsg::Fluid { coords, mass, .. } => {
+            WorkerMsg::Fluid {
+                coords, mass, qids, ..
+            } => {
                 pools.u32s.give(coords);
                 pools.f64s.give(mass);
+                pools.u32s.give(qids);
             }
             WorkerMsg::Handoff(ho) => {
                 pools.usizes.give(ho.coords);
@@ -259,6 +370,7 @@ mod tests {
             epoch: 3,
             coords: vec![1, 5, 6, 900],
             mass: vec![0.25, -0.5, 1e-17, 3.75],
+            qids: vec![],
         };
         assert_eq!(round_trip(&msg), msg);
     }
@@ -269,8 +381,44 @@ mod tests {
             epoch: 0,
             coords: vec![],
             mass: vec![],
+            qids: vec![],
         };
         assert_eq!(round_trip(&msg), msg);
+    }
+
+    #[test]
+    fn multi_query_fluid_round_trip() {
+        let msg = WorkerMsg::Fluid {
+            epoch: 5,
+            coords: vec![1, 1, 7, 900],
+            mass: vec![0.25, -0.5, 1e-17, 3.75],
+            qids: vec![0, 3, 3, 17],
+        };
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        assert_eq!(buf[0], TAG_FLUID_MQ);
+        assert_eq!(WorkerMsg::decode(&buf).unwrap(), msg);
+    }
+
+    #[test]
+    fn lane_zero_fluid_keeps_the_pre_lane_bytes() {
+        // the qids column is shape, not data: an all-lane-0 parcel must
+        // encode byte-identically to the historical 0x10 layout
+        let msg = WorkerMsg::Fluid {
+            epoch: 3,
+            coords: vec![1, 5, 6],
+            mass: vec![0.25, -0.5, 0.125],
+            qids: vec![],
+        };
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        assert_eq!(buf[0], TAG_FLUID);
+        let mut legacy = vec![TAG_FLUID];
+        write_varint(&mut legacy, 3);
+        write_varint(&mut legacy, 3);
+        write_deltas(&mut legacy, [1u64, 5, 6]);
+        write_f64_slice(&mut legacy, &[0.25, -0.5, 0.125]);
+        assert_eq!(buf, legacy);
     }
 
     #[test]
@@ -285,7 +433,29 @@ mod tests {
             b_slice: vec![1.0, 0.0, -1.0],
             f_slice: vec![1e-9, 0.5, 0.0],
         });
-        assert_eq!(round_trip(&msg), msg);
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        assert_eq!(buf[0], TAG_HANDOFF, "single-lane columns use the plain tag");
+        assert_eq!(WorkerMsg::decode(&buf).unwrap(), msg);
+    }
+
+    #[test]
+    fn lane_blocked_handoff_round_trip() {
+        // 3 coords × 2 lanes: h/f are lane-blocked, b stays per-coord
+        let msg = WorkerMsg::Handoff(Handoff {
+            pid_from: 2,
+            pid_to: 0,
+            version: 7,
+            epoch: 4,
+            coords: vec![10, 11, 12],
+            h_slice: vec![0.1, 0.9, 0.2, 0.8, 0.3, 0.7],
+            b_slice: vec![1.0, 0.0, -1.0],
+            f_slice: vec![1e-9, 0.0, 0.5, 0.25, 0.0, 0.125],
+        });
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        assert_eq!(buf[0], TAG_HANDOFF_ML);
+        assert_eq!(WorkerMsg::decode(&buf).unwrap(), msg);
     }
 
     #[test]
@@ -295,7 +465,38 @@ mod tests {
             coords: vec![0, 219],
             h: vec![0.75, 0.125],
         };
-        assert_eq!(round_trip(&msg), msg);
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        assert_eq!(buf[0], TAG_HALO);
+        assert_eq!(WorkerMsg::decode(&buf).unwrap(), msg);
+    }
+
+    #[test]
+    fn lane_blocked_halo_round_trip() {
+        let msg = WorkerMsg::HaloSlice {
+            epoch: 9,
+            coords: vec![0, 219],
+            h: vec![0.75, 0.5, 0.125, 0.0625],
+        };
+        let mut buf = Vec::new();
+        msg.encode(&mut buf);
+        assert_eq!(buf[0], TAG_HALO_ML);
+        assert_eq!(WorkerMsg::decode(&buf).unwrap(), msg);
+    }
+
+    #[test]
+    fn multi_lane_tags_reject_a_degenerate_lane_count() {
+        // lanes < 2 under an ML tag is non-canonical: plain tags are
+        // the only encoding of single-lane columns
+        let mut buf = vec![TAG_HALO_ML];
+        write_varint(&mut buf, 9); // epoch
+        write_varint(&mut buf, 2); // count
+        write_varint(&mut buf, 1); // lanes — invalid
+        write_deltas(&mut buf, [0u64, 219]);
+        write_f64_slice(&mut buf, &[0.75, 0.125]);
+        assert!(WorkerMsg::decode(&buf).is_err());
+        let mut pools = ColumnPools::new(8);
+        assert!(WorkerMsg::decode_pooled(&buf, &mut pools).is_err());
     }
 
     #[test]
@@ -305,6 +506,13 @@ mod tests {
                 epoch: 3,
                 coords: vec![1, 5, 6, 900],
                 mass: vec![0.25, -0.5, 1e-17, 3.75],
+                qids: vec![],
+            },
+            WorkerMsg::Fluid {
+                epoch: 5,
+                coords: vec![1, 1, 7, 900],
+                mass: vec![0.25, -0.5, 1e-17, 3.75],
+                qids: vec![0, 3, 3, 17],
             },
             WorkerMsg::Handoff(Handoff {
                 pid_from: 2,
@@ -316,10 +524,25 @@ mod tests {
                 b_slice: vec![1.0, 0.0, -1.0],
                 f_slice: vec![1e-9, 0.5, 0.0],
             }),
+            WorkerMsg::Handoff(Handoff {
+                pid_from: 1,
+                pid_to: 3,
+                version: 2,
+                epoch: 6,
+                coords: vec![4, 9],
+                h_slice: vec![0.1, 0.9, 0.2, 0.8],
+                b_slice: vec![1.0, 0.0],
+                f_slice: vec![0.5, 0.25, 0.0, 0.125],
+            }),
             WorkerMsg::HaloSlice {
                 epoch: 9,
                 coords: vec![0, 219],
                 h: vec![0.75, 0.125],
+            },
+            WorkerMsg::HaloSlice {
+                epoch: 9,
+                coords: vec![0, 219],
+                h: vec![0.75, 0.5, 0.125, 0.0625],
             },
         ];
         let mut pools = ColumnPools::new(8);
@@ -341,6 +564,7 @@ mod tests {
             epoch: 1,
             coords: vec![4, 8],
             mass: vec![0.5, 0.5],
+            qids: vec![2, 5],
         };
         let mut buf = Vec::new();
         msg.encode(&mut buf);
@@ -361,24 +585,34 @@ mod tests {
 
     #[test]
     fn strict_decode_rejects_mutations() {
-        let msg = WorkerMsg::Fluid {
-            epoch: 1,
-            coords: vec![4, 8],
-            mass: vec![0.5, 0.5],
-        };
-        let mut buf = Vec::new();
-        msg.encode(&mut buf);
-        // truncation anywhere fails
-        for cut in 0..buf.len() {
-            assert!(WorkerMsg::decode(&buf[..cut]).is_err(), "cut at {cut}");
+        for msg in [
+            WorkerMsg::Fluid {
+                epoch: 1,
+                coords: vec![4, 8],
+                mass: vec![0.5, 0.5],
+                qids: vec![],
+            },
+            WorkerMsg::Fluid {
+                epoch: 1,
+                coords: vec![4, 8],
+                mass: vec![0.5, 0.5],
+                qids: vec![0, 6],
+            },
+        ] {
+            let mut buf = Vec::new();
+            msg.encode(&mut buf);
+            // truncation anywhere fails
+            for cut in 0..buf.len() {
+                assert!(WorkerMsg::decode(&buf[..cut]).is_err(), "cut at {cut}");
+            }
+            // trailing garbage fails
+            let mut longer = buf.clone();
+            longer.push(0);
+            assert!(WorkerMsg::decode(&longer).is_err());
+            // unknown tag fails
+            let mut bad = buf;
+            bad[0] = 0x3F;
+            assert!(WorkerMsg::decode(&bad).is_err());
         }
-        // trailing garbage fails
-        let mut longer = buf.clone();
-        longer.push(0);
-        assert!(WorkerMsg::decode(&longer).is_err());
-        // unknown tag fails
-        let mut bad = buf;
-        bad[0] = 0x3F;
-        assert!(WorkerMsg::decode(&bad).is_err());
     }
 }

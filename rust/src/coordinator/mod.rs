@@ -37,6 +37,7 @@ pub mod adaptive;
 pub mod codec;
 pub mod monitor;
 pub mod pool;
+pub mod query;
 pub mod remote;
 pub mod sim;
 pub mod stream;
@@ -47,10 +48,12 @@ pub mod worker;
 
 pub use adaptive::{AdaptiveConfig, AdaptiveController, AdaptivePolicy, HandoffPlan};
 pub use pool::{ElasticConfig, PoolStats, WorkerPool};
+pub use query::{Query, QueryRecord, QuerySet, QueryState, ServeConfig, ServeEngine, ServedQuery};
 pub use stream::{EpochReport, StreamSummary, StreamingEngine};
 pub use worker::{Handoff, WorkerMsg};
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::metrics::ConvergenceTrace;
@@ -202,6 +205,14 @@ pub struct DistributedConfig {
     /// elastic spawns land on distinct cores. Best-effort: a no-op off
     /// Linux or under a restricting cgroup mask.
     pub pin_cores: bool,
+    /// fluid lanes per coordinate (DESIGN.md §10): lane 0 is the base
+    /// problem; lanes 1.. serve concurrent queries from `queries`.
+    /// `lanes > 1` requires the greedy sequence (the cyclic order has no
+    /// largest-fluid-anywhere rule to generalize).
+    pub lanes: usize,
+    /// the shared multi-tenant query registry ([`query::QuerySet`]);
+    /// None = single-lane operation, identical to the pre-serving engine
+    pub queries: Option<Arc<query::QuerySet>>,
 }
 
 /// Straggler injection: PID `pid` is throttled to at most
@@ -236,7 +247,21 @@ impl DistributedConfig {
             pin_cores: std::env::var("DITER_PIN")
                 .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
                 .unwrap_or(false),
+            lanes: 1,
+            queries: None,
         }
+    }
+
+    pub fn with_lanes(mut self, lanes: usize) -> Self {
+        assert!(lanes >= 1);
+        self.lanes = lanes;
+        self
+    }
+
+    pub fn with_queries(mut self, queries: Arc<query::QuerySet>) -> Self {
+        self.lanes = queries.lanes();
+        self.queries = Some(queries);
+        self
     }
 
     pub fn with_pin_cores(mut self, pin: bool) -> Self {

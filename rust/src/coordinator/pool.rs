@@ -51,6 +51,7 @@ use std::time::{Duration, Instant};
 
 use super::adaptive::choose_shed_half;
 use super::monitor::MonitorState;
+use super::query::QUERY_METRICS;
 use super::worker::{WorkerCore, WorkerMsg, WORKER_METRICS};
 use super::DistributedConfig;
 use crate::error::{DiterError, Result};
@@ -215,6 +216,7 @@ impl WorkerPool {
         let names: Vec<&'static str> = WORKER_METRICS
             .iter()
             .chain(POOL_METRICS)
+            .chain(QUERY_METRICS.iter())
             .copied()
             .collect();
         let (endpoints, hub, metrics) = fabric::<WorkerMsg>(
@@ -582,8 +584,13 @@ impl WorkerPool {
             }
             self.table.set_liveness(pid, PidState::Retired);
             states[pid] = PidState::Retired;
-            // the slot's published share is authoritatively zero now
+            // the slot's published share is authoritatively zero now —
+            // aggregate and per-query-lane alike (the drain forwarded
+            // every lane's fluid before the endpoint came down)
             self.state.publish(pid, 0.0);
+            if let Some(qs) = self.cfg.queries.as_ref() {
+                qs.zero_published_pid(pid);
+            }
             self.stats.retired += 1;
             self.stats.live -= 1;
             self.metrics.incr("pool_retired");

@@ -1,0 +1,810 @@
+//! Multi-tenant query serving (DESIGN.md §10): the [`QuerySet`] registry
+//! and the admission-controlled [`ServeEngine`].
+//!
+//! D-iteration is linear in the source vector b, so one engine — one
+//! matrix, one worker pool — can serve many personalized-PageRank /
+//! seeded-diffusion queries concurrently by diffusing a *block* of
+//! fluids instead of one. Each live query owns a **lane**: a slot in the
+//! workers' lane-blocked fluid/history storage (`f[t * lanes + lane]`).
+//! Lane 0 is always the base problem; query lanes are recycled across
+//! tenants, distinguished on the wire by a monotonically increasing
+//! global **query id** so stale parcels from an evicted tenant can never
+//! leak into the next one.
+//!
+//! The registry is the shared contract between the serving loop and the
+//! workers:
+//!
+//! * the serving loop admits/evicts queries (cold path, mutex-guarded)
+//!   and watches per-lane convergence via [`QuerySet::lane_total`];
+//! * workers read the lane↔qid table (atomics, hot path), claim seed
+//!   fluid exactly once per seed, publish per-lane fluid mass, and keep
+//!   the per-lane in-flight account exact across parcels they flush and
+//!   absorb.
+//!
+//! Per-lane accounting errs **high**, never low (the same discipline as
+//! the aggregate monitor): a query is only declared served when every
+//! worker's published lane mass, the lane's in-flight parcel mass, and
+//! its still-unclaimed seed mass together fall under its ε.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::stream::StreamingEngine;
+use super::DistributedConfig;
+use crate::error::Result;
+use crate::graph::{Mutation, MutableDigraph};
+use crate::metrics::RateMeter;
+use crate::solver::SequenceKind;
+use crate::transport::AtomicF64;
+
+/// Serving-layer counters/gauges, registered by the pool alongside
+/// [`super::worker::WORKER_METRICS`] so `serve` runs report them in the
+/// same stats block.
+pub const QUERY_METRICS: [&str; 4] = [
+    "queries_admitted",
+    "queries_served",
+    "queries_rejected",
+    "active_lanes",
+];
+
+/// Sentinel qid for a lane with no tenant. Workers drop parcels whose
+/// qid doesn't match the lane's current qid, so `FREE_LANE` (never a
+/// real qid) makes a freed lane inert.
+pub const FREE_LANE: u32 = u32::MAX;
+
+/// Lifecycle of one query (ISSUE: Admitted → Converging → Served →
+/// Evicted). `Converging` is entered as soon as any seed fluid is
+/// claimed; `Evicted` without `Served` means the deadline expired or the
+/// caller cancelled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryState {
+    Queued,
+    Admitted,
+    Converging,
+    Served,
+    Evicted,
+}
+
+/// One seeded-diffusion query: initial fluid placed on `seeds`, run
+/// until the query lane's total outstanding fluid falls under `eps`.
+#[derive(Clone, Debug)]
+pub struct Query {
+    /// (coordinate, initial fluid mass) pairs.
+    pub seeds: Vec<(usize, f64)>,
+    /// Per-query convergence target on the lane's total fluid.
+    pub eps: f64,
+    /// Evict unserved once this much wall time has passed since
+    /// admission (None = no deadline).
+    pub deadline: Option<Duration>,
+}
+
+impl Query {
+    /// Personalized PageRank teleporting to `seeds`: for the patched
+    /// (column-stochastic + dangling-fixed) system with damping `d`,
+    /// seed mass `(1-d)/|seeds|` per seed makes ‖x_q‖₁ = 1 — the same
+    /// unit-mass invariant the base PageRank lane satisfies.
+    pub fn ppr(seeds: &[usize], damping: f64, eps: f64) -> Self {
+        let w = (1.0 - damping) / seeds.len().max(1) as f64;
+        Query {
+            seeds: seeds.iter().map(|&s| (s, w)).collect(),
+            eps,
+            deadline: None,
+        }
+    }
+
+    /// Total |seed| mass of this query.
+    pub fn seed_mass(&self) -> f64 {
+        self.seeds.iter().map(|&(_, m)| m.abs()).sum()
+    }
+}
+
+/// Mutable per-lane state, engine/worker shared under a mutex. Only
+/// cold paths lock it: admission, eviction, seed claiming (which stops
+/// as soon as the global unclaimed counter hits zero), and the serving
+/// loop's ε/deadline checks.
+#[derive(Debug)]
+struct LaneSlot {
+    qid: u32,
+    query: Option<Query>,
+    state: QueryState,
+    claimed: Vec<bool>,
+    admitted_at: Option<Instant>,
+}
+
+/// Completion record for a finished (served or evicted) query.
+#[derive(Clone, Debug)]
+pub struct QueryRecord {
+    pub qid: u32,
+    pub lane: usize,
+    pub state: QueryState,
+    /// Wall seconds from admission to crossing ε (None when evicted
+    /// unserved).
+    pub time_to_eps_secs: Option<f64>,
+}
+
+/// The query registry shared by the serving loop and every worker.
+///
+/// Hot-path state is atomic (lane↔qid table, per-lane published /
+/// in-flight / unclaimed mass); per-lane descriptors live behind small
+/// mutexes that only cold paths take.
+pub struct QuerySet {
+    lanes: usize,
+    cap_pids: usize,
+    /// Bumped on every admit/evict; workers resync their cached lane
+    /// table when it moves.
+    version: AtomicU64,
+    next_qid: AtomicU32,
+    /// Current qid per lane: 0 = base (lane 0 only), FREE_LANE = empty.
+    lane_qids: Vec<AtomicU32>,
+    /// Per-lane |mass| charged at parcel flush, released on absorb.
+    inflight: Vec<AtomicF64>,
+    /// Per-lane seed mass not yet claimed by any worker (errs high:
+    /// decremented only after the claiming worker has published the
+    /// claimed fluid).
+    unclaimed: Vec<AtomicF64>,
+    /// Count of individual unclaimed seeds across all lanes — the one
+    /// atomic workers poll per step to keep the claim scan off the
+    /// steady-state hot path.
+    unclaimed_seeds: AtomicU64,
+    /// Per-(pid, lane) published fluid mass, flat `pid * lanes + lane`.
+    published: Vec<AtomicF64>,
+    slots: Vec<Mutex<LaneSlot>>,
+    completed: Mutex<Vec<QueryRecord>>,
+}
+
+impl std::fmt::Debug for QuerySet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("QuerySet")
+            .field("lanes", &self.lanes)
+            .field("cap_pids", &self.cap_pids)
+            .field("version", &self.version.load(Ordering::Relaxed))
+            .field("active", &self.active_lanes())
+            .finish()
+    }
+}
+
+impl QuerySet {
+    /// `lanes` counts lane 0 (the base problem); `lanes - 1` queries can
+    /// be in flight at once. `cap_pids` must cover the pool's worker
+    /// capacity (`ElasticConfig::max_workers` or K).
+    pub fn new(lanes: usize, cap_pids: usize) -> Self {
+        assert!(lanes >= 1, "lane 0 (the base problem) always exists");
+        assert!(cap_pids >= 1);
+        let lane_qids: Vec<AtomicU32> = (0..lanes)
+            .map(|l| AtomicU32::new(if l == 0 { 0 } else { FREE_LANE }))
+            .collect();
+        QuerySet {
+            lanes,
+            cap_pids,
+            version: AtomicU64::new(0),
+            next_qid: AtomicU32::new(1),
+            lane_qids,
+            inflight: (0..lanes).map(|_| AtomicF64::new(0.0)).collect(),
+            unclaimed: (0..lanes).map(|_| AtomicF64::new(0.0)).collect(),
+            unclaimed_seeds: AtomicU64::new(0),
+            published: (0..lanes * cap_pids).map(|_| AtomicF64::new(0.0)).collect(),
+            slots: (0..lanes)
+                .map(|l| {
+                    Mutex::new(LaneSlot {
+                        qid: if l == 0 { 0 } else { FREE_LANE },
+                        query: None,
+                        state: QueryState::Queued,
+                        claimed: Vec::new(),
+                        admitted_at: None,
+                    })
+                })
+                .collect(),
+            completed: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Allocate the next global query id (monotonic, never reused).
+    pub fn next_qid(&self) -> u32 {
+        let qid = self.next_qid.fetch_add(1, Ordering::Relaxed);
+        assert!(qid != FREE_LANE, "query id space exhausted");
+        qid
+    }
+
+    pub fn lane_qid(&self, lane: usize) -> u32 {
+        self.lane_qids[lane].load(Ordering::Acquire)
+    }
+
+    /// Fill `out` with the current lane→qid table (workers cache this
+    /// and refile on a version bump).
+    pub fn snapshot_qids(&self, out: &mut Vec<u32>) {
+        out.clear();
+        for l in 0..self.lanes {
+            out.push(self.lane_qids[l].load(Ordering::Acquire));
+        }
+    }
+
+    /// Fill `out` with each lane's ε (0.0 for lane 0 and free lanes —
+    /// workers use this to detect ε-crossings, and 0.0 disables the
+    /// trigger).
+    pub fn snapshot_eps(&self, out: &mut Vec<f64>) {
+        out.clear();
+        for l in 0..self.lanes {
+            let slot = self.slots[l].lock().unwrap();
+            out.push(match (&slot.query, slot.qid) {
+                (Some(q), qid) if qid != FREE_LANE => q.eps,
+                _ => 0.0,
+            });
+        }
+    }
+
+    /// Install `q` into a free lane. Returns the (lane, qid) pair, or
+    /// None when every query lane is occupied.
+    pub fn admit(&self, q: Query, qid: u32) -> Option<usize> {
+        for lane in 1..self.lanes {
+            if self.lane_qids[lane].load(Ordering::Acquire) != FREE_LANE {
+                continue;
+            }
+            let mut slot = self.slots[lane].lock().unwrap();
+            if slot.qid != FREE_LANE {
+                continue; // raced with another admitter
+            }
+            let seed_mass = q.seed_mass();
+            let n_seeds = q.seeds.len() as u64;
+            slot.qid = qid;
+            slot.claimed = vec![false; q.seeds.len()];
+            slot.query = Some(q);
+            slot.state = QueryState::Admitted;
+            slot.admitted_at = Some(Instant::now());
+            // ordering: the accounting (inflight reset, unclaimed mass)
+            // must be in place before the qid goes live — a worker that
+            // sees the new qid must also see the seeds it may claim
+            self.inflight[lane].set(0.0);
+            self.unclaimed[lane].set(seed_mass);
+            self.lane_qids[lane].store(qid, Ordering::Release);
+            self.unclaimed_seeds.fetch_add(n_seeds, Ordering::Release);
+            drop(slot);
+            self.version.fetch_add(1, Ordering::Release);
+            return Some(lane);
+        }
+        None
+    }
+
+    /// Free `lane`, recording the tenant's final state. Workers zero
+    /// the lane's fluid/history and drop its pending parcels at their
+    /// next sync; parcels already in flight die at the receiver's qid
+    /// check.
+    pub fn evict(&self, lane: usize, state: QueryState, time_to_eps_secs: Option<f64>) {
+        assert!(lane > 0 && lane < self.lanes, "lane 0 cannot be evicted");
+        let mut slot = self.slots[lane].lock().unwrap();
+        if slot.qid == FREE_LANE {
+            return;
+        }
+        let qid = slot.qid;
+        // un-count the seeds nobody claimed
+        let pending = slot.claimed.iter().filter(|&&c| !c).count() as u64;
+        if pending > 0 {
+            self.unclaimed_seeds.fetch_sub(pending, Ordering::AcqRel);
+        }
+        slot.qid = FREE_LANE;
+        slot.query = None;
+        slot.state = state;
+        slot.admitted_at = None;
+        slot.claimed.clear();
+        // qid goes dead first, then the accounting resets: a straggling
+        // charge against the old qid is refused by the guard below
+        self.lane_qids[lane].store(FREE_LANE, Ordering::Release);
+        self.inflight[lane].set(0.0);
+        self.unclaimed[lane].set(0.0);
+        for pid in 0..self.cap_pids {
+            self.published[pid * self.lanes + lane].set(0.0);
+        }
+        drop(slot);
+        self.completed.lock().unwrap().push(QueryRecord {
+            qid,
+            lane,
+            state,
+            time_to_eps_secs,
+        });
+        self.version.fetch_add(1, Ordering::Release);
+    }
+
+    /// Guarded per-lane in-flight charge/release: a no-op unless `qid`
+    /// is still the lane's tenant, so a parcel flushed for an evicted
+    /// query can neither pollute the next tenant's account nor leak.
+    pub fn add_inflight(&self, lane: usize, qid: u32, delta: f64) {
+        if self.lane_qids[lane].load(Ordering::Acquire) == qid {
+            self.inflight[lane].add(delta);
+        }
+    }
+
+    /// Worker `pid`'s published fluid mass for `lane` (absolute value,
+    /// like `MonitorState::publish`).
+    pub fn publish_lane(&self, pid: usize, lane: usize, mass: f64) {
+        self.published[pid * self.lanes + lane].set(mass);
+    }
+
+    /// Zero every lane published by `pid` — the pool calls this when the
+    /// worker retires, mirroring its `state.publish(pid, 0.0)`.
+    pub fn zero_published_pid(&self, pid: usize) {
+        for lane in 0..self.lanes {
+            self.published[pid * self.lanes + lane].set(0.0);
+        }
+    }
+
+    /// The lane's total outstanding fluid estimate: published by every
+    /// worker + in flight + still-unclaimed seed mass. Errs high, never
+    /// low, so `lane_total < eps` is a safe serve condition.
+    pub fn lane_total(&self, lane: usize) -> f64 {
+        let mut total = self.inflight[lane].get().max(0.0) + self.unclaimed[lane].get().max(0.0);
+        for pid in 0..self.cap_pids {
+            total += self.published[pid * self.lanes + lane].get();
+        }
+        total
+    }
+
+    /// Number of lanes currently serving a query.
+    pub fn active_lanes(&self) -> usize {
+        (1..self.lanes)
+            .filter(|&l| self.lane_qids[l].load(Ordering::Acquire) != FREE_LANE)
+            .count()
+    }
+
+    /// Count of seeds not yet claimed by any worker — the one-atomic
+    /// fast check workers make per step.
+    pub fn unclaimed_seed_count(&self) -> u64 {
+        self.unclaimed_seeds.load(Ordering::Acquire)
+    }
+
+    /// Claim every unclaimed seed currently held by the caller
+    /// (`holds(coord)`), appending `(lane, qid, coord, mass)` to `out`.
+    /// The caller must inject each seed's fluid, publish, then call
+    /// [`QuerySet::seed_settled`] per claim — in that order, so the
+    /// global estimate never dips below the truth.
+    pub fn claim_seeds(
+        &self,
+        mut holds: impl FnMut(usize) -> bool,
+        out: &mut Vec<(usize, u32, usize, f64)>,
+    ) {
+        for lane in 1..self.lanes {
+            if self.unclaimed[lane].get() == 0.0 {
+                continue;
+            }
+            let mut slot = self.slots[lane].lock().unwrap();
+            if slot.qid == FREE_LANE {
+                continue;
+            }
+            let qid = slot.qid;
+            let LaneSlot {
+                ref query,
+                ref mut claimed,
+                ref mut state,
+                ..
+            } = *slot;
+            if let Some(q) = query {
+                for (i, &(coord, mass)) in q.seeds.iter().enumerate() {
+                    if !claimed[i] && holds(coord) {
+                        claimed[i] = true;
+                        *state = QueryState::Converging;
+                        out.push((lane, qid, coord, mass));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Settle one claimed seed *after* its fluid is live in the
+    /// claimer's published mass.
+    pub fn seed_settled(&self, lane: usize, mass: f64) {
+        self.unclaimed[lane].add(-mass.abs());
+        self.unclaimed_seeds.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// The dense RHS vector for `lane` (length `n`), and mark every
+    /// seed claimed with the unclaimed account zeroed — the gather
+    /// rebase discards F and recomputes it from the full per-lane B, so
+    /// the rebase itself injects any seeds still pending.
+    pub fn lane_b_claim_all(&self, lane: usize, n: usize) -> Option<Vec<f64>> {
+        let mut slot = self.slots[lane].lock().unwrap();
+        if slot.qid == FREE_LANE {
+            return None;
+        }
+        let mut pending = 0u64;
+        for c in slot.claimed.iter_mut() {
+            if !*c {
+                pending += 1;
+                *c = true;
+            }
+        }
+        let q = slot.query.as_ref()?;
+        let mut b = vec![0.0; n];
+        for &(coord, mass) in &q.seeds {
+            if coord < n {
+                b[coord] += mass;
+            }
+        }
+        slot.state = QueryState::Converging;
+        drop(slot);
+        if pending > 0 {
+            self.unclaimed_seeds.fetch_sub(pending, Ordering::AcqRel);
+        }
+        self.unclaimed[lane].set(0.0);
+        Some(b)
+    }
+
+    /// The lane's ε target (None when free).
+    pub fn lane_eps(&self, lane: usize) -> Option<f64> {
+        let slot = self.slots[lane].lock().unwrap();
+        slot.query.as_ref().map(|q| q.eps)
+    }
+
+    /// Seconds since the lane's tenant was admitted (None when free).
+    pub fn lane_age(&self, lane: usize) -> Option<f64> {
+        let slot = self.slots[lane].lock().unwrap();
+        slot.admitted_at.map(|t| t.elapsed().as_secs_f64())
+    }
+
+    /// True when the lane's tenant has a deadline and it has expired.
+    pub fn deadline_expired(&self, lane: usize) -> bool {
+        let slot = self.slots[lane].lock().unwrap();
+        match (&slot.query, slot.admitted_at) {
+            (Some(q), Some(at)) => q.deadline.is_some_and(|d| at.elapsed() > d),
+            _ => false,
+        }
+    }
+
+    /// Drain the completion log (served and evicted queries, in order).
+    pub fn take_completed(&self) -> Vec<QueryRecord> {
+        std::mem::take(&mut *self.completed.lock().unwrap())
+    }
+}
+
+/// Admission-control knobs for [`ServeEngine`].
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Queries waiting for a lane beyond the in-flight cap; a submit
+    /// past this is rejected outright.
+    pub queue_cap: usize,
+    /// ε for queries that don't specify one.
+    pub default_eps: f64,
+    /// Deadline for queries that don't specify one.
+    pub default_deadline: Option<Duration>,
+    /// Consecutive polls a lane must stay under ε before it is served
+    /// (mirrors the aggregate monitor's stability requirement).
+    pub stable_polls: u32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue_cap: 32,
+            default_eps: 1e-8,
+            default_deadline: None,
+            stable_polls: 3,
+        }
+    }
+}
+
+/// A finished query handed back by [`ServeEngine::poll`].
+#[derive(Clone, Debug)]
+pub struct ServedQuery {
+    pub qid: u32,
+    pub lane: usize,
+    pub state: QueryState,
+    pub time_to_eps_secs: Option<f64>,
+    /// The per-query solution readout (None when evicted unserved).
+    pub x: Option<Vec<f64>>,
+}
+
+/// The serving loop: a [`StreamingEngine`] whose workers diffuse
+/// `lanes` fluids at once, fronted by queue-or-reject admission
+/// control. Queries keep flowing while churn epochs, ownership
+/// handoffs, and elastic spawn/retire run underneath — admission never
+/// waits for the engine to converge.
+pub struct ServeEngine {
+    engine: StreamingEngine,
+    qs: Arc<QuerySet>,
+    cfg: ServeConfig,
+    queue: VecDeque<(u32, Query)>,
+    /// Per-lane consecutive below-ε polls.
+    stable: Vec<u32>,
+    freshness: RateMeter,
+    last_poll: Instant,
+    admitted: u64,
+    served: u64,
+    rejected: u64,
+}
+
+impl ServeEngine {
+    /// Build a serving engine with `query_lanes` concurrent query slots
+    /// on top of the streaming PageRank system for `graph`. Forces the
+    /// greedy sequence (multi-lane diffusion requires the heap's
+    /// largest-fluid-anywhere rule) and installs the shared
+    /// [`QuerySet`] into the worker config.
+    pub fn new(
+        graph: MutableDigraph,
+        damping: f64,
+        patch_dangling: bool,
+        mut dist: DistributedConfig,
+        cfg: ServeConfig,
+        query_lanes: usize,
+    ) -> Result<Self> {
+        assert!(query_lanes >= 1, "need at least one query lane");
+        let k = dist.partition.k();
+        let cap = dist
+            .elastic
+            .as_ref()
+            .map(|e| e.max_workers.max(k))
+            .unwrap_or(k);
+        let qs = Arc::new(QuerySet::new(query_lanes + 1, cap));
+        dist.lanes = query_lanes + 1;
+        dist.queries = Some(qs.clone());
+        dist.sequence = SequenceKind::GreedyMaxFluid;
+        let engine = StreamingEngine::new(graph, damping, patch_dangling, dist)?;
+        Ok(ServeEngine {
+            engine,
+            qs,
+            cfg,
+            queue: VecDeque::new(),
+            stable: vec![0; query_lanes + 1],
+            freshness: RateMeter::new(0.4),
+            last_poll: Instant::now(),
+            admitted: 0,
+            served: 0,
+            rejected: 0,
+        })
+    }
+
+    pub fn query_set(&self) -> &Arc<QuerySet> {
+        &self.qs
+    }
+
+    pub fn engine(&self) -> &StreamingEngine {
+        &self.engine
+    }
+
+    pub fn engine_mut(&mut self) -> &mut StreamingEngine {
+        &mut self.engine
+    }
+
+    /// Smoothed queries-served-per-second (None until the first serve).
+    pub fn freshness(&self) -> Option<f64> {
+        self.freshness.rate()
+    }
+
+    pub fn counts(&self) -> (u64, u64, u64) {
+        (self.admitted, self.served, self.rejected)
+    }
+
+    /// Submit a query: admitted straight into a lane when one is free,
+    /// queued while all lanes are busy, rejected (None) when the queue
+    /// is full. Never blocks on engine state.
+    pub fn submit(&mut self, mut q: Query) -> Option<u32> {
+        if q.eps <= 0.0 {
+            q.eps = self.cfg.default_eps;
+        }
+        if q.deadline.is_none() {
+            q.deadline = self.cfg.default_deadline;
+        }
+        if self.queue.len() >= self.cfg.queue_cap {
+            self.rejected += 1;
+            self.engine.metrics().incr("queries_rejected");
+            return None;
+        }
+        let qid = self.qs.next_qid();
+        self.queue.push_back((qid, q));
+        self.try_admit();
+        Some(qid)
+    }
+
+    fn try_admit(&mut self) {
+        while let Some((qid, q)) = self.queue.front() {
+            match self.qs.admit(q.clone(), *qid) {
+                Some(lane) => {
+                    self.stable[lane] = 0;
+                    self.queue.pop_front();
+                    self.admitted += 1;
+                    self.engine.metrics().incr("queries_admitted");
+                }
+                None => break, // all lanes busy; stay queued
+            }
+        }
+        self.engine
+            .metrics()
+            .set("active_lanes", self.qs.active_lanes() as u64);
+    }
+
+    /// Apply a graph-mutation batch and rebase the workers *without*
+    /// blocking until reconvergence — the serving loop keeps admitting
+    /// and completing queries while the new epoch's fluid settles.
+    pub fn apply_mutations(&mut self, batch: &[Mutation]) -> Result<usize> {
+        self.engine.apply_batch_async(batch)
+    }
+
+    /// One non-blocking serving tick: pump the engine's schedulers,
+    /// evict expired tenants, complete lanes that have stayed under
+    /// their ε, and admit from the queue into freed lanes. Returns the
+    /// queries that finished during this tick.
+    pub fn poll(&mut self) -> Result<Vec<ServedQuery>> {
+        self.engine.pump();
+        let mut done = Vec::new();
+        let lanes = self.qs.lanes();
+        for lane in 1..lanes {
+            let qid = self.qs.lane_qid(lane);
+            if qid == FREE_LANE {
+                continue;
+            }
+            if self.qs.deadline_expired(lane) {
+                self.qs.evict(lane, QueryState::Evicted, None);
+                self.stable[lane] = 0;
+                done.push(ServedQuery {
+                    qid,
+                    lane,
+                    state: QueryState::Evicted,
+                    time_to_eps_secs: None,
+                    x: None,
+                });
+                continue;
+            }
+            let eps = match self.qs.lane_eps(lane) {
+                Some(e) => e,
+                None => continue,
+            };
+            if self.qs.lane_total(lane) < eps {
+                self.stable[lane] += 1;
+            } else {
+                self.stable[lane] = 0;
+            }
+            if self.stable[lane] >= self.cfg.stable_polls {
+                let tte = self.qs.lane_age(lane);
+                let x = self.engine.gather_lane(lane)?;
+                // re-check: the lane must still be under ε after the
+                // readout (a churn epoch between the check and the
+                // gather could have re-excited it)
+                if self.qs.lane_total(lane) >= eps {
+                    self.stable[lane] = 0;
+                    continue;
+                }
+                self.qs.evict(lane, QueryState::Served, tte);
+                self.stable[lane] = 0;
+                self.served += 1;
+                self.engine.metrics().incr("queries_served");
+                done.push(ServedQuery {
+                    qid,
+                    lane,
+                    state: QueryState::Served,
+                    time_to_eps_secs: tte,
+                    x: Some(x),
+                });
+            }
+        }
+        if !done.is_empty() {
+            let secs = self.last_poll.elapsed().as_secs_f64();
+            let served = done
+                .iter()
+                .filter(|d| d.state == QueryState::Served)
+                .count() as u64;
+            self.freshness.record(served, secs);
+            self.last_poll = Instant::now();
+        }
+        self.try_admit();
+        Ok(done)
+    }
+
+    /// Poll until every submitted query has completed (served or
+    /// evicted) or `deadline` passes. Returns everything that finished.
+    pub fn drain(&mut self, deadline: Duration) -> Result<Vec<ServedQuery>> {
+        let start = Instant::now();
+        let mut all = Vec::new();
+        while (!self.queue.is_empty() || self.qs.active_lanes() > 0)
+            && start.elapsed() < deadline
+        {
+            all.extend(self.poll()?);
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        Ok(all)
+    }
+
+    /// Number of queries waiting for a lane.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Shut the engine down, returning the underlying stream summary.
+    pub fn finish(self) -> Result<super::stream::StreamSummary> {
+        self.engine.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_evict_lifecycle_and_qids_are_unique() {
+        let qs = QuerySet::new(3, 2);
+        assert_eq!(qs.active_lanes(), 0);
+        let q1 = qs.next_qid();
+        let q2 = qs.next_qid();
+        assert_ne!(q1, q2);
+        let l1 = qs.admit(Query::ppr(&[0], 0.85, 1e-8), q1).unwrap();
+        let l2 = qs.admit(Query::ppr(&[1], 0.85, 1e-8), q2).unwrap();
+        assert_ne!(l1, l2);
+        assert_eq!(qs.active_lanes(), 2);
+        // all lanes busy
+        assert!(qs.admit(Query::ppr(&[2], 0.85, 1e-8), qs.next_qid()).is_none());
+        qs.evict(l1, QueryState::Served, Some(0.5));
+        assert_eq!(qs.active_lanes(), 1);
+        assert_eq!(qs.lane_qid(l1), FREE_LANE);
+        // freed lane is reusable with a fresh qid
+        let q3 = qs.next_qid();
+        assert_eq!(qs.admit(Query::ppr(&[2], 0.85, 1e-8), q3), Some(l1));
+        assert_eq!(qs.lane_qid(l1), q3);
+        let rec = qs.take_completed();
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec[0].qid, q1);
+        assert_eq!(rec[0].state, QueryState::Served);
+    }
+
+    #[test]
+    fn lane_total_errs_high_through_the_claim_protocol() {
+        let qs = QuerySet::new(2, 1);
+        let qid = qs.next_qid();
+        let lane = qs.admit(Query::ppr(&[3, 4], 0.8, 1e-9), qid).unwrap();
+        let seed_mass = 0.2; // (1 - 0.8) split over 2 seeds, 0.1 each
+        assert!((qs.lane_total(lane) - seed_mass).abs() < 1e-12);
+        assert_eq!(qs.unclaimed_seed_count(), 2);
+        // worker claims the seed it holds (coord 3 only)
+        let mut claims = Vec::new();
+        qs.claim_seeds(|c| c == 3, &mut claims);
+        assert_eq!(claims.len(), 1);
+        let (l, q, coord, mass) = claims[0];
+        assert_eq!((l, q, coord), (lane, qid, 3));
+        // worker injects + publishes BEFORE settling: total double-counts
+        // (errs high), never dips
+        qs.publish_lane(0, lane, mass.abs());
+        assert!(qs.lane_total(lane) > seed_mass - 1e-12);
+        qs.seed_settled(lane, mass);
+        assert_eq!(qs.unclaimed_seed_count(), 1);
+        assert!((qs.lane_total(lane) - seed_mass).abs() < 1e-12);
+        // re-claim finds nothing new for the same holder
+        let mut again = Vec::new();
+        qs.claim_seeds(|c| c == 3, &mut again);
+        assert!(again.is_empty());
+    }
+
+    #[test]
+    fn inflight_guard_refuses_stale_qids() {
+        let qs = QuerySet::new(2, 1);
+        let qid = qs.next_qid();
+        let lane = qs.admit(Query::ppr(&[0], 0.85, 1e-9), qid).unwrap();
+        qs.add_inflight(lane, qid, 0.5);
+        assert!(qs.lane_total(lane) > 0.5);
+        qs.evict(lane, QueryState::Evicted, None);
+        // charge against the dead tenant: refused, account stays clean
+        qs.add_inflight(lane, qid, 0.25);
+        let qid2 = qs.next_qid();
+        let lane2 = qs.admit(Query::ppr(&[1], 0.85, 1e-9), qid2).unwrap();
+        assert_eq!(lane2, lane);
+        assert!((qs.lane_total(lane) - 0.15).abs() < 1e-12); // just the new seeds
+    }
+
+    #[test]
+    fn gather_claims_everything_at_once() {
+        let qs = QuerySet::new(2, 1);
+        let qid = qs.next_qid();
+        let lane = qs.admit(Query::ppr(&[1, 3], 0.85, 1e-9), qid).unwrap();
+        let b = qs.lane_b_claim_all(lane, 5).unwrap();
+        assert!((b[1] - 0.075).abs() < 1e-12);
+        assert!((b[3] - 0.075).abs() < 1e-12);
+        assert_eq!(qs.unclaimed_seed_count(), 0);
+        assert_eq!(qs.lane_total(lane), 0.0);
+        let mut claims = Vec::new();
+        qs.claim_seeds(|_| true, &mut claims);
+        assert!(claims.is_empty());
+    }
+}

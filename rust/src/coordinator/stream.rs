@@ -182,6 +182,18 @@ impl StreamingEngine {
         self.epoch
     }
 
+    /// Fluid lanes per slot (1 = the single-query layout; ≥ 2 when a
+    /// [`super::query::QuerySet`] multiplexes extra RHS vectors through
+    /// the same workers — DESIGN.md §10).
+    pub fn lanes(&self) -> usize {
+        self.cfg.lanes.max(1)
+    }
+
+    /// The fabric metric set (worker + pool + query counters).
+    pub fn metrics(&self) -> &Arc<MetricSet> {
+        &self.bus_metrics
+    }
+
     /// Read-only view of the evolving graph.
     pub fn graph(&self) -> &MutableDigraph {
         &self.graph
@@ -252,6 +264,43 @@ impl StreamingEngine {
         let mut report = self.converge()?;
         report.mutations_applied = applied;
         Ok(report)
+    }
+
+    /// [`StreamingEngine::apply_batch`] without the convergence wait:
+    /// mutate the graph and rebase the running computation, then return
+    /// immediately. The serving loop ([`super::query::ServeEngine`])
+    /// uses this so admission keeps flowing while the new epoch's fluid
+    /// settles; callers judge per-lane convergence themselves.
+    pub fn apply_batch_async(&mut self, batch: &[Mutation]) -> Result<usize> {
+        let applied = batch.iter().filter(|m| self.graph.apply(m)).count();
+        self.mutations_applied += applied as u64;
+        if applied > 0 {
+            self.rebase()?;
+        }
+        Ok(applied)
+    }
+
+    /// One non-blocking monitor tick: read the global fluid estimate,
+    /// run the adaptive driver and the elastic pool scheduler once, and
+    /// return the observed total. This is the body of [`converge`]'s
+    /// wait loop exposed for callers that interleave their own work
+    /// (the serving loop) with the engine's housekeeping.
+    ///
+    /// [`converge`]: StreamingEngine::converge
+    pub fn pump(&mut self) -> f64 {
+        let total = self.shared.published_total() + self.bus_mon.inflight_or_zero();
+        if let Some(d) = self.driver.as_mut() {
+            d.poll(
+                &self.table,
+                &self.shared.update_counts(),
+                &self.shared.published_values(),
+                total,
+                &self.bus_metrics,
+                Some(self.problem.matrix()),
+            );
+        }
+        self.pool.poll(total);
+        total
     }
 
     /// Wait for the current epoch to reach the configured tolerance and
@@ -340,13 +389,35 @@ impl StreamingEngine {
         self.gather()
     }
 
-    /// Shut the workers down and return the whole-run summary.
+    /// Assemble one lane's solution estimate (lane 0 = the base system;
+    /// lanes ≥ 1 = the query tenants) without pausing the workers. The
+    /// snapshot H slices are lane-blocked; this reads the lane's stride.
+    pub fn gather_lane(&self, lane: usize) -> Result<Vec<f64>> {
+        let lanes = self.lanes();
+        assert!(lane < lanes, "lane {lane} out of range ({lanes} lanes)");
+        let n = self.problem.n();
+        self.quiesce_handoffs(Duration::from_secs(2));
+        let mut x = vec![0.0; n];
+        for (_kk, coords, slice) in self.pool.snapshot()? {
+            debug_assert_eq!(slice.len(), coords.len() * lanes);
+            for (t, &i) in coords.iter().enumerate() {
+                x[i] = slice[t * lanes + lane];
+            }
+        }
+        Ok(x)
+    }
+
+    /// Shut the workers down and return the whole-run summary. The
+    /// returned solution is lane 0 (the base system); query-lane
+    /// readouts happen through [`StreamingEngine::gather_lane`] while
+    /// the engine is live.
     pub fn finish(self) -> Result<StreamSummary> {
         let n = self.problem.n();
+        let lanes = self.lanes();
         let mut x = vec![0.0; n];
         for (owned, values) in self.pool.finish()? {
             for (t, &i) in owned.iter().enumerate() {
-                x[i] = values[t];
+                x[i] = values[t * lanes];
             }
         }
         let residual = self.problem.residual_norm(&x);
@@ -460,51 +531,89 @@ impl StreamingEngine {
         problem: Arc<FixedPointProblem>,
         dirty: Option<Arc<Vec<usize>>>,
     ) -> Result<()> {
+        let lanes = self.lanes();
         let checkpointed = self.pool.checkpoint()?;
-        let mut h = vec![0.0; n];
+        // deinterleave the lane-blocked H slices into one full H per lane
+        let mut hs = vec![vec![0.0; n]; lanes];
         let mut held: Vec<(usize, Vec<usize>)> = Vec::with_capacity(checkpointed.len());
         for (kk, coords, slice) in checkpointed {
+            debug_assert_eq!(slice.len(), coords.len() * lanes);
             for (t, &i) in coords.iter().enumerate() {
-                h[i] = slice[t];
+                for (l, h) in hs.iter_mut().enumerate() {
+                    h[i] = slice[t * lanes + l];
+                }
             }
             held.push((kk, coords));
         }
+        // per-lane B: lane 0 is the base system's RHS; each query lane's
+        // is its tenant's seed vector (linearity in B is what lets every
+        // lane rebase through the same matrix walk). The claim-all marks
+        // any still-pending seeds claimed — the recomputed F' = P'·H+B−H
+        // injects them, so workers must not claim them again.
+        let qs = self.cfg.queries.clone();
+        let lane_b: Vec<Vec<f64>> = (0..lanes)
+            .map(|l| {
+                if l == 0 {
+                    problem.b().to_vec()
+                } else {
+                    qs.as_ref()
+                        .and_then(|q| q.lane_b_claim_all(l, n))
+                        .unwrap_or_else(|| vec![0.0; n])
+                }
+            })
+            .collect();
         let mut slices = Vec::with_capacity(held.len());
         for (kk, coords) in held {
             // the leader-side round-trip the local protocol eliminates —
             // the scenario matrix asserts this counter stays 0 there
             self.bus_metrics.add("rebase_gather_coords", coords.len() as u64);
-            let f_slice = update::rebase_b_slice(problem.matrix(), &coords, &h, problem.b());
+            let mut f_slice = vec![0.0; coords.len() * lanes];
+            let mut aggregate = 0.0;
+            for l in 0..lanes {
+                let f_l =
+                    update::rebase_b_slice(problem.matrix(), &coords, &hs[l], &lane_b[l]);
+                let mass = norm1(&f_l);
+                aggregate += mass;
+                if l >= 1 {
+                    // pre-publish the lane account too: the tenant's
+                    // unclaimed mass was just zeroed by the claim-all,
+                    // and its workers are paused — this keeps lane_total
+                    // erring high across the swap
+                    if let Some(q) = qs.as_ref() {
+                        q.publish_lane(kk, l, mass);
+                    }
+                }
+                for (t, v) in f_l.into_iter().enumerate() {
+                    f_slice[t * lanes + l] = v;
+                }
+            }
             // pre-publish so the monitor can't see a stale near-zero total
-            self.shared.publish(kk, norm1(&f_slice));
+            self.shared.publish(kk, aggregate);
             slices.push((kk, f_slice));
         }
         self.pool.resume(self.epoch, problem, slices, dirty)
     }
 
-    /// Gather the assembled H from all workers without pausing them.
+    /// Gather the assembled lane-0 H from all workers without pausing
+    /// them.
     fn gather(&self) -> Result<Vec<f64>> {
-        let n = self.problem.n();
-        // best-effort quiesce: a handoff slice in flight is held by
-        // neither worker, so snapshotting mid-migration would read zeros
-        // for the moving range. No installs can race this (the adaptive
-        // driver and the pool scheduler run on this same thread), so
-        // waiting terminates; the deadline only guards against a wedged
-        // worker.
+        self.gather_lane(0)
+    }
+
+    /// Best-effort handoff quiesce before a snapshot: a handoff slice in
+    /// flight is held by neither worker, so snapshotting mid-migration
+    /// would read zeros for the moving range. No installs can race this
+    /// (the adaptive driver and the pool scheduler run on this same
+    /// thread), so waiting terminates; the deadline only guards against
+    /// a wedged worker.
+    fn quiesce_handoffs(&self, deadline: Duration) {
         let v = self.table.version();
-        let quiesce_deadline = Instant::now() + Duration::from_secs(2);
+        let until = Instant::now() + deadline;
         while !(self.table.all_acked(v) && self.table.handoffs_inflight() == 0)
-            && Instant::now() < quiesce_deadline
+            && Instant::now() < until
         {
             std::thread::sleep(Duration::from_micros(100));
         }
-        let mut x = vec![0.0; n];
-        for (_kk, coords, slice) in self.pool.snapshot()? {
-            for (t, &i) in coords.iter().enumerate() {
-                x[i] = slice[t];
-            }
-        }
-        Ok(x)
     }
 }
 

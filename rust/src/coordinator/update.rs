@@ -74,6 +74,26 @@ pub fn rebase_b_slice_local(
     local_of: &[usize],
     f: &mut [f64],
 ) -> Vec<usize> {
+    rebase_b_slice_local_lane(p_old, p_new, halo, local_of, f, 1, 0)
+}
+
+/// Lane-addressed form of [`rebase_b_slice_local`] for the multi-RHS
+/// serving layer (DESIGN.md §10): `f` is lane-blocked (slot-major,
+/// `lanes` cells per slot) and the delta for this lane's history lands in
+/// `f[t * lanes + lane]`. D-iteration is linear in B, so each lane
+/// rebases independently from its own `(u, H_u)` halo; a query's seed
+/// RHS lives in the registry and never enters the delta. Returns touched
+/// local **slots** (not flat cells), duplicates possible.
+pub fn rebase_b_slice_local_lane(
+    p_old: &CscMatrix,
+    p_new: &CscMatrix,
+    halo: &[(usize, f64)],
+    local_of: &[usize],
+    f: &mut [f64],
+    lanes: usize,
+    lane: usize,
+) -> Vec<usize> {
+    debug_assert!(lane < lanes);
     let mut touched = Vec::new();
     for &(u, hu) in halo {
         if hu == 0.0 {
@@ -83,7 +103,7 @@ pub fn rebase_b_slice_local(
         for e in 0..rows.len() {
             let t = local_of[rows[e]];
             if t != usize::MAX {
-                f[t] -= vals[e] * hu;
+                f[t * lanes + lane] -= vals[e] * hu;
                 touched.push(t);
             }
         }
@@ -91,7 +111,7 @@ pub fn rebase_b_slice_local(
         for e in 0..rows.len() {
             let t = local_of[rows[e]];
             if t != usize::MAX {
-                f[t] += vals[e] * hu;
+                f[t * lanes + lane] += vals[e] * hu;
                 touched.push(t);
             }
         }

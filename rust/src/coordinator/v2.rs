@@ -82,10 +82,13 @@ pub fn solve_v2(
         },
     );
 
+    // lane-0 stride: the one-shot solve reads the base system even when
+    // a caller configured extra query lanes (H slices are lane-blocked)
+    let lanes = cfg.lanes.max(1);
     let mut x = vec![0.0; n];
     for (owned, values) in pool.finish()? {
         for (t, &i) in owned.iter().enumerate() {
-            x[i] = values[t];
+            x[i] = values[t * lanes];
         }
     }
     let residual = problem.residual_norm(&x);

@@ -51,6 +51,21 @@
 //!   shipped-but-unapplied slices; the streaming rebase freezes the table
 //!   and waits for zero before checkpointing, so the gathered H used for
 //!   `B' = P'·H + B − H` is always complete.
+//!
+//! ## Query lanes (DESIGN.md §10)
+//!
+//! D-iteration is linear in B, so one worker can run L right-hand sides
+//! against the same matrix walk: `f`/`h` become **lane-blocked** (slot-
+//! major, `lanes` cells per slot; `lanes == 1` is the flat pre-lane
+//! layout), the greedy rule generalizes to "largest |fluid| across any
+//! lane", and a popped column drains every lane in one walk — the
+//! expensive part (the column) is shared, the per-lane work is one FMA
+//! stream each. Lane 0 is always the base problem; lanes ≥ 1 are query
+//! tenants managed by the shared [`QuerySet`] registry (admission,
+//! ε targets, per-lane conservation accounting). Parcels carry a global
+//! query-id column so in-flight fluid survives admit/evict races; every
+//! per-query account transition keeps the lane total erring high, never
+//! low, mirroring the aggregate monitor's discipline.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 use std::sync::Arc;
@@ -63,6 +78,7 @@ use crate::metrics::MetricSet;
 use crate::partition::{OwnershipTable, Partition};
 use crate::perf::VecQueue;
 use crate::solver::{FixedPointProblem, GreedyQueue, SequenceKind, SequenceState};
+use super::query::{QuerySet, FREE_LANE};
 use crate::sparse::LocalSystem;
 use crate::transport::{CoalesceBuffer, Received, Transport};
 
@@ -92,6 +108,12 @@ const PATCHES_PER_REBUILD: u32 = 64;
 /// keep four independent column accumulations in flight.
 const BLOCK_BATCH: usize = 8;
 
+/// While queries are being served, force a full transport flush at least
+/// this often. Sub-threshold query tails otherwise ride the coalesce
+/// policy + wire flush deadline indefinitely while the base problem is
+/// busy, and time-to-ε is the serving layer's product metric.
+const SERVE_FLUSH_INTERVAL: Duration = Duration::from_millis(2);
+
 /// Everything that travels between PIDs: the fluid data plane plus the
 /// repartitioning control plane.
 #[derive(Clone, Debug, PartialEq)]
@@ -104,6 +126,14 @@ pub enum WorkerMsg {
         epoch: u64,
         coords: Vec<u32>,
         mass: Vec<f64>,
+        /// Per-entry **global query ids** (DESIGN.md §10): `qids[u]` says
+        /// which query's lane `mass[u]` belongs to. Empty ⇒ every entry is
+        /// lane 0 (the base problem) — the dominant case, and byte-
+        /// identical to the pre-lane wire format (tag 0x10). Senders
+        /// translate their buffer-local lane indices to global ids at
+        /// flush; receivers map ids back through their own lane table, so
+        /// a stale id (query evicted in flight) is detected and dropped.
+        qids: Vec<u32>,
     },
     /// Ownership transfer of a coordinate range with its local state.
     Handoff(Handoff),
@@ -138,8 +168,13 @@ pub struct Handoff {
     /// streaming epoch the slices belong to
     pub epoch: u64,
     pub coords: Vec<usize>,
+    /// lane-blocked (`coords.len() * lanes`): slot-major, lane-minor —
+    /// single-lane configs reduce to the flat pre-lane layout
     pub h_slice: Vec<f64>,
+    /// lane 0 only (`coords.len()`): query RHS vectors live in the
+    /// [`QuerySet`], never in handoffs
     pub b_slice: Vec<f64>,
+    /// lane-blocked (`coords.len() * lanes`), like `h_slice`
     pub f_slice: Vec<f64>,
 }
 
@@ -165,11 +200,54 @@ pub struct WorkerCore {
     local_of: Vec<usize>,
     /// the reindexed local block + remnant (None under the global kernel)
     local: Option<LocalSystem>,
+    /// lane-blocked history: `h[t * lanes + l]` is slot `t`'s H for lane
+    /// `l` (lane 0 = the base problem; `lanes == 1` is the flat pre-lane
+    /// layout)
     h: Vec<f64>,
+    /// lane-blocked fluid, same indexing as `h`
     f: Vec<f64>,
+    /// number of fluid lanes (`cfg.lanes`, ≥ 1); multi-lane requires the
+    /// greedy max-fluid sequence (asserted in `new`)
+    lanes: usize,
+    /// the shared query registry, when this pool serves queries
+    queries: Option<Arc<QuerySet>>,
+    /// cached [`QuerySet::version`] — lane state resyncs on a bump
+    qver: u64,
+    /// cached lane → global query id table (lane 0 is always qid 0).
+    /// Without a registry but `lanes > 1`, the identity map: both sides
+    /// of the wire then agree that qid == lane index.
+    lane_qids: Vec<u32>,
+    /// cached per-lane ε targets (0.0 = free lane / no target)
+    lane_eps: Vec<f64>,
+    /// per-lane "crossed under ε" latch — set once by `publish`, forces
+    /// an immediate transport flush so completion never waits out the
+    /// coalesce/wire flush deadlines; reset on lane turnover and epoch
+    /// entry
+    endgame: Vec<bool>,
+    /// set by `publish` when a lane first crosses under its ε; consumed
+    /// by `step` as a full flush
+    force_flush: bool,
+    /// last forced full flush while queries were active (bounds how long
+    /// a query tail can sit in the buffers)
+    last_serve_flush: Instant,
+    /// scratch: per-lane |f| sums (publish)
+    lane_scratch: Vec<f64>,
+    /// scratch: per-lane held coalesce mass (publish)
+    held_scratch: Vec<f64>,
+    /// scratch: per-lane in-flight charges (flush)
+    charge_scratch: Vec<f64>,
+    /// scratch: fresh lane→qid snapshot (sync_queries)
+    qid_scratch: Vec<u32>,
+    /// scratch: claimed seeds `(lane, qid, coord, mass)`
+    seed_scratch: Vec<(usize, u32, usize, f64)>,
+    /// per-lane `(qid, Σ|mass|)` in-flight releases accumulated while
+    /// absorbing, settled only AFTER the new totals are published — the
+    /// per-query account errs high, never low, like the aggregate one
+    lane_release: Vec<(u32, f64)>,
     /// fluid received ahead of a handoff ("table says mine, slice in
-    /// flight") — counted on the local account until folded into `f`
-    foster: HashMap<usize, f64>,
+    /// flight") — counted on the local account until folded into `f`;
+    /// keyed `(coordinate, lane)` so query fluid fosters independently
+    foster: HashMap<(usize, u32), f64>,
     coalesce: CoalesceBuffer,
     heap: GreedyQueue,
     seq: Option<SequenceState>,
@@ -208,11 +286,13 @@ pub struct WorkerCore {
 /// `tests/integration_hotpath.rs`).
 #[derive(Default)]
 struct BlockedScratch {
-    /// `(slot, fluid)` pairs selected this batch
+    /// `(lane cell, fluid)` pairs selected this batch — the cell is the
+    /// flat index `slot * lanes + lane` (== slot when `lanes == 1`)
     batch: VecQueue<(u32, f64)>,
-    /// local slots written by this batch's column walks. Duplicates are
-    /// allowed: the deferred refiling pass delegates dedup to the greedy
-    /// queue's exponent-bucket no-op, keeping the append branchless.
+    /// flat lane cells written by this batch's column walks. Duplicates
+    /// are allowed: the deferred refiling pass delegates dedup to the
+    /// greedy queue's exponent-bucket no-op, keeping the append
+    /// branchless.
     journal: VecQueue<u32>,
 }
 
@@ -227,8 +307,12 @@ struct LocalRebase {
     dirty: Arc<Vec<usize>>,
     /// dirty columns whose H must still arrive from owning peers
     waiting: HashSet<usize>,
-    /// `(dirty column, H_u at its owner's switch instant)` — own + received
-    halo: Vec<(usize, f64)>,
+    /// dirty columns resolved so far (own + received)
+    halo_coords: Vec<usize>,
+    /// lane-blocked H snapshots aligned with `halo_coords`
+    /// (`halo_coords.len() * lanes`): each lane's fluid is rebased from
+    /// its own history, so halos carry every lane
+    halo_h: Vec<f64>,
 }
 
 impl WorkerCore {
@@ -242,28 +326,61 @@ impl WorkerCore {
     ) -> WorkerCore {
         let n = problem.n();
         assert!(n <= u32::MAX as usize, "SoA parcels carry u32 coordinates");
+        let lanes = cfg.lanes.max(1);
+        assert!(
+            (n as u64).saturating_mul(lanes as u64) <= u32::MAX as u64,
+            "lane cells are addressed as u32 (slot * lanes + lane)"
+        );
+        let use_heap = cfg.sequence == SequenceKind::GreedyMaxFluid;
+        // a fixed sweep order ranks slots, not lanes: only the greedy
+        // queue's "largest fluid across any lane" priority (the paper's
+        // rule, generalized) is sound for multi-RHS serving
+        assert!(
+            lanes == 1 || use_heap,
+            "multi-lane serving requires SequenceKind::GreedyMaxFluid"
+        );
+        let queries = cfg.queries.clone();
+        if let Some(qs) = &queries {
+            assert_eq!(qs.lanes(), lanes, "QuerySet and config disagree on lanes");
+        }
         let (version, part) = table.snapshot();
         let owned: Vec<usize> = part.part(k).to_vec();
         let mut local_of = vec![usize::MAX; n];
         for &i in &owned {
             local_of[i] = part.slot(i);
         }
-        // epoch 0 cold state: F₀ = B on the owned slice, H₀ = 0
-        let f: Vec<f64> = owned.iter().map(|&i| problem.b()[i]).collect();
+        // epoch 0 cold state: F₀ = B on the owned slice (lane 0; query
+        // lanes start empty and fill by seed claiming), H₀ = 0
+        let mut f = vec![0.0; owned.len() * lanes];
+        for (t, &i) in owned.iter().enumerate() {
+            f[t * lanes] = problem.b()[i];
+        }
         let nonzero_f = f.iter().filter(|v| **v != 0.0).count();
-        let h = vec![0.0; owned.len()];
-        let use_heap = cfg.sequence == SequenceKind::GreedyMaxFluid;
+        let h = vec![0.0; owned.len() * lanes];
+        let (qver, lane_qids, lane_eps) = match &queries {
+            Some(qs) => {
+                let mut qids = Vec::new();
+                let mut eps = Vec::new();
+                qs.snapshot_qids(&mut qids);
+                qs.snapshot_eps(&mut eps);
+                (qs.version(), qids, eps)
+            }
+            // no registry: both wire endpoints use the identity lane map
+            None => (0, (0..lanes as u32).collect(), vec![0.0; lanes]),
+        };
         // sized to the owned slice, not the whole coordinate space (K
         // workers × n bucket state was the old cost); handoff adoption
         // grows it (see `adopt` / `rebuild_order`)
         let mut heap = GreedyQueue::new(owned.len());
         if use_heap {
-            for (t, &fv) in f.iter().enumerate() {
-                heap.push(t, fv.abs());
+            // cold state has fluid in lane 0 only, so the per-slot max is
+            // just the lane-0 cell
+            for t in 0..owned.len() {
+                heap.push(t, f[t * lanes].abs());
             }
         }
         let seq = Self::make_seq(&cfg, k, owned.len());
-        let coalesce = CoalesceBuffer::new(part.k(), cfg.coalesce);
+        let coalesce = CoalesceBuffer::with_lanes(part.k(), lanes, cfg.coalesce);
         let threshold = cfg.threshold0;
         // absorb-without-propagation floor: ≤ tol/10 extra residual, kills
         // the sub-denormal ping-pong tail (see the v2 module docs)
@@ -286,6 +403,20 @@ impl WorkerCore {
             local: None,
             h,
             f,
+            lanes,
+            queries,
+            qver,
+            lane_qids,
+            lane_eps,
+            endgame: vec![false; lanes],
+            force_flush: false,
+            last_serve_flush: Instant::now(),
+            lane_scratch: Vec::new(),
+            held_scratch: Vec::new(),
+            charge_scratch: Vec::new(),
+            qid_scratch: Vec::new(),
+            seed_scratch: Vec::new(),
+            lane_release: vec![(0, 0.0); lanes],
             foster: HashMap::new(),
             coalesce,
             heap,
@@ -306,7 +437,8 @@ impl WorkerCore {
         core
     }
 
-    /// Write `f[t] += dv`, maintaining the nonzero-fluid counter.
+    /// Write `f[t] += dv` (t is a **flat lane cell**, `slot * lanes +
+    /// lane`), maintaining the nonzero-fluid counter.
     #[inline]
     fn add_f(&mut self, t: usize, dv: f64) {
         let old = self.f[t];
@@ -316,7 +448,7 @@ impl WorkerCore {
         self.nonzero_f -= (old != 0.0) as usize;
     }
 
-    /// Write `f[t] = 0.0`, maintaining the nonzero-fluid counter.
+    /// Write `f[t] = 0.0` (flat lane cell), maintaining the counter.
     #[inline]
     fn clear_f(&mut self, t: usize) {
         self.nonzero_f -= (self.f[t] != 0.0) as usize;
@@ -354,9 +486,38 @@ impl WorkerCore {
         &self.owned
     }
 
-    /// The held history slice, aligned with [`WorkerCore::owned`].
+    /// The held history slice, aligned with [`WorkerCore::owned`] and
+    /// **lane-blocked** (`owned.len() * lanes`; flat when `lanes == 1`).
     pub fn h(&self) -> &[f64] {
         &self.h
+    }
+
+    /// Number of fluid lanes this core runs (≥ 1).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Greedy priority of a slot: the largest |fluid| across its lanes —
+    /// the paper's rule generalized to multi-RHS (any lane's fluid makes
+    /// the column worth draining, and one drain serves every lane).
+    #[inline]
+    fn lane_slot_max(&self, t: usize) -> f64 {
+        let base = t * self.lanes;
+        self.f[base..base + self.lanes]
+            .iter()
+            .fold(0.0f64, |m, v| m.max(v.abs()))
+    }
+
+    /// Map a global query id to its current lane, through the cached
+    /// table (lane 0 ⇔ qid 0 always).
+    #[inline]
+    fn lane_of_qid(&self, qid: u32) -> Option<usize> {
+        self.lane_qids.iter().position(|&q| q == qid)
+    }
+
+    /// Whether any query lane currently has a tenant (cached view).
+    fn serving_active(&self) -> bool {
+        self.lane_qids.iter().skip(1).any(|&q| q != FREE_LANE)
     }
 
     /// Whether nothing is buffered locally besides `f` itself.
@@ -368,14 +529,153 @@ impl WorkerCore {
     /// diffusion quantum, ship, publish. Returns `(got_fluid, r_k)` for
     /// the caller's idle-backoff decision.
     pub fn step(&mut self) -> (bool, f64) {
+        self.sync_queries();
         self.refresh_ownership(false);
         let got = self.absorb_bus();
+        self.claim_query_seeds();
         let (did_work, work_count, r_k) = self.diffuse_quantum();
         self.state.add_updates(self.k, work_count);
         self.throttle(work_count);
         self.ship(did_work, r_k);
         self.publish();
+        if std::mem::take(&mut self.force_flush) {
+            // a query lane just crossed under its ε target: push its tail
+            // out NOW — completion must never wait out the coalesce
+            // policy or the wire flush deadline
+            self.flush_coalesce(true);
+            self.publish();
+        }
         (got, r_k)
+    }
+
+    /// Resync the cached lane tables after an admit/evict (one atomic
+    /// load on the hot path; the body runs only on a version bump).
+    /// Lanes whose tenant changed drop ALL local state for the old
+    /// tenant — fluid, history, fosters, buffered outbound — before the
+    /// new tenant's seeds can land.
+    fn sync_queries(&mut self) {
+        let Some(qs) = self.queries.clone() else { return };
+        let v = qs.version();
+        if v == self.qver {
+            return;
+        }
+        self.qver = v;
+        let mut fresh = std::mem::take(&mut self.qid_scratch);
+        qs.snapshot_qids(&mut fresh);
+        debug_assert_eq!(fresh.len(), self.lanes);
+        let mut changed = false;
+        for l in 1..self.lanes {
+            if fresh[l] == self.lane_qids[l] {
+                continue;
+            }
+            changed = true;
+            self.endgame[l] = false;
+            for t in 0..self.owned.len() {
+                let flat = t * self.lanes + l;
+                if self.f[flat] != 0.0 {
+                    self.clear_f(flat);
+                }
+                self.h[flat] = 0.0;
+            }
+            let lane = l as u32;
+            self.foster.retain(|&(_, fl), _| fl != lane);
+            self.coalesce.clear_lane(lane);
+        }
+        std::mem::swap(&mut self.lane_qids, &mut fresh);
+        self.qid_scratch = fresh;
+        qs.snapshot_eps(&mut self.lane_eps);
+        if changed {
+            // the evicted tenant's mass vanishes from our published lane
+            // totals immediately (its accounts were reset at evict; the
+            // heap's stale priorities lazily refile on pop)
+            self.publish();
+        }
+    }
+
+    /// Inject any unclaimed query seeds whose coordinates we hold:
+    /// fluid in first, totals published, THEN the unclaimed account
+    /// released — the lane total errs high through admission, so the
+    /// serving loop can never observe an ε crossing that is really just
+    /// un-injected seed mass.
+    fn claim_query_seeds(&mut self) {
+        let Some(qs) = self.queries.clone() else { return };
+        if qs.unclaimed_seed_count() == 0 {
+            return;
+        }
+        let mut out = std::mem::take(&mut self.seed_scratch);
+        out.clear();
+        {
+            let local_of = &self.local_of;
+            qs.claim_seeds(|c| local_of[c] != usize::MAX, &mut out);
+        }
+        if out.is_empty() {
+            self.seed_scratch = out;
+            return;
+        }
+        for &(lane, _qid, coord, mass) in &out {
+            let t = self.local_of[coord];
+            debug_assert_ne!(t, usize::MAX, "claimed a seed we do not hold");
+            let flat = t * self.lanes + lane;
+            self.add_f(flat, mass);
+            if self.use_heap {
+                self.heap.push(t, self.f[flat].abs());
+            }
+        }
+        self.publish();
+        for &(lane, _qid, _coord, mass) in &out {
+            qs.seed_settled(lane, mass);
+        }
+        out.clear();
+        self.seed_scratch = out;
+    }
+
+    /// Accumulate a pending per-query in-flight release (settled after
+    /// the next publish). If the lane turned over mid-drain, the
+    /// displaced qid was evicted — its account was reset, so settling
+    /// its remainder immediately is a guarded no-op at worst.
+    fn accumulate_release(&mut self, lane: usize, qid: u32, mass: f64) {
+        let e = &mut self.lane_release[lane];
+        if e.1 != 0.0 && e.0 != qid {
+            if let Some(qs) = &self.queries {
+                qs.add_inflight(lane, e.0, -e.1);
+            }
+            e.1 = 0.0;
+        }
+        e.0 = qid;
+        e.1 += mass;
+    }
+
+    /// Settle accumulated per-query in-flight releases. Callers publish
+    /// first: each unit of query fluid stays visible in at least one of
+    /// {in-flight, published, unclaimed} at every instant.
+    fn settle_lane_releases(&mut self) {
+        if self.lanes == 1 {
+            return;
+        }
+        let Some(qs) = &self.queries else { return };
+        for (l, e) in self.lane_release.iter_mut().enumerate().skip(1) {
+            if e.1 != 0.0 {
+                qs.add_inflight(l, e.0, -e.1);
+                e.1 = 0.0;
+            }
+        }
+    }
+
+    /// A parcel discarded for epoch obsolescence still carried per-query
+    /// in-flight charges: queue their release (stale qids no-op — the
+    /// evicted tenant's account was already reset).
+    fn release_discarded(&mut self, qids: &[u32], amounts: &[f64]) {
+        if qids.is_empty() || self.queries.is_none() {
+            return;
+        }
+        for (u, &q) in qids.iter().enumerate() {
+            if q == 0 {
+                continue;
+            }
+            if let Some(lane) = self.lane_of_qid(q) {
+                self.accumulate_release(lane, q, amounts[u].abs());
+            }
+        }
     }
 
     /// Straggler injection: cap this PID's scalar-update rate.
@@ -411,15 +711,16 @@ impl WorkerCore {
         // quiescence proof for the rebase
         // fostered fluid whose designated owner moved on: forward it
         if !self.foster.is_empty() {
-            let stale: Vec<usize> = self
+            let stale: Vec<(usize, u32)> = self
                 .foster
                 .keys()
                 .copied()
-                .filter(|&j| self.part.owner(j) != self.k)
+                .filter(|&(j, _)| self.part.owner(j) != self.k)
                 .collect();
-            for j in stale {
-                let fl = self.foster.remove(&j).unwrap();
-                self.coalesce.add(self.part.owner(j), j, fl);
+            for key in stale {
+                let fl = self.foster.remove(&key).unwrap();
+                let (j, lane) = key;
+                self.coalesce.add_lane(self.part.owner(j), j, lane, fl);
                 self.metrics.incr("fluid_forwarded");
             }
         }
@@ -443,14 +744,35 @@ impl WorkerCore {
             self.table.ack_version(self.k, v);
             return;
         }
+        let lanes = self.lanes;
         let mut shipped = vec![false; self.owned.len()];
         for (dest, slots) in &outgoing {
             let coords: Vec<usize> = slots.iter().map(|&t| self.owned[t]).collect();
-            let h_slice: Vec<f64> = slots.iter().map(|&t| self.h[t]).collect();
-            let f_slice: Vec<f64> = slots.iter().map(|&t| self.f[t]).collect();
+            let h_slice: Vec<f64> = slots
+                .iter()
+                .flat_map(|&t| self.h[t * lanes..(t + 1) * lanes].iter().copied())
+                .collect();
+            let f_slice: Vec<f64> = slots
+                .iter()
+                .flat_map(|&t| self.f[t * lanes..(t + 1) * lanes].iter().copied())
+                .collect();
             let b_slice: Vec<f64> = coords.iter().map(|&i| self.problem.b()[i]).collect();
             let mass: f64 = f_slice.iter().map(|v| v.abs()).sum();
-            let bytes = coords.len() * 32 + 48;
+            let bytes = coords.len() * (16 * lanes + 16) + 48;
+            // per-query fluid leaving with the slice rides each lane's
+            // in-flight account until the recipient folds + republishes
+            // (charged before the send, un-charged if the peer is gone)
+            if lanes > 1 {
+                if let Some(qs) = &self.queries {
+                    for l in 1..lanes {
+                        let moved: f64 =
+                            (l..f_slice.len()).step_by(lanes).map(|u| f_slice[u].abs()).sum();
+                        if moved > 0.0 {
+                            qs.add_inflight(l, self.lane_qids[l], moved);
+                        }
+                    }
+                }
+            }
             let ho = Handoff {
                 pid_from: self.k,
                 pid_to: *dest,
@@ -477,8 +799,23 @@ impl WorkerCore {
                     shipped[t] = true;
                 }
             } else {
-                // peer already gone (shutdown race): keep holding the range
+                // peer already gone (shutdown race): keep holding the
+                // range, and roll back the per-query charge (the slots
+                // are untouched — nothing was compacted)
                 self.table.end_handoff();
+                if lanes > 1 {
+                    if let Some(qs) = &self.queries {
+                        for l in 1..lanes {
+                            let moved: f64 = slots
+                                .iter()
+                                .map(|&t| self.f[t * lanes + l].abs())
+                                .sum();
+                            if moved > 0.0 {
+                                qs.add_inflight(l, self.lane_qids[l], -moved);
+                            }
+                        }
+                    }
+                }
             }
         }
         if shipped.iter().any(|&s| s) {
@@ -494,14 +831,15 @@ impl WorkerCore {
     fn compact(&mut self, shipped: &[bool]) {
         // patch the LocalSystem off the OLD owned set before compacting it
         let patched = self.patch_local_shed(shipped);
+        let lanes = self.lanes;
         let mut owned = Vec::with_capacity(self.owned.len());
         let mut h = Vec::with_capacity(self.h.len());
         let mut f = Vec::with_capacity(self.f.len());
         for t in 0..self.owned.len() {
             if !shipped[t] {
                 owned.push(self.owned[t]);
-                h.push(self.h[t]);
-                f.push(self.f[t]);
+                h.extend_from_slice(&self.h[t * lanes..(t + 1) * lanes]);
+                f.extend_from_slice(&self.f[t * lanes..(t + 1) * lanes]);
             } else {
                 self.local_of[self.owned[t]] = usize::MAX;
             }
@@ -592,8 +930,15 @@ impl WorkerCore {
             // reset-in-place: the bucket storage stays warm across epoch
             // rebases (a fresh queue is ~2k vector allocations)
             self.heap.reset(self.owned.len());
-            for (t, &fv) in self.f.iter().enumerate() {
-                self.heap.push(t, fv.abs());
+            if self.lanes == 1 {
+                for (t, &fv) in self.f.iter().enumerate() {
+                    self.heap.push(t, fv.abs());
+                }
+            } else {
+                for t in 0..self.owned.len() {
+                    let p = self.lane_slot_max(t);
+                    self.heap.push(t, p);
+                }
             }
         }
         self.seq = Self::make_seq(&self.cfg, self.k, self.owned.len());
@@ -632,8 +977,8 @@ impl WorkerCore {
         debug_assert_eq!(self.local_of[j], usize::MAX);
         let t = self.owned.len();
         self.owned.push(j);
-        self.h.push(0.0);
-        self.f.push(0.0);
+        self.h.extend(std::iter::repeat(0.0).take(self.lanes));
+        self.f.extend(std::iter::repeat(0.0).take(self.lanes));
         self.local_of[j] = t;
         // keep the queue addressable until rebuild_order resizes it
         self.heap.grow(t + 1);
@@ -664,6 +1009,7 @@ impl WorkerCore {
                     epoch,
                     coords,
                     mass: amounts,
+                    qids,
                 } => {
                     // under the LOCAL protocol epochs are fluid-continuous:
                     // the rebase patches F in place (F' = F + (P'−P)·H), so
@@ -672,22 +1018,24 @@ impl WorkerCore {
                     // F from H, so its stale parcels are obsolete by
                     // construction and its future ones must wait.
                     if self.cfg.rebase == RebaseMode::Local || epoch == self.epoch {
-                        got |= self.apply_parcels(&coords, &amounts);
+                        got |= self.apply_parcels(&coords, &amounts, &qids);
                         to_commit.push((from, seq, mass));
                         // applied: the parcel's column storage backs the
                         // next outbound flush (wire decode → coalesce →
                         // wire encode, a closed allocation-free cycle)
-                        self.coalesce.recycle(coords, amounts);
+                        self.coalesce.recycle(coords, qids, amounts);
                     } else if epoch < self.epoch {
                         // obsolete epoch: discard, release its accounting
+                        // (bus mass at commit, per-query charges here)
+                        self.release_discarded(&qids, &amounts);
                         to_commit.push((from, seq, mass));
-                        self.coalesce.recycle(coords, amounts);
+                        self.coalesce.recycle(coords, qids, amounts);
                     } else {
                         self.pending.push(Received {
                             from,
                             seq,
                             mass,
-                            payload: WorkerMsg::Fluid { epoch, coords, mass: amounts },
+                            payload: WorkerMsg::Fluid { epoch, coords, mass: amounts, qids },
                         });
                     }
                 }
@@ -706,6 +1054,9 @@ impl WorkerCore {
         if got {
             self.publish();
         }
+        // per-query in-flight releases settle only after the new totals
+        // are visible, mirroring the publish-before-commit discipline
+        self.settle_lane_releases();
         for (from, seq, mass) in to_commit {
             self.ep.commit(from, seq, mass);
         }
@@ -716,21 +1067,46 @@ impl WorkerCore {
     /// Apply a current-epoch SoA parcel, routing each coordinate: local →
     /// absorb; table says mine but slice in flight → foster; otherwise →
     /// forward to the current owner. Returns whether anything landed.
-    fn apply_parcels(&mut self, coords: &[u32], amounts: &[f64]) -> bool {
+    ///
+    /// Query entries (`qids` non-empty) route by **global query id**: the
+    /// id maps to a lane through the cached table, resyncing once on a
+    /// miss (an admit we have not seen yet). An id that is still unknown
+    /// after the resync belongs to an evicted query — its entry is
+    /// dropped, which is exact: eviction already reset every account the
+    /// mass was carried in. Landed query mass queues a per-lane in-flight
+    /// release, settled after the next publish.
+    fn apply_parcels(&mut self, coords: &[u32], amounts: &[f64], qids: &[u32]) -> bool {
+        debug_assert!(qids.is_empty() || qids.len() == coords.len());
         let mut any = false;
         for (u, &jj) in coords.iter().enumerate() {
             let j = jj as usize;
             let fl = amounts[u];
+            let lane = if qids.is_empty() || qids[u] == 0 {
+                0
+            } else {
+                let q = qids[u];
+                let found = match self.lane_of_qid(q) {
+                    Some(l) => Some(l),
+                    None => {
+                        self.sync_queries();
+                        self.lane_of_qid(q)
+                    }
+                };
+                let Some(l) = found else { continue };
+                self.accumulate_release(l, q, fl.abs());
+                l
+            };
             let t = self.local_of[j];
             if t != usize::MAX {
-                self.add_f(t, fl);
+                let flat = t * self.lanes + lane;
+                self.add_f(flat, fl);
                 if self.use_heap {
-                    self.heap.push(t, self.f[t].abs());
+                    self.heap.push(t, self.f[flat].abs());
                 }
             } else if self.part.owner(j) == self.k {
-                *self.foster.entry(j).or_insert(0.0) += fl;
+                *self.foster.entry((j, lane as u32)).or_insert(0.0) += fl;
             } else {
-                self.coalesce.add(self.part.owner(j), j, fl);
+                self.coalesce.add_lane(self.part.owner(j), j, lane as u32, fl);
                 self.metrics.incr("fluid_forwarded");
             }
             any = true;
@@ -762,6 +1138,11 @@ impl WorkerCore {
                     .all(|(&j, &b)| b == self.problem.b()[j]),
             "handoff b_slice disagrees with the shared problem"
         );
+        let lanes = self.lanes;
+        debug_assert!(
+            ho.coords.is_empty() || ho.h_slice.len() == ho.coords.len() * lanes,
+            "handoff slice lane count disagrees with this pool's config"
+        );
         let mut adopted: Vec<usize> = Vec::with_capacity(ho.coords.len());
         for (s, &j) in ho.coords.iter().enumerate() {
             let t = if self.local_of[j] == usize::MAX {
@@ -770,12 +1151,30 @@ impl WorkerCore {
             } else {
                 self.local_of[j]
             };
-            self.h[t] += ho.h_slice[s];
-            let mut add = ho.f_slice[s];
-            if let Some(st) = self.foster.remove(&j) {
-                add += st;
+            for l in 0..lanes {
+                let flat = t * lanes + l;
+                self.h[flat] += ho.h_slice[s * lanes + l];
+                let mut add = ho.f_slice[s * lanes + l];
+                if let Some(st) = self.foster.remove(&(j, l as u32)) {
+                    add += st;
+                }
+                if add != 0.0 {
+                    self.add_f(flat, add);
+                }
             }
-            self.add_f(t, add);
+        }
+        // the sender charged each query lane's shipped |F| to its
+        // in-flight account; queue the matching release (settled after
+        // the absorb loop's publish)
+        if lanes > 1 && self.queries.is_some() {
+            for l in 1..lanes {
+                let landed: f64 =
+                    (l..ho.f_slice.len()).step_by(lanes).map(|u| ho.f_slice[u].abs()).sum();
+                if landed > 0.0 {
+                    let qid = self.lane_qids[l];
+                    self.accumulate_release(l, qid, landed);
+                }
+            }
         }
         self.rebuild_order();
         if !self.patch_local_adopt(&adopted) {
@@ -789,11 +1188,24 @@ impl WorkerCore {
     }
 
     /// Pick the next local slot to diffuse (greedy heap or sequence).
+    /// Multi-lane, the heap ranks each slot by its largest |fluid| across
+    /// lanes — one pop drains every lane of the winning column.
     #[inline]
     fn next_slot(&mut self) -> Option<usize> {
         if self.use_heap {
-            self.heap.pop_valid(|t| self.f[t])
+            let lanes = self.lanes;
+            let f = &self.f;
+            if lanes == 1 {
+                self.heap.pop_valid(|t| f[t])
+            } else {
+                self.heap.pop_valid(|t| {
+                    f[t * lanes..(t + 1) * lanes]
+                        .iter()
+                        .fold(0.0f64, |m, v| m.max(v.abs()))
+                })
+            }
         } else {
+            // fixed sweeps exist only single-lane (asserted in `new`)
             self.seq.as_mut().map(|seq| seq.next(&self.f))
         }
     }
@@ -829,6 +1241,7 @@ impl WorkerCore {
             .take()
             .expect("LocalBlock kernel requires a built LocalSystem");
         let quanta = self.cfg.sweeps_per_round * m;
+        let lanes = self.lanes;
         let mut did_work = false;
         let mut work_count = 0u64;
         for _ in 0..quanta {
@@ -836,31 +1249,41 @@ impl WorkerCore {
             if !self.frozen.is_empty() && self.frozen.contains(&t) {
                 continue; // mid-transition: this column's H is a halo snapshot
             }
-            let fi = self.f[t];
-            if fi == 0.0 {
-                continue;
-            }
-            if fi.abs() < self.absorb_eps {
-                self.h[t] += fi;
-                self.clear_f(t);
-                continue;
-            }
-            did_work = true;
-            work_count += 1;
-            self.h[t] += fi;
-            self.clear_f(t);
-            let (rows, vals) = local.block_col(t);
-            for u in 0..rows.len() {
-                let lj = rows[u] as usize;
-                self.add_f(lj, vals[u] * fi); // stays local: no indirection
-                if self.use_heap {
-                    self.heap.push(lj, self.f[lj].abs());
+            // drain every lane of the popped column: the column walk is
+            // the expensive part and it is identical across lanes, so a
+            // multi-RHS drain amortizes it L ways. Lanes never mix — lane
+            // l's fluid lands only in lane l cells.
+            let base = t * lanes;
+            for lane in 0..lanes {
+                let flat = base + lane;
+                let fi = self.f[flat];
+                if fi == 0.0 {
+                    continue;
                 }
-            }
-            let (dests, slots, vals) = local.remnant_col(t);
-            for u in 0..dests.len() {
-                // §3.3 regroup: one indexed add into the dest accumulator
-                self.coalesce.add_slot(dests[u] as usize, slots[u], vals[u] * fi);
+                if fi.abs() < self.absorb_eps {
+                    self.h[flat] += fi;
+                    self.clear_f(flat);
+                    continue;
+                }
+                did_work = true;
+                work_count += 1;
+                self.h[flat] += fi;
+                self.clear_f(flat);
+                let (rows, vals) = local.block_col(t);
+                for u in 0..rows.len() {
+                    let lj = rows[u] as usize;
+                    let fj = lj * lanes + lane;
+                    self.add_f(fj, vals[u] * fi); // stays local: no indirection
+                    if self.use_heap {
+                        self.heap.push(lj, self.f[fj].abs());
+                    }
+                }
+                let (dests, slots, vals) = local.remnant_col(t);
+                for u in 0..dests.len() {
+                    // §3.3 regroup: one indexed add into the dest accumulator
+                    self.coalesce
+                        .add_slot_lane(dests[u] as usize, slots[u], lane as u32, vals[u] * fi);
+                }
             }
         }
         self.local = Some(local);
@@ -893,7 +1316,10 @@ impl WorkerCore {
             .take()
             .expect("Blocked kernel requires a built LocalSystem");
         let mut scratch = std::mem::take(&mut self.blocked);
-        scratch.batch.reserve_total(BLOCK_BATCH);
+        let lanes = self.lanes;
+        // one selected slot can contribute up to `lanes` batch entries,
+        // so the batch may overshoot BLOCK_BATCH by lanes - 1
+        scratch.batch.reserve_total(BLOCK_BATCH + lanes);
         let quanta = self.cfg.sweeps_per_round * m;
         let mut did_work = false;
         let mut work_count = 0u64;
@@ -911,21 +1337,26 @@ impl WorkerCore {
                 if !self.frozen.is_empty() && self.frozen.contains(&t) {
                     continue; // mid-transition: this H is a halo snapshot
                 }
-                let fi = self.f[t];
-                if fi == 0.0 {
-                    continue;
+                let base = t * lanes;
+                for lane in 0..lanes {
+                    let flat = base + lane;
+                    let fi = self.f[flat];
+                    if fi == 0.0 {
+                        continue;
+                    }
+                    self.h[flat] += fi;
+                    self.clear_f(flat);
+                    if fi.abs() < self.absorb_eps {
+                        continue; // absorbed without propagation
+                    }
+                    did_work = true;
+                    work_count += 1;
+                    journal_cap += local.block_col(t).0.len();
+                    // SAFETY: `reserve_total(BLOCK_BATCH + lanes)` above,
+                    // `len() < BLOCK_BATCH` at loop entry, ≤ lanes pushes
+                    // per iteration
+                    unsafe { scratch.batch.push_unchecked((flat as u32, fi)) };
                 }
-                self.h[t] += fi;
-                self.clear_f(t);
-                if fi.abs() < self.absorb_eps {
-                    continue; // absorbed without propagation
-                }
-                did_work = true;
-                work_count += 1;
-                journal_cap += local.block_col(t).0.len();
-                // SAFETY: `reserve_total(BLOCK_BATCH)` above and
-                // `len() < BLOCK_BATCH` in the loop condition
-                unsafe { scratch.batch.push_unchecked((t as u32, fi)) };
             }
             if scratch.batch.is_empty() {
                 continue; // every selection was a skip; quanta still spent
@@ -934,43 +1365,61 @@ impl WorkerCore {
             // one reservation per batch (a no-op once warmed up) buys a
             // branchless unchecked append for every edge below
             scratch.journal.reserve_total(journal_cap);
-            for &(t, fi) in scratch.batch.as_slice() {
-                let (rows, vals) = local.block_col(t as usize);
+            for &(cell, fi) in scratch.batch.as_slice() {
+                let t = cell as usize / lanes;
+                let lane = cell as usize - t * lanes;
+                let lane32 = lane as u32;
+                let (rows, vals) = local.block_col(t);
                 let mut rc = rows.chunks_exact(4);
                 let mut vc = vals.chunks_exact(4);
                 for (r4, v4) in (&mut rc).zip(&mut vc) {
                     // four independent accumulations per step: distinct
                     // rows within a column mean no add can alias another
-                    self.add_f(r4[0] as usize, v4[0] * fi);
-                    self.add_f(r4[1] as usize, v4[1] * fi);
-                    self.add_f(r4[2] as usize, v4[2] * fi);
-                    self.add_f(r4[3] as usize, v4[3] * fi);
+                    // (and lane cells of distinct rows never alias)
+                    let c0 = r4[0] * lanes as u32 + lane32;
+                    let c1 = r4[1] * lanes as u32 + lane32;
+                    let c2 = r4[2] * lanes as u32 + lane32;
+                    let c3 = r4[3] * lanes as u32 + lane32;
+                    self.add_f(c0 as usize, v4[0] * fi);
+                    self.add_f(c1 as usize, v4[1] * fi);
+                    self.add_f(c2 as usize, v4[2] * fi);
+                    self.add_f(c3 as usize, v4[3] * fi);
                     // SAFETY: journal reserved to the batch's total
                     // column length above
                     unsafe {
-                        scratch.journal.push_unchecked(r4[0]);
-                        scratch.journal.push_unchecked(r4[1]);
-                        scratch.journal.push_unchecked(r4[2]);
-                        scratch.journal.push_unchecked(r4[3]);
+                        scratch.journal.push_unchecked(c0);
+                        scratch.journal.push_unchecked(c1);
+                        scratch.journal.push_unchecked(c2);
+                        scratch.journal.push_unchecked(c3);
                     }
                 }
                 for (&r, &v) in rc.remainder().iter().zip(vc.remainder()) {
-                    self.add_f(r as usize, v * fi);
+                    let c = r * lanes as u32 + lane32;
+                    self.add_f(c as usize, v * fi);
                     // SAFETY: covered by the same per-batch reservation
-                    unsafe { scratch.journal.push_unchecked(r) };
+                    unsafe { scratch.journal.push_unchecked(c) };
                 }
-                let (dests, slots, rvals) = local.remnant_col(t as usize);
+                let (dests, slots, rvals) = local.remnant_col(t);
                 for u in 0..dests.len() {
                     // §3.3 regroup: one indexed add into the accumulator
-                    self.coalesce.add_slot(dests[u] as usize, slots[u], rvals[u] * fi);
+                    self.coalesce
+                        .add_slot_lane(dests[u] as usize, slots[u], lane32, rvals[u] * fi);
                 }
             }
             if self.use_heap {
                 // the deferred refiling pass: duplicates land in the same
-                // exponent bucket and are no-ops
-                for &lj in scratch.journal.as_slice() {
-                    let lj = lj as usize;
-                    self.heap.push(lj, self.f[lj].abs());
+                // exponent bucket and are no-ops. The journal holds flat
+                // lane cells; single-lane skips the division.
+                if lanes == 1 {
+                    for &lj in scratch.journal.as_slice() {
+                        let lj = lj as usize;
+                        self.heap.push(lj, self.f[lj].abs());
+                    }
+                } else {
+                    for &cell in scratch.journal.as_slice() {
+                        let cell = cell as usize;
+                        self.heap.push(cell / lanes, self.f[cell].abs());
+                    }
                 }
             }
         }
@@ -988,37 +1437,44 @@ impl WorkerCore {
         let quanta = self.cfg.sweeps_per_round * m;
         let mut did_work = false;
         let mut work_count = 0u64;
+        let lanes = self.lanes;
         for _ in 0..quanta {
             let Some(t) = self.next_slot() else { break };
             if !self.frozen.is_empty() && self.frozen.contains(&t) {
                 continue; // mid-transition: this column's H is a halo snapshot
             }
-            let fi = self.f[t];
-            if fi == 0.0 {
-                continue;
-            }
-            if fi.abs() < self.absorb_eps {
-                self.h[t] += fi;
-                self.clear_f(t);
-                continue;
-            }
-            did_work = true;
-            work_count += 1;
-            self.h[t] += fi;
-            self.clear_f(t);
-            let (rows, vals) = csc.col(self.owned[t]);
-            for u in 0..rows.len() {
-                let j = rows[u];
-                let contrib = vals[u] * fi;
-                let lj = self.local_of[j];
-                if lj != usize::MAX {
-                    self.add_f(lj, contrib); // stays local
-                    if self.use_heap {
-                        self.heap.push(lj, self.f[lj].abs());
+            let base = t * lanes;
+            for lane in 0..lanes {
+                let flat = base + lane;
+                let fi = self.f[flat];
+                if fi == 0.0 {
+                    continue;
+                }
+                if fi.abs() < self.absorb_eps {
+                    self.h[flat] += fi;
+                    self.clear_f(flat);
+                    continue;
+                }
+                did_work = true;
+                work_count += 1;
+                self.h[flat] += fi;
+                self.clear_f(flat);
+                let (rows, vals) = csc.col(self.owned[t]);
+                for u in 0..rows.len() {
+                    let j = rows[u];
+                    let contrib = vals[u] * fi;
+                    let lj = self.local_of[j];
+                    if lj != usize::MAX {
+                        let fj = lj * lanes + lane;
+                        self.add_f(fj, contrib); // stays local
+                        if self.use_heap {
+                            self.heap.push(lj, self.f[fj].abs());
+                        }
+                    } else {
+                        // §3.3 regroup, routed by the live owner map
+                        self.coalesce
+                            .add_lane(self.part.owner(j), j, lane as u32, contrib);
                     }
-                } else {
-                    // §3.3 regroup, routed by the live owner map
-                    self.coalesce.add(self.part.owner(j), j, contrib);
                 }
             }
         }
@@ -1029,7 +1485,20 @@ impl WorkerCore {
     /// triggers: threshold crossing, or full flush when locally drained).
     fn ship(&mut self, did_work: bool, r_k: f64) {
         let threshold_hit = did_work && r_k < self.threshold;
-        let flush_all = threshold_hit || r_k < self.cfg.tol;
+        let mut flush_all = threshold_hit || r_k < self.cfg.tol;
+        if self.queries.is_some() {
+            // serving keeps callers waiting on per-lane totals: bound how
+            // long any query tail can ride the coalesce buffers, whatever
+            // the base problem's threshold schedule is doing
+            if flush_all {
+                self.last_serve_flush = Instant::now();
+            } else if self.serving_active()
+                && self.last_serve_flush.elapsed() >= SERVE_FLUSH_INTERVAL
+            {
+                flush_all = true;
+                self.last_serve_flush = Instant::now();
+            }
+        }
         self.flush_coalesce(flush_all);
         if threshold_hit && self.threshold > self.cfg.tol * 1e-3 {
             self.threshold /= self.cfg.threshold_alpha;
@@ -1044,36 +1513,84 @@ impl WorkerCore {
     /// aimed at the dead PID in the first place). Fluid is never dropped.
     fn flush_coalesce(&mut self, flush_all: bool) {
         let epoch = self.epoch;
+        let lanes = self.lanes;
         let ep = &mut self.ep;
-        let mut failed: Vec<(Vec<u32>, Vec<f64>)> = Vec::new();
-        self.coalesce.flush(flush_all, |dest, coords, mass, total| {
-            let bytes = coords.len() * 12 + 24;
-            if let Err(msg) = ep.try_send(dest, WorkerMsg::Fluid { epoch, coords, mass }, total, bytes)
-            {
-                if let WorkerMsg::Fluid { coords, mass, .. } = msg {
-                    failed.push((coords, mass));
+        let lane_qids = &self.lane_qids;
+        let queries = self.queries.as_deref();
+        let charge = &mut self.charge_scratch;
+        let mut failed: Vec<(Vec<u32>, Vec<u32>, Vec<f64>)> = Vec::new();
+        self.coalesce.flush(flush_all, |dest, coords, mut qlanes, mass, total| {
+            if !qlanes.is_empty() {
+                // charge each query lane's shipped |mass| to its in-flight
+                // account BEFORE the send (the receiver releases it after
+                // folding + publishing, so the lane total errs high in
+                // transit), then translate the buffer-local lane indices
+                // into global query ids for the wire
+                charge.clear();
+                charge.resize(lanes, 0.0);
+                for (u, &l) in qlanes.iter().enumerate() {
+                    charge[l as usize] += mass[u].abs();
+                }
+                if let Some(qs) = queries {
+                    for l in 1..lanes {
+                        if charge[l] > 0.0 {
+                            qs.add_inflight(l, lane_qids[l], charge[l]);
+                        }
+                    }
+                }
+                for q in qlanes.iter_mut() {
+                    *q = lane_qids[*q as usize];
+                }
+            }
+            let bytes = coords.len() * 12 + qlanes.len() * 4 + 24;
+            let msg = WorkerMsg::Fluid { epoch, coords, mass, qids: qlanes };
+            if let Err(msg) = ep.try_send(dest, msg, total, bytes) {
+                if let WorkerMsg::Fluid { coords, mass, qids, .. } = msg {
+                    // the parcel never left: roll back the charge
+                    if let Some(qs) = queries {
+                        for (u, &q) in qids.iter().enumerate() {
+                            if q == 0 {
+                                continue;
+                            }
+                            if let Some(l) = lane_qids.iter().position(|&x| x == q) {
+                                qs.add_inflight(l, q, -mass[u].abs());
+                            }
+                        }
+                    }
+                    failed.push((coords, qids, mass));
                 }
             }
         });
         if flush_all {
             // a full flush is a latency-sensitive moment (threshold
-            // crossing or local drain): push the queued frames to the
-            // network now instead of waiting out the wire flush policy
+            // crossing, local drain, or a lane's ε endgame): push the
+            // queued frames to the network now instead of waiting out
+            // the wire flush policy
             self.ep.flush();
         }
         if failed.is_empty() {
             return;
         }
         let part = self.table.partition();
-        for (coords, mass) in failed {
+        for (coords, qids, mass) in failed {
             for (u, &j) in coords.iter().enumerate() {
                 let j = j as usize;
-                self.coalesce.add(part.owner(j), j, mass[u]);
+                let lane = if qids.is_empty() {
+                    0
+                } else {
+                    // evicted mid-flush ⇒ the entry's accounts are gone;
+                    // dropping it is the exact move
+                    match self.lane_of_qid(qids[u]) {
+                        Some(l) => l,
+                        None => continue,
+                    }
+                };
+                self.coalesce.add_lane(part.owner(j), j, lane as u32, mass[u]);
             }
             self.metrics.incr("fluid_forwarded");
             // the parcel never left the process: its storage backs the
             // next flush instead of being dropped
-            self.coalesce.recycle(coords, mass);
+            self.coalesce.recycle(coords, qids, mass);
         }
     }
 
@@ -1082,12 +1599,50 @@ impl WorkerCore {
     }
 
     /// Publish the locally-known remaining fluid: F + held coalesce mass +
-    /// fostered mass.
-    pub fn publish(&self) {
-        self.state.publish(
-            self.k,
-            norm1(&self.f) + self.coalesce.held_mass() + self.foster_mass(),
-        );
+    /// fostered mass. The aggregate (all lanes) feeds the monitor's
+    /// conservation total exactly as before; multi-lane, each query
+    /// lane's share is additionally published to the [`QuerySet`], and a
+    /// lane observed under its ε target for the first time latches the
+    /// endgame flush (`force_flush`, consumed by `step`).
+    pub fn publish(&mut self) {
+        let foster_total = self.foster_mass();
+        if self.lanes == 1 {
+            self.state.publish(
+                self.k,
+                norm1(&self.f) + self.coalesce.held_mass() + foster_total,
+            );
+            return;
+        }
+        let lanes = self.lanes;
+        self.lane_scratch.clear();
+        self.lane_scratch.resize(lanes, 0.0);
+        for chunk in self.f.chunks_exact(lanes) {
+            for (l, v) in chunk.iter().enumerate() {
+                self.lane_scratch[l] += v.abs();
+            }
+        }
+        for (&(_, lane), v) in &self.foster {
+            self.lane_scratch[lane as usize] += v.abs();
+        }
+        self.coalesce.held_by_lane(&mut self.held_scratch);
+        let total: f64 = self.lane_scratch.iter().sum::<f64>()
+            + self.held_scratch.iter().sum::<f64>();
+        self.state.publish(self.k, total);
+        if let Some(qs) = &self.queries {
+            let mut crossed = false;
+            for l in 1..lanes {
+                let lane_total = self.lane_scratch[l] + self.held_scratch[l];
+                qs.publish_lane(self.k, l, lane_total);
+                let eps = self.lane_eps[l];
+                if eps > 0.0 && lane_total < eps && !self.endgame[l] {
+                    self.endgame[l] = true;
+                    crossed = true;
+                }
+            }
+            if crossed {
+                self.force_flush = true;
+            }
+        }
     }
 
     /// Install a new streaming epoch: new matrix, rebased fluid slice
@@ -1108,8 +1663,8 @@ impl WorkerCore {
     ) {
         assert_eq!(
             f_slice.len(),
-            self.owned.len(),
-            "rebased slice must align with the held range"
+            self.owned.len() * self.lanes,
+            "rebased slice must align with the held range (lane-blocked)"
         );
         self.epoch = epoch;
         self.problem = problem;
@@ -1117,6 +1672,11 @@ impl WorkerCore {
         self.recount_f();
         self.coalesce.clear();
         self.foster.clear();
+        // every lane's fluid was recomputed from its own H and B: lanes
+        // that were in their ε endgame may have fresh mass again
+        for e in &mut self.endgame {
+            *e = false;
+        }
         self.rebuild_order();
         let mut patched = false;
         if self.cfg.kernel.uses_local_system() {
@@ -1150,14 +1710,15 @@ impl WorkerCore {
                 payload,
             } = msg;
             match payload {
-                WorkerMsg::Fluid { epoch: e, coords, mass: amounts } if e == self.epoch => {
-                    self.apply_parcels(&coords, &amounts);
+                WorkerMsg::Fluid { epoch: e, coords, mass: amounts, qids } if e == self.epoch => {
+                    self.apply_parcels(&coords, &amounts, &qids);
                     to_commit.push((from, seq, mass));
-                    self.coalesce.recycle(coords, amounts);
+                    self.coalesce.recycle(coords, qids, amounts);
                 }
-                WorkerMsg::Fluid { epoch: e, coords, mass: amounts } if e < self.epoch => {
+                WorkerMsg::Fluid { epoch: e, coords, mass: amounts, qids } if e < self.epoch => {
+                    self.release_discarded(&qids, &amounts);
                     to_commit.push((from, seq, mass));
-                    self.coalesce.recycle(coords, amounts);
+                    self.coalesce.recycle(coords, qids, amounts);
                 }
                 payload => self.pending.push(Received {
                     from,
@@ -1168,6 +1729,7 @@ impl WorkerCore {
             }
         }
         self.publish();
+        self.settle_lane_releases();
         for (from, seq, mass) in to_commit {
             self.ep.commit(from, seq, mass);
         }
@@ -1195,23 +1757,27 @@ impl WorkerCore {
     ) {
         debug_assert!(epoch > self.epoch, "epochs advance monotonically");
         debug_assert!(self.pending_local.is_none(), "one epoch transition at a time");
+        let lanes = self.lanes;
         let old_csc = self.problem.matrix().csc();
         let new_csc = problem.matrix().csc();
         let mut own_coords: Vec<u32> = Vec::new();
         let mut own_h: Vec<f64> = Vec::new();
         let mut dests: BTreeSet<usize> = BTreeSet::new();
         let mut waiting: HashSet<usize> = HashSet::new();
-        let mut halo: Vec<(usize, f64)> = Vec::new();
+        let mut halo_coords: Vec<usize> = Vec::new();
+        let mut halo_h: Vec<f64> = Vec::new();
         for &u in dirty.iter() {
             let t = self.local_of[u];
             if t != usize::MAX {
-                // ours: freeze + snapshot. The frozen slot keeps
-                // accumulating incoming fluid in F; only its H is pinned.
+                // ours: freeze + snapshot (every lane's H — each lane's
+                // fluid rebases from its own history). The frozen slot
+                // keeps accumulating incoming fluid in F; only its H is
+                // pinned.
                 self.frozen.insert(t);
-                let hu = self.h[t];
                 own_coords.push(u as u32);
-                own_h.push(hu);
-                halo.push((u, hu));
+                own_h.extend_from_slice(&self.h[t * lanes..(t + 1) * lanes]);
+                halo_coords.push(u);
+                halo_h.extend_from_slice(&self.h[t * lanes..(t + 1) * lanes]);
                 // every owner of a row in the old or new column needs H_u
                 for csc in [old_csc, new_csc] {
                     let (rows, _) = csc.col(u);
@@ -1239,8 +1805,8 @@ impl WorkerCore {
             // both sides compute "need" from the same frozen owner map,
             // so neither waits on a message the other will not send)
             let dests: Vec<usize> = dests.into_iter().collect();
-            let bytes = own_coords.len() * 12 + 24;
-            let n_vals = own_coords.len() as u64;
+            let bytes = own_coords.len() * (4 + 8 * lanes) + 24;
+            let n_vals = own_h.len() as u64;
             let sent = self.ep.multicast(
                 &dests,
                 &WorkerMsg::HaloSlice {
@@ -1262,13 +1828,14 @@ impl WorkerCore {
             problem,
             dirty,
             waiting,
-            halo,
+            halo_coords,
+            halo_h,
         };
         // halo slices that raced ahead of our control message
         let stashed = std::mem::take(&mut self.halo_stash);
         for (e, coords, h) in stashed {
             if e == epoch {
-                Self::fold_halo(&mut pending, &coords, &h);
+                Self::fold_halo(&mut pending, lanes, &coords, &h);
             }
         }
         self.pending_local = Some(pending);
@@ -1277,9 +1844,10 @@ impl WorkerCore {
 
     /// Route a received halo slice into the transition state machine.
     fn recv_halo(&mut self, epoch: u64, coords: &[u32], h: &[f64]) {
+        let lanes = self.lanes;
         let folded = match self.pending_local.as_mut() {
             Some(p) if p.epoch == epoch => {
-                Self::fold_halo(p, coords, h);
+                Self::fold_halo(p, lanes, coords, h);
                 true
             }
             _ => false,
@@ -1294,12 +1862,15 @@ impl WorkerCore {
     }
 
     /// Fold received halo values into the pending transition, resolving
-    /// only columns we are actually waiting for.
-    fn fold_halo(p: &mut LocalRebase, coords: &[u32], h: &[f64]) {
+    /// only columns we are actually waiting for. `h` is lane-blocked
+    /// (`coords.len() * lanes`), like every H slice on the bus.
+    fn fold_halo(p: &mut LocalRebase, lanes: usize, coords: &[u32], h: &[f64]) {
+        debug_assert_eq!(h.len(), coords.len() * lanes);
         for (idx, &c) in coords.iter().enumerate() {
             let u = c as usize;
             if p.waiting.remove(&u) {
-                p.halo.push((u, h[idx]));
+                p.halo_coords.push(u);
+                p.halo_h.extend_from_slice(&h[idx * lanes..(idx + 1) * lanes]);
             }
         }
     }
@@ -1319,13 +1890,29 @@ impl WorkerCore {
             return;
         }
         let p = self.pending_local.take().expect("checked above");
-        let touched = update::rebase_b_slice_local(
-            self.problem.matrix().csc(),
-            p.problem.matrix().csc(),
-            &p.halo,
-            &self.local_of,
-            &mut self.f,
-        );
+        let lanes = self.lanes;
+        // every lane rebases from its own history: F_l ← F_l + (P'−P)·H_l
+        // (a query's B is seed mass in the registry, untouched by the
+        // matrix delta, so the same formula serves every lane)
+        let mut touched: Vec<usize> = Vec::new();
+        for lane in 0..lanes {
+            let halo: Vec<(usize, f64)> = p
+                .halo_coords
+                .iter()
+                .enumerate()
+                .map(|(i, &u)| (u, p.halo_h[i * lanes + lane]))
+                .collect();
+            let t = update::rebase_b_slice_local_lane(
+                self.problem.matrix().csc(),
+                p.problem.matrix().csc(),
+                &halo,
+                &self.local_of,
+                &mut self.f,
+                lanes,
+                lane,
+            );
+            touched.extend(t);
+        }
         self.recount_f();
         self.epoch = p.epoch;
         self.problem = p.problem;
@@ -1351,14 +1938,14 @@ impl WorkerCore {
         // unfreeze + requeue: every pinned or delta-touched slot re-enters
         // the diffusion order with its current fluid
         if self.use_heap {
-            for &t in self.frozen.iter() {
-                self.heap.push(t, self.f[t].abs());
+            let frozen = std::mem::take(&mut self.frozen);
+            for &t in frozen.iter().chain(&touched) {
+                let p = self.lane_slot_max(t);
+                self.heap.push(t, p);
             }
-            for &t in &touched {
-                self.heap.push(t, self.f[t].abs());
-            }
+        } else {
+            self.frozen.clear();
         }
-        self.frozen.clear();
         self.threshold = self.cfg.threshold0;
         self.publish();
     }
@@ -1373,6 +1960,9 @@ impl WorkerCore {
     /// for coordinates we hold land in F; everything else forwards to the
     /// current owner, published before the receipt commits so the
     /// monitor's total errs high, never low, through the exit.
+    ///
+    /// The returned history is **lane-blocked** (`owned.len() * lanes`);
+    /// single-lane callers see the flat pre-lane layout unchanged.
     pub fn finish(mut self) -> (Vec<usize>, Vec<f64>) {
         self.shutting_down = true;
         // Drain for a minimum grace window (catches slices shipped just
@@ -1403,18 +1993,23 @@ impl WorkerCore {
                         epoch,
                         coords,
                         mass: amounts,
+                        qids,
                     } if epoch == self.epoch || self.cfg.rebase == RebaseMode::Local => {
                         // local protocol: every epoch's fluid is live
-                        self.apply_parcels(&coords, &amounts);
+                        self.apply_parcels(&coords, &amounts, &qids);
                         touched = true;
-                        self.coalesce.recycle(coords, amounts);
+                        self.coalesce.recycle(coords, qids, amounts);
                     }
                     // obsolete epoch: discard, keep the storage
                     WorkerMsg::Fluid {
                         coords,
                         mass: amounts,
+                        qids,
                         ..
-                    } => self.coalesce.recycle(coords, amounts),
+                    } => {
+                        self.release_discarded(&qids, &amounts);
+                        self.coalesce.recycle(coords, qids, amounts);
+                    }
                     // a halo slice is state-plane; no transition can be in
                     // flight once the pool is shutting down (the engine's
                     // rebase holds the table frozen until every worker
@@ -1424,6 +2019,7 @@ impl WorkerCore {
                 // publish before the commit releases the in-flight mass,
                 // so each unit stays visible in at least one account
                 self.publish();
+                self.settle_lane_releases();
                 self.ep.commit(from, seq, mass);
             }
             if touched {

@@ -4,6 +4,7 @@
 //!   solve      solve a synthetic system with any scheme/solver
 //!   pagerank   distributed PageRank on a synthetic web-like graph
 //!   stream     online PageRank: continuous graph churn, warm rebases
+//!   serve      multi-tenant PPR query serving over shared workers
 //!   figure     regenerate a paper figure (1..4) as a text table
 //!   artifacts  inspect the AOT artifact manifest / smoke-test PJRT
 //!   help       this text
@@ -20,7 +21,7 @@ use diter::configfile::Config;
 use diter::coordinator::remote::{self, RemoteParams};
 use diter::coordinator::{
     v1, v2, AdaptiveConfig, AdaptivePolicy, DistributedConfig, ElasticConfig, KernelKind,
-    RebaseMode, StreamingEngine, TransportKind,
+    Query, QueryState, RebaseMode, ServeConfig, ServeEngine, StreamingEngine, TransportKind,
 };
 use diter::graph::{
     block_coupled_matrix, pagerank_system, paper_matrix, power_law_web_graph, ChurnModel,
@@ -47,6 +48,7 @@ fn main() -> ExitCode {
         "solve" => cmd_solve(rest),
         "pagerank" => cmd_pagerank(rest),
         "stream" => cmd_stream(rest),
+        "serve" => cmd_serve(rest),
         "figure" => cmd_figure(rest),
         "artifacts" => cmd_artifacts(rest),
         "help" | "--help" | "-h" => {
@@ -75,6 +77,7 @@ fn print_help() {
          \x20 solve      solve a synthetic block-coupled system\n\
          \x20 pagerank   distributed PageRank on a synthetic web graph\n\
          \x20 stream     online PageRank under continuous graph churn\n\
+         \x20 serve      multi-tenant PPR query serving over shared workers\n\
          \x20 figure     regenerate a paper figure (--id 1..4)\n\
          \x20 artifacts  inspect AOT artifacts / smoke-test the PJRT runtime\n\
          \x20 help       this text\n\n\
@@ -776,6 +779,261 @@ fn cmd_stream(argv: &[String]) -> CliResult {
             pool_stats.peak_live,
             pool_stats.live
         );
+    }
+    Ok(())
+}
+
+fn serve_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec {
+            name: "help",
+            help: "show usage",
+            is_flag: true,
+            default: None,
+        },
+        OptSpec {
+            name: "nodes",
+            help: "pages in the web graph",
+            is_flag: false,
+            default: Some("2000"),
+        },
+        OptSpec {
+            name: "pids",
+            help: "number of PIDs",
+            is_flag: false,
+            default: Some("3"),
+        },
+        OptSpec {
+            name: "lanes",
+            help: "concurrent query lanes (in-flight cap)",
+            is_flag: false,
+            default: Some("2"),
+        },
+        OptSpec {
+            name: "queries",
+            help: "PPR queries to submit",
+            is_flag: false,
+            default: Some("6"),
+        },
+        OptSpec {
+            name: "seeds-per-query",
+            help: "teleport seeds per query",
+            is_flag: false,
+            default: Some("2"),
+        },
+        OptSpec {
+            name: "eps",
+            help: "per-query convergence target ε",
+            is_flag: false,
+            default: Some("1e-6"),
+        },
+        OptSpec {
+            name: "deadline-ms",
+            help: "per-query deadline (0 = none; expired tenants are evicted)",
+            is_flag: false,
+            default: Some("0"),
+        },
+        OptSpec {
+            name: "queue-cap",
+            help: "admission queue depth beyond the lane cap (overflow is rejected)",
+            is_flag: false,
+            default: Some("32"),
+        },
+        OptSpec {
+            name: "damping",
+            help: "PageRank damping d",
+            is_flag: false,
+            default: Some("0.85"),
+        },
+        OptSpec {
+            name: "tol",
+            help: "base-lane total-fluid target",
+            is_flag: false,
+            default: Some("1e-9"),
+        },
+        OptSpec {
+            name: "churn-every",
+            help: "apply a mutation batch after every this many completed queries (0 = no churn)",
+            is_flag: false,
+            default: Some("2"),
+        },
+        OptSpec {
+            name: "batch-size",
+            help: "mutations per churn batch",
+            is_flag: false,
+            default: Some("16"),
+        },
+        OptSpec {
+            name: "elastic",
+            help: "elastic worker pool: spawn/retire PIDs while serving",
+            is_flag: true,
+            default: None,
+        },
+        OptSpec {
+            name: "max-workers",
+            help: "elastic pool: cap on concurrently-live workers",
+            is_flag: false,
+            default: Some("8"),
+        },
+        OptSpec {
+            name: "transport",
+            help: "message fabric: bus (in-process) | wire (loopback TCP); default from DITER_TRANSPORT",
+            is_flag: false,
+            default: None,
+        },
+        OptSpec {
+            name: "max-wall-secs",
+            help: "overall serving wall cap",
+            is_flag: false,
+            default: Some("60"),
+        },
+        OptSpec {
+            name: "seed",
+            help: "RNG seed",
+            is_flag: false,
+            default: Some("7"),
+        },
+    ]
+}
+
+/// Multi-tenant serving demo: N concurrent personalized-PageRank queries
+/// multiplexed through one worker pool as extra fluid lanes, with
+/// queue-or-reject admission and graph churn running underneath
+/// (DESIGN.md §10). Exits non-zero when an admitted query fails to reach
+/// its ε (deadline evictions are failures only when no deadline was
+/// requested — with `--deadline-ms` they are the configured policy).
+fn cmd_serve(argv: &[String]) -> CliResult {
+    let spec = serve_spec();
+    let args = parse_args(argv, &spec)?;
+    if args.has_flag("help") {
+        print!(
+            "{}",
+            usage("diter serve", "multi-tenant PPR query serving", &spec)
+        );
+        return Ok(());
+    }
+    let n = args.get_usize("nodes", 2000)?;
+    let k = args.get_usize("pids", 3)?;
+    let lanes = args.get_usize("lanes", 2)?.max(1);
+    let total_queries = args.get_usize("queries", 6)?;
+    let seeds_per_query = args.get_usize("seeds-per-query", 2)?.max(1);
+    let eps = args.get_f64("eps", 1e-6)?;
+    let deadline_ms = args.get_u64("deadline-ms", 0)?;
+    let queue_cap = args.get_usize("queue-cap", 32)?;
+    let damping = args.get_f64("damping", 0.85)?;
+    let tol = args.get_f64("tol", 1e-9)?;
+    let churn_every = args.get_usize("churn-every", 2)?;
+    let batch_size = args.get_usize("batch-size", 16)?;
+    let max_wall = Duration::from_secs(args.get_u64("max-wall-secs", 60)?);
+    let seed = args.get_u64("seed", 7)?;
+    let transport = match args.get("transport") {
+        Some(name) => {
+            TransportKind::parse(name).ok_or("bad --transport (expected bus | wire)")?
+        }
+        None => TransportKind::from_env(),
+    };
+
+    let g = power_law_web_graph(n, 8, 0.1, seed);
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let mut cfg = DistributedConfig::new(Partition::contiguous(n, k)?)
+        .with_tol(tol)
+        .with_seed(seed)
+        .with_sequence(SequenceKind::GreedyMaxFluid)
+        .with_transport(transport);
+    cfg.max_wall = max_wall;
+    if args.has_flag("elastic") {
+        let max_workers = args.get_usize("max-workers", 8)?;
+        if max_workers < k {
+            return Err(format!(
+                "--max-workers {max_workers} below the initial --pids {k}"
+            )
+            .into());
+        }
+        cfg = cfg.with_elastic(ElasticConfig {
+            max_workers,
+            ..Default::default()
+        });
+    }
+    let serve_cfg = ServeConfig {
+        queue_cap,
+        default_eps: eps,
+        default_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+        ..Default::default()
+    };
+    println!(
+        "serving PPR: N={n}, K={k} PIDs, {lanes} query lanes, {total_queries} queries \
+         (ε={eps:.1e}), transport={}, churn every {churn_every} completions",
+        transport.name()
+    );
+    let mut serve = ServeEngine::new(mg, damping, true, cfg, serve_cfg, lanes)?;
+
+    let mut rng = diter::prng::Xoshiro256pp::seed_from_u64(seed ^ 0x5EED);
+    let mut churn = MutationStream::new(ChurnModel::RandomRewire, seed ^ 0xC0FFEE);
+    let mut submitted = 0usize;
+    let mut rejected_at_submit = 0usize;
+    let mut finished: Vec<(u32, usize, QueryState, Option<f64>)> = Vec::new();
+    let mut since_churn = 0usize;
+    let t0 = std::time::Instant::now();
+    while finished.len() + rejected_at_submit < total_queries {
+        while submitted < total_queries {
+            let seeds: Vec<usize> = (0..seeds_per_query).map(|_| rng.below(n)).collect();
+            let q = Query::ppr(&seeds, damping, eps);
+            if serve.submit(q).is_none() {
+                rejected_at_submit += 1;
+            }
+            submitted += 1;
+        }
+        for done in serve.poll()? {
+            finished.push((done.qid, done.lane, done.state, done.time_to_eps_secs));
+            since_churn += 1;
+            if churn_every > 0 && since_churn >= churn_every {
+                since_churn = 0;
+                let batch = churn.next_batch(serve.engine().graph(), batch_size);
+                let applied = serve.apply_mutations(&batch)?;
+                println!("  churn: {applied} mutations applied (epoch {})", serve.engine().epoch());
+            }
+        }
+        if t0.elapsed() >= max_wall {
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+
+    let (admitted, served, rejected) = serve.counts();
+    let mut table = Table::new(&["qid", "lane", "state", "time-to-ε"]);
+    for (qid, lane, state, tte) in &finished {
+        table.row(&[
+            qid.to_string(),
+            lane.to_string(),
+            format!("{state:?}"),
+            tte.map(|s| fmt_secs(s)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\nadmitted {admitted}, served {served}, rejected {rejected}; \
+         freshness {:.2} q/s; pool {:?}",
+        serve.freshness().unwrap_or(0.0),
+        serve.engine().pool_stats(),
+    );
+    let summary = serve.finish()?;
+    println!("stats:");
+    for (name, v) in &summary.final_solution.metrics {
+        println!("  {name:<22} {v}");
+    }
+    let evicted = finished
+        .iter()
+        .filter(|(_, _, s, _)| *s == QueryState::Evicted)
+        .count();
+    let pending = submitted - rejected_at_submit - finished.len();
+    if pending > 0 {
+        return Err(format!(
+            "{pending} admitted queries did not reach ε inside the wall cap"
+        )
+        .into());
+    }
+    if evicted > 0 && deadline_ms == 0 {
+        return Err(format!("{evicted} queries evicted without a deadline policy").into());
     }
     Ok(())
 }

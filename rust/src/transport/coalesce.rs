@@ -6,7 +6,7 @@
 //! accumulators**. Each destination interns its target coordinates into
 //! stable slots (`intern`), so the worker hot loop accumulates with a
 //! single indexed add (`add_slot`) — no hashing, no per-emission
-//! allocation. A `touched` journal tracks which slots carry fluid since
+//! allocation. A `touched` journal tracks which cells carry fluid since
 //! the last flush, so flushing is O(touched), not O(boundary), and
 //! produces flat **SoA parcels** `(coords: Vec<u32>, mass: Vec<f64>)` —
 //! the wire format of [`crate::coordinator::WorkerMsg::Fluid`]. The
@@ -16,6 +16,19 @@
 //! send re-routed by the worker ([`CoalesceBuffer::recycle`]), the
 //! internal clear/compact paths — is pooled and reused by the next flush
 //! instead of reallocated.
+//!
+//! **Query lanes (DESIGN.md §10).** When the engine serves a block of
+//! right-hand sides, every interned slot fans out into `lanes`
+//! accumulator cells, flat-indexed `slot*lanes + lane`. The hot entry
+//! point becomes [`CoalesceBuffer::add_slot_lane`]; lane 0 is the base
+//! problem and the single-lane wrappers (`add_slot`, `add`) reduce to
+//! the exact pre-lane layout when `lanes == 1`. Parcels gain a third
+//! column, `qlanes` (the lane index per entry), which is left **empty
+//! when every entry is lane 0** so the single-query wire fast path is
+//! byte-identical to the lane-free format. A per-destination
+//! `lane_mass` ledger (Σ|adds| per lane since the last flush, errs
+//! high, reset on every drain — the same discipline as the aggregate
+//! `mass`) feeds the per-query undelivered accounting.
 //!
 //! The general keyed path (`add`) remains for cold routes — fluid
 //! re-forwarded after an ownership change, fostered coordinates — and
@@ -41,7 +54,7 @@ use crate::perf::Arena;
 pub struct CoalescePolicy {
     /// flush when a destination buffer holds at least this much |fluid|
     pub min_mass: f64,
-    /// flush when a destination buffer has this many touched coordinates
+    /// flush when a destination buffer has this many touched cells
     pub max_entries: usize,
 }
 
@@ -54,74 +67,109 @@ impl Default for CoalescePolicy {
     }
 }
 
-/// One destination's dense scratch accumulator.
-#[derive(Debug, Default)]
+/// One destination's dense scratch accumulator. Cells are flat-indexed
+/// `slot*lanes + lane`; with `lanes == 1` this is the classic one cell
+/// per coordinate layout.
+#[derive(Debug)]
 struct DestAcc {
     /// coordinate → slot (interning map; persists across flushes)
     slot_of: HashMap<usize, u32>,
     /// slot → global coordinate
     coords: Vec<u32>,
-    /// slot → accumulated fluid since the last flush
+    /// flat cell → accumulated fluid since the last flush
     acc: Vec<f64>,
     is_touched: Vec<bool>,
-    /// slots touched since the last flush (the flush work list)
+    /// flat cells touched since the last flush (the flush work list)
     touched: Vec<u32>,
     /// Σ|fluid| added since the last flush (upper bound — opposite-sign
     /// merges only shrink the true mass)
     mass: f64,
+    /// per-lane Σ|fluid| added since the last flush (same errs-high
+    /// discipline as `mass`; reset on every drain)
+    lane_mass: Vec<f64>,
 }
 
 impl DestAcc {
-    fn intern(&mut self, coord: usize) -> u32 {
+    fn new(lanes: usize) -> Self {
+        Self {
+            slot_of: HashMap::new(),
+            coords: Vec::new(),
+            acc: Vec::new(),
+            is_touched: Vec::new(),
+            touched: Vec::new(),
+            mass: 0.0,
+            lane_mass: vec![0.0; lanes],
+        }
+    }
+
+    fn intern(&mut self, lanes: usize, coord: usize) -> u32 {
         if let Some(&s) = self.slot_of.get(&coord) {
             return s;
         }
         let s = self.coords.len() as u32;
         self.slot_of.insert(coord, s);
         self.coords.push(coord as u32);
-        self.acc.push(0.0);
-        self.is_touched.push(false);
+        self.acc.resize(self.acc.len() + lanes, 0.0);
+        self.is_touched.resize(self.is_touched.len() + lanes, false);
         s
     }
 
     #[inline]
-    fn add_slot(&mut self, slot: u32, fluid: f64) {
-        let s = slot as usize;
+    fn add_flat(&mut self, flat: u32, lane: u32, fluid: f64) {
+        let s = flat as usize;
         self.acc[s] += fluid;
-        self.mass += fluid.abs();
+        let a = fluid.abs();
+        self.mass += a;
+        self.lane_mass[lane as usize] += a;
         if !self.is_touched[s] {
             self.is_touched[s] = true;
-            self.touched.push(slot);
+            self.touched.push(flat);
         }
     }
 
-    /// Drain touched slots into an SoA parcel built over the supplied
+    /// Drain touched cells into an SoA parcel built over the supplied
     /// (cleared, possibly recycled) buffers; zero entries (exact
-    /// cancellation) are dropped. Returns (coords, mass, Σ|mass|).
+    /// cancellation) are dropped. `qlanes` comes back **empty** when
+    /// every surviving entry is lane 0 (the single-query wire fast
+    /// path). Returns (coords, qlanes, mass, Σ|mass|).
     fn take_into(
         &mut self,
+        lanes: usize,
         mut coords: Vec<u32>,
+        mut qlanes: Vec<u32>,
         mut mass: Vec<f64>,
-    ) -> (Vec<u32>, Vec<f64>, f64) {
-        debug_assert!(coords.is_empty() && mass.is_empty());
+    ) -> (Vec<u32>, Vec<u32>, Vec<f64>, f64) {
+        debug_assert!(coords.is_empty() && qlanes.is_empty() && mass.is_empty());
         // no-ops on a recycled buffer that has warmed past touched.len()
         coords.reserve(self.touched.len());
         mass.reserve(self.touched.len());
         let mut total = 0.0;
-        for &s in &self.touched {
-            let si = s as usize;
+        let mut any_lane = false;
+        for &flat in &self.touched {
+            let si = flat as usize;
             self.is_touched[si] = false;
             let v = self.acc[si];
             self.acc[si] = 0.0;
             if v != 0.0 {
-                coords.push(self.coords[si]);
+                coords.push(self.coords[si / lanes]);
                 mass.push(v);
                 total += v.abs();
+                if lanes > 1 {
+                    let lane = flat % lanes as u32;
+                    qlanes.push(lane);
+                    any_lane |= lane != 0;
+                }
             }
+        }
+        if !any_lane {
+            qlanes.clear();
         }
         self.touched.clear();
         self.mass = 0.0;
-        (coords, mass, total)
+        for m in &mut self.lane_mass {
+            *m = 0.0;
+        }
+        (coords, qlanes, mass, total)
     }
 }
 
@@ -135,10 +183,13 @@ impl DestAcc {
 #[derive(Debug)]
 pub struct CoalesceBuffer {
     policy: CoalescePolicy,
+    /// lane count every destination accumulator fans out to (≥ 1)
+    lanes: usize,
     accs: Vec<DestAcc>,
-    /// recycled parcel storage (coords / mass columns); filled by
-    /// [`CoalesceBuffer::recycle`] and the internal clear/compact paths,
-    /// drained by every parcel build
+    /// recycled parcel storage (coords / qlanes / mass columns); filled
+    /// by [`CoalesceBuffer::recycle`] and the internal clear/compact
+    /// paths, drained by every parcel build. `qlanes` shares the u32
+    /// pool with `coords`.
     coords_arena: Arena<u32>,
     mass_arena: Arena<f64>,
 }
@@ -149,24 +200,39 @@ pub struct CoalesceBuffer {
 const PARCEL_POOL: usize = 8;
 
 impl CoalesceBuffer {
-    /// A buffer addressing `k` destinations under `policy` (the table
-    /// grows on demand when the PID pool widens).
+    /// A single-lane buffer addressing `k` destinations under `policy`
+    /// (the table grows on demand when the PID pool widens).
     pub fn new(k: usize, policy: CoalescePolicy) -> Self {
+        Self::with_lanes(k, 1, policy)
+    }
+
+    /// A buffer whose accumulators fan out to `lanes` query lanes per
+    /// coordinate. `lanes == 1` is exactly [`CoalesceBuffer::new`].
+    pub fn with_lanes(k: usize, lanes: usize, policy: CoalescePolicy) -> Self {
+        assert!(lanes >= 1, "a coalesce buffer needs at least one lane");
         Self {
             policy,
-            accs: (0..k).map(|_| DestAcc::default()).collect(),
+            lanes,
+            accs: (0..k).map(|_| DestAcc::new(lanes)).collect(),
             coords_arena: Arena::new(PARCEL_POOL),
             mass_arena: Arena::new(PARCEL_POOL),
         }
+    }
+
+    /// Lane count this buffer fans out to.
+    pub fn lanes(&self) -> usize {
+        self.lanes
     }
 
     /// Return a parcel's backing storage (e.g. from a failed send whose
     /// fluid was re-routed): the next flush builds over it instead of
     /// allocating. Parcels that ship successfully cross a thread boundary
     /// and never come back — the arena is a bounded cache, not an
-    /// accounting system.
-    pub fn recycle(&mut self, coords: Vec<u32>, mass: Vec<f64>) {
+    /// accounting system. An empty `qlanes` (the all-lane-0 parcel
+    /// shape) is still worth giving back: its capacity seeds the pool.
+    pub fn recycle(&mut self, coords: Vec<u32>, qlanes: Vec<u32>, mass: Vec<f64>) {
         self.coords_arena.give(coords);
+        self.coords_arena.give(qlanes);
         self.mass_arena.give(mass);
     }
 
@@ -175,7 +241,8 @@ impl CoalesceBuffer {
     #[inline]
     fn ensure(&mut self, dest: usize) {
         if dest >= self.accs.len() {
-            self.accs.resize_with(dest + 1, DestAcc::default);
+            let lanes = self.lanes;
+            self.accs.resize_with(dest + 1, || DestAcc::new(lanes));
         }
     }
 
@@ -186,32 +253,54 @@ impl CoalesceBuffer {
 
     /// Assign (or look up) the accumulator slot for coordinate `j` at
     /// `dest` — called at [`crate::sparse::LocalSystem`] build time so the
-    /// hot loop can use [`CoalesceBuffer::add_slot`].
+    /// hot loop can use [`CoalesceBuffer::add_slot`] /
+    /// [`CoalesceBuffer::add_slot_lane`].
     pub fn intern(&mut self, dest: usize, j: usize) -> u32 {
         self.ensure(dest);
-        self.accs[dest].intern(j)
+        self.accs[dest].intern(self.lanes, j)
     }
 
-    /// Hot path: accumulate `fluid` into a pre-interned slot (slots only
-    /// come from [`CoalesceBuffer::intern`], so the table already covers
-    /// `dest`).
+    /// Hot path: accumulate `fluid` into lane 0 of a pre-interned slot
+    /// (slots only come from [`CoalesceBuffer::intern`], so the table
+    /// already covers `dest`).
     #[inline]
     pub fn add_slot(&mut self, dest: usize, slot: u32, fluid: f64) {
-        self.accs[dest].add_slot(slot, fluid);
+        self.add_slot_lane(dest, slot, 0, fluid);
     }
 
-    /// Cold path: accumulate `fluid` for coordinate `j` owned by `dest`,
-    /// interning the coordinate on first sight.
+    /// Hot path, lane-addressed: accumulate `fluid` into `lane` of a
+    /// pre-interned slot.
+    #[inline]
+    pub fn add_slot_lane(&mut self, dest: usize, slot: u32, lane: u32, fluid: f64) {
+        let flat = slot * self.lanes as u32 + lane;
+        self.accs[dest].add_flat(flat, lane, fluid);
+    }
+
+    /// Cold path: accumulate `fluid` for coordinate `j` owned by `dest`
+    /// into lane 0, interning the coordinate on first sight.
     pub fn add(&mut self, dest: usize, j: usize, fluid: f64) {
+        self.add_lane(dest, j, 0, fluid);
+    }
+
+    /// Cold path, lane-addressed: accumulate `fluid` for coordinate `j`
+    /// owned by `dest` into `lane`, interning on first sight.
+    pub fn add_lane(&mut self, dest: usize, j: usize, lane: u32, fluid: f64) {
         self.ensure(dest);
-        let slot = self.accs[dest].intern(j);
-        self.accs[dest].add_slot(slot, fluid);
+        let slot = self.accs[dest].intern(self.lanes, j);
+        let flat = slot * self.lanes as u32 + lane;
+        self.accs[dest].add_flat(flat, lane, fluid);
     }
 
     /// Flush destinations into SoA parcels: every non-empty destination
     /// when `all`, otherwise only those the policy says are worth a
-    /// message. The sink receives `(dest, coords, mass, Σ|mass|)`.
-    pub fn flush(&mut self, all: bool, mut sink: impl FnMut(usize, Vec<u32>, Vec<f64>, f64)) {
+    /// message. The sink receives `(dest, coords, qlanes, mass, Σ|mass|)`
+    /// where `qlanes` is the per-entry lane column — **empty when every
+    /// entry is lane 0** (see [`DestAcc::take_into`]).
+    pub fn flush(
+        &mut self,
+        all: bool,
+        mut sink: impl FnMut(usize, Vec<u32>, Vec<u32>, Vec<f64>, f64),
+    ) {
         for d in 0..self.accs.len() {
             let a = &mut self.accs[d];
             if a.touched.is_empty() {
@@ -221,24 +310,41 @@ impl CoalesceBuffer {
             {
                 continue;
             }
-            let (coords, mass, total) =
-                a.take_into(self.coords_arena.take(), self.mass_arena.take());
+            let (coords, qlanes, mass, total) = a.take_into(
+                self.lanes,
+                self.coords_arena.take(),
+                self.coords_arena.take(),
+                self.mass_arena.take(),
+            );
             if coords.is_empty() {
-                // every touched entry cancelled exactly: no message, and
+                // every touched cell cancelled exactly: no message, and
                 // the storage goes straight back to the pool
                 self.coords_arena.give(coords);
+                self.coords_arena.give(qlanes);
                 self.mass_arena.give(mass);
             } else {
-                sink(d, coords, mass, total);
+                sink(d, coords, qlanes, mass, total);
             }
         }
     }
 
-    /// Take one destination's parcel unconditionally (tests/benches).
+    /// Take one destination's parcel unconditionally, discarding lane
+    /// information (single-lane tests/benches; `lanes == 1` callers).
     pub fn take(&mut self, dest: usize) -> (Vec<u32>, Vec<f64>, f64) {
-        let coords = self.coords_arena.take();
-        let mass = self.mass_arena.take();
-        self.accs[dest].take_into(coords, mass)
+        let (coords, qlanes, mass, total) = self.take_lanes(dest);
+        self.coords_arena.give(qlanes);
+        (coords, mass, total)
+    }
+
+    /// Take one destination's parcel unconditionally with its lane
+    /// column (tests).
+    pub fn take_lanes(&mut self, dest: usize) -> (Vec<u32>, Vec<u32>, Vec<f64>, f64) {
+        self.accs[dest].take_into(
+            self.lanes,
+            self.coords_arena.take(),
+            self.coords_arena.take(),
+            self.mass_arena.take(),
+        )
     }
 
     /// Discard everything buffered (epoch transitions: buffered outbound
@@ -246,10 +352,37 @@ impl CoalesceBuffer {
     /// survive — they stay valid for the patched [`crate::sparse::LocalSystem`].
     pub fn clear(&mut self) {
         for a in &mut self.accs {
-            let (coords, mass, _) =
-                a.take_into(self.coords_arena.take(), self.mass_arena.take());
+            let (coords, qlanes, mass, _) = a.take_into(
+                self.lanes,
+                self.coords_arena.take(),
+                self.coords_arena.take(),
+                self.mass_arena.take(),
+            );
             self.coords_arena.give(coords);
+            self.coords_arena.give(qlanes);
             self.mass_arena.give(mass);
+        }
+    }
+
+    /// Discard one lane's pending fluid everywhere (query eviction: the
+    /// lane's buffered outbound mass belongs to a query that no longer
+    /// exists). The aggregate `mass` ledger sheds the *actual* |acc| of
+    /// the zeroed cells — it stays an upper bound. Touched journal
+    /// entries stay in place; the zeroed cells drop out of the next
+    /// parcel as exact cancellations.
+    pub fn clear_lane(&mut self, lane: u32) {
+        let lanes = self.lanes as u32;
+        for a in &mut self.accs {
+            let mut shed = 0.0;
+            for &flat in &a.touched {
+                if flat % lanes == lane {
+                    let si = flat as usize;
+                    shed += a.acc[si].abs();
+                    a.acc[si] = 0.0;
+                }
+            }
+            a.mass = (a.mass - shed).max(0.0);
+            a.lane_mass[lane as usize] = 0.0;
         }
     }
 
@@ -261,15 +394,22 @@ impl CoalesceBuffer {
     /// compacts only immediately before a full `LocalSystem` rebuild,
     /// which re-interns the whole remnant anyway.
     pub fn compact(&mut self) {
+        let lanes = self.lanes;
         for a in &mut self.accs {
-            let (coords, mass, _) =
-                a.take_into(self.coords_arena.take(), self.mass_arena.take());
-            *a = DestAcc::default();
+            let (coords, qlanes, mass, _) = a.take_into(
+                lanes,
+                self.coords_arena.take(),
+                self.coords_arena.take(),
+                self.mass_arena.take(),
+            );
+            *a = DestAcc::new(lanes);
             for (u, &c) in coords.iter().enumerate() {
-                let s = a.intern(c as usize);
-                a.add_slot(s, mass[u]);
+                let lane = if qlanes.is_empty() { 0 } else { qlanes[u] };
+                let s = a.intern(lanes, c as usize);
+                a.add_flat(s * lanes as u32 + lane, lane, mass[u]);
             }
             self.coords_arena.give(coords);
+            self.coords_arena.give(qlanes);
             self.mass_arena.give(mass);
         }
     }
@@ -283,6 +423,19 @@ impl CoalesceBuffer {
     /// convergence monitor as "not yet transmitted" local fluid.
     pub fn held_mass(&self) -> f64 {
         self.accs.iter().map(|a| a.mass).sum()
+    }
+
+    /// Per-lane |fluid| currently held back (upper bound), accumulated
+    /// across destinations into `out` (resized/zeroed to `lanes`). Feeds
+    /// the per-query undelivered accounting in the worker publish pass.
+    pub fn held_by_lane(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.lanes, 0.0);
+        for a in &self.accs {
+            for (l, &m) in a.lane_mass.iter().enumerate() {
+                out[l] += m;
+            }
+        }
     }
 
     /// Whether no destination holds any unflushed fluid.
@@ -344,10 +497,10 @@ mod tests {
         let mut c = CoalesceBuffer::new(2, policy);
         c.add(0, 1, 0.4);
         let mut flushed = Vec::new();
-        c.flush(false, |d, coords, _, _| flushed.push((d, coords.len())));
+        c.flush(false, |d, coords, _, _, _| flushed.push((d, coords.len())));
         assert!(flushed.is_empty());
         c.add(0, 2, 0.7);
-        c.flush(false, |d, coords, _, _| flushed.push((d, coords.len())));
+        c.flush(false, |d, coords, _, _, _| flushed.push((d, coords.len())));
         assert_eq!(flushed, vec![(0, 2)]);
         assert!(c.is_empty());
     }
@@ -362,10 +515,10 @@ mod tests {
         c.add(0, 1, 1e-12);
         c.add(0, 2, 1e-12);
         let mut n = 0;
-        c.flush(false, |_, _, _, _| n += 1);
+        c.flush(false, |_, _, _, _, _| n += 1);
         assert_eq!(n, 0);
         c.add(0, 3, 1e-12);
-        c.flush(false, |_, _, _, _| n += 1);
+        c.flush(false, |_, _, _, _, _| n += 1);
         assert_eq!(n, 1);
     }
 
@@ -375,7 +528,7 @@ mod tests {
         c.add(0, 1, 0.1);
         c.add(2, 5, 0.2);
         let mut dests = Vec::new();
-        c.flush(true, |d, _, _, _| dests.push(d));
+        c.flush(true, |d, _, _, _, _| dests.push(d));
         assert_eq!(dests, vec![0, 2]);
         assert!(c.is_empty());
         assert_eq!(c.held_mass(), 0.0);
@@ -436,7 +589,7 @@ mod tests {
         assert!((c.held_mass() - 0.875).abs() < 1e-12);
         // flush after the K change must deliver every destination
         let mut flushed = Vec::new();
-        c.flush(true, |d, coords, mass, total| {
+        c.flush(true, |d, coords, _, mass, total| {
             flushed.push((d, zip(coords, mass), total));
         });
         flushed.sort_by(|a, b| a.0.cmp(&b.0));
@@ -464,7 +617,7 @@ mod tests {
         let (coords, mass, _) = c.take(0);
         let cap = coords.capacity();
         assert!(cap >= 64);
-        c.recycle(coords, mass);
+        c.recycle(coords, Vec::new(), mass);
         c.add(0, 3, 0.5);
         let (coords, mass, total) = c.take(0);
         assert!(
@@ -481,5 +634,124 @@ mod tests {
         c.add(0, 0, 0.5);
         c.add(0, 1, -0.25);
         assert!((c.held_mass() - 0.75).abs() < 1e-12);
+    }
+
+    // ------------------------------------------------------------------
+    // query lanes (DESIGN.md §10)
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn lanes_accumulate_independently_per_coordinate() {
+        let mut c = CoalesceBuffer::with_lanes(1, 3, CoalescePolicy::default());
+        assert_eq!(c.lanes(), 3);
+        let s = c.intern(0, 7);
+        c.add_slot_lane(0, s, 0, 0.5);
+        c.add_slot_lane(0, s, 2, 0.25);
+        c.add_slot_lane(0, s, 2, 0.25);
+        c.add_lane(0, 9, 1, -0.125); // cold path, same flat layout
+        let (coords, qlanes, mass, total) = c.take_lanes(0);
+        assert!((total - 1.125).abs() < 1e-12);
+        let mut rows: Vec<(u32, u32, f64)> = coords
+            .iter()
+            .zip(&qlanes)
+            .zip(&mass)
+            .map(|((&cd, &l), &m)| (cd, l, m))
+            .collect();
+        rows.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        assert_eq!(rows, vec![(7, 0, 0.5), (7, 2, 0.5), (9, 1, -0.125)]);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn qlanes_column_is_empty_when_everything_is_lane_zero() {
+        let mut c = CoalesceBuffer::with_lanes(1, 4, CoalescePolicy::default());
+        c.add_lane(0, 3, 0, 0.5);
+        c.add_lane(0, 5, 0, 0.25);
+        let (coords, qlanes, mass, _) = c.take_lanes(0);
+        assert!(
+            qlanes.is_empty(),
+            "all-lane-0 parcels keep the lane-free wire shape"
+        );
+        assert_eq!(sorted(zip(coords, mass)), vec![(3, 0.5), (5, 0.25)]);
+        // a lane-carrying parcel does populate the column, 1:1 with coords
+        c.add_lane(0, 3, 0, 0.5);
+        c.add_lane(0, 5, 3, 0.25);
+        let (coords, qlanes, _, _) = c.take_lanes(0);
+        assert_eq!(qlanes.len(), coords.len());
+    }
+
+    #[test]
+    fn held_by_lane_tracks_per_lane_additions() {
+        let mut c = CoalesceBuffer::with_lanes(2, 2, CoalescePolicy::default());
+        c.add_lane(0, 1, 0, 0.5);
+        c.add_lane(0, 1, 1, -0.25);
+        c.add_lane(1, 4, 1, 0.125);
+        let mut by_lane = Vec::new();
+        c.held_by_lane(&mut by_lane);
+        assert_eq!(by_lane.len(), 2);
+        assert!((by_lane[0] - 0.5).abs() < 1e-12);
+        assert!((by_lane[1] - 0.375).abs() < 1e-12);
+        // drain resets the per-lane ledger like the aggregate one
+        c.flush(true, |_, _, _, _, _| {});
+        c.held_by_lane(&mut by_lane);
+        assert_eq!(by_lane, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn clear_lane_drops_one_lane_and_keeps_the_rest() {
+        let mut c = CoalesceBuffer::with_lanes(1, 2, CoalescePolicy::default());
+        c.add_lane(0, 3, 0, 0.5);
+        c.add_lane(0, 3, 1, 0.25);
+        c.add_lane(0, 8, 1, 0.125);
+        c.clear_lane(1);
+        let mut by_lane = Vec::new();
+        c.held_by_lane(&mut by_lane);
+        assert_eq!(by_lane[1], 0.0);
+        // aggregate mass shed the evicted lane's actual |acc|
+        assert!((c.held_mass() - 0.5).abs() < 1e-12);
+        let (coords, qlanes, mass, total) = c.take_lanes(0);
+        assert!(qlanes.is_empty(), "only lane-0 fluid survives eviction");
+        assert_eq!(zip(coords, mass), vec![(3, 0.5)]);
+        assert!((total - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compact_preserves_lane_assignment() {
+        let mut c = CoalesceBuffer::with_lanes(1, 3, CoalescePolicy::default());
+        for j in 0..50 {
+            c.add_lane(0, j, 0, 0.01);
+        }
+        let _ = c.take_lanes(0); // 50 stale slots
+        c.add_lane(0, 7, 2, 0.5);
+        c.add_lane(0, 9, 0, 0.25);
+        c.compact();
+        assert_eq!(c.interned(0), 2);
+        let mut by_lane = Vec::new();
+        c.held_by_lane(&mut by_lane);
+        assert!((by_lane[0] - 0.25).abs() < 1e-12);
+        assert!((by_lane[2] - 0.5).abs() < 1e-12);
+        let (coords, qlanes, mass, _) = c.take_lanes(0);
+        let mut rows: Vec<(u32, u32, f64)> = coords
+            .iter()
+            .zip(&qlanes)
+            .zip(&mass)
+            .map(|((&cd, &l), &m)| (cd, l, m))
+            .collect();
+        rows.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        assert_eq!(rows, vec![(7, 2, 0.5), (9, 0, 0.25)]);
+    }
+
+    #[test]
+    fn single_lane_buffer_matches_the_pre_lane_layout() {
+        // lanes == 1 must behave exactly like the historical buffer:
+        // flat index == slot, no qlanes column ever emitted
+        let mut c = CoalesceBuffer::with_lanes(1, 1, CoalescePolicy::default());
+        let s = c.intern(0, 11);
+        c.add_slot(0, s, 0.5);
+        c.add_slot_lane(0, s, 0, 0.25);
+        let (coords, qlanes, mass, total) = c.take_lanes(0);
+        assert!(qlanes.is_empty());
+        assert_eq!(zip(coords, mass), vec![(11, 0.75)]);
+        assert!((total - 0.75).abs() < 1e-12);
     }
 }

@@ -19,13 +19,14 @@ mod common;
 use std::time::Duration;
 
 use diter::coordinator::{
-    DistributedConfig, ElasticConfig, RebaseMode, StreamingEngine, TransportKind,
+    DistributedConfig, ElasticConfig, Query, QueryState, RebaseMode, ServeConfig, ServeEngine,
+    StreamingEngine, TransportKind,
 };
 use diter::graph::{power_law_web_graph, ChurnModel, MutableDigraph, MutationStream};
 use diter::linalg::vec_ops::norm1;
 use diter::partition::{Partition, PidState};
 use diter::prng::Xoshiro256pp;
-use diter::solver::SequenceKind;
+use diter::solver::{FixedPointProblem, SequenceKind};
 use diter::transport::{CoalescePolicy, FlushPolicy};
 
 const N: usize = 220;
@@ -176,6 +177,132 @@ fn fuzz_with(
         pool_stats.spawned + pool_stats.retired + handoffs > 0,
         "fuzz ran no lifecycle events at all: {pool_stats:?}"
     );
+}
+
+/// The per-lane half of the fuzz (DESIGN.md §10): PPR queries are
+/// admitted and completed *while* the same event storm — churn epochs,
+/// planned handoffs, elastic spawn/retire — runs underneath, under
+/// latency injection and coalescing. After every event the step drains
+/// its tenants and asserts per-qid conservation exactly: each served
+/// query's readout carries unit PPR mass and is the fixed point of its
+/// own `(P, b_q)` system on the *current* (post-churn) matrix. A leak in
+/// any lane's accounting either never completes (caught by the drain
+/// deadline) or completes wrong (caught by the mass/fixed-point check).
+fn fuzz_serve(seed: u64, transport: Option<TransportKind>) {
+    const LANES: usize = 2;
+    const EPS: f64 = 1e-7;
+    let steps = 5usize;
+    let g = power_law_web_graph(N, 5, 0.1, seed);
+    let mg = MutableDigraph::from_digraph(&g, N);
+    let mut cfg = DistributedConfig::new(Partition::contiguous(N, K).unwrap())
+        .with_tol(1e-9)
+        .with_seed(seed)
+        .with_elastic(ElasticConfig {
+            max_workers: K + 3,
+            spawn_threshold: 0.0,
+            retire_idle: Duration::from_secs(3600),
+            interval: Duration::from_millis(5),
+            min_part: 2,
+            min_workers: 1,
+            max_ops: 10_000,
+        });
+    cfg.latency = Some((Duration::from_micros(30), Duration::from_micros(300)));
+    cfg.coalesce = CoalescePolicy {
+        min_mass: 1e-4,
+        max_entries: 48,
+    };
+    cfg.max_wall = Duration::from_secs(60);
+    if let Some(t) = transport {
+        cfg = cfg.with_transport(t);
+    }
+    let serve_cfg = ServeConfig {
+        queue_cap: 16,
+        default_eps: EPS,
+        ..Default::default()
+    };
+    let mut serve = ServeEngine::new(mg, 0.85, true, cfg, serve_cfg, LANES).unwrap();
+    let mut stream = MutationStream::new(ChurnModel::RandomRewire, seed ^ 0xF0);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let qs = serve.query_set().clone();
+    let mut served_total = 0usize;
+    for step in 0..steps {
+        // admit a full complement of tenants, then fire the event storm
+        // while their fluid is genuinely mid-flight
+        let mut expected = Vec::new();
+        for _ in 0..LANES {
+            let seeds = [rng.below(N), rng.below(N)];
+            let qid = serve
+                .submit(Query::ppr(&seeds, 0.85, EPS))
+                .expect("queue has room");
+            expected.push((qid, seeds.to_vec()));
+        }
+        let batch = stream.next_batch(serve.engine().graph(), 10);
+        serve.apply_mutations(&batch).unwrap();
+        match if step == 0 { 3 } else { rng.below(4) } {
+            0 => {
+                let b2 = stream.next_batch(serve.engine().graph(), 8);
+                serve.apply_mutations(&b2).unwrap();
+            }
+            1 => spawn_somewhere(serve.engine_mut(), &mut rng),
+            2 => retire_somewhere(serve.engine_mut(), &mut rng),
+            _ => handoff_somewhere(serve.engine_mut(), &mut rng),
+        }
+        // mid-flight: every active lane's account is finite and errs
+        // high (a negative total would mean a release outran its charge)
+        for lane in 1..qs.lanes() {
+            let t = qs.lane_total(lane);
+            assert!(t.is_finite() && t >= -1e-9, "step {step} lane {lane}: total {t}");
+        }
+        let done = serve.drain(Duration::from_secs(60)).unwrap();
+        assert_eq!(done.len(), expected.len(), "step {step}: tenants wedged mid-storm");
+        let problem = serve.engine().problem();
+        for d in &done {
+            assert_eq!(d.state, QueryState::Served, "step {step}: no deadlines configured");
+            let x = d.x.as_ref().expect("served queries carry a readout");
+            assert!(
+                (norm1(x) - 1.0).abs() < 1e-5,
+                "step {step} qid {}: PPR mass leaked — ‖x‖₁ = {}",
+                d.qid,
+                norm1(x)
+            );
+            let seeds = &expected.iter().find(|(q, _)| *q == d.qid).unwrap().1;
+            let q = Query::ppr(seeds, 0.85, EPS);
+            let mut b = vec![0.0; N];
+            for (c, m) in &q.seeds {
+                b[*c] += m;
+            }
+            let single = FixedPointProblem::new(problem.matrix().clone(), b).unwrap();
+            let res = single.residual_norm(x);
+            assert!(
+                res < 1e-5,
+                "step {step} qid {}: not the fixed point of its own system \
+                 (residual {res:.3e})",
+                d.qid
+            );
+            served_total += 1;
+        }
+    }
+    assert_eq!(served_total, steps * LANES);
+    let pool_stats = serve.engine().pool_stats();
+    let summary = serve.finish().unwrap();
+    let handoffs = summary.final_solution.metrics["handoffs_total"];
+    assert!(
+        pool_stats.spawned + pool_stats.retired + handoffs > 0,
+        "serve fuzz ran no lifecycle events at all: {pool_stats:?}"
+    );
+    assert_eq!(summary.final_solution.metrics["queries_served"], served_total as u64);
+}
+
+#[test]
+fn fuzz_conservation_per_lane_serving() {
+    fuzz_serve(0xFA57_0005, None);
+}
+
+/// The per-lane fuzz with every parcel (and its `qids` column) crossing
+/// a real TCP socket: tag 0x13 round-trips under the same event storm.
+#[test]
+fn fuzz_conservation_per_lane_serving_wire() {
+    fuzz_serve(0xFA57_0006, Some(TransportKind::Wire));
 }
 
 #[test]

@@ -11,7 +11,8 @@ use std::time::Duration;
 use diter::coordinator::monitor::MonitorState;
 use diter::coordinator::worker::WorkerCore;
 use diter::coordinator::{
-    v2, AdaptiveConfig, DistributedConfig, KernelKind, StreamingEngine, WorkerMsg,
+    v2, AdaptiveConfig, DistributedConfig, KernelKind, Query, QuerySet, QueryState,
+    StreamingEngine, WorkerMsg,
 };
 use diter::graph::{
     pagerank_system, power_law_web_graph, ChurnModel, MutableDigraph, MutationStream,
@@ -216,5 +217,93 @@ fn blocked_kernel_steady_state_is_allocation_free() {
         allocs, 0,
         "steady-state blocked-kernel steps allocated {allocs} times; \
          the hot loop must not touch the allocator"
+    );
+}
+
+#[test]
+fn two_query_serve_steady_state_is_allocation_free() {
+    // The zero-allocation claim extended to serving (DESIGN.md §10): the
+    // same warm-then-replay structure, but with two PPR tenants riding
+    // query lanes 1 and 2 on top of the base descent. Round 1 warms every
+    // multi-lane high-water mark — the lane-blocked coalesce columns, the
+    // seed-claim scratch, the per-lane publish scratch, the ε-endgame
+    // flush. Round 2 admits two FRESH queries into the same lanes and
+    // requires that the diffusion steps allocate nothing: serving more
+    // tenants must cost lane-strided arithmetic, not allocator traffic.
+    let n = 256;
+    let lanes = 3; // base + 2 query lanes
+    let problem = Arc::new(pagerank_problem(n, 37));
+    let part = Partition::contiguous(n, 1).unwrap();
+    let qs = Arc::new(QuerySet::new(lanes, 1));
+    let mut cfg = DistributedConfig::new(part.clone())
+        .with_tol(1e-9)
+        .with_sequence(SequenceKind::GreedyMaxFluid)
+        .with_kernel(KernelKind::Blocked);
+    cfg.lanes = lanes;
+    cfg.queries = Some(qs.clone());
+    let (mut eps, _metrics) = bus::<WorkerMsg>(1, &BusConfig::default());
+    let table = OwnershipTable::new(part);
+    let state = MonitorState::new(1);
+    let mut core = WorkerCore::new(
+        0,
+        Box::new(eps.pop().unwrap()),
+        problem.clone(),
+        table,
+        state,
+        cfg,
+    );
+
+    let q1 = qs.next_qid();
+    let q2 = qs.next_qid();
+    let l1 = qs.admit(Query::ppr(&[3, 9], 0.85, 1e-9), q1).unwrap();
+    let l2 = qs.admit(Query::ppr(&[100], 0.85, 1e-9), q2).unwrap();
+    let mut drained = false;
+    for _ in 0..300_000 {
+        if core.step().1 == 0.0 {
+            drained = true;
+            break;
+        }
+    }
+    assert!(drained, "warm-up serve descent did not drain");
+    qs.evict(l1, QueryState::Served, None);
+    qs.evict(l2, QueryState::Served, None);
+    let _ = qs.take_completed();
+
+    // fresh epoch: base fluid reinstalled on lane 0, query lanes empty
+    // until the new tenants' seeds are claimed
+    let mut f0 = vec![0.0; core.owned().len() * lanes];
+    for (t, &i) in core.owned().iter().enumerate() {
+        f0[t * lanes] = problem.b()[i];
+    }
+    core.enter_epoch(1, problem.clone(), f0, None);
+    let q3 = qs.next_qid();
+    let q4 = qs.next_qid();
+    qs.admit(Query::ppr(&[7, 41], 0.85, 1e-9), q3).unwrap();
+    qs.admit(Query::ppr(&[200], 0.85, 1e-9), q4).unwrap();
+    // admission is control plane: let the lane resync + seed claim land
+    // before the measured window opens — then every remaining step is
+    // pure multi-lane diffusion and must not touch the allocator
+    for _ in 0..50 {
+        core.step();
+    }
+
+    let a0 = CountingAlloc::thread_allocations();
+    let mut worked = false;
+    drained = false;
+    for _ in 0..300_000 {
+        let (_, r) = core.step();
+        worked |= r > 0.0;
+        if r == 0.0 {
+            drained = true;
+            break;
+        }
+    }
+    let allocs = CountingAlloc::thread_allocations() - a0;
+    assert!(worked, "the serve replay must diffuse real fluid");
+    assert!(drained, "the serve replay did not drain");
+    assert_eq!(
+        allocs, 0,
+        "steady-state 2-query serve steps allocated {allocs} times; \
+         extra lanes must not reintroduce allocator traffic"
     );
 }

@@ -1,0 +1,178 @@
+//! Integration: the multi-tenant serving layer (DESIGN.md §10).
+//!
+//! The load-bearing property is linearity: D-iteration is linear in B,
+//! so L queries diffusing concurrently in separate fluid lanes of ONE
+//! worker pool must land on exactly the fixed points that L independent
+//! single-query solves produce. Admission control (queue-or-reject,
+//! per-query deadline eviction) is exercised around that core.
+
+use std::time::Duration;
+
+use diter::coordinator::{
+    DistributedConfig, Query, QueryState, ServeConfig, ServeEngine,
+};
+use diter::graph::{power_law_web_graph, MutableDigraph};
+use diter::linalg::vec_ops::{dist1, norm1};
+use diter::partition::Partition;
+use diter::solver::{DIteration, FixedPointProblem, SolveOptions, Solver};
+
+const N: usize = 400;
+const K: usize = 3;
+const DAMPING: f64 = 0.85;
+
+fn serve_engine(query_lanes: usize, cfg: ServeConfig, seed: u64) -> ServeEngine {
+    let g = power_law_web_graph(N, 6, 0.1, seed);
+    let mg = MutableDigraph::from_digraph(&g, N);
+    let dist = DistributedConfig::new(Partition::contiguous(N, K).unwrap())
+        .with_tol(1e-9)
+        .with_seed(seed);
+    ServeEngine::new(mg, DAMPING, true, dist, cfg, query_lanes).unwrap()
+}
+
+/// Cold single-query reference: solve (P, b_q) alone, to far below the
+/// serving ε, on the same matrix the engine is holding.
+fn independent_solve(serve: &ServeEngine, seeds: &[usize]) -> Vec<f64> {
+    let q = Query::ppr(seeds, DAMPING, 1e-8);
+    let mut b = vec![0.0; N];
+    for (c, m) in &q.seeds {
+        b[*c] += m;
+    }
+    let single =
+        FixedPointProblem::new(serve.engine().problem().matrix().clone(), b).unwrap();
+    let opts = SolveOptions {
+        tol: 1e-12,
+        max_cost: 500_000.0,
+        trace_every: 0.0,
+        exact: None,
+    };
+    DIteration::fluid_cyclic().solve(&single, &opts).unwrap().x
+}
+
+/// Serving L queries through shared lanes ≡ L independent single-query
+/// solves: every concurrent readout matches its own cold fixed point.
+#[test]
+fn multi_query_equals_independent_single_query_solves() {
+    let eps = 1e-8;
+    let mut serve = serve_engine(
+        3,
+        ServeConfig {
+            queue_cap: 8,
+            default_eps: eps,
+            ..Default::default()
+        },
+        41,
+    );
+    // six queries over three lanes: the second trio queues behind the
+    // first, so admission-from-queue is on the tested path too
+    let seed_sets: [&[usize]; 6] = [&[3], &[17, 20], &[99], &[250, 251], &[7, 300], &[111]];
+    let mut pending = Vec::new();
+    for seeds in seed_sets {
+        let qid = serve
+            .submit(Query::ppr(seeds, DAMPING, eps))
+            .expect("queue sized for all six");
+        pending.push((qid, seeds));
+    }
+    let done = serve.drain(Duration::from_secs(120)).unwrap();
+    assert_eq!(done.len(), seed_sets.len(), "every query must complete");
+    for d in &done {
+        assert_eq!(d.state, QueryState::Served);
+        let x = d.x.as_ref().expect("served queries carry a readout");
+        assert!(
+            (norm1(x) - 1.0).abs() < 1e-5,
+            "qid {}: unit PPR mass, got {}",
+            d.qid,
+            norm1(x)
+        );
+        // ε bounds the undelivered fluid, and ‖x − x*‖₁ ≤ ε/(1−d); the
+        // graph is never mutated here, so the comparison is exact
+        let seeds = pending.iter().find(|(q, _)| *q == d.qid).unwrap().1;
+        let want = independent_solve(&serve, seeds);
+        let delta = dist1(x, &want);
+        assert!(
+            delta < 1e-5,
+            "qid {}: concurrent serve diverged from its independent solve \
+             (Δ₁ = {delta:.3e})",
+            d.qid
+        );
+    }
+    let (admitted, served, rejected) = serve.counts();
+    assert_eq!(admitted, 6);
+    assert_eq!(served, 6);
+    assert_eq!(rejected, 0);
+    serve.finish().unwrap();
+}
+
+/// Queue-or-reject: with L lanes and a queue of Q, submissions past
+/// L-in-flight queue up to Q deep and the rest are rejected — and every
+/// admitted query is still served.
+#[test]
+fn admission_queues_then_rejects_past_capacity() {
+    let mut serve = serve_engine(
+        2,
+        ServeConfig {
+            queue_cap: 2,
+            default_eps: 1e-7,
+            ..Default::default()
+        },
+        43,
+    );
+    let mut admitted_qids = Vec::new();
+    let mut rejections = 0usize;
+    // 2 straight into lanes, 2 queued, the rest must bounce
+    for i in 0..6 {
+        match serve.submit(Query::ppr(&[i * 7 + 1], DAMPING, 1e-7)) {
+            Some(qid) => admitted_qids.push(qid),
+            None => rejections += 1,
+        }
+    }
+    assert_eq!(admitted_qids.len(), 4, "2 lanes + 2 queue slots");
+    assert_eq!(rejections, 2);
+    assert_eq!(serve.queued(), 2);
+    let done = serve.drain(Duration::from_secs(120)).unwrap();
+    assert_eq!(done.len(), 4, "every accepted query completes");
+    assert!(done.iter().all(|d| d.state == QueryState::Served));
+    let (admitted, served, rejected) = serve.counts();
+    assert_eq!(admitted, 4);
+    assert_eq!(served, 4);
+    assert_eq!(rejected, 2);
+    serve.finish().unwrap();
+}
+
+/// Deadline policy: a tenant that cannot reach its ε is evicted when its
+/// deadline lapses, the lane frees up, and the next query serves
+/// normally out of the same lane.
+#[test]
+fn deadline_evicts_and_frees_the_lane() {
+    let mut serve = serve_engine(
+        1,
+        ServeConfig {
+            queue_cap: 4,
+            default_eps: 1e-7,
+            default_deadline: None,
+            ..Default::default()
+        },
+        47,
+    );
+    // ε below anything the diffusion can reach quickly, with a deadline
+    // shorter than any possible convergence (poll checks the deadline
+    // before ε-stability, and serving needs stable_polls successive
+    // sub-ε reads): this tenant can only leave by eviction
+    let mut hopeless = Query::ppr(&[5], DAMPING, 1e-300);
+    hopeless.deadline = Some(Duration::from_millis(1));
+    let hopeless_qid = serve.submit(hopeless).unwrap();
+    let viable_qid = serve.submit(Query::ppr(&[9], DAMPING, 1e-7)).unwrap();
+    let done = serve.drain(Duration::from_secs(120)).unwrap();
+    assert_eq!(done.len(), 2);
+    let evicted = done.iter().find(|d| d.qid == hopeless_qid).unwrap();
+    assert_eq!(evicted.state, QueryState::Evicted);
+    assert!(evicted.x.is_none(), "evicted tenants get no readout");
+    assert!(evicted.time_to_eps_secs.is_none());
+    let served = done.iter().find(|d| d.qid == viable_qid).unwrap();
+    assert_eq!(served.state, QueryState::Served, "freed lane serves the next query");
+    assert!((norm1(served.x.as_ref().unwrap()) - 1.0).abs() < 1e-5);
+    let (admitted, served_n, rejected) = serve.counts();
+    assert_eq!((admitted, served_n, rejected), (2, 1, 0));
+    let summary = serve.finish().unwrap();
+    assert_eq!(summary.final_solution.metrics["queries_served"], 1);
+    assert_eq!(summary.final_solution.metrics["queries_admitted"], 2);
+}

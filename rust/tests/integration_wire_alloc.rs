@@ -70,6 +70,7 @@ fn wire_loopback_steady_state_is_allocation_free() {
             epoch: 1,
             coords,
             mass,
+            qids: vec![],
         };
         Transport::send(&mut a, 1, parcel, 1.0, COORDS).expect("prime send");
     }

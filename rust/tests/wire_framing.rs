@@ -44,25 +44,38 @@ fn random_msg(rng: &mut Xoshiro256pp) -> WorkerMsg {
             epoch: rng.next_u64() >> 20,
             coords: random_coords(rng, space, count),
             mass: random_masses(rng, count),
+            // half the corpus carries a query-id column (tag 0x13)
+            qids: if rng.below(2) == 0 {
+                Vec::new()
+            } else {
+                random_coords(rng, 1 << 16, count)
+            },
         },
-        1 => WorkerMsg::Handoff(Handoff {
-            pid_from: rng.below(64),
-            pid_to: rng.below(64),
-            version: rng.next_u64() >> 32,
-            epoch: rng.next_u64() >> 32,
-            coords: random_coords(rng, space, count)
-                .into_iter()
-                .map(|c| c as usize)
-                .collect(),
-            h_slice: random_masses(rng, count),
-            b_slice: random_masses(rng, count),
-            f_slice: random_masses(rng, count),
-        }),
-        _ => WorkerMsg::HaloSlice {
-            epoch: rng.next_u64() >> 20,
-            coords: random_coords(rng, space, count),
-            h: random_masses(rng, count),
-        },
+        1 => {
+            // lanes > 1 exercises the lane-blocked 0x14 layout
+            let lanes = rng.range(1, 4);
+            WorkerMsg::Handoff(Handoff {
+                pid_from: rng.below(64),
+                pid_to: rng.below(64),
+                version: rng.next_u64() >> 32,
+                epoch: rng.next_u64() >> 32,
+                coords: random_coords(rng, space, count)
+                    .into_iter()
+                    .map(|c| c as usize)
+                    .collect(),
+                h_slice: random_masses(rng, count * lanes),
+                b_slice: random_masses(rng, count),
+                f_slice: random_masses(rng, count * lanes),
+            })
+        }
+        _ => {
+            let lanes = rng.range(1, 4);
+            WorkerMsg::HaloSlice {
+                epoch: rng.next_u64() >> 20,
+                coords: random_coords(rng, space, count),
+                h: random_masses(rng, count * lanes),
+            }
+        }
     }
 }
 
@@ -125,6 +138,7 @@ fn corrupt_frames_fail_cleanly() {
         epoch: 1,
         coords: vec![2, 3],
         mass: vec![0.5, 0.25],
+        qids: vec![],
     };
     let mut buf = Vec::new();
     msg.encode(&mut buf);
@@ -147,6 +161,7 @@ fn loopback_tcp_round_trip_conserves_accounting() {
         epoch: 2,
         coords: vec![7, 9, 10],
         mass: vec![0.5, 0.25, 0.25],
+        qids: vec![],
     };
     a.send(1, parcel.clone(), 1.0, 64).expect("send parcel");
     let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);

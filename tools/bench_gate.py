@@ -51,6 +51,16 @@ Compares a fresh bench artifact against its committed baseline and fails
         traffic creeping back into the pooled encode/decode cycle is
         exactly what this bench exists to catch (§8.8 target is 0).
 
+  * --kind serve — `benches/serve_throughput.rs`:
+      - batched_vs_sequential_speedup: multi-lane query serving vs
+        draining the same query load one lane at a time, same-binary
+        same-machine; once a measured baseline lands it must stay above
+        1.0 — fluid lanes existing *and being slower* than sequential
+        serving means the multi-RHS hot path is pure overhead. Also
+        gated as a ratio floor against the baseline.
+      - batched queries_per_sec and p99 time-to-ε: only enforced when
+        the baseline was recorded in the same environment.
+
 A baseline with "measured": false is a bootstrap placeholder (the perf
 trajectory has not recorded its first real run yet): the gate prints the
 fresh numbers and exits 0 so the first CI run can seed the baseline from
@@ -230,11 +240,65 @@ def gate_wire(base, cur, args, failures):
               "not enforced (ratio gates above still apply)")
 
 
+def gate_serve(base, cur, args, failures):
+    tol = 1.0 - args.max_regress
+    cur_speedup = cur.get("batched_vs_sequential_speedup")
+    cur_qps = cur.get("batched_queries_per_sec")
+    cur_p99 = cur.get("p99_time_to_eps_secs")
+    print(f"current: batched_vs_sequential={fmt(cur_speedup, '.2f')}x  "
+          f"batched queries/sec={fmt(cur_qps, '.2f')}  "
+          f"p99 time-to-eps={fmt(cur_p99, '.3f')}s  "
+          f"env={cur.get('environment')}")
+    # lanes must beat one-query-at-a-time, full stop — a <= 1.0 ratio
+    # means the multi-RHS machinery is pure overhead. This is a property
+    # of the CURRENT run alone, so it is enforced even while the
+    # committed baseline is still the bootstrap placeholder.
+    if cur.get("measured", False) and (
+            not isinstance(cur_speedup, (int, float)) or cur_speedup <= 1.0):
+        failures.append(
+            f"batched_vs_sequential_speedup {fmt(cur_speedup, '.2f')}x <= 1.0: "
+            "multi-lane serving no longer beats sequential one-query-at-a-time")
+    if not base.get("measured", False):
+        print("baseline is a bootstrap placeholder (measured=false): "
+              "regression gates pass; seed it from this run's uploaded "
+              "artifact to arm them.")
+        return
+    gate_ratio(failures, "batched_vs_sequential_speedup",
+               base.get("batched_vs_sequential_speedup"), cur_speedup, tol,
+               args.max_regress)
+    base_qps = base.get("batched_queries_per_sec")
+    if base_qps and base.get("environment") == cur.get("environment"):
+        floor = base_qps * tol
+        print(f"baseline batched queries/sec={base_qps:.2f}  "
+              f"(floor {floor:.2f}, same env)")
+        if not isinstance(cur_qps, (int, float)) or cur_qps < floor:
+            failures.append(
+                f"batched queries/sec regressed: {cur_qps} < {floor:.2f} "
+                f"(baseline {base_qps:.2f}, tolerance {args.max_regress:.0%})")
+    elif base_qps:
+        print("baseline recorded in a different environment: absolute "
+              "queries/sec not enforced (ratio gate above still applies)")
+    base_p99 = base.get("p99_time_to_eps_secs")
+    if isinstance(base_p99, (int, float)) and \
+            base.get("environment") == cur.get("environment"):
+        ceiling = base_p99 * (1.0 + args.max_regress)
+        print(f"baseline p99 time-to-eps={base_p99:.3f}s  "
+              f"(ceiling {ceiling:.3f}s, same env)")
+        if not isinstance(cur_p99, (int, float)) or cur_p99 > ceiling:
+            failures.append(
+                f"p99 time-to-eps regressed: {cur_p99} > {ceiling:.3f}s "
+                f"(baseline {base_p99:.3f}s) — completion latency is paying "
+                "the coalescing tax again")
+    elif isinstance(base_p99, (int, float)):
+        print("baseline recorded in a different environment: p99 "
+              "time-to-eps not enforced (ratio gate above still applies)")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True, help="committed BENCH_*.json")
     ap.add_argument("--current", required=True, help="freshly produced BENCH_*.json")
-    ap.add_argument("--kind", choices=["stream", "elastic", "hotpath", "wire"],
+    ap.add_argument("--kind", choices=["stream", "elastic", "hotpath", "wire", "serve"],
                     default="stream",
                     help="which bench artifact schema to gate (default stream)")
     ap.add_argument("--max-regress", type=float, default=0.20,
@@ -250,6 +314,8 @@ def main():
         gate_hotpath(base, cur, args, failures)
     elif args.kind == "wire":
         gate_wire(base, cur, args, failures)
+    elif args.kind == "serve":
+        gate_serve(base, cur, args, failures)
     else:
         gate_stream(base, cur, args, failures)
 
