@@ -1,0 +1,132 @@
+//! Bench: crash-recovery cost vs a cold restart, and the steady-state
+//! overhead of incremental checkpointing.
+//!
+//! Scenario: K = 3 streaming workers on a power-law graph. Three runs:
+//!
+//!   * cold          — plain converge, no crash tolerance (the baseline
+//!                     and the stand-in for "restart from scratch").
+//!   * checkpointed  — same solve with incremental per-worker H
+//!                     checkpoints flowing (the dirty-slot journal);
+//!                     the wall-clock ratio against `cold` is the
+//!                     checkpointing tax, which must stay near 1.
+//!   * recovery      — the checkpointed engine converges, a worker is
+//!                     crashed (no drain, no goodbye), and the wall
+//!                     clock measures detect → restore checkpoint H →
+//!                     recompute fluid (`F = b − (I−P)·H`) → re-settle.
+//!
+//! A restart-from-scratch pays `cold` again; recovery only re-diffuses
+//! the residual the checkpoint had not yet absorbed, so
+//! `recovery_vs_cold_speedup` must stay above 1.0. Emits
+//! `BENCH_recovery.json` for the CI perf gate (`tools/bench_gate.py
+//! --kind recovery`).
+
+use diter::bench_harness::{bench_header, bench_json_dir, fmt_secs, Json, Table};
+use diter::coordinator::{DistributedConfig, StreamingEngine};
+use diter::graph::{power_law_web_graph, MutableDigraph};
+use diter::partition::Partition;
+use diter::solver::SequenceKind;
+use std::time::Duration;
+
+fn base_cfg(n: usize, k: usize, tol: f64, seed: u64) -> DistributedConfig {
+    let mut cfg = DistributedConfig::new(Partition::contiguous(n, k).unwrap())
+        .with_tol(tol)
+        .with_seed(seed)
+        .with_sequence(SequenceKind::GreedyMaxFluid);
+    cfg.max_wall = Duration::from_secs(600);
+    cfg
+}
+
+fn main() {
+    bench_header(
+        "recovery",
+        "crash recovery from incremental checkpoints vs cold restart (K=3)",
+    );
+    let n = std::env::var("DITER_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3_000usize);
+    let k = 3usize;
+    let tol = 1e-9;
+    let seed = 17u64;
+    let checkpoint_every = Duration::from_millis(2);
+    println!("graph: {n} nodes, K={k}, checkpoint every {checkpoint_every:?}, tol {tol:.0e}\n");
+
+    let g = power_law_web_graph(n, 6, 0.1, seed);
+
+    // cold: the restart-from-scratch baseline
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let mut eng = StreamingEngine::new(mg, 0.85, true, base_cfg(n, k, tol, seed)).unwrap();
+    let init = eng.converge().unwrap();
+    assert!(init.solution.converged, "cold solve must converge");
+    let cold_wall = init.solution.wall_secs;
+    eng.finish().unwrap();
+
+    // checkpointed: the same solve with the journal flowing
+    let mg = MutableDigraph::from_digraph(&g, n);
+    let cfg = base_cfg(n, k, tol, seed)
+        .with_checkpoint_every(checkpoint_every)
+        .with_heartbeat(Duration::from_millis(500));
+    let mut eng = StreamingEngine::new(mg, 0.85, true, cfg).unwrap();
+    let init = eng.converge().unwrap();
+    assert!(init.solution.converged, "checkpointed solve must converge");
+    let ckpt_wall = init.solution.wall_secs;
+
+    // recovery: crash a worker at the fixed point, then measure
+    // detect → restore → recompute → re-settle on the same engine
+    eng.pool_mut().kill(1);
+    let report = eng.converge().unwrap();
+    assert!(report.solution.converged, "recovered solve must converge");
+    let recovery_wall = report.solution.wall_secs;
+    let stats = eng.pool_stats();
+    eng.finish().unwrap();
+    assert_eq!(stats.crashes, 1, "the crash must be detected");
+    assert_eq!(stats.recoveries, 1, "the crash must be recovered");
+
+    let overhead = ckpt_wall / cold_wall.max(1e-9);
+    let speedup = cold_wall / recovery_wall.max(1e-9);
+    let mut table = Table::new(&["run", "wall", "vs-cold"]);
+    table.row(&["cold solve".into(), fmt_secs(cold_wall), "1.00x".into()]);
+    table.row(&[
+        "checkpointed solve".into(),
+        fmt_secs(ckpt_wall),
+        format!("{overhead:.2}x (tax)"),
+    ]);
+    table.row(&[
+        "crash recovery".into(),
+        fmt_secs(recovery_wall),
+        format!("{speedup:.2}x faster"),
+    ]);
+    print!("{}", table.render());
+    println!(
+        "\npool: crashes {} recoveries {}",
+        stats.crashes, stats.recoveries
+    );
+
+    let bench_env = std::env::var("DITER_BENCH_ENV").unwrap_or_else(|_| "local".into());
+    let json = Json::new()
+        .int_field("schema", 1)
+        .str_field("bench", "recovery")
+        .bool_field("measured", true)
+        .str_field("environment", &bench_env)
+        .int_field("n", n as u64)
+        .int_field("k", k as u64)
+        .num_field("tol", tol)
+        .num_field("checkpoint_every_secs", checkpoint_every.as_secs_f64())
+        .num_field("cold_time_to_converge_secs", cold_wall)
+        .num_field("checkpointed_time_to_converge_secs", ckpt_wall)
+        .num_field("recovery_time_to_converge_secs", recovery_wall)
+        .num_field("checkpoint_overhead_ratio", overhead)
+        .num_field("recovery_vs_cold_speedup", speedup)
+        .int_field("pool_crashes", stats.crashes)
+        .int_field("pool_recoveries", stats.recoveries);
+    let path = bench_json_dir().join("BENCH_recovery.json");
+    json.write(&path).expect("write BENCH_recovery.json");
+    println!("\nwrote {}", path.display());
+
+    assert!(
+        speedup > 1.0,
+        "recovery must beat a cold restart (got {speedup:.2}x) — the \
+         checkpoint restore is pure overhead otherwise"
+    );
+    println!("recovery beats cold restart: {speedup:.2}x (checkpoint tax: {overhead:.2}x)");
+}

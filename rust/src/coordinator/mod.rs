@@ -213,6 +213,20 @@ pub struct DistributedConfig {
     /// the shared multi-tenant query registry ([`query::QuerySet`]);
     /// None = single-lane operation, identical to the pre-serving engine
     pub queries: Option<Arc<query::QuerySet>>,
+    /// interval between incremental per-worker H checkpoints
+    /// (`--checkpoint-every-ms`). None (the default) disables
+    /// checkpointing entirely — crash recovery then reconstructs fluid
+    /// from H = 0 over the lost slice (still exact, all progress on the
+    /// slice rewound) and the no-failure hot path is byte-identical to
+    /// the pre-crash-tolerance engine.
+    pub checkpoint_every: Option<Duration>,
+    /// heartbeat staleness deadline (`--heartbeat-ms`): in-process, the
+    /// monitor stamps each worker's loop activity and reports stale
+    /// workers through the `worker_stale_beats` gauge; over the remote
+    /// control plane a worker whose REPORTs stop for this long fails the
+    /// run fast with [`crate::error::DiterError::WorkerDied`]. None (the
+    /// default) disables both.
+    pub heartbeat: Option<Duration>,
 }
 
 /// Straggler injection: PID `pid` is throttled to at most
@@ -249,7 +263,26 @@ impl DistributedConfig {
                 .unwrap_or(false),
             lanes: 1,
             queries: None,
+            checkpoint_every: None,
+            heartbeat: None,
         }
+    }
+
+    pub fn with_checkpoint_every(mut self, every: Duration) -> Self {
+        self.checkpoint_every = Some(every);
+        self
+    }
+
+    pub fn with_heartbeat(mut self, deadline: Duration) -> Self {
+        self.heartbeat = Some(deadline);
+        self
+    }
+
+    /// Whether any crash-tolerance feature is enabled. The transports key
+    /// their exact-release accounting mode off this, so a run with both
+    /// knobs off stays byte-identical to the pre-crash-tolerance engine.
+    pub fn crash_tolerant(&self) -> bool {
+        self.checkpoint_every.is_some() || self.heartbeat.is_some()
     }
 
     pub fn with_lanes(mut self, lanes: usize) -> Self {

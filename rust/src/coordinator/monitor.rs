@@ -23,6 +23,13 @@ pub struct MonitorState {
     pub updates: Vec<AtomicU64>,
     /// set by the leader when the run must stop
     pub stop: AtomicBool,
+    /// per-PID last-activity stamps, milliseconds since `origin`: the
+    /// heartbeat side of failure detection. A worker stores its stamp
+    /// once per loop iteration (one atomic store — no message, no
+    /// allocation); the pool reads staleness. 0 = never stamped.
+    beats: Vec<AtomicU64>,
+    /// epoch for the beat stamps (process start of whoever built this)
+    origin: Instant,
 }
 
 impl MonitorState {
@@ -43,6 +50,8 @@ impl MonitorState {
                 .collect(),
             updates: (0..cap).map(|_| AtomicU64::new(0)).collect(),
             stop: AtomicBool::new(false),
+            beats: (0..cap).map(|_| AtomicU64::new(0)).collect(),
+            origin: Instant::now(),
         })
     }
 
@@ -57,6 +66,37 @@ impl MonitorState {
 
     pub fn add_updates(&self, k: usize, n: u64) {
         self.updates[k].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Stamp worker `k`'s heartbeat (called once per worker loop
+    /// iteration; a single relaxed store). `+1` keeps a stamp taken in
+    /// the origin millisecond distinguishable from "never stamped".
+    pub fn beat(&self, k: usize) {
+        let ms = self.origin.elapsed().as_millis() as u64 + 1;
+        self.beats[k].store(ms, Ordering::Relaxed);
+    }
+
+    /// Milliseconds since worker `k` last stamped, or None if it never
+    /// has (a worker that has not booted yet is not stale).
+    pub fn staleness_ms(&self, k: usize) -> Option<u64> {
+        let last = self.beats[k].load(Ordering::Relaxed);
+        if last == 0 {
+            return None;
+        }
+        let now = self.origin.elapsed().as_millis() as u64 + 1;
+        Some(now.saturating_sub(last))
+    }
+
+    /// Invalidate worker `k`'s published share on a liveness transition
+    /// (death detected, slot respawning): a crashed worker's pre-death
+    /// value is stale — pinning the slot to ∞ keeps the monitor total
+    /// erring high, so recovery can never be declared quiescent on stale
+    /// mass. Recovery's pre-publish of the reconstructed fluid replaces
+    /// it. The beat stamp resets too, so the respawned worker is not
+    /// born stale.
+    pub fn invalidate(&self, k: usize) {
+        self.published[k].set(f64::INFINITY);
+        self.beats[k].store(0, Ordering::Relaxed);
     }
 
     pub fn should_stop(&self) -> bool {
@@ -192,6 +232,21 @@ mod tests {
         assert!((s.published_total() - 0.875).abs() < 1e-15);
         s.add_updates(3, 7);
         assert_eq!(s.update_counts(), vec![0, 0, 0, 7]);
+    }
+
+    #[test]
+    fn beats_and_invalidation() {
+        let s = MonitorState::new(2);
+        assert_eq!(s.staleness_ms(0), None, "never stamped = not stale");
+        s.beat(0);
+        assert!(s.staleness_ms(0).unwrap() < 1_000);
+        s.publish(0, 0.25);
+        s.publish(1, 0.25);
+        s.invalidate(0);
+        assert!(s.published_total().is_infinite(), "invalidation pins ∞");
+        assert_eq!(s.staleness_ms(0), None, "beat stamp reset with the slot");
+        s.publish(0, 0.5);
+        assert!((s.published_total() - 0.75).abs() < 1e-15);
     }
 
     #[test]

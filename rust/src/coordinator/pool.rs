@@ -44,6 +44,7 @@
 //! ticks. All pool operations happen on the engine's monitor thread, so
 //! they are serial with epoch rebases (which freeze the table anyway).
 
+use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -52,6 +53,7 @@ use std::time::{Duration, Instant};
 use super::adaptive::choose_shed_half;
 use super::monitor::MonitorState;
 use super::query::QUERY_METRICS;
+use super::update;
 use super::worker::{WorkerCore, WorkerMsg, WORKER_METRICS};
 use super::DistributedConfig;
 use crate::error::{DiterError, Result};
@@ -62,10 +64,14 @@ use crate::transport::{fabric, BusConfig, BusMonitor, Transport, TransportHub};
 
 /// Pool gauges registered on top of the worker/bus metrics.
 pub const POOL_METRICS: &[&str] = &[
-    "pool_spawned",   // workers spawned at runtime
-    "pool_retired",   // workers retired at runtime
-    "pool_live",      // current live worker count (gauge)
-    "pool_peak_live", // high-water mark of live workers
+    "pool_spawned",      // workers spawned at runtime
+    "pool_retired",      // workers retired at runtime
+    "pool_live",         // current live worker count (gauge)
+    "pool_peak_live",    // high-water mark of live workers
+    "pool_crashes",      // worker deaths detected (panic or kill)
+    "pool_recoveries",   // dead slots respawned with restored state
+    "pool_checkpoints",  // incremental H journal entries folded in
+    "worker_stale_beats", // heartbeat-staleness observations (gauge)
 ];
 
 /// Coordinator → worker control messages. Checkpoint/Snapshot replies
@@ -105,6 +111,20 @@ pub(crate) enum Ctrl {
     },
     /// Terminate; the final (Ω, H) comes back through the join handle.
     Shutdown,
+    /// Incremental checkpoint: reply `(pid, basis epoch, full?, coords,
+    /// lane-blocked H)` from [`WorkerCore::journal`] without pausing —
+    /// full snapshot on a basis change, dirty-slot delta otherwise.
+    Journal {
+        reply: Sender<(usize, u64, bool, Vec<usize>, Vec<f64>)>,
+    },
+    /// Crash recovery: reconcile transport state with the death of
+    /// `pid` ([`crate::transport::Transport::peer_reset`]), ack with own
+    /// pid. Sent while the worker is paused at the recovery barrier.
+    Reconcile { pid: usize, reply: Sender<usize> },
+    /// Chaos hook: die like a crash — exit immediately WITHOUT the
+    /// forwarding drain, leaving queued parcels and unacked retention
+    /// behind exactly as a panicking thread would.
+    Die,
 }
 
 /// Elastic policy knobs (`--max-workers`, `--spawn-threshold`,
@@ -160,12 +180,30 @@ pub struct PoolStats {
     pub peak_live: usize,
     /// live workers right now
     pub live: usize,
+    /// worker deaths detected (panic or simulated kill)
+    pub crashes: u64,
+    /// dead slots respawned with restored H + reconstructed fluid
+    pub recoveries: u64,
 }
 
 /// One PID slot's worker-side handles.
 struct WorkerHandle {
     ctrl: Sender<Ctrl>,
     handle: JoinHandle<(Vec<usize>, Vec<f64>)>,
+}
+
+/// Coordinator-side store of one worker's last H checkpoint (DESIGN.md
+/// §11). Assembled incrementally from [`Ctrl::Journal`] replies: a full
+/// snapshot re-seats the basis, a delta patches rows in place. Any
+/// stored H is a *valid* restore point — `F = B + (P − I)·H` holds for
+/// every H, so staleness loses progress, never correctness.
+struct Checkpoint {
+    /// basis epoch — a delta only patches a same-epoch basis
+    epoch: u64,
+    /// coordinate → row index into `h`
+    pos: HashMap<usize, usize>,
+    /// lane-blocked H rows (row r = the coord with `pos[coord] == r`)
+    h: Vec<f64>,
 }
 
 /// Elastic driver state (None on a fixed pool).
@@ -201,6 +239,17 @@ pub struct WorkerPool {
     elastic: Option<ElasticState>,
     stats: PoolStats,
     epoch: u64,
+    /// per-pid last H checkpoint (crash tolerance; empty when off)
+    checkpoints: Vec<Option<Checkpoint>>,
+    /// an outstanding non-blocking journal request: `(pid, reply rx)`,
+    /// polled with `try_recv` on later ticks so the hot path never waits
+    ckpt_pending: Option<(usize, Receiver<(usize, u64, bool, Vec<usize>, Vec<f64>)>)>,
+    /// round-robin cursor: one worker is journaled per interval
+    ckpt_rr: usize,
+    last_checkpoint: Instant,
+    /// pids whose death was detected but whose recovery has not
+    /// completed yet (recovery retries across ticks on contention)
+    dead_pending: Vec<usize>,
 }
 
 impl WorkerPool {
@@ -226,6 +275,9 @@ impl WorkerPool {
                 latency: cfg.latency,
                 seed: cfg.seed,
                 flush: cfg.wire_flush,
+                // ack-release accounting only when crash tolerance is on:
+                // the no-failure hot path stays byte-identical otherwise
+                ack_release: cfg.crash_tolerant(),
             },
             &names,
         )?;
@@ -253,6 +305,11 @@ impl WorkerPool {
                 ..Default::default()
             },
             epoch: 0,
+            checkpoints: Vec::new(),
+            ckpt_pending: None,
+            ckpt_rr: 0,
+            last_checkpoint: Instant::now(),
+            dead_pending: Vec::new(),
         };
         for ep in endpoints {
             let handle = pool.spawn_thread(ep);
@@ -282,6 +339,14 @@ impl WorkerPool {
             // it carries epoch-tagged state
             core.enter_epoch(self.epoch, self.problem.clone(), Vec::new(), None);
         }
+        self.spawn_core(core)
+    }
+
+    /// Wrap an already-initialized core in its worker thread. Shared by
+    /// the cold spawn path above and the crash-recovery respawn (which
+    /// restores H and enters the new epoch before the thread starts).
+    fn spawn_core(&mut self, core: WorkerCore) -> WorkerHandle {
+        let pid = core.pid();
         let (tx, rx) = channel::<Ctrl>();
         let state = self.state.clone();
         let worker = PoolWorker {
@@ -289,6 +354,7 @@ impl WorkerPool {
             ctrl: rx,
             state,
             rebase_ack: None,
+            killed: false,
         };
         let pin_cores = self.cfg.pin_cores;
         WorkerHandle {
@@ -330,6 +396,25 @@ impl WorkerPool {
 
     pub fn stats(&self) -> PoolStats {
         self.stats
+    }
+
+    /// The epoch the pool last resumed into. Recovery bumps it (the
+    /// fence that obsoletes crash-era parcels), so engines re-sync
+    /// their own counter through this before the next rebase.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Chaos hook: make worker `pid` die like a crash — the thread exits
+    /// without the forwarding drain, stranding queued parcels and unacked
+    /// retention exactly as a panic would. Returns false for a vacant
+    /// slot. Recovery happens on later `poll` ticks.
+    pub fn kill(&self, pid: usize) -> bool {
+        self.slots
+            .get(pid)
+            .and_then(Option::as_ref)
+            .map(|h| h.ctrl.send(Ctrl::Die).is_ok())
+            .unwrap_or(false)
     }
 
     /// PIDs currently backed by a worker thread.
@@ -468,13 +553,16 @@ impl WorkerPool {
     /// spawn for a straggler, shed when at capacity, retire the idle.
     /// Returns true when a lifecycle operation started or completed.
     pub fn poll(&mut self, total: f64) -> bool {
+        // crash detection/checkpointing/recovery run on EVERY poll —
+        // before the elastic gate, so fixed pools are crash-tolerant too
+        let mut acted = self.poll_crashes();
         if self.elastic.is_none() || self.table.is_frozen() {
-            return false;
+            return acted;
         }
         // one liveness snapshot per tick (this runs every monitor poll);
         // the transition helpers keep it in sync with their writes
         let mut states = self.table.liveness_states();
-        let mut acted = self.promote_spawning(&mut states);
+        acted |= self.promote_spawning(&mut states);
         acted |= self.complete_draining(&mut states);
         let (interval, max_ops, min_workers, max_workers, min_total) = {
             let es = self.elastic.as_ref().expect("checked above");
@@ -822,6 +910,353 @@ impl WorkerPool {
         self.metrics.set("handoffs_planned", self.stats.sheds);
         true
     }
+
+    // ------------------------------------------------------------------
+    // crash tolerance (DESIGN.md §11)
+
+    /// Failure detection + checkpoint ticking + recovery, run on every
+    /// poll tick before the elastic gate (fixed pools are crash-tolerant
+    /// too). Allocation-free until a knob is on or a death is detected,
+    /// so the no-failure hot path is unchanged. Returns true when a
+    /// recovery completed — engines must reset their stability window,
+    /// the reconstructed fluid re-converges from checkpoint H.
+    fn poll_crashes(&mut self) -> bool {
+        // a stopping pool legitimately has finished threads in occupied
+        // slots — never read shutdown as a crash
+        if self.state.should_stop() {
+            return false;
+        }
+        let mut acted = self.tick_checkpoint();
+        if let Some(hb) = self.cfg.heartbeat {
+            // in-process, a wedged-but-alive thread cannot be killed,
+            // only observed: surface staleness as a gauge and let
+            // max_wall bound the run (remote mode escalates the same
+            // staleness to WorkerDied — it CAN abandon a process)
+            let limit = hb.as_millis() as u64;
+            for pid in 0..self.slots.len() {
+                if self.slots[pid].is_some()
+                    && self.state.staleness_ms(pid).is_some_and(|ms| ms > limit)
+                {
+                    self.metrics.incr("worker_stale_beats");
+                }
+            }
+        }
+        for pid in 0..self.slots.len() {
+            let finished = self.slots[pid]
+                .as_ref()
+                .is_some_and(|h| h.handle.is_finished());
+            if !finished || self.table.liveness(pid) == PidState::Draining {
+                // Draining threads exit through their own Shutdown —
+                // complete_draining joins those
+                continue;
+            }
+            // death detected: the per-pid bookkeeping happens exactly
+            // once, here; recovery below retries across ticks if blocked
+            self.table.set_liveness(pid, PidState::Dead);
+            self.state.invalidate(pid);
+            if let Some(h) = self.slots[pid].take() {
+                let _ = h.handle.join(); // finished ⇒ immediate; Err IS the crash
+            }
+            self.hub.remove_endpoint(pid);
+            self.stats.crashes += 1;
+            self.metrics.incr("pool_crashes");
+            self.dead_pending.push(pid);
+        }
+        if !self.dead_pending.is_empty() {
+            acted |= self.recover();
+        }
+        acted
+    }
+
+    /// Non-blocking incremental checkpointing: at most one outstanding
+    /// journal request, one worker per interval in round robin. The
+    /// worker replies between steps; the reply is folded in on a LATER
+    /// tick — the monitor thread never waits on a worker, and no global
+    /// barrier is ever taken for a checkpoint.
+    fn tick_checkpoint(&mut self) -> bool {
+        let Some(every) = self.cfg.checkpoint_every else {
+            return false;
+        };
+        if let Some((pid, rx)) = self.ckpt_pending.take() {
+            match rx.try_recv() {
+                Ok((_, epoch, full, coords, h)) => {
+                    self.merge_journal(pid, epoch, full, coords, h);
+                    self.metrics.incr("pool_checkpoints");
+                    return true;
+                }
+                Err(TryRecvError::Empty) => {
+                    self.ckpt_pending = Some((pid, rx));
+                    return false;
+                }
+                // the worker died mid-journal: detection owns the slot
+                Err(TryRecvError::Disconnected) => return false,
+            }
+        }
+        if self.last_checkpoint.elapsed() < every {
+            return false;
+        }
+        let k = self.slots.len();
+        for off in 0..k {
+            let pid = (self.ckpt_rr + off) % k;
+            if self.table.liveness(pid) != PidState::Live {
+                continue;
+            }
+            let Some(slot) = self.slots[pid].as_ref() else {
+                continue;
+            };
+            let (tx, rx) = channel();
+            if slot.ctrl.send(Ctrl::Journal { reply: tx }).is_ok() {
+                self.ckpt_pending = Some((pid, rx));
+                self.ckpt_rr = pid + 1;
+                break;
+            }
+        }
+        self.last_checkpoint = Instant::now();
+        false
+    }
+
+    /// Fold one journal reply into the per-pid checkpoint store. A full
+    /// snapshot re-seats the basis; a delta patches rows of the SAME
+    /// basis epoch. The worker full-snapshots on any owned-set or epoch
+    /// change, so a mismatched delta means the basis is gone — drop it
+    /// and wait for the next full.
+    fn merge_journal(
+        &mut self,
+        pid: usize,
+        epoch: u64,
+        full: bool,
+        coords: Vec<usize>,
+        h: Vec<f64>,
+    ) {
+        let lanes = self.cfg.lanes.max(1);
+        if self.checkpoints.len() <= pid {
+            self.checkpoints.resize_with(pid + 1, || None);
+        }
+        if full {
+            let pos = coords.iter().enumerate().map(|(r, &i)| (i, r)).collect();
+            self.checkpoints[pid] = Some(Checkpoint { epoch, pos, h });
+            return;
+        }
+        let Some(ck) = self.checkpoints[pid].as_mut() else {
+            return;
+        };
+        if ck.epoch != epoch {
+            return;
+        }
+        for (r, &i) in coords.iter().enumerate() {
+            if let Some(&row) = ck.pos.get(&i) {
+                ck.h[row * lanes..(row + 1) * lanes]
+                    .copy_from_slice(&h[r * lanes..(r + 1) * lanes]);
+            }
+        }
+    }
+
+    /// The recovery sequence. Exactness rests on the F-invariant
+    /// (DESIGN.md §11): `F = B + (P − I)·H` holds for ANY H, so fluid
+    /// lost with a dead worker is *recomputed*, not replayed — from the
+    /// best-known global H (survivor barrier replies + the dead pids'
+    /// stored checkpoints, zero where nothing is known). An epoch bump
+    /// fences the crash: every parcel and handoff still in flight from
+    /// before it is discarded-and-committed by its receiver, so nothing
+    /// stale can double-apply. Progress since the last checkpoint is
+    /// lost; the fixed point is not.
+    fn recover(&mut self) -> bool {
+        // 1. quiesce the survivors onto one consistent owner map: every
+        // live pid acked the current version (Dead slots are exempt) and
+        // no handoff slice is booked. An in-progress fold settles in
+        // milliseconds; a slice stranded by the death would hold
+        // `handoffs_inflight` high forever — force-clear it after a
+        // grace period and re-wait. The fluid it carried is NOT lost:
+        // step 5 recomputes all fluid from H.
+        let mut deadline = Instant::now() + Duration::from_secs(2);
+        let mut cleared = false;
+        loop {
+            if self.table.all_acked(self.table.version()) && self.table.handoffs_inflight() == 0
+            {
+                break;
+            }
+            if Instant::now() >= deadline {
+                if !cleared && self.table.handoffs_inflight() > 0 {
+                    self.table.clear_handoffs();
+                    cleared = true;
+                    deadline = Instant::now() + Duration::from_secs(2);
+                    continue;
+                }
+                return false; // a survivor is wedged; retry next tick
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        // 2. barrier-checkpoint the survivors: recovery needs a global
+        // H, and each reply pins its worker's exact owned set while the
+        // worker pauses for the resume
+        let Ok(live) = self.checkpoint() else {
+            return false; // another death mid-barrier; retry next tick
+        };
+        let dead = self.dead_pending.clone();
+        // 3. transport reconciliation: survivors sever connections to
+        // the dead pids and release retention charged at them (wire) —
+        // while paused, before the slots re-register
+        for slot in self.slots.iter().flatten() {
+            let (tx, rx) = channel();
+            let mut expect = 0usize;
+            for &pid in &dead {
+                if slot
+                    .ctrl
+                    .send(Ctrl::Reconcile {
+                        pid,
+                        reply: tx.clone(),
+                    })
+                    .is_ok()
+                {
+                    expect += 1;
+                }
+            }
+            drop(tx);
+            for _ in 0..expect {
+                let _ = rx.recv_timeout(Duration::from_secs(5));
+            }
+        }
+        // 4. orphaned coordinates: a handoff slice that died with the
+        // crash can leave coords no survivor holds while the owner map
+        // still routes their fluid at one (which would foster it
+        // forever). Fold every coordinate covered by neither a survivor
+        // reply nor a dead part into the first dead slot — the respawn
+        // below owns them from checkpoint (or zero) H.
+        let n = self.problem.n();
+        let mut covered = vec![false; n];
+        for (_, coords, _) in &live {
+            for &i in coords {
+                covered[i] = true;
+            }
+        }
+        {
+            let part = self.table.partition();
+            for &pid in &dead {
+                for &i in part.part(pid) {
+                    covered[i] = true;
+                }
+            }
+            let orphans: Vec<usize> = (0..n).filter(|&i| !covered[i]).collect();
+            if !orphans.is_empty() {
+                if let Ok(next) = part.transfer_elastic(&orphans, dead[0]) {
+                    // cannot be frozen here: recovery runs on the same
+                    // thread that freezes (the engine's monitor loop)
+                    let _ = self.table.install_elastic(next);
+                }
+            }
+        }
+        let part = self.table.partition();
+        // 5. assemble the best-known global H, one dense vector per lane
+        let lanes = self.cfg.lanes.max(1);
+        let mut hs = vec![vec![0.0; n]; lanes];
+        for (_, coords, slice) in &live {
+            for (t, &i) in coords.iter().enumerate() {
+                for (l, h) in hs.iter_mut().enumerate() {
+                    h[i] = slice[t * lanes + l];
+                }
+            }
+        }
+        for &pid in &dead {
+            let Some(ck) = self.checkpoints.get(pid).and_then(Option::as_ref) else {
+                continue; // no checkpoint yet: cold H = 0 over its part
+            };
+            for &i in part.part(pid) {
+                if let Some(&row) = ck.pos.get(&i) {
+                    for (l, h) in hs.iter_mut().enumerate() {
+                        h[i] = ck.h[row * lanes + l];
+                    }
+                }
+            }
+        }
+        // 6. per-lane B: lane 0 is the problem's own B; query lanes
+        // re-claim every pending seed (mirrors rebase_gather — the
+        // recomputed F injects them, so seeds claimed by the dead
+        // worker revive instead of leaking)
+        let qs = self.cfg.queries.clone();
+        let lane_b: Vec<Vec<f64>> = (0..lanes)
+            .map(|l| {
+                if l == 0 {
+                    self.problem.b().to_vec()
+                } else {
+                    qs.as_ref()
+                        .and_then(|q| q.lane_b_claim_all(l, n))
+                        .unwrap_or_else(|| vec![0.0; n])
+                }
+            })
+            .collect();
+        // 7. the epoch fence + exact reconstruction of every slice
+        let new_epoch = self.epoch + 1;
+        let problem = self.problem.clone();
+        let state = self.state.clone();
+        let reconstruct = |kk: usize, coords: &[usize]| -> Vec<f64> {
+            let mut f_slice = vec![0.0; coords.len() * lanes];
+            let mut aggregate = 0.0;
+            for (l, hl) in hs.iter().enumerate() {
+                let f_l = update::reconstruct_f_slice(problem.matrix(), coords, hl, &lane_b[l]);
+                let mass: f64 = f_l.iter().map(|v| v.abs()).sum();
+                aggregate += mass;
+                if l >= 1 {
+                    if let Some(q) = qs.as_ref() {
+                        q.publish_lane(kk, l, mass);
+                    }
+                }
+                for (t, v) in f_l.into_iter().enumerate() {
+                    f_slice[t * lanes + l] = v;
+                }
+            }
+            // pre-publish so the monitor errs high until the worker's
+            // own publish lands (same discipline as rebase_gather)
+            state.publish(kk, aggregate);
+            f_slice
+        };
+        let mut live_slices = Vec::with_capacity(live.len());
+        for (kk, coords, _) in &live {
+            live_slices.push((*kk, reconstruct(*kk, coords)));
+        }
+        // 8. respawn each dead slot warm — restored H, reconstructed F,
+        // the new epoch — and set it Live directly (it acks on build;
+        // fixed pools never run promote_spawning)
+        for &pid in &dead {
+            let coords: Vec<usize> = part.part(pid).to_vec();
+            if let Some(q) = qs.as_ref() {
+                // the dead worker's per-lane published shares are stale
+                q.zero_published_pid(pid);
+            }
+            let f_slice = reconstruct(pid, &coords);
+            let mut h_slice = vec![0.0; coords.len() * lanes];
+            for (t, &i) in coords.iter().enumerate() {
+                for (l, hl) in hs.iter().enumerate() {
+                    h_slice[t * lanes + l] = hl[i];
+                }
+            }
+            self.table.reactivate(pid);
+            let Ok(ep) = self.hub.add_endpoint(pid) else {
+                // endpoint slot unusable (should not happen — detection
+                // freed it): leave the pid Dead, bounded by max_wall
+                self.table.set_liveness(pid, PidState::Dead);
+                continue;
+            };
+            let mut core = WorkerCore::new(
+                pid,
+                ep,
+                problem.clone(),
+                self.table.clone(),
+                self.state.clone(),
+                self.cfg.clone(),
+            );
+            core.restore_history(&h_slice);
+            core.enter_epoch(new_epoch, problem.clone(), f_slice, Some(&[]));
+            let handle = self.spawn_core(core);
+            self.slots[pid] = Some(handle);
+            self.table.set_liveness(pid, PidState::Live);
+            self.stats.recoveries += 1;
+            self.metrics.incr("pool_recoveries");
+        }
+        // 9. release the paused survivors into the new epoch
+        let _ = self.resume(new_epoch, problem, live_slices, Some(Arc::new(Vec::new())));
+        self.dead_pending.clear();
+        true
+    }
 }
 
 impl Drop for WorkerPool {
@@ -844,6 +1279,8 @@ struct PoolWorker {
     /// (target epoch, ack channel) of an in-flight local rebase — sent
     /// once the core's halo state machine has entered the epoch
     rebase_ack: Option<(u64, Sender<usize>)>,
+    /// set by [`Ctrl::Die`]: exit like a crash, skipping the drain
+    killed: bool,
 }
 
 impl PoolWorker {
@@ -852,6 +1289,9 @@ impl PoolWorker {
             if self.state.should_stop() {
                 break;
             }
+            // liveness stamp: one relaxed store per iteration — the
+            // monitor reads staleness, no heartbeat message is sent
+            self.state.beat(self.core.pid());
             self.maybe_ack_rebase();
             match self.ctrl.try_recv() {
                 Ok(c) => {
@@ -867,6 +1307,15 @@ impl PoolWorker {
             if !got_fluid && r_k == 0.0 && self.core.is_drained() {
                 std::thread::sleep(Duration::from_micros(50));
             }
+        }
+        if self.killed {
+            // simulated crash: exit WITHOUT the forwarding drain — the
+            // endpoint drops with parcels still queued and retention
+            // unacked, exactly like a panicking thread. The transport's
+            // drop reconciliation and the pool's recovery settle the
+            // books; the return value is never read (the slot is taken
+            // by detection, not by finish()).
+            return (Vec::new(), Vec::new());
         }
         self.core.finish()
     }
@@ -892,6 +1341,11 @@ impl PoolWorker {
             self.core.owned().to_vec(),
             self.core.h().to_vec(),
         ));
+    }
+
+    fn reply_journal(&mut self, reply: &Sender<(usize, u64, bool, Vec<usize>, Vec<f64>)>) {
+        let (epoch, full, coords, h) = self.core.journal();
+        let _ = reply.send((self.core.pid(), epoch, full, coords, h));
     }
 
     /// Returns false when the worker must terminate.
@@ -924,11 +1378,24 @@ impl PoolWorker {
                         Ok(Ctrl::Snapshot { reply }) | Ok(Ctrl::Checkpoint { reply }) => {
                             self.reply_state(&reply);
                         }
+                        Ok(Ctrl::Journal { reply }) => {
+                            self.reply_journal(&reply);
+                        }
+                        Ok(Ctrl::Reconcile { pid, reply }) => {
+                            // recovery reconciles survivors while they
+                            // pause at exactly this barrier
+                            self.core.reconcile_peer(pid);
+                            let _ = reply.send(self.core.pid());
+                        }
                         Ok(Ctrl::RebaseLocal { .. }) => {
                             // the two protocols never mix within a run: a
                             // checkpoint pause (gather) cannot receive a
                             // local transition
                             debug_assert!(false, "RebaseLocal during a checkpoint pause");
+                        }
+                        Ok(Ctrl::Die) => {
+                            self.killed = true;
+                            return false;
                         }
                         Ok(Ctrl::Shutdown) | Err(_) => return false,
                     }
@@ -944,6 +1411,19 @@ impl PoolWorker {
                 // acked from the run loop once the halo exchange settles
                 self.rebase_ack = Some((epoch, reply));
                 true
+            }
+            Ctrl::Journal { reply } => {
+                self.reply_journal(&reply);
+                true
+            }
+            Ctrl::Reconcile { pid, reply } => {
+                self.core.reconcile_peer(pid);
+                let _ = reply.send(self.core.pid());
+                true
+            }
+            Ctrl::Die => {
+                self.killed = true;
+                false
             }
             Ctrl::Resume {
                 epoch,
@@ -1051,6 +1531,65 @@ mod tests {
         assert!(
             (norm1(&x) - 1.0).abs() < 1e-7,
             "PageRank mass conserved: ‖x‖₁ = {}",
+            norm1(&x)
+        );
+    }
+
+    #[test]
+    fn pool_kill_and_recover_reaches_exact_fixed_point() {
+        let n = 60;
+        let problem = pagerank_problem(n, 7);
+        let cfg = DistributedConfig::new(Partition::contiguous(n, 3).unwrap())
+            .with_tol(1e-10)
+            .with_seed(7)
+            .with_checkpoint_every(Duration::from_millis(2))
+            .with_heartbeat(Duration::from_millis(500));
+        let mut pool = WorkerPool::new(problem, cfg).unwrap();
+        // let real progress accrue and a few incremental checkpoints land
+        let warm = Instant::now() + Duration::from_millis(40);
+        while Instant::now() < warm {
+            pool.poll(f64::INFINITY);
+            std::thread::sleep(Duration::from_micros(500));
+        }
+        // crash a worker mid-diffusion: no drain, no goodbye
+        assert!(pool.kill(1));
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while pool.stats().recoveries == 0 && Instant::now() < deadline {
+            pool.poll(f64::INFINITY);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(pool.stats().crashes, 1, "the kill must be detected");
+        assert_eq!(pool.stats().recoveries, 1, "the slot must be respawned");
+        assert_eq!(pool.table.liveness(1), PidState::Live);
+        assert!(pool.epoch() >= 1, "recovery fences with an epoch bump");
+        // after recovery the run must converge to the exact fixed point —
+        // conservation holds through the crash because all fluid was
+        // recomputed from H, never replayed
+        let state = pool.state().clone();
+        let mon = pool.monitor();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let total = state.published_total() + mon.inflight_or_zero();
+            if (total < 1e-10 && mon.undelivered() == 0) || Instant::now() >= deadline {
+                break;
+            }
+            pool.poll(total);
+            std::thread::sleep(Duration::from_micros(300));
+        }
+        state.request_stop();
+        let pairs = pool.finish().unwrap();
+        let mut x = vec![0.0; n];
+        let mut covered = 0;
+        for (owned, vals) in &pairs {
+            for (t, &i) in owned.iter().enumerate() {
+                x[i] = vals[t];
+                covered += 1;
+            }
+        }
+        assert_eq!(covered, n, "exact cover after crash + recovery");
+        assert!(
+            (norm1(&x) - 1.0).abs() < 1e-7,
+            "PageRank mass conserved through the crash: ‖x‖₁ = {}",
             norm1(&x)
         );
     }

@@ -77,6 +77,12 @@ pub struct RemoteParams {
     pub tol: f64,
     /// coordinator-enforced wall-clock cap
     pub max_wall: Duration,
+    /// declare a worker dead when no REPORT arrived for this long
+    /// (None = never). Workers report every [`REPORT_EVERY`] (25ms), so
+    /// anything comfortably above that — e.g. 1–5s — is safe; remote
+    /// workers are one-shot, so a death fails the run fast with
+    /// [`DiterError::WorkerDied`] instead of spinning to `max_wall`.
+    pub heartbeat: Option<Duration>,
 }
 
 /// Control-plane protocol (DESIGN.md §8.6): every variant is one frame
@@ -156,6 +162,12 @@ impl WireCodec for WireCtrl {
                 write_f64_slice(out, &[params.damping, params.tol]);
                 write_varint(out, params.seed);
                 write_varint(out, params.max_wall.as_millis() as u64);
+                // 0 = no heartbeat (the Option round-trips through the
+                // sentinel: a 0ms deadline would be meaningless anyway)
+                write_varint(
+                    out,
+                    params.heartbeat.map(|h| h.as_millis() as u64).unwrap_or(0),
+                );
             }
             WireCtrl::Joined { addr } => {
                 out.push(CTRL_JOINED);
@@ -208,6 +220,8 @@ impl WireCodec for WireCtrl {
                 let dt = read_f64_slice(buf, &mut pos, 2)?;
                 let seed = read_varint(buf, &mut pos)?;
                 let max_wall = Duration::from_millis(read_varint(buf, &mut pos)?);
+                let hb = read_varint(buf, &mut pos)?;
+                let heartbeat = (hb > 0).then(|| Duration::from_millis(hb));
                 WireCtrl::Assign {
                     pid,
                     k,
@@ -218,6 +232,7 @@ impl WireCodec for WireCtrl {
                         seed,
                         tol: dt[1],
                         max_wall,
+                        heartbeat,
                     },
                 }
             }
@@ -408,26 +423,50 @@ pub fn serve_coordinator(
     // Run phase: poll REPORTs, apply the exact-monitor quiescence rule.
     let start = Instant::now();
     let mut latest: Vec<Option<(f64, f64, u64, u64)>> = vec![None; k];
+    let mut last_seen: Vec<Instant> = vec![Instant::now(); k];
     let mut stable = 0u32;
     let mut converged = false;
     loop {
-        for conn in conns.iter_mut() {
-            while let Some(msg) = conn.try_recv()? {
-                match msg {
-                    WireCtrl::Report {
-                        pid,
-                        published,
-                        inflight,
-                        undelivered,
-                        updates,
-                    } if pid < k => {
-                        latest[pid] = Some((published, inflight, undelivered, updates));
+        for (cpid, conn) in conns.iter_mut().enumerate() {
+            loop {
+                match conn.try_recv() {
+                    Ok(None) => break,
+                    Ok(Some(msg)) => match msg {
+                        WireCtrl::Report {
+                            pid,
+                            published,
+                            inflight,
+                            undelivered,
+                            updates,
+                        } if pid < k => {
+                            latest[pid] = Some((published, inflight, undelivered, updates));
+                            last_seen[pid] = Instant::now();
+                        }
+                        other => {
+                            return Err(DiterError::Coordinator(format!(
+                                "expected REPORT, got {other:?}"
+                            )))
+                        }
+                    },
+                    Err(_) => {
+                        // EOF / reset mid-run: remote workers are
+                        // one-shot, so fail fast with the culprit —
+                        // its last REPORT is void (quiescence can never
+                        // be proven from a dead worker's numbers) and
+                        // spinning to max_wall helps nobody
+                        latest[cpid] = None;
+                        return Err(DiterError::WorkerDied(cpid));
                     }
-                    other => {
-                        return Err(DiterError::Coordinator(format!(
-                            "expected REPORT, got {other:?}"
-                        )))
-                    }
+                }
+            }
+        }
+        if let Some(hb) = params.heartbeat {
+            for pid in 0..k {
+                if last_seen[pid].elapsed() > hb {
+                    // silent death (no FIN reached us — e.g. a wedged
+                    // process or a dropped link): same verdict as EOF
+                    latest[pid] = None;
+                    return Err(DiterError::WorkerDied(pid));
                 }
             }
         }
@@ -467,8 +506,12 @@ pub fn serve_coordinator(
     let mut x = vec![0.0; params.n];
     let mut total_updates = 0u64;
     for (pid, conn) in conns.iter_mut().enumerate() {
+        // the gather blocks on each worker in turn: bound it so a worker
+        // that died between the last poll and its SHUTDOWN cannot hang
+        // the coordinator forever
+        let _ = conn.stream.set_read_timeout(Some(Duration::from_secs(30)));
         loop {
-            match conn.recv()? {
+            match conn.recv().map_err(|_| DiterError::WorkerDied(pid))? {
                 WireCtrl::Report { pid, updates, .. } if pid < k => {
                     if let Some(r) = latest.get_mut(pid).and_then(|r| r.as_mut()) {
                         r.3 = updates;
@@ -551,6 +594,10 @@ pub fn run_worker(connect: &str, bind_ip: IpAddr) -> Result<()> {
             latency: None,
             seed: params.seed,
             flush: cfg.wire_flush,
+            // remote workers are one-shot: a death fails the run fast
+            // (WorkerDied) rather than recovering in place, so the
+            // eager local-commit accounting stays in force
+            ack_release: false,
         },
         WORKER_METRICS,
     );
@@ -662,6 +709,7 @@ mod tests {
             seed: 7,
             tol: 1e-9,
             max_wall: Duration::from_secs(60),
+            heartbeat: Some(Duration::from_secs(2)),
         };
         let msgs = [
             WireCtrl::Join,
@@ -713,6 +761,7 @@ mod tests {
                 seed: 1,
                 tol: 1e-9,
                 max_wall: Duration::from_secs(1),
+                heartbeat: None,
             },
         }
         .encode(&mut buf);
@@ -735,6 +784,7 @@ mod tests {
             seed: 11,
             tol: 1e-10,
             max_wall: Duration::from_secs(30),
+            heartbeat: Some(Duration::from_secs(5)),
         };
         let workers: Vec<_> = (0..2)
             .map(|_| {

@@ -332,10 +332,16 @@ impl StreamingEngine {
                     Some(self.problem.matrix()),
                 );
             }
-            // the elastic scheduler: spawn for stragglers, retire the
-            // idle — lifecycle transitions run between polls while the
-            // diffusion continues (no-op on a fixed pool)
-            self.pool.poll(total);
+            // the elastic scheduler + crash tolerance: spawn for
+            // stragglers, retire the idle, detect/recover worker deaths
+            // — lifecycle transitions run between polls while the
+            // diffusion continues. A completed recovery restarts the
+            // stability window: the reconstructed fluid re-converges
+            // from checkpoint H, so a stale sub-tol reading from just
+            // before the crash must not count toward quiescence.
+            if self.pool.poll(total) {
+                stable = 0;
+            }
             // quiescence needs every sent parcel applied or discarded —
             // stashed future-epoch parcels stay uncommitted, so a rebase
             // racing this check can never fake convergence; the same
@@ -466,6 +472,13 @@ impl StreamingEngine {
         // (this also parks the elastic scheduler: its poll is a no-op on
         // a frozen table, so no spawn/retire can straddle the rebase)
         let t0 = Instant::now();
+        // a worker that died since the last tick must be detected and
+        // recovered BEFORE the freeze: the transition checkpoints (or
+        // broadcasts to) every occupied slot and would error on a dead
+        // one — and a dead worker can neither ack the frozen version nor
+        // fold a handoff, so the quiesce below would time out anyway
+        let total = self.shared.published_total() + self.bus_mon.inflight_or_zero();
+        self.pool.poll(total);
         self.table.freeze();
         let r = self.rebase_frozen();
         self.table.unfreeze();
@@ -500,6 +513,10 @@ impl StreamingEngine {
         let sys = self.graph.pagerank_system(self.damping, self.patch_dangling)?;
         let dirty = self.graph.last_build_dirty_shared();
         let problem = Arc::new(FixedPointProblem::new(sys.matrix, sys.b)?);
+        // crash recovery bumps the pool's epoch behind the engine's back
+        // (its fence against crash-era parcels) — re-sync before the
+        // increment so the new epoch is strictly ahead of both counters
+        self.epoch = self.epoch.max(self.pool.epoch());
         self.epoch += 1;
         match self.cfg.rebase {
             RebaseMode::Local => {

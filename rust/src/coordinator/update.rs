@@ -49,6 +49,26 @@ pub fn rebase_b_slice(
         .collect()
 }
 
+/// Reconstruct the fluid a crashed worker lost: `F_i = B_i − ((I−P)·H)_i
+/// = L_i(P)·H + B_i − H_i` for `i ∈ owned` — [`rebase_b_slice`] with
+/// P' = P (eq. 4 rearranged: when the matrix does not change, B' *is*
+/// the current fluid). Conservation makes this exact for **any** H: the
+/// run's invariant is `F = B + (P−I)·H` globally at every instant, with
+/// in-flight parcels counted in F — so recomputing F from whatever H
+/// survives (a checkpoint, or zero for coordinates never snapshotted)
+/// rewinds progress on the crashed slice without ever moving the fixed
+/// point. Recovery pairs this with an epoch bump so the dead worker's
+/// in-flight parcels are discarded (and their mass committed) on
+/// arrival instead of double-counting against the reconstruction.
+pub fn reconstruct_f_slice(
+    p: &SparseMatrix,
+    owned: &[usize],
+    h: &[f64],
+    b: &[f64],
+) -> Vec<f64> {
+    rebase_b_slice(p, owned, h, b)
+}
+
 /// The §3.1 (V1, full/halo history) **local** rebase: patch one PID's
 /// fluid slice in place with the delta form `F' = F + (P' − P)·H`,
 /// reading only the columns that actually changed — everywhere else
@@ -180,6 +200,29 @@ mod tests {
         for i in 0..4 {
             assert!((b_prime[i] - f[i]).abs() < 1e-15);
         }
+    }
+
+    /// `reconstruct_f_slice` must agree with the consistent fluid of the
+    /// running system restricted to any owned set — including H = 0
+    /// (recovery with no checkpoint: F rewinds all the way to B).
+    #[test]
+    fn reconstruct_matches_consistent_fluid() {
+        let p = FixedPointProblem::from_linear_system(&paper_matrix(2), &[1.0; 4]).unwrap();
+        let h = vec![0.12, 0.0, 0.31, 0.27];
+        let full_f = p.fluid(&h);
+        for owned in [vec![0usize, 1], vec![2, 3], vec![1, 3], vec![0, 1, 2, 3]] {
+            let f = reconstruct_f_slice(p.matrix(), &owned, &h, p.b());
+            for (t, &i) in owned.iter().enumerate() {
+                assert!(
+                    (f[t] - full_f[i]).abs() < 1e-15,
+                    "coord {i}: {} vs {}",
+                    f[t],
+                    full_f[i]
+                );
+            }
+        }
+        let cold = reconstruct_f_slice(p.matrix(), &[0, 1, 2, 3], &[0.0; 4], p.b());
+        assert_eq!(cold, p.b().to_vec(), "zero history reconstructs F = B");
     }
 
     #[test]

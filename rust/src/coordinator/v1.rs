@@ -75,6 +75,7 @@ pub fn solve_v1(
             latency: cfg.latency,
             seed: cfg.seed,
             flush: cfg.wire_flush,
+            ack_release: false,
         },
     );
     let bus_mon = monitor_of(&endpoints[0]);

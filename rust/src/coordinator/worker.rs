@@ -278,6 +278,15 @@ pub struct WorkerCore {
     nonzero_f: usize,
     /// preallocated scratch for the blocked kernel (batch + journal)
     blocked: BlockedScratch,
+    /// ——— incremental checkpoint journal (crash tolerance) ———
+    /// basis epoch of the last snapshot handed to the pool: a delta only
+    /// merges onto a snapshot taken over the same owned set and epoch
+    ckpt_epoch: u64,
+    /// owned coordinates as of the last snapshot (empty = never taken)
+    ckpt_coords: Vec<usize>,
+    /// lane-blocked H as of the last snapshot, aligned with
+    /// `ckpt_coords` — the dirty-slot detector for delta journals
+    ckpt_shadow: Vec<f64>,
 }
 
 /// Reusable scratch for [`KernelKind::Blocked`]: the drained batch and
@@ -432,6 +441,9 @@ impl WorkerCore {
             shutting_down: false,
             nonzero_f,
             blocked: BlockedScratch::default(),
+            ckpt_epoch: 0,
+            ckpt_coords: Vec::new(),
+            ckpt_shadow: Vec::new(),
         };
         core.rebuild_local();
         core
@@ -495,6 +507,61 @@ impl WorkerCore {
     /// Number of fluid lanes this core runs (≥ 1).
     pub fn lanes(&self) -> usize {
         self.lanes
+    }
+
+    /// Overwrite the held history with a restored snapshot (recovery's
+    /// warm start). `h` must be lane-blocked and aligned with the current
+    /// owned slice — recovery builds it from the last checkpoint over
+    /// exactly this partition slice (absent coordinates cold-start at 0).
+    /// H is a partial solution, valid under any epoch: restoring an older
+    /// snapshot loses progress, never correctness (DESIGN.md §11).
+    pub fn restore_history(&mut self, h: &[f64]) {
+        assert_eq!(
+            h.len(),
+            self.owned.len() * self.lanes,
+            "restored H must cover the owned slice, lane-blocked"
+        );
+        self.h.copy_from_slice(h);
+    }
+
+    /// Emit one incremental checkpoint journal entry:
+    /// `(epoch, full, coords, h)` where `h` is lane-blocked and aligned
+    /// with `coords`. When the snapshot basis moved (ownership or epoch
+    /// changed since the last journal — or there was none) this is a
+    /// **full** snapshot of the owned slice; otherwise a **delta** of
+    /// just the slots whose H moved, detected against (and folded into)
+    /// the shadow copy. The pool merges deltas coordinate-wise onto its
+    /// stored snapshot; a full entry replaces it.
+    pub fn journal(&mut self) -> (u64, bool, Vec<usize>, Vec<f64>) {
+        let full = self.ckpt_epoch != self.epoch || self.ckpt_coords != self.owned;
+        if full {
+            self.ckpt_epoch = self.epoch;
+            self.ckpt_coords.clear();
+            self.ckpt_coords.extend_from_slice(&self.owned);
+            self.ckpt_shadow.clear();
+            self.ckpt_shadow.extend_from_slice(&self.h);
+            return (self.epoch, true, self.owned.clone(), self.h.clone());
+        }
+        let lanes = self.lanes;
+        let mut coords = Vec::new();
+        let mut h = Vec::new();
+        for (t, &i) in self.owned.iter().enumerate() {
+            let row = &self.h[t * lanes..(t + 1) * lanes];
+            let shadow = &mut self.ckpt_shadow[t * lanes..(t + 1) * lanes];
+            if row != shadow {
+                shadow.copy_from_slice(row);
+                coords.push(i);
+                h.extend_from_slice(row);
+            }
+        }
+        (self.epoch, false, coords, h)
+    }
+
+    /// Crash-recovery seam: reconcile this worker's transport state with
+    /// the death of `pid` (see [`Transport::peer_reset`]). Called while
+    /// paused at the recovery barrier.
+    pub fn reconcile_peer(&mut self, pid: usize) {
+        self.ep.peer_reset(pid);
     }
 
     /// Greedy priority of a slot: the largest |fluid| across its lanes —

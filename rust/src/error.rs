@@ -42,6 +42,12 @@ pub enum DiterError {
     /// Coordinator-level failure (worker panic, protocol violation, ...).
     Coordinator(String),
 
+    /// A worker died mid-run (EOF/reset on its control connection, or a
+    /// missed heartbeat deadline). Carries the PID so the caller can name
+    /// the casualty instead of burning `max_wall` on a peer that will
+    /// never report again.
+    WorkerDied(usize),
+
     /// PJRT runtime failure (artifact missing, compile/execute error).
     Runtime(String),
 
@@ -77,6 +83,7 @@ impl fmt::Display for DiterError {
             }
             DiterError::Transport(msg) => write!(f, "transport error: {msg}"),
             DiterError::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            DiterError::WorkerDied(pid) => write!(f, "worker {pid} died mid-run"),
             DiterError::Runtime(msg) => write!(f, "runtime error: {msg}"),
             DiterError::Io(e) => write!(f, "{e}"),
         }
@@ -125,6 +132,8 @@ mod tests {
             tol: 1e-9,
         };
         assert!(e.to_string().contains("10"));
+        let e = DiterError::WorkerDied(3);
+        assert!(e.to_string().contains("worker 3"));
     }
 
     #[test]

@@ -502,6 +502,18 @@ fn stream_spec() -> Vec<OptSpec> {
             default: Some("1000"),
         },
         OptSpec {
+            name: "checkpoint-every-ms",
+            help: "crash tolerance: incremental per-worker H checkpoints at this interval (0 = off)",
+            is_flag: false,
+            default: Some("0"),
+        },
+        OptSpec {
+            name: "heartbeat-ms",
+            help: "crash tolerance: declare a worker dead after this much silence (0 = off)",
+            is_flag: false,
+            default: Some("0"),
+        },
+        OptSpec {
             name: "listen",
             help: "coordinator role: accept --pids worker processes on ADDR (one-shot remote solve)",
             is_flag: false,
@@ -546,6 +558,8 @@ fn cmd_stream(argv: &[String]) -> CliResult {
     let rebase = RebaseMode::parse(&args.get_str("rebase", "gather"))
         .ok_or("bad --rebase (expected gather | local)")?;
     let compare_cold = args.has_flag("compare-cold");
+    let checkpoint_every_ms = args.get_u64("checkpoint-every-ms", 0)?;
+    let heartbeat_ms = args.get_u64("heartbeat-ms", 0)?;
 
     // Process-per-worker roles (DESIGN.md §8.6): a one-shot remote solve
     // over TCP instead of the in-process streaming run.
@@ -567,6 +581,9 @@ fn cmd_stream(argv: &[String]) -> CliResult {
             seed,
             tol,
             max_wall: Duration::from_secs(120),
+            // remote workers are one-shot: staleness fails the run fast
+            // (DiterError::WorkerDied) rather than respawning anyone
+            heartbeat: (heartbeat_ms > 0).then(|| Duration::from_millis(heartbeat_ms)),
         };
         println!("coordinator: waiting for {k} workers on {listen}");
         let summary = remote::run_coordinator(listen, k, &params)?;
@@ -620,6 +637,12 @@ fn cmd_stream(argv: &[String]) -> CliResult {
         .with_wire_flush(wire_flush);
     if args.has_flag("pin-cores") {
         cfg = cfg.with_pin_cores(true);
+    }
+    if checkpoint_every_ms > 0 {
+        cfg = cfg.with_checkpoint_every(Duration::from_millis(checkpoint_every_ms));
+    }
+    if heartbeat_ms > 0 {
+        cfg = cfg.with_heartbeat(Duration::from_millis(heartbeat_ms));
     }
     cfg.max_wall = Duration::from_secs(120);
     if args.get("straggler").is_some() {
@@ -778,6 +801,12 @@ fn cmd_stream(argv: &[String]) -> CliResult {
             pool_stats.sheds,
             pool_stats.peak_live,
             pool_stats.live
+        );
+    }
+    if pool_stats.crashes > 0 || checkpoint_every_ms > 0 || heartbeat_ms > 0 {
+        println!(
+            "  crash tolerance: crashes {} recoveries {}",
+            pool_stats.crashes, pool_stats.recoveries
         );
     }
     Ok(())

@@ -368,6 +368,12 @@ pub enum PidState {
     /// be reused by a later spawn. Retired slots are exempt from version
     /// acks — nobody is left to ack.
     Retired,
+    /// Crashed: the worker thread (or remote process) died without
+    /// draining. Unlike `Retired`, its Ω is still routed at the slot and
+    /// its state is gone — the pool's recovery path must respawn it and
+    /// reconstruct the lost fluid. Dead slots are exempt from version
+    /// acks for the same reason retired ones are: nobody is left to ack.
+    Dead,
 }
 
 /// The **versioned owner map** behind live repartitioning: one shared
@@ -513,13 +519,14 @@ impl OwnershipTable {
         self.liveness.read().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
-    /// Slots currently backed by a worker thread (everything but Retired).
+    /// Slots currently backed by a worker thread (everything but Retired
+    /// and Dead — a crashed slot has no thread until recovery respawns it).
     pub fn live_slots(&self) -> usize {
         self.liveness
             .read()
             .unwrap_or_else(|e| e.into_inner())
             .iter()
-            .filter(|s| **s != PidState::Retired)
+            .filter(|s| !matches!(s, PidState::Retired | PidState::Dead))
             .count()
     }
 
@@ -579,9 +586,22 @@ impl OwnershipTable {
     pub fn all_acked(&self, version: u64) -> bool {
         let a = self.acked.read().unwrap_or_else(|e| e.into_inner());
         let l = self.liveness.read().unwrap_or_else(|e| e.into_inner());
-        a.iter()
-            .zip(l.iter())
-            .all(|(a, s)| *s == PidState::Retired || a.load(Ordering::Acquire) >= version)
+        a.iter().zip(l.iter()).all(|(a, s)| {
+            matches!(s, PidState::Retired | PidState::Dead)
+                || a.load(Ordering::Acquire) >= version
+        })
+    }
+
+    /// Force the in-flight handoff count back to zero. ONLY the crash
+    /// recovery path may call this, after its quiesce deadline expires: a
+    /// slice shipped *at* a worker that then died will never fold, so the
+    /// count would stay above zero forever and wedge every later
+    /// quiescence proof. The lost slice's mass is not dropped — recovery
+    /// recomputes every worker's fluid from `F = B + (P−I)·H` under a new
+    /// epoch, which covers the moving range (with its H rewound to the
+    /// last checkpoint or zero).
+    pub fn clear_handoffs(&self) -> u64 {
+        self.inflight.swap(0, Ordering::AcqRel)
     }
 }
 

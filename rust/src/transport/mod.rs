@@ -84,6 +84,14 @@ pub struct BusConfig {
     /// when the wire transport flushes its per-connection send queue
     /// (the in-process bus delivers directly and ignores this)
     pub flush: FlushPolicy,
+    /// wire transport: release a parcel from the in-flight account when
+    /// the receiver's ACK arrives instead of locally at encode time.
+    /// Slightly laggier accounting on the happy path, but it makes every
+    /// unit of crash-stranded wire mass attributable to some live
+    /// sender's retention list, which is what exact crash recovery needs
+    /// (DESIGN.md §11). The in-process bus ignores this — its envelopes
+    /// are reconciled by the dying endpoint's own drop glue.
+    pub ack_release: bool,
 }
 
 /// When the wire transport pushes queued frames to the socket (DESIGN.md
@@ -181,6 +189,11 @@ struct Directory<T> {
     txs: Vec<Option<Sender<Envelope<T>>>>,
     /// ack channels: `ack_txs[k]` sends acked seqs back to endpoint k
     ack_txs: Vec<Option<Sender<u64>>>,
+    /// per-slot registration generation, bumped on every `add_endpoint`:
+    /// a dropped endpoint only clears its slot if no successor has
+    /// re-registered there in the meantime (crash recovery respawns the
+    /// slot before the dead thread's stack necessarily unwinds).
+    gens: Vec<u64>,
 }
 
 /// A shared handle onto the bus fabric that can register and deregister
@@ -224,12 +237,16 @@ impl<T: Send> BusHub<T> {
         if id == d.txs.len() {
             d.txs.push(Some(tx));
             d.ack_txs.push(Some(ack_tx));
+            d.gens.push(0);
         } else {
             d.txs[id] = Some(tx);
             d.ack_txs[id] = Some(ack_tx);
+            d.gens[id] += 1;
         }
+        let gen = d.gens[id];
         Ok(Endpoint {
             id,
+            gen,
             dir: self.dir.clone(),
             rx,
             ack_rx,
@@ -281,6 +298,8 @@ impl<T: Send> BusHub<T> {
 /// One PID's endpoint: owned by exactly one worker thread.
 pub struct Endpoint<T> {
     id: usize,
+    /// registration generation of this endpoint's slot (see `Directory`)
+    gen: u64,
     dir: Arc<RwLock<Directory<T>>>,
     rx: Receiver<Envelope<T>>,
     ack_rx: Receiver<u64>,
@@ -329,6 +348,7 @@ pub fn bus_elastic<T: Send>(
         dir: Arc::new(RwLock::new(Directory {
             txs: Vec::with_capacity(k),
             ack_txs: Vec::with_capacity(k),
+            gens: Vec::with_capacity(k),
         })),
         shared,
         latency: cfg.latency,
@@ -576,6 +596,57 @@ impl<T: Send> Endpoint<T> {
     }
 }
 
+/// Crash reconciliation: an endpoint that dies with envelopes still
+/// queued (a worker thread panicking or killed mid-run) would otherwise
+/// strand their mass on the in-flight account and their count on
+/// `undelivered` forever — the monitor could never again prove
+/// quiescence. Dropping the endpoint settles the books exactly:
+///
+/// 1. deregister the slot under the directory write lock (generation-
+///    guarded — a recovery respawn may already occupy it), so every
+///    later send fails fast at the sender and re-routes;
+/// 2. drain the inbound queue and the ripening heap, and for each
+///    envelope release its mass from `inflight`, mark it delivered, and
+///    ack the sender (its retention entry dies here — the fluid itself
+///    is gone and will be reconstructed from H, see DESIGN.md §11);
+/// 3. forget this endpoint's own retained parcels (delivered copies are
+///    either applied or reconciled by their receiver's own drop).
+///
+/// A normally-retiring worker drains before exiting, so this finds
+/// empty queues and costs two lock acquisitions — the no-failure path
+/// is unchanged.
+impl<T> Drop for Endpoint<T> {
+    fn drop(&mut self) {
+        {
+            let mut d = self.dir.write().unwrap_or_else(|e| e.into_inner());
+            if d.gens.get(self.id) == Some(&self.gen) && self.id < d.txs.len() {
+                d.txs[self.id] = None;
+                d.ack_txs[self.id] = None;
+            }
+        }
+        // after the write lock: no sender can still enqueue to this rx
+        while let Ok(env) = self.rx.try_recv() {
+            self.delayed.push(Ripening(env));
+        }
+        if !self.delayed.is_empty() {
+            let d = self.dir.read().unwrap_or_else(|e| e.into_inner());
+            while let Some(Ripening(env)) = self.delayed.pop() {
+                // undelivered strictly pairs the send-side increment:
+                // these envelopes were never committed anywhere else
+                self.shared.inflight.add(-env.mass);
+                self.shared.undelivered.fetch_sub(1, Ordering::AcqRel);
+                if let Some(tx) = d.ack_txs.get(env.from).and_then(Option::as_ref) {
+                    let _ = tx.send(env.seq);
+                }
+            }
+        }
+        let orphaned = self.retained.len() as u64;
+        if orphaned > 0 {
+            self.shared.retained.fetch_sub(orphaned, Ordering::Relaxed);
+        }
+    }
+}
+
 /// A read-only monitor handle onto the bus state (for the coordinator's
 /// convergence monitor thread).
 pub struct BusMonitor {
@@ -715,6 +786,17 @@ pub trait Transport<T: Clone>: Send {
     /// no-op: transports that deliver eagerly (the bus) have nothing
     /// queued.
     fn flush(&mut self) {}
+
+    /// Reconcile state addressed to a peer that crashed: sever any
+    /// connections to `pid`, forget retained parcels destined for it and
+    /// release their mass from the in-flight account — that fluid died
+    /// with the peer and is reconstructed from H by recovery (DESIGN.md
+    /// §11). Called by the pool at each surviving worker during the
+    /// recovery barrier, after the survivor is paused (so no new sends
+    /// race it) and before the dead slot is re-registered. The default is
+    /// a no-op: the bus needs none — a dead bus endpoint settles its own
+    /// books in its drop glue and acks the survivors' retention away.
+    fn peer_reset(&mut self, _pid: usize) {}
 
     /// [`Transport::try_send`] that converts the returned payload into a
     /// transport error (for destinations that must exist).
@@ -1153,6 +1235,46 @@ mod tests {
         std::thread::sleep(Duration::from_millis(50));
         assert!(b.try_recv().is_some());
         assert_eq!(b.pending_delayed(), 0);
+    }
+
+    #[test]
+    fn dropped_endpoint_settles_queued_mass_and_acks_senders() {
+        let (mut eps, hub, _m) = bus_elastic::<u32>(2, &BusConfig::default(), &[]);
+        let b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, 7, 0.5, 4).unwrap();
+        a.send(1, 8, 0.25, 4).unwrap();
+        let mon = monitor_of(&a);
+        assert_eq!(mon.undelivered(), 2);
+        assert!((mon.inflight() - 0.75).abs() < 1e-12);
+        assert_eq!(a.unacked(), 2);
+        // b "crashes" with both envelopes still queued
+        drop(b);
+        assert_eq!(mon.undelivered(), 0, "queued envelopes settled");
+        assert_eq!(mon.inflight_or_zero(), 0.0, "their mass released");
+        a.collect_acks();
+        assert_eq!(a.unacked(), 0, "sender retention acked away");
+        assert_eq!(mon.retained(), 0);
+        assert!(!hub.is_live(1), "slot deregistered by the drop");
+        // the slot is immediately respawnable
+        let mut b2 = hub.add_endpoint(1).unwrap();
+        a.send(1, 9, 0.125, 4).unwrap();
+        assert_eq!(b2.try_recv().unwrap().payload, 9);
+    }
+
+    #[test]
+    fn dropped_endpoint_spares_respawned_successor() {
+        // generation guard: a slow-dying first registration must not
+        // deregister the successor that recovery already installed
+        let (mut eps, hub, _m) = bus_elastic::<u32>(2, &BusConfig::default(), &[]);
+        let b1 = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        hub.remove_endpoint(1); // detection clears the slot first
+        let mut b2 = hub.add_endpoint(1).unwrap(); // recovery respawns it
+        drop(b1); // the dead worker's stack unwinds late
+        assert!(hub.is_live(1), "successor registration survives");
+        a.send(1, 3, 0.0, 4).unwrap();
+        assert_eq!(b2.try_recv().unwrap().payload, 3);
     }
 
     #[test]

@@ -92,6 +92,7 @@ pub const WIRE_METRICS: &[&str] = &[
     "wire_writev_calls",
     "wire_frames_per_write", // peak frames completed by one writev
     "wire_flush_deadline_hits",
+    "wire_dial_failures", // connect/setup failures in conn_to (peer dead?)
 ];
 
 /// Fairness cap: at most this many frames parsed per connection per pump
@@ -508,7 +509,11 @@ impl<T: WireCodec + Send + 'static> WireHub<T> {
             seed: cfg.seed,
             bind_ip: IpAddr::V4(Ipv4Addr::LOCALHOST),
             policy: cfg.flush,
-            local_commit: true,
+            // ack_release opts the loopback harness into the per-process
+            // accounting discipline (release on ACK receipt at the
+            // sender): crash recovery needs every unit of stranded mass
+            // attributable to some live sender's retention list
+            local_commit: !cfg.ack_release,
             _msg: PhantomData,
         }
     }
@@ -870,8 +875,10 @@ pub struct WireEndpoint<T: WireCodec> {
     /// the receive side here; protocol-equivalent to the bus's
     /// sender-side stamping)
     inbox: BinaryHeap<Ripening<T>>,
-    /// parcels retained until acked (seq → mass); "as TCP"
-    retained: Vec<(u64, f64)>,
+    /// parcels retained until acked (seq, mass, dest); "as TCP". The
+    /// destination makes crash recovery exact: [`WireEndpoint::peer_reset`]
+    /// drops and releases precisely the entries addressed to a dead PID.
+    retained: Vec<(u64, f64, usize)>,
     next_seq: u64,
     latency: Option<(Duration, Duration)>,
     rng: Xoshiro256pp,
@@ -1106,8 +1113,8 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
                 let Ok(seq) = read_varint(body, &mut pos) else {
                     return kill(&mut self.conns, ci);
                 };
-                if let Some(p) = self.retained.iter().position(|&(s, _)| s == seq) {
-                    let (_, mass) = self.retained.swap_remove(p);
+                if let Some(p) = self.retained.iter().position(|&(s, _, _)| s == seq) {
+                    let (_, mass, _) = self.retained.swap_remove(p);
                     self.shared.retained.fetch_sub(1, Ordering::Relaxed);
                     if !self.local_commit {
                         // sender-side release: the remote receiver has
@@ -1131,9 +1138,18 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
         if let Some(ci) = self.conns.iter().position(|c| c.alive && c.peer == Some(to)) {
             return Some(ci);
         }
-        let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5)).ok()?;
+        let Ok(stream) = TcpStream::connect_timeout(&addr, Duration::from_secs(5)) else {
+            // record the cause instead of collapsing it into a silent
+            // re-route: a burst of dial failures to one address is the
+            // wire-side symptom of a dead peer
+            self.shared.metrics.incr("wire_dial_failures");
+            return None;
+        };
         let _ = stream.set_nodelay(true);
-        stream.set_nonblocking(true).ok()?;
+        if stream.set_nonblocking(true).is_err() {
+            self.shared.metrics.incr("wire_dial_failures");
+            return None;
+        }
         let ci = self.conns.len();
         self.conns.push(Conn::new(stream, Some(to)));
         let mut hello = self.frames.take();
@@ -1212,7 +1228,7 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
         // the payload's column storage feeds the next decode
         payload.reclaim(&mut self.pools);
         self.next_seq += 1;
-        self.retained.push((seq, mass));
+        self.retained.push((seq, mass, to));
         self.shared.retained.fetch_add(1, Ordering::Relaxed);
         self.shared.metrics.incr("msgs_sent");
         self.shared.metrics.add("bytes_sent", frame_len as u64);
@@ -1293,6 +1309,41 @@ impl<T: WireCodec + Send + 'static> WireEndpoint<T> {
         self.retained.len()
     }
 
+    /// See [`Transport::peer_reset`]: sever connections to a crashed
+    /// `pid` and settle every retained parcel addressed to it — those
+    /// parcels died (unapplied) with the peer, so under ack-release
+    /// accounting their mass leaves the in-flight account here and the
+    /// recovered worker's reconstructed F covers the fluid itself. With
+    /// eager local-commit accounting (`ack_release` off) the sweep only
+    /// frees retention memory; mass was never held past the send. Called
+    /// while this worker is paused at the recovery barrier, so no send
+    /// can race the sweep.
+    pub fn peer_reset(&mut self, pid: usize) {
+        for c in self.conns.iter_mut() {
+            if c.peer == Some(pid) {
+                // unparsed frames from the dead peer are dropped with the
+                // connection: a stale ACK would no-op (position-guarded)
+                // and a stale MSG's fluid is covered by reconstruction
+                c.alive = false;
+                c.rbuf.clear();
+            }
+        }
+        self.conns.retain(|c| c.alive || c.rbuf.has_complete_frame());
+        let mut i = 0;
+        while i < self.retained.len() {
+            if self.retained[i].2 == pid {
+                let (_, mass, _) = self.retained.swap_remove(i);
+                self.shared.retained.fetch_sub(1, Ordering::Relaxed);
+                if !self.local_commit {
+                    self.shared.inflight.add(-mass);
+                    self.shared.undelivered.fetch_sub(1, Ordering::AcqRel);
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
     /// See [`Transport::pending_delayed`]: everything readable is pumped
     /// first, and the count covers both the inbox (frames waiting out
     /// their latency) and every connection whose ring still holds a
@@ -1355,12 +1406,22 @@ impl<T: WireCodec> Drop for WireEndpoint<T> {
                 let _ = c.stream.write_all(&bye);
             }
         }
-        // retention bookkeeping only (a count, not mass): these parcels
-        // were delivered or lost with the sockets; nobody will ack them
+        // these parcels were delivered or lost with the sockets; nobody
+        // will ack them. Under eager local-commit accounting this is
+        // bookkeeping only (a count, not mass); under ack-release
+        // accounting the sender still holds their mass, and a dying
+        // endpoint settles its own books here — crash recovery's
+        // reconstructed F covers the fluid (DESIGN.md §11)
         if !self.retained.is_empty() {
             self.shared
                 .retained
                 .fetch_sub(self.retained.len() as u64, Ordering::Relaxed);
+            if !self.local_commit {
+                for &(_, mass, _) in &self.retained {
+                    self.shared.inflight.add(-mass);
+                    self.shared.undelivered.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
         }
     }
 }
@@ -1404,6 +1465,9 @@ impl<T: WireCodec + Send + Clone + 'static> Transport<T> for WireEndpoint<T> {
     }
     fn flush(&mut self) {
         WireEndpoint::flush(self)
+    }
+    fn peer_reset(&mut self, pid: usize) {
+        WireEndpoint::peer_reset(self, pid)
     }
 }
 
@@ -1460,6 +1524,57 @@ mod tests {
             std::thread::yield_now();
         }
         None
+    }
+
+    #[test]
+    fn ack_release_holds_mass_until_ack_returns() {
+        let cfg = BusConfig {
+            ack_release: true,
+            ..BusConfig::default()
+        };
+        let hub = WireHub::<Probe>::loopback(&cfg, &[]);
+        let mut a = hub.add_endpoint(0).unwrap();
+        let mut b = hub.add_endpoint(1).unwrap();
+        a.send(1, Probe(5), 0.5, 8).unwrap();
+        a.flush();
+        let got = recv_within(&mut b, 2000).expect("delivered");
+        b.commit(got.from, got.seq, got.mass);
+        b.flush();
+        // the receiver's commit only emitted the ACK: the mass is still
+        // on the account until the sender processes that ACK
+        assert!((a.global_inflight() - 0.5).abs() < 1e-12);
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while a.unacked() > 0 && Instant::now() < deadline {
+            a.collect_acks();
+            std::thread::yield_now();
+        }
+        assert_eq!(a.unacked(), 0, "ACK released the retention");
+        let mon = hub.monitor();
+        assert_eq!(mon.undelivered(), 0);
+        assert_eq!(mon.inflight_or_zero(), 0.0);
+    }
+
+    #[test]
+    fn peer_reset_releases_retention_to_dead_peer() {
+        let cfg = BusConfig {
+            ack_release: true,
+            ..BusConfig::default()
+        };
+        let hub = WireHub::<Probe>::loopback(&cfg, &[]);
+        let mut a = hub.add_endpoint(0).unwrap();
+        let b = hub.add_endpoint(1).unwrap();
+        a.send(1, Probe(9), 0.75, 8).unwrap();
+        assert_eq!(a.unacked(), 1);
+        let mon = hub.monitor();
+        assert_eq!(mon.undelivered(), 1);
+        // the peer dies before committing; its drop glue releases only
+        // its OWN retained sends (none here) — the stranded parcel is
+        // ours to settle
+        drop(b);
+        a.peer_reset(1);
+        assert_eq!(a.unacked(), 0, "retention to the dead peer swept");
+        assert_eq!(mon.undelivered(), 0);
+        assert_eq!(mon.inflight_or_zero(), 0.0, "its mass released");
     }
 
     #[test]

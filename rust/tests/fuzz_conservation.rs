@@ -83,6 +83,18 @@ fn handoff_somewhere(engine: &mut StreamingEngine, rng: &mut Xoshiro256pp) {
     }
 }
 
+/// Crash a random live worker: no drain, no goodbye — the thread exits
+/// with parcels still queued at it and retention unacked. The engine's
+/// next poll detects the death and runs checkpoint recovery.
+fn kill_somewhere(engine: &mut StreamingEngine, rng: &mut Xoshiro256pp) {
+    let candidates = live_pids_with(engine, 0);
+    if candidates.len() < 2 {
+        return;
+    }
+    let pid = candidates[rng.below(candidates.len())];
+    engine.pool_mut().kill(pid);
+}
+
 fn fuzz(rebase: RebaseMode, seed: u64) {
     fuzz_with(rebase, seed, None, None)
 }
@@ -176,6 +188,93 @@ fn fuzz_with(
     assert!(
         pool_stats.spawned + pool_stats.retired + handoffs > 0,
         "fuzz ran no lifecycle events at all: {pool_stats:?}"
+    );
+}
+
+/// The crash-chaos half of the fuzz (DESIGN.md §11): the same event
+/// storm, with **worker kills** stirred into the mix and checkpoint
+/// recovery armed. A kill fires while fluid is genuinely mid-flight —
+/// mid-diffusion, mid-handoff, or straight into the next epoch rebase —
+/// and after every step the engine must land back on EXACT conservation
+/// (unit mass) and, at the end, the cold fixed point of the mutated
+/// graph. Fluid lost with the dead worker is recomputed from the
+/// restored checkpoint H (`F = b − (I−P)·H`), never replayed, so the
+/// recovered trajectory re-converges to the identical answer.
+fn fuzz_kill(rebase: RebaseMode, seed: u64, transport: Option<TransportKind>) {
+    let g = power_law_web_graph(N, 5, 0.1, seed);
+    let mg = MutableDigraph::from_digraph(&g, N);
+    let mut cfg = DistributedConfig::new(Partition::contiguous(N, K).unwrap())
+        .with_tol(1e-9)
+        .with_seed(seed)
+        .with_sequence(SequenceKind::GreedyMaxFluid)
+        .with_rebase(rebase)
+        .with_checkpoint_every(Duration::from_millis(2))
+        .with_heartbeat(Duration::from_millis(500))
+        .with_elastic(ElasticConfig {
+            max_workers: K + 3,
+            spawn_threshold: 0.0,
+            retire_idle: Duration::from_secs(3600),
+            interval: Duration::from_millis(5),
+            min_part: 2,
+            min_workers: 1,
+            max_ops: 10_000,
+        });
+    cfg.latency = Some((Duration::from_micros(30), Duration::from_micros(300)));
+    cfg.coalesce = CoalescePolicy {
+        min_mass: 1e-4,
+        max_entries: 48,
+    };
+    cfg.max_wall = Duration::from_secs(60);
+    if let Some(t) = transport {
+        cfg = cfg.with_transport(t);
+    }
+    let mut engine = StreamingEngine::new(mg, 0.85, true, cfg).unwrap();
+    let mut stream = MutationStream::new(ChurnModel::RandomRewire, seed ^ 0xF0);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    for step in 0..STEPS {
+        // stir: an unconverged epoch keeps fluid in flight when the kill
+        // (or other event) lands
+        engine.set_max_wall(Duration::from_millis(2));
+        let batch = stream.next_batch(engine.graph(), 10);
+        let _ = engine.apply_batch(&batch).unwrap();
+        // step 0 is always a kill so the final crashed-and-recovered
+        // assertion cannot depend on the rng's event mix; later steps
+        // mix kills with handoffs, spawns and retires so a crash can
+        // land mid-any-protocol
+        match if step == 0 { 4 } else { rng.below(5) } {
+            0 => {
+                let b2 = stream.next_batch(engine.graph(), 8);
+                let _ = engine.apply_batch(&b2).unwrap();
+            }
+            1 => spawn_somewhere(&mut engine, &mut rng),
+            2 => retire_somewhere(&mut engine, &mut rng),
+            3 => handoff_somewhere(&mut engine, &mut rng),
+            _ => kill_somewhere(&mut engine, &mut rng),
+        }
+        engine.set_max_wall(Duration::from_secs(60));
+        let report = engine.converge().unwrap();
+        assert!(
+            report.solution.converged,
+            "step {step}: residual {:.3e}",
+            report.solution.residual
+        );
+        assert!(
+            (norm1(&report.solution.x) - 1.0).abs() < 1e-6,
+            "step {step}: mass leaked through the crash — ‖x‖₁ = {}",
+            norm1(&report.solution.x)
+        );
+    }
+    let x = engine.solution().unwrap();
+    common::assert_fixed_point(&engine, &x, 1e-6, "final-after-kills");
+    let pool_stats = engine.pool_stats();
+    engine.finish().unwrap();
+    assert!(
+        pool_stats.crashes >= 1,
+        "the chaos ran no kills at all: {pool_stats:?}"
+    );
+    assert_eq!(
+        pool_stats.recoveries, pool_stats.crashes,
+        "every detected crash must be recovered: {pool_stats:?}"
     );
 }
 
@@ -308,6 +407,20 @@ fn fuzz_conservation_per_lane_serving_wire() {
 #[test]
 fn fuzz_conservation_gather_protocol() {
     fuzz(RebaseMode::Gather, 0xFA57_0001);
+}
+
+/// Kill chaos over the in-process bus: crashes land mid-diffusion,
+/// mid-handoff, mid-spawn/retire and straight into gather rebases.
+#[test]
+fn fuzz_conservation_kill_recovery_bus() {
+    fuzz_kill(RebaseMode::Gather, 0xFA57_0007, None);
+}
+
+/// Kill chaos with every parcel, handoff, retention ack and recovery
+/// reconnect crossing a real TCP socket.
+#[test]
+fn fuzz_conservation_kill_recovery_wire() {
+    fuzz_kill(RebaseMode::Gather, 0xFA57_0008, Some(TransportKind::Wire));
 }
 
 #[test]

@@ -24,9 +24,11 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Duration;
 
 use diter::coordinator::{
-    DistributedConfig, ElasticConfig, KernelKind, RebaseMode, StreamingEngine,
+    DistributedConfig, ElasticConfig, KernelKind, Query, QueryState, RebaseMode, ServeConfig,
+    ServeEngine, StreamingEngine, TransportKind,
 };
 use diter::graph::{power_law_web_graph, ChurnModel, MutableDigraph, MutationStream};
+use diter::linalg::vec_ops::norm1;
 use diter::partition::Partition;
 use diter::solver::SequenceKind;
 
@@ -184,4 +186,211 @@ fn matrix_rewire() {
 #[test]
 fn matrix_hotspot() {
     run_grid(ChurnModel::HotSpotBurst { burst: 12 }, 0x1500);
+}
+
+// ---------------------------------------------------------------------------
+// Kill-chaos cells: a worker crash (no drain, no goodbye — the thread just
+// stops) landed at each protocol moment — mid-diffusion, mid-handoff,
+// mid-rebase, mid-serve — over both transports. Every cell asserts the
+// crash was detected and recovered (`recoveries == crashes`), that exact
+// fluid conservation held through the recovery, and that the recovered
+// fixed point equals a sequential cold solve on the same graph (per-lane
+// unit PPR mass for the serving cell). The recomputation identity
+// `F = b − (I−P)·H` is what makes these exact rather than approximate:
+// fluid lost with the dead worker is rebuilt from checkpointed H, never
+// replayed.
+
+#[derive(Clone, Copy, PartialEq)]
+enum KillMoment {
+    Diffusion,
+    Handoff,
+    Rebase,
+    Serve,
+}
+
+impl KillMoment {
+    fn name(self) -> &'static str {
+        match self {
+            KillMoment::Diffusion => "diffusion",
+            KillMoment::Handoff => "handoff",
+            KillMoment::Rebase => "rebase",
+            KillMoment::Serve => "serve",
+        }
+    }
+}
+
+/// Crash-tolerant config shared by every kill cell: fast incremental
+/// checkpoints, a heartbeat, and an inert elastic policy (pool headroom
+/// for the handoff cell without the scheduler firing its own events).
+fn kill_cfg(seed: u64, transport: Option<TransportKind>) -> DistributedConfig {
+    let mut cfg = DistributedConfig::new(Partition::contiguous(N, K).unwrap())
+        .with_tol(1e-9)
+        .with_seed(seed)
+        .with_sequence(SequenceKind::GreedyMaxFluid)
+        .with_rebase(RebaseMode::Gather)
+        .with_checkpoint_every(Duration::from_millis(2))
+        .with_heartbeat(Duration::from_millis(500))
+        .with_elastic(ElasticConfig {
+            max_workers: K + 1,
+            spawn_threshold: 0.0,
+            retire_idle: Duration::from_secs(3600),
+            interval: Duration::from_millis(5),
+            min_part: 2,
+            min_workers: 1,
+            max_ops: 10_000,
+        });
+    cfg.max_wall = Duration::from_secs(60);
+    if let Some(t) = transport {
+        cfg = cfg.with_transport(t);
+    }
+    cfg
+}
+
+fn run_kill_stream(moment: KillMoment, transport: Option<TransportKind>, seed: u64) {
+    let g = power_law_web_graph(N, 5, 0.1, seed);
+    let mg = MutableDigraph::from_digraph(&g, N);
+    let mut engine = StreamingEngine::new(mg, 0.85, true, kill_cfg(seed, transport)).unwrap();
+    let init = engine.converge().unwrap();
+    assert!(init.solution.converged, "init residual {:.3e}", init.solution.residual);
+    let mut stream = MutationStream::new(ChurnModel::RandomRewire, seed ^ 0xD117);
+    match moment {
+        KillMoment::Diffusion => {
+            // stir an epoch but stop well before convergence, so the
+            // crash lands with fluid genuinely mid-flight
+            engine.set_max_wall(Duration::from_millis(2));
+            let batch = stream.next_batch(engine.graph(), BATCH_SIZE);
+            let _ = engine.apply_batch(&batch).unwrap();
+            engine.set_max_wall(Duration::from_secs(60));
+            engine.pool_mut().kill(1);
+        }
+        KillMoment::Handoff => {
+            engine.set_max_wall(Duration::from_millis(2));
+            let batch = stream.next_batch(engine.graph(), BATCH_SIZE);
+            let _ = engine.apply_batch(&batch).unwrap();
+            engine.set_max_wall(Duration::from_secs(60));
+            // plan an ownership move out of pid 1, then crash the
+            // shipper before its slice can settle — recovery must fold
+            // the orphaned coordinates instead of fostering their fluid
+            // forever
+            let table = engine.pool_mut().table().clone();
+            let part = table.partition();
+            let own = part.part(1);
+            let half: Vec<usize> = own[..own.len() / 2].to_vec();
+            if let Ok(next) = part.transfer_elastic(&half, 2) {
+                let _ = table.install_elastic(next);
+            }
+            engine.pool_mut().kill(1);
+        }
+        KillMoment::Rebase => {
+            // crash first, give the thread time to actually exit with no
+            // poll in between (kill() does not poll), then demand an
+            // epoch transition: the rebase itself — not a converge loop —
+            // must detect and recover the dead worker before freezing
+            // the ownership table
+            engine.pool_mut().kill(1);
+            std::thread::sleep(Duration::from_millis(50));
+            let batch = stream.next_batch(engine.graph(), BATCH_SIZE);
+            let _ = engine.apply_batch(&batch).unwrap();
+        }
+        KillMoment::Serve => unreachable!("serve cells run through run_kill_serve"),
+    }
+    let report = engine.converge().unwrap();
+    assert!(report.solution.converged, "residual {:.3e}", report.solution.residual);
+    common::assert_fixed_point(&engine, &report.solution.x, 1e-6, moment.name());
+    let stats = engine.pool_stats();
+    engine.finish().unwrap();
+    assert!(stats.crashes >= 1, "{}: no crash detected: {stats:?}", moment.name());
+    assert_eq!(
+        stats.recoveries, stats.crashes,
+        "{}: every detected crash must be recovered: {stats:?}",
+        moment.name()
+    );
+}
+
+fn run_kill_serve(transport: Option<TransportKind>, seed: u64) {
+    const LANES: usize = 2;
+    const EPS: f64 = 1e-7;
+    let g = power_law_web_graph(N, 5, 0.1, seed);
+    let mg = MutableDigraph::from_digraph(&g, N);
+    let serve_cfg = ServeConfig {
+        queue_cap: 8,
+        default_eps: EPS,
+        ..Default::default()
+    };
+    let mut serve =
+        ServeEngine::new(mg, 0.85, true, kill_cfg(seed, transport), serve_cfg, LANES).unwrap();
+    let mut qids = Vec::new();
+    for i in 0..LANES {
+        let seeds = [(i * 7 + 3) % N, (i * 13 + 5) % N];
+        qids.push(
+            serve
+                .submit(Query::ppr(&seeds, 0.85, EPS))
+                .expect("queue has room"),
+        );
+    }
+    // crash a worker while every lane's PPR fluid is mid-flight; the
+    // serving loop's own pump must detect, recover (re-claiming seeds
+    // the dead worker held), and still complete each tenant exactly
+    serve.engine_mut().pool_mut().kill(1);
+    let done = serve.drain(Duration::from_secs(60)).unwrap();
+    assert_eq!(done.len(), qids.len(), "tenants wedged across the crash");
+    for d in &done {
+        assert_eq!(d.state, QueryState::Served, "no deadlines configured");
+        let x = d.x.as_ref().expect("served queries carry a readout");
+        assert!(
+            (norm1(x) - 1.0).abs() < 1e-5,
+            "qid {}: PPR mass leaked through the crash — ‖x‖₁ = {}",
+            d.qid,
+            norm1(x)
+        );
+    }
+    let stats = serve.engine().pool_stats();
+    serve.finish().unwrap();
+    assert!(stats.crashes >= 1, "serve: no crash detected: {stats:?}");
+    assert_eq!(
+        stats.recoveries, stats.crashes,
+        "serve: every detected crash must be recovered: {stats:?}"
+    );
+}
+
+/// All {moment × transport} kill cells, failures collected by name like
+/// the churn grids above.
+fn run_kill_grid() {
+    let mut failures: Vec<String> = Vec::new();
+    let mut idx = 0u64;
+    for moment in [
+        KillMoment::Diffusion,
+        KillMoment::Handoff,
+        KillMoment::Rebase,
+        KillMoment::Serve,
+    ] {
+        for transport in [None, Some(TransportKind::Wire)] {
+            idx += 1;
+            let seed = 0xC4A5 + idx;
+            let name = format!(
+                "kill-{}-{}-s{seed}",
+                moment.name(),
+                if transport.is_some() { "wire" } else { "bus" },
+            );
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                if moment == KillMoment::Serve {
+                    run_kill_serve(transport, seed);
+                } else {
+                    run_kill_stream(moment, transport, seed);
+                }
+            }));
+            if let Err(payload) = result {
+                failures.push(format!("{name}: {}", common::panic_message(payload)));
+            }
+        }
+    }
+    if !failures.is_empty() {
+        record_failures(&failures);
+        panic!("{} kill cell(s) failed:\n{}", failures.len(), failures.join("\n"));
+    }
+}
+
+#[test]
+fn matrix_kill() {
+    run_kill_grid();
 }

@@ -51,6 +51,21 @@ Compares a fresh bench artifact against its committed baseline and fails
         traffic creeping back into the pooled encode/decode cycle is
         exactly what this bench exists to catch (§8.8 target is 0).
 
+  * --kind recovery — `benches/recovery.rs`:
+      - recovery_vs_cold_speedup: crash recovery (detect → restore
+        checkpoint H → recompute fluid → re-settle) vs restarting the
+        solve from scratch, same-binary same-machine; once a measured
+        baseline lands it must stay above 1.0 — recovery slower than a
+        cold restart means the checkpoint machinery is pure overhead.
+        Also gated as a ratio floor against the baseline.
+      - checkpoint_overhead_ratio: the checkpointed/cold converge-wall
+        ratio (the steady-state tax of the incremental journal),
+        ceiling-gated against the baseline — the no-failure hot path
+        creeping toward the failure path's cost is exactly what this
+        bench exists to catch.
+      - recovery_time_to_converge_secs: only enforced when the baseline
+        was recorded in the same environment.
+
   * --kind serve — `benches/serve_throughput.rs`:
       - batched_vs_sequential_speedup: multi-lane query serving vs
         draining the same query load one lane at a time, same-binary
@@ -240,6 +255,58 @@ def gate_wire(base, cur, args, failures):
               "not enforced (ratio gates above still apply)")
 
 
+def gate_recovery(base, cur, args, failures):
+    tol = 1.0 - args.max_regress
+    cur_speedup = cur.get("recovery_vs_cold_speedup")
+    cur_overhead = cur.get("checkpoint_overhead_ratio")
+    cur_wall = cur.get("recovery_time_to_converge_secs")
+    print(f"current: recovery_vs_cold={fmt(cur_speedup, '.2f')}x  "
+          f"checkpoint_overhead={fmt(cur_overhead, '.2f')}x  "
+          f"recovery wall={fmt(cur_wall, '.3f')}s  "
+          f"env={cur.get('environment')}")
+    # recovery must beat a cold restart, full stop — a <= 1.0 ratio
+    # means restoring the checkpoint and recomputing fluid is pure
+    # overhead versus just re-solving. This is a property of the CURRENT
+    # run alone, so it is enforced even while the committed baseline is
+    # still the bootstrap placeholder.
+    if cur.get("measured", False) and (
+            not isinstance(cur_speedup, (int, float)) or cur_speedup <= 1.0):
+        failures.append(
+            f"recovery_vs_cold_speedup {fmt(cur_speedup, '.2f')}x <= 1.0: "
+            "crash recovery no longer beats restarting from scratch")
+    if not base.get("measured", False):
+        print("baseline is a bootstrap placeholder (measured=false): "
+              "regression gates pass; seed it from this run's uploaded "
+              "artifact to arm them.")
+        return
+    gate_ratio(failures, "recovery_vs_cold_speedup",
+               base.get("recovery_vs_cold_speedup"), cur_speedup, tol,
+               args.max_regress)
+    base_overhead = base.get("checkpoint_overhead_ratio")
+    if isinstance(base_overhead, (int, float)):
+        ceiling = base_overhead * (1.0 + args.max_regress)
+        print(f"baseline checkpoint_overhead={base_overhead:.2f}x  "
+              f"(ceiling {ceiling:.2f}x)")
+        if not isinstance(cur_overhead, (int, float)) or cur_overhead > ceiling:
+            failures.append(
+                f"checkpoint_overhead_ratio regressed: {cur_overhead} > "
+                f"{ceiling:.2f} (baseline {base_overhead:.2f}) — the "
+                "incremental journal is taxing the no-failure hot path")
+    base_wall = base.get("recovery_time_to_converge_secs")
+    if isinstance(base_wall, (int, float)) and \
+            base.get("environment") == cur.get("environment"):
+        ceiling = base_wall * (1.0 + args.max_regress)
+        print(f"baseline recovery wall={base_wall:.3f}s  "
+              f"(ceiling {ceiling:.3f}s, same env)")
+        if not isinstance(cur_wall, (int, float)) or cur_wall > ceiling:
+            failures.append(
+                f"recovery_time_to_converge_secs regressed: {cur_wall} > "
+                f"{ceiling:.3f}s (baseline {base_wall:.3f}s)")
+    elif isinstance(base_wall, (int, float)):
+        print("baseline recorded in a different environment: absolute "
+              "recovery wall not enforced (ratio gates above still apply)")
+
+
 def gate_serve(base, cur, args, failures):
     tol = 1.0 - args.max_regress
     cur_speedup = cur.get("batched_vs_sequential_speedup")
@@ -298,7 +365,9 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", required=True, help="committed BENCH_*.json")
     ap.add_argument("--current", required=True, help="freshly produced BENCH_*.json")
-    ap.add_argument("--kind", choices=["stream", "elastic", "hotpath", "wire", "serve"],
+    ap.add_argument("--kind",
+                    choices=["stream", "elastic", "hotpath", "wire", "serve",
+                             "recovery"],
                     default="stream",
                     help="which bench artifact schema to gate (default stream)")
     ap.add_argument("--max-regress", type=float, default=0.20,
@@ -316,6 +385,8 @@ def main():
         gate_wire(base, cur, args, failures)
     elif args.kind == "serve":
         gate_serve(base, cur, args, failures)
+    elif args.kind == "recovery":
+        gate_recovery(base, cur, args, failures)
     else:
         gate_stream(base, cur, args, failures)
 
